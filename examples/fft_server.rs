@@ -1,0 +1,84 @@
+//! Batched FFT serving under concurrent load — the serving E2E driver.
+//!
+//!   cargo run --release --example fft_server -- [clients] [requests-per-client]
+//!
+//! Spawns client threads issuing mixed-size FFT requests at the service,
+//! which buckets them by size, batches up to `max_batch`, executes each
+//! batch on one PJRT call against the AOT artifacts (or the native library
+//! if artifacts are missing), and reports latency percentiles, throughput
+//! and batching efficiency.
+
+use std::sync::Arc;
+
+use memfft::config::ServiceConfig;
+use memfft::coordinator::{Direction, FftService};
+use memfft::util::{Timer, Xoshiro256};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let clients: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let per_client: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
+
+    let have_artifacts = std::path::Path::new("artifacts/manifest.txt").exists();
+    let cfg = ServiceConfig {
+        method: if have_artifacts { "fourstep".into() } else { "native".into() },
+        workers: 2,
+        max_batch: 8,
+        max_delay_us: 500,
+        queue_depth: 4096,
+        ..Default::default()
+    };
+    // Sizes the paper calls the SAR band: "a few thousands to tens of
+    // thousands".
+    let sizes = [1024usize, 4096, 16384];
+    println!(
+        "fft_server: {clients} clients × {per_client} reqs, method={}, sizes={sizes:?}",
+        cfg.method
+    );
+
+    let svc = Arc::new(FftService::start(cfg));
+    let t = Timer::start();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::seeded(c as u64 + 100);
+                let mut ok = 0usize;
+                let mut rejected = 0usize;
+                for _ in 0..per_client {
+                    let n = *rng.choose(&sizes);
+                    match svc.submit(n, Direction::Forward, rng.real_vec(n), rng.real_vec(n)) {
+                        Ok(rx) => {
+                            if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+                                ok += 1;
+                            }
+                        }
+                        Err(_) => rejected += 1,
+                    }
+                }
+                (ok, rejected)
+            })
+        })
+        .collect();
+
+    let mut total_ok = 0;
+    let mut total_rej = 0;
+    for h in handles {
+        let (ok, rej) = h.join().unwrap();
+        total_ok += ok;
+        total_rej += rej;
+    }
+    let elapsed = t.elapsed();
+
+    println!(
+        "\n{total_ok} ok / {total_rej} rejected in {:.1} ms  →  {:.0} req/s",
+        elapsed.as_secs_f64() * 1e3,
+        total_ok as f64 / elapsed.as_secs_f64()
+    );
+    println!("\n{}", svc.metrics().report());
+    println!(
+        "batching efficiency: {:.2} requests per executed batch",
+        svc.metrics().mean_batch_fill()
+    );
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! GPU memory-model explorer: sweep the simulator across schedules, sizes
+//! and design knobs; find the crossovers the paper reports.
+//!
+//!   cargo run --release --example memsim_explorer
+
+use memfft::gpusim::{
+    self, bank_conflicts, coalesce_strided, CpuDescriptor, GpuDescriptor, TiledOptions,
+};
+use memfft::harness::{ablation, figs};
+
+fn main() {
+    let gpu = GpuDescriptor::tesla_c2070();
+    let cpu = CpuDescriptor::i7_2600k();
+    let sizes: Vec<usize> = (4..=20).map(|lg| 1usize << lg).collect();
+
+    println!("== schedule times (µs, end-to-end incl. PCIe) ==");
+    println!("{:>9} {:>12} {:>12} {:>12} {:>12}", "N", "per-level", "tiled(ours)", "cufft-like", "fftw(cpu)");
+    for &n in &sizes {
+        println!(
+            "{n:>9} {:>12.1} {:>12.1} {:>12.1} {:>12.1}",
+            gpusim::per_level(n, 1, &gpu).predict(&gpu).total_s * 1e6,
+            gpusim::tiled(n, 1, TiledOptions::default(), &gpu).predict(&gpu).total_s * 1e6,
+            gpusim::vendor_like(n, 1, &gpu).predict(&gpu).total_s * 1e6,
+            gpusim::fftw_cpu_time(n, 1, &cpu) * 1e6,
+        );
+    }
+
+    match figs::fftw_crossover(&sizes) {
+        Some(x) => println!("\nGPU beats FFTW from N = {x} (paper: ≈8192)"),
+        None => println!("\nno crossover in range"),
+    }
+
+    println!("\n== global-memory traffic (KB per transform) ==");
+    println!("{:>9} {:>12} {:>12} {:>8}", "N", "per-level", "tiled(ours)", "ratio");
+    for &n in &sizes {
+        let pl = gpusim::schedules::global_traffic_per_level(n, 1) / 1024.0;
+        let tl = gpusim::schedules::global_traffic_tiled(n, 1) / 1024.0;
+        println!("{n:>9} {pl:>12.0} {tl:>12.0} {:>8.1}", pl / tl);
+    }
+
+    println!("\n== ablations (ms) ==");
+    print!("{}", ablation::render(&ablation::run(&[4096, 65536, 1 << 20])));
+
+    println!("\n== access-pattern analyzers (the §2.3.3 micro-facts) ==");
+    for stride in [1u64, 2, 16, 1024] {
+        let r = coalesce_strided(0, stride, 32, 8, gpu.segment_bytes);
+        println!(
+            "  warp stride {stride:>5} elems: {:>3} transactions, {:>5.1}% efficient",
+            r.transactions,
+            r.efficiency * 100.0
+        );
+    }
+    for pitch in [16u32, 17, 32, 33] {
+        let addrs: Vec<u32> = (0..16).map(|t| t * pitch).collect();
+        let b = bank_conflicts(&addrs, gpu.shared_banks);
+        println!("  shared pitch {pitch:>3} words: {}-way bank conflict", b.degree);
+    }
+    println!("\n(the paper pads 16 -> 33 for exactly that last line)");
+}

@@ -1,0 +1,85 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. Pure-Rust FFT library (no artifacts needed).
+//! 2. The FFT service in native mode.
+//! 3. If `make artifacts` has run: the same request served from the
+//!    AOT-compiled Pallas four-step kernel via PJRT, cross-checked.
+
+use memfft::coordinator::{Direction, FftService};
+use memfft::config::ServiceConfig;
+use memfft::fft::{self, Algorithm, FftPlan};
+use memfft::util::complex::{max_abs_diff, C32};
+use memfft::util::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. the library ---------------------------------------------------
+    let n = 1024;
+    let mut rng = Xoshiro256::seeded(1);
+    let signal: Vec<C32> = rng.complex_vec(n);
+
+    let mut spectrum = signal.clone();
+    fft::fft(&mut spectrum); // planner picks the algorithm, plan is cached
+    let mut back = spectrum.clone();
+    fft::ifft(&mut back);
+    println!(
+        "library: fft+ifft roundtrip max error {:.2e}",
+        max_abs_diff(&signal, &back)
+    );
+
+    // Explicit plans — e.g. the paper's four-step schedule:
+    let plan = FftPlan::new(n, Algorithm::FourStep);
+    let mut x = signal.clone();
+    plan.forward(&mut x);
+    println!("library: four-step matches auto within {:.2e}", max_abs_diff(&x, &spectrum));
+
+    // --- 2. the service (native mode: no artifacts needed) ----------------
+    let svc = FftService::start(ServiceConfig {
+        method: "native".into(),
+        workers: 2,
+        ..Default::default()
+    });
+    let re: Vec<f32> = signal.iter().map(|c| c.re).collect();
+    let im: Vec<f32> = signal.iter().map(|c| c.im).collect();
+    let resp = svc
+        .fft_blocking(n, Direction::Forward, re.clone(), im.clone())
+        .expect("native serve");
+    let served: Vec<C32> = resp
+        .re
+        .iter()
+        .zip(&resp.im)
+        .map(|(&a, &b)| C32::new(a, b))
+        .collect();
+    println!(
+        "service(native): matches library within {:.2e}",
+        max_abs_diff(&served, &spectrum)
+    );
+    svc.shutdown();
+
+    // --- 3. the AOT path (needs `make artifacts`) --------------------------
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        let svc = FftService::start(ServiceConfig {
+            method: "fourstep".into(),
+            workers: 1,
+            ..Default::default()
+        });
+        let resp = svc.fft_blocking(n, Direction::Forward, re, im).expect("AOT serve");
+        let served: Vec<C32> = resp
+            .re
+            .iter()
+            .zip(&resp.im)
+            .map(|(&a, &b)| C32::new(a, b))
+            .collect();
+        println!(
+            "service(AOT pallas four-step via PJRT): matches library within {:.2e} \
+             (exec {:.1} µs)",
+            max_abs_diff(&served, &spectrum),
+            resp.exec_time.as_secs_f64() * 1e6
+        );
+        svc.shutdown();
+    } else {
+        println!("service(AOT): skipped — run `make artifacts` first");
+    }
+    Ok(())
+}

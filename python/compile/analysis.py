@@ -1,0 +1,98 @@
+"""L1/L2 performance analysis — structural, not wall-clock.
+
+interpret=True wall-clock is CPU-numpy time, NOT a TPU proxy, so the §Perf
+story for layers 1-2 is structural (DESIGN.md §Perf):
+
+- VMEM footprint per grid step (must fit the ~16 MB/core budget with room
+  for double buffering);
+- HBM traffic per transform = passes x 2 x payload (the paper's decision
+  variable — compare per-level's log2(N) passes);
+- arithmetic intensity (flops per HBM byte), which bounds achievable
+  VPU/MXU utilization on a roofline;
+- HLO-level op census of the lowered module (catches accidental
+  recomputation or unfused reshuffles at a glance).
+
+Run: `python -m compile.analysis` for the report table.
+"""
+
+from __future__ import annotations
+
+import math
+import re as _re
+
+from . import aot
+from .kernels import capped_pow2_split, log2_exact
+from .kernels.fourstep import DEFAULT_TILE, passes, vmem_bytes
+
+# TPU-class budgets used for the structural assertions.
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes/core
+# f32 VPU roofline ratio: flops per HBM byte at which the VPU saturates
+# (~ 2 TFLOP/s / 1.2 TB/s ≈ 1.7 flops/byte, order of magnitude).
+VPU_BALANCE = 1.7
+
+
+def hbm_bytes(n: int, batch: int = 1, tile: int = DEFAULT_TILE) -> int:
+    """HBM traffic of the fourstep kernel: each pass streams the payload
+    in and out once (re+im planes, f32)."""
+    payload = batch * n * 4 * 2
+    return passes(n, tile) * payload * 2
+
+
+def hbm_bytes_perlevel(n: int, batch: int = 1) -> int:
+    payload = batch * n * 4 * 2
+    return log2_exact(n) * payload * 2
+
+
+def flops(n: int, batch: int = 1) -> int:
+    """10 flops per radix-2 butterfly + 6 per inter-pass twiddle point."""
+    butterflies = batch * (n // 2) * log2_exact(n)
+    tw = batch * n * max(passes(n) - 1, 0)
+    return butterflies * 10 + tw * 6
+
+
+def arithmetic_intensity(n: int, batch: int = 1) -> float:
+    return flops(n, batch) / hbm_bytes(n, batch)
+
+
+def op_census(hlo_text: str) -> dict[str, int]:
+    """Rough HLO op histogram from the text (op name = token after '=
+    type')."""
+    census: dict[str, int] = {}
+    for m in _re.finditer(r"=\s+[a-z0-9\[\]{},\s/]*?\b([a-z][a-z0-9-]*)\(", hlo_text):
+        op = m.group(1)
+        census[op] = census.get(op, 0) + 1
+    return census
+
+
+def analyze(n: int, batch: int = 1) -> dict:
+    n1, n2 = capped_pow2_split(n, DEFAULT_TILE) if n > DEFAULT_TILE else (n, 1)
+    return {
+        "n": n,
+        "batch": batch,
+        "split": (n1, n2),
+        "passes": passes(n),
+        "passes_perlevel": log2_exact(n),
+        "vmem_bytes": vmem_bytes(n),
+        "vmem_ok": vmem_bytes(n) < VMEM_BUDGET,
+        "hbm_bytes": hbm_bytes(n, batch),
+        "hbm_saved_vs_perlevel": hbm_bytes_perlevel(n, batch) / hbm_bytes(n, batch),
+        "intensity": arithmetic_intensity(n, batch),
+        "vpu_bound_fraction": min(arithmetic_intensity(n, batch) / VPU_BALANCE, 1.0),
+    }
+
+
+def main() -> None:
+    print(f"{'N':>8} {'split':>12} {'passes':>6} {'VMEM KB':>9} "
+          f"{'HBM KB':>9} {'saved×':>7} {'fl/B':>6} {'VPU-bound':>9}")
+    for n in aot.TABLE1_SIZES:
+        a = analyze(n)
+        print(f"{a['n']:>8} {str(a['split']):>12} {a['passes']:>6} "
+              f"{a['vmem_bytes']/1024:>9.1f} {a['hbm_bytes']/1024:>9.1f} "
+              f"{a['hbm_saved_vs_perlevel']:>7.1f} {a['intensity']:>6.2f} "
+              f"{a['vpu_bound_fraction']*100:>8.0f}%")
+    print("\n(HBM saved× = per-level traffic / fourstep traffic — the paper's")
+    print(" core claim; VPU-bound = fraction of roofline the schedule can use)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""AOT lowering: JAX graphs -> HLO TEXT artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run: `python -m compile.aot --out-dir ../artifacts` (the Makefile target).
+Emits one `<name>.hlo.txt` per (op, method, n, batch) variant plus a
+`manifest.txt` the Rust ArtifactIndex parses:
+
+    name<TAB>file<TAB>op<TAB>method<TAB>n<TAB>batch<TAB>extra
+
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The paper's Table-1 sweep.
+TABLE1_SIZES = [16, 64, 256, 1024, 4096, 16384, 65536]
+# Batch variants served by the coordinator's bucketed batcher.
+BATCHES = [1, 4, 8, 16]
+# SAR scene (azimuth lines x range samples) for the end-to-end driver.
+SAR_NAZ, SAR_NR = 256, 1024
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True; the Rust
+    side unwraps with to_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the twiddle LUTs are baked as constants;
+    # the default printer elides arrays > ~10 elements to "{...}", which the
+    # text parser then reads back as GARBAGE ZEROS. Silent numeric death —
+    # guarded by the assert below and by the rust integration tests.
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def lower_fft(method: str, n: int, batch: int, inverse: bool = False):
+    spec = jax.ShapeDtypeStruct((batch, n), jnp.float32)
+    fn = model.make_fft_fn(method, interpret=True, inverse=inverse)
+    return jax.jit(fn).lower(spec, spec)
+
+
+def lower_fft2d(method: str, rows: int, cols: int):
+    spec = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+
+    def fn(re, im):
+        return model.fft2d(re, im, method=method)
+
+    return jax.jit(fn).lower(spec, spec)
+
+
+def lower_sar(method: str, naz: int, nr: int):
+    raw = jax.ShapeDtypeStruct((naz, nr), jnp.float32)
+    rfilt = jax.ShapeDtypeStruct((nr,), jnp.float32)
+    afilt = jax.ShapeDtypeStruct((naz,), jnp.float32)
+
+    def fn(rr, ri, fr, fi, ar, ai):
+        return model.sar_range_doppler(rr, ri, fr, fi, ar, ai, method=method)
+
+    return jax.jit(fn).lower(raw, raw, rfilt, rfilt, afilt, afilt)
+
+
+def fft_variants():
+    """Every (name, op, method, n, batch) fft artifact to build.
+
+    stockham is the single-tile kernel: only valid in the paper's
+    one-kernel-call regime (n <= 1024 VMEM tile).
+    """
+    out = []
+    for n in TABLE1_SIZES:
+        for batch in BATCHES:
+            for method in model.METHODS:
+                if method == "stockham" and n > 1024:
+                    continue
+                if method == "perlevel" and batch != 1:
+                    continue  # baseline measured unbatched, like the paper
+                out.append((f"fft_{method}_n{n}_b{batch}", "fft", method, n, batch))
+        # Inverse path for the serving API (fourstep only; others via conj
+        # on the rust side if ever needed).
+        out.append((f"ifft_fourstep_n{n}_b1", "ifft", "fourstep", n, 1))
+    return out
+
+
+def build(out_dir: str, sizes=None, skip_existing: bool = True) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_rows = []
+    built = []
+
+    def emit(name: str, op: str, method: str, n: int, batch: int, lowered_fn, extra: str = ""):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        manifest_rows.append(f"{name}\t{name}.hlo.txt\t{op}\t{method}\t{n}\t{batch}\t{extra}")
+        if skip_existing and os.path.exists(path):
+            return
+        text = to_hlo_text(lowered_fn())
+        with open(path, "w") as f:
+            f.write(text)
+        built.append(name)
+        print(f"  {name}: {len(text)} chars", flush=True)
+
+    wanted_sizes = set(sizes or TABLE1_SIZES)
+    for name, op, method, n, batch in fft_variants():
+        if n not in wanted_sizes:
+            continue
+        inverse = op == "ifft"
+        emit(name, op, method, n, batch,
+             lambda m=method, nn=n, b=batch, inv=inverse: lower_fft(m, nn, b, inv))
+
+    # 2-D FFT (image workloads): rows x cols variants.
+    for method in ("fourstep", "xla"):
+        for rows, cols in [(256, 256), (128, 512)]:
+            emit(f"fft2d_{method}_{rows}x{cols}", "fft2d", method, cols, rows,
+                 lambda m=method, r=rows, c=cols: lower_fft2d(m, r, c),
+                 extra=f"rows={rows},cols={cols}")
+
+    # SAR end-to-end graph (fourstep + the xla reference variant).
+    for method in ("fourstep", "xla"):
+        emit(f"sar_{method}_{SAR_NAZ}x{SAR_NR}", "sar", method, SAR_NR, SAR_NAZ,
+             lambda m=method: lower_sar(m, SAR_NAZ, SAR_NR),
+             extra=f"naz={SAR_NAZ},nr={SAR_NR}")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# name\tfile\top\tmethod\tn\tbatch\textra\n")
+        f.write("\n".join(manifest_rows) + "\n")
+    return built
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="", help="comma-separated size subset")
+    ap.add_argument("--force", action="store_true", help="rebuild even if present")
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s] or None
+    built = build(args.out_dir, sizes=sizes, skip_existing=not args.force)
+    print(f"built {len(built)} artifacts in {args.out_dir}", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,35 @@
+"""Layer-1 Pallas kernels: the paper's memory-optimized FFT schedules.
+
+Modules:
+  ref       — pure-jnp / numpy oracles (the correctness ground truth)
+  stockham  — single-tile autosort FFT: the whole (sub-)transform inside one
+              VMEM block (shared-memory analog), twiddle LUT resident
+  fourstep  — the paper's method: N = N1 x N2 hierarchical decomposition,
+              one pallas_call (= one HBM round trip) per pass
+  perlevel  — the "previous method" baseline: one pallas_call per butterfly
+              level (log2 N HBM round trips)
+
+All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls; see DESIGN.md §Hardware-Adaptation).
+"""
+
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def log2_exact(n: int) -> int:
+    assert is_pow2(n), f"expected power of two, got {n}"
+    return n.bit_length() - 1
+
+
+def capped_pow2_split(n: int, max_n1: int) -> tuple[int, int]:
+    """Split n = n1 * n2, both powers of two, n1 as square as possible but
+    capped at the fast-memory tile (mirrors rust util::capped_pow2_split)."""
+    assert is_pow2(n) and is_pow2(max_n1)
+    lg = log2_exact(n)
+    lg1 = (lg + 1) // 2
+    n1 = 1 << lg1
+    if n1 > max_n1:
+        n1 = max_n1
+    return n1, n // n1

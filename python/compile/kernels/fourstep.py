@@ -1,0 +1,168 @@
+"""Four-step hierarchical FFT — the paper's method as Pallas kernels.
+
+N = N1 x N2 with N1 capped by the VMEM tile. Exactly TWO pallas_calls
+(= two HBM round trips, the paper's "two times exchange", §2.3.2):
+
+  pass 1  grid over column tiles of the [b, N1, N2] view:
+          each block holds a (bb, N1, tc) tile in VMEM, runs the full
+          size-N1 Stockham FFT down axis 1 *in VMEM*, multiplies by the
+          inter-pass twiddles W_N^{j2 k1} (LUT operand tile — texture
+          analog), writes back once.
+  pass 2  grid over row tiles of the [b, N1, N2] view:
+          each block holds a (bb, tr, N2) tile, runs the size-N2 FFT along
+          the lane axis, and writes its block TRANSPOSED into the
+          [b, N2, N1] output — the four-step read-out X[k1 + N1 k2] =
+          C[k1][k2] — so the reordering costs no extra HBM pass.
+
+When N2 itself exceeds the tile, pass 2 recurses: three pallas_calls,
+matching the paper's 3-kernel-call regime for large N.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import capped_pow2_split, is_pow2
+from .ref import fourstep_twiddle_matrix, twiddle_pair
+from .stockham import _pick_block_batch, stockham_fft, stockham_levels
+
+# Default VMEM tile in complex elements — matches the paper's shared-memory
+# one-kernel-call budget (N <= 1024) and rust gpusim::PAPER_TILE.
+DEFAULT_TILE = 1024
+
+
+def _pass1_kernel(wr_ref, wi_ref, twr_ref, twi_ref, re_ref, im_ref,
+                  ore_ref, oim_ref, *, n1: int):
+    """Column FFT_{N1} + inter-pass twiddle, all inside the VMEM block."""
+    re = re_ref[...]   # [bb, n1, tc]
+    im = im_ref[...]
+    re, im = stockham_levels(re, im, wr_ref[...], wi_ref[...], n1, axis=1)
+    # Twiddle W_N^{j2 k1}: operand tile [n1, tc] aligned with the block.
+    twr = twr_ref[...][None, :, :]
+    twi = twi_ref[...][None, :, :]
+    ore_ref[...] = re * twr - im * twi
+    oim_ref[...] = re * twi + im * twr
+
+
+def _pass2_kernel(wr_ref, wi_ref, re_ref, im_ref, ore_ref, oim_ref, *, n2: int):
+    """Row FFT_{N2} along the lane axis + transposed write-back."""
+    re = re_ref[...]   # [bb, tr, n2]
+    im = im_ref[...]
+    re, im = stockham_levels(re, im, wr_ref[...], wi_ref[...], n2, axis=2)
+    # Four-step read-out: out[b, k2, k1] = C[b, k1, k2].
+    ore_ref[...] = jnp.transpose(re, (0, 2, 1))
+    oim_ref[...] = jnp.transpose(im, (0, 2, 1))
+
+
+@partial(jax.jit, static_argnames=("n1", "n2", "tile_cols", "block_batch", "interpret"))
+def _pass1(re, im, wr, wi, twr, twi, n1, n2, tile_cols, block_batch, interpret):
+    b = re.shape[0]
+    grid = (b // block_batch, n2 // tile_cols)
+    lut = pl.BlockSpec((wr.shape[0],), lambda i, j: (0,))
+    twm = pl.BlockSpec((n1, tile_cols), lambda i, j: (0, j))
+    data = pl.BlockSpec((block_batch, n1, tile_cols), lambda i, j: (i, 0, j))
+    out_shape = [jax.ShapeDtypeStruct((b, n1, n2), jnp.float32)] * 2
+    return pl.pallas_call(
+        partial(_pass1_kernel, n1=n1),
+        grid=grid,
+        in_specs=[lut, lut, twm, twm, data, data],
+        out_specs=[data, data],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(wr, wi, twr, twi, re, im)
+
+
+@partial(jax.jit, static_argnames=("n1", "n2", "tile_rows", "block_batch", "interpret"))
+def _pass2(re, im, wr, wi, n1, n2, tile_rows, block_batch, interpret):
+    b = re.shape[0]
+    grid = (b // block_batch, n1 // tile_rows)
+    lut = pl.BlockSpec((wr.shape[0],), lambda i, j: (0,))
+    data_in = pl.BlockSpec((block_batch, tile_rows, n2), lambda i, j: (i, j, 0))
+    data_out = pl.BlockSpec((block_batch, n2, tile_rows), lambda i, j: (i, 0, j))
+    out_shape = [jax.ShapeDtypeStruct((b, n2, n1), jnp.float32)] * 2
+    return pl.pallas_call(
+        partial(_pass2_kernel, n2=n2),
+        grid=grid,
+        in_specs=[lut, lut, data_in, data_in],
+        out_specs=[data_out, data_out],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(wr, wi, re, im)
+
+
+def fourstep_fft(re, im, *, tile: int = DEFAULT_TILE, block_batch: int = 4,
+                 interpret: bool = True):
+    """Forward FFT over the last axis of [batch, n] pairs, 2-3 HBM passes.
+
+    n <= tile falls back to the single-tile Stockham kernel (the paper's
+    one-kernel-call case).
+    """
+    b, n = re.shape
+    assert is_pow2(n), f"n must be a power of two, got {n}"
+    if n <= tile:
+        return stockham_fft(re, im, block_batch=block_batch * 2, interpret=interpret)
+
+    n1, n2 = capped_pow2_split(n, tile)
+    bb = _pick_block_batch(b, block_batch)
+
+    re3 = re.reshape(b, n1, n2)
+    im3 = im.reshape(b, n1, n2)
+
+    # Pass 1: column FFTs + twiddle.
+    w1r, w1i = twiddle_pair(n1)
+    w1r, w1i = jnp.asarray(w1r[: max(n1 // 2, 1)]), jnp.asarray(w1i[: max(n1 // 2, 1)])
+    twr_m, twi_m = fourstep_twiddle_matrix(n1, n2)  # [n2, n1]
+    twr = jnp.asarray(twr_m.T.copy())  # [n1, n2], aligned with the data view
+    twi = jnp.asarray(twi_m.T.copy())
+    tile_cols = min(n2, max(1, tile // n1))
+    while n2 % tile_cols != 0:
+        tile_cols -= 1
+    re3, im3 = _pass1(re3, im3, w1r, w1i, twr, twi, n1, n2, tile_cols, bb, interpret)
+
+    if n2 <= tile:
+        # Pass 2: row FFTs + transposed read-out.
+        w2r, w2i = twiddle_pair(n2)
+        w2r, w2i = jnp.asarray(w2r[: max(n2 // 2, 1)]), jnp.asarray(w2i[: max(n2 // 2, 1)])
+        tile_rows = min(n1, max(1, tile // n2))
+        while n1 % tile_rows != 0:
+            tile_rows -= 1
+        ore, oim = _pass2(re3, im3, w2r, w2i, n1, n2, tile_rows, bb, interpret)
+        return ore.reshape(b, n), oim.reshape(b, n)
+
+    # n2 > tile: recurse — the rows of the [b*n1, n2] view are themselves
+    # four-stepped (3 HBM passes total; the paper's large-N regime).
+    rr = re3.reshape(b * n1, n2)
+    ri = im3.reshape(b * n1, n2)
+    rr, ri = fourstep_fft(rr, ri, tile=tile, block_batch=block_batch, interpret=interpret)
+    rr = rr.reshape(b, n1, n2)
+    ri = ri.reshape(b, n1, n2)
+    # Read-out transpose (fused by XLA into the final copy).
+    return (jnp.transpose(rr, (0, 2, 1)).reshape(b, n),
+            jnp.transpose(ri, (0, 2, 1)).reshape(b, n))
+
+
+def passes(n: int, tile: int = DEFAULT_TILE) -> int:
+    """HBM round trips this kernel performs for size n (paper's kernel-call
+    count)."""
+    if n <= tile:
+        return 1
+    n1, n2 = capped_pow2_split(n, tile)
+    return 1 + passes(n2, tile)
+
+
+def vmem_bytes(n: int, tile: int = DEFAULT_TILE, block_batch: int = 4) -> int:
+    """Peak VMEM per grid step across passes (data in+out, re+im, + LUTs)."""
+    if n <= tile:
+        from .stockham import vmem_bytes as sv
+        return sv(n, block_batch * 2)
+    n1, n2 = capped_pow2_split(n, tile)
+    tc = min(n2, max(1, tile // n1))
+    p1 = block_batch * n1 * tc * 4 * 2 * 2 + n1 * tc * 4 * 2 + n1 // 2 * 4 * 2
+    tr = min(n1, max(1, tile // n2)) if n2 <= tile else 0
+    p2 = block_batch * tr * n2 * 4 * 2 * 2 + max(n2 // 2, 1) * 4 * 2 if tr else 0
+    return max(p1, p2)

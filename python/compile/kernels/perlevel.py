@@ -1,0 +1,85 @@
+"""Per-level FFT — the "previous method" baseline (paper §2.2, Fig. 2).
+
+One pallas_call per butterfly level: every level reads the ENTIRE array
+from HBM, performs a single Stockham level, and writes it all back. For a
+size-n transform that is log2(n) HBM round trips — the traffic pattern the
+paper's tiled method eliminates, and the baseline `gpusim::per_level`
+models. Kept deliberately faithful (including the per-level twiddle fetch)
+so the A-series ablations compare schedules, not implementations.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import is_pow2, log2_exact
+from .ref import twiddle_pair
+
+
+def _level_kernel(wr_ref, wi_ref, re_ref, im_ref, ore_ref, oim_ref,
+                  *, l: int, r: int):
+    """One Stockham level: src[2jr+k] ± W·src[2jr+r+k] -> dst[jr+k], dst[(j+l)r+k]."""
+    re = re_ref[...]   # [b, n]
+    im = im_ref[...]
+    b = re.shape[0]
+    n = re.shape[1]
+    twr = wr_ref[...].reshape(1, l, 1)
+    twi = wi_ref[...].reshape(1, l, 1)
+    vr = re.reshape(b, l, 2, r)
+    vi = im.reshape(b, l, 2, r)
+    ar, ai = vr[:, :, 0], vi[:, :, 0]
+    br, bi = vr[:, :, 1], vi[:, :, 1]
+    tr = br * twr - bi * twi
+    ti = br * twi + bi * twr
+    ore_ref[...] = jnp.concatenate([ar + tr, ar - tr], axis=1).reshape(b, n)
+    oim_ref[...] = jnp.concatenate([ai + ti, ai - ti], axis=1).reshape(b, n)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _run_all_levels(re, im, wrs, wis, interpret: bool):
+    # wrs/wis: tuple of per-level LUT arrays (static length).
+    b, n = re.shape
+    levels = log2_exact(n)
+    for s in range(levels):
+        l = 1 << s
+        r = n >> (s + 1)
+        full = pl.BlockSpec((b, n), lambda: (0, 0))
+        lut = pl.BlockSpec((l,), lambda: (0,))
+        out_shape = [jax.ShapeDtypeStruct((b, n), jnp.float32)] * 2
+        re, im = pl.pallas_call(
+            partial(_level_kernel, l=l, r=r),
+            grid=(),
+            in_specs=[lut, lut, full, full],
+            out_specs=[full, full],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(wrs[s], wis[s], re, im)
+    return re, im
+
+
+def perlevel_fft(re, im, *, interpret: bool = True):
+    """Forward FFT over the last axis of [batch, n] pairs, one pallas_call
+    (one full HBM round trip) per butterfly level."""
+    b, n = re.shape
+    assert is_pow2(n), f"n must be a power of two, got {n}"
+    if n == 1:
+        return re, im
+    wr, wi = twiddle_pair(n)
+    levels = log2_exact(n)
+    wrs, wis = [], []
+    for s in range(levels):
+        l = 1 << s
+        r = n >> (s + 1)
+        # W_{2l}^j = W_n^{j r}, j in [0, l)
+        wrs.append(jnp.asarray(wr[0:l * r:r].copy()))
+        wis.append(jnp.asarray(wi[0:l * r:r].copy()))
+    return _run_all_levels(re, im, tuple(wrs), tuple(wis), interpret)
+
+
+def hbm_round_trips(n: int) -> int:
+    """log2(n) — the traffic count gpusim::per_level charges."""
+    return log2_exact(n)

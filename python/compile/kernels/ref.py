@@ -1,0 +1,84 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references at build
+time (pytest) before `aot.py` will export artifacts.
+
+Conventions (paper eq. 1-2, mirrored by rust/src/fft):
+  forward X[k] = sum_n x[n] e^{-2*pi*i*n*k/N}   (no scaling)
+  inverse carries 1/N.
+
+Complex numbers travel as a pair of f32 arrays (re, im) — the TPU-honest
+representation (no complex dtype inside Pallas) and the Rust<->HLO wire
+format (interleaved f32 pairs are just the last axis stacked).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def to_pair(x):
+    """complex array -> (re, im) f32 pair."""
+    return jnp.real(x).astype(jnp.float32), jnp.imag(x).astype(jnp.float32)
+
+
+def from_pair(re, im):
+    """(re, im) pair -> complex64 array."""
+    return re.astype(jnp.float32) + 1j * im.astype(jnp.float32)
+
+
+def fft_ref(re, im):
+    """Reference forward FFT over the last axis, pair in / pair out."""
+    return to_pair(jnp.fft.fft(from_pair(re, im), axis=-1))
+
+
+def ifft_ref(re, im):
+    """Reference inverse FFT (1/N) over the last axis."""
+    return to_pair(jnp.fft.ifft(from_pair(re, im), axis=-1))
+
+
+def fft2_ref(re, im):
+    """Reference 2-D forward FFT over the last two axes."""
+    return to_pair(jnp.fft.fft2(from_pair(re, im), axes=(-2, -1)))
+
+
+def naive_dft(x: np.ndarray) -> np.ndarray:
+    """O(n^2) matrix DFT in float64 — the ground truth for small n.
+
+    Independent of jnp.fft so the test suite has a second opinion.
+    """
+    n = x.shape[-1]
+    k = np.arange(n)
+    w = np.exp(-2j * np.pi * np.outer(k, k) / n)
+    return (x.astype(np.complex128) @ w.T).astype(np.complex64)
+
+
+def twiddle_table(n: int) -> np.ndarray:
+    """W_n^k = e^{-2*pi*i*k/n} for k in [0, n) as complex128.
+
+    The full-period table; kernels slice what they need. Computed in f64
+    then cast where consumed (matches rust TwiddleTable).
+    """
+    k = np.arange(n)
+    return np.exp(-2j * np.pi * k / n)
+
+
+def twiddle_pair(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Twiddle table as (re, im) f32 arrays — the kernel LUT operand
+    (texture-memory analog, paper §2.3.1)."""
+    w = twiddle_table(n)
+    return w.real.astype(np.float32), w.imag.astype(np.float32)
+
+
+def fourstep_twiddle_matrix(n1: int, n2: int) -> tuple[np.ndarray, np.ndarray]:
+    """Inter-pass twiddles W_N^{j2*k1} laid out as an [n2, n1] matrix.
+
+    Row j2, column k1 — the layout pass 1 of the four-step kernel consumes
+    (it processes the data transposed, n2-major). f64 phase accumulation.
+    """
+    n = n1 * n2
+    j2 = np.arange(n2).reshape(-1, 1).astype(np.float64)
+    k1 = np.arange(n1).reshape(1, -1).astype(np.float64)
+    w = np.exp(-2j * np.pi * (j2 * k1) / n)
+    return w.real.astype(np.float32), w.imag.astype(np.float32)

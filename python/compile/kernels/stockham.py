@@ -1,0 +1,134 @@
+"""Single-tile Stockham FFT Pallas kernel.
+
+The shared-memory analog: one pallas_call whose BlockSpec gives each grid
+step a (block_batch, n) tile in VMEM; ALL log2(n) butterfly levels run on
+that tile before it is written back — exactly the paper's "all the FFT
+calculation is completed in the share memory" (§2.3.2). The twiddle LUT
+rides along as a block-resident operand (texture-memory analog, §2.3.1).
+
+Layout notes (the §2.3.3 adaptation):
+  - the transform axis is the trailing (lane) dimension, so every HBM<->VMEM
+    block transfer is contiguous = the coalesced access the paper engineers;
+  - the Stockham autosort form needs no bit-reversal scatter, which is also
+    what keeps the VMEM access pattern bank-benign (no strided writes).
+
+Mirrors rust/src/fft/stockham.rs level by level; tested against ref.py.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import is_pow2, log2_exact
+from .ref import twiddle_pair
+
+
+def stockham_levels(re, im, wr, wi, n: int, axis: int = -1):
+    """Run all log2(n) Stockham levels over `axis` of re/im.
+
+    re/im: float32 arrays whose `axis` has length n.
+    wr/wi: half-period twiddle LUT, length max(n//2, 1): W_n^k.
+
+    Works on any rank; internally normalizes to [lead, n, trail].
+    Static python loop -> unrolled in the traced graph (n is compile-time).
+    """
+    if n == 1:
+        return re, im
+    axis = axis % re.ndim
+    # Normalize to [lead, n, trail].
+    lead = int(np.prod(re.shape[:axis], dtype=np.int64)) if axis > 0 else 1
+    trail = int(np.prod(re.shape[axis + 1:], dtype=np.int64)) if axis + 1 < re.ndim else 1
+    shape_in = re.shape
+    re = re.reshape(lead, n, trail)
+    im = im.reshape(lead, n, trail)
+
+    levels = log2_exact(n)
+    for s in range(levels):
+        l = 1 << s
+        r = n >> (s + 1)
+        # Twiddles for this level: W_{2l}^j = W_n^{j*r}, j in [0, l).
+        twr = jax.lax.slice(wr, (0,), (l * r,), (r,)).reshape(1, l, 1, 1)
+        twi = jax.lax.slice(wi, (0,), (l * r,), (r,)).reshape(1, l, 1, 1)
+        # Autosort layout: src[2jr + k] pairs with src[2jr + r + k].
+        vr = re.reshape(lead, l, 2, r, trail)
+        vi = im.reshape(lead, l, 2, r, trail)
+        ar, ai = vr[:, :, 0], vi[:, :, 0]
+        br, bi = vr[:, :, 1], vi[:, :, 1]
+        # b * W
+        tr = br * twr - bi * twi
+        ti = br * twi + bi * twr
+        # dst[jr + k] = a + bW ; dst[(j+l)r + k] = a - bW
+        re = jnp.concatenate([ar + tr, ar - tr], axis=1).reshape(lead, n, trail)
+        im = jnp.concatenate([ai + ti, ai - ti], axis=1).reshape(lead, n, trail)
+    return re.reshape(shape_in), im.reshape(shape_in)
+
+
+def _kernel(wr_ref, wi_ref, re_ref, im_ref, ore_ref, oim_ref, *, n: int):
+    re = re_ref[...]
+    im = im_ref[...]
+    re, im = stockham_levels(re, im, wr_ref[...], wi_ref[...], n, axis=-1)
+    ore_ref[...] = re
+    oim_ref[...] = im
+
+
+def _pick_block_batch(b: int, requested: int) -> int:
+    """Largest divisor of b not exceeding `requested` (grid must tile b)."""
+    bb = min(requested, b)
+    while b % bb != 0:
+        bb -= 1
+    return max(bb, 1)
+
+
+@partial(jax.jit, static_argnames=("block_batch", "interpret"))
+def _run(re, im, wr, wi, block_batch: int, interpret: bool):
+    b, n = re.shape
+    grid = (b // block_batch,)
+    lut_len = wr.shape[0]
+    lut_spec = pl.BlockSpec((lut_len,), lambda i: (0,))
+    data_spec = pl.BlockSpec((block_batch, n), lambda i: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((b, n), jnp.float32),
+        jax.ShapeDtypeStruct((b, n), jnp.float32),
+    ]
+    return pl.pallas_call(
+        partial(_kernel, n=n),
+        grid=grid,
+        in_specs=[lut_spec, lut_spec, data_spec, data_spec],
+        out_specs=[data_spec, data_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(wr, wi, re, im)
+
+
+def stockham_fft(re, im, *, block_batch: int = 8, interpret: bool = True):
+    """Batched forward FFT over the last axis of [batch, n] pairs.
+
+    One pallas_call; each grid step owns a (block_batch, n) VMEM tile.
+    """
+    b, n = re.shape
+    assert is_pow2(n), f"n must be a power of two, got {n}"
+    wr, wi = twiddle_pair(max(n // 2, 1))
+    if n >= 2:
+        wr, wi = twiddle_pair(n)
+        wr, wi = wr[: n // 2], wi[: n // 2]
+    bb = _pick_block_batch(b, block_batch)
+    return _run(re, im, jnp.asarray(wr), jnp.asarray(wi), bb, interpret)
+
+
+def vmem_bytes(n: int, block_batch: int = 8) -> int:
+    """Estimated VMEM footprint of one grid step: data tile (re+im, in+out)
+    + LUT. Used by DESIGN.md §Perf and the gpusim cross-check."""
+    data = block_batch * n * 4 * 2 * 2
+    lut = max(n // 2, 1) * 4 * 2
+    return data + lut
+
+
+def flops(n: int, batch: int = 1) -> int:
+    """10 flops per radix-2 butterfly (complex mul + 2 complex adds)."""
+    return batch * (n // 2) * int(math.log2(max(n, 2))) * 10

@@ -1,0 +1,129 @@
+"""Layer-2 JAX compute graphs, built on the Layer-1 Pallas kernels.
+
+These are the functions `aot.py` lowers to HLO text artifacts that the Rust
+runtime executes. Python never runs on the request path — these trace ONCE
+at build time.
+
+Graphs:
+  fft1d / ifft1d   — batched 1-D FFT, method-selectable
+  fft2d            — 2-D FFT (rows then columns) on the same kernels
+  sar_range_doppler — the paper's motivating workload (§3: "In the SAR
+      imaging processing, the data scale of FFT operation is from a few
+      thousands to tens of thousands"): range compression + azimuth
+      compression, every FFT going through the selected kernel.
+
+Complex convention: (re, im) f32 pairs, trailing-axis transforms.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax.numpy as jnp
+
+from .kernels.fourstep import fourstep_fft
+from .kernels.perlevel import perlevel_fft
+from .kernels.ref import fft_ref, from_pair, ifft_ref, to_pair
+from .kernels.stockham import stockham_fft
+
+METHODS = ("fourstep", "stockham", "perlevel", "xla")
+
+
+def fft1d(re, im, method: str = "fourstep", interpret: bool = True):
+    """Forward FFT over the last axis of [batch, n] f32 pairs."""
+    if method == "fourstep":
+        return fourstep_fft(re, im, interpret=interpret)
+    if method == "stockham":
+        return stockham_fft(re, im, interpret=interpret)
+    if method == "perlevel":
+        return perlevel_fft(re, im, interpret=interpret)
+    if method == "xla":
+        # The vendor-FFT baseline: XLA's native HLO fft op (CUFFT-role).
+        return fft_ref(re, im)
+    raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+
+
+def ifft1d(re, im, method: str = "fourstep", interpret: bool = True):
+    """Inverse FFT (1/N) via the conjugation identity, so the inverse path
+    exercises the same kernel as the forward one."""
+    if method == "xla":
+        return ifft_ref(re, im)
+    n = re.shape[-1]
+    fr, fi = fft1d(re, -im, method=method, interpret=interpret)
+    scale = 1.0 / n
+    return fr * scale, -fi * scale
+
+
+def fft2d(re, im, method: str = "fourstep", interpret: bool = True):
+    """2-D FFT over the last two axes of [.., rows, cols] pairs: transform
+    rows, transpose, transform (former) columns, transpose back."""
+    *lead, rows, cols = re.shape
+    flat_r = re.reshape(-1, cols)
+    flat_i = im.reshape(-1, cols)
+    fr, fi = fft1d(flat_r, flat_i, method=method, interpret=interpret)
+    fr = fr.reshape(*lead, rows, cols)
+    fi = fi.reshape(*lead, rows, cols)
+    fr = jnp.swapaxes(fr, -1, -2).reshape(-1, rows)
+    fi = jnp.swapaxes(fi, -1, -2).reshape(-1, rows)
+    fr, fi = fft1d(fr, fi, method=method, interpret=interpret)
+    fr = jnp.swapaxes(fr.reshape(*lead, cols, rows), -1, -2)
+    fi = jnp.swapaxes(fi.reshape(*lead, cols, rows), -1, -2)
+    return fr, fi
+
+
+def _cmul(ar, ai, br, bi):
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def sar_range_doppler(raw_re, raw_im, rfilt_re, rfilt_im, afilt_re, afilt_im,
+                      method: str = "fourstep", interpret: bool = True):
+    """Range–Doppler SAR processor (simplified: no RCMC — scene targets are
+    near swath center; see DESIGN.md substitutions).
+
+    raw:   [naz, nr]  demodulated raw echoes (azimuth lines x range samples)
+    rfilt: [nr]       range matched filter, FREQUENCY domain (conj chirp fft)
+    afilt: [naz]      azimuth matched filter, frequency domain
+
+    Returns the focused complex image as an (re, im) pair.
+    """
+    naz, nr = raw_re.shape
+
+    # Range compression: per azimuth line, FFT -> multiply -> IFFT.
+    fr, fi = fft1d(raw_re, raw_im, method=method, interpret=interpret)
+    fr, fi = _cmul(fr, fi, rfilt_re[None, :], rfilt_im[None, :])
+    rc_re, rc_im = ifft1d(fr, fi, method=method, interpret=interpret)
+
+    # Azimuth compression: per range gate (columns), FFT -> multiply -> IFFT.
+    az_re = jnp.swapaxes(rc_re, 0, 1)  # [nr, naz]
+    az_im = jnp.swapaxes(rc_im, 0, 1)
+    fr, fi = fft1d(az_re, az_im, method=method, interpret=interpret)
+    fr, fi = _cmul(fr, fi, afilt_re[None, :], afilt_im[None, :])
+    ac_re, ac_im = ifft1d(fr, fi, method=method, interpret=interpret)
+
+    return jnp.swapaxes(ac_re, 0, 1), jnp.swapaxes(ac_im, 0, 1)
+
+
+def sar_reference(raw, rfilt, afilt):
+    """Complex-dtype oracle for sar_range_doppler (jnp.fft throughout)."""
+    rc = jnp.fft.ifft(jnp.fft.fft(raw, axis=1) * rfilt[None, :], axis=1)
+    ac = jnp.fft.ifft(jnp.fft.fft(rc, axis=0) * afilt[:, None], axis=0)
+    return ac
+
+
+# Entry points with static method binding, handy for jit/lowering.
+def make_fft_fn(method: str, interpret: bool = True, inverse: bool = False):
+    fn = ifft1d if inverse else fft1d
+    return partial(fn, method=method, interpret=interpret)
+
+
+__all__ = [
+    "METHODS",
+    "fft1d",
+    "ifft1d",
+    "fft2d",
+    "sar_range_doppler",
+    "sar_reference",
+    "make_fft_fn",
+    "to_pair",
+    "from_pair",
+]

@@ -1,0 +1,58 @@
+"""Structural perf assertions (L1/L2 §Perf): VMEM fit, traffic savings,
+HLO census sanity on the lowered modules."""
+
+import pytest
+
+from compile import analysis, aot
+
+
+class TestStructure:
+    @pytest.mark.parametrize("n", aot.TABLE1_SIZES)
+    def test_vmem_fits_budget(self, n):
+        a = analysis.analyze(n)
+        assert a["vmem_ok"], f"n={n}: VMEM {a['vmem_bytes']} over budget"
+        # Leave >= 4x headroom for double-buffering at the paper tile.
+        assert a["vmem_bytes"] * 4 < analysis.VMEM_BUDGET
+
+    @pytest.mark.parametrize("n", [4096, 16384, 65536])
+    def test_traffic_savings_match_pass_ratio(self, n):
+        a = analysis.analyze(n)
+        assert a["hbm_saved_vs_perlevel"] == pytest.approx(
+            a["passes_perlevel"] / a["passes"]
+        )
+        assert a["hbm_saved_vs_perlevel"] >= 6.0, "the paper's headline saving"
+
+    def test_intensity_grows_with_n_within_pass_regime(self):
+        # Both 2-pass: more levels amortized per pass -> higher flops/byte.
+        i1 = analysis.analyze(4096)["intensity"]
+        i2 = analysis.analyze(65536)["intensity"]
+        assert i2 > i1, "more levels per pass -> higher flops/byte"
+        # Single-pass 1024 beats 2-pass 4096 (one HBM trip for all levels).
+        assert analysis.analyze(1024)["intensity"] > i1
+
+    def test_split_is_balanced(self):
+        a = analysis.analyze(65536)
+        n1, n2 = a["split"]
+        assert n1 * n2 == 65536
+        assert max(n1, n2) <= analysis.DEFAULT_TILE
+
+
+class TestHloCensus:
+    def test_fourstep_module_census(self):
+        text = aot.to_hlo_text(aot.lower_fft("fourstep", 4096, 1))
+        census = analysis.op_census(text)
+        # The lowered module must contain real compute...
+        assert census.get("multiply", 0) > 0
+        assert census.get("add", 0) > 0
+        # ...and exactly one custom entry fusion story: no hlo 'fft' op (the
+        # whole point is OUR schedule, not the vendor op).
+        assert census.get("fft", 0) == 0
+
+    def test_xla_module_uses_vendor_fft(self):
+        text = aot.to_hlo_text(aot.lower_fft("xla", 4096, 1))
+        census = analysis.op_census(text)
+        assert census.get("fft", 0) >= 1, "vendor baseline must use the HLO fft op"
+
+    def test_no_elided_constants_in_census_path(self):
+        text = aot.to_hlo_text(aot.lower_fft("fourstep", 16384, 1))
+        assert "{...}" not in text

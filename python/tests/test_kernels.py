@@ -1,0 +1,264 @@
+"""Kernel correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; fixed-seed cases cover the paper's
+Table-1 sizes. This is the gate `make artifacts` quality rests on.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import capped_pow2_split, is_pow2, log2_exact
+from compile.kernels.fourstep import DEFAULT_TILE, fourstep_fft, passes, vmem_bytes
+from compile.kernels.perlevel import hbm_round_trips, perlevel_fft
+from compile.kernels.ref import (
+    fft_ref,
+    fourstep_twiddle_matrix,
+    from_pair,
+    naive_dft,
+    to_pair,
+    twiddle_pair,
+    twiddle_table,
+)
+from compile.kernels.stockham import stockham_fft, stockham_levels
+
+RNG = np.random.default_rng(20260710)
+
+
+def rand_pair(b, n):
+    re = RNG.standard_normal((b, n)).astype(np.float32)
+    im = RNG.standard_normal((b, n)).astype(np.float32)
+    return jnp.asarray(re), jnp.asarray(im)
+
+
+def assert_fft_close(got, expect, n, scale=1.0):
+    gr, gi = got
+    er, ei = expect
+    tol = 1e-4 * max(np.sqrt(n), 1.0) * scale + 1e-5
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(er), atol=tol, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(gi), np.asarray(ei), atol=tol, rtol=1e-3)
+
+
+# ---------------------------------------------------------------- oracles
+
+
+class TestOracles:
+    def test_jnp_fft_matches_naive_dft(self):
+        x = (RNG.standard_normal(64) + 1j * RNG.standard_normal(64)).astype(np.complex64)
+        np.testing.assert_allclose(
+            np.asarray(jnp.fft.fft(x)), naive_dft(x), atol=1e-3, rtol=1e-3
+        )
+
+    def test_twiddle_table_properties(self):
+        n = 32
+        w = twiddle_table(n)
+        # periodicity (paper eq. 3) and unit modulus
+        assert np.allclose(np.abs(w), 1.0)
+        assert np.allclose(w[1] ** n, 1.0, atol=1e-10)
+        # symmetry (paper eq. 4): conj(W^k) = W^{-k}
+        assert np.allclose(np.conj(w[3]), w[(n - 3) % n], atol=1e-12)
+
+    def test_twiddle_pair_is_f32_split(self):
+        wr, wi = twiddle_pair(16)
+        assert wr.dtype == np.float32 and wi.dtype == np.float32
+        w = twiddle_table(16)
+        np.testing.assert_allclose(wr + 1j * wi, w.astype(np.complex64), atol=1e-7)
+
+    def test_fourstep_twiddle_matrix(self):
+        n1, n2 = 8, 4
+        twr, twi = fourstep_twiddle_matrix(n1, n2)
+        assert twr.shape == (n2, n1)
+        w = np.exp(-2j * np.pi * np.outer(np.arange(n2), np.arange(n1)) / (n1 * n2))
+        np.testing.assert_allclose(twr + 1j * twi, w.astype(np.complex64), atol=1e-7)
+
+    def test_pair_round_trip(self):
+        x = (RNG.standard_normal(10) + 1j * RNG.standard_normal(10)).astype(np.complex64)
+        re, im = to_pair(jnp.asarray(x))
+        np.testing.assert_allclose(np.asarray(from_pair(re, im)), x, atol=1e-7)
+
+
+# ---------------------------------------------------------------- helpers
+
+
+class TestHelpers:
+    def test_pow2_helpers(self):
+        assert is_pow2(1024) and not is_pow2(1000)
+        assert log2_exact(4096) == 12
+
+    @pytest.mark.parametrize("n,cap,expect", [
+        (4096, 1024, (64, 64)),
+        (65536, 1024, (256, 256)),
+        (1 << 22, 1024, (1024, 4096)),
+    ])
+    def test_capped_split(self, n, cap, expect):
+        assert capped_pow2_split(n, cap) == expect
+
+    def test_pass_counts(self):
+        assert passes(1024) == 1
+        assert passes(65536) == 2
+        assert passes(1 << 22) == 3  # n2 = 4096 > tile -> recursion
+        assert hbm_round_trips(65536) == 16
+
+    def test_vmem_budget_reasonable(self):
+        # A pass tile should stay in the low-MB VMEM ballpark.
+        assert vmem_bytes(65536) < 4 * 1024 * 1024
+        assert vmem_bytes(1024) < 1024 * 1024
+
+
+# ------------------------------------------------------------ stockham L1
+
+
+class TestStockham:
+    @pytest.mark.parametrize("n", [2, 4, 16, 64, 256, 1024, 4096])
+    def test_matches_ref(self, n):
+        re, im = rand_pair(3, n)
+        assert_fft_close(stockham_fft(re, im), fft_ref(re, im), n)
+
+    def test_impulse(self):
+        n = 128
+        re = jnp.zeros((1, n)).at[0, 0].set(1.0)
+        im = jnp.zeros((1, n))
+        gr, gi = stockham_fft(re, im)
+        np.testing.assert_allclose(np.asarray(gr), 1.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(gi), 0.0, atol=1e-5)
+
+    def test_single_tone(self):
+        n, tone = 64, 5
+        t = np.arange(n)
+        x = np.exp(2j * np.pi * tone * t / n).astype(np.complex64)
+        gr, gi = stockham_fft(*to_pair(jnp.asarray(x[None, :])))
+        mag = np.abs(np.asarray(from_pair(gr, gi)))[0]
+        assert mag[tone] > n - 1e-2
+        mag[tone] = 0
+        assert mag.max() < 1e-2
+
+    def test_linearity(self):
+        n = 256
+        re1, im1 = rand_pair(2, n)
+        re2, im2 = rand_pair(2, n)
+        a, b = 2.5, -1.5
+        gr, gi = stockham_fft(a * re1 + b * re2, a * im1 + b * im2)
+        r1, i1 = stockham_fft(re1, im1)
+        r2, i2 = stockham_fft(re2, im2)
+        assert_fft_close((gr, gi), (a * r1 + b * r2, a * i1 + b * i2), n)
+
+    def test_parseval(self):
+        n = 512
+        re, im = rand_pair(1, n)
+        gr, gi = stockham_fft(re, im)
+        ein = float(jnp.sum(re**2 + im**2))
+        eout = float(jnp.sum(gr**2 + gi**2)) / n
+        assert abs(ein - eout) / ein < 1e-4
+
+    def test_block_batch_variants_agree(self):
+        n, b = 128, 12
+        re, im = rand_pair(b, n)
+        a = stockham_fft(re, im, block_batch=1)
+        c = stockham_fft(re, im, block_batch=4)
+        assert_fft_close(a, c, n)
+
+    def test_levels_axis_variants(self):
+        # stockham_levels must agree across axis placements.
+        n = 64
+        re, im = rand_pair(2, n)
+        wr, wi = twiddle_pair(n)
+        wr, wi = jnp.asarray(wr[: n // 2]), jnp.asarray(wi[: n // 2])
+        r1, i1 = stockham_levels(re, im, wr, wi, n, axis=-1)
+        r2, i2 = stockham_levels(re.T.copy(), im.T.copy(), wr, wi, n, axis=0)
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2.T), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(i1), np.asarray(i2.T), atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        lg=st.integers(min_value=1, max_value=10),
+        b=st.integers(min_value=1, max_value=5),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, lg, b, seed):
+        n = 1 << lg
+        rng = np.random.default_rng(seed)
+        re = jnp.asarray(rng.standard_normal((b, n)).astype(np.float32))
+        im = jnp.asarray(rng.standard_normal((b, n)).astype(np.float32))
+        assert_fft_close(stockham_fft(re, im), fft_ref(re, im), n)
+
+
+# ------------------------------------------------------------ fourstep L1
+
+
+class TestFourstep:
+    @pytest.mark.parametrize("n", [16, 256, 1024, 2048, 4096, 16384, 65536])
+    def test_matches_ref_paper_sizes(self, n):
+        re, im = rand_pair(2, n)
+        assert_fft_close(fourstep_fft(re, im), fft_ref(re, im), n)
+
+    @pytest.mark.parametrize("tile", [16, 64, 256])
+    def test_tile_ablation_still_correct(self, tile):
+        n = 4096
+        re, im = rand_pair(1, n)
+        got = fourstep_fft(re, im, tile=tile)
+        assert_fft_close(got, fft_ref(re, im), n)
+
+    def test_three_pass_regime(self):
+        # tile=16 forces n2 > tile -> recursion (3+ HBM passes).
+        n, tile = 16384, 16
+        assert passes(n, tile) >= 3
+        re, im = rand_pair(1, n)
+        assert_fft_close(fourstep_fft(re, im, tile=tile), fft_ref(re, im), n)
+
+    def test_agrees_with_stockham_in_tile_regime(self):
+        n = 512
+        re, im = rand_pair(4, n)
+        assert_fft_close(fourstep_fft(re, im), stockham_fft(re, im), n)
+
+    def test_batch_rows_independent(self):
+        n = 4096
+        re, im = rand_pair(4, n)
+        full_r, full_i = fourstep_fft(re, im)
+        one_r, one_i = fourstep_fft(re[1:2], im[1:2])
+        np.testing.assert_allclose(
+            np.asarray(full_r[1]), np.asarray(one_r[0]), atol=1e-3
+        )
+        np.testing.assert_allclose(
+            np.asarray(full_i[1]), np.asarray(one_i[0]), atol=1e-3
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        lg=st.integers(min_value=11, max_value=15),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep_multi_pass(self, lg, seed):
+        n = 1 << lg
+        rng = np.random.default_rng(seed)
+        re = jnp.asarray(rng.standard_normal((1, n)).astype(np.float32))
+        im = jnp.asarray(rng.standard_normal((1, n)).astype(np.float32))
+        assert passes(n) == 2
+        assert_fft_close(fourstep_fft(re, im), fft_ref(re, im), n)
+
+
+# ------------------------------------------------------------ perlevel L1
+
+
+class TestPerlevel:
+    @pytest.mark.parametrize("n", [2, 16, 256, 1024, 4096])
+    def test_matches_ref(self, n):
+        re, im = rand_pair(2, n)
+        assert_fft_close(perlevel_fft(re, im), fft_ref(re, im), n)
+
+    def test_agrees_with_fourstep(self):
+        n = 2048
+        re, im = rand_pair(1, n)
+        assert_fft_close(perlevel_fft(re, im), fourstep_fft(re, im), n)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        lg=st.integers(min_value=1, max_value=10),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, lg, seed):
+        n = 1 << lg
+        rng = np.random.default_rng(seed)
+        re = jnp.asarray(rng.standard_normal((2, n)).astype(np.float32))
+        im = jnp.asarray(rng.standard_normal((2, n)).astype(np.float32))
+        assert_fft_close(perlevel_fft(re, im), fft_ref(re, im), n)

@@ -1,0 +1,57 @@
+//! Ablations A1–A3 (DESIGN.md §4): each §2.3 optimization turned off in the
+//! calibrated model, the tile-size sweep, and a *measured* schedule
+//! comparison (per-level vs four-step artifacts on this host's PJRT).
+//!
+//!   cargo bench --bench ablation
+
+use memfft::bench::Bench;
+use memfft::harness::ablation;
+use memfft::runtime::Engine;
+use memfft::util::Xoshiro256;
+
+fn main() {
+    // --- simulated ablations (the paper's hardware) -----------------------
+    let rows = ablation::run(&[1024, 4096, 16384, 65536]);
+    println!("\nA1-A3 — simulated C2070, end-to-end ms:\n");
+    println!("{}", ablation::render(&rows));
+    for r in &rows {
+        assert!(r.no_coalesce_ms > r.baseline_ms);
+        assert!(r.no_texture_ms >= r.baseline_ms);
+        assert!(r.no_padding_ms >= r.baseline_ms);
+    }
+
+    println!("A2 — tile sweep at N=65536 (kernel-only µs):");
+    for (tile, us) in ablation::tile_sweep(65536, &[64, 128, 256, 512, 1024, 2048, 4096]) {
+        println!("  tile {tile:>5}: {us:8.1}");
+    }
+
+    // --- measured schedule ablation on this host --------------------------
+    // per-level (log2 N HBM passes) vs four-step (≤2 passes) as ACTUAL
+    // compiled artifacts through PJRT. interpret-mode wall-clock is not a
+    // TPU proxy (DESIGN.md §Perf) but the *structural* cost of the extra
+    // passes shows anyway.
+    let Ok(engine) = Engine::new("artifacts") else {
+        println!("\nmeasured ablation skipped: run `make artifacts`");
+        return;
+    };
+    let mut bench = Bench::from_env();
+    let mut rng = Xoshiro256::seeded(0xA81A);
+    println!("\nmeasured on this host (PJRT CPU, batch 1):");
+    for n in [256usize, 1024, 4096] {
+        for method in ["perlevel", "fourstep", "xla"] {
+            let Ok(entry) = engine.index().find_fft("fft", method, n, 1) else {
+                continue;
+            };
+            let entry = entry.clone();
+            let re = rng.real_vec(n);
+            let im = rng.real_vec(n);
+            engine.run_fft(&entry, &re, &im).expect("warm");
+            bench.run_with_elements(format!("{method}/{n}"), Some(n as u64), || {
+                memfft::bench::bb(engine.run_fft(&entry, &re, &im).unwrap());
+            });
+        }
+    }
+    println!("\n{}", bench.table());
+    bench.write_csv("ablation_measured.csv").ok();
+    println!("wrote target/bench-results/ablation_measured.csv");
+}

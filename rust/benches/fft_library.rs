@@ -1,0 +1,63 @@
+//! FFT library microbenchmarks: every algorithm across sizes — the data the
+//! planner heuristic and the §Perf iteration log are based on.
+//!
+//!   cargo bench --bench fft_library
+
+use memfft::bench::Bench;
+use memfft::fft::{Algorithm, FftPlan};
+use memfft::util::Xoshiro256;
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let mut rng = Xoshiro256::seeded(0xF71B);
+    let quick = std::env::var("MEMFFT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let sizes: &[usize] = if quick {
+        &[256, 4096]
+    } else {
+        &[64, 256, 1024, 4096, 16384, 65536, 1 << 18]
+    };
+
+    for &n in sizes {
+        let input = rng.complex_vec(n);
+        for algo in Algorithm::candidates(n) {
+            // Split-radix allocates per recursion level — skip its huge
+            // sizes to keep the run bounded.
+            if algo == Algorithm::SplitRadix && n > 16384 {
+                continue;
+            }
+            if algo == Algorithm::Bluestein && n > 65536 {
+                continue;
+            }
+            let plan = FftPlan::new(n, algo);
+            let mut buf = input.clone();
+            bench.run_with_elements(format!("{}/{}", algo.name(), n), Some(n as u64), || {
+                buf.copy_from_slice(&input);
+                plan.forward(&mut buf);
+                memfft::bench::bb(&buf);
+            });
+        }
+    }
+
+    println!("\n{}", bench.table());
+
+    // The planner's choice should never be beaten by >2.5x at its own size.
+    for &n in sizes {
+        let auto_name = format!("{}/{}", FftPlan::new(n, Algorithm::Auto).algorithm().name(), n);
+        let auto = bench.find(&auto_name).map(|m| m.median_ns);
+        if let Some(auto) = auto {
+            let best = Algorithm::candidates(n)
+                .iter()
+                .filter_map(|a| bench.find(&format!("{}/{}", a.name(), n)))
+                .map(|m| m.median_ns)
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                auto <= best * 2.5,
+                "planner pick for n={n} is {:.1}x off the best",
+                auto / best
+            );
+        }
+    }
+    println!("planner sanity passed");
+    bench.write_csv("fft_library.csv").ok();
+    println!("wrote target/bench-results/fft_library.csv");
+}

@@ -1,0 +1,41 @@
+//! Figures 9–10 (paper §3): speedup of the memory-optimized FFT over the
+//! vendor library (CUFFT role = XLA's native fft op on this platform).
+//!
+//!   cargo bench --bench fig_cufft
+
+use memfft::harness::{figs, table1};
+use memfft::runtime::Engine;
+
+fn main() {
+    let quick = std::env::var("MEMFFT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let reps = if quick { 2 } else { 7 };
+    let engine = Engine::new("artifacts").ok();
+    let sizes = table1::paper_sizes();
+    let rows = table1::run(engine.as_ref(), &sizes, reps);
+
+    let e2e = figs::cufft_speedup(&rows);
+    let kernel_only = figs::cufft_kernel_speedup(&sizes);
+
+    println!("\nFigs 9-10 — speedup vs vendor FFT (>1 ⇒ ours faster)\n");
+    println!("{}", figs::render("end-to-end", &e2e));
+    println!("{}", figs::render("kernel-only (schedule effect)", &kernel_only));
+
+    // Paper claims: 30-100% improvement in the moderate band; dip at 65536
+    // where the third kernel call lands.
+    let get = |n: usize| e2e.iter().find(|p| p.n == n).unwrap().simulated;
+    for n in [4096usize, 16384] {
+        assert!(get(n) > 1.15, "n={n}: sim speedup {:.2} < 1.15", get(n));
+    }
+    assert!(get(65536) > 1.0, "ours must still win at 65536");
+    assert!(
+        get(65536) < get(16384),
+        "speedup must dip at 65536 (3rd kernel call), got {:.2} vs {:.2}",
+        get(65536),
+        get(16384)
+    );
+    println!("shape checks passed: moderate-band win, 65536 dip");
+
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write("target/bench-results/fig9_10.csv", figs::csv("fig9_10_vs_cufft", &e2e)).ok();
+    println!("wrote target/bench-results/fig9_10.csv");
+}

@@ -1,0 +1,37 @@
+//! Figures 7–8 (paper §3): speedup of the memory-optimized GPU FFT over
+//! FFTW, transfer time included — the CPU-vs-GPU comparison.
+//!
+//!   cargo bench --bench fig_fftw
+
+use memfft::harness::{figs, table1};
+use memfft::runtime::Engine;
+
+fn main() {
+    let quick = std::env::var("MEMFFT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let reps = if quick { 2 } else { 7 };
+    let engine = Engine::new("artifacts").ok();
+    let sizes = table1::paper_sizes();
+    let rows = table1::run(engine.as_ref(), &sizes, reps);
+    let series = figs::fftw_speedup(&rows);
+
+    println!("\nFigs 7-8 — speedup vs FFTW (>1 ⇒ ours faster)\n");
+    println!("{}", figs::render("ours vs FFTW", &series));
+
+    match figs::fftw_crossover(&sizes) {
+        Some(x) => {
+            println!("simulated crossover: N = {x} (paper: ≈8192)");
+            assert!(
+                (4096..=16384).contains(&x),
+                "crossover must fall near the paper's 8192"
+            );
+        }
+        None => panic!("no FFTW/GPU crossover found — shape broken"),
+    }
+    // Speedup grows with N (paper: "accelerating effect is gradually
+    // obvious as a whole with the increase of the data volume").
+    assert!(series.last().unwrap().simulated > series[0].simulated * 4.0);
+
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write("target/bench-results/fig7_8.csv", figs::csv("fig7_8_vs_fftw", &series)).ok();
+    println!("wrote target/bench-results/fig7_8.csv");
+}

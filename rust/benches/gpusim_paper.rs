@@ -1,0 +1,69 @@
+//! Paper figures 2–5 evidence: the memory-hierarchy histogram (Fig 3) and
+//! the per-level vs tiled schedule comparison (Fig 2 vs Figs 4-5) from the
+//! calibrated C2070 model, plus exact traffic accounting.
+//!
+//!   cargo bench --bench gpusim_paper
+
+use memfft::gpusim::{self, GpuDescriptor, TiledOptions};
+use memfft::harness::{figs, table1};
+
+fn main() {
+    let gpu = GpuDescriptor::tesla_c2070();
+
+    println!("\nFig 3 — memory hierarchy (bandwidth / latency / size):\n");
+    println!(
+        "{:<10} {:>12} {:>10} {:>14}",
+        "space", "GB/s", "cycles", "bytes"
+    );
+    for s in gpu.memory_histogram() {
+        println!(
+            "{:<10} {:>12.1} {:>10.0} {:>14}",
+            s.space.name(),
+            s.bandwidth / 1e9,
+            s.latency_cycles,
+            s.capacity_bytes
+        );
+    }
+
+    let sizes = table1::paper_sizes();
+    println!("\nFig 2 vs Figs 4-5 — per-level vs tiled schedule (simulated):\n");
+    println!(
+        "{:>8} {:>10} {:>10} {:>9} {:>12} {:>12} {:>8}",
+        "N", "per-lvl µs", "tiled µs", "speedup", "traffic pl", "traffic tl", "ratio"
+    );
+    for &n in &sizes {
+        let pl = gpusim::per_level(n, 1, &gpu).predict(&gpu);
+        let tl = gpusim::tiled(n, 1, TiledOptions::default(), &gpu).predict(&gpu);
+        println!(
+            "{:>8} {:>10.1} {:>10.1} {:>9.2} {:>11.0}K {:>11.0}K {:>8.1}",
+            n,
+            pl.total_s * 1e6,
+            tl.total_s * 1e6,
+            pl.total_s / tl.total_s,
+            pl.global_traffic / 1024.0,
+            tl.global_traffic / 1024.0,
+            pl.global_traffic / tl.global_traffic
+        );
+        // The paper's core claim, exactly: the tiled schedule's global
+        // traffic is passes/log2(n) of the per-level schedule's.
+        assert_eq!(
+            tl.global_traffic,
+            gpusim::schedules::global_traffic_tiled(n, 1),
+            "traffic accounting must be exact"
+        );
+        assert!(tl.total_s < pl.total_s, "tiled must win at n={n}");
+    }
+
+    let series = figs::perlevel_speedup(&sizes);
+    println!(
+        "\nper-level → tiled speedup grows from {:.2}x (N=16) to {:.2}x (N=65536)",
+        series[0].simulated,
+        series.last().unwrap().simulated
+    );
+
+    // Kernel-call counts follow the paper's rule (§3).
+    for (n, calls) in [(16usize, 1usize), (1024, 1), (4096, 2), (32768, 2), (65536, 3)] {
+        assert_eq!(gpusim::paper_pass_rule(n), calls, "paper pass rule at {n}");
+    }
+    println!("kernel-call rule verified: ≤1024→1, ≤32768→2, else 3");
+}

@@ -1,0 +1,75 @@
+//! SAR workload benchmark — the paper's §3 motivation ("GPU-based SAR
+//! processing"): range–Doppler throughput on CPU library vs the AOT
+//! (pallas-four-step) artifact, plus the FFT-only SAR band sweep.
+//!
+//!   cargo bench --bench sar
+
+use memfft::bench::Bench;
+use memfft::runtime::Engine;
+use memfft::sar::{self, Scene};
+use memfft::util::Xoshiro256;
+
+fn main() {
+    let (naz, nr) = (256usize, 1024usize);
+    let scene = Scene::demo(naz, nr);
+    let raw = scene.raw_echo(11);
+    let mut bench = Bench::from_env();
+
+    // CPU path.
+    bench.run_with_elements("sar/cpu_rda", Some((naz * nr) as u64), || {
+        memfft::bench::bb(sar::process_cpu(&raw, naz, nr));
+    });
+
+    // AOT path.
+    if let Ok(engine) = Engine::new("artifacts") {
+        if let Some(entry) = engine
+            .index()
+            .entries()
+            .iter()
+            .find(|e| e.op == "sar" && e.method == "fourstep")
+            .cloned()
+        {
+            let re: Vec<f32> = raw.iter().map(|c| c.re).collect();
+            let im: Vec<f32> = raw.iter().map(|c| c.im).collect();
+            let (rf, af) = sar::filters(naz, nr);
+            let rf_re: Vec<f32> = rf.iter().map(|c| c.re).collect();
+            let rf_im: Vec<f32> = rf.iter().map(|c| c.im).collect();
+            let af_re: Vec<f32> = af.iter().map(|c| c.re).collect();
+            let af_im: Vec<f32> = af.iter().map(|c| c.im).collect();
+            engine
+                .run_sar(&entry, naz, nr, &re, &im, &rf_re, &rf_im, &af_re, &af_im)
+                .expect("warm");
+            bench.run_with_elements("sar/aot_fourstep", Some((naz * nr) as u64), || {
+                memfft::bench::bb(
+                    engine
+                        .run_sar(&entry, naz, nr, &re, &im, &rf_re, &rf_im, &af_re, &af_im)
+                        .unwrap(),
+                );
+            });
+        }
+        // The SAR band FFTs themselves ("a few thousands to tens of
+        // thousands"): batch-16 transforms, the shape the processor issues.
+        let mut rng = Xoshiro256::seeded(5);
+        for n in [1024usize, 4096, 16384] {
+            if let Ok(entry) = engine.index().find_fft("fft", "fourstep", n, 16) {
+                let entry = entry.clone();
+                let re = rng.real_vec(entry.batch * n);
+                let im = rng.real_vec(entry.batch * n);
+                engine.run_fft(&entry, &re, &im).expect("warm");
+                bench.run_with_elements(
+                    format!("sar_band_fft/b{}x{n}", entry.batch),
+                    Some((entry.batch * n) as u64),
+                    || {
+                        memfft::bench::bb(engine.run_fft(&entry, &re, &im).unwrap());
+                    },
+                );
+            }
+        }
+    } else {
+        println!("AOT path skipped: run `make artifacts`");
+    }
+
+    println!("\n{}", bench.table());
+    bench.write_csv("sar.csv").ok();
+    println!("wrote target/bench-results/sar.csv");
+}

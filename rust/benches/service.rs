@@ -1,0 +1,92 @@
+//! Coordinator benchmark: service throughput/latency with batching on vs
+//! off — the L3 contribution's own numbers (§Perf L3).
+//!
+//!   cargo bench --bench service
+
+use std::sync::Arc;
+
+use memfft::config::ServiceConfig;
+use memfft::coordinator::{Direction, FftService};
+use memfft::util::{Timer, Xoshiro256};
+
+fn drive(svc: &Arc<FftService>, clients: usize, per_client: usize, sizes: &[usize]) -> f64 {
+    let t = Timer::start();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let svc = svc.clone();
+            let sizes = sizes.to_vec();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::seeded(c as u64);
+                for _ in 0..per_client {
+                    let n = *rng.choose(&sizes);
+                    if let Ok(rx) =
+                        svc.submit(n, Direction::Forward, rng.real_vec(n), rng.real_vec(n))
+                    {
+                        let _ = rx.recv();
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (clients * per_client) as f64 / t.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let quick = std::env::var("MEMFFT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let per_client = if quick { 20 } else { 150 };
+    let have_artifacts = std::path::Path::new("artifacts/manifest.txt").exists();
+    let method = if have_artifacts { "fourstep" } else { "native" };
+    let sizes = [1024usize, 4096];
+
+    println!("service bench: method={method}, 4 clients × {per_client} requests, sizes {sizes:?}\n");
+
+    let mut results = Vec::new();
+    for (label, max_batch, delay_us) in [
+        ("no-batching (max_batch=1)", 1usize, 0u64),
+        ("batching (max_batch=8, 500µs)", 8, 500),
+        ("batching (max_batch=16, 1ms)", 16, 1000),
+    ] {
+        let svc = Arc::new(FftService::start(ServiceConfig {
+            method: method.into(),
+            workers: 2,
+            max_batch,
+            max_delay_us: delay_us,
+            queue_depth: 8192,
+            sizes: sizes.to_vec(),
+            ..Default::default()
+        }));
+        let rps = drive(&svc, 4, per_client, &sizes);
+        let fill = svc.metrics().mean_batch_fill();
+        let p99 = svc.metrics().e2e_latency.percentile(99.0);
+        println!(
+            "{label:<32} {rps:>8.0} req/s  fill {fill:>5.2}  p99 {:>10.2?}",
+            p99
+        );
+        results.push((label, rps, fill));
+    }
+
+    // On CPU-PJRT, batch compute scales ~linearly, so batching trades
+    // padding waste against per-call overhead: expect roughly parity here
+    // (the win appears on accelerators where launch overhead dominates —
+    // exactly the paper's Table-1 small-N regime, see gpusim). Guard
+    // against catastrophic regression and verify batches actually fill.
+    if have_artifacts {
+        let (_, rps_nobatch, _) = results[0];
+        let best = results[1..].iter().map(|r| r.1).fold(0.0f64, f64::max);
+        println!(
+            "\nbatching speedup: {:.2}x over unbatched (CPU-PJRT: ≈parity expected)",
+            best / rps_nobatch
+        );
+        assert!(
+            best > rps_nobatch * 0.4,
+            "batched serving regressed catastrophically: {best:.0} vs {rps_nobatch:.0}"
+        );
+        assert!(
+            results[1..].iter().any(|r| r.2 > 1.5),
+            "batches must actually fill under 4-way concurrency"
+        );
+    }
+}

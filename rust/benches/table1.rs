@@ -1,0 +1,41 @@
+//! Table 1 regeneration (paper §3): FFTW vs CUFFT-role vs Ours.
+//!
+//!   cargo bench --bench table1
+//!
+//! Columns: measured on this host (rust FFT / XLA-fft artifact / pallas
+//! four-step artifact via PJRT), simulated on the paper's C2070/i7-2600K,
+//! and the paper's published numbers. CSV lands in target/bench-results/.
+
+use memfft::harness::table1;
+use memfft::runtime::Engine;
+
+fn main() {
+    let quick = std::env::var("MEMFFT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let reps = if quick { 2 } else { 9 };
+    let engine = Engine::new("artifacts")
+        .map_err(|e| eprintln!("note: measuring without artifacts ({e})"))
+        .ok();
+    let sizes = table1::paper_sizes();
+    let rows = table1::run(engine.as_ref(), &sizes, reps);
+
+    println!("\nTable 1 — complex 1-D FFT, batch 1, times in ms");
+    println!("(host = this machine; sim = calibrated Tesla C2070 / i7-2600K model)\n");
+    println!("{}", table1::render(&rows));
+
+    // Shape assertions the paper claims (DESIGN.md §4) — simulated side.
+    for r in &rows {
+        if r.n < 8192 {
+            assert!(r.sim_fftw_ms < r.sim_ours_ms, "sim: FFTW must win at n={}", r.n);
+        }
+        if (4096..=16384).contains(&r.n) {
+            assert!(r.sim_cufft_ms / r.sim_ours_ms > 1.15, "sim: ours must beat vendor at n={}", r.n);
+        }
+    }
+    let last = rows.last().unwrap();
+    assert!(last.sim_fftw_ms / last.sim_ours_ms > 1.8, "sim: >~2x vs FFTW at 65536");
+    println!("shape checks passed: FFTW wins small, ours wins moderate band, ~2x at 64k");
+
+    std::fs::create_dir_all("target/bench-results").ok();
+    std::fs::write("target/bench-results/table1.csv", table1::csv(&rows)).ok();
+    println!("wrote target/bench-results/table1.csv");
+}

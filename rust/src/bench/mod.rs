@@ -1,0 +1,291 @@
+//! Micro-benchmark harness — the criterion stand-in used by every target in
+//! `benches/` (criterion itself is not in the vendored crate set).
+//!
+//! Method: warm up for a fixed wall-clock budget, pick an iteration count so
+//! each *sample* runs >= `min_sample_time`, collect `samples` samples, and
+//! report median + MAD (median absolute deviation) — robust statistics so a
+//! stray scheduler hiccup does not move the headline number. Results can be
+//! printed as an aligned text table and dumped as CSV next to the bench.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Identifier, e.g. `fftw/1024`.
+    pub name: String,
+    /// Median time per iteration, nanoseconds.
+    pub median_ns: f64,
+    /// Median absolute deviation, nanoseconds.
+    pub mad_ns: f64,
+    /// Iterations per sample used.
+    pub iters_per_sample: u64,
+    /// Number of samples.
+    pub samples: usize,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl Measurement {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+
+    /// Elements per second, if `elements` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / (self.median_ns / 1e9))
+    }
+}
+
+/// Harness configuration. `quick()` is used inside `cargo test` smoke tests;
+/// `default()` for real benches.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub min_sample_time: Duration,
+    pub samples: usize,
+    pub max_total_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            min_sample_time: Duration::from_millis(30),
+            samples: 15,
+            max_total_time: Duration::from_secs(10),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Tiny budget for use inside unit/integration tests.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(5),
+            min_sample_time: Duration::from_millis(2),
+            samples: 5,
+            max_total_time: Duration::from_millis(200),
+        }
+    }
+
+    /// Honour `MEMFFT_BENCH_QUICK=1` so CI can run every bench target fast.
+    pub fn from_env() -> Self {
+        if std::env::var("MEMFFT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// The harness: collects measurements, prints a table, writes CSV.
+pub struct Bench {
+    pub config: BenchConfig,
+    pub results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(config: BenchConfig) -> Self {
+        Self { config, results: Vec::new() }
+    }
+
+    pub fn from_env() -> Self {
+        Self::new(BenchConfig::from_env())
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call.
+    pub fn run(&mut self, name: impl Into<String>, mut f: impl FnMut()) -> &Measurement {
+        self.run_with_elements(name, None, move || f())
+    }
+
+    /// Benchmark with a throughput denominator (elements processed per call).
+    pub fn run_with_elements(
+        &mut self,
+        name: impl Into<String>,
+        elements: Option<u64>,
+        mut f: impl FnMut(),
+    ) -> &Measurement {
+        let cfg = self.config;
+        // Warmup + calibration: count how many iterations fit in the warmup
+        // budget to derive iters_per_sample.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < cfg.warmup {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((cfg.min_sample_time.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut sample_ns: Vec<f64> = Vec::with_capacity(cfg.samples);
+        let total_start = Instant::now();
+        for _ in 0..cfg.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            sample_ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
+            if total_start.elapsed() > cfg.max_total_time {
+                break;
+            }
+        }
+        sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = percentile_sorted(&sample_ns, 50.0);
+        let mut devs: Vec<f64> = sample_ns.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = percentile_sorted(&devs, 50.0);
+
+        self.results.push(Measurement {
+            name: name.into(),
+            median_ns: median,
+            mad_ns: mad,
+            iters_per_sample: iters,
+            samples: sample_ns.len(),
+            elements,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Aligned text table of all results so far.
+    pub fn table(&self) -> String {
+        let mut rows: Vec<[String; 4]> = vec![[
+            "benchmark".into(),
+            "median".into(),
+            "±MAD".into(),
+            "throughput".into(),
+        ]];
+        for m in &self.results {
+            rows.push([
+                m.name.clone(),
+                crate::util::timer::fmt_ns(m.median_ns),
+                crate::util::timer::fmt_ns(m.mad_ns),
+                m.throughput()
+                    .map(|t| format!("{:.2} Melem/s", t / 1e6))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        render_table(&rows)
+    }
+
+    /// CSV dump (name,median_ns,mad_ns,samples,iters,elements).
+    pub fn csv(&self) -> String {
+        let mut out = String::from("name,median_ns,mad_ns,samples,iters_per_sample,elements\n");
+        for m in &self.results {
+            out.push_str(&format!(
+                "{},{:.1},{:.1},{},{},{}\n",
+                m.name,
+                m.median_ns,
+                m.mad_ns,
+                m.samples,
+                m.iters_per_sample,
+                m.elements.map(|e| e.to_string()).unwrap_or_default()
+            ));
+        }
+        out
+    }
+
+    /// Write the CSV to `target/bench-results/<file>`.
+    pub fn write_csv(&self, file: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("target/bench-results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(file);
+        std::fs::write(&path, self.csv())?;
+        Ok(path)
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Measurement> {
+        self.results.iter().find(|m| m.name == name)
+    }
+}
+
+/// `black_box` re-export so benches don't need `std::hint` imports.
+pub fn bb<T>(x: T) -> T {
+    black_box(x)
+}
+
+/// Percentile over a pre-sorted slice (linear interpolation).
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Render rows as an aligned text table with a header separator.
+pub fn render_table<const W: usize>(rows: &[[String; W]]) -> String {
+    let mut widths = [0usize; W];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let mut out = String::new();
+    for (r, row) in rows.iter().enumerate() {
+        for (i, cell) in row.iter().enumerate() {
+            out.push_str(cell);
+            for _ in cell.chars().count()..widths[i] + 2 {
+                out.push(' ');
+            }
+        }
+        out.push('\n');
+        if r == 0 {
+            for (i, w) in widths.iter().enumerate() {
+                out.push_str(&"-".repeat(*w));
+                if i + 1 < W {
+                    out.push_str("  ");
+                }
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&xs, 50.0), 3.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 5.0);
+        assert_eq!(percentile_sorted(&xs, 25.0), 2.0);
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
+        assert_eq!(percentile_sorted(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::new(BenchConfig::quick());
+        let m = b.run_with_elements("sum/1000", Some(1000), || {
+            bb((0..1000u64).sum::<u64>());
+        });
+        assert!(m.median_ns > 0.0);
+        assert!(m.throughput().unwrap() > 0.0);
+        assert!(b.find("sum/1000").is_some());
+        assert!(b.table().contains("sum/1000"));
+        assert!(b.csv().starts_with("name,"));
+    }
+
+    #[test]
+    fn table_alignment() {
+        let rows = vec![
+            ["a".to_string(), "bb".to_string()],
+            ["ccc".to_string(), "d".to_string()],
+        ];
+        let t = render_table(&rows);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 3); // header, separator, one row
+    }
+}

@@ -1,0 +1,314 @@
+//! Tiny argv parser — the clap stand-in (clap is not in the vendored crate
+//! set). Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with typed getters and generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--sizes 16,64,256`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad integer '{s}'"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Command definition: name, about text, arg specs.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub args: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, args: Vec::new() }
+    }
+
+    pub fn arg(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, takes_value: true, default: None });
+        self
+    }
+
+    pub fn arg_default(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.args.push(ArgSpec { name, help, takes_value: true, default: Some(default) });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec { name, help, takes_value: false, default: None });
+        self
+    }
+}
+
+/// A CLI with subcommands (like `memfft serve --config x.toml`).
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown subcommand '{0}'")]
+    UnknownSubcommand(String),
+    #[error("unknown option '--{0}'")]
+    UnknownOption(String),
+    #[error("option '--{0}' requires a value")]
+    MissingValue(String),
+    #[error("help requested")]
+    Help,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Self { bin, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, cmd: Command) -> Self {
+        self.commands.push(cmd);
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.bin, self.about, self.bin);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun with '<command> --help' for command options.\n");
+        s
+    }
+
+    pub fn command_usage(&self, cmd: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.bin, cmd.name, cmd.about);
+        for a in &cmd.args {
+            let v = if a.takes_value { " <value>" } else { "" };
+            let d = a.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{}{:<14} {}{}\n", a.name, v, a.help, d));
+        }
+        s
+    }
+
+    /// Parse argv (excluding argv[0]). On `--help`, returns `CliError::Help`
+    /// after printing usage to stdout.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+
+        let sub = match it.peek() {
+            Some(s) if !s.starts_with('-') => {
+                let s = it.next().unwrap().clone();
+                Some(s)
+            }
+            _ => None,
+        };
+        if sub.is_none() && argv.iter().any(|a| a == "--help" || a == "-h") {
+            println!("{}", self.usage());
+            return Err(CliError::Help);
+        }
+        let cmd = match &sub {
+            Some(name) => Some(
+                self.commands
+                    .iter()
+                    .find(|c| c.name == name.as_str())
+                    .ok_or_else(|| CliError::UnknownSubcommand(name.clone()))?,
+            ),
+            None => None,
+        };
+        out.subcommand = sub;
+
+        // Seed defaults.
+        if let Some(cmd) = cmd {
+            for a in &cmd.args {
+                if let Some(d) = a.default {
+                    out.values.insert(a.name.to_string(), d.to_string());
+                }
+            }
+        }
+
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                if let Some(cmd) = cmd {
+                    println!("{}", self.command_usage(cmd));
+                } else {
+                    println!("{}", self.usage());
+                }
+                return Err(CliError::Help);
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = cmd.and_then(|c| c.args.iter().find(|a| a.name == key));
+                match spec {
+                    Some(a) if a.takes_value => {
+                        let val = match inline_val {
+                            Some(v) => v,
+                            None => it
+                                .next()
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?,
+                        };
+                        out.values.insert(key, val);
+                    }
+                    Some(_) => out.flags.push(key),
+                    None if cmd.is_some() => return Err(CliError::UnknownOption(key)),
+                    None => {
+                        // No command context (bare CLI): accept generically.
+                        match inline_val {
+                            Some(v) => {
+                                out.values.insert(key, v);
+                            }
+                            None => out.flags.push(key),
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("memfft", "test cli").command(
+            Command::new("serve", "run the service")
+                .arg_default("config", "memfft.toml", "config path")
+                .arg("sizes", "comma sizes")
+                .flag("verbose", "log more"),
+        )
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_kv_and_flags() {
+        let a = cli().parse(&sv(&["serve", "--config", "x.toml", "--verbose"])).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("config"), Some("x.toml"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let a = cli().parse(&sv(&["serve", "--sizes=1,2,3"])).unwrap();
+        assert_eq!(a.get("config"), Some("memfft.toml")); // default kept
+        assert_eq!(a.get_usize_list("sizes", &[]).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = cli().parse(&sv(&["serve", "--sizes", "1024"])).unwrap();
+        assert_eq!(a.get_usize("sizes", 0).unwrap(), 1024);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(cli()
+            .parse(&sv(&["serve", "--sizes", "abc"]))
+            .unwrap()
+            .get_usize("sizes", 0)
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(matches!(
+            cli().parse(&sv(&["nope"])),
+            Err(CliError::UnknownSubcommand(_))
+        ));
+        assert!(matches!(
+            cli().parse(&sv(&["serve", "--bogus", "1"])),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_detected() {
+        assert!(matches!(
+            cli().parse(&sv(&["serve", "--sizes"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli().parse(&sv(&["serve", "extra1", "extra2"])).unwrap();
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+}

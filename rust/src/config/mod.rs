@@ -1,0 +1,379 @@
+//! Configuration: a TOML-subset parser (serde/toml are not in the vendored
+//! crate set) plus the typed service configuration used by the launcher.
+//!
+//! Supported TOML subset — everything the configs in this repo need:
+//! `[section]` and `[section.sub]` headers, `key = value` with string,
+//! integer, float, boolean and flat-array values, `#` comments.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_usize_array(&self) -> Option<Vec<usize>> {
+        match self {
+            Value::Array(xs) => xs.iter().map(|v| v.as_int().map(|i| i as usize)).collect(),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {0}: {1}")]
+    Parse(usize, String),
+    #[error("missing key '{0}'")]
+    Missing(String),
+    #[error("key '{0}' has wrong type (expected {1})")]
+    Type(String, &'static str),
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Parsed document: dotted-path -> value (e.g. `service.max_batch`).
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    values: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let lineno = lineno + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let inner = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| ConfigError::Parse(lineno, "unterminated section header".into()))?;
+                section = inner.trim().to_string();
+                if section.is_empty() {
+                    return Err(ConfigError::Parse(lineno, "empty section name".into()));
+                }
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError::Parse(lineno, format!("expected 'key = value', got '{line}'")))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ConfigError::Parse(lineno, "empty key".into()));
+            }
+            let value = parse_value(val.trim())
+                .ok_or_else(|| ConfigError::Parse(lineno, format!("cannot parse value '{}'", val.trim())))?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.values.insert(path, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, ConfigError> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.values.get(path)
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> Result<String, ConfigError> {
+        match self.get(path) {
+            None => Ok(default.to_string()),
+            Some(v) => v
+                .as_str()
+                .map(|s| s.to_string())
+                .ok_or_else(|| ConfigError::Type(path.into(), "string")),
+        }
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> Result<usize, ConfigError> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(v) => v
+                .as_int()
+                .map(|i| i as usize)
+                .ok_or_else(|| ConfigError::Type(path.into(), "integer")),
+        }
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> Result<f64, ConfigError> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(v) => v.as_float().ok_or_else(|| ConfigError::Type(path.into(), "float")),
+        }
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> Result<bool, ConfigError> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(v) => v.as_bool().ok_or_else(|| ConfigError::Type(path.into(), "bool")),
+        }
+    }
+
+    pub fn usize_list_or(&self, path: &str, default: &[usize]) -> Result<Vec<usize>, ConfigError> {
+        match self.get(path) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .as_usize_array()
+                .ok_or_else(|| ConfigError::Type(path.into(), "array of integers")),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if s.is_empty() {
+        return None;
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        return inner.strip_suffix('"').map(|v| Value::Str(v.to_string()));
+    }
+    if s == "true" {
+        return Some(Value::Bool(true));
+    }
+    if s == "false" {
+        return Some(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']')?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Some(Value::Array(vec![]));
+        }
+        let items: Option<Vec<Value>> = inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return items.map(Value::Array);
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+/// Typed service configuration consumed by the launcher and coordinator.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Directory holding `manifest.txt` + `*.hlo.txt` artifacts.
+    pub artifacts_dir: String,
+    /// Worker threads executing compiled plans.
+    pub workers: usize,
+    /// Max requests folded into one executed batch.
+    pub max_batch: usize,
+    /// Max time a request may wait for its bucket to fill (microseconds).
+    pub max_delay_us: u64,
+    /// Bounded queue depth before requests are rejected (backpressure).
+    pub queue_depth: usize,
+    /// FFT method to serve: "fourstep" | "stockham" | "perlevel" | "xla".
+    pub method: String,
+    /// Sizes the service accepts (must have artifacts).
+    pub sizes: Vec<usize>,
+    /// Seed for any synthetic workload generation.
+    pub seed: u64,
+    /// Pre-compile artifacts for `sizes` at worker startup so the request
+    /// path never pays XLA compile time.
+    pub warmup: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            workers: 2,
+            max_batch: 8,
+            max_delay_us: 200,
+            queue_depth: 1024,
+            method: "fourstep".into(),
+            sizes: vec![16, 64, 256, 1024, 4096, 16384, 65536],
+            seed: 42,
+            warmup: true,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn from_document(doc: &Document) -> Result<Self, ConfigError> {
+        let d = Self::default();
+        Ok(Self {
+            artifacts_dir: doc.str_or("service.artifacts_dir", &d.artifacts_dir)?,
+            workers: doc.usize_or("service.workers", d.workers)?,
+            max_batch: doc.usize_or("service.max_batch", d.max_batch)?,
+            max_delay_us: doc.usize_or("service.max_delay_us", d.max_delay_us as usize)? as u64,
+            queue_depth: doc.usize_or("service.queue_depth", d.queue_depth)?,
+            method: doc.str_or("service.method", &d.method)?,
+            sizes: doc.usize_list_or("service.sizes", &d.sizes)?,
+            seed: doc.usize_or("service.seed", d.seed as usize)? as u64,
+            warmup: doc.bool_or("service.warmup", d.warmup)?,
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, ConfigError> {
+        Self::from_document(&Document::load(path)?)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.workers == 0 {
+            return Err(ConfigError::Type("service.workers".into(), "nonzero integer"));
+        }
+        if self.max_batch == 0 {
+            return Err(ConfigError::Type("service.max_batch".into(), "nonzero integer"));
+        }
+        if self.sizes.is_empty() {
+            return Err(ConfigError::Missing("service.sizes".into()));
+        }
+        for &n in &self.sizes {
+            if !crate::util::is_pow2(n) {
+                return Err(ConfigError::Type("service.sizes".into(), "powers of two"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# memfft service config
+[service]
+artifacts_dir = "artifacts"   # where HLO lives
+workers = 4
+max_batch = 16
+max_delay_us = 500
+queue_depth = 2048
+method = "fourstep"
+sizes = [16, 64, 256, 1024]
+seed = 7
+
+[sim]
+enabled = true
+bandwidth_gbps = 144.0
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("service.workers").unwrap().as_int(), Some(4));
+        assert_eq!(doc.get("service.method").unwrap().as_str(), Some("fourstep"));
+        assert_eq!(doc.get("sim.enabled").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("sim.bandwidth_gbps").unwrap().as_float(), Some(144.0));
+        assert_eq!(
+            doc.get("service.sizes").unwrap().as_usize_array().unwrap(),
+            vec![16, 64, 256, 1024]
+        );
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let doc = Document::parse("# only a comment\n\nx = 1 # trailing\n").unwrap();
+        assert_eq!(doc.get("x").unwrap().as_int(), Some(1));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = Document::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn service_config_roundtrip() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.max_batch, 16);
+        assert_eq!(cfg.sizes, vec![16, 64, 256, 1024]);
+        assert_eq!(cfg.seed, 7);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let cfg = ServiceConfig::from_document(&Document::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.workers, ServiceConfig::default().workers);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad() {
+        let doc = Document::parse("[service]\nworkers = 0\n").unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert!(cfg.validate().is_err());
+        let doc = Document::parse("[service]\nsizes = [1000]\n").unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert!(cfg.validate().is_err(), "non-power-of-two size must fail");
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = Document::parse("ok = 1\nbad line\n").unwrap_err();
+        match err {
+            ConfigError::Parse(line, _) => assert_eq!(line, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn underscored_ints_and_empty_array() {
+        let doc = Document::parse("n = 65_536\nxs = []\n").unwrap();
+        assert_eq!(doc.get("n").unwrap().as_int(), Some(65536));
+        assert_eq!(doc.get("xs").unwrap().as_usize_array().unwrap(), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,295 @@
+//! Size-bucketed dynamic batcher.
+//!
+//! Requests for the same transform size land in the same bucket; a bucket
+//! flushes when it reaches `max_batch` or its oldest request has waited
+//! `max_delay`. This is the vLLM-style continuous-batching idea scaled to
+//! the FFT service: the AOT artifacts exist per (n, batch) variant, so
+//! batching multiplies PJRT throughput without recompilation.
+//!
+//! Pure data structure — no threads — so it is exhaustively property-tested;
+//! the service (`service.rs`) drives it from the batcher thread.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use super::request::{Direction, FftRequest};
+
+/// A flushed batch, ready for a worker.
+pub struct Batch {
+    pub n: usize,
+    pub direction: Direction,
+    pub requests: Vec<FftRequest>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, max_delay: Duration::from_micros(200) }
+    }
+}
+
+/// Bucketed pending requests.
+pub struct Batcher {
+    config: BatcherConfig,
+    buckets: BTreeMap<(usize, Direction), Vec<FftRequest>>,
+    pending: usize,
+}
+
+impl std::fmt::Debug for Batcher {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Batcher")
+            .field("pending", &self.pending)
+            .field("buckets", &self.buckets.len())
+            .finish()
+    }
+}
+
+impl Direction {
+    fn key(self) -> u8 {
+        match self {
+            Direction::Forward => 0,
+            Direction::Inverse => 1,
+        }
+    }
+}
+
+impl PartialOrd for Direction {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Direction {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+impl Batcher {
+    pub fn new(config: BatcherConfig) -> Self {
+        assert!(config.max_batch >= 1);
+        Self { config, buckets: BTreeMap::new(), pending: 0 }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Add a request. Returns a full batch if the bucket hit `max_batch`.
+    pub fn push(&mut self, req: FftRequest) -> Option<Batch> {
+        let key = (req.n, req.direction);
+        let bucket = self.buckets.entry(key).or_default();
+        bucket.push(req);
+        self.pending += 1;
+        if bucket.len() >= self.config.max_batch {
+            let requests = std::mem::take(bucket);
+            self.pending -= requests.len();
+            Some(Batch { n: key.0, direction: key.1, requests })
+        } else {
+            None
+        }
+    }
+
+    /// Flush every bucket whose oldest request has waited >= max_delay.
+    pub fn flush_expired(&mut self, now: Instant) -> Vec<Batch> {
+        let expired: Vec<(usize, Direction)> = self
+            .buckets
+            .iter()
+            .filter(|(_, reqs)| {
+                reqs.first()
+                    .map(|r| now.duration_since(r.submitted_at) >= self.config.max_delay)
+                    .unwrap_or(false)
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        expired
+            .into_iter()
+            .filter_map(|k| {
+                let requests = self.buckets.remove(&k)?;
+                if requests.is_empty() {
+                    return None;
+                }
+                self.pending -= requests.len();
+                Some(Batch { n: k.0, direction: k.1, requests })
+            })
+            .collect()
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        let keys: Vec<(usize, Direction)> = self.buckets.keys().copied().collect();
+        keys.into_iter()
+            .filter_map(|k| {
+                let requests = self.buckets.remove(&k)?;
+                if requests.is_empty() {
+                    return None;
+                }
+                self.pending -= requests.len();
+                Some(Batch { n: k.0, direction: k.1, requests })
+            })
+            .collect()
+    }
+
+    /// Time until the next bucket expires (for the batcher thread's park
+    /// timeout); None when idle.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.buckets
+            .values()
+            .filter_map(|reqs| reqs.first())
+            .map(|r| {
+                let age = now.duration_since(r.submitted_at);
+                self.config.max_delay.saturating_sub(age)
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::FftResult;
+    use std::sync::mpsc;
+
+    fn req(id: u64, n: usize) -> (FftRequest, mpsc::Receiver<FftResult>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            FftRequest {
+                id,
+                n,
+                direction: Direction::Forward,
+                re: vec![0.0; n],
+                im: vec![0.0; n],
+                submitted_at: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    fn cfg(max_batch: usize, delay_us: u64) -> BatcherConfig {
+        BatcherConfig { max_batch, max_delay: Duration::from_micros(delay_us) }
+    }
+
+    #[test]
+    fn fills_bucket_to_max_batch() {
+        let mut b = Batcher::new(cfg(3, 1_000_000));
+        let mut rxs = vec![];
+        for id in 0..2 {
+            let (r, rx) = req(id, 64);
+            rxs.push(rx);
+            assert!(b.push(r).is_none());
+        }
+        let (r, rx) = req(2, 64);
+        rxs.push(rx);
+        let batch = b.push(r).expect("third push fills the bucket");
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.n, 64);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn different_sizes_do_not_mix() {
+        let mut b = Batcher::new(cfg(2, 1_000_000));
+        let (r1, _x1) = req(1, 64);
+        let (r2, _x2) = req(2, 128);
+        assert!(b.push(r1).is_none());
+        assert!(b.push(r2).is_none(), "different n must not complete each other's batch");
+        assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn directions_do_not_mix() {
+        let mut b = Batcher::new(cfg(2, 1_000_000));
+        let (mut r1, _x1) = req(1, 64);
+        r1.direction = Direction::Inverse;
+        let (r2, _x2) = req(2, 64);
+        assert!(b.push(r1).is_none());
+        assert!(b.push(r2).is_none());
+    }
+
+    #[test]
+    fn expiry_flushes_partial_batch() {
+        let mut b = Batcher::new(cfg(100, 0)); // max_delay = 0 → instant expiry
+        let (r, _x) = req(1, 64);
+        b.push(r);
+        let flushed = b.flush_expired(Instant::now());
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].requests.len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn not_expired_stays() {
+        let mut b = Batcher::new(cfg(100, 1_000_000));
+        let (r, _x) = req(1, 64);
+        b.push(r);
+        assert!(b.flush_expired(Instant::now()).is_empty());
+        assert_eq!(b.pending(), 1);
+        assert!(b.next_deadline(Instant::now()).is_some());
+    }
+
+    #[test]
+    fn flush_all_empties() {
+        let mut b = Batcher::new(cfg(100, 1_000_000));
+        let mut keep = vec![];
+        for id in 0..5 {
+            let (r, x) = req(id, 1 << (6 + id % 3));
+            keep.push(x);
+            b.push(r);
+        }
+        let batches = b.flush_all();
+        let total: usize = batches.iter().map(|b| b.requests.len()).sum();
+        assert_eq!(total, 5);
+        assert_eq!(b.pending(), 0);
+        assert!(b.next_deadline(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn property_batcher_preserves_requests_and_caps_batches() {
+        crate::testing::check("batcher-invariants", 50, |g| {
+            let max_batch = g.usize(1, 16);
+            let mut b = Batcher::new(cfg(max_batch, 1_000_000));
+            let count = g.sized_usize(1, 200);
+            let mut seen_ids = std::collections::HashSet::new();
+            let mut emitted = 0usize;
+            let mut _rxs = vec![];
+            for id in 0..count as u64 {
+                let n = 1usize << g.usize(4, 8);
+                let (r, rx) = req(id, n);
+                _rxs.push(rx);
+                if let Some(batch) = b.push(r) {
+                    crate::prop_assert!(
+                        batch.requests.len() == max_batch,
+                        "push-triggered batch must be exactly max_batch"
+                    );
+                    crate::prop_assert!(
+                        batch.requests.iter().all(|r| r.n == batch.n),
+                        "mixed sizes in batch"
+                    );
+                    emitted += batch.requests.len();
+                    for r in &batch.requests {
+                        crate::prop_assert!(seen_ids.insert(r.id), "duplicate id {}", r.id);
+                    }
+                }
+            }
+            for batch in b.flush_all() {
+                crate::prop_assert!(batch.requests.len() <= max_batch);
+                emitted += batch.requests.len();
+                for r in &batch.requests {
+                    crate::prop_assert!(seen_ids.insert(r.id), "duplicate id {}", r.id);
+                }
+            }
+            crate::prop_assert!(
+                emitted == count,
+                "requests lost or duplicated: {emitted} != {count}"
+            );
+            crate::prop_assert!(b.pending() == 0);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: the FFT-as-a-service front end.
+//!
+//! The paper's contribution lives at L1/L2 (the memory-optimized kernel),
+//! so per DESIGN.md the coordinator is the thin-but-real driver: request
+//! types, a size-bucketed dynamic batcher, a worker pool whose threads each
+//! own a PJRT engine with plan-cached executables, bounded-queue
+//! backpressure, and per-stage metrics.
+
+pub mod batcher;
+pub mod request;
+pub mod service;
+pub mod workload;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use request::{Direction, FftRequest, FftResponse, FftResult, ServiceError};
+pub use service::FftService;
+pub use workload::{drive, RunReport, SizeDist, Workload};

@@ -1,0 +1,81 @@
+//! Request/response types for the FFT service.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Transform direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Direction {
+    Forward,
+    Inverse,
+}
+
+impl Direction {
+    pub fn op(&self) -> &'static str {
+        match self {
+            Direction::Forward => "fft",
+            Direction::Inverse => "ifft",
+        }
+    }
+}
+
+/// One FFT request: `n`-point transform of the (re, im) planes.
+#[derive(Debug)]
+pub struct FftRequest {
+    pub id: u64,
+    pub n: usize,
+    pub direction: Direction,
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+    pub submitted_at: Instant,
+    /// One-shot reply channel.
+    pub reply: mpsc::Sender<FftResult>,
+}
+
+/// Service-level errors surfaced to clients.
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+pub enum ServiceError {
+    #[error("queue full — request rejected (backpressure)")]
+    Rejected,
+    #[error("unsupported size {0} (not a power of two or no artifact)")]
+    UnsupportedSize(usize),
+    #[error("input length {got} does not match n={n}")]
+    BadInput { n: usize, got: usize },
+    #[error("execution failed: {0}")]
+    Exec(String),
+    #[error("service shutting down")]
+    Shutdown,
+}
+
+/// Successful response payload.
+#[derive(Debug, Clone)]
+pub struct FftResponse {
+    pub id: u64,
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+    /// Time spent waiting in the batcher.
+    pub queue_time: std::time::Duration,
+    /// PJRT execution time of the batch this request rode in.
+    pub exec_time: std::time::Duration,
+    /// How many requests shared the executed batch.
+    pub batch_size: usize,
+}
+
+pub type FftResult = Result<FftResponse, ServiceError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direction_ops() {
+        assert_eq!(Direction::Forward.op(), "fft");
+        assert_eq!(Direction::Inverse.op(), "ifft");
+    }
+
+    #[test]
+    fn errors_display() {
+        assert!(ServiceError::Rejected.to_string().contains("backpressure"));
+        assert!(ServiceError::UnsupportedSize(12).to_string().contains("12"));
+    }
+}

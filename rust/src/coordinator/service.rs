@@ -1,0 +1,489 @@
+//! The FFT service: leader (batcher) thread + worker pool over PJRT engines.
+//!
+//! Data flow (no Python anywhere on this path):
+//!
+//!   client ── bounded submit queue ──► batcher thread (size buckets)
+//!              │ backpressure: Rejected            │ full / expired batches
+//!              ▼                                    ▼
+//!        FftResult rx  ◄── reply channels ──  worker threads
+//!                                              (each owns a PJRT Engine,
+//!                                               plan-cached executables)
+//!
+//! Method "native" bypasses PJRT and serves from the in-process Rust FFT
+//! library — used for tests without artifacts and as a deployment fallback.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::request::{Direction, FftRequest, FftResponse, FftResult, ServiceError};
+use crate::config::ServiceConfig;
+use crate::fft::{Algorithm, PlanCache};
+use crate::metrics::ServiceMetrics;
+use crate::runtime::Engine;
+use crate::util::is_pow2;
+
+enum BatcherMsg {
+    Request(FftRequest),
+    Shutdown,
+}
+
+/// Handle to a running service. Dropping it shuts the service down.
+pub struct FftService {
+    submit_tx: SyncSender<BatcherMsg>,
+    metrics: Arc<ServiceMetrics>,
+    next_id: AtomicU64,
+    config: ServiceConfig,
+    batcher_handle: Option<JoinHandle<()>>,
+    worker_handles: Vec<JoinHandle<()>>,
+}
+
+impl FftService {
+    /// Start the batcher + worker threads. With method "native" no
+    /// artifacts are needed; otherwise `config.artifacts_dir` must hold a
+    /// manifest (workers fail requests with `Exec` errors if compile
+    /// fails, they do not crash the service).
+    pub fn start(config: ServiceConfig) -> Self {
+        let metrics = Arc::new(ServiceMetrics::new());
+        let (submit_tx, submit_rx) = mpsc::sync_channel::<BatcherMsg>(config.queue_depth);
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        let batcher_cfg = BatcherConfig {
+            max_batch: config.max_batch,
+            max_delay: Duration::from_micros(config.max_delay_us),
+        };
+        let batcher_handle = std::thread::Builder::new()
+            .name("memfft-batcher".into())
+            .spawn(move || batcher_loop(submit_rx, batch_tx, batcher_cfg))
+            .expect("spawn batcher");
+
+        let (ready_tx, ready_rx) = mpsc::channel::<()>();
+        let worker_handles: Vec<JoinHandle<()>> = (0..config.workers)
+            .map(|w| {
+                let rx = batch_rx.clone();
+                let metrics = metrics.clone();
+                let cfg = config.clone();
+                let ready = ready_tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("memfft-worker-{w}"))
+                    .spawn(move || worker_loop(rx, metrics, cfg, ready))
+                    .expect("spawn worker")
+            })
+            .collect();
+        drop(ready_tx);
+        // Wait for every worker to finish engine init + plan-cache warmup so
+        // the first request never pays XLA compile time.
+        for _ in 0..config.workers {
+            let _ = ready_rx.recv();
+        }
+
+        Self {
+            submit_tx,
+            metrics,
+            next_id: AtomicU64::new(1),
+            config,
+            batcher_handle: Some(batcher_handle),
+            worker_handles,
+        }
+    }
+
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.config
+    }
+
+    /// Submit an FFT; returns the reply channel immediately. Backpressure:
+    /// a full submit queue rejects synchronously.
+    pub fn submit(
+        &self,
+        n: usize,
+        direction: Direction,
+        re: Vec<f32>,
+        im: Vec<f32>,
+    ) -> Result<Receiver<FftResult>, ServiceError> {
+        if !is_pow2(n) {
+            return Err(ServiceError::UnsupportedSize(n));
+        }
+        if re.len() != n || im.len() != n {
+            return Err(ServiceError::BadInput { n, got: re.len().min(im.len()) });
+        }
+        let (reply, rx) = mpsc::channel();
+        let req = FftRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            n,
+            direction,
+            re,
+            im,
+            submitted_at: Instant::now(),
+            reply,
+        };
+        self.metrics.requests_in.inc();
+        match self.submit_tx.try_send(BatcherMsg::Request(req)) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.requests_rejected.inc();
+                Err(ServiceError::Rejected)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(ServiceError::Shutdown),
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn fft_blocking(
+        &self,
+        n: usize,
+        direction: Direction,
+        re: Vec<f32>,
+        im: Vec<f32>,
+    ) -> FftResult {
+        let rx = self.submit(n, direction, re, im)?;
+        rx.recv().map_err(|_| ServiceError::Shutdown)?
+    }
+
+    /// Graceful shutdown: flush pending work, join all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        let _ = self.submit_tx.send(BatcherMsg::Shutdown);
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FftService {
+    fn drop(&mut self) {
+        if self.batcher_handle.is_some() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+fn batcher_loop(rx: Receiver<BatcherMsg>, tx: mpsc::Sender<Batch>, cfg: BatcherConfig) {
+    let mut batcher = Batcher::new(cfg);
+    loop {
+        let timeout = batcher.next_deadline(Instant::now()).unwrap_or(cfg.max_delay.max(Duration::from_millis(10)));
+        match rx.recv_timeout(timeout) {
+            Ok(BatcherMsg::Request(req)) => {
+                if let Some(batch) = batcher.push(req) {
+                    if tx.send(batch).is_err() {
+                        return;
+                    }
+                }
+            }
+            Ok(BatcherMsg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                for batch in batcher.flush_all() {
+                    let _ = tx.send(batch);
+                }
+                return;
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+        }
+        for batch in batcher.flush_expired(Instant::now()) {
+            if tx.send(batch).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Batch>>>,
+    metrics: Arc<ServiceMetrics>,
+    cfg: ServiceConfig,
+    ready: mpsc::Sender<()>,
+) {
+    // Each worker owns its engine (PjRtClient is thread-confined) and a
+    // native-plan cache for the "native" method / fallback.
+    let engine: Option<Engine> = if cfg.method == "native" {
+        None
+    } else {
+        match Engine::new(&cfg.artifacts_dir) {
+            Ok(e) => {
+                if cfg.warmup {
+                    // Compile the served sizes up front; the request path
+                    // then only ever hits the plan cache.
+                    if let Err(err) = e.warmup_sizes("fft", &cfg.method, &cfg.sizes) {
+                        log::warn!("worker warmup: {err}");
+                    }
+                }
+                Some(e)
+            }
+            Err(err) => {
+                log::error!("worker: engine init failed ({err}); falling back to native");
+                None
+            }
+        }
+    };
+    let native = PlanCache::new();
+    let _ = ready.send(()); // init + warmup done; service may go live
+
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(b) => b,
+                Err(_) => return, // batcher gone, no more work
+            }
+        };
+        execute_batch(batch, engine.as_ref(), &native, &metrics, &cfg);
+    }
+}
+
+fn execute_batch(
+    batch: Batch,
+    engine: Option<&Engine>,
+    native: &PlanCache,
+    metrics: &ServiceMetrics,
+    cfg: &ServiceConfig,
+) {
+    let n = batch.n;
+    let count = batch.requests.len();
+    let now = Instant::now();
+    metrics.batches_executed.inc();
+    metrics.batch_fill.add(count as u64);
+    for r in &batch.requests {
+        metrics.queue_latency.record(now.duration_since(r.submitted_at));
+    }
+
+    match engine {
+        Some(engine) => execute_batch_pjrt(batch, engine, metrics, cfg),
+        None => execute_batch_native(batch, native, metrics),
+    }
+
+    let _ = n;
+}
+
+fn execute_batch_pjrt(batch: Batch, engine: &Engine, metrics: &ServiceMetrics, cfg: &ServiceConfig) {
+    let n = batch.n;
+    let op = batch.direction.op();
+    if engine.index().find_fft(op, &cfg.method, n, 1).is_err() {
+        fail_batch(batch, ServiceError::UnsupportedSize(n), metrics);
+        return;
+    }
+    // Greedy chunking with per-chunk variant selection: each chunk runs on
+    // the smallest artifact batch that covers it, so padding waste stays
+    // bounded by the variant granularity (≤2x) even for odd tails.
+    let mut rest: &[FftRequest] = &batch.requests;
+    while !rest.is_empty() {
+        let entry = engine
+            .index()
+            .find_fft(op, &cfg.method, n, rest.len())
+            .expect("variant exists for batch>=1")
+            .clone();
+        let take = rest.len().min(entry.batch);
+        let (chunk, tail) = rest.split_at(take);
+        rest = tail;
+        if engine.is_loaded(&entry.name) {
+            metrics.plan_cache_hits.inc();
+        } else {
+            metrics.plan_cache_misses.inc();
+        }
+        let mut re = vec![0f32; entry.batch * n];
+        let mut im = vec![0f32; entry.batch * n];
+        for (i, r) in chunk.iter().enumerate() {
+            re[i * n..(i + 1) * n].copy_from_slice(&r.re);
+            im[i * n..(i + 1) * n].copy_from_slice(&r.im);
+        }
+        match engine.run_fft(&entry, &re, &im) {
+            Ok(out) => {
+                metrics.exec_latency.record(out.exec_time);
+                let done = Instant::now();
+                for (i, r) in chunk.iter().enumerate() {
+                    let resp = FftResponse {
+                        id: r.id,
+                        re: out.re[i * n..(i + 1) * n].to_vec(),
+                        im: out.im[i * n..(i + 1) * n].to_vec(),
+                        queue_time: done.duration_since(r.submitted_at).saturating_sub(out.exec_time),
+                        exec_time: out.exec_time,
+                        batch_size: chunk.len(),
+                    };
+                    metrics.e2e_latency.record(done.duration_since(r.submitted_at));
+                    metrics.requests_done.inc();
+                    let _ = r.reply.send(Ok(resp));
+                }
+            }
+            Err(err) => {
+                let msg = err.to_string();
+                for r in chunk {
+                    metrics.requests_failed.inc();
+                    let _ = r.reply.send(Err(ServiceError::Exec(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+fn execute_batch_native(batch: Batch, native: &PlanCache, metrics: &ServiceMetrics) {
+    let n = batch.n;
+    let plan = native.get(n, Algorithm::Auto);
+    for r in batch.requests {
+        let t = Instant::now();
+        let mut data: Vec<crate::util::C32> = r
+            .re
+            .iter()
+            .zip(&r.im)
+            .map(|(&re, &im)| crate::util::C32::new(re, im))
+            .collect();
+        match r.direction {
+            Direction::Forward => plan.forward(&mut data),
+            Direction::Inverse => plan.inverse(&mut data),
+        }
+        let exec_time = t.elapsed();
+        metrics.exec_latency.record(exec_time);
+        let done = Instant::now();
+        metrics.e2e_latency.record(done.duration_since(r.submitted_at));
+        metrics.requests_done.inc();
+        let resp = FftResponse {
+            id: r.id,
+            re: data.iter().map(|c| c.re).collect(),
+            im: data.iter().map(|c| c.im).collect(),
+            queue_time: done.duration_since(r.submitted_at).saturating_sub(exec_time),
+            exec_time,
+            batch_size: 1,
+        };
+        let _ = r.reply.send(Ok(resp));
+    }
+}
+
+fn fail_batch(batch: Batch, err: ServiceError, metrics: &ServiceMetrics) {
+    for r in batch.requests {
+        metrics.requests_failed.inc();
+        let _ = r.reply.send(Err(err.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native_cfg() -> ServiceConfig {
+        ServiceConfig {
+            method: "native".into(),
+            workers: 2,
+            max_batch: 4,
+            max_delay_us: 100,
+            queue_depth: 64,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn native_service_round_trips() {
+        let svc = FftService::start(native_cfg());
+        let n = 64;
+        // Impulse: FFT must be all-ones.
+        let mut re = vec![0f32; n];
+        re[0] = 1.0;
+        let resp = svc.fft_blocking(n, Direction::Forward, re, vec![0f32; n]).unwrap();
+        for k in 0..n {
+            assert!((resp.re[k] - 1.0).abs() < 1e-5, "re[{k}]={}", resp.re[k]);
+            assert!(resp.im[k].abs() < 1e-5);
+        }
+        assert_eq!(svc.metrics().requests_done.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn inverse_restores_signal() {
+        let svc = FftService::start(native_cfg());
+        let n = 256;
+        let mut rng = crate::util::Xoshiro256::seeded(7);
+        let re: Vec<f32> = rng.real_vec(n);
+        let im: Vec<f32> = rng.real_vec(n);
+        let f = svc.fft_blocking(n, Direction::Forward, re.clone(), im.clone()).unwrap();
+        let b = svc.fft_blocking(n, Direction::Inverse, f.re, f.im).unwrap();
+        for k in 0..n {
+            assert!((b.re[k] - re[k]).abs() < 1e-3);
+            assert!((b.im[k] - im[k]).abs() < 1e-3);
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_sizes_and_inputs() {
+        let svc = FftService::start(native_cfg());
+        assert_eq!(
+            svc.submit(100, Direction::Forward, vec![0.0; 100], vec![0.0; 100]).err(),
+            Some(ServiceError::UnsupportedSize(100))
+        );
+        assert!(matches!(
+            svc.submit(64, Direction::Forward, vec![0.0; 3], vec![0.0; 3]).err(),
+            Some(ServiceError::BadInput { .. })
+        ));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_served() {
+        let svc = Arc::new(FftService::start(native_cfg()));
+        let mut handles = vec![];
+        for t in 0..4 {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::util::Xoshiro256::seeded(t);
+                for _ in 0..25 {
+                    let n = 1usize << rng.range_u64(4, 8);
+                    let re = rng.real_vec(n);
+                    let im = rng.real_vec(n);
+                    let resp = svc.fft_blocking(n, Direction::Forward, re, im).unwrap();
+                    assert_eq!(resp.re.len(), n);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(svc.metrics().requests_done.get(), 100);
+        // Batching must have happened at least sometimes under concurrency,
+        // and never exceeded the configured cap.
+        assert!(svc.metrics().batches_executed.get() <= 100);
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        // One worker + long delay forces queue buildup → batches fill.
+        let cfg = ServiceConfig {
+            method: "native".into(),
+            workers: 1,
+            max_batch: 8,
+            max_delay_us: 5000,
+            queue_depth: 256,
+            ..Default::default()
+        };
+        let svc = FftService::start(cfg);
+        let n = 64;
+        let rxs: Vec<_> = (0..32)
+            .map(|_| svc.submit(n, Direction::Forward, vec![1.0; n], vec![0.0; n]).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let batches = svc.metrics().batches_executed.get();
+        assert!(batches < 32, "expected batching, got {batches} batches for 32 reqs");
+        assert!(svc.metrics().mean_batch_fill() > 1.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let svc = FftService::start(native_cfg());
+        let n = 64;
+        let rx = svc.submit(n, Direction::Forward, vec![1.0; n], vec![0.0; n]).unwrap();
+        svc.shutdown();
+        // The request must have been answered (flushed on shutdown), not lost.
+        assert!(rx.recv().unwrap().is_ok());
+    }
+}

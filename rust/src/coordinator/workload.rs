@@ -1,0 +1,251 @@
+//! Synthetic workload generation for serving experiments: arrival
+//! processes (open-loop Poisson, closed-loop), size distributions
+//! (uniform, Zipf, SAR-band), and a load driver that runs them against an
+//! `FftService` and reports throughput + latency percentiles.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::request::Direction;
+use super::service::FftService;
+use crate::util::prng::Xoshiro256;
+
+/// Transform-size distribution of a workload.
+#[derive(Debug, Clone)]
+pub enum SizeDist {
+    /// Uniform over the listed sizes.
+    Uniform(Vec<usize>),
+    /// Zipf(s) over the listed sizes (first element most popular).
+    Zipf(Vec<usize>, f64),
+    /// The paper's SAR band: 1k–16k, weighted to the middle.
+    SarBand,
+}
+
+impl SizeDist {
+    pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
+        match self {
+            SizeDist::Uniform(sizes) => *rng.choose(sizes),
+            SizeDist::Zipf(sizes, s) => {
+                let weights: Vec<f64> =
+                    (1..=sizes.len()).map(|r| 1.0 / (r as f64).powf(*s)).collect();
+                let total: f64 = weights.iter().sum();
+                let mut u = rng.next_f64() * total;
+                for (i, w) in weights.iter().enumerate() {
+                    if u < *w {
+                        return sizes[i];
+                    }
+                    u -= w;
+                }
+                *sizes.last().unwrap()
+            }
+            SizeDist::SarBand => {
+                // 1k 20%, 4k 50%, 16k 30% — "a few thousands to tens of
+                // thousands" (paper §3).
+                let u = rng.next_f64();
+                if u < 0.2 {
+                    1024
+                } else if u < 0.7 {
+                    4096
+                } else {
+                    16384
+                }
+            }
+        }
+    }
+
+    /// All sizes this distribution can emit (for warmup / config).
+    pub fn support(&self) -> Vec<usize> {
+        match self {
+            SizeDist::Uniform(s) | SizeDist::Zipf(s, _) => s.clone(),
+            SizeDist::SarBand => vec![1024, 4096, 16384],
+        }
+    }
+}
+
+/// Workload description.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub sizes: SizeDist,
+    /// Open-loop arrival rate (requests/s); None = closed loop (each client
+    /// issues the next request when the previous completes).
+    pub rate: Option<f64>,
+    pub clients: usize,
+    pub requests_per_client: usize,
+    pub seed: u64,
+}
+
+impl Workload {
+    pub fn closed_loop(sizes: SizeDist, clients: usize, requests_per_client: usize) -> Self {
+        Self { sizes, rate: None, clients, requests_per_client, seed: 7 }
+    }
+
+    pub fn open_loop(sizes: SizeDist, rate: f64, clients: usize, requests_per_client: usize) -> Self {
+        Self { sizes, rate: Some(rate), clients, requests_per_client, seed: 7 }
+    }
+}
+
+/// Result of a driven run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub issued: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub wall: Duration,
+    /// Client-observed latencies, sorted ascending (for percentiles).
+    pub latencies: Vec<Duration>,
+}
+
+impl RunReport {
+    pub fn throughput(&self) -> f64 {
+        self.completed as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn percentile(&self, pct: f64) -> Duration {
+        if self.latencies.is_empty() {
+            return Duration::ZERO;
+        }
+        let idx = ((pct / 100.0 * self.latencies.len() as f64).ceil() as usize)
+            .clamp(1, self.latencies.len())
+            - 1;
+        self.latencies[idx]
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{}/{} ok ({} rejected) in {:.1} ms — {:.0} req/s, p50 {:?}, p99 {:?}",
+            self.completed,
+            self.issued,
+            self.rejected,
+            self.wall.as_secs_f64() * 1e3,
+            self.throughput(),
+            self.percentile(50.0),
+            self.percentile(99.0),
+        )
+    }
+}
+
+/// Drive the workload against a running service.
+pub fn drive(svc: &Arc<FftService>, wl: &Workload) -> RunReport {
+    let start = Instant::now();
+    let handles: Vec<_> = (0..wl.clients)
+        .map(|c| {
+            let svc = svc.clone();
+            let wl = wl.clone();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::seeded(wl.seed.wrapping_add(c as u64 * 7919));
+                let mut latencies = Vec::with_capacity(wl.requests_per_client);
+                let mut rejected = 0usize;
+                // Poisson thinning for open-loop: exponential gaps at the
+                // per-client rate.
+                let per_client_rate = wl.rate.map(|r| r / wl.clients as f64);
+                let mut next_at = Instant::now();
+                for _ in 0..wl.requests_per_client {
+                    if let Some(rate) = per_client_rate {
+                        let gap = -rng.next_f64().max(1e-12).ln() / rate;
+                        next_at += Duration::from_secs_f64(gap);
+                        if let Some(sleep) = next_at.checked_duration_since(Instant::now()) {
+                            std::thread::sleep(sleep);
+                        }
+                    }
+                    let n = wl.sizes.sample(&mut rng);
+                    let t = Instant::now();
+                    match svc.submit(n, Direction::Forward, rng.real_vec(n), rng.real_vec(n)) {
+                        Ok(rx) => {
+                            if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+                                latencies.push(t.elapsed());
+                            }
+                        }
+                        Err(_) => rejected += 1,
+                    }
+                }
+                (latencies, rejected)
+            })
+        })
+        .collect();
+
+    let mut latencies = Vec::new();
+    let mut rejected = 0;
+    for h in handles {
+        let (l, r) = h.join().unwrap();
+        latencies.extend(l);
+        rejected += r;
+    }
+    latencies.sort_unstable();
+    RunReport {
+        issued: wl.clients * wl.requests_per_client,
+        completed: latencies.len(),
+        rejected,
+        wall: start.elapsed(),
+        latencies,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServiceConfig;
+
+    #[test]
+    fn size_dists_sample_from_support() {
+        let mut rng = Xoshiro256::seeded(1);
+        for dist in [
+            SizeDist::Uniform(vec![64, 256]),
+            SizeDist::Zipf(vec![64, 256, 1024], 1.2),
+            SizeDist::SarBand,
+        ] {
+            let support = dist.support();
+            for _ in 0..200 {
+                assert!(support.contains(&dist.sample(&mut rng)));
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_prefers_head() {
+        let mut rng = Xoshiro256::seeded(2);
+        let dist = SizeDist::Zipf(vec![64, 128, 256, 512], 1.5);
+        let mut head = 0;
+        for _ in 0..1000 {
+            if dist.sample(&mut rng) == 64 {
+                head += 1;
+            }
+        }
+        assert!(head > 400, "head size should dominate, got {head}/1000");
+    }
+
+    #[test]
+    fn closed_loop_drive_completes_all() {
+        let svc = Arc::new(FftService::start(ServiceConfig {
+            method: "native".into(),
+            workers: 2,
+            max_batch: 4,
+            max_delay_us: 50,
+            ..Default::default()
+        }));
+        let wl = Workload::closed_loop(SizeDist::Uniform(vec![64, 256]), 3, 20);
+        let report = drive(&svc, &wl);
+        assert_eq!(report.completed, 60);
+        assert_eq!(report.rejected, 0);
+        assert!(report.throughput() > 0.0);
+        assert!(report.percentile(99.0) >= report.percentile(50.0));
+        assert!(report.summary().contains("60/60"));
+    }
+
+    #[test]
+    fn open_loop_respects_rate_roughly() {
+        let svc = Arc::new(FftService::start(ServiceConfig {
+            method: "native".into(),
+            workers: 2,
+            ..Default::default()
+        }));
+        // 2 clients × 30 reqs at 600 req/s total → should take ≥ ~80 ms.
+        let wl = Workload::open_loop(SizeDist::Uniform(vec![64]), 600.0, 2, 30);
+        let report = drive(&svc, &wl);
+        assert_eq!(report.completed, 60);
+        assert!(
+            report.wall >= Duration::from_millis(60),
+            "open loop finished too fast: {:?}",
+            report.wall
+        );
+    }
+}

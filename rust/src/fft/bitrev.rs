@@ -1,0 +1,106 @@
+//! Bit-reversal permutation for decimation-in-time FFTs.
+
+use crate::util::{is_pow2, log2_exact};
+
+/// Precomputed bit-reversal permutation table for size `n` (power of two).
+#[derive(Debug, Clone)]
+pub struct BitRev {
+    pub n: usize,
+    table: Vec<u32>,
+}
+
+impl BitRev {
+    pub fn new(n: usize) -> Self {
+        assert!(is_pow2(n), "bit-reversal needs a power of two, got {n}");
+        let bits = log2_exact(n);
+        let mut table = vec![0u32; n];
+        // Incremental construction: rev(i) from rev(i >> 1).
+        for i in 1..n {
+            table[i] = (table[i >> 1] >> 1) | (((i & 1) as u32) << (bits - 1).min(31));
+        }
+        if bits == 0 {
+            table = vec![0];
+        }
+        Self { n, table }
+    }
+
+    #[inline(always)]
+    pub fn rev(&self, i: usize) -> usize {
+        self.table[i] as usize
+    }
+
+    /// In-place permutation: swaps each i with rev(i) once.
+    pub fn permute<T>(&self, xs: &mut [T]) {
+        assert_eq!(xs.len(), self.n);
+        for i in 0..self.n {
+            let j = self.rev(i);
+            if i < j {
+                xs.swap(i, j);
+            }
+        }
+    }
+}
+
+/// Direct bit reversal of `i` over `bits` bits (no table) — used by tests
+/// and one-off permutations.
+#[inline]
+pub fn bit_reverse(i: usize, bits: u32) -> usize {
+    if bits == 0 {
+        return 0;
+    }
+    i.reverse_bits() >> (usize::BITS - bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_matches_direct() {
+        for bits in 0..=12u32 {
+            let n = 1usize << bits;
+            let br = BitRev::new(n);
+            for i in 0..n {
+                assert_eq!(br.rev(i), bit_reverse(i, bits), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn known_values_8() {
+        let br = BitRev::new(8);
+        let expect = [0usize, 4, 2, 6, 1, 5, 3, 7];
+        for (i, &e) in expect.iter().enumerate() {
+            assert_eq!(br.rev(i), e);
+        }
+    }
+
+    #[test]
+    fn permute_is_involution() {
+        let br = BitRev::new(64);
+        let orig: Vec<u32> = (0..64).collect();
+        let mut xs = orig.clone();
+        br.permute(&mut xs);
+        assert_ne!(xs, orig);
+        br.permute(&mut xs);
+        assert_eq!(xs, orig, "applying bit-reversal twice must restore order");
+    }
+
+    #[test]
+    fn permute_is_permutation() {
+        let br = BitRev::new(128);
+        let mut xs: Vec<u32> = (0..128).collect();
+        br.permute(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..128).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn trivial_sizes() {
+        let br = BitRev::new(1);
+        assert_eq!(br.rev(0), 0);
+        let br = BitRev::new(2);
+        assert_eq!((br.rev(0), br.rev(1)), (0, 1));
+    }
+}

@@ -1,0 +1,130 @@
+//! Bluestein chirp-z transform: FFT of *arbitrary* length via convolution
+//! with a chirp, computed with power-of-two FFTs.
+//!
+//! The paper (and CUFFT's fast path) only handles powers of two; a real
+//! FFT library must serve any length, so the planner falls back to this
+//! for composite/prime sizes. Chirp phases are computed in f64 with the
+//! `j² mod 2n` reduction to keep the angle exact.
+
+use super::stockham::Stockham;
+use crate::util::complex::{C32, C64};
+use crate::util::next_pow2;
+
+#[derive(Debug)]
+pub struct Bluestein {
+    pub n: usize,
+    /// Convolution length m = next_pow2(2n - 1).
+    pub m: usize,
+    fft: Stockham,
+    /// chirp[j] = e^{-iπ j²/n}, j in [0, n)
+    chirp: Vec<C32>,
+    /// Precomputed FFT of the (conjugate-chirp) convolution kernel.
+    kernel_f: Vec<C32>,
+}
+
+impl Bluestein {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let m = next_pow2(2 * n - 1);
+        let fft = Stockham::new(m);
+
+        // e^{-iπ j²/n}: reduce j² mod 2n first — the phase has period 2n in
+        // j², and the reduction keeps f64 angles small and exact.
+        let chirp: Vec<C32> = (0..n)
+            .map(|j| {
+                let e = (j as u128 * j as u128 % (2 * n) as u128) as f64;
+                C64::cis(-std::f64::consts::PI * e / n as f64).to_c32()
+            })
+            .collect();
+
+        // Kernel b[j] = conj(chirp[|j|]) arranged circularly on length m.
+        let mut kernel = vec![C32::ZERO; m];
+        kernel[0] = chirp[0].conj();
+        for j in 1..n {
+            kernel[j] = chirp[j].conj();
+            kernel[m - j] = chirp[j].conj();
+        }
+        let mut kernel_f = kernel;
+        fft.forward(&mut kernel_f);
+
+        Self { n, m, fft, chirp, kernel_f }
+    }
+
+    pub fn forward(&self, x: &mut [C32]) {
+        assert_eq!(x.len(), self.n);
+        if self.n == 1 {
+            return;
+        }
+        // a[j] = x[j] * chirp[j], zero-padded to m.
+        let mut a = vec![C32::ZERO; self.m];
+        for j in 0..self.n {
+            a[j] = x[j] * self.chirp[j];
+        }
+        // Circular convolution with the kernel via the pow2 FFT.
+        self.fft.forward(&mut a);
+        for (v, k) in a.iter_mut().zip(&self.kernel_f) {
+            *v *= *k;
+        }
+        // Inverse FFT (conjugation trick, 1/m scaling).
+        super::radix2::conj_inverse(&mut a, |buf| self.fft.forward(buf));
+        // X[k] = chirp[k] * conv[k].
+        for k in 0..self.n {
+            x[k] = a[k] * self.chirp[k];
+        }
+    }
+
+    pub fn inverse(&self, x: &mut [C32]) {
+        super::radix2::conj_inverse(x, |buf| self.forward(buf));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dft::dft;
+    use super::*;
+    use crate::util::complex::max_abs_diff;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn matches_dft_odd_sizes() {
+        let mut rng = Xoshiro256::seeded(71);
+        for n in [1usize, 2, 3, 5, 7, 12, 17, 30, 97, 100, 255, 360, 1000] {
+            let x = rng.complex_vec(n);
+            let expect = dft(&x);
+            let mut got = x;
+            Bluestein::new(n).forward(&mut got);
+            let err = max_abs_diff(&got, &expect);
+            assert!(err < 2e-3 * (n as f32).sqrt().max(1.0), "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn matches_pow2_too() {
+        let mut rng = Xoshiro256::seeded(72);
+        let n = 64;
+        let x = rng.complex_vec(n);
+        let expect = dft(&x);
+        let mut got = x;
+        Bluestein::new(n).forward(&mut got);
+        assert!(max_abs_diff(&got, &expect) < 1e-2);
+    }
+
+    #[test]
+    fn roundtrip_prime() {
+        let mut rng = Xoshiro256::seeded(73);
+        let n = 101;
+        let plan = Bluestein::new(n);
+        let x = rng.complex_vec(n);
+        let mut y = x.clone();
+        plan.forward(&mut y);
+        plan.inverse(&mut y);
+        assert!(max_abs_diff(&x, &y) < 1e-3);
+    }
+
+    #[test]
+    fn conv_length_is_pow2_and_sufficient() {
+        let plan = Bluestein::new(1000);
+        assert!(crate::util::is_pow2(plan.m));
+        assert!(plan.m >= 2 * 1000 - 1);
+    }
+}

@@ -1,0 +1,226 @@
+//! FFT-based convolution and correlation: circular, linear (zero-padded),
+//! and streaming overlap-save — the classic FFT application layer that SAR
+//! pulse compression and matched filtering sit on.
+
+use super::plan::{Algorithm, FftPlan};
+use crate::util::complex::C32;
+use crate::util::next_pow2;
+
+/// Circular convolution of equal-length signals via the convolution
+/// theorem: IFFT(FFT(a) · FFT(b)). Lengths need not be powers of two
+/// (Bluestein handles the rest).
+pub fn circular_convolve(a: &[C32], b: &[C32]) -> Vec<C32> {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let plan = FftPlan::new(n, Algorithm::Auto);
+    let mut fa = a.to_vec();
+    let mut fb = b.to_vec();
+    plan.forward(&mut fa);
+    plan.forward(&mut fb);
+    for (x, y) in fa.iter_mut().zip(&fb) {
+        *x *= *y;
+    }
+    plan.inverse(&mut fa);
+    fa
+}
+
+/// Linear convolution (full output, len a + len b − 1) via zero-padding to
+/// the next power of two.
+pub fn linear_convolve(a: &[C32], b: &[C32]) -> Vec<C32> {
+    if a.is_empty() || b.is_empty() {
+        return Vec::new();
+    }
+    let out_len = a.len() + b.len() - 1;
+    let m = next_pow2(out_len);
+    let plan = FftPlan::new(m, Algorithm::Auto);
+    let mut fa = vec![C32::ZERO; m];
+    let mut fb = vec![C32::ZERO; m];
+    fa[..a.len()].copy_from_slice(a);
+    fb[..b.len()].copy_from_slice(b);
+    plan.forward(&mut fa);
+    plan.forward(&mut fb);
+    for (x, y) in fa.iter_mut().zip(&fb) {
+        *x *= *y;
+    }
+    plan.inverse(&mut fa);
+    fa.truncate(out_len);
+    fa
+}
+
+/// Cross-correlation a ⋆ b (lag-domain, full, length a+b−1; zero lag at
+/// index b.len()−1): conv(a, conj(reverse(b))).
+pub fn cross_correlate(a: &[C32], b: &[C32]) -> Vec<C32> {
+    let rb: Vec<C32> = b.iter().rev().map(|v| v.conj()).collect();
+    linear_convolve(a, &rb)
+}
+
+/// Streaming FIR filtering via overlap-save: convolve an arbitrarily long
+/// signal with a fixed kernel using fixed-size FFT blocks. This is the
+/// "streaming FFT" pattern the paper's reference [14] targets.
+pub struct OverlapSave {
+    plan: FftPlan,
+    kernel_freq: Vec<C32>,
+    /// FFT block size m (power of two).
+    m: usize,
+    /// Kernel length k; each block yields m − k + 1 fresh samples.
+    k: usize,
+    /// Carry-over: last k−1 input samples from the previous block.
+    tail: Vec<C32>,
+}
+
+impl OverlapSave {
+    /// `block` must be a power of two at least 2× the kernel length.
+    pub fn new(kernel: &[C32], block: usize) -> Self {
+        let k = kernel.len();
+        assert!(k >= 1);
+        assert!(crate::util::is_pow2(block) && block >= 2 * k.max(1), "block {block} too small for kernel {k}");
+        let plan = FftPlan::new(block, Algorithm::Auto);
+        let mut kernel_freq = vec![C32::ZERO; block];
+        kernel_freq[..k].copy_from_slice(kernel);
+        plan.forward(&mut kernel_freq);
+        Self { plan, kernel_freq, m: block, k, tail: vec![C32::ZERO; k - 1] }
+    }
+
+    /// Samples produced per processed block.
+    pub fn step(&self) -> usize {
+        self.m - self.k + 1
+    }
+
+    /// Feed input; returns filtered output aligned with the input (the
+    /// convolution's steady-state samples). Call with any chunk sizes.
+    pub fn process(&mut self, input: &[C32]) -> Vec<C32> {
+        let step = self.step();
+        let mut buffered: Vec<C32> = Vec::with_capacity(self.tail.len() + input.len());
+        buffered.extend_from_slice(&self.tail);
+        buffered.extend_from_slice(input);
+
+        let mut out = Vec::new();
+        let mut pos = 0;
+        while buffered.len() - pos >= self.m {
+            let mut block = buffered[pos..pos + self.m].to_vec();
+            self.plan.forward(&mut block);
+            for (x, h) in block.iter_mut().zip(&self.kernel_freq) {
+                *x *= *h;
+            }
+            self.plan.inverse(&mut block);
+            // First k−1 samples are circularly corrupted — discard.
+            out.extend_from_slice(&block[self.k - 1..]);
+            pos += step;
+        }
+        // Keep the unconsumed suffix as the next tail.
+        self.tail = buffered[pos..].to_vec();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::complex::max_abs_diff;
+    use crate::util::prng::Xoshiro256;
+
+    /// O(n·k) direct linear convolution oracle.
+    fn direct_conv(a: &[C32], b: &[C32]) -> Vec<C32> {
+        let mut out = vec![C32::ZERO; a.len() + b.len() - 1];
+        for (i, &x) in a.iter().enumerate() {
+            for (j, &y) in b.iter().enumerate() {
+                out[i + j] += x * y;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn linear_matches_direct() {
+        let mut rng = Xoshiro256::seeded(201);
+        for (na, nb) in [(8usize, 8usize), (100, 13), (57, 57), (1, 5)] {
+            let a = rng.complex_vec(na);
+            let b = rng.complex_vec(nb);
+            let got = linear_convolve(&a, &b);
+            let expect = direct_conv(&a, &b);
+            assert!(max_abs_diff(&got, &expect) < 1e-3, "{na}x{nb}");
+        }
+    }
+
+    #[test]
+    fn circular_matches_direct_mod_n() {
+        let mut rng = Xoshiro256::seeded(202);
+        let n = 16;
+        let a = rng.complex_vec(n);
+        let b = rng.complex_vec(n);
+        let lin = direct_conv(&a, &b);
+        let mut expect = vec![C32::ZERO; n];
+        for (i, &v) in lin.iter().enumerate() {
+            expect[i % n] += v;
+        }
+        let got = circular_convolve(&a, &b);
+        assert!(max_abs_diff(&got, &expect) < 1e-3);
+    }
+
+    #[test]
+    fn correlation_peak_at_lag() {
+        // Correlating a signal with a delayed copy peaks at the delay.
+        let mut rng = Xoshiro256::seeded(203);
+        let sig = rng.complex_vec(64);
+        let delay = 10;
+        let mut delayed = vec![C32::ZERO; 64 + delay];
+        delayed[delay..].copy_from_slice(&sig);
+        let corr = cross_correlate(&delayed, &sig);
+        let zero_lag = sig.len() - 1;
+        let mags: Vec<f32> = corr.iter().map(|v| v.abs()).collect();
+        let peak = mags
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(peak - zero_lag, delay);
+    }
+
+    #[test]
+    fn overlap_save_matches_batch_convolution() {
+        let mut rng = Xoshiro256::seeded(204);
+        let kernel = rng.complex_vec(9);
+        let signal = rng.complex_vec(300);
+        let expect = direct_conv(&signal, &kernel);
+
+        let mut os = OverlapSave::new(&kernel, 64);
+        let mut got = Vec::new();
+        // Feed in ragged chunks to exercise the tail buffering.
+        for chunk in signal.chunks(37) {
+            got.extend(os.process(chunk));
+        }
+        // Steady-state samples: got[i] == full_conv[i] for the samples the
+        // streaming filter has fully seen.
+        assert!(got.len() >= 200, "got {}", got.len());
+        let cmp = &expect[..got.len()];
+        assert!(max_abs_diff(&got, cmp) < 1e-3);
+    }
+
+    #[test]
+    fn overlap_save_chunk_size_invariance() {
+        let mut rng = Xoshiro256::seeded(205);
+        let kernel = rng.complex_vec(5);
+        let signal = rng.complex_vec(200);
+        let run = |chunk_size: usize| {
+            let mut os = OverlapSave::new(&kernel, 32);
+            let mut out = Vec::new();
+            for c in signal.chunks(chunk_size) {
+                out.extend(os.process(c));
+            }
+            out
+        };
+        let a = run(200);
+        let b = run(7);
+        let n = a.len().min(b.len());
+        assert!(n > 150);
+        assert!(max_abs_diff(&a[..n], &b[..n]) < 1e-4);
+    }
+
+    #[test]
+    #[should_panic(expected = "too small")]
+    fn overlap_save_rejects_small_block() {
+        let kernel = vec![C32::ONE; 20];
+        OverlapSave::new(&kernel, 32);
+    }
+}

@@ -1,0 +1,112 @@
+//! Naive O(n²) DFT — the correctness oracle every FFT algorithm is tested
+//! against. Accumulates in f64 so the oracle itself contributes negligible
+//! error at the sizes we compare (≤ 16k in tests).
+
+use crate::util::complex::{C32, C64};
+
+/// Forward DFT: X[k] = Σ_n x[n] e^{-2πi nk / N}  (paper eq. 1).
+pub fn dft(x: &[C32]) -> Vec<C32> {
+    let n = x.len();
+    let mut out = vec![C32::ZERO; n];
+    for k in 0..n {
+        let mut acc = C64::ZERO;
+        for (j, &xj) in x.iter().enumerate() {
+            // exponent index mod n keeps the angle in [0, 2π) for accuracy
+            let e = (j * k) % n;
+            acc += xj.to_c64() * C64::twiddle(e, n);
+        }
+        out[k] = acc.to_c32();
+    }
+    out
+}
+
+/// Inverse DFT with 1/N normalization: x[n] = (1/N) Σ_k X[k] e^{+2πi nk/N}
+/// (paper eq. 2).
+pub fn idft(x: &[C32]) -> Vec<C32> {
+    let n = x.len();
+    let scale = 1.0 / n as f64;
+    let mut out = vec![C32::ZERO; n];
+    for k in 0..n {
+        let mut acc = C64::ZERO;
+        for (j, &xj) in x.iter().enumerate() {
+            let e = (j * k) % n;
+            acc += xj.to_c64() * C64::twiddle(e, n).conj();
+        }
+        out[k] = acc.scale(scale).to_c32();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::complex::max_abs_diff;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn dft_of_impulse_is_flat() {
+        let mut x = vec![C32::ZERO; 8];
+        x[0] = C32::ONE;
+        let y = dft(&x);
+        for v in y {
+            assert!((v - C32::ONE).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dft_of_constant_is_impulse() {
+        let x = vec![C32::ONE; 16];
+        let y = dft(&x);
+        assert!((y[0] - C32::new(16.0, 0.0)).abs() < 1e-5);
+        for v in &y[1..] {
+            assert!(v.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dft_of_single_tone() {
+        // x[n] = e^{2πi * 3n/16} → X[k] = 16 δ[k-3]
+        let n = 16;
+        let x: Vec<C32> = (0..n)
+            .map(|j| C64::cis(2.0 * std::f64::consts::PI * 3.0 * j as f64 / n as f64).to_c32())
+            .collect();
+        let y = dft(&x);
+        assert!((y[3] - C32::new(16.0, 0.0)).abs() < 1e-4);
+        for (k, v) in y.iter().enumerate() {
+            if k != 3 {
+                assert!(v.abs() < 1e-4, "leak at {k}: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn idft_roundtrip() {
+        let mut rng = Xoshiro256::seeded(11);
+        let x = rng.complex_vec(33); // non power of two on purpose
+        let y = idft(&dft(&x));
+        assert!(max_abs_diff(&x, &y) < 1e-4);
+    }
+
+    #[test]
+    fn linearity() {
+        let mut rng = Xoshiro256::seeded(12);
+        let a = rng.complex_vec(20);
+        let b = rng.complex_vec(20);
+        let sum: Vec<C32> = a.iter().zip(&b).map(|(x, y)| *x + *y).collect();
+        let lhs = dft(&sum);
+        let fa = dft(&a);
+        let fb = dft(&b);
+        let rhs: Vec<C32> = fa.iter().zip(&fb).map(|(x, y)| *x + *y).collect();
+        assert!(max_abs_diff(&lhs, &rhs) < 1e-4);
+    }
+
+    #[test]
+    fn parseval() {
+        let mut rng = Xoshiro256::seeded(13);
+        let x = rng.complex_vec(64);
+        let y = dft(&x);
+        let ex: f64 = x.iter().map(|v| v.norm_sqr() as f64).sum();
+        let ey: f64 = y.iter().map(|v| v.norm_sqr() as f64).sum::<f64>() / 64.0;
+        assert!((ex - ey).abs() / ex < 1e-5);
+    }
+}

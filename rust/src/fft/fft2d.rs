@@ -1,0 +1,177 @@
+//! 2-D FFT: row transforms, blocked transpose, column transforms.
+//!
+//! Used by the SAR range–Doppler processor (range FFTs along rows, azimuth
+//! FFTs along columns) and as the host-side mirror of `model.fft2d`.
+
+use super::fourstep::transpose;
+use super::plan::{Algorithm, FftPlan};
+use crate::util::complex::C32;
+
+#[derive(Debug)]
+pub struct Fft2d {
+    pub rows: usize,
+    pub cols: usize,
+    row_plan: FftPlan,
+    col_plan: FftPlan,
+}
+
+impl Fft2d {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self::with_algorithm(rows, cols, Algorithm::Auto)
+    }
+
+    pub fn with_algorithm(rows: usize, cols: usize, algo: Algorithm) -> Self {
+        Self {
+            rows,
+            cols,
+            row_plan: FftPlan::new(cols, algo),
+            col_plan: FftPlan::new(rows, algo),
+        }
+    }
+
+    /// Forward 2-D FFT of a row-major rows × cols matrix, in place.
+    pub fn forward(&self, x: &mut [C32]) {
+        assert_eq!(x.len(), self.rows * self.cols);
+        for r in 0..self.rows {
+            self.row_plan.forward(&mut x[r * self.cols..(r + 1) * self.cols]);
+        }
+        let mut t = vec![C32::ZERO; x.len()];
+        transpose(x, &mut t, self.rows, self.cols);
+        for c in 0..self.cols {
+            self.col_plan.forward(&mut t[c * self.rows..(c + 1) * self.rows]);
+        }
+        transpose(&t, x, self.cols, self.rows);
+    }
+
+    /// Inverse 2-D FFT with 1/(rows·cols) scaling, in place.
+    pub fn inverse(&self, x: &mut [C32]) {
+        assert_eq!(x.len(), self.rows * self.cols);
+        for r in 0..self.rows {
+            self.row_plan.inverse(&mut x[r * self.cols..(r + 1) * self.cols]);
+        }
+        let mut t = vec![C32::ZERO; x.len()];
+        transpose(x, &mut t, self.rows, self.cols);
+        for c in 0..self.cols {
+            self.col_plan.inverse(&mut t[c * self.rows..(c + 1) * self.rows]);
+        }
+        transpose(&t, x, self.cols, self.rows);
+    }
+
+    /// FFT along rows only (each row transformed independently) — the SAR
+    /// range-compression primitive.
+    pub fn forward_rows(&self, x: &mut [C32]) {
+        assert_eq!(x.len(), self.rows * self.cols);
+        for r in 0..self.rows {
+            self.row_plan.forward(&mut x[r * self.cols..(r + 1) * self.cols]);
+        }
+    }
+
+    /// Inverse FFT along rows only.
+    pub fn inverse_rows(&self, x: &mut [C32]) {
+        assert_eq!(x.len(), self.rows * self.cols);
+        for r in 0..self.rows {
+            self.row_plan.inverse(&mut x[r * self.cols..(r + 1) * self.cols]);
+        }
+    }
+
+    /// FFT along columns only — the SAR azimuth primitive.
+    pub fn forward_cols(&self, x: &mut [C32]) {
+        assert_eq!(x.len(), self.rows * self.cols);
+        let mut t = vec![C32::ZERO; x.len()];
+        transpose(x, &mut t, self.rows, self.cols);
+        for c in 0..self.cols {
+            self.col_plan.forward(&mut t[c * self.rows..(c + 1) * self.rows]);
+        }
+        transpose(&t, x, self.cols, self.rows);
+    }
+
+    /// Inverse FFT along columns only.
+    pub fn inverse_cols(&self, x: &mut [C32]) {
+        assert_eq!(x.len(), self.rows * self.cols);
+        let mut t = vec![C32::ZERO; x.len()];
+        transpose(x, &mut t, self.rows, self.cols);
+        for c in 0..self.cols {
+            self.col_plan.inverse(&mut t[c * self.rows..(c + 1) * self.rows]);
+        }
+        transpose(&t, x, self.cols, self.rows);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dft::dft;
+    use super::*;
+    use crate::util::complex::max_abs_diff;
+    use crate::util::prng::Xoshiro256;
+
+    /// Naive 2-D DFT oracle built from the 1-D oracle.
+    fn dft2d(x: &[C32], rows: usize, cols: usize) -> Vec<C32> {
+        let mut tmp: Vec<C32> = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            tmp.extend(dft(&x[r * cols..(r + 1) * cols]));
+        }
+        let mut out = vec![C32::ZERO; rows * cols];
+        for c in 0..cols {
+            let col: Vec<C32> = (0..rows).map(|r| tmp[r * cols + c]).collect();
+            let f = dft(&col);
+            for r in 0..rows {
+                out[r * cols + c] = f[r];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_2d_dft() {
+        let mut rng = Xoshiro256::seeded(91);
+        for (r, c) in [(4usize, 8usize), (16, 16), (8, 32)] {
+            let x = rng.complex_vec(r * c);
+            let expect = dft2d(&x, r, c);
+            let mut got = x;
+            Fft2d::new(r, c).forward(&mut got);
+            let err = max_abs_diff(&got, &expect);
+            assert!(err < 1e-2, "{r}x{c} err={err}");
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Xoshiro256::seeded(92);
+        let (r, c) = (32, 64);
+        let plan = Fft2d::new(r, c);
+        let x = rng.complex_vec(r * c);
+        let mut y = x.clone();
+        plan.forward(&mut y);
+        plan.inverse(&mut y);
+        assert!(max_abs_diff(&x, &y) < 1e-3);
+    }
+
+    #[test]
+    fn rows_then_cols_equals_full() {
+        let mut rng = Xoshiro256::seeded(93);
+        let (r, c) = (16, 32);
+        let plan = Fft2d::new(r, c);
+        let x = rng.complex_vec(r * c);
+        let mut full = x.clone();
+        plan.forward(&mut full);
+        let mut staged = x;
+        plan.forward_rows(&mut staged);
+        plan.forward_cols(&mut staged);
+        assert!(max_abs_diff(&full, &staged) < 1e-3);
+    }
+
+    #[test]
+    fn rows_inverse_roundtrip() {
+        let mut rng = Xoshiro256::seeded(94);
+        let (r, c) = (8, 128);
+        let plan = Fft2d::new(r, c);
+        let x = rng.complex_vec(r * c);
+        let mut y = x.clone();
+        plan.forward_rows(&mut y);
+        plan.inverse_rows(&mut y);
+        assert!(max_abs_diff(&x, &y) < 1e-4);
+        plan.forward_cols(&mut y);
+        plan.inverse_cols(&mut y);
+        assert!(max_abs_diff(&x, &y) < 1e-4);
+    }
+}

@@ -1,0 +1,288 @@
+//! Bailey four-step (six-step) FFT — the CPU realization of the **paper's
+//! method** (§2.3.2).
+//!
+//! The paper's shared-memory schedule decomposes an N-point FFT into
+//! N = N1 × N2 so that each sub-FFT fits in fast memory (48 KB shared
+//! memory on the C2070; a VMEM tile in our Pallas kernel; L1/L2 cache tile
+//! here). Each *pass* streams the whole array through slow memory exactly
+//! once:
+//!
+//!   pass 1: N2 column FFTs of size N1 + twiddle multiply  (1 round trip)
+//!   pass 2: N1 row    FFTs of size N2                     (1 round trip)
+//!
+//! — versus `log2 N` round trips for the per-level schedule. When N2 still
+//! exceeds the tile, pass 2 recurses (the paper's "three-dimensional" case,
+//! 3 kernel calls, Fig. 5).
+//!
+//! This module is the exact structural mirror of
+//! `python/compile/kernels/fourstep.py`, and `gpusim::schedules::tiled`
+//! replays its traffic.
+
+use super::stockham::Stockham;
+use crate::util::complex::C32;
+use crate::util::{capped_pow2_split, is_pow2};
+
+/// Default tile: complex elements that fit the fast-memory analog.
+/// 2048 × 8 bytes = 16 KB — comfortably inside L1 on the host CPU and the
+/// same order as the paper's shared-memory budget (48 KB minus double
+/// buffering and padding).
+pub const DEFAULT_TILE: usize = 2048;
+
+#[derive(Debug)]
+enum RowPlan {
+    Leaf(Stockham),
+    Recurse(Box<FourStep>),
+}
+
+/// Four-step FFT plan.
+#[derive(Debug)]
+pub struct FourStep {
+    pub n: usize,
+    pub n1: usize,
+    pub n2: usize,
+    /// Fast-memory tile capacity in complex elements.
+    pub tile: usize,
+    col_plan: Option<Stockham>,
+    row_plan: Option<RowPlan>,
+    /// Small-n fallback: the whole transform fits in one tile.
+    direct: Option<Stockham>,
+}
+
+impl FourStep {
+    pub fn new(n: usize) -> Self {
+        Self::with_tile(n, DEFAULT_TILE)
+    }
+
+    pub fn with_tile(n: usize, tile: usize) -> Self {
+        assert!(is_pow2(n), "four-step FFT needs a power of two, got {n}");
+        assert!(is_pow2(tile) && tile >= 2, "tile must be a power of two >= 2");
+        if n <= tile {
+            // Single pass: one tile holds the whole signal (paper: N <= 1024
+            // needs one kernel call).
+            return Self {
+                n,
+                n1: n,
+                n2: 1,
+                tile,
+                col_plan: None,
+                row_plan: None,
+                direct: Some(Stockham::new(n)),
+            };
+        }
+        let (n1, n2) = capped_pow2_split(n, tile);
+        let row_plan = if n2 <= tile {
+            RowPlan::Leaf(Stockham::new(n2))
+        } else {
+            RowPlan::Recurse(Box::new(FourStep::with_tile(n2, tile)))
+        };
+        Self {
+            n,
+            n1,
+            n2,
+            tile,
+            col_plan: Some(Stockham::new(n1)),
+            row_plan: Some(row_plan),
+            direct: None,
+        }
+    }
+
+    /// Number of slow-memory passes ("kernel calls" in the paper): 1 for
+    /// n <= tile, 2 for n <= tile², 3 beyond, etc.
+    pub fn passes(&self) -> usize {
+        if self.direct.is_some() {
+            1
+        } else {
+            match self.row_plan.as_ref().unwrap() {
+                RowPlan::Leaf(_) => 2,
+                RowPlan::Recurse(inner) => 1 + inner.passes(),
+            }
+        }
+    }
+
+    pub fn forward(&self, x: &mut [C32]) {
+        assert_eq!(x.len(), self.n);
+        if let Some(direct) = &self.direct {
+            direct.forward(x);
+            return;
+        }
+        let (n1, n2) = (self.n1, self.n2);
+        // §Perf iter 1: scratch from the thread-local pool (a full-size
+        // transpose buffer + a sub-FFT ping-pong buffer) instead of two
+        // fresh allocations per call.
+        super::scratch::with_scratch2(self.n, n1.max(n2), |scratch, fft_scratch| {
+            self.forward_inner(x, scratch, fft_scratch);
+        });
+    }
+
+    fn forward_inner(&self, x: &mut [C32], scratch: &mut [C32], fft_scratch: &mut [C32]) {
+        let (n1, n2) = (self.n1, self.n2);
+        let col = self.col_plan.as_ref().unwrap();
+
+        // Step 1: transpose x (n1 × n2) -> scratch (n2 × n1) so the size-n1
+        // column FFTs become contiguous row FFTs.
+        transpose(x, scratch, n1, n2);
+
+        // Step 2+3: per row j2 — FFT_{n1}, then twiddle by W_n^{j2 k1}.
+        // §Perf iter 2: the twiddle walks a geometric series along the row
+        // (ratio W_n^{j2}), so an f64 phase recurrence replaces the
+        // per-element `(j2*k1) % n` + table lookup. f64 keeps the
+        // accumulated error over n1 ≤ tile steps below f32 noise.
+        for j2 in 0..n2 {
+            let row = &mut scratch[j2 * n1..(j2 + 1) * n1];
+            col.forward_with_scratch(row, &mut fft_scratch[..n1]);
+            let step = crate::util::C64::twiddle(j2, self.n);
+            let mut w = crate::util::C64::ONE;
+            for v in row.iter_mut() {
+                *v *= w.to_c32();
+                w *= step;
+            }
+        }
+
+        // Step 4: transpose back (n2 × n1) -> x (n1 × n2).
+        transpose(scratch, x, n2, n1);
+
+        // Step 5: per row k1 — FFT_{n2} (recursing if n2 > tile).
+        match self.row_plan.as_ref().unwrap() {
+            RowPlan::Leaf(plan) => {
+                for k1 in 0..n1 {
+                    plan.forward_with_scratch(
+                        &mut x[k1 * n2..(k1 + 1) * n2],
+                        &mut fft_scratch[..n2],
+                    );
+                }
+            }
+            RowPlan::Recurse(plan) => {
+                for k1 in 0..n1 {
+                    plan.forward(&mut x[k1 * n2..(k1 + 1) * n2]);
+                }
+            }
+        }
+
+        // Step 6: final transpose (n1 × n2) -> (n2 × n1) read-out:
+        // X[k1 + n1 k2] = C[k1][k2].
+        transpose(x, scratch, n1, n2);
+        x.copy_from_slice(scratch);
+    }
+
+    pub fn inverse(&self, x: &mut [C32]) {
+        super::radix2::conj_inverse(x, |buf| self.forward(buf));
+    }
+}
+
+/// Cache-blocked out-of-place transpose: src is rows × cols, dst becomes
+/// cols × rows. Block of 32×32 complex = 16 KB working set.
+pub fn transpose(src: &[C32], dst: &mut [C32], rows: usize, cols: usize) {
+    assert_eq!(src.len(), rows * cols);
+    assert_eq!(dst.len(), rows * cols);
+    const B: usize = 32;
+    let mut r0 = 0;
+    while r0 < rows {
+        let r1 = (r0 + B).min(rows);
+        let mut c0 = 0;
+        while c0 < cols {
+            let c1 = (c0 + B).min(cols);
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    dst[c * rows + r] = src[r * cols + c];
+                }
+            }
+            c0 = c1;
+        }
+        r0 = r1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dft::dft;
+    use super::*;
+    use crate::util::complex::max_abs_diff;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Xoshiro256::seeded(61);
+        let (r, c) = (8, 16);
+        let src = rng.complex_vec(r * c);
+        let mut t = vec![C32::ZERO; r * c];
+        let mut back = vec![C32::ZERO; r * c];
+        transpose(&src, &mut t, r, c);
+        transpose(&t, &mut back, c, r);
+        assert_eq!(src, back);
+        // Spot-check one element.
+        assert_eq!(t[3 * r + 2], src[2 * c + 3]);
+    }
+
+    #[test]
+    fn matches_dft_two_pass() {
+        let mut rng = Xoshiro256::seeded(62);
+        for n in [2048usize, 4096, 8192] {
+            let plan = FourStep::with_tile(n, 1024);
+            assert_eq!(plan.passes(), 2, "n={n}");
+            let x = rng.complex_vec(n);
+            let expect = dft(&x);
+            let mut got = x;
+            plan.forward(&mut got);
+            let err = max_abs_diff(&got, &expect);
+            assert!(err < 1e-3 * (n as f32).sqrt(), "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn matches_stockham_three_pass() {
+        // Force the 3-pass (paper's "three-dimensional") case with a tiny
+        // tile: n = 4096, tile = 16 -> n2 = 256 > tile -> recursion.
+        let mut rng = Xoshiro256::seeded(63);
+        let n = 4096;
+        let plan = FourStep::with_tile(n, 16);
+        assert!(plan.passes() >= 3, "passes={}", plan.passes());
+        let x = rng.complex_vec(n);
+        let mut got = x.clone();
+        let mut expect = x;
+        plan.forward(&mut got);
+        Stockham::new(n).forward(&mut expect);
+        assert!(max_abs_diff(&got, &expect) < 5e-2);
+    }
+
+    #[test]
+    fn single_pass_small_n() {
+        let mut rng = Xoshiro256::seeded(64);
+        let plan = FourStep::with_tile(256, 1024);
+        assert_eq!(plan.passes(), 1);
+        let x = rng.complex_vec(256);
+        let expect = dft(&x);
+        let mut got = x;
+        plan.forward(&mut got);
+        assert!(max_abs_diff(&got, &expect) < 1e-2);
+    }
+
+    #[test]
+    fn pass_count_matches_paper_thresholds() {
+        // Paper: N <= 1024 one call; 1024 < N <= 32768 two calls; beyond,
+        // three. With tile = 1024: 2 passes cover up to 1024² = 2^20.
+        // The paper's smaller observed threshold (32768) reflects their
+        // per-block budget; we assert the *monotone pass structure*.
+        assert_eq!(FourStep::with_tile(1024, 1024).passes(), 1);
+        assert_eq!(FourStep::with_tile(65536, 1024).passes(), 2);
+        assert_eq!(FourStep::with_tile(1 << 21, 1024).passes(), 3);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Xoshiro256::seeded(65);
+        let n = 16384;
+        let plan = FourStep::with_tile(n, 512);
+        let x = rng.complex_vec(n);
+        let mut y = x.clone();
+        plan.forward(&mut y);
+        plan.inverse(&mut y);
+        assert!(max_abs_diff(&x, &y) < 1e-3);
+    }
+
+    #[test]
+    fn default_tile_plan() {
+        let plan = FourStep::new(65536);
+        assert_eq!(plan.n1 * plan.n2, 65536);
+        assert!(plan.n1 <= DEFAULT_TILE);
+    }
+}

@@ -1,0 +1,39 @@
+//! CPU FFT library — the repo's FFTW-role comparator (DESIGN.md §2).
+//!
+//! Algorithms: iterative radix-2 DIT, Stockham autosort, mixed radix-4,
+//! recursive split-radix, Bailey four-step (the paper's method on CPU),
+//! Bluestein for arbitrary sizes, real-input RFFT and 2-D transforms —
+//! unified behind an FFTW-style planner with a process-wide plan cache.
+//!
+//! Conventions (match the paper's eq. 1–2 and `python/compile/kernels/ref.py`):
+//! forward `X[k] = Σ x[n] e^{-2πi nk/N}` (no scaling), inverse carries `1/N`.
+
+pub mod bitrev;
+pub mod bluestein;
+pub mod conv;
+pub mod dft;
+pub mod fft2d;
+pub mod fourstep;
+pub mod plan;
+pub mod radix2;
+pub mod radix4;
+pub mod real;
+pub mod scratch;
+pub mod splitradix;
+pub mod stockham;
+pub mod twiddle;
+pub mod window;
+
+pub use bitrev::BitRev;
+pub use bluestein::Bluestein;
+pub use fft2d::Fft2d;
+pub use fourstep::FourStep;
+pub use plan::{fft, ifft, Algorithm, FftPlan, PlanCache, Planner};
+pub use radix2::Radix2;
+pub use radix4::Radix4;
+pub use real::RealFft;
+pub use splitradix::SplitRadix;
+pub use stockham::Stockham;
+pub use conv::{circular_convolve, cross_correlate, linear_convolve, OverlapSave};
+pub use twiddle::{AngleLut, TwiddleTable};
+pub use window::{apply as apply_window, Window};

@@ -1,0 +1,316 @@
+//! FFT planning — the FFTW-style front door.
+//!
+//! `FftPlan::new(n, Algorithm::Auto)` picks an algorithm by size (the same
+//! role as FFTW's planner, heuristic rather than measured by default;
+//! `Planner::measured` actually times the candidates like FFTW_MEASURE).
+//! `PlanCache` memoizes plans across the process, which is what makes the
+//! Table-1 FFTW comparator honest: plan once, execute many.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::bluestein::Bluestein;
+use super::fourstep::FourStep;
+use super::radix2::Radix2;
+use super::radix4::Radix4;
+use super::splitradix::SplitRadix;
+use super::stockham::Stockham;
+use crate::util::complex::C32;
+use crate::util::is_pow2;
+
+/// Algorithm selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Pick by size heuristic (non-pow2 always → Bluestein).
+    Auto,
+    Radix2,
+    Radix4,
+    SplitRadix,
+    Stockham,
+    /// The paper's hierarchical method (CPU realization).
+    FourStep,
+    Bluestein,
+}
+
+impl Algorithm {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Auto => "auto",
+            Algorithm::Radix2 => "radix2",
+            Algorithm::Radix4 => "radix4",
+            Algorithm::SplitRadix => "splitradix",
+            Algorithm::Stockham => "stockham",
+            Algorithm::FourStep => "fourstep",
+            Algorithm::Bluestein => "bluestein",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "auto" => Algorithm::Auto,
+            "radix2" => Algorithm::Radix2,
+            "radix4" => Algorithm::Radix4,
+            "splitradix" => Algorithm::SplitRadix,
+            "stockham" => Algorithm::Stockham,
+            "fourstep" => Algorithm::FourStep,
+            "bluestein" => Algorithm::Bluestein,
+            _ => return None,
+        })
+    }
+
+    /// All concrete (non-Auto) algorithms applicable to size `n`.
+    pub fn candidates(n: usize) -> Vec<Algorithm> {
+        if is_pow2(n) {
+            vec![
+                Algorithm::Radix2,
+                Algorithm::Radix4,
+                Algorithm::SplitRadix,
+                Algorithm::Stockham,
+                Algorithm::FourStep,
+                Algorithm::Bluestein,
+            ]
+        } else {
+            vec![Algorithm::Bluestein]
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Impl {
+    Radix2(Radix2),
+    Radix4(Radix4),
+    SplitRadix(SplitRadix),
+    Stockham(Stockham),
+    FourStep(FourStep),
+    Bluestein(Bluestein),
+}
+
+/// A ready-to-execute plan for one transform size.
+#[derive(Debug)]
+pub struct FftPlan {
+    pub n: usize,
+    algo: Algorithm,
+    imp: Impl,
+}
+
+impl FftPlan {
+    pub fn new(n: usize, algo: Algorithm) -> Self {
+        let resolved = match algo {
+            Algorithm::Auto => Self::heuristic(n),
+            a => a,
+        };
+        let imp = match resolved {
+            Algorithm::Radix2 => Impl::Radix2(Radix2::new(n)),
+            Algorithm::Radix4 => Impl::Radix4(Radix4::new(n)),
+            Algorithm::SplitRadix => Impl::SplitRadix(SplitRadix::new(n)),
+            Algorithm::Stockham => Impl::Stockham(Stockham::new(n)),
+            Algorithm::FourStep => Impl::FourStep(FourStep::new(n)),
+            Algorithm::Bluestein => Impl::Bluestein(Bluestein::new(n)),
+            Algorithm::Auto => unreachable!(),
+        };
+        Self { n, algo: resolved, imp }
+    }
+
+    /// The size heuristic (mirrors FFTW_ESTIMATE's spirit), retuned from
+    /// measurement on this host (§Perf iter 3, see EXPERIMENTS.md): the
+    /// in-place bit-reversed radix-2 wins up to ~2^18 (cache-resident);
+    /// radix-4's shallower level count takes over for DRAM-resident sizes.
+    /// Bluestein is the only option for non-powers-of-two. The four-step
+    /// stays available explicitly (it is the paper's *GPU* schedule; its
+    /// CPU realization pays three transposes the GPU does not).
+    fn heuristic(n: usize) -> Algorithm {
+        if !is_pow2(n) {
+            Algorithm::Bluestein
+        } else if n <= 1 << 18 {
+            Algorithm::Radix2
+        } else {
+            Algorithm::Radix4
+        }
+    }
+
+    pub fn algorithm(&self) -> Algorithm {
+        self.algo
+    }
+
+    pub fn forward(&self, x: &mut [C32]) {
+        match &self.imp {
+            Impl::Radix2(p) => p.forward(x),
+            Impl::Radix4(p) => p.forward(x),
+            Impl::SplitRadix(p) => p.forward(x),
+            Impl::Stockham(p) => p.forward(x),
+            Impl::FourStep(p) => p.forward(x),
+            Impl::Bluestein(p) => p.forward(x),
+        }
+    }
+
+    pub fn inverse(&self, x: &mut [C32]) {
+        match &self.imp {
+            Impl::Radix2(p) => p.inverse(x),
+            Impl::Radix4(p) => p.inverse(x),
+            Impl::SplitRadix(p) => p.inverse(x),
+            Impl::Stockham(p) => p.inverse(x),
+            Impl::FourStep(p) => p.inverse(x),
+            Impl::Bluestein(p) => p.inverse(x),
+        }
+    }
+}
+
+/// Process-wide plan cache (FFTW "wisdom" analog).
+#[derive(Default)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<(usize, Algorithm), Arc<FftPlan>>>,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, n: usize, algo: Algorithm) -> Arc<FftPlan> {
+        let mut map = self.plans.lock().unwrap();
+        map.entry((n, algo))
+            .or_insert_with(|| Arc::new(FftPlan::new(n, algo)))
+            .clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+static GLOBAL_CACHE: once_cell::sync::Lazy<PlanCache> =
+    once_cell::sync::Lazy::new(PlanCache::new);
+
+/// Forward FFT in place using the globally cached Auto plan.
+pub fn fft(x: &mut [C32]) {
+    GLOBAL_CACHE.get(x.len(), Algorithm::Auto).forward(x);
+}
+
+/// Inverse FFT in place (1/N scaling) using the globally cached Auto plan.
+pub fn ifft(x: &mut [C32]) {
+    GLOBAL_CACHE.get(x.len(), Algorithm::Auto).inverse(x);
+}
+
+/// FFTW_MEASURE-style planner: time each candidate and keep the winner.
+pub struct Planner {
+    pub reps: usize,
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Self { reps: 5 }
+    }
+}
+
+impl Planner {
+    /// Measure candidates on random data; return the fastest plan and the
+    /// per-algorithm timings (ns/iter), slowest-first pruned nothing.
+    pub fn measured(&self, n: usize) -> (Arc<FftPlan>, Vec<(Algorithm, f64)>) {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(0xBEEF);
+        let input = rng.complex_vec(n);
+        let mut timings = Vec::new();
+        for algo in Algorithm::candidates(n) {
+            let plan = FftPlan::new(n, algo);
+            let mut buf = input.clone();
+            // one warm run
+            plan.forward(&mut buf);
+            let t = crate::util::Timer::start();
+            for _ in 0..self.reps {
+                buf.copy_from_slice(&input);
+                plan.forward(&mut buf);
+            }
+            timings.push((algo, t.elapsed().as_nanos() as f64 / self.reps as f64));
+        }
+        timings.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let best = timings[0].0;
+        (Arc::new(FftPlan::new(n, best)), timings)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dft::dft;
+    use super::*;
+    use crate::util::complex::max_abs_diff;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn all_algorithms_agree() {
+        let mut rng = Xoshiro256::seeded(101);
+        let n = 1024;
+        let x = rng.complex_vec(n);
+        let expect = dft(&x);
+        for algo in Algorithm::candidates(n) {
+            let mut got = x.clone();
+            FftPlan::new(n, algo).forward(&mut got);
+            let err = max_abs_diff(&got, &expect);
+            assert!(err < 5e-2, "{algo:?} err={err}");
+        }
+    }
+
+    #[test]
+    fn auto_resolves_by_size() {
+        // §Perf iter 3 heuristic: radix2 ≤ 2^18, radix4 beyond, bluestein
+        // for non-powers-of-two.
+        assert_eq!(FftPlan::new(256, Algorithm::Auto).algorithm(), Algorithm::Radix2);
+        assert_eq!(FftPlan::new(1 << 14, Algorithm::Auto).algorithm(), Algorithm::Radix2);
+        assert_eq!(FftPlan::new(1 << 20, Algorithm::Auto).algorithm(), Algorithm::Radix4);
+        assert_eq!(FftPlan::new(100, Algorithm::Auto).algorithm(), Algorithm::Bluestein);
+    }
+
+    #[test]
+    fn cache_returns_same_plan() {
+        let cache = PlanCache::new();
+        let a = cache.get(512, Algorithm::Auto);
+        let b = cache.get(512, Algorithm::Auto);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+        cache.get(512, Algorithm::Radix2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn global_fft_ifft_roundtrip() {
+        let mut rng = Xoshiro256::seeded(102);
+        let x = rng.complex_vec(2048);
+        let mut y = x.clone();
+        fft(&mut y);
+        ifft(&mut y);
+        assert!(max_abs_diff(&x, &y) < 1e-3);
+    }
+
+    #[test]
+    fn measured_planner_returns_valid_plan() {
+        let (plan, timings) = Planner { reps: 2 }.measured(256);
+        assert_eq!(plan.n, 256);
+        assert_eq!(timings.len(), Algorithm::candidates(256).len());
+        assert!(timings.windows(2).all(|w| w[0].1 <= w[1].1), "sorted by time");
+        // The winning plan must still be correct.
+        let mut rng = Xoshiro256::seeded(103);
+        let x = rng.complex_vec(256);
+        let expect = dft(&x);
+        let mut got = x;
+        plan.forward(&mut got);
+        assert!(max_abs_diff(&got, &expect) < 1e-2);
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for a in [
+            Algorithm::Auto,
+            Algorithm::Radix2,
+            Algorithm::Radix4,
+            Algorithm::SplitRadix,
+            Algorithm::Stockham,
+            Algorithm::FourStep,
+            Algorithm::Bluestein,
+        ] {
+            assert_eq!(Algorithm::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algorithm::parse("nope"), None);
+    }
+}

@@ -1,0 +1,138 @@
+//! Iterative radix-2 decimation-in-time FFT (Cooley–Tukey).
+//!
+//! This is the textbook algorithm the paper parallelizes: `log2 N` levels
+//! of butterflies over a bit-reversed input. The GPU "previous method"
+//! (paper Fig. 2) executes exactly one of these levels per kernel launch —
+//! `gpusim::schedules::per_level` replays this loop's memory traffic.
+
+use super::bitrev::BitRev;
+use super::twiddle::TwiddleTable;
+use crate::util::complex::C32;
+use crate::util::{is_pow2, log2_exact};
+
+/// Precomputed radix-2 plan.
+#[derive(Debug, Clone)]
+pub struct Radix2 {
+    pub n: usize,
+    twiddles: TwiddleTable,
+    bitrev: BitRev,
+}
+
+impl Radix2 {
+    pub fn new(n: usize) -> Self {
+        assert!(is_pow2(n), "radix-2 FFT needs a power of two, got {n}");
+        Self { n, twiddles: TwiddleTable::new(n), bitrev: BitRev::new(n) }
+    }
+
+    /// In-place forward FFT.
+    pub fn forward(&self, x: &mut [C32]) {
+        assert_eq!(x.len(), self.n);
+        if self.n <= 1 {
+            return;
+        }
+        self.bitrev.permute(x);
+        let levels = log2_exact(self.n);
+        // Level s: butterflies of span m = 2^(s+1); twiddle stride n/m.
+        for s in 0..levels {
+            let m = 1usize << (s + 1);
+            let half = m >> 1;
+            let tw_stride = self.n / m;
+            let mut base = 0;
+            while base < self.n {
+                for j in 0..half {
+                    // W_m^j = W_n^{j * n/m} — one table serves all levels
+                    // (paper eq. 5, reducibility).
+                    let w = self.twiddles.w(j * tw_stride);
+                    let a = x[base + j];
+                    let b = x[base + j + half] * w;
+                    x[base + j] = a + b;
+                    x[base + j + half] = a - b;
+                }
+                base += m;
+            }
+        }
+    }
+
+    /// In-place inverse FFT with 1/N scaling (paper eq. 2 convention).
+    pub fn inverse(&self, x: &mut [C32]) {
+        conj_inverse(x, |buf| self.forward(buf));
+    }
+}
+
+/// Generic inverse-via-conjugation: IFFT(x) = conj(FFT(conj(x))) / N.
+/// Shared by every algorithm in this module tree.
+pub fn conj_inverse(x: &mut [C32], forward: impl FnOnce(&mut [C32])) {
+    for v in x.iter_mut() {
+        *v = v.conj();
+    }
+    forward(x);
+    let scale = 1.0 / x.len() as f32;
+    for v in x.iter_mut() {
+        *v = v.conj().scale(scale);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dft::{dft, idft};
+    use super::*;
+    use crate::util::complex::max_abs_diff;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn matches_dft_all_small_sizes() {
+        let mut rng = Xoshiro256::seeded(21);
+        for lg in 0..=10 {
+            let n = 1usize << lg;
+            let x = rng.complex_vec(n);
+            let expect = dft(&x);
+            let mut got = x.clone();
+            Radix2::new(n).forward(&mut got);
+            let err = max_abs_diff(&got, &expect);
+            assert!(err < 1e-3 * (n as f32).sqrt(), "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn inverse_matches_idft() {
+        let mut rng = Xoshiro256::seeded(22);
+        let n = 256;
+        let x = rng.complex_vec(n);
+        let expect = idft(&x);
+        let mut got = x.clone();
+        Radix2::new(n).inverse(&mut got);
+        assert!(max_abs_diff(&got, &expect) < 1e-4);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Xoshiro256::seeded(23);
+        let n = 1024;
+        let plan = Radix2::new(n);
+        let x = rng.complex_vec(n);
+        let mut y = x.clone();
+        plan.forward(&mut y);
+        plan.inverse(&mut y);
+        assert!(max_abs_diff(&x, &y) < 1e-4);
+    }
+
+    #[test]
+    fn size_one_and_two() {
+        let plan = Radix2::new(1);
+        let mut x = vec![C32::new(3.0, 4.0)];
+        plan.forward(&mut x);
+        assert_eq!(x[0], C32::new(3.0, 4.0));
+
+        let plan = Radix2::new(2);
+        let mut x = vec![C32::new(1.0, 0.0), C32::new(2.0, 0.0)];
+        plan.forward(&mut x);
+        assert!((x[0] - C32::new(3.0, 0.0)).abs() < 1e-6);
+        assert!((x[1] - C32::new(-1.0, 0.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        Radix2::new(12);
+    }
+}

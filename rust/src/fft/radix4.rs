@@ -1,0 +1,144 @@
+//! Mixed radix-4/radix-2 Stockham FFT.
+//!
+//! Radix-4 halves the level count (and thus — on the GPU of the paper — the
+//! number of global-memory round trips of the per-level schedule), at the
+//! cost of a wider butterfly. When `log2 n` is odd, a single radix-2 level
+//! runs first. Autosort (Stockham) form, so no digit-reversal pass.
+
+use super::twiddle::TwiddleTable;
+use crate::util::complex::C32;
+use crate::util::{is_pow2, log2_exact};
+
+#[derive(Debug, Clone)]
+pub struct Radix4 {
+    pub n: usize,
+    twiddles: TwiddleTable,
+}
+
+impl Radix4 {
+    pub fn new(n: usize) -> Self {
+        assert!(is_pow2(n), "radix-4 FFT needs a power of two, got {n}");
+        Self { n, twiddles: TwiddleTable::new(n) }
+    }
+
+    pub fn forward_with_scratch(&self, x: &mut [C32], scratch: &mut [C32]) {
+        let n = self.n;
+        assert_eq!(x.len(), n);
+        assert_eq!(scratch.len(), n);
+        if n <= 1 {
+            return;
+        }
+        let levels = log2_exact(n);
+        let mut src_is_x = true;
+        let mut l = 1usize; // completed sub-transform length
+
+        // Odd log2: one radix-2 Stockham level first.
+        if levels % 2 == 1 {
+            let r = n / 2;
+            let (src, dst): (&[C32], &mut [C32]) =
+                if src_is_x { (&*x, &mut *scratch) } else { (&*scratch, &mut *x) };
+            for k in 0..r {
+                let a = src[k];
+                let b = src[r + k]; // W_2^0 = 1 at l=1, j=0
+                dst[k] = a + b;
+                dst[r + k] = a - b;
+            }
+            src_is_x = !src_is_x;
+            l = 2;
+        }
+
+        // Radix-4 Stockham levels.
+        while l < n {
+            let r = n / (4 * l);
+            let (src, dst): (&[C32], &mut [C32]) =
+                if src_is_x { (&*x, &mut *scratch) } else { (&*scratch, &mut *x) };
+            for j in 0..l {
+                // W_{4l}^{mj} = W_n^{m j r}
+                let w1 = self.twiddles.w_any(j * r);
+                let w2 = self.twiddles.w_any(2 * j * r);
+                let w3 = self.twiddles.w_any(3 * j * r);
+                // Autosort layout (see stockham.rs): quarter subsequences of
+                // sub-transform k live at src[(4j + q) r + k]; outputs go to
+                // dst[(j + i l) r + k].
+                for k in 0..r {
+                    let t0 = src[(4 * j) * r + k];
+                    let t1 = src[(4 * j + 1) * r + k] * w1;
+                    let t2 = src[(4 * j + 2) * r + k] * w2;
+                    let t3 = src[(4 * j + 3) * r + k] * w3;
+                    // 4-point DFT of (t0, t1, t2, t3), W_4 = -i.
+                    let e0 = t0 + t2;
+                    let e1 = t0 - t2;
+                    let o0 = t1 + t3;
+                    let o1 = (t1 - t3).mul_neg_i();
+                    dst[j * r + k] = e0 + o0;
+                    dst[(j + l) * r + k] = e1 + o1;
+                    dst[(j + 2 * l) * r + k] = e0 - o0;
+                    dst[(j + 3 * l) * r + k] = e1 - o1;
+                }
+            }
+            src_is_x = !src_is_x;
+            l *= 4;
+        }
+
+        if !src_is_x {
+            x.copy_from_slice(scratch);
+        }
+    }
+
+    pub fn forward(&self, x: &mut [C32]) {
+        super::scratch::with_scratch(self.n, |scratch| {
+            self.forward_with_scratch(x, scratch);
+        });
+    }
+
+    pub fn inverse(&self, x: &mut [C32]) {
+        super::radix2::conj_inverse(x, |buf| self.forward(buf));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dft::dft;
+    use super::*;
+    use crate::util::complex::max_abs_diff;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn matches_dft_even_and_odd_log2() {
+        let mut rng = Xoshiro256::seeded(41);
+        for lg in 0..=12 {
+            let n = 1usize << lg;
+            let x = rng.complex_vec(n);
+            let expect = dft(&x);
+            let mut got = x.clone();
+            Radix4::new(n).forward(&mut got);
+            let err = max_abs_diff(&got, &expect);
+            assert!(err < 1e-3 * (n as f32).sqrt(), "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Xoshiro256::seeded(42);
+        for n in [64usize, 128] {
+            let plan = Radix4::new(n);
+            let x = rng.complex_vec(n);
+            let mut y = x.clone();
+            plan.forward(&mut y);
+            plan.inverse(&mut y);
+            assert!(max_abs_diff(&x, &y) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn agrees_with_stockham_large() {
+        let mut rng = Xoshiro256::seeded(43);
+        let n = 1 << 14;
+        let x = rng.complex_vec(n);
+        let mut a = x.clone();
+        let mut b = x;
+        Radix4::new(n).forward(&mut a);
+        super::super::stockham::Stockham::new(n).forward(&mut b);
+        assert!(max_abs_diff(&a, &b) < 5e-2);
+    }
+}

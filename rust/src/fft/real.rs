@@ -1,0 +1,131 @@
+//! Real-input FFT (RFFT) via the packed half-size complex transform.
+//!
+//! SAR raw echoes arrive as real samples before I/Q demodulation, and the
+//! range-compression matched filter is built from a real chirp — so the
+//! FFTW-role library needs the standard rfft/irfft pair: pack the even/odd
+//! real samples into a complex signal of half the length, transform, then
+//! untangle with the split lemma.
+
+use super::stockham::Stockham;
+use super::twiddle::TwiddleTable;
+use crate::util::complex::C32;
+use crate::util::is_pow2;
+
+#[derive(Debug)]
+pub struct RealFft {
+    pub n: usize,
+    half: Stockham,
+    /// W_n^k for the untangle step.
+    twiddles: TwiddleTable,
+}
+
+impl RealFft {
+    pub fn new(n: usize) -> Self {
+        assert!(is_pow2(n) && n >= 2, "RFFT needs a power of two >= 2, got {n}");
+        Self { n, half: Stockham::new(n / 2), twiddles: TwiddleTable::new(n) }
+    }
+
+    /// Forward RFFT: n reals -> n/2 + 1 complex bins (DC .. Nyquist).
+    pub fn forward(&self, x: &[f32]) -> Vec<C32> {
+        assert_eq!(x.len(), self.n);
+        let h = self.n / 2;
+        // Pack z[k] = x[2k] + i x[2k+1].
+        let mut z: Vec<C32> = (0..h).map(|k| C32::new(x[2 * k], x[2 * k + 1])).collect();
+        self.half.forward(&mut z);
+
+        let mut out = vec![C32::ZERO; h + 1];
+        for k in 0..=h {
+            let zk = if k == h { z[0] } else { z[k] };
+            let zr = z[(h - k) % h].conj();
+            let fe = (zk + zr).scale(0.5);
+            let fo = (zk - zr).scale(0.5).mul_neg_i(); // (zk - zr) / (2i)
+            out[k] = fe + self.twiddles.w_any(k) * fo;
+        }
+        out
+    }
+
+    /// Inverse RFFT: n/2 + 1 complex bins -> n reals (with 1/n scaling).
+    pub fn inverse(&self, spec: &[C32]) -> Vec<f32> {
+        let h = self.n / 2;
+        assert_eq!(spec.len(), h + 1);
+        let mut z = vec![C32::ZERO; h];
+        for k in 0..h {
+            let xk = spec[k];
+            let xr = spec[h - k].conj();
+            let fe = (xk + xr).scale(0.5);
+            // W^k Fo[k] = (X[k] - conj(X[h-k])) / 2 → undo the twiddle.
+            let fo = (xk - xr).scale(0.5) * self.twiddles.w_any(k).conj();
+            z[k] = fe + fo.mul_i(); // Z[k] = Fe[k] + i Fo[k]
+        }
+        self.half.inverse(&mut z);
+        let mut out = vec![0f32; self.n];
+        for k in 0..h {
+            // half.inverse applied 1/h; the full transform needs 1/n = 1/(2h),
+            // but packing already halves the effective length — the factors
+            // work out so z holds the exact time samples.
+            out[2 * k] = z[k].re;
+            out[2 * k + 1] = z[k].im;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dft::dft;
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn matches_complex_dft() {
+        let mut rng = Xoshiro256::seeded(81);
+        for n in [2usize, 4, 8, 64, 256, 1024] {
+            let x = rng.real_vec(n);
+            let xc: Vec<C32> = x.iter().map(|&r| C32::new(r, 0.0)).collect();
+            let expect = dft(&xc);
+            let got = RealFft::new(n).forward(&x);
+            assert_eq!(got.len(), n / 2 + 1);
+            for k in 0..=n / 2 {
+                let err = (got[k] - expect[k]).abs();
+                assert!(err < 1e-3, "n={n} k={k} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn hermitian_symmetry_implied() {
+        // The n/2+1 bins + Hermitian symmetry reconstruct the full spectrum.
+        let mut rng = Xoshiro256::seeded(82);
+        let n = 128;
+        let x = rng.real_vec(n);
+        let xc: Vec<C32> = x.iter().map(|&r| C32::new(r, 0.0)).collect();
+        let full = dft(&xc);
+        let half = RealFft::new(n).forward(&x);
+        for k in n / 2 + 1..n {
+            let err = (half[n - k].conj() - full[k]).abs();
+            assert!(err < 1e-3, "k={k} err={err}");
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Xoshiro256::seeded(83);
+        for n in [4usize, 16, 512] {
+            let plan = RealFft::new(n);
+            let x = rng.real_vec(n);
+            let back = plan.inverse(&plan.forward(&x));
+            for (a, b) in x.iter().zip(&back) {
+                assert!((a - b).abs() < 1e-4, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn dc_and_nyquist_are_real() {
+        let mut rng = Xoshiro256::seeded(84);
+        let n = 64;
+        let spec = RealFft::new(n).forward(&rng.real_vec(n));
+        assert!(spec[0].im.abs() < 1e-4, "DC bin must be real");
+        assert!(spec[n / 2].im.abs() < 1e-4, "Nyquist bin must be real");
+    }
+}

@@ -1,0 +1,99 @@
+//! Thread-local scratch buffers for FFT execution.
+//!
+//! §Perf iteration 1 (see EXPERIMENTS.md): every Stockham/four-step call
+//! allocated its ping-pong scratch, which dominated small/medium sizes
+//! (stockham/4096 at 95 µs vs radix2's 60 µs with identical flops). Plans
+//! are `Sync` and shared across worker threads, so the scratch lives in a
+//! per-thread size-keyed pool instead of the plan.
+
+use crate::util::complex::C32;
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+thread_local! {
+    static POOL: RefCell<HashMap<usize, Vec<C32>>> = RefCell::new(HashMap::new());
+}
+
+/// Run `f` with a zeroed-capacity scratch buffer of length `n`, reusing a
+/// per-thread allocation. Reentrant uses of the SAME size take the buffer
+/// out of the pool for the duration (the inner call would allocate fresh),
+/// so nested transforms of different sizes (four-step) are safe.
+pub fn with_scratch<R>(n: usize, f: impl FnOnce(&mut [C32]) -> R) -> R {
+    let mut buf = POOL.with(|p| p.borrow_mut().remove(&n)).unwrap_or_default();
+    if buf.len() != n {
+        buf = vec![C32::ZERO; n];
+    }
+    let r = f(&mut buf);
+    POOL.with(|p| p.borrow_mut().insert(n, buf));
+    r
+}
+
+/// Two distinct scratch buffers of the same length (four-step needs a
+/// full-size transpose buffer plus a row buffer).
+pub fn with_scratch2<R>(a: usize, b: usize, f: impl FnOnce(&mut [C32], &mut [C32]) -> R) -> R {
+    with_scratch(a, |sa| {
+        // Key the second buffer differently when sizes collide by taking a
+        // fresh allocation path (removal above makes the pool entry absent).
+        let mut sb = if a == b {
+            vec![C32::ZERO; b]
+        } else {
+            POOL.with(|p| p.borrow_mut().remove(&b)).unwrap_or_default()
+        };
+        if sb.len() != b {
+            sb = vec![C32::ZERO; b];
+        }
+        let r = f(sa, &mut sb);
+        if a != b {
+            POOL.with(|p| p.borrow_mut().insert(b, sb));
+        }
+        r
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuses_allocation() {
+        let ptr1 = with_scratch(256, |b| b.as_ptr() as usize);
+        let ptr2 = with_scratch(256, |b| b.as_ptr() as usize);
+        assert_eq!(ptr1, ptr2, "same-size scratch must be reused on one thread");
+    }
+
+    #[test]
+    fn nested_same_size_is_safe() {
+        with_scratch(64, |outer| {
+            outer[0] = C32::new(7.0, 0.0);
+            with_scratch(64, |inner| {
+                inner[0] = C32::new(9.0, 0.0);
+            });
+            assert_eq!(outer[0], C32::new(7.0, 0.0), "inner call must not alias outer");
+        });
+    }
+
+    #[test]
+    fn scratch2_distinct_buffers() {
+        with_scratch2(128, 128, |a, b| {
+            a[0] = C32::new(1.0, 0.0);
+            b[0] = C32::new(2.0, 0.0);
+            assert_ne!(a[0], b[0]);
+            assert_ne!(a.as_ptr(), b.as_ptr());
+        });
+        with_scratch2(128, 64, |a, b| {
+            assert_eq!(a.len(), 128);
+            assert_eq!(b.len(), 64);
+        });
+    }
+
+    #[test]
+    fn threads_get_own_pools() {
+        let main_ptr = with_scratch(512, |b| b.as_ptr() as usize);
+        let other_ptr = std::thread::spawn(|| with_scratch(512, |b| b.as_ptr() as usize))
+            .join()
+            .unwrap();
+        // Not strictly guaranteed by the allocator, but with both alive the
+        // addresses must differ.
+        let _ = (main_ptr, other_ptr);
+    }
+}

@@ -1,0 +1,118 @@
+//! Recursive conjugate-pair split-radix FFT.
+//!
+//! Split-radix has the lowest known flop count among power-of-two FFTs built
+//! from classical butterflies — it is what FFTW's codelets effectively use
+//! at small sizes, so it earns its place in the FFTW-role planner. This is
+//! a straightforward recursive implementation (allocation per level), tuned
+//! for clarity over speed; the planner prefers it only in the small-n
+//! regime where it wins anyway.
+
+use super::twiddle::TwiddleTable;
+use crate::util::complex::C32;
+use crate::util::is_pow2;
+
+#[derive(Debug, Clone)]
+pub struct SplitRadix {
+    pub n: usize,
+    twiddles: TwiddleTable,
+}
+
+impl SplitRadix {
+    pub fn new(n: usize) -> Self {
+        assert!(is_pow2(n), "split-radix FFT needs a power of two, got {n}");
+        Self { n, twiddles: TwiddleTable::new(n) }
+    }
+
+    pub fn forward(&self, x: &mut [C32]) {
+        assert_eq!(x.len(), self.n);
+        let out = self.rec(x, 0, 1, self.n);
+        x.copy_from_slice(&out);
+    }
+
+    pub fn inverse(&self, x: &mut [C32]) {
+        super::radix2::conj_inverse(x, |buf| self.forward(buf));
+    }
+
+    /// FFT of the length-`m` subsequence x[offset], x[offset+stride], ...
+    fn rec(&self, x: &[C32], offset: usize, stride: usize, m: usize) -> Vec<C32> {
+        match m {
+            1 => vec![x[offset]],
+            2 => {
+                let a = x[offset];
+                let b = x[offset + stride];
+                vec![a + b, a - b]
+            }
+            _ => {
+                let q = m / 4;
+                // U = FFT of even samples (length m/2)
+                let u = self.rec(x, offset, stride * 2, m / 2);
+                // Z  = FFT of x[1 mod 4] (length m/4)
+                let z = self.rec(x, offset + stride, stride * 4, q);
+                // Z' = FFT of x[3 mod 4] (length m/4)
+                let zp = self.rec(x, offset + 3 * stride, stride * 4, q);
+
+                let mut out = vec![C32::ZERO; m];
+                let root_stride = self.n / m; // W_m^k = W_n^{k * n/m}
+                for k in 0..q {
+                    let w1 = self.twiddles.w_any(k * root_stride);
+                    let w3 = self.twiddles.w_any(3 * k * root_stride);
+                    let zk = z[k] * w1;
+                    let zpk = zp[k] * w3;
+                    let p = zk + zpk;
+                    let t = (zk - zpk).mul_neg_i(); // -i (zk - z'k)
+                    out[k] = u[k] + p;
+                    out[k + m / 2] = u[k] - p;
+                    out[k + q] = u[k + q] + t;
+                    out[k + 3 * q] = u[k + q] - t;
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dft::dft;
+    use super::*;
+    use crate::util::complex::max_abs_diff;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn matches_dft() {
+        let mut rng = Xoshiro256::seeded(51);
+        for lg in 0..=11 {
+            let n = 1usize << lg;
+            let x = rng.complex_vec(n);
+            let expect = dft(&x);
+            let mut got = x.clone();
+            SplitRadix::new(n).forward(&mut got);
+            let err = max_abs_diff(&got, &expect);
+            assert!(err < 1e-3 * (n as f32).sqrt(), "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Xoshiro256::seeded(52);
+        let n = 256;
+        let plan = SplitRadix::new(n);
+        let x = rng.complex_vec(n);
+        let mut y = x.clone();
+        plan.forward(&mut y);
+        plan.inverse(&mut y);
+        assert!(max_abs_diff(&x, &y) < 1e-4);
+    }
+
+    #[test]
+    fn impulse_and_tone() {
+        let n = 64;
+        let plan = SplitRadix::new(n);
+        let mut x = vec![C32::ZERO; n];
+        x[0] = C32::ONE;
+        plan.forward(&mut x);
+        for v in &x {
+            assert!(((*v) - C32::ONE).abs() < 1e-5);
+        }
+    }
+}

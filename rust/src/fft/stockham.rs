@@ -1,0 +1,175 @@
+//! Stockham autosort radix-2 FFT.
+//!
+//! The Stockham formulation reorders as it goes (ping-pong between two
+//! buffers), so it needs no bit-reversal scatter — every level reads and
+//! writes *contiguously*. That makes it:
+//! - the natural CPU cache-friendly sub-FFT for the four-step method, and
+//! - the exact structure the Pallas VMEM kernel uses (contiguous lane
+//!   access = the coalescing the paper engineers in §2.3.3).
+//!
+//! This mirrors `python/compile/kernels/stockham.py`; the two are tested
+//! against the same oracle.
+
+use super::twiddle::TwiddleTable;
+use crate::util::complex::C32;
+use crate::util::{is_pow2, log2_exact};
+
+#[derive(Debug, Clone)]
+pub struct Stockham {
+    pub n: usize,
+    twiddles: TwiddleTable,
+}
+
+impl Stockham {
+    pub fn new(n: usize) -> Self {
+        assert!(is_pow2(n), "Stockham FFT needs a power of two, got {n}");
+        Self { n, twiddles: TwiddleTable::new(n) }
+    }
+
+    /// Forward FFT using caller-provided scratch (same length as x).
+    /// Result always lands back in `x`.
+    pub fn forward_with_scratch(&self, x: &mut [C32], scratch: &mut [C32]) {
+        let n = self.n;
+        assert_eq!(x.len(), n);
+        assert_eq!(scratch.len(), n);
+        if n <= 1 {
+            return;
+        }
+        let levels = log2_exact(n);
+        // Stockham DIT with the autosort layout invariant: after `s` levels
+        // the buffer holds `c = n / 2^s` sub-transforms of length `l = 2^s`,
+        // with frequency j of sub-transform m at index `j*c + m` (the
+        // sub-transform id is the FAST dimension — that is what makes every
+        // level's reads and writes contiguous in k).
+        //
+        // Level s merges sub-transform pairs (m, m + c/2): with r = c/2,
+        //   a = src[2jr + k],  b = src[2jr + r + k] * W_{2l}^j
+        //   dst[jr + k] = a + b,  dst[(j+l)r + k] = a - b.
+        let mut src_is_x = true;
+        for s in 0..levels {
+            let l = 1usize << s;
+            let r = n >> (s + 1);
+            let (src, dst): (&[C32], &mut [C32]) = if src_is_x {
+                (&*x, &mut *scratch)
+            } else {
+                (&*scratch, &mut *x)
+            };
+            for j in 0..l {
+                // twiddle W_{2l}^j = W_n^{j * n/(2l)} = W_n^{j * r}
+                let w = self.twiddles.w(j * r);
+                let in_base = 2 * j * r;
+                let out_a = j * r;
+                let out_b = (j + l) * r;
+                for k in 0..r {
+                    let a = src[in_base + k];
+                    let b = src[in_base + r + k] * w;
+                    dst[out_a + k] = a + b;
+                    dst[out_b + k] = a - b;
+                }
+            }
+            src_is_x = !src_is_x;
+        }
+        if !src_is_x {
+            // Result currently in scratch — copy back.
+            x.copy_from_slice(scratch);
+        }
+    }
+
+    /// Forward FFT using the thread-local scratch pool (§Perf iter 1:
+    /// per-call allocation cost ~40% at mid sizes).
+    pub fn forward(&self, x: &mut [C32]) {
+        super::scratch::with_scratch(self.n, |scratch| {
+            self.forward_with_scratch(x, scratch);
+        });
+    }
+
+    /// Inverse FFT with 1/N scaling.
+    pub fn inverse(&self, x: &mut [C32]) {
+        super::radix2::conj_inverse(x, |buf| self.forward(buf));
+    }
+
+    /// Batched forward over `batch` contiguous rows of length n, reusing one
+    /// scratch allocation — the hot path the coordinator's batcher feeds.
+    pub fn forward_batch(&self, data: &mut [C32]) {
+        assert_eq!(data.len() % self.n, 0);
+        super::scratch::with_scratch(self.n, |scratch| {
+            for row in data.chunks_exact_mut(self.n) {
+                self.forward_with_scratch(row, scratch);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dft::dft;
+    use super::*;
+    use crate::util::complex::max_abs_diff;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn matches_dft() {
+        let mut rng = Xoshiro256::seeded(31);
+        for lg in 0..=11 {
+            let n = 1usize << lg;
+            let x = rng.complex_vec(n);
+            let expect = dft(&x);
+            let mut got = x.clone();
+            Stockham::new(n).forward(&mut got);
+            let err = max_abs_diff(&got, &expect);
+            assert!(err < 1e-3 * (n as f32).sqrt(), "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn agrees_with_radix2() {
+        let mut rng = Xoshiro256::seeded(32);
+        let n = 4096;
+        let x = rng.complex_vec(n);
+        let mut a = x.clone();
+        let mut b = x;
+        Stockham::new(n).forward(&mut a);
+        super::super::radix2::Radix2::new(n).forward(&mut b);
+        assert!(max_abs_diff(&a, &b) < 2e-2, "err={}", max_abs_diff(&a, &b));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Xoshiro256::seeded(33);
+        let n = 512;
+        let plan = Stockham::new(n);
+        let x = rng.complex_vec(n);
+        let mut y = x.clone();
+        plan.forward(&mut y);
+        plan.inverse(&mut y);
+        assert!(max_abs_diff(&x, &y) < 1e-4);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Xoshiro256::seeded(34);
+        let n = 64;
+        let batch = 5;
+        let plan = Stockham::new(n);
+        let data = rng.complex_vec(n * batch);
+        let mut batched = data.clone();
+        plan.forward_batch(&mut batched);
+        for b in 0..batch {
+            let mut single = data[b * n..(b + 1) * n].to_vec();
+            plan.forward(&mut single);
+            assert!(max_abs_diff(&batched[b * n..(b + 1) * n], &single) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn odd_and_even_level_counts_land_in_x() {
+        // n=4 (2 levels, even) and n=8 (3 levels, odd) both must return the
+        // result in x regardless of which buffer the ping-pong ended in.
+        for n in [4usize, 8] {
+            let mut x: Vec<C32> = (0..n).map(|i| C32::new(i as f32, 0.0)).collect();
+            let expect = dft(&x);
+            Stockham::new(n).forward(&mut x);
+            assert!(max_abs_diff(&x, &expect) < 1e-5, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Twiddle-factor tables.
+//!
+//! Two flavours:
+//! - [`TwiddleTable`]: exact per-size table `W_n^k = e^{-2πik/n}`, computed
+//!   in f64 and stored as f32 — what the Rust FFT algorithms consume.
+//! - [`AngleLut`]: the *paper's* texture-memory scheme (§2.3.1): sin/cos
+//!   sampled at a fixed angular resolution once, then *looked up* by angle.
+//!   Kept as a faithful (and ablatable) model of the texture-memory LUT,
+//!   including its quantization error.
+
+use crate::util::complex::{C32, C64};
+use crate::util::is_pow2;
+
+/// Exact forward twiddles for a transform of size `n`: entries `k = 0 .. n/2`
+/// (radix-2 butterflies never need more; larger k obtained by symmetry).
+#[derive(Debug, Clone)]
+pub struct TwiddleTable {
+    pub n: usize,
+    /// w[k] = e^{-2πik/n}, k in [0, n/2).
+    w: Vec<C32>,
+}
+
+impl TwiddleTable {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let half = (n / 2).max(1);
+        let w = (0..half).map(|k| C64::twiddle(k, n).to_c32()).collect();
+        Self { n, w }
+    }
+
+    /// Forward twiddle W_n^k for k < n/2 (the butterfly range).
+    #[inline(always)]
+    pub fn w(&self, k: usize) -> C32 {
+        self.w[k]
+    }
+
+    /// Forward twiddle for any k (uses W_n^{k+n/2} = -W_n^k).
+    #[inline]
+    pub fn w_any(&self, k: usize) -> C32 {
+        let k = k % self.n;
+        if k < self.w.len() {
+            self.w[k]
+        } else {
+            -self.w[k - self.w.len()]
+        }
+    }
+
+    /// Twiddle for a *sub*-transform of size `m` dividing `n`:
+    /// W_m^k = W_n^{k * n/m} (paper eq. 5, reducibility).
+    #[inline]
+    pub fn w_sub(&self, k: usize, m: usize) -> C32 {
+        debug_assert!(self.n % m == 0);
+        self.w_any(k * (self.n / m))
+    }
+
+    pub fn len(&self) -> usize {
+        self.w.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.w.is_empty()
+    }
+
+    /// Bytes of storage — used by gpusim to size the texture-memory analog.
+    pub fn bytes(&self) -> usize {
+        self.w.len() * std::mem::size_of::<C32>()
+    }
+}
+
+/// The paper's angle-segmented sin/cos lookup table (texture memory analog).
+///
+/// "we firstly calculate the value of sine and cosine according the
+/// segmentation by certain angle ... we can query from the texture memory."
+///
+/// `resolution` samples cover [0, 2π). Lookup maps an exact twiddle angle to
+/// the nearest sample, so resolution controls the accuracy/storage trade-off
+/// the ablation A1 sweeps.
+#[derive(Debug, Clone)]
+pub struct AngleLut {
+    resolution: usize,
+    /// table[i] = e^{-2πi * i / resolution}
+    table: Vec<C32>,
+}
+
+impl AngleLut {
+    pub fn new(resolution: usize) -> Self {
+        assert!(resolution >= 4);
+        let table = (0..resolution).map(|i| C64::twiddle(i, resolution).to_c32()).collect();
+        Self { resolution, table }
+    }
+
+    /// Nearest-sample lookup of W_n^k.
+    #[inline]
+    pub fn w(&self, k: usize, n: usize) -> C32 {
+        // Exact when n divides resolution (the common power-of-two case).
+        let idx = ((k as u128 * self.resolution as u128 + (n / 2) as u128) / n as u128) as usize
+            % self.resolution;
+        self.table[idx]
+    }
+
+    /// Max angular quantization error in radians.
+    pub fn max_angle_error(&self) -> f64 {
+        std::f64::consts::PI / self.resolution as f64
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.table.len() * std::mem::size_of::<C32>()
+    }
+
+    pub fn resolution(&self) -> usize {
+        self.resolution
+    }
+}
+
+/// Per-level twiddle layout for the tiled (paper) schedule: level `s` of a
+/// radix-2 DIT transform needs `2^s` distinct twiddles; this returns them
+/// contiguously, which is what the Pallas kernel receives as its LUT operand
+/// (mirrored here so gpusim and the CPU four-step agree on traffic counts).
+pub fn level_twiddles(n: usize, level: u32) -> Vec<C32> {
+    assert!(is_pow2(n));
+    let m = 1usize << (level + 1); // butterfly span at this level
+    let half = m / 2;
+    (0..half).map(|j| C64::twiddle(j, m).to_c32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_matches_direct() {
+        let t = TwiddleTable::new(64);
+        for k in 0..32 {
+            let direct = C64::twiddle(k, 64).to_c32();
+            assert!((t.w(k) - direct).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn w_any_symmetry() {
+        let t = TwiddleTable::new(16);
+        for k in 0..16 {
+            let direct = C64::twiddle(k, 16).to_c32();
+            assert!((t.w_any(k) - direct).abs() < 1e-6, "k={k}");
+        }
+        // Periodicity beyond n.
+        assert!((t.w_any(17) - t.w_any(1)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn w_sub_reducibility() {
+        // W_m^k == W_n^{k n/m} (paper eq. 5)
+        let t = TwiddleTable::new(256);
+        for m in [2usize, 4, 16, 64] {
+            for k in 0..m {
+                let direct = C64::twiddle(k, m).to_c32();
+                assert!((t.w_sub(k, m) - direct).abs() < 1e-6, "m={m} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn angle_lut_exact_when_divisible() {
+        let lut = AngleLut::new(1024);
+        for k in 0..64 {
+            let direct = C64::twiddle(k, 64).to_c32();
+            assert!((lut.w(k, 64) - direct).abs() < 1e-6, "k={k}");
+        }
+    }
+
+    #[test]
+    fn angle_lut_error_bounded_by_resolution() {
+        // n = 3 does not divide the resolution → quantization error appears,
+        // bounded by the angular step.
+        let lut = AngleLut::new(4096);
+        for k in 0..3 {
+            let direct = C64::twiddle(k, 3).to_c32();
+            let approx = lut.w(k, 3);
+            let err = (approx - direct).abs() as f64;
+            assert!(err <= lut.max_angle_error() + 1e-6, "err {err}");
+        }
+    }
+
+    #[test]
+    fn level_twiddles_count() {
+        for (level, expect) in [(0u32, 1usize), (1, 2), (2, 4), (3, 8)] {
+            assert_eq!(level_twiddles(1024, level).len(), expect);
+        }
+        // Level 0 twiddle is always 1.
+        let w = level_twiddles(64, 0);
+        assert!((w[0] - C32::ONE).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,193 @@
+//! Memory-access pattern analyzers: global-memory coalescing and
+//! shared-memory bank conflicts — the two effects the paper's §2.3.3 thread
+//! allocation is engineered around. Exact combinatorial models (count the
+//! transactions a Fermi memory controller would issue), unit-tested against
+//! hand-counted cases.
+
+use std::collections::{HashMap, HashSet};
+
+/// Result of coalescing analysis for one warp access.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoalesceReport {
+    /// Number of memory transactions (cache-line segments touched).
+    pub transactions: u32,
+    /// Minimum possible transactions for this footprint.
+    pub ideal: u32,
+    /// Efficiency = useful bytes / fetched bytes.
+    pub efficiency: f64,
+}
+
+/// Analyze one warp's global access: `addrs` are per-thread BYTE addresses,
+/// `elem_bytes` the access width. Fermi rule: the warp's accesses are
+/// served by `segment_bytes`-sized aligned segments; each distinct segment
+/// is one transaction.
+pub fn coalesce(addrs: &[u64], elem_bytes: u32, segment_bytes: u32) -> CoalesceReport {
+    assert!(!addrs.is_empty());
+    let seg = segment_bytes as u64;
+    let mut segments: HashSet<u64> = HashSet::new();
+    for &a in addrs {
+        let first = a / seg;
+        let last = (a + elem_bytes as u64 - 1) / seg;
+        for s in first..=last {
+            segments.insert(s);
+        }
+    }
+    let useful = addrs.len() as u64 * elem_bytes as u64;
+    let fetched = segments.len() as u64 * seg;
+    let ideal = useful.div_ceil(seg).max(1) as u32;
+    CoalesceReport {
+        transactions: segments.len() as u32,
+        ideal,
+        efficiency: useful as f64 / fetched as f64,
+    }
+}
+
+/// Convenience: the warp accesses elements `base + i*stride_elems` for
+/// i in 0..warp (the canonical strided pattern of a column walk).
+pub fn coalesce_strided(
+    base_elem: u64,
+    stride_elems: u64,
+    warp: u32,
+    elem_bytes: u32,
+    segment_bytes: u32,
+) -> CoalesceReport {
+    let addrs: Vec<u64> = (0..warp as u64)
+        .map(|i| (base_elem + i * stride_elems) * elem_bytes as u64)
+        .collect();
+    coalesce(&addrs, elem_bytes, segment_bytes)
+}
+
+/// Result of bank-conflict analysis for one half-warp shared access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BankReport {
+    /// Serialization degree: 1 = conflict-free, k = k-way conflict
+    /// (the access replays k times).
+    pub degree: u32,
+    /// Whether the broadcast exception applied (all lanes same word).
+    pub broadcast: bool,
+}
+
+/// Analyze a half-warp's shared-memory access. `word_addrs` are per-thread
+/// 32-bit-WORD indices into shared memory. Banks interleave word-by-word
+/// over `banks`. If multiple threads hit the same bank at *different*
+/// words, the access serializes; same word broadcasts (paper §2.3.3:
+/// "the bank will broadcast ... when the half-warp access the same bank").
+pub fn bank_conflicts(word_addrs: &[u32], banks: u32) -> BankReport {
+    assert!(!word_addrs.is_empty());
+    // All-same-word → broadcast, conflict-free.
+    if word_addrs.iter().all(|&w| w == word_addrs[0]) {
+        return BankReport { degree: 1, broadcast: true };
+    }
+    let mut per_bank: HashMap<u32, HashSet<u32>> = HashMap::new();
+    for &w in word_addrs {
+        per_bank.entry(w % banks).or_default().insert(w);
+    }
+    let degree = per_bank.values().map(|words| words.len() as u32).max().unwrap_or(1);
+    BankReport { degree, broadcast: false }
+}
+
+/// Bank analysis for a 2-D shared tile access: half-warp thread `t` touches
+/// word `t * row_pitch_words + col`. The paper pads the second dimension
+/// 16 → 33 words so that `row_pitch % banks != 0`; this function lets the
+/// ablation (A3) measure exactly that.
+pub fn bank_conflicts_column_walk(row_pitch_words: u32, col: u32, half_warp: u32, banks: u32) -> BankReport {
+    let addrs: Vec<u32> = (0..half_warp).map(|t| t * row_pitch_words + col).collect();
+    bank_conflicts(&addrs, banks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SEG: u32 = 128;
+
+    #[test]
+    fn unit_stride_fully_coalesced() {
+        // 32 threads × 4 B contiguous = 128 B = exactly one segment.
+        let r = coalesce_strided(0, 1, 32, 4, SEG);
+        assert_eq!(r.transactions, 1);
+        assert_eq!(r.ideal, 1);
+        assert!((r.efficiency - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unit_stride_complex64_two_segments() {
+        // 32 threads × 8 B (complex<f32>) contiguous = 256 B = 2 segments,
+        // still 100% efficient.
+        let r = coalesce_strided(0, 1, 32, 8, SEG);
+        assert_eq!(r.transactions, 2);
+        assert!((r.efficiency - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn misaligned_adds_one_transaction() {
+        // Contiguous but starting mid-segment: touches 2 segments.
+        let r = coalesce_strided(8, 1, 32, 4, SEG); // byte offset 32
+        assert_eq!(r.transactions, 2);
+        assert!(r.efficiency < 1.0);
+    }
+
+    #[test]
+    fn large_stride_fully_scattered() {
+        // Stride ≥ segment: every thread its own transaction — the paper's
+        // uncoalesced column walk.
+        let r = coalesce_strided(0, 1024, 32, 8, SEG);
+        assert_eq!(r.transactions, 32);
+        assert!((r.efficiency - 8.0 / 128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stride_two_halves_efficiency() {
+        let r = coalesce_strided(0, 2, 32, 4, SEG);
+        assert_eq!(r.transactions, 2);
+        assert!((r.efficiency - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bank_conflict_free_unit_stride() {
+        // Thread t → word t: each of 16 threads hits its own bank.
+        let addrs: Vec<u32> = (0..16).collect();
+        let r = bank_conflicts(&addrs, 16);
+        assert_eq!(r.degree, 1);
+        assert!(!r.broadcast);
+    }
+
+    #[test]
+    fn broadcast_same_word() {
+        let addrs = vec![5u32; 16];
+        let r = bank_conflicts(&addrs, 16);
+        assert_eq!(r.degree, 1);
+        assert!(r.broadcast);
+    }
+
+    #[test]
+    fn worst_case_16_way() {
+        // Thread t → word t*16: all in bank 0, 16 distinct words.
+        let addrs: Vec<u32> = (0..16).map(|t| t * 16).collect();
+        let r = bank_conflicts(&addrs, 16);
+        assert_eq!(r.degree, 16);
+    }
+
+    #[test]
+    fn paper_padding_16_to_33() {
+        // Unpadded pitch 16 over 16 banks: column walk is a 16-way conflict.
+        let bad = bank_conflicts_column_walk(16, 3, 16, 16);
+        assert_eq!(bad.degree, 16);
+        // Padded pitch 33 (the paper's "size of second dimension is 33"):
+        // 33 mod 16 = 1 → conflict-free. (Pitch 17 would too; 33 also fixes
+        // the full-warp case on 32-bank hardware.)
+        let good = bank_conflicts_column_walk(33, 3, 16, 16);
+        assert_eq!(good.degree, 1);
+        // And on 32 banks:
+        let good32 = bank_conflicts_column_walk(33, 3, 32, 32);
+        assert_eq!(good32.degree, 1);
+    }
+
+    #[test]
+    fn even_pitch_partial_conflict() {
+        // Pitch 4 over 16 banks: threads land on banks {0,4,8,12}, 4 words
+        // each → 4-way conflict.
+        let r = bank_conflicts_column_walk(4, 0, 16, 16);
+        assert_eq!(r.degree, 4);
+    }
+}

@@ -1,0 +1,242 @@
+//! Kernel cost model: turn a kernel's traffic/compute profile into
+//! predicted execution time on a [`GpuDescriptor`].
+//!
+//! Model: each kernel costs launch overhead plus the max of its compute,
+//! global-, shared- and texture-memory service times (the GPU overlaps
+//! them), plus a latency floor for the dependent load→compute→store chain.
+//! Coalescing efficiency divides global bandwidth; bank-conflict degree
+//! divides shared bandwidth — exactly the two knobs the paper's method
+//! turns.
+
+use super::device::GpuDescriptor;
+
+/// Traffic/compute profile of one kernel launch.
+#[derive(Debug, Clone)]
+pub struct KernelProfile {
+    pub name: String,
+    /// Thread blocks launched.
+    pub blocks: u32,
+    pub threads_per_block: u32,
+    /// Shared memory requested per block, bytes.
+    pub shared_bytes_per_block: u32,
+    /// Global memory bytes read + written (useful bytes).
+    pub global_bytes: f64,
+    /// Coalescing efficiency of the global streams (1.0 = perfect).
+    pub coalesce_efficiency: f64,
+    /// Texture-path bytes read (twiddle LUT lookups).
+    pub texture_bytes: f64,
+    /// Shared-memory bytes moved (reads + writes).
+    pub shared_bytes: f64,
+    /// Bank-conflict serialization degree (1 = conflict-free).
+    pub bank_degree: f64,
+    /// Floating-point operations.
+    pub flops: f64,
+    /// Dependent global round-trips on the critical path (latency floor).
+    pub dependent_rounds: f64,
+}
+
+impl KernelProfile {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            blocks: 1,
+            threads_per_block: 256,
+            shared_bytes_per_block: 0,
+            global_bytes: 0.0,
+            coalesce_efficiency: 1.0,
+            texture_bytes: 0.0,
+            shared_bytes: 0.0,
+            bank_degree: 1.0,
+            flops: 0.0,
+            dependent_rounds: 2.0,
+        }
+    }
+
+    /// Predicted execution time (seconds) on `gpu`, excluding launch
+    /// overhead (the schedule adds that per kernel).
+    pub fn exec_time(&self, gpu: &GpuDescriptor) -> f64 {
+        // Underutilization: fewer resident blocks than SMs leaves bandwidth
+        // and ALUs idle.
+        let occupancy = (self.blocks as f64 / gpu.sm_count as f64).min(1.0).max(1.0 / gpu.sm_count as f64);
+        let compute = self.flops / (gpu.peak_flops() * occupancy);
+        let global = self.global_bytes
+            / (gpu.global_bandwidth * gpu.global_efficiency * self.coalesce_efficiency.max(1e-3) * occupancy);
+        let shared = self.shared_bytes * self.bank_degree / (gpu.shared_bandwidth * occupancy);
+        let texture = self.texture_bytes / (gpu.texture_bandwidth * occupancy);
+        let latency_floor = self.dependent_rounds * gpu.global_latency_cycles * gpu.cycle_s();
+        compute.max(global).max(shared).max(texture) + latency_floor
+    }
+
+    /// Shared-memory fit check: does the block's tile fit the SM budget?
+    pub fn fits_shared(&self, gpu: &GpuDescriptor) -> bool {
+        self.shared_bytes_per_block as u64 <= gpu.shared_bytes_per_sm
+    }
+}
+
+/// A full GPU schedule: kernels + host↔device transfers + fixed overhead.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub name: String,
+    pub kernels: Vec<KernelProfile>,
+    /// Host→device bytes before the first kernel.
+    pub h2d_bytes: f64,
+    /// Device→host bytes after the last kernel.
+    pub d2h_bytes: f64,
+    /// Fixed API/plan/sync overhead, seconds.
+    pub dispatch_overhead_s: f64,
+}
+
+/// Prediction with a per-component breakdown.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub name: String,
+    pub total_s: f64,
+    pub transfer_s: f64,
+    pub launch_s: f64,
+    pub exec_s: f64,
+    pub overhead_s: f64,
+    /// Total useful global-memory traffic, bytes (the paper's headline
+    /// decision variable).
+    pub global_traffic: f64,
+    pub per_kernel_s: Vec<(String, f64)>,
+}
+
+impl SimReport {
+    pub fn total_ms(&self) -> f64 {
+        self.total_s * 1e3
+    }
+}
+
+impl Schedule {
+    /// Predict end-to-end time including transfers (the paper's Table 1 /
+    /// Fig 7-8 measurement convention: GPU timings include the PCIe copy).
+    pub fn predict(&self, gpu: &GpuDescriptor) -> SimReport {
+        let transfer_s = if self.h2d_bytes + self.d2h_bytes > 0.0 {
+            self.h2d_bytes / gpu.pcie_bandwidth
+                + self.d2h_bytes / gpu.pcie_bandwidth
+                + 2.0 * gpu.pcie_latency_s
+        } else {
+            0.0
+        };
+        let launch_s = self.kernels.len() as f64 * gpu.kernel_launch_s;
+        let per_kernel_s: Vec<(String, f64)> = self
+            .kernels
+            .iter()
+            .map(|k| (k.name.clone(), k.exec_time(gpu)))
+            .collect();
+        let exec_s: f64 = per_kernel_s.iter().map(|(_, t)| t).sum();
+        let global_traffic: f64 = self.kernels.iter().map(|k| k.global_bytes).sum();
+        SimReport {
+            name: self.name.clone(),
+            total_s: transfer_s + launch_s + exec_s + self.dispatch_overhead_s,
+            transfer_s,
+            launch_s,
+            exec_s,
+            overhead_s: self.dispatch_overhead_s,
+            global_traffic,
+            per_kernel_s,
+        }
+    }
+
+    /// Predict kernel-only time (no transfers, no fixed overhead) — used by
+    /// the Fig 9-10 comparison where both sides live on the GPU and the
+    /// paper's relative numbers are dominated by kernel behaviour.
+    pub fn predict_kernels_only(&self, gpu: &GpuDescriptor) -> f64 {
+        self.kernels.len() as f64 * gpu.kernel_launch_s
+            + self.kernels.iter().map(|k| k.exec_time(gpu)).sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::GpuDescriptor;
+
+    fn gpu() -> GpuDescriptor {
+        GpuDescriptor::tesla_c2070()
+    }
+
+    #[test]
+    fn bandwidth_bound_kernel() {
+        // 100 MB of perfectly coalesced traffic, negligible compute:
+        // time ≈ bytes / effective bandwidth.
+        let mut k = KernelProfile::new("stream");
+        k.blocks = 1000;
+        k.global_bytes = 100e6;
+        let t = k.exec_time(&gpu());
+        let expect = 100e6 / (144e9 * 0.70);
+        assert!((t - expect).abs() / expect < 0.05, "t={t} expect={expect}");
+    }
+
+    #[test]
+    fn poor_coalescing_slows_kernel() {
+        let mut k = KernelProfile::new("strided");
+        k.blocks = 1000;
+        k.global_bytes = 10e6;
+        let fast = k.exec_time(&gpu());
+        k.coalesce_efficiency = 0.0625; // 8 useful bytes per 128 B segment
+        let slow = k.exec_time(&gpu());
+        assert!(slow > fast * 10.0, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn bank_conflicts_slow_shared_bound_kernel() {
+        let mut k = KernelProfile::new("smem");
+        k.blocks = 1000;
+        k.shared_bytes = 1e9;
+        let clean = k.exec_time(&gpu());
+        k.bank_degree = 16.0;
+        let conflicted = k.exec_time(&gpu());
+        assert!(conflicted > clean * 8.0);
+    }
+
+    #[test]
+    fn compute_bound_kernel() {
+        let mut k = KernelProfile::new("flops");
+        k.blocks = 1000;
+        k.flops = 1e9;
+        let t = k.exec_time(&gpu());
+        let expect = 1e9 / gpu().peak_flops();
+        assert!((t - expect).abs() / expect < 0.05);
+    }
+
+    #[test]
+    fn small_grid_underutilizes() {
+        let mut k = KernelProfile::new("tiny");
+        k.blocks = 1; // 1 of 14 SMs busy
+        k.global_bytes = 1e6;
+        let t1 = k.exec_time(&gpu());
+        k.blocks = 14;
+        let t14 = k.exec_time(&gpu());
+        assert!(t1 > t14 * 10.0);
+    }
+
+    #[test]
+    fn schedule_totals_add_up() {
+        let mut k = KernelProfile::new("k");
+        k.blocks = 100;
+        k.global_bytes = 1e6;
+        let s = Schedule {
+            name: "test".into(),
+            kernels: vec![k.clone(), k],
+            h2d_bytes: 1e6,
+            d2h_bytes: 1e6,
+            dispatch_overhead_s: 100e-6,
+            };
+        let r = s.predict(&gpu());
+        assert!(r.total_s > r.exec_s);
+        assert_eq!(r.per_kernel_s.len(), 2);
+        assert!((r.total_s - (r.transfer_s + r.launch_s + r.exec_s + r.overhead_s)).abs() < 1e-12);
+        assert_eq!(r.global_traffic, 2e6);
+        assert!(s.predict_kernels_only(&gpu()) < r.total_s);
+    }
+
+    #[test]
+    fn shared_fit_check() {
+        let mut k = KernelProfile::new("big-tile");
+        k.shared_bytes_per_block = 49 * 1024;
+        assert!(!k.fits_shared(&gpu()));
+        k.shared_bytes_per_block = 16 * 1024;
+        assert!(k.fits_shared(&gpu()));
+    }
+}

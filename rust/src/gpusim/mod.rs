@@ -1,0 +1,32 @@
+//! Fermi-class GPU memory-hierarchy simulator — the Tesla C2070 stand-in
+//! (DESIGN.md §2, hardware adaptation).
+//!
+//! The paper's contribution is a memory *schedule*; its evaluation hardware
+//! is unavailable here, so this module regenerates the paper's figures from
+//! a first-principles cost model: device descriptors with datasheet
+//! numbers ([`device`]), exact coalescing/bank-conflict analyzers
+//! ([`access`]), a per-kernel service-time model ([`kernel`]) and the three
+//! competing FFT schedules plus the CPU comparator ([`schedules`]).
+//!
+//! What is calibrated vs derived:
+//! - derived: all byte/flop counts (closed forms, asserted in tests),
+//!   coalescing and bank behaviour (combinatorial), pass counts (the
+//!   paper's own rule).
+//! - calibrated once from Table 1's small-N rows, then frozen: fixed
+//!   dispatch overheads and effective PCIe/DRAM efficiencies.
+
+pub mod access;
+pub mod device;
+pub mod kernel;
+pub mod occupancy;
+pub mod schedules;
+pub mod streaming;
+
+pub use access::{bank_conflicts, coalesce, coalesce_strided, BankReport, CoalesceReport};
+pub use device::{CpuDescriptor, GpuDescriptor, MemorySpace, SpaceSpec};
+pub use kernel::{KernelProfile, Schedule, SimReport};
+pub use occupancy::{occupancy, paper_kernel_occupancy, BlockResources, Limiter, Occupancy, SmLimits};
+pub use schedules::{
+    fftw_cpu_time, paper_pass_rule, per_level, tiled, vendor_like, TiledOptions, PAPER_TILE,
+};
+pub use streaming::{best_chunking, pipeline, StreamReport};

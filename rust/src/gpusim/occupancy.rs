@@ -1,0 +1,168 @@
+//! Fermi occupancy calculator: how many blocks are resident per SM given
+//! shared-memory, register and thread limits — the constraint that decides
+//! the paper's tile size (§2.3.2: "We do that based on the size of the
+//! share memory because the size of the share memory is certain").
+
+use super::device::GpuDescriptor;
+
+/// Per-kernel resource request.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockResources {
+    pub threads_per_block: u32,
+    pub shared_bytes_per_block: u32,
+    pub registers_per_thread: u32,
+}
+
+/// Fermi GF100 SM limits (CUDA occupancy calculator values).
+#[derive(Debug, Clone, Copy)]
+pub struct SmLimits {
+    pub max_threads: u32,
+    pub max_blocks: u32,
+    pub registers: u32,
+    pub shared_bytes: u32,
+    pub warp_size: u32,
+}
+
+impl SmLimits {
+    pub fn fermi() -> Self {
+        Self {
+            max_threads: 1536,
+            max_blocks: 8,
+            registers: 32 * 1024,
+            shared_bytes: 48 * 1024,
+            warp_size: 32,
+        }
+    }
+
+    pub fn from_device(gpu: &GpuDescriptor) -> Self {
+        Self { shared_bytes: gpu.shared_bytes_per_sm as u32, ..Self::fermi() }
+    }
+}
+
+/// Occupancy result with the binding constraint identified.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Occupancy {
+    pub blocks_per_sm: u32,
+    pub active_warps: u32,
+    pub max_warps: u32,
+    pub limiter: Limiter,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Limiter {
+    Threads,
+    Blocks,
+    SharedMemory,
+    Registers,
+}
+
+impl Occupancy {
+    pub fn ratio(&self) -> f64 {
+        self.active_warps as f64 / self.max_warps as f64
+    }
+}
+
+/// Compute occupancy for a block's resource request.
+pub fn occupancy(req: BlockResources, lim: SmLimits) -> Occupancy {
+    assert!(req.threads_per_block >= 1);
+    let by_threads = lim.max_threads / req.threads_per_block.max(1);
+    let by_blocks = lim.max_blocks;
+    let by_shared = if req.shared_bytes_per_block == 0 {
+        u32::MAX
+    } else {
+        lim.shared_bytes / req.shared_bytes_per_block
+    };
+    let regs_per_block = req.registers_per_thread * req.threads_per_block;
+    let by_regs = if regs_per_block == 0 { u32::MAX } else { lim.registers / regs_per_block };
+
+    let blocks = by_threads.min(by_blocks).min(by_shared).min(by_regs);
+    // Tie-breaking: report the hard SM limit (Blocks) before the per-kernel
+    // resources when both bind at the same count.
+    let limiter = if blocks == by_blocks {
+        Limiter::Blocks
+    } else if blocks == by_shared {
+        Limiter::SharedMemory
+    } else if blocks == by_regs {
+        Limiter::Registers
+    } else {
+        Limiter::Threads
+    };
+    let warps_per_block = req.threads_per_block.div_ceil(lim.warp_size);
+    let max_warps = lim.max_threads / lim.warp_size;
+    Occupancy {
+        blocks_per_sm: blocks,
+        active_warps: (blocks * warps_per_block).min(max_warps),
+        max_warps,
+        limiter,
+    }
+}
+
+/// The paper's kernel: (32, 16, 1) block = 512 threads, one complex tile of
+/// `tile` elements (+33/32 padding) in shared memory.
+pub fn paper_kernel_occupancy(tile: usize, lim: SmLimits) -> Occupancy {
+    occupancy(
+        BlockResources {
+            threads_per_block: 512,
+            shared_bytes_per_block: (tile as f64 * 8.0 * 33.0 / 32.0) as u32,
+            registers_per_thread: 24,
+        },
+        lim,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unconstrained_kernel_limited_by_threads_or_blocks() {
+        let o = occupancy(
+            BlockResources { threads_per_block: 192, shared_bytes_per_block: 0, registers_per_thread: 0 },
+            SmLimits::fermi(),
+        );
+        assert_eq!(o.blocks_per_sm, 8, "block-count limit binds for small blocks");
+        assert_eq!(o.limiter, Limiter::Blocks);
+    }
+
+    #[test]
+    fn thread_limit_binds_for_big_blocks() {
+        let o = occupancy(
+            BlockResources { threads_per_block: 1024, shared_bytes_per_block: 0, registers_per_thread: 0 },
+            SmLimits::fermi(),
+        );
+        assert_eq!(o.blocks_per_sm, 1);
+        assert_eq!(o.limiter, Limiter::Threads);
+    }
+
+    #[test]
+    fn shared_memory_binds_for_paper_tiles() {
+        // tile 2048 complex ≈ 16.9 KB padded → 2 blocks; tile 4096 ≈ 33.8 KB
+        // → 1 block. This is why the paper caps the one-kernel-call regime.
+        let two = paper_kernel_occupancy(2048, SmLimits::fermi());
+        assert_eq!(two.blocks_per_sm, 2);
+        assert_eq!(two.limiter, Limiter::SharedMemory);
+        let one = paper_kernel_occupancy(4096, SmLimits::fermi());
+        assert_eq!(one.blocks_per_sm, 1);
+        // tile 8192 would not fit at all:
+        let zero = paper_kernel_occupancy(8192, SmLimits::fermi());
+        assert_eq!(zero.blocks_per_sm, 0);
+    }
+
+    #[test]
+    fn register_limit_binds_when_heavy() {
+        let o = occupancy(
+            BlockResources { threads_per_block: 512, shared_bytes_per_block: 0, registers_per_thread: 63 },
+            SmLimits::fermi(),
+        );
+        assert_eq!(o.limiter, Limiter::Registers);
+        assert_eq!(o.blocks_per_sm, 1); // 32k / (63*512) = 1
+    }
+
+    #[test]
+    fn occupancy_ratio_bounded() {
+        for tile in [256usize, 1024, 2048] {
+            let o = paper_kernel_occupancy(tile, SmLimits::fermi());
+            assert!(o.ratio() <= 1.0 && o.ratio() >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,416 @@
+//! FFT schedules on the modeled GPU — the heart of the reproduction.
+//!
+//! Three GPU schedules (paper §2.2–2.3) plus the CPU FFTW model:
+//!
+//! - [`per_level`]  — the "previous method" (paper Fig. 2): one kernel per
+//!   butterfly level; every level streams the whole array through global
+//!   memory and reads twiddles from global.
+//! - [`tiled`]      — the paper's method (Figs. 4–6): 1–3 kernel calls by
+//!   the paper's size rule; all butterflies in shared memory; twiddles from
+//!   the texture-memory LUT; coalesced global access; bank-conflict-free
+//!   padded tiles.
+//! - [`vendor_like`] — the CUFFT stand-in: a heavily engineered Stockham
+//!   streamer (radix-8 passes, no shared-tile reuse across passes) with the
+//!   library's larger fixed plan/dispatch overhead.
+//! - [`fftw_cpu_time`] — the FFTW comparator on the modeled i7-2600K.
+//!
+//! Every byte count is exact (asserted in tests against closed forms); the
+//! only free parameters are the device descriptor calibrations.
+
+use super::device::{CpuDescriptor, GpuDescriptor};
+use super::kernel::{KernelProfile, Schedule};
+use crate::util::{capped_pow2_split, is_pow2, log2_exact};
+
+/// Bytes per complex<f32> element (the wire format everywhere).
+pub const ELEM: f64 = 8.0;
+
+/// Flops per radix-2 butterfly: complex mul (6) + two complex adds (4).
+pub const BUTTERFLY_FLOPS: f64 = 10.0;
+
+/// The paper's kernel-call rule (§3): 1 call for N ≤ 1024, 2 calls for
+/// N ≤ 32768, 3 calls beyond.
+pub fn paper_pass_rule(n: usize) -> usize {
+    if n <= 1024 {
+        1
+    } else if n <= 32768 {
+        2
+    } else {
+        3
+    }
+}
+
+/// Shared-memory tile (complex elements per block) used by the tiled
+/// schedule: 1024 points × 8 B × double-buffer + padding stays inside the
+/// 48 KB Fermi budget.
+pub const PAPER_TILE: usize = 1024;
+
+/// "Previous method": one kernel launch per butterfly level (paper Fig. 2).
+///
+/// Each level: read N complex + read N/2 twiddles + write N complex, all
+/// from/to global memory. All levels are unit-stride per thread within a
+/// warp → coalesced; the cost is the log2(N) *round trips*.
+pub fn per_level(n: usize, batch: usize, gpu: &GpuDescriptor) -> Schedule {
+    assert!(is_pow2(n));
+    let levels = log2_exact(n);
+    let total = (n * batch) as f64;
+    let threads = 256u32;
+    let blocks = (((total / 2.0) / threads as f64).ceil() as u32).max(1);
+    let kernels = (0..levels)
+        .map(|s| {
+            let mut k = KernelProfile::new(format!("level{s}"));
+            k.blocks = blocks;
+            k.threads_per_block = threads;
+            // read N + write N elements, plus N/2 twiddle loads from global
+            k.global_bytes = total * ELEM * 2.0 + total / 2.0 * ELEM;
+            k.coalesce_efficiency = 1.0;
+            k.flops = total / 2.0 * BUTTERFLY_FLOPS;
+            k.dependent_rounds = 2.0; // load → store
+            k
+        })
+        .collect();
+    Schedule {
+        name: format!("per-level/{n}"),
+        kernels,
+        h2d_bytes: total * ELEM,
+        d2h_bytes: total * ELEM,
+        dispatch_overhead_s: gpu.dispatch_overhead_s,
+    }
+}
+
+/// Options for the tiled (paper) schedule — the ablation switches of §2.3.
+#[derive(Debug, Clone, Copy)]
+pub struct TiledOptions {
+    /// Twiddles from the texture LUT (true, §2.3.1) or recomputed with SFU
+    /// sin/cos in-kernel (false) — ablation A1.
+    pub texture_twiddles: bool,
+    /// Coalesced (32,16,1) thread mapping (true, §2.3.3) or naive
+    /// column-major walk (false) — ablation A3.
+    pub coalesced: bool,
+    /// Padded shared tiles 16→33 (true, §2.3.3) or unpadded (false) — A3.
+    pub padded_banks: bool,
+    /// Shared tile capacity in complex elements — ablation A2.
+    pub tile: usize,
+}
+
+impl Default for TiledOptions {
+    fn default() -> Self {
+        Self { texture_twiddles: true, coalesced: true, padded_banks: true, tile: PAPER_TILE }
+    }
+}
+
+/// Cost of recomputing one twiddle with SFU sin/cos (flops-equivalent);
+/// Fermi SFU transcendentals are ~16 ALU-op equivalents for sin+cos.
+const SFU_TWIDDLE_FLOPS: f64 = 32.0;
+
+/// The paper's method: hierarchical shared-memory FFT, 1–3 kernel calls.
+///
+/// Pass structure mirrors `fft::FourStep` with the paper's pass rule: the
+/// N-point transform is split into sub-FFTs that fit the shared tile; each
+/// pass streams the array through global memory exactly once and runs all
+/// of its butterfly levels inside shared memory.
+pub fn tiled(n: usize, batch: usize, opts: TiledOptions, gpu: &GpuDescriptor) -> Schedule {
+    assert!(is_pow2(n));
+    let levels = log2_exact(n) as f64;
+    let passes = paper_pass_rule(n);
+    let total = (n * batch) as f64;
+    // Sub-FFT sizes per pass: split log2(n) levels as evenly as possible.
+    let sub_levels = split_levels(log2_exact(n), passes);
+    let threads = 32 * 16; // the paper's (32, 16, 1) block
+    let tile_elems = opts.tile.min(n);
+    let blocks = ((total / tile_elems as f64).ceil() as u32).max(1);
+    // Shared bytes per block: tile + paper's 16→33 pitch padding.
+    let pad = if opts.padded_banks { 33.0 / 32.0 } else { 1.0 };
+    let shared_per_block = (tile_elems as f64 * ELEM * pad) as u32;
+
+    let kernels = sub_levels
+        .iter()
+        .enumerate()
+        .map(|(p, &lv)| {
+            let mut k = KernelProfile::new(format!("pass{p}(2^{lv})"));
+            k.blocks = blocks;
+            k.threads_per_block = threads;
+            k.shared_bytes_per_block = shared_per_block;
+            // One global round trip per pass.
+            k.global_bytes = total * ELEM * 2.0;
+            // Pass ≥ 1 walks columns of the element matrix; the paper's
+            // thread allocation keeps 32 consecutive threads on consecutive
+            // addresses ("first dimension is 16 … because the coalescent is
+            // needed"). Without it, stride-N2 walks fetch a 128 B segment
+            // per 8 useful bytes.
+            k.coalesce_efficiency = if opts.coalesced { 1.0 } else { ELEM / gpu.segment_bytes as f64 };
+            // All butterfly levels of this pass run in shared memory:
+            // lv levels × (read+write N elements each).
+            k.shared_bytes = total * ELEM * 2.0 * lv as f64;
+            k.bank_degree = if opts.padded_banks { 1.0 } else { gpu.shared_banks as f64 };
+            let butterflies = total / 2.0 * lv as f64;
+            k.flops = butterflies * BUTTERFLY_FLOPS
+                + if opts.texture_twiddles { 0.0 } else { butterflies * SFU_TWIDDLE_FLOPS };
+            if opts.texture_twiddles {
+                k.texture_bytes = butterflies * ELEM;
+            }
+            // Inter-pass twiddle multiply (four-step step 3) on all passes
+            // except the last.
+            if p + 1 < passes {
+                k.flops += total * 6.0;
+                if opts.texture_twiddles {
+                    k.texture_bytes += total * ELEM;
+                } else {
+                    k.flops += total * SFU_TWIDDLE_FLOPS;
+                }
+            }
+            k.dependent_rounds = 2.0;
+            let _ = levels;
+            k
+        })
+        .collect();
+
+    Schedule {
+        name: format!("tiled/{n}"),
+        kernels,
+        h2d_bytes: total * ELEM,
+        d2h_bytes: total * ELEM,
+        dispatch_overhead_s: gpu.dispatch_overhead_s,
+    }
+}
+
+/// CUFFT stand-in: optimized Stockham streamer, radix-8 passes (so
+/// ceil(log2 N / 3) kernels, each one global round trip), twiddles
+/// recomputed in registers (CUFFT's approach on Fermi — the paper §3 notes
+/// "these operations are processed in the unit of SFU"), plus the library's
+/// plan/dispatch overhead.
+pub fn vendor_like(n: usize, batch: usize, gpu: &GpuDescriptor) -> Schedule {
+    assert!(is_pow2(n));
+    let levels = log2_exact(n);
+    let passes = levels.div_ceil(3).max(1) as usize;
+    let total = (n * batch) as f64;
+    let threads = 256u32;
+    let blocks = (((total / 8.0) / threads as f64).ceil() as u32).max(1);
+    let kernels = (0..passes)
+        .map(|p| {
+            let lv = (levels as f64 / passes as f64).ceil().min((levels as usize - p * 3) as f64);
+            let mut k = KernelProfile::new(format!("r8pass{p}"));
+            k.blocks = blocks;
+            k.threads_per_block = threads;
+            k.global_bytes = total * ELEM * 2.0;
+            k.coalesce_efficiency = 1.0;
+            let butterflies = total / 2.0 * lv;
+            // SFU twiddle recompute folded into flops at a discount (the
+            // vendor kernels hide most of it behind memory).
+            k.flops = butterflies * BUTTERFLY_FLOPS + butterflies * SFU_TWIDDLE_FLOPS * 0.25;
+            k.dependent_rounds = 2.0;
+            k
+        })
+        .collect();
+    Schedule {
+        name: format!("cufft-like/{n}"),
+        kernels,
+        h2d_bytes: total * ELEM,
+        d2h_bytes: total * ELEM,
+        // CUFFT's fixed cost is larger than a hand kernel's: plan handling +
+        // internal dispatch. Calibrated once from Table 1 N=16 (0.344 ms).
+        dispatch_overhead_s: gpu.dispatch_overhead_s + 180e-6,
+    }
+}
+
+/// FFTW comparator on the modeled CPU: `5 N log2 N` flops at the measured
+/// sustained FFT rate, plus call overhead; memory term binds only past LLC.
+pub fn fftw_cpu_time(n: usize, batch: usize, cpu: &CpuDescriptor) -> f64 {
+    let total = (n * batch) as f64;
+    let flops = 5.0 * total * (n as f64).log2().max(1.0);
+    let flops_time = flops / cpu.fft_flops;
+    let bytes = total * ELEM;
+    let mem_time = if bytes > cpu.llc_bytes as f64 {
+        // Out-of-cache: each of the ~log_{tile} passes streams the array.
+        let passes = ((n as f64).log2() / (cpu.llc_bytes as f64 / 16.0 / ELEM).log2()).ceil().max(1.0);
+        passes * bytes * 2.0 / cpu.mem_bandwidth
+    } else {
+        0.0
+    };
+    cpu.call_overhead_s + flops_time.max(mem_time)
+}
+
+/// Split `levels` butterfly levels into `passes` near-equal groups, first
+/// groups no smaller than later ones and each fitting the paper tile
+/// (2^10 = 1024 points).
+pub fn split_levels(levels: u32, passes: usize) -> Vec<u32> {
+    let base = levels / passes as u32;
+    let extra = levels as usize % passes;
+    (0..passes)
+        .map(|p| base + if p < extra { 1 } else { 0 })
+        .collect()
+}
+
+/// Closed-form global traffic (bytes) of each schedule — the paper's
+/// decision variable, asserted exact in tests.
+pub fn global_traffic_per_level(n: usize, batch: usize) -> f64 {
+    let total = (n * batch) as f64;
+    log2_exact(n) as f64 * (total * ELEM * 2.0 + total / 2.0 * ELEM)
+}
+
+pub fn global_traffic_tiled(n: usize, batch: usize) -> f64 {
+    let total = (n * batch) as f64;
+    paper_pass_rule(n) as f64 * total * ELEM * 2.0
+}
+
+/// The four-step decomposition the tiled schedule implies for reporting:
+/// (n1, n2) with n1 ≤ tile.
+pub fn tiled_split(n: usize, tile: usize) -> (usize, usize) {
+    capped_pow2_split(n, tile)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::{CpuDescriptor, GpuDescriptor};
+
+    fn gpu() -> GpuDescriptor {
+        GpuDescriptor::tesla_c2070()
+    }
+
+    #[test]
+    fn paper_pass_rule_thresholds() {
+        assert_eq!(paper_pass_rule(16), 1);
+        assert_eq!(paper_pass_rule(1024), 1);
+        assert_eq!(paper_pass_rule(2048), 2);
+        assert_eq!(paper_pass_rule(32768), 2);
+        assert_eq!(paper_pass_rule(65536), 3);
+    }
+
+    #[test]
+    fn traffic_accounting_exact() {
+        for n in [1024usize, 4096, 65536] {
+            let pl = per_level(n, 1, &gpu());
+            let tl = tiled(n, 1, TiledOptions::default(), &gpu());
+            let pl_traffic: f64 = pl.kernels.iter().map(|k| k.global_bytes).sum();
+            let tl_traffic: f64 = tl.kernels.iter().map(|k| k.global_bytes).sum();
+            assert_eq!(pl_traffic, global_traffic_per_level(n, 1), "n={n}");
+            assert_eq!(tl_traffic, global_traffic_tiled(n, 1), "n={n}");
+        }
+    }
+
+    #[test]
+    fn tiled_beats_per_level_traffic_beyond_one_pass() {
+        for lg in 4..=20 {
+            let n = 1usize << lg;
+            let ratio = global_traffic_per_level(n, 1) / global_traffic_tiled(n, 1);
+            // log2(n) * 2.5 vs passes * 2 round trips.
+            assert!(ratio > 1.0, "n={n} ratio={ratio}");
+            if n >= 65536 {
+                assert!(ratio > 4.0, "large n should save ≥4x traffic, got {ratio}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_counts_match_paper() {
+        let g = gpu();
+        assert_eq!(tiled(1024, 1, TiledOptions::default(), &g).kernels.len(), 1);
+        assert_eq!(tiled(16384, 1, TiledOptions::default(), &g).kernels.len(), 2);
+        assert_eq!(tiled(65536, 1, TiledOptions::default(), &g).kernels.len(), 3);
+        assert_eq!(per_level(1024, 1, &g).kernels.len(), 10);
+    }
+
+    #[test]
+    fn split_levels_sums() {
+        for (lv, p) in [(10u32, 1usize), (14, 2), (16, 3), (17, 3)] {
+            let s = split_levels(lv, p);
+            assert_eq!(s.len(), p);
+            assert_eq!(s.iter().sum::<u32>(), lv);
+            assert!(s.windows(2).all(|w| w[0] >= w[1]));
+        }
+    }
+
+    #[test]
+    fn shared_tile_fits_fermi_budget() {
+        let g = gpu();
+        let s = tiled(65536, 1, TiledOptions::default(), &g);
+        for k in &s.kernels {
+            assert!(k.fits_shared(&g), "{} wants {} B", k.name, k.shared_bytes_per_block);
+        }
+    }
+
+    #[test]
+    fn tiled_faster_than_per_level_everywhere() {
+        let g = gpu();
+        for lg in 5..=16 {
+            let n = 1usize << lg;
+            let t_tiled = tiled(n, 1, TiledOptions::default(), &g).predict(&g).total_s;
+            let t_pl = per_level(n, 1, &g).predict(&g).total_s;
+            assert!(t_tiled < t_pl, "n={n}: tiled {t_tiled} vs per-level {t_pl}");
+        }
+    }
+
+    #[test]
+    fn tiled_beats_vendor_in_moderate_band() {
+        // Paper Figs 9-10: ours > CUFFT by ~30%+ in the few-k..tens-of-k
+        // range (the SAR band).
+        let g = gpu();
+        for n in [4096usize, 8192, 16384, 32768, 65536] {
+            let ours = tiled(n, 1, TiledOptions::default(), &g).predict(&g).total_s;
+            let cufft = vendor_like(n, 1, &g).predict(&g).total_s;
+            assert!(
+                ours < cufft,
+                "n={n}: ours {:.1}µs vs cufft {:.1}µs",
+                ours * 1e6,
+                cufft * 1e6
+            );
+        }
+    }
+
+    #[test]
+    fn fftw_wins_small_gpu_wins_large() {
+        // Paper Figs 7-8: FFTW faster below ~8192 (transfer-dominated GPU),
+        // ours faster at large N.
+        let g = gpu();
+        let c = CpuDescriptor::i7_2600k();
+        let small = 1024;
+        let large = 65536;
+        let ours_small = tiled(small, 1, TiledOptions::default(), &g).predict(&g).total_s;
+        let fftw_small = fftw_cpu_time(small, 1, &c);
+        assert!(fftw_small < ours_small, "small N: FFTW must win");
+        let ours_large = tiled(large, 1, TiledOptions::default(), &g).predict(&g).total_s;
+        let fftw_large = fftw_cpu_time(large, 1, &c);
+        assert!(ours_large < fftw_large, "large N: ours must win");
+    }
+
+    #[test]
+    fn ablation_switches_hurt() {
+        let g = gpu();
+        let n = 16384;
+        let base = tiled(n, 1, TiledOptions::default(), &g).predict(&g).total_s;
+        let no_coalesce = tiled(
+            n,
+            1,
+            TiledOptions { coalesced: false, ..Default::default() },
+            &g,
+        )
+        .predict(&g)
+        .total_s;
+        let no_pad = tiled(
+            n,
+            1,
+            TiledOptions { padded_banks: false, ..Default::default() },
+            &g,
+        )
+        .predict(&g)
+        .total_s;
+        let no_tex = tiled(
+            n,
+            1,
+            TiledOptions { texture_twiddles: false, ..Default::default() },
+            &g,
+        )
+        .predict(&g)
+        .total_s;
+        assert!(no_coalesce > base, "uncoalesced must be slower");
+        assert!(no_pad >= base, "bank conflicts must not help");
+        assert!(no_tex >= base, "SFU recompute must not beat the LUT");
+    }
+
+    #[test]
+    fn batch_scales_traffic_linearly() {
+        let t1 = global_traffic_tiled(4096, 1);
+        let t8 = global_traffic_tiled(4096, 8);
+        assert_eq!(t8, 8.0 * t1);
+    }
+}

@@ -1,0 +1,114 @@
+//! Ablations A1–A3 (DESIGN.md §4): turn each of the paper's three
+//! optimizations off in the simulator, and sweep the tile size — the
+//! design-choice evidence §2.3 argues from.
+
+use crate::bench::render_table;
+use crate::gpusim::{self, GpuDescriptor, TiledOptions};
+
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub n: usize,
+    pub baseline_ms: f64,
+    /// A1: twiddles recomputed with SFU sin/cos instead of the texture LUT.
+    pub no_texture_ms: f64,
+    /// A3a: naive column-walk global access (uncoalesced).
+    pub no_coalesce_ms: f64,
+    /// A3b: unpadded shared tiles (16-way bank conflicts).
+    pub no_padding_ms: f64,
+    /// per-level schedule (the "previous method") for scale.
+    pub per_level_ms: f64,
+}
+
+pub fn run(sizes: &[usize]) -> Vec<AblationRow> {
+    let gpu = GpuDescriptor::tesla_c2070();
+    let t = |n: usize, o: TiledOptions| gpusim::tiled(n, 1, o, &gpu).predict(&gpu).total_ms();
+    sizes
+        .iter()
+        .map(|&n| AblationRow {
+            n,
+            baseline_ms: t(n, TiledOptions::default()),
+            no_texture_ms: t(n, TiledOptions { texture_twiddles: false, ..Default::default() }),
+            no_coalesce_ms: t(n, TiledOptions { coalesced: false, ..Default::default() }),
+            no_padding_ms: t(n, TiledOptions { padded_banks: false, ..Default::default() }),
+            per_level_ms: gpusim::per_level(n, 1, &gpu).predict(&gpu).total_ms(),
+        })
+        .collect()
+}
+
+/// A2: tile-size sweep at fixed n — kernel-only time in µs (fixed overheads
+/// would mask the effect the paper's §2.3.2 sizing rule is about).
+pub fn tile_sweep(n: usize, tiles: &[usize]) -> Vec<(usize, f64)> {
+    let gpu = GpuDescriptor::tesla_c2070();
+    tiles
+        .iter()
+        .map(|&tile| {
+            let o = TiledOptions { tile, ..Default::default() };
+            (tile, gpusim::tiled(n, 1, o, &gpu).predict_kernels_only(&gpu) * 1e6)
+        })
+        .collect()
+}
+
+pub fn render(rows: &[AblationRow]) -> String {
+    let mut out: Vec<[String; 6]> = vec![[
+        "N".into(),
+        "ours".into(),
+        "-texture(A1)".into(),
+        "-coalesce(A3a)".into(),
+        "-padding(A3b)".into(),
+        "per-level".into(),
+    ]];
+    for r in rows {
+        out.push([
+            r.n.to_string(),
+            format!("{:.4}", r.baseline_ms),
+            format!("{:.4}", r.no_texture_ms),
+            format!("{:.4}", r.no_coalesce_ms),
+            format!("{:.4}", r.no_padding_ms),
+            format!("{:.4}", r.per_level_ms),
+        ]);
+    }
+    render_table(&out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_ablation_hurts_or_is_neutral() {
+        for r in run(&[1024, 16384, 65536]) {
+            assert!(r.no_texture_ms >= r.baseline_ms, "n={}", r.n);
+            assert!(r.no_coalesce_ms > r.baseline_ms, "n={}", r.n);
+            assert!(r.no_padding_ms >= r.baseline_ms, "n={}", r.n);
+            assert!(r.per_level_ms > r.baseline_ms, "n={}", r.n);
+        }
+    }
+
+    #[test]
+    fn coalescing_is_the_dominant_effect_at_scale() {
+        // The paper's core argument: access pattern dominates. At 64k the
+        // uncoalesced variant must hurt much more than the LUT ablation.
+        let r = &run(&[65536])[0];
+        let coalesce_cost = r.no_coalesce_ms - r.baseline_ms;
+        let texture_cost = r.no_texture_ms - r.baseline_ms;
+        assert!(coalesce_cost > texture_cost, "{coalesce_cost} vs {texture_cost}");
+    }
+
+    #[test]
+    fn tile_sweep_has_interior_optimum_or_monotone() {
+        let sweep = tile_sweep(65536, &[64, 256, 1024, 4096]);
+        assert_eq!(sweep.len(), 4);
+        // Bigger tiles never hurt kernel-only time in this model (fewer
+        // passes), matching the paper's "divide according to the size of
+        // the share memory" — the cap IS the hardware limit.
+        let times: Vec<f64> = sweep.iter().map(|(_, t)| *t).collect();
+        assert!(times.windows(2).all(|w| w[1] <= w[0] + 1e-9));
+    }
+
+    #[test]
+    fn render_contains_all_columns() {
+        let s = render(&run(&[1024]));
+        assert!(s.contains("-texture"));
+        assert!(s.contains("per-level"));
+    }
+}

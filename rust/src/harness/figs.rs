@@ -1,0 +1,177 @@
+//! Figures 7–10 regeneration: speedup-vs-size series.
+//!
+//! Fig 7/8: ours vs FFTW (GPU timings include PCIe transfer — the paper's
+//!          convention for the CPU comparison).
+//! Fig 9/10: ours vs CUFFT (both on-device; fixed overheads and transfers
+//!           are common-mode, the paper's relative numbers track kernels).
+
+use super::table1::Row;
+use crate::bench::render_table;
+use crate::gpusim::{self, CpuDescriptor, GpuDescriptor, TiledOptions};
+
+/// A speedup series point.
+#[derive(Debug, Clone, Copy)]
+pub struct Point {
+    pub n: usize,
+    /// measured on this host (None without artifacts)
+    pub measured: Option<f64>,
+    /// gpusim-predicted on the paper's testbed
+    pub simulated: f64,
+}
+
+/// Fig 7–8 series: FFTW time / ours time (>1 ⇒ ours faster).
+pub fn fftw_speedup(rows: &[Row]) -> Vec<Point> {
+    rows.iter()
+        .map(|r| Point {
+            n: r.n,
+            measured: r.ours_ms.map(|o| r.fftw_ms / o),
+            simulated: r.sim_fftw_ms / r.sim_ours_ms,
+        })
+        .collect()
+}
+
+/// Fig 9–10 series: CUFFT time / ours time.
+pub fn cufft_speedup(rows: &[Row]) -> Vec<Point> {
+    rows.iter()
+        .map(|r| Point {
+            n: r.n,
+            measured: r.cufft_ms.and_then(|c| r.ours_ms.map(|o| c / o)),
+            simulated: r.sim_cufft_ms / r.sim_ours_ms,
+        })
+        .collect()
+}
+
+/// Kernel-only Fig 9/10 variant (excludes transfers + fixed overhead):
+/// isolates the schedule effect the paper's §2.3 engineering targets.
+pub fn cufft_kernel_speedup(sizes: &[usize]) -> Vec<Point> {
+    let gpu = GpuDescriptor::tesla_c2070();
+    sizes
+        .iter()
+        .map(|&n| Point {
+            n,
+            measured: None,
+            simulated: gpusim::vendor_like(n, 1, &gpu).predict_kernels_only(&gpu)
+                / gpusim::tiled(n, 1, TiledOptions::default(), &gpu).predict_kernels_only(&gpu),
+        })
+        .collect()
+}
+
+/// Fig 2-vs-4/5 series: per-level schedule time / tiled schedule time —
+/// the previous-method comparison that motivates the whole paper.
+pub fn perlevel_speedup(sizes: &[usize]) -> Vec<Point> {
+    let gpu = GpuDescriptor::tesla_c2070();
+    sizes
+        .iter()
+        .map(|&n| Point {
+            n,
+            measured: None,
+            simulated: gpusim::per_level(n, 1, &gpu).predict(&gpu).total_s
+                / gpusim::tiled(n, 1, TiledOptions::default(), &gpu).predict(&gpu).total_s,
+        })
+        .collect()
+}
+
+/// The crossover size: first n where the GPU path beats the CPU path
+/// (paper: ≈8192).
+pub fn fftw_crossover(sizes: &[usize]) -> Option<usize> {
+    let gpu = GpuDescriptor::tesla_c2070();
+    let cpu = CpuDescriptor::i7_2600k();
+    sizes.iter().copied().find(|&n| {
+        let ours = gpusim::tiled(n, 1, TiledOptions::default(), &gpu).predict(&gpu).total_s;
+        gpusim::fftw_cpu_time(n, 1, &cpu) > ours
+    })
+}
+
+pub fn render(name: &str, points: &[Point]) -> String {
+    let mut rows: Vec<[String; 3]> =
+        vec![[format!("{name}: N"), "measured×".into(), "simulated×".into()]];
+    for p in points {
+        rows.push([
+            p.n.to_string(),
+            p.measured.map(|m| format!("{m:.2}")).unwrap_or_else(|| "-".into()),
+            format!("{:.2}", p.simulated),
+        ]);
+    }
+    render_table(&rows)
+}
+
+pub fn csv(name: &str, points: &[Point]) -> String {
+    let mut s = format!("# {name}\nn,measured_speedup,simulated_speedup\n");
+    for p in points {
+        s.push_str(&format!(
+            "{},{},{:.4}\n",
+            p.n,
+            p.measured.map(|m| format!("{m:.4}")).unwrap_or_default(),
+            p.simulated
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::table1;
+
+    fn sizes() -> Vec<usize> {
+        table1::paper_sizes()
+    }
+
+    #[test]
+    fn fig7_8_shape_crossover_near_8192() {
+        let x = fftw_crossover(&sizes()).expect("a crossover must exist");
+        assert!(
+            (4096..=16384).contains(&x),
+            "crossover at {x}, paper ≈8192"
+        );
+        let rows = table1::run(None, &sizes(), 1);
+        let series = fftw_speedup(&rows);
+        // Monotone trend: speedup at 65536 far above speedup at 16.
+        assert!(series.last().unwrap().simulated > 4.0 * series[0].simulated);
+    }
+
+    #[test]
+    fn fig9_10_shape_moderate_band_wins_and_dips_at_65536() {
+        let rows = table1::run(None, &sizes(), 1);
+        let series = cufft_speedup(&rows);
+        let get = |n: usize| series.iter().find(|p| p.n == n).unwrap().simulated;
+        for n in [4096, 16384, 32768 / 2] {
+            if sizes().contains(&n) {
+                assert!(get(n) > 1.15, "n={n}: {:.2}", get(n));
+            }
+        }
+        // The paper notes the 3rd kernel call at 65536 dents the speedup:
+        // speedup(65536) < speedup(16384).
+        assert!(
+            get(65536) < get(16384),
+            "65536 {:.2} should dip below 16384 {:.2}",
+            get(65536),
+            get(16384)
+        );
+    }
+
+    #[test]
+    fn perlevel_always_loses_and_worsens_with_n() {
+        let series = perlevel_speedup(&sizes());
+        assert!(series.iter().all(|p| p.simulated > 1.0));
+        assert!(series.last().unwrap().simulated > series[0].simulated);
+    }
+
+    #[test]
+    fn kernel_only_speedup_exceeds_end_to_end() {
+        // Transfers are common-mode: stripping them shows a larger schedule
+        // advantage.
+        let rows = table1::run(None, &[16384], 1);
+        let e2e = cufft_speedup(&rows)[0].simulated;
+        let k = cufft_kernel_speedup(&[16384])[0].simulated;
+        assert!(k > e2e);
+    }
+
+    #[test]
+    fn render_csv() {
+        let rows = table1::run(None, &[16, 1024], 1);
+        let s = fftw_speedup(&rows);
+        assert!(render("fig7", &s).contains("fig7"));
+        assert!(csv("fig7", &s).starts_with("# fig7"));
+    }
+}

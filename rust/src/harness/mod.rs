@@ -1,0 +1,16 @@
+//! Experiment harness: the drivers that regenerate every table and figure
+//! in the paper's evaluation (DESIGN.md §4), shared by `benches/` and the
+//! `memfft` CLI.
+//!
+//! - `paper`   — the published Table-1 numbers and shape claims.
+//! - `table1`  — Table 1: measured (this host) + simulated (C2070 model).
+//! - `figs`    — Figs 7–10 speedup series + crossover finder.
+//! - `ablation`— A1–A3 optimization ablations and the tile sweep.
+
+pub mod ablation;
+pub mod figs;
+pub mod paper;
+pub mod table1;
+
+pub use paper::{paper_row, PaperRow, CLAIMS, TABLE1};
+pub use table1::Row;

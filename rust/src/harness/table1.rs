@@ -1,0 +1,245 @@
+//! Table 1 regeneration: FFTW-role vs CUFFT-role vs Ours, measured on this
+//! host AND predicted for the paper's C2070 by gpusim.
+//!
+//! Roles on this testbed (DESIGN.md §2):
+//!   FFTW  → rust `fft::FftPlan` (Auto)            — tuned CPU library
+//!   CUFFT → `fft_xla_*` artifact (HLO `fft` op)   — vendor black-box FFT
+//!   Ours  → `fft_fourstep_*` artifact             — the paper's kernel
+
+use crate::bench::{percentile_sorted, render_table};
+use crate::fft::{Algorithm, FftPlan};
+use crate::gpusim::{self, CpuDescriptor, GpuDescriptor, TiledOptions};
+use crate::harness::paper::{paper_row, TABLE1};
+use crate::runtime::Engine;
+use crate::util::complex::C32;
+use crate::util::prng::Xoshiro256;
+use crate::util::Timer;
+
+/// One measured/simulated Table-1 row (times in ms).
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub n: usize,
+    /// Measured on this host.
+    pub fftw_ms: f64,
+    pub cufft_ms: Option<f64>,
+    pub ours_ms: Option<f64>,
+    /// gpusim-predicted on the paper's C2070 (+ i7-2600K for fftw).
+    pub sim_fftw_ms: f64,
+    pub sim_cufft_ms: f64,
+    pub sim_ours_ms: f64,
+}
+
+/// Median-of-reps timing of a closure, ms.
+pub fn time_median_ms(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut samples: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t = Timer::start();
+            f();
+            t.elapsed_ms()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&samples, 50.0)
+}
+
+/// Run the sweep. `engine: None` produces simulator-only rows (plus the
+/// in-process FFTW-role measurement, which needs no artifacts).
+pub fn run(engine: Option<&Engine>, sizes: &[usize], reps: usize) -> Vec<Row> {
+    let gpu = GpuDescriptor::tesla_c2070();
+    let cpu = CpuDescriptor::i7_2600k();
+    let mut rng = Xoshiro256::seeded(0xAB1E);
+
+    sizes
+        .iter()
+        .map(|&n| {
+            // FFTW role: plan once (FFTW convention), measure executes.
+            let plan = FftPlan::new(n, Algorithm::Auto);
+            let input = rng.complex_vec(n);
+            let mut buf = input.clone();
+            plan.forward(&mut buf); // warm
+            let fftw_ms = time_median_ms(reps, || {
+                buf.copy_from_slice(&input);
+                plan.forward(&mut buf);
+                std::hint::black_box(&buf);
+            });
+
+            let (cufft_ms, ours_ms) = match engine {
+                Some(engine) => {
+                    let measure = |method: &str| -> Option<f64> {
+                        let entry = engine.index().find_fft("fft", method, n, 1).ok()?.clone();
+                        let re: Vec<f32> = input.iter().map(|c| c.re).collect();
+                        let im: Vec<f32> = input.iter().map(|c| c.im).collect();
+                        engine.run_fft(&entry, &re, &im).ok()?; // warm + compile
+                        Some(time_median_ms(reps, || {
+                            std::hint::black_box(engine.run_fft(&entry, &re, &im).unwrap());
+                        }))
+                    };
+                    (measure("xla"), measure("fourstep"))
+                }
+                None => (None, None),
+            };
+
+            Row {
+                n,
+                fftw_ms,
+                cufft_ms,
+                ours_ms,
+                sim_fftw_ms: gpusim::fftw_cpu_time(n, 1, &cpu) * 1e3,
+                sim_cufft_ms: gpusim::vendor_like(n, 1, &gpu).predict(&gpu).total_ms(),
+                sim_ours_ms: gpusim::tiled(n, 1, TiledOptions::default(), &gpu)
+                    .predict(&gpu)
+                    .total_ms(),
+            }
+        })
+        .collect()
+}
+
+/// Render rows next to the paper's numbers.
+pub fn render(rows: &[Row]) -> String {
+    let fmt = |v: Option<f64>| v.map(|x| format!("{x:.4}")).unwrap_or_else(|| "-".into());
+    let mut out: Vec<[String; 10]> = vec![[
+        "N".into(),
+        "fftw(host)".into(),
+        "cufft-role".into(),
+        "ours".into(),
+        "sim fftw".into(),
+        "sim cufft".into(),
+        "sim ours".into(),
+        "paper fftw".into(),
+        "paper cufft".into(),
+        "paper ours".into(),
+    ]];
+    for r in rows {
+        let p = paper_row(r.n);
+        out.push([
+            r.n.to_string(),
+            format!("{:.4}", r.fftw_ms),
+            fmt(r.cufft_ms),
+            fmt(r.ours_ms),
+            format!("{:.4}", r.sim_fftw_ms),
+            format!("{:.4}", r.sim_cufft_ms),
+            format!("{:.4}", r.sim_ours_ms),
+            p.map(|p| format!("{:.4}", p.fftw_ms)).unwrap_or_else(|| "-".into()),
+            p.map(|p| format!("{:.4}", p.cufft_ms)).unwrap_or_else(|| "-".into()),
+            p.map(|p| format!("{:.4}", p.ours_ms)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    render_table(&out)
+}
+
+/// CSV rows (for EXPERIMENTS.md / plotting).
+pub fn csv(rows: &[Row]) -> String {
+    let mut s = String::from(
+        "n,fftw_host_ms,cufft_role_ms,ours_ms,sim_fftw_ms,sim_cufft_ms,sim_ours_ms,paper_fftw_ms,paper_cufft_ms,paper_ours_ms\n",
+    );
+    let fmt = |v: Option<f64>| v.map(|x| format!("{x:.6}")).unwrap_or_default();
+    for r in rows {
+        let p = paper_row(r.n);
+        s.push_str(&format!(
+            "{},{:.6},{},{},{:.6},{:.6},{:.6},{},{},{}\n",
+            r.n,
+            r.fftw_ms,
+            fmt(r.cufft_ms),
+            fmt(r.ours_ms),
+            r.sim_fftw_ms,
+            r.sim_cufft_ms,
+            r.sim_ours_ms,
+            p.map(|p| p.fftw_ms.to_string()).unwrap_or_default(),
+            p.map(|p| p.cufft_ms.to_string()).unwrap_or_default(),
+            p.map(|p| p.ours_ms.to_string()).unwrap_or_default(),
+        ));
+    }
+    s
+}
+
+/// The paper's sweep sizes.
+pub fn paper_sizes() -> Vec<usize> {
+    TABLE1.iter().map(|r| r.n).collect()
+}
+
+/// CPU baseline: a quick native run used by tests (no engine needed).
+pub fn fftw_role_only(sizes: &[usize], reps: usize) -> Vec<(usize, f64)> {
+    run(None, sizes, reps).into_iter().map(|r| (r.n, r.fftw_ms)).collect()
+}
+
+/// Sanity: plan reuse means repeated transforms don't re-plan.
+pub fn plan_once_execute_many(n: usize, execs: usize) -> f64 {
+    let plan = FftPlan::new(n, Algorithm::Auto);
+    let mut rng = Xoshiro256::seeded(1);
+    let mut buf: Vec<C32> = rng.complex_vec(n);
+    let t = Timer::start();
+    for _ in 0..execs {
+        plan.forward(&mut buf);
+    }
+    t.elapsed_ms() / execs as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulator_rows_reproduce_paper_shape() {
+        let rows = run(None, &paper_sizes(), 1);
+        for r in &rows {
+            // Claim 1: simulated FFTW wins below the crossover.
+            if r.n < 8192 {
+                assert!(r.sim_fftw_ms < r.sim_ours_ms, "n={}", r.n);
+            }
+            // Claim 2: ours beats the vendor role in the moderate band.
+            if (4096..=65536).contains(&r.n) {
+                assert!(
+                    r.sim_cufft_ms / r.sim_ours_ms > 1.15,
+                    "n={}: sim speedup {:.2}",
+                    r.n,
+                    r.sim_cufft_ms / r.sim_ours_ms
+                );
+            }
+        }
+        // Claim 3: ours beats FFTW at 65536 by ~2x.
+        let last = rows.last().unwrap();
+        assert!(last.sim_fftw_ms / last.sim_ours_ms > 1.8);
+    }
+
+    #[test]
+    fn simulated_values_within_2x_of_paper() {
+        // Shape, not absolute — but the calibrated model should land within
+        // a factor of ~2.5 of every published cell. Exception: the paper's
+        // own FFTW column is non-monotone below n=1024 (256 is *slower*
+        // than 1024 in their Table 1 — measurement noise at the µs scale),
+        // so the small-n FFTW cells are not meaningful calibration targets.
+        for r in run(None, &paper_sizes(), 1) {
+            let p = paper_row(r.n).unwrap();
+            let mut cells = vec![(r.sim_cufft_ms, p.cufft_ms), (r.sim_ours_ms, p.ours_ms)];
+            if r.n >= 1024 {
+                cells.push((r.sim_fftw_ms, p.fftw_ms));
+            }
+            for (sim, paper) in cells {
+                let ratio = sim / paper;
+                assert!(
+                    (0.35..=2.5).contains(&ratio),
+                    "n={}: sim {sim:.4} vs paper {paper:.4} (ratio {ratio:.2})",
+                    r.n
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn host_fftw_measurement_is_positive_and_scales() {
+        let rows = fftw_role_only(&[64, 4096], 3);
+        assert!(rows.iter().all(|(_, ms)| *ms > 0.0));
+        assert!(rows[1].1 > rows[0].1, "4096 must cost more than 64");
+    }
+
+    #[test]
+    fn render_and_csv_contain_paper_columns() {
+        let rows = run(None, &[16, 65536], 1);
+        let t = render(&rows);
+        assert!(t.contains("paper ours"));
+        assert!(t.contains("65536"));
+        let c = csv(&rows);
+        assert!(c.lines().count() == 3);
+        assert!(c.contains("0.015377")); // paper value for n=16
+    }
+}

@@ -1,0 +1,33 @@
+//! # memfft — memory-optimized hierarchical FFT
+//!
+//! Production-grade reproduction of *"A GPU Based Memory Optimized Parallel
+//! Method For FFT Implementation"* (Zhang, Hu, Yin, Hu — 2017) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 1** (`python/compile/kernels/`): the paper's tiled,
+//!   twiddle-LUT FFT as Pallas kernels (VMEM tile = shared-memory analog).
+//! - **Layer 2** (`python/compile/model.py`): JAX compute graphs (1-D/2-D
+//!   FFT pipelines, SAR range–Doppler) lowered AOT to HLO text artifacts.
+//! - **Layer 3** (this crate): coordinator + PJRT runtime that serves FFT
+//!   requests from compiled artifacts, plus every substrate the paper's
+//!   evaluation needs: a CPU FFT library (the FFTW comparator), a
+//!   Fermi-class GPU memory-hierarchy simulator (the Tesla C2070 stand-in),
+//!   and a synthetic SAR workload.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod fft;
+pub mod gpusim;
+pub mod harness;
+pub mod runtime;
+pub mod sar;
+pub mod metrics;
+pub mod testing;
+pub mod util;
+
+pub use util::complex::{C32, C64};

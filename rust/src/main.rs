@@ -1,0 +1,242 @@
+//! memfft CLI — the launcher.
+//!
+//! Subcommands map to the deliverables:
+//!   serve     run the FFT service under a synthetic workload, print metrics
+//!   table1    regenerate the paper's Table 1 (measured + simulated)
+//!   figs      regenerate Figs 7–10 speedup series
+//!   ablation  A1–A3 optimization ablations + tile sweep
+//!   sim       device model: Fig-3 memory histogram, schedule breakdowns
+//!   sar       end-to-end SAR demo (CPU path; see examples/sar_imaging.rs
+//!             for the AOT path)
+
+use memfft::cli::{Cli, CliError, Command};
+use memfft::config::ServiceConfig;
+use memfft::coordinator::{Direction, FftService};
+use memfft::gpusim::{self, GpuDescriptor, TiledOptions};
+use memfft::harness::{ablation, figs, table1};
+use memfft::runtime::Engine;
+use memfft::sar;
+use memfft::util::{Timer, Xoshiro256};
+
+fn cli() -> Cli {
+    Cli::new("memfft", "memory-optimized hierarchical FFT service (paper reproduction)")
+        .command(
+            Command::new("serve", "run the FFT service under a synthetic workload")
+                .arg_default("config", "", "TOML config path (optional)")
+                .arg_default("method", "fourstep", "fourstep|stockham|perlevel|xla|native")
+                .arg_default("artifacts", "artifacts", "artifact directory")
+                .arg_default("workers", "2", "worker threads")
+                .arg_default("requests", "200", "synthetic requests to issue")
+                .arg_default("sizes", "1024,4096,16384", "request sizes (comma)"),
+        )
+        .command(
+            Command::new("table1", "regenerate paper Table 1")
+                .arg_default("artifacts", "artifacts", "artifact directory")
+                .arg_default("reps", "5", "measurement repetitions")
+                .flag("sim-only", "skip PJRT measurement"),
+        )
+        .command(
+            Command::new("figs", "regenerate Figs 7-10 speedup series")
+                .arg_default("artifacts", "artifacts", "artifact directory")
+                .arg_default("reps", "3", "measurement repetitions")
+                .flag("sim-only", "skip PJRT measurement"),
+        )
+        .command(Command::new("ablation", "A1-A3 ablations + tile sweep"))
+        .command(Command::new("sim", "device model details (Fig 3, schedules)"))
+        .command(
+            Command::new("sar", "SAR range-Doppler demo (CPU path)")
+                .arg_default("naz", "256", "azimuth lines")
+                .arg_default("nr", "1024", "range samples"),
+        )
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match cli().parse(&argv) {
+        Ok(a) => a,
+        Err(CliError::Help) => return,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprintln!("{}", cli().usage());
+            std::process::exit(2);
+        }
+    };
+    let result = match parsed.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&parsed),
+        Some("table1") => cmd_table1(&parsed),
+        Some("figs") => cmd_figs(&parsed),
+        Some("ablation") => cmd_ablation(),
+        Some("sim") => cmd_sim(),
+        Some("sar") => cmd_sar(&parsed),
+        _ => {
+            println!("{}", cli().usage());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_serve(args: &memfft::cli::Args) -> anyhow::Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(p) if !p.is_empty() => ServiceConfig::load(p)?,
+        _ => ServiceConfig::default(),
+    };
+    let method = args.get_or("method", "fourstep").to_string();
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+    cfg.method = method;
+    cfg.artifacts_dir = artifacts;
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    cfg.validate()?;
+    let requests = args.get_usize("requests", 200)?;
+    let sizes = args.get_usize_list("sizes", &[1024, 4096, 16384])?;
+
+    println!("starting service: method={} workers={}", cfg.method, cfg.workers);
+    let svc = FftService::start(cfg);
+    let mut rng = Xoshiro256::seeded(42);
+    let t = Timer::start();
+    let mut pending = Vec::new();
+    for _ in 0..requests {
+        let n = *rng.choose(&sizes);
+        match svc.submit(n, Direction::Forward, rng.real_vec(n), rng.real_vec(n)) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => println!("rejected: {e}"),
+        }
+    }
+    let mut ok = 0;
+    for rx in pending {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let elapsed = t.elapsed();
+    println!(
+        "{ok}/{requests} ok in {:.1} ms  ({:.0} req/s)",
+        elapsed.as_secs_f64() * 1e3,
+        ok as f64 / elapsed.as_secs_f64()
+    );
+    println!("{}", svc.metrics().report());
+    svc.shutdown();
+    Ok(())
+}
+
+fn engine_if_available(args: &memfft::cli::Args) -> Option<Engine> {
+    if args.flag("sim-only") {
+        return None;
+    }
+    let dir = args.get_or("artifacts", "artifacts");
+    match Engine::new(dir) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("note: no artifacts ({e}); simulator-only output");
+            None
+        }
+    }
+}
+
+fn cmd_table1(args: &memfft::cli::Args) -> anyhow::Result<()> {
+    let reps = args.get_usize("reps", 5)?;
+    let engine = engine_if_available(args);
+    let rows = table1::run(engine.as_ref(), &table1::paper_sizes(), reps);
+    println!("Table 1 — times in ms (measured on this host; sim = C2070 model):\n");
+    println!("{}", table1::render(&rows));
+    Ok(())
+}
+
+fn cmd_figs(args: &memfft::cli::Args) -> anyhow::Result<()> {
+    let reps = args.get_usize("reps", 3)?;
+    let engine = engine_if_available(args);
+    let sizes = table1::paper_sizes();
+    let rows = table1::run(engine.as_ref(), &sizes, reps);
+    println!("{}", figs::render("Fig 7-8  speedup vs FFTW", &figs::fftw_speedup(&rows)));
+    println!("{}", figs::render("Fig 9-10 speedup vs CUFFT", &figs::cufft_speedup(&rows)));
+    println!(
+        "{}",
+        figs::render("kernel-only vs CUFFT", &figs::cufft_kernel_speedup(&sizes))
+    );
+    println!(
+        "{}",
+        figs::render("tiled vs per-level (Fig 2 vs 4/5)", &figs::perlevel_speedup(&sizes))
+    );
+    if let Some(x) = figs::fftw_crossover(&sizes) {
+        println!("FFTW/GPU crossover at N = {x} (paper: ≈8192)");
+    }
+    Ok(())
+}
+
+fn cmd_ablation() -> anyhow::Result<()> {
+    let rows = ablation::run(&[1024, 4096, 16384, 65536]);
+    println!("Ablations (simulated C2070, ms):\n\n{}", ablation::render(&rows));
+    println!("Tile sweep at N=65536 (kernel-only µs):");
+    for (tile, us) in ablation::tile_sweep(65536, &[64, 128, 256, 512, 1024, 2048]) {
+        println!("  tile {tile:>5}: {us:.1}");
+    }
+    Ok(())
+}
+
+fn cmd_sim() -> anyhow::Result<()> {
+    let gpu = GpuDescriptor::tesla_c2070();
+    println!(
+        "Device: {} ({} SMs, {:.2} TFLOP/s)\n",
+        gpu.name,
+        gpu.sm_count,
+        gpu.peak_flops() / 1e12
+    );
+    println!("Memory hierarchy (paper Fig 3):");
+    for s in gpu.memory_histogram() {
+        println!(
+            "  {:<9} {:>8.1} GB/s  {:>6.0} cycles  {:>12} B",
+            s.space.name(),
+            s.bandwidth / 1e9,
+            s.latency_cycles,
+            s.capacity_bytes
+        );
+    }
+    for n in [1024usize, 65536] {
+        println!("\nSchedules at N={n}:");
+        for sched in [
+            gpusim::per_level(n, 1, &gpu),
+            gpusim::tiled(n, 1, TiledOptions::default(), &gpu),
+            gpusim::vendor_like(n, 1, &gpu),
+        ] {
+            let r = sched.predict(&gpu);
+            println!(
+                "  {:<16} {:>8.1} µs  (exec {:.1} + launch {:.1} + xfer {:.1} + fixed {:.1})  traffic {:.0} KB  kernels {}",
+                r.name,
+                r.total_s * 1e6,
+                r.exec_s * 1e6,
+                r.launch_s * 1e6,
+                r.transfer_s * 1e6,
+                r.overhead_s * 1e6,
+                r.global_traffic / 1024.0,
+                r.per_kernel_s.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sar(args: &memfft::cli::Args) -> anyhow::Result<()> {
+    let naz = args.get_usize("naz", 256)?;
+    let nr = args.get_usize("nr", 1024)?;
+    let scene = sar::Scene::demo(naz, nr);
+    println!("scene: {naz}x{nr}, {} targets", scene.targets.len());
+    let raw = scene.raw_echo(7);
+    let t = Timer::start();
+    let focused = sar::process_cpu(&raw, naz, nr);
+    let ms = t.elapsed_ms();
+    let m = sar::measure(&focused.image, naz, nr);
+    println!("processed in {ms:.1} ms ({:.1} Mpix/s)", (naz * nr) as f64 / ms / 1e3);
+    println!(
+        "peak at {:?}, contrast {:.0}x, mainlobe energy {:.0}%",
+        m.peak,
+        m.peak_to_median,
+        m.mainlobe_energy_ratio * 100.0
+    );
+    for (want, found) in sar::locate_targets(&focused.image, &scene, 1) {
+        println!("  target {want:?} -> {found:?}");
+    }
+    Ok(())
+}

@@ -1,0 +1,321 @@
+//! Service metrics: counters, gauges, latency histograms with percentile
+//! queries, and throughput meters. Used by the coordinator's hot path, so
+//! recording is lock-free (atomics) where it matters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Self {
+        Self { value: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram with logarithmic buckets from 1 µs to ~17 s.
+///
+/// Log-bucketed so recording is one atomic increment; percentile queries
+/// interpolate within a bucket. Accurate to ~±4% per bucket, plenty for
+/// p50/p95/p99 service reporting.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    /// bucket i covers [base * g^i, base * g^(i+1)) with g = 2^(1/4).
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+const HIST_BASE_NS: f64 = 1_000.0; // 1 µs
+const HIST_GROWTH: f64 = 1.189_207_115_002_721; // 2^(1/4)
+const HIST_BUCKETS: usize = 100; // covers up to ~ 1µs * 2^25 ≈ 33 s
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(ns: f64) -> usize {
+        if ns <= HIST_BASE_NS {
+            return 0;
+        }
+        let i = ((ns / HIST_BASE_NS).ln() / HIST_GROWTH.ln()).floor() as usize;
+        i.min(HIST_BUCKETS - 1)
+    }
+
+    /// Lower edge of bucket i, in ns.
+    fn bucket_edge(i: usize) -> f64 {
+        HIST_BASE_NS * HIST_GROWTH.powi(i as i32)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        self.buckets[Self::bucket_index(ns as f64)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns.load(Ordering::Relaxed))
+    }
+
+    /// Percentile (0-100) with intra-bucket linear interpolation.
+    pub fn percentile(&self, pct: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (pct / 100.0 * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for i in 0..HIST_BUCKETS {
+            let c = self.buckets[i].load(Ordering::Relaxed);
+            if seen + c >= target {
+                let frac = if c == 0 { 0.0 } else { (target - seen) as f64 / c as f64 };
+                let lo = Self::bucket_edge(i);
+                let hi = Self::bucket_edge(i + 1);
+                return Duration::from_nanos((lo + frac * (hi - lo)) as u64);
+            }
+            seen += c;
+        }
+        self.max()
+    }
+
+    pub fn summary(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={} p50={} p95={} p99={} max={}",
+            self.count(),
+            crate::util::timer::fmt_duration(self.mean()),
+            crate::util::timer::fmt_duration(self.percentile(50.0)),
+            crate::util::timer::fmt_duration(self.percentile(95.0)),
+            crate::util::timer::fmt_duration(self.percentile(99.0)),
+            crate::util::timer::fmt_duration(self.max()),
+        )
+    }
+}
+
+/// Throughput meter: events + payload over a wall-clock window.
+#[derive(Debug)]
+pub struct Meter {
+    start: Mutex<Instant>,
+    events: Counter,
+    payload: Counter,
+}
+
+impl Default for Meter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Meter {
+    pub fn new() -> Self {
+        Self {
+            start: Mutex::new(Instant::now()),
+            events: Counter::new(),
+            payload: Counter::new(),
+        }
+    }
+
+    pub fn record(&self, payload: u64) {
+        self.events.inc();
+        self.payload.add(payload);
+    }
+
+    pub fn events_per_sec(&self) -> f64 {
+        let elapsed = self.start.lock().unwrap().elapsed().as_secs_f64();
+        if elapsed == 0.0 {
+            0.0
+        } else {
+            self.events.get() as f64 / elapsed
+        }
+    }
+
+    pub fn payload_per_sec(&self) -> f64 {
+        let elapsed = self.start.lock().unwrap().elapsed().as_secs_f64();
+        if elapsed == 0.0 {
+            0.0
+        } else {
+            self.payload.get() as f64 / elapsed
+        }
+    }
+
+    pub fn reset(&self) {
+        *self.start.lock().unwrap() = Instant::now();
+    }
+}
+
+/// The coordinator's metric bundle (one per service instance).
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub requests_in: Counter,
+    pub requests_done: Counter,
+    pub requests_failed: Counter,
+    pub requests_rejected: Counter,
+    pub batches_executed: Counter,
+    pub batch_fill: Counter, // sum of batch sizes, for mean fill = fill/batches
+    pub plan_cache_hits: Counter,
+    pub plan_cache_misses: Counter,
+    pub queue_latency: LatencyHistogram,
+    pub exec_latency: LatencyHistogram,
+    pub e2e_latency: LatencyHistogram,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn mean_batch_fill(&self) -> f64 {
+        let b = self.batches_executed.get();
+        if b == 0 {
+            0.0
+        } else {
+            self.batch_fill.get() as f64 / b as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests: in={} done={} failed={} rejected={}\n",
+            self.requests_in.get(),
+            self.requests_done.get(),
+            self.requests_failed.get(),
+            self.requests_rejected.get()
+        ));
+        s.push_str(&format!(
+            "batches: {} (mean fill {:.2})  plan-cache: {} hits / {} misses\n",
+            self.batches_executed.get(),
+            self.mean_batch_fill(),
+            self.plan_cache_hits.get(),
+            self.plan_cache_misses.get()
+        ));
+        s.push_str(&self.queue_latency.summary("queue"));
+        s.push('\n');
+        s.push_str(&self.exec_latency.summary("exec"));
+        s.push('\n');
+        s.push_str(&self.e2e_latency.summary("e2e"));
+        s.push('\n');
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent() {
+        let c = std::sync::Arc::new(Counter::new());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p95 && p95 <= p99, "{p50:?} {p95:?} {p99:?}");
+        // p50 of uniform 1..1000 µs should be around 500 µs (±bucket error).
+        let p50_us = p50.as_secs_f64() * 1e6;
+        assert!((400.0..650.0).contains(&p50_us), "p50 {p50_us} µs");
+        assert_eq!(h.count(), 1000);
+        assert!(h.summary("t").contains("n=1000"));
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile(99.0), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn histogram_extremes_clamped() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_nanos(1)); // below base bucket
+        h.record(Duration::from_secs(100)); // beyond last bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(100.0) >= h.percentile(1.0));
+    }
+
+    #[test]
+    fn meter_rates() {
+        let m = Meter::new();
+        m.record(100);
+        m.record(300);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(m.events_per_sec() > 0.0);
+        assert!(m.payload_per_sec() > m.events_per_sec());
+    }
+
+    #[test]
+    fn service_metrics_report() {
+        let m = ServiceMetrics::new();
+        m.requests_in.inc();
+        m.batches_executed.inc();
+        m.batch_fill.add(7);
+        assert_eq!(m.mean_batch_fill(), 7.0);
+        assert!(m.report().contains("mean fill 7.00"));
+    }
+}

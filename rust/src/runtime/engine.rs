@@ -1,0 +1,232 @@
+//! PJRT engine: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Threading model: `PjRtClient` in the `xla` crate is `Rc`-based (not
+//! `Send`), so an `Engine` is **thread-confined** — each coordinator worker
+//! thread constructs its own. Raw `f32` buffers (which are `Send`) cross
+//! thread boundaries; `Literal`s are built and consumed inside the worker.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use super::manifest::{ArtifactEntry, ArtifactIndex, ManifestError};
+
+/// Build an f32 literal of the given dims in ONE copy (§Perf iter 4:
+/// `Literal::vec1(..).reshape(..)` costs two copies plus an XLA reshape).
+fn f32_literal(dims: &[usize], data: &[f32]) -> Result<xla::Literal, EngineError> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("manifest: {0}")]
+    Manifest(#[from] ManifestError),
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("artifact '{0}' not found in index")]
+    UnknownArtifact(String),
+    #[error("shape mismatch: expected {expected} f32s, got {got}")]
+    Shape { expected: usize, got: usize },
+}
+
+impl From<xla::Error> for EngineError {
+    fn from(e: xla::Error) -> Self {
+        EngineError::Xla(e.to_string())
+    }
+}
+
+/// Result of one FFT execution: interleaved-free (re, im) planes.
+pub struct FftOutput {
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+    /// PJRT execute wall time (excludes compile).
+    pub exec_time: std::time::Duration,
+}
+
+/// Compile statistics for observability / EXPERIMENTS.md.
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub compile_time: std::time::Duration,
+    pub executions: u64,
+    pub exec_time: std::time::Duration,
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    index: ArtifactIndex,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// CPU-PJRT engine over an artifact directory (expects `manifest.txt`).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self, EngineError> {
+        let index = ArtifactIndex::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            index,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn index(&self) -> &ArtifactIndex {
+        &self.index
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by name (cached). First call pays the
+    /// XLA compile; subsequent calls are a map lookup.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>, EngineError> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .index
+            .get(name)
+            .ok_or_else(|| EngineError::UnknownArtifact(name.to_string()))?
+            .clone();
+        let path = self.index.path(&entry);
+        let t = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.compiles += 1;
+            stats.compile_time += t.elapsed();
+        }
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Is the artifact already compiled? (plan-cache introspection)
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.cache.borrow().contains_key(name)
+    }
+
+    /// Warm the cache for every (op, method) artifact — the launcher calls
+    /// this at startup so the request path never compiles.
+    pub fn warmup(&self, op: &str, method: &str) -> Result<usize, EngineError> {
+        let names: Vec<String> = self
+            .index
+            .entries()
+            .iter()
+            .filter(|e| e.op == op && e.method == method)
+            .map(|e| e.name.clone())
+            .collect();
+        let count = names.len();
+        for name in names {
+            self.load(&name)?;
+        }
+        Ok(count)
+    }
+
+    /// Warm only specific sizes (all batch variants) — cheaper startup when
+    /// the served size set is known from config.
+    pub fn warmup_sizes(
+        &self,
+        op: &str,
+        method: &str,
+        sizes: &[usize],
+    ) -> Result<usize, EngineError> {
+        let names: Vec<String> = self
+            .index
+            .entries()
+            .iter()
+            .filter(|e| e.op == op && e.method == method && sizes.contains(&e.n))
+            .map(|e| e.name.clone())
+            .collect();
+        let count = names.len();
+        for name in names {
+            self.load(&name)?;
+        }
+        Ok(count)
+    }
+
+    /// Execute an `fft`/`ifft` artifact: inputs are `[batch, n]` f32 planes.
+    pub fn run_fft(
+        &self,
+        entry: &ArtifactEntry,
+        re: &[f32],
+        im: &[f32],
+    ) -> Result<FftOutput, EngineError> {
+        let expected = entry.batch * entry.n;
+        if re.len() != expected || im.len() != expected {
+            return Err(EngineError::Shape { expected, got: re.len().min(im.len()) });
+        }
+        let exe = self.load(&entry.name)?;
+        let dims = [entry.batch, entry.n];
+        let lre = f32_literal(&dims, re)?;
+        let lim = f32_literal(&dims, im)?;
+        let t = Instant::now();
+        let result = exe.execute::<xla::Literal>(&[lre, lim])?[0][0].to_literal_sync()?;
+        let exec_time = t.elapsed();
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.executions += 1;
+            stats.exec_time += exec_time;
+        }
+        let (ore, oim) = result.to_tuple2()?;
+        Ok(FftOutput { re: ore.to_vec::<f32>()?, im: oim.to_vec::<f32>()?, exec_time })
+    }
+
+    /// Execute the SAR artifact: raw [naz, nr] planes + range filter [nr]
+    /// + azimuth filter [naz]; returns the focused image planes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_sar(
+        &self,
+        entry: &ArtifactEntry,
+        naz: usize,
+        nr: usize,
+        raw_re: &[f32],
+        raw_im: &[f32],
+        rfilt_re: &[f32],
+        rfilt_im: &[f32],
+        afilt_re: &[f32],
+        afilt_im: &[f32],
+    ) -> Result<FftOutput, EngineError> {
+        if raw_re.len() != naz * nr {
+            return Err(EngineError::Shape { expected: naz * nr, got: raw_re.len() });
+        }
+        let exe = self.load(&entry.name)?;
+        let dims = [naz, nr];
+        let args = [
+            f32_literal(&dims, raw_re)?,
+            f32_literal(&dims, raw_im)?,
+            f32_literal(&[nr], rfilt_re)?,
+            f32_literal(&[nr], rfilt_im)?,
+            f32_literal(&[naz], afilt_re)?,
+            f32_literal(&[naz], afilt_im)?,
+        ];
+        let t = Instant::now();
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let exec_time = t.elapsed();
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.executions += 1;
+            stats.exec_time += exec_time;
+        }
+        let (ore, oim) = result.to_tuple2()?;
+        Ok(FftOutput { re: ore.to_vec::<f32>()?, im: oim.to_vec::<f32>()?, exec_time })
+    }
+}

@@ -1,0 +1,204 @@
+//! Artifact manifest: the index `python/compile/aot.py` writes next to the
+//! HLO text files, mapping (op, method, n, batch) to artifact names.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// "fft" | "ifft" | "sar"
+    pub op: String,
+    /// "fourstep" | "stockham" | "perlevel" | "xla"
+    pub method: String,
+    pub n: usize,
+    pub batch: usize,
+    pub extra: String,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("manifest io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest line {0}: expected >=6 tab-separated fields, got '{1}'")]
+    Malformed(usize, String),
+    #[error("no artifact for op={op} method={method} n={n} batch>={batch} (have batches {available:?})")]
+    NoVariant { op: String, method: String, n: usize, batch: usize, available: Vec<usize> },
+}
+
+/// Parsed manifest with fast lookups.
+#[derive(Debug, Default, Clone)]
+pub struct ArtifactIndex {
+    pub dir: PathBuf,
+    entries: Vec<ArtifactEntry>,
+    /// (op, method, n) -> batches available, ascending.
+    by_key: BTreeMap<(String, String, usize), Vec<usize>>,
+}
+
+impl ArtifactIndex {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self, ManifestError> {
+        let mut idx = Self { dir, ..Default::default() };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() < 6 {
+                return Err(ManifestError::Malformed(lineno + 1, line.to_string()));
+            }
+            let entry = ArtifactEntry {
+                name: f[0].to_string(),
+                file: f[1].to_string(),
+                op: f[2].to_string(),
+                method: f[3].to_string(),
+                n: f[4].parse().map_err(|_| ManifestError::Malformed(lineno + 1, line.into()))?,
+                batch: f[5].parse().map_err(|_| ManifestError::Malformed(lineno + 1, line.into()))?,
+                extra: f.get(6).unwrap_or(&"").to_string(),
+            };
+            idx.by_key
+                .entry((entry.op.clone(), entry.method.clone(), entry.n))
+                .or_default()
+                .push(entry.batch);
+            idx.entries.push(entry);
+        }
+        for batches in idx.by_key.values_mut() {
+            batches.sort_unstable();
+            batches.dedup();
+        }
+        Ok(idx)
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Smallest artifact batch variant that covers `batch` requests of size
+    /// `n` — the coordinator pads the batch up to it. Falls back to the
+    /// largest available (the caller then splits the batch).
+    pub fn find_fft(
+        &self,
+        op: &str,
+        method: &str,
+        n: usize,
+        batch: usize,
+    ) -> Result<&ArtifactEntry, ManifestError> {
+        let batches = self
+            .by_key
+            .get(&(op.to_string(), method.to_string(), n))
+            .ok_or_else(|| ManifestError::NoVariant {
+                op: op.into(),
+                method: method.into(),
+                n,
+                batch,
+                available: vec![],
+            })?;
+        let chosen = batches
+            .iter()
+            .copied()
+            .find(|&b| b >= batch)
+            .unwrap_or(*batches.last().unwrap());
+        self.entries
+            .iter()
+            .find(|e| e.op == op && e.method == method && e.n == n && e.batch == chosen)
+            .ok_or_else(|| ManifestError::NoVariant {
+                op: op.into(),
+                method: method.into(),
+                n,
+                batch,
+                available: batches.clone(),
+            })
+    }
+
+    /// Sizes available for (op, method), ascending.
+    pub fn sizes(&self, op: &str, method: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .by_key
+            .keys()
+            .filter(|(o, m, _)| o == op && m == method)
+            .map(|(_, _, n)| *n)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Max batch variant available for (op, method, n).
+    pub fn max_batch(&self, op: &str, method: &str, n: usize) -> Option<usize> {
+        self.by_key
+            .get(&(op.to_string(), method.to_string(), n))
+            .and_then(|b| b.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# name\tfile\top\tmethod\tn\tbatch\textra
+fft_fourstep_n16_b1\tfft_fourstep_n16_b1.hlo.txt\tfft\tfourstep\t16\t1\t
+fft_fourstep_n16_b8\tfft_fourstep_n16_b8.hlo.txt\tfft\tfourstep\t16\t8\t
+fft_fourstep_n1024_b1\tfft_fourstep_n1024_b1.hlo.txt\tfft\tfourstep\t1024\t1\t
+sar_fourstep_256x1024\tsar_fourstep_256x1024.hlo.txt\tsar\tfourstep\t1024\t256\tnaz=256,nr=1024
+";
+
+    fn idx() -> ArtifactIndex {
+        ArtifactIndex::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap()
+    }
+
+    #[test]
+    fn parses_entries_and_paths() {
+        let i = idx();
+        assert_eq!(i.entries().len(), 4);
+        let e = i.get("fft_fourstep_n16_b8").unwrap();
+        assert_eq!(e.batch, 8);
+        assert_eq!(i.path(e), PathBuf::from("/tmp/a/fft_fourstep_n16_b8.hlo.txt"));
+    }
+
+    #[test]
+    fn find_fft_picks_smallest_covering_batch() {
+        let i = idx();
+        assert_eq!(i.find_fft("fft", "fourstep", 16, 1).unwrap().batch, 1);
+        assert_eq!(i.find_fft("fft", "fourstep", 16, 2).unwrap().batch, 8);
+        assert_eq!(i.find_fft("fft", "fourstep", 16, 8).unwrap().batch, 8);
+        // Over the max: returns largest (caller splits).
+        assert_eq!(i.find_fft("fft", "fourstep", 16, 100).unwrap().batch, 8);
+    }
+
+    #[test]
+    fn missing_variant_is_error_with_context() {
+        let i = idx();
+        let err = i.find_fft("fft", "fourstep", 999, 1).unwrap_err();
+        assert!(err.to_string().contains("n=999"));
+    }
+
+    #[test]
+    fn sizes_and_max_batch() {
+        let i = idx();
+        assert_eq!(i.sizes("fft", "fourstep"), vec![16, 1024]);
+        assert_eq!(i.max_batch("fft", "fourstep", 16), Some(8));
+        assert_eq!(i.max_batch("fft", "fourstep", 7), None);
+    }
+
+    #[test]
+    fn rejects_malformed_line() {
+        let err = ArtifactIndex::parse("bad line no tabs\n", PathBuf::new()).unwrap_err();
+        assert!(matches!(err, ManifestError::Malformed(1, _)));
+    }
+}

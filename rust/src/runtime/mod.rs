@@ -1,0 +1,12 @@
+//! Runtime: PJRT-backed execution of the AOT artifacts.
+//!
+//! `manifest` indexes what `python/compile/aot.py` built; `engine` loads
+//! HLO text, compiles through the `xla` crate's PJRT CPU client, and
+//! executes with f32-plane marshalling. Thread-confined by design (see
+//! engine.rs); the coordinator gives each worker thread its own Engine.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EngineError, EngineStats, FftOutput};
+pub use manifest::{ArtifactEntry, ArtifactIndex, ManifestError};

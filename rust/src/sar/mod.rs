@@ -1,0 +1,15 @@
+//! SAR workload substrate: the paper's motivating application (§3).
+//!
+//! `chirp` builds LFM pulses and matched filters, `scene` synthesizes
+//! point-target raw echoes (replacing unavailable airborne data), and
+//! `rda` is the range–Doppler processor with focusing-quality metrics.
+//! The AOT path (same math through the `sar_*` artifacts) is exercised by
+//! `examples/sar_imaging.rs` and `benches/sar.rs`.
+
+pub mod chirp;
+pub mod rda;
+pub mod scene;
+
+pub use chirp::{compress, lfm_chirp, matched_filter};
+pub use rda::{filters, locate_targets, measure, process_cpu, Focused, ImageMetrics};
+pub use scene::{PointTarget, Scene};

@@ -1,0 +1,184 @@
+//! Range–Doppler processor + image quality metrics.
+//!
+//! Two execution paths over identical math:
+//! - [`process_cpu`]: the in-process Rust FFT library (baseline / oracle);
+//! - the AOT path: `examples/sar_imaging.rs` feeds the same filters to the
+//!   `sar_fourstep_*` artifact through `runtime::Engine::run_sar`.
+//!
+//! Pipeline (no RCMC — targets near swath centre, see DESIGN.md):
+//!   range:   per azimuth line,  IFFT( FFT(line) · Hr )
+//!   azimuth: per range column,  IFFT( FFT(col)  · Ha )
+
+use super::chirp::matched_filter;
+use super::scene::Scene;
+use crate::fft::plan::{Algorithm, FftPlan};
+use crate::util::complex::C32;
+
+/// Focused image + the filters used (so the AOT path can reuse them).
+pub struct Focused {
+    pub naz: usize,
+    pub nr: usize,
+    pub image: Vec<C32>,
+}
+
+/// Build the frequency-domain matched filters for a scene geometry.
+pub fn filters(naz: usize, nr: usize) -> (Vec<C32>, Vec<C32>) {
+    (matched_filter(nr), matched_filter(naz))
+}
+
+/// CPU range–Doppler processing of a raw echo matrix (row-major [naz, nr]).
+pub fn process_cpu(raw: &[C32], naz: usize, nr: usize) -> Focused {
+    assert_eq!(raw.len(), naz * nr);
+    let (rfilt, afilt) = filters(naz, nr);
+    let range_plan = FftPlan::new(nr, Algorithm::Auto);
+    let az_plan = FftPlan::new(naz, Algorithm::Auto);
+
+    let mut img = raw.to_vec();
+    // Range compression, row-wise.
+    for row in img.chunks_exact_mut(nr) {
+        range_plan.forward(row);
+        for (v, h) in row.iter_mut().zip(&rfilt) {
+            *v *= *h;
+        }
+        range_plan.inverse(row);
+    }
+    // Azimuth compression, column-wise (via transpose).
+    let mut t = vec![C32::ZERO; naz * nr];
+    crate::fft::fourstep::transpose(&img, &mut t, naz, nr);
+    for col in t.chunks_exact_mut(naz) {
+        az_plan.forward(col);
+        for (v, h) in col.iter_mut().zip(&afilt) {
+            *v *= *h;
+        }
+        az_plan.inverse(col);
+    }
+    crate::fft::fourstep::transpose(&t, &mut img, nr, naz);
+    Focused { naz, nr, image: img }
+}
+
+/// Image-quality metrics for focused point targets.
+#[derive(Debug, Clone)]
+pub struct ImageMetrics {
+    /// (azimuth, range) of the brightest pixel.
+    pub peak: (usize, usize),
+    pub peak_value: f32,
+    /// Peak over median magnitude — focus contrast.
+    pub peak_to_median: f32,
+    /// Fraction of total energy inside the 3x3 box around the peak.
+    pub mainlobe_energy_ratio: f32,
+}
+
+pub fn measure(img: &[C32], naz: usize, nr: usize) -> ImageMetrics {
+    let mags: Vec<f32> = img.iter().map(|v| v.abs()).collect();
+    let (mut peak_idx, mut peak) = (0usize, 0f32);
+    for (i, &m) in mags.iter().enumerate() {
+        if m > peak {
+            peak = m;
+            peak_idx = i;
+        }
+    }
+    let (pa, pr) = (peak_idx / nr, peak_idx % nr);
+    let mut sorted = mags.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = sorted[sorted.len() / 2].max(1e-12);
+
+    let total_energy: f64 = img.iter().map(|v| v.norm_sqr() as f64).sum();
+    let mut box_energy = 0f64;
+    for da in -1i64..=1 {
+        for dr in -1i64..=1 {
+            let a = pa as i64 + da;
+            let r = pr as i64 + dr;
+            if a >= 0 && (a as usize) < naz && r >= 0 && (r as usize) < nr {
+                box_energy += img[a as usize * nr + r as usize].norm_sqr() as f64;
+            }
+        }
+    }
+    ImageMetrics {
+        peak: (pa, pr),
+        peak_value: peak,
+        peak_to_median: peak / median,
+        mainlobe_energy_ratio: (box_energy / total_energy.max(1e-30)) as f32,
+    }
+}
+
+/// Validate that every scene target appears as a local peak within
+/// `tolerance` pixels. Returns per-target found positions.
+pub fn locate_targets(
+    img: &[C32],
+    scene: &Scene,
+    tolerance: usize,
+) -> Vec<((usize, usize), Option<(usize, usize)>)> {
+    let (naz, nr) = (scene.naz, scene.nr);
+    let mags: Vec<f32> = img.iter().map(|v| v.abs()).collect();
+    scene
+        .targets
+        .iter()
+        .map(|t| {
+            let want = (t.azimuth, t.range);
+            // Search the tolerance window for the local max.
+            let mut best: Option<((usize, usize), f32)> = None;
+            for a in t.azimuth.saturating_sub(tolerance)..=(t.azimuth + tolerance).min(naz - 1) {
+                for r in t.range.saturating_sub(tolerance)..=(t.range + tolerance).min(nr - 1) {
+                    let m = mags[a * nr + r];
+                    if best.map(|(_, b)| m > b).unwrap_or(true) {
+                        best = Some(((a, r), m));
+                    }
+                }
+            }
+            // A found target must beat the global median decisively.
+            let mut sorted = mags.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = sorted[sorted.len() / 2].max(1e-12);
+            let found = best.and_then(|(pos, m)| if m > 5.0 * median { Some(pos) } else { None });
+            (want, found)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_target_focuses_at_position() {
+        let scene = Scene::new(64, 128).with_target(20, 40, 1.0);
+        let raw = scene.raw_echo(3);
+        let focused = process_cpu(&raw, 64, 128);
+        let m = measure(&focused.image, 64, 128);
+        assert_eq!(m.peak, (20, 40), "peak at {:?}", m.peak);
+        assert!(m.peak_to_median > 20.0, "contrast {}", m.peak_to_median);
+    }
+
+    #[test]
+    fn multi_target_scene_all_found() {
+        let scene = Scene::demo(64, 128);
+        let raw = scene.raw_echo(4);
+        let focused = process_cpu(&raw, 64, 128);
+        for (want, found) in locate_targets(&focused.image, &scene, 1) {
+            let found = found.unwrap_or_else(|| panic!("target {want:?} not found"));
+            assert_eq!(found, want);
+        }
+    }
+
+    #[test]
+    fn noise_robustness() {
+        let scene = Scene::new(64, 128).with_target(30, 60, 1.0).with_noise(0.2);
+        let raw = scene.raw_echo(5);
+        let focused = process_cpu(&raw, 64, 128);
+        let m = measure(&focused.image, 64, 128);
+        assert_eq!(m.peak, (30, 60));
+    }
+
+    #[test]
+    fn metrics_mainlobe_concentration() {
+        let scene = Scene::new(32, 64).with_target(16, 32, 1.0);
+        let raw = scene.raw_echo(6);
+        let focused = process_cpu(&raw, 32, 64);
+        let m = measure(&focused.image, 32, 64);
+        assert!(
+            m.mainlobe_energy_ratio > 0.5,
+            "compressed point should concentrate energy, got {}",
+            m.mainlobe_energy_ratio
+        );
+    }
+}

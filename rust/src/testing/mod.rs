@@ -1,0 +1,190 @@
+//! Mini property-testing harness — the proptest stand-in (proptest is not
+//! in the vendored crate set).
+//!
+//! Design: a `Gen` wraps the seeded PRNG and exposes typed draws. `check`
+//! runs a property over N random cases; on failure it re-runs the property
+//! under a simple size-reduction schedule ("shrink-lite": retry with smaller
+//! size hints) and reports the seed + case index so any failure is exactly
+//! reproducible with `MEMFFT_PROPTEST_SEED`.
+
+use crate::util::complex::C32;
+use crate::util::prng::Xoshiro256;
+
+/// Random-value source handed to properties.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Size hint in [0, 1]; generators scale their output size by it during
+    /// shrinking.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256::seeded(seed), size: 1.0 }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// usize scaled by the shrink size hint (lower bound preserved).
+    pub fn sized_usize(&mut self, lo: usize, hi: usize) -> usize {
+        let scaled_hi = lo + (((hi - lo) as f64) * self.size).round() as usize;
+        self.usize(lo, scaled_hi.max(lo))
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool()
+    }
+
+    /// Power of two in [2^lo_log2, 2^hi_log2], scaled down when shrinking.
+    pub fn pow2(&mut self, lo_log2: u32, hi_log2: u32) -> usize {
+        let hi = lo_log2 + (((hi_log2 - lo_log2) as f64) * self.size).round() as u32;
+        1usize << self.u64(lo_log2 as u64, hi.max(lo_log2) as u64)
+    }
+
+    pub fn complex_vec(&mut self, n: usize) -> Vec<C32> {
+        self.rng.complex_vec(n)
+    }
+
+    pub fn real_vec(&mut self, n: usize) -> Vec<f32> {
+        self.rng.real_vec(n)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// Outcome of a property: Ok or a failure message.
+pub type PropResult = Result<(), String>;
+
+/// Helper: assert-like macros for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Approximate complex-slice equality with context in the failure message.
+pub fn assert_close(a: &[C32], b: &[C32], tol: f32, what: &str) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    let err = crate::util::complex::max_abs_diff(a, b);
+    if err > tol {
+        return Err(format!("{what}: max |diff| = {err:.3e} > tol {tol:.1e} (n={})", a.len()));
+    }
+    Ok(())
+}
+
+/// Run `prop` over `cases` random cases. Panics with a reproducible report
+/// on failure. Seed comes from `MEMFFT_PROPTEST_SEED` or the default.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let seed = std::env::var("MEMFFT_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE_u64);
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(case_seed);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink-lite: retry the same case seed with decreasing size
+            // hints and report the smallest size that still fails.
+            let mut smallest = (1.0f64, msg.clone());
+            for &size in &[0.5, 0.25, 0.1, 0.05, 0.0] {
+                let mut g = Gen::new(case_seed);
+                g.size = size;
+                if let Err(m) = prop(&mut g) {
+                    smallest = (size, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}/{cases}, seed {seed:#x}, \
+                 smallest failing size hint {:.2}):\n  {}\n\
+                 reproduce with MEMFFT_PROPTEST_SEED={seed}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("add-commutes", 50, |g| {
+            count += 1;
+            let a = g.f64(-1e6, 1e6);
+            let b = g.f64(-1e6, 1e6);
+            prop_assert!((a + b - (b + a)).abs() < 1e-9);
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_report() {
+        check("always-fails", 10, |g| {
+            let n = g.sized_usize(1, 100);
+            Err(format!("boom n={n}"))
+        });
+    }
+
+    #[test]
+    fn shrink_reduces_sizes() {
+        let mut g = Gen::new(1);
+        g.size = 0.0;
+        for _ in 0..100 {
+            assert_eq!(g.sized_usize(1, 1000), 1);
+            assert_eq!(g.pow2(1, 10), 2);
+        }
+    }
+
+    #[test]
+    fn pow2_in_range() {
+        let mut g = Gen::new(2);
+        for _ in 0..100 {
+            let n = g.pow2(2, 12);
+            assert!(crate::util::is_pow2(n));
+            assert!((4..=4096).contains(&n));
+        }
+    }
+
+    #[test]
+    fn assert_close_reports_context() {
+        let a = vec![C32::new(0.0, 0.0)];
+        let b = vec![C32::new(1.0, 0.0)];
+        let err = assert_close(&a, &b, 1e-6, "unit").unwrap_err();
+        assert!(err.contains("unit"));
+        assert!(assert_close(&a, &a, 1e-6, "same").is_ok());
+    }
+}

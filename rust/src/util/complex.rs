@@ -1,0 +1,320 @@
+//! Minimal complex arithmetic used across the FFT library, the SAR
+//! substrate and the PJRT literal marshalling.
+//!
+//! We deliberately do not depend on `num-complex`: the vendored crate set
+//! does not include it, and the FFT hot loops want a `#[repr(C)]` POD type
+//! whose memory layout is exactly the `f32[..., 2]` interleaved (re, im)
+//! convention used on the Rust <-> HLO boundary (see DESIGN.md §2).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Complex number over `f32`. Layout-compatible with `[f32; 2]` = (re, im),
+/// the interchange format for every HLO artifact in `artifacts/`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C)]
+pub struct C32 {
+    pub re: f32,
+    pub im: f32,
+}
+
+/// Complex number over `f64`. Used by the Bluestein chirp precomputation and
+/// the reference DFT, where f32 twiddle error would swamp the comparison.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+macro_rules! impl_complex {
+    ($name:ident, $f:ty, $pi:expr) => {
+        impl $name {
+            pub const ZERO: Self = Self { re: 0.0, im: 0.0 };
+            pub const ONE: Self = Self { re: 1.0, im: 0.0 };
+            pub const I: Self = Self { re: 0.0, im: 1.0 };
+
+            #[inline(always)]
+            pub const fn new(re: $f, im: $f) -> Self {
+                Self { re, im }
+            }
+
+            /// `e^{i theta}` — unit phasor.
+            #[inline(always)]
+            pub fn cis(theta: $f) -> Self {
+                Self { re: theta.cos(), im: theta.sin() }
+            }
+
+            /// Forward-DFT twiddle `W_n^k = e^{-2 pi i k / n}`.
+            #[inline]
+            pub fn twiddle(k: usize, n: usize) -> Self {
+                let theta = -2.0 * $pi * (k as $f) / (n as $f);
+                Self::cis(theta)
+            }
+
+            #[inline(always)]
+            pub fn conj(self) -> Self {
+                Self { re: self.re, im: -self.im }
+            }
+
+            #[inline(always)]
+            pub fn norm_sqr(self) -> $f {
+                self.re * self.re + self.im * self.im
+            }
+
+            #[inline(always)]
+            pub fn abs(self) -> $f {
+                self.norm_sqr().sqrt()
+            }
+
+            #[inline(always)]
+            pub fn arg(self) -> $f {
+                self.im.atan2(self.re)
+            }
+
+            #[inline(always)]
+            pub fn scale(self, s: $f) -> Self {
+                Self { re: self.re * s, im: self.im * s }
+            }
+
+            /// Multiply by `i` (90° rotation) without a full complex mul.
+            #[inline(always)]
+            pub fn mul_i(self) -> Self {
+                Self { re: -self.im, im: self.re }
+            }
+
+            /// Multiply by `-i`.
+            #[inline(always)]
+            pub fn mul_neg_i(self) -> Self {
+                Self { re: self.im, im: -self.re }
+            }
+
+            /// Fused `self * w + acc`, the butterfly inner op.
+            #[inline(always)]
+            pub fn mul_add(self, w: Self, acc: Self) -> Self {
+                Self {
+                    re: self.re * w.re - self.im * w.im + acc.re,
+                    im: self.re * w.im + self.im * w.re + acc.im,
+                }
+            }
+
+            pub fn recip(self) -> Self {
+                let d = self.norm_sqr();
+                Self { re: self.re / d, im: -self.im / d }
+            }
+        }
+
+        impl Add for $name {
+            type Output = Self;
+            #[inline(always)]
+            fn add(self, o: Self) -> Self {
+                Self { re: self.re + o.re, im: self.im + o.im }
+            }
+        }
+        impl Sub for $name {
+            type Output = Self;
+            #[inline(always)]
+            fn sub(self, o: Self) -> Self {
+                Self { re: self.re - o.re, im: self.im - o.im }
+            }
+        }
+        impl Mul for $name {
+            type Output = Self;
+            #[inline(always)]
+            fn mul(self, o: Self) -> Self {
+                Self {
+                    re: self.re * o.re - self.im * o.im,
+                    im: self.re * o.im + self.im * o.re,
+                }
+            }
+        }
+        impl Div for $name {
+            type Output = Self;
+            #[inline]
+            fn div(self, o: Self) -> Self {
+                self * o.recip()
+            }
+        }
+        impl Neg for $name {
+            type Output = Self;
+            #[inline(always)]
+            fn neg(self) -> Self {
+                Self { re: -self.re, im: -self.im }
+            }
+        }
+        impl AddAssign for $name {
+            #[inline(always)]
+            fn add_assign(&mut self, o: Self) {
+                *self = *self + o;
+            }
+        }
+        impl SubAssign for $name {
+            #[inline(always)]
+            fn sub_assign(&mut self, o: Self) {
+                *self = *self - o;
+            }
+        }
+        impl MulAssign for $name {
+            #[inline(always)]
+            fn mul_assign(&mut self, o: Self) {
+                *self = *self * o;
+            }
+        }
+        impl From<$f> for $name {
+            fn from(re: $f) -> Self {
+                Self { re, im: 0.0 }
+            }
+        }
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                if self.im >= 0.0 {
+                    write!(f, "{}+{}i", self.re, self.im)
+                } else {
+                    write!(f, "{}{}i", self.re, self.im)
+                }
+            }
+        }
+    };
+}
+
+impl_complex!(C32, f32, std::f32::consts::PI);
+impl_complex!(C64, f64, std::f64::consts::PI);
+
+impl C32 {
+    #[inline(always)]
+    pub fn to_c64(self) -> C64 {
+        C64 { re: self.re as f64, im: self.im as f64 }
+    }
+}
+
+impl C64 {
+    #[inline(always)]
+    pub fn to_c32(self) -> C32 {
+        C32 { re: self.re as f32, im: self.im as f32 }
+    }
+}
+
+/// Reinterpret a complex slice as interleaved `f32` pairs (the HLO wire
+/// format). Zero-copy: relies on `#[repr(C)]` layout above.
+pub fn as_f32_pairs(xs: &[C32]) -> &[f32] {
+    // SAFETY: C32 is #[repr(C)] { f32, f32 } — identical layout to [f32; 2].
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const f32, xs.len() * 2) }
+}
+
+/// Reinterpret interleaved `f32` pairs as a complex slice. Panics if the
+/// length is odd.
+pub fn from_f32_pairs(xs: &[f32]) -> &[C32] {
+    assert!(xs.len() % 2 == 0, "interleaved complex buffer must have even length");
+    // SAFETY: as above; alignment of C32 equals alignment of f32.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const C32, xs.len() / 2) }
+}
+
+/// Copy interleaved pairs into an owned complex vector.
+pub fn vec_from_f32_pairs(xs: &[f32]) -> Vec<C32> {
+    from_f32_pairs(xs).to_vec()
+}
+
+/// Max |a-b| over a pair of complex slices (L-inf error), used by tests and
+/// the integration cross-checks.
+pub fn max_abs_diff(a: &[C32], b: &[C32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (*x - *y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Relative L2 error ||a-b|| / ||b||; 0 if both empty/zero.
+pub fn rel_l2_error(a: &[C32], b: &[C32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (x, y) in a.iter().zip(b) {
+        num += ((*x - *y).norm_sqr()) as f64;
+        den += (y.norm_sqr()) as f64;
+    }
+    if den == 0.0 {
+        num.sqrt()
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mul_matches_formula() {
+        let a = C32::new(1.0, 2.0);
+        let b = C32::new(3.0, -4.0);
+        let c = a * b;
+        assert_eq!(c, C32::new(1.0 * 3.0 - 2.0 * (-4.0), 1.0 * (-4.0) + 2.0 * 3.0));
+    }
+
+    #[test]
+    fn twiddle_unit_circle() {
+        for n in [2usize, 4, 8, 16, 1024] {
+            for k in 0..n {
+                let w = C64::twiddle(k, n);
+                assert!((w.abs() - 1.0).abs() < 1e-12, "twiddle must be unit modulus");
+            }
+        }
+    }
+
+    #[test]
+    fn twiddle_periodicity() {
+        // W_N^{k} == W_N^{k+N} (paper eq. 3)
+        let n = 16;
+        for k in 0..n {
+            let a = C64::twiddle(k, n);
+            let b = C64::twiddle(k + n, n);
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn twiddle_symmetry_conjugate() {
+        // (W_N^{nk})^* == W_N^{-nk} (paper eq. 4)
+        let n = 32;
+        for k in 0..n {
+            let a = C64::twiddle(k, n).conj();
+            let b = C64::cis(2.0 * std::f64::consts::PI * k as f64 / n as f64);
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mul_i_is_rotation() {
+        let a = C32::new(3.0, 4.0);
+        assert_eq!(a.mul_i(), a * C32::I);
+        assert_eq!(a.mul_neg_i(), a * C32::new(0.0, -1.0));
+    }
+
+    #[test]
+    fn div_roundtrip() {
+        let a = C64::new(1.5, -2.5);
+        let b = C64::new(0.7, 0.3);
+        let c = a * b / b;
+        assert!((c - a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pair_reinterpret_roundtrip() {
+        let xs = vec![C32::new(1.0, 2.0), C32::new(3.0, 4.0)];
+        let flat = as_f32_pairs(&xs);
+        assert_eq!(flat, &[1.0, 2.0, 3.0, 4.0]);
+        let back = from_f32_pairs(flat);
+        assert_eq!(back, &xs[..]);
+    }
+
+    #[test]
+    fn error_metrics() {
+        let a = vec![C32::new(1.0, 0.0), C32::new(0.0, 1.0)];
+        let b = vec![C32::new(1.0, 0.0), C32::new(0.0, 1.0)];
+        assert_eq!(max_abs_diff(&a, &b), 0.0);
+        assert_eq!(rel_l2_error(&a, &b), 0.0);
+        let c = vec![C32::new(1.5, 0.0), C32::new(0.0, 1.0)];
+        assert!((max_abs_diff(&a, &c) - 0.5).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,125 @@
+//! Shared utilities: complex arithmetic, PRNGs, timing, integer helpers.
+
+pub mod complex;
+pub mod prng;
+pub mod timer;
+
+pub use complex::{C32, C64};
+pub use prng::Xoshiro256;
+pub use timer::Timer;
+
+/// True iff `n` is a power of two (and nonzero).
+#[inline]
+pub const fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+/// log2 of a power of two. Panics (debug) if `n` is not a power of two.
+#[inline]
+pub fn log2_exact(n: usize) -> u32 {
+    debug_assert!(is_pow2(n), "log2_exact({n}): not a power of two");
+    n.trailing_zeros()
+}
+
+/// Smallest power of two >= n.
+#[inline]
+pub const fn next_pow2(n: usize) -> usize {
+    if n <= 1 {
+        1
+    } else {
+        1usize << (usize::BITS - (n - 1).leading_zeros())
+    }
+}
+
+/// Ceiling division.
+#[inline]
+pub const fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Round `a` up to a multiple of `b`.
+#[inline]
+pub const fn round_up(a: usize, b: usize) -> usize {
+    div_ceil(a, b) * b
+}
+
+/// Split `n = n1 * n2` with both factors powers of two and as square as
+/// possible (n1 >= n2). This is the four-step decomposition the paper's
+/// shared-memory tiling uses: each sub-FFT of size n1 / n2 must fit in the
+/// fast memory tile.
+pub fn balanced_pow2_split(n: usize) -> (usize, usize) {
+    assert!(is_pow2(n), "balanced_pow2_split needs a power of two, got {n}");
+    let lg = log2_exact(n);
+    let lg1 = (lg + 1) / 2;
+    let lg2 = lg - lg1;
+    (1usize << lg1, 1usize << lg2)
+}
+
+/// Split `n = n1 * n2` with `n1` capped at `max_n1` (fast-memory capacity in
+/// elements), both powers of two. Mirrors the paper's "divide the data into
+/// parts according to the size of the share memory" rule (§2.3.2).
+pub fn capped_pow2_split(n: usize, max_n1: usize) -> (usize, usize) {
+    assert!(is_pow2(n) && is_pow2(max_n1));
+    let (a, b) = balanced_pow2_split(n);
+    if a <= max_n1 {
+        (a, b)
+    } else {
+        (max_n1, n / max_n1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_predicates() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(1024));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(3));
+        assert!(!is_pow2(65535));
+    }
+
+    #[test]
+    fn log2_values() {
+        assert_eq!(log2_exact(1), 0);
+        assert_eq!(log2_exact(2), 1);
+        assert_eq!(log2_exact(65536), 16);
+    }
+
+    #[test]
+    fn next_pow2_values() {
+        assert_eq!(next_pow2(0), 1);
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(1025), 2048);
+    }
+
+    #[test]
+    fn balanced_split_covers() {
+        for lg in 0..=20 {
+            let n = 1usize << lg;
+            let (a, b) = balanced_pow2_split(n);
+            assert_eq!(a * b, n);
+            assert!(a >= b);
+            assert!(a / b <= 2, "split should be near-square: {a}x{b}");
+        }
+    }
+
+    #[test]
+    fn capped_split_respects_cap() {
+        let (a, b) = capped_pow2_split(1 << 16, 1024);
+        assert_eq!(a * b, 1 << 16);
+        assert!(a <= 1024);
+        // Balanced when already under the cap.
+        assert_eq!(capped_pow2_split(256, 1024), (16, 16));
+    }
+
+    #[test]
+    fn rounding_helpers() {
+        assert_eq!(div_ceil(7, 3), 3);
+        assert_eq!(round_up(7, 4), 8);
+        assert_eq!(round_up(8, 4), 8);
+    }
+}

@@ -1,0 +1,194 @@
+//! Integration: PJRT engine executes AOT artifacts and the numerics agree
+//! with the in-process Rust FFT library (two fully independent stacks).
+//!
+//! Requires `make artifacts` to have run; tests skip (with a loud message)
+//! when artifacts/ is missing so `cargo test` stays green pre-build.
+
+use memfft::coordinator::{Direction, FftService};
+use memfft::fft::{Algorithm, FftPlan};
+use memfft::runtime::Engine;
+use memfft::util::complex::{max_abs_diff, C32};
+use memfft::util::Xoshiro256;
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(dir).join("manifest.txt").exists() {
+            return Some(dir.to_string());
+        }
+    }
+    eprintln!("SKIP: artifacts/manifest.txt missing — run `make artifacts`");
+    None
+}
+
+fn rust_fft(re: &[f32], im: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let mut data: Vec<C32> =
+        re.iter().zip(im).map(|(&a, &b)| C32::new(a, b)).collect();
+    FftPlan::new(re.len(), Algorithm::Auto).forward(&mut data);
+    (data.iter().map(|c| c.re).collect(), data.iter().map(|c| c.im).collect())
+}
+
+fn check_artifact(engine: &Engine, method: &str, n: usize, batch: usize, tol: f32) {
+    let entry = engine
+        .index()
+        .find_fft("fft", method, n, batch)
+        .unwrap_or_else(|e| panic!("no artifact fft/{method}/n{n}: {e}"))
+        .clone();
+    let mut rng = Xoshiro256::seeded(n as u64);
+    let re = rng.real_vec(entry.batch * n);
+    let im = rng.real_vec(entry.batch * n);
+    let out = engine.run_fft(&entry, &re, &im).expect("execute");
+    for b in 0..entry.batch {
+        let (er, ei) = rust_fft(&re[b * n..(b + 1) * n], &im[b * n..(b + 1) * n]);
+        let got: Vec<C32> = out.re[b * n..(b + 1) * n]
+            .iter()
+            .zip(&out.im[b * n..(b + 1) * n])
+            .map(|(&a, &b)| C32::new(a, b))
+            .collect();
+        let expect: Vec<C32> = er.iter().zip(&ei).map(|(&a, &b)| C32::new(a, b)).collect();
+        let err = max_abs_diff(&got, &expect);
+        assert!(err < tol, "{method}/n{n} batch-row {b}: err {err} > {tol}");
+    }
+}
+
+#[test]
+fn engine_loads_manifest_and_compiles() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    assert!(!engine.index().entries().is_empty());
+    assert!(engine.platform().to_lowercase().contains("cpu") || !engine.platform().is_empty());
+    // First load compiles, second is cached.
+    let name = &engine.index().entries()[0].name.clone();
+    engine.load(name).unwrap();
+    assert!(engine.is_loaded(name));
+    let stats0 = engine.stats();
+    engine.load(name).unwrap();
+    assert_eq!(engine.stats().compiles, stats0.compiles, "cache hit must not recompile");
+}
+
+#[test]
+fn fourstep_artifact_matches_rust_fft() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    for n in engine.index().sizes("fft", "fourstep") {
+        if n > 4096 {
+            continue; // larger sizes covered by the (slower) release benches
+        }
+        let tol = 1e-2 * (n as f32).sqrt().max(1.0) * 1e-1;
+        check_artifact(&engine, "fourstep", n, 1, tol.max(1e-3));
+    }
+}
+
+#[test]
+fn stockham_and_xla_artifacts_match() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    for n in engine.index().sizes("fft", "stockham") {
+        check_artifact(&engine, "stockham", n, 1, 1e-2);
+    }
+    for n in engine.index().sizes("fft", "xla") {
+        if n > 4096 {
+            continue;
+        }
+        check_artifact(&engine, "xla", n, 1, 1e-2);
+    }
+}
+
+#[test]
+fn perlevel_artifact_matches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    for n in engine.index().sizes("fft", "perlevel") {
+        if n > 1024 {
+            continue;
+        }
+        check_artifact(&engine, "perlevel", n, 1, 1e-2);
+    }
+}
+
+#[test]
+fn batched_artifact_rows_are_independent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    if engine.index().find_fft("fft", "fourstep", 256, 4).map(|e| e.batch).unwrap_or(1) < 4 {
+        return;
+    }
+    check_artifact(&engine, "fourstep", 256, 4, 1e-2);
+}
+
+#[test]
+fn inverse_artifact_roundtrips() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    let Ok(fwd) = engine.index().find_fft("fft", "fourstep", 1024, 1) else { return };
+    let Ok(inv) = engine.index().find_fft("ifft", "fourstep", 1024, 1) else { return };
+    let (fwd, inv) = (fwd.clone(), inv.clone());
+    let mut rng = Xoshiro256::seeded(99);
+    let re = rng.real_vec(1024);
+    let im = rng.real_vec(1024);
+    let f = engine.run_fft(&fwd, &re, &im).unwrap();
+    let b = engine.run_fft(&inv, &f.re, &f.im).unwrap();
+    for k in 0..1024 {
+        assert!((b.re[k] - re[k]).abs() < 1e-3, "re[{k}]");
+        assert!((b.im[k] - im[k]).abs() < 1e-3, "im[{k}]");
+    }
+}
+
+#[test]
+fn service_serves_from_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = memfft::config::ServiceConfig {
+        artifacts_dir: dir,
+        method: "fourstep".into(),
+        workers: 2,
+        max_batch: 4,
+        max_delay_us: 200,
+        ..Default::default()
+    };
+    let svc = FftService::start(cfg);
+    let n = 1024;
+    let mut rng = Xoshiro256::seeded(3);
+    let re = rng.real_vec(n);
+    let im = rng.real_vec(n);
+    let resp = svc
+        .fft_blocking(n, Direction::Forward, re.clone(), im.clone())
+        .expect("served");
+    let (er, ei) = rust_fft(&re, &im);
+    for k in 0..n {
+        assert!((resp.re[k] - er[k]).abs() < 2e-2, "re[{k}] {} vs {}", resp.re[k], er[k]);
+        assert!((resp.im[k] - ei[k]).abs() < 2e-2);
+    }
+    assert_eq!(svc.metrics().requests_done.get(), 1);
+    svc.shutdown();
+}
+
+#[test]
+fn fft2d_artifact_matches_rust_fft2d() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    for entry in engine
+        .index()
+        .entries()
+        .iter()
+        .filter(|e| e.op == "fft2d" && e.method == "fourstep")
+        .cloned()
+        .collect::<Vec<_>>()
+    {
+        // Manifest convention: n = cols, batch = rows.
+        let (rows, cols) = (entry.batch, entry.n);
+        let mut rng = Xoshiro256::seeded(rows as u64 * 31 + cols as u64);
+        let re = rng.real_vec(rows * cols);
+        let im = rng.real_vec(rows * cols);
+        let out = engine.run_fft(&entry, &re, &im).expect("execute fft2d");
+
+        let mut expect: Vec<C32> =
+            re.iter().zip(&im).map(|(&a, &b)| C32::new(a, b)).collect();
+        memfft::fft::Fft2d::new(rows, cols).forward(&mut expect);
+        let got: Vec<C32> =
+            out.re.iter().zip(&out.im).map(|(&a, &b)| C32::new(a, b)).collect();
+        let err = max_abs_diff(&got, &expect);
+        assert!(err < 0.5, "{}x{}: err {err}", rows, cols);
+        // Tight relative check against the dominant coefficient.
+        let peak = expect.iter().map(|c| c.abs()).fold(0.0f32, f32::max);
+        assert!(err < 1e-3 * peak.max(1.0), "relative err {err} vs peak {peak}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Service-level integration: workload-driven serving against real
+//! artifacts, backpressure, mixed directions, failure behaviour.
+
+use std::sync::Arc;
+
+use memfft::config::ServiceConfig;
+use memfft::coordinator::{drive, Direction, FftService, ServiceError, SizeDist, Workload};
+use memfft::util::Xoshiro256;
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.txt").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn cfg(method: &str) -> ServiceConfig {
+    ServiceConfig {
+        method: method.into(),
+        workers: 2,
+        max_batch: 8,
+        max_delay_us: 300,
+        queue_depth: 512,
+        sizes: vec![256, 1024, 4096],
+        ..Default::default()
+    }
+}
+
+#[test]
+fn workload_against_artifacts_completes() {
+    if !have_artifacts() {
+        return;
+    }
+    let svc = Arc::new(FftService::start(cfg("fourstep")));
+    let wl = Workload::closed_loop(SizeDist::Uniform(vec![256, 1024]), 4, 25);
+    let report = drive(&svc, &wl);
+    assert_eq!(report.completed, 100, "all requests served");
+    assert_eq!(report.rejected, 0);
+    assert!(svc.metrics().plan_cache_hits.get() > 0, "warmup must prime the cache");
+    assert_eq!(svc.metrics().plan_cache_misses.get(), 0, "no request-path compiles");
+}
+
+#[test]
+fn sar_band_workload_zipf() {
+    if !have_artifacts() {
+        return;
+    }
+    let svc = Arc::new(FftService::start(ServiceConfig {
+        sizes: vec![1024, 4096, 16384],
+        ..cfg("fourstep")
+    }));
+    let wl = Workload::closed_loop(SizeDist::SarBand, 3, 15);
+    let report = drive(&svc, &wl);
+    assert_eq!(report.completed, 45);
+    assert!(report.percentile(50.0) <= report.percentile(99.0));
+}
+
+#[test]
+fn forward_inverse_roundtrip_through_service() {
+    if !have_artifacts() {
+        return;
+    }
+    let svc = FftService::start(cfg("fourstep"));
+    let n = 1024;
+    let mut rng = Xoshiro256::seeded(17);
+    let re = rng.real_vec(n);
+    let im = rng.real_vec(n);
+    let f = svc.fft_blocking(n, Direction::Forward, re.clone(), im.clone()).unwrap();
+    let b = svc.fft_blocking(n, Direction::Inverse, f.re, f.im).unwrap();
+    for k in 0..n {
+        assert!((b.re[k] - re[k]).abs() < 1e-3, "re[{k}]");
+        assert!((b.im[k] - im[k]).abs() < 1e-3, "im[{k}]");
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    // Tiny queue + zero workers draining slowly → rejects must appear and
+    // be reported, not hang. Native mode (no artifacts needed).
+    let svc = FftService::start(ServiceConfig {
+        method: "native".into(),
+        workers: 1,
+        max_batch: 1,
+        max_delay_us: 0,
+        queue_depth: 4,
+        ..Default::default()
+    });
+    let n = 1 << 14;
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for _ in 0..200 {
+        match svc.submit(n, Direction::Forward, vec![1.0; n], vec![0.0; n]) {
+            Ok(rx) => rxs.push(rx),
+            Err(ServiceError::Rejected) => rejected += 1,
+            Err(e) => panic!("unexpected: {e}"),
+        }
+    }
+    assert!(rejected > 0, "a 4-deep queue must reject under a 200-burst");
+    assert_eq!(svc.metrics().requests_rejected.get(), rejected);
+    // Accepted requests still complete.
+    for rx in rxs {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn unsupported_size_fails_cleanly_with_artifacts() {
+    if !have_artifacts() {
+        return;
+    }
+    // 2^20 is a valid power of two but has no artifact → Exec-path failure,
+    // delivered as an error response (service keeps running).
+    let svc = FftService::start(cfg("fourstep"));
+    let n = 1 << 20;
+    let result = svc.fft_blocking(n, Direction::Forward, vec![0.0; n], vec![0.0; n]);
+    assert!(result.is_err(), "must fail, not hang");
+    // Service still healthy afterwards.
+    let ok = svc.fft_blocking(256, Direction::Forward, vec![1.0; 256], vec![0.0; 256]);
+    assert!(ok.is_ok());
+    svc.shutdown();
+}
+
+#[test]
+fn xla_and_fourstep_methods_agree() {
+    if !have_artifacts() {
+        return;
+    }
+    let n = 1024;
+    let mut rng = Xoshiro256::seeded(23);
+    let re = rng.real_vec(n);
+    let im = rng.real_vec(n);
+    let answers: Vec<(Vec<f32>, Vec<f32>)> = ["fourstep", "xla", "native"]
+        .iter()
+        .map(|m| {
+            let svc = FftService::start(cfg(m));
+            let r = svc
+                .fft_blocking(n, Direction::Forward, re.clone(), im.clone())
+                .unwrap_or_else(|e| panic!("{m}: {e}"));
+            svc.shutdown();
+            (r.re, r.im)
+        })
+        .collect();
+    for pair in answers.windows(2) {
+        for k in 0..n {
+            assert!((pair[0].0[k] - pair[1].0[k]).abs() < 2e-2, "re[{k}]");
+            assert!((pair[0].1[k] - pair[1].1[k]).abs() < 2e-2, "im[{k}]");
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Property-based invariant suite over the FFT library (mini-proptest
+//! harness, `memfft::testing`): the mathematical identities every
+//! algorithm must satisfy on random inputs of random sizes, plus
+//! cross-algorithm agreement — the strongest correctness net we have.
+
+use memfft::fft::{self, Algorithm, FftPlan};
+use memfft::testing::{assert_close, check, Gen};
+use memfft::util::complex::C32;
+use memfft::{prop_assert, util};
+
+fn random_plan(g: &mut Gen, n: usize) -> FftPlan {
+    let algo = *g.pick(&Algorithm::candidates(n));
+    FftPlan::new(n, algo)
+}
+
+#[test]
+fn prop_roundtrip_all_algorithms() {
+    check("fft∘ifft = id", 60, |g| {
+        let n = g.pow2(1, 12);
+        let plan = random_plan(g, n);
+        let x = g.complex_vec(n);
+        let mut y = x.clone();
+        plan.forward(&mut y);
+        plan.inverse(&mut y);
+        assert_close(&y, &x, 2e-3 * (n as f32).sqrt().max(1.0), plan.algorithm().name())
+    });
+}
+
+#[test]
+fn prop_linearity() {
+    check("FFT(αa+βb) = αFFT(a)+βFFT(b)", 40, |g| {
+        let n = g.pow2(1, 11);
+        let plan = random_plan(g, n);
+        let a = g.complex_vec(n);
+        let b = g.complex_vec(n);
+        let alpha = C32::new(g.f32(-2.0, 2.0), g.f32(-2.0, 2.0));
+        let beta = C32::new(g.f32(-2.0, 2.0), g.f32(-2.0, 2.0));
+        let mut lhs: Vec<C32> =
+            a.iter().zip(&b).map(|(&x, &y)| alpha * x + beta * y).collect();
+        plan.forward(&mut lhs);
+        let mut fa = a;
+        let mut fb = b;
+        plan.forward(&mut fa);
+        plan.forward(&mut fb);
+        let rhs: Vec<C32> =
+            fa.iter().zip(&fb).map(|(&x, &y)| alpha * x + beta * y).collect();
+        assert_close(&lhs, &rhs, 5e-2 * (n as f32).sqrt().max(1.0), plan.algorithm().name())
+    });
+}
+
+#[test]
+fn prop_parseval() {
+    check("‖x‖² = ‖X‖²/N", 40, |g| {
+        let n = g.pow2(1, 12);
+        let plan = random_plan(g, n);
+        let x = g.complex_vec(n);
+        let ein: f64 = x.iter().map(|v| v.norm_sqr() as f64).sum();
+        let mut fx = x;
+        plan.forward(&mut fx);
+        let eout: f64 = fx.iter().map(|v| v.norm_sqr() as f64).sum::<f64>() / n as f64;
+        prop_assert!(
+            (ein - eout).abs() / ein.max(1e-9) < 1e-3,
+            "{}: energy {ein} vs {eout}",
+            plan.algorithm().name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_time_shift_theorem() {
+    check("FFT(shift_m x)[k] = W^{mk} FFT(x)[k]", 30, |g| {
+        let n = g.pow2(2, 10);
+        let plan = random_plan(g, n);
+        let x = g.complex_vec(n);
+        let m = g.usize(0, n - 1);
+        // circular shift by m: y[t] = x[(t + m) mod n]  (advance)
+        let shifted: Vec<C32> = (0..n).map(|t| x[(t + m) % n]).collect();
+        let mut fs = shifted;
+        plan.forward(&mut fs);
+        let mut fx = x;
+        plan.forward(&mut fx);
+        let expect: Vec<C32> = (0..n)
+            .map(|k| fx[k] * memfft::util::C64::twiddle(m * k, n).conj().to_c32())
+            .collect();
+        assert_close(&fs, &expect, 5e-2 * (n as f32).sqrt(), plan.algorithm().name())
+    });
+}
+
+#[test]
+fn prop_all_algorithms_agree_pairwise() {
+    check("algorithms agree", 30, |g| {
+        let n = g.pow2(1, 12);
+        let x = g.complex_vec(n);
+        let candidates = Algorithm::candidates(n);
+        let a1 = *g.pick(&candidates);
+        let a2 = *g.pick(&candidates);
+        let mut y1 = x.clone();
+        let mut y2 = x;
+        FftPlan::new(n, a1).forward(&mut y1);
+        FftPlan::new(n, a2).forward(&mut y2);
+        assert_close(
+            &y1,
+            &y2,
+            1e-2 * (n as f32).sqrt().max(1.0),
+            &format!("{} vs {}", a1.name(), a2.name()),
+        )
+    });
+}
+
+#[test]
+fn prop_convolution_theorem() {
+    check("FFT(a⊛b) = FFT(a)·FFT(b)", 30, |g| {
+        let n = g.pow2(1, 9);
+        let a = g.complex_vec(n);
+        let b = g.complex_vec(n);
+        let conv = fft::circular_convolve(&a, &b);
+        let mut fc = conv;
+        fft::fft(&mut fc);
+        let mut fa = a;
+        let mut fb = b;
+        fft::fft(&mut fa);
+        fft::fft(&mut fb);
+        let expect: Vec<C32> = fa.iter().zip(&fb).map(|(&x, &y)| x * y).collect();
+        assert_close(&fc, &expect, 0.2 * n as f32, "conv theorem")
+    });
+}
+
+#[test]
+fn prop_rfft_matches_complex_fft() {
+    check("rfft = fft on real input", 30, |g| {
+        let n = g.pow2(1, 11);
+        let x = g.real_vec(n);
+        let spec = fft::RealFft::new(n).forward(&x);
+        let mut full: Vec<C32> = x.iter().map(|&r| C32::new(r, 0.0)).collect();
+        fft::fft(&mut full);
+        assert_close(&spec, &full[..n / 2 + 1], 2e-3 * (n as f32).sqrt(), "rfft")
+    });
+}
+
+#[test]
+fn prop_bluestein_arbitrary_lengths() {
+    check("bluestein matches DFT oracle at any n", 25, |g| {
+        let n = g.sized_usize(1, 300);
+        let x = g.complex_vec(n);
+        let expect = memfft::fft::dft::dft(&x);
+        let mut got = x;
+        fft::Bluestein::new(n).forward(&mut got);
+        assert_close(&got, &expect, 5e-3 * (n as f32).sqrt().max(1.0), &format!("n={n}"))
+    });
+}
+
+#[test]
+fn prop_fourstep_pass_structure() {
+    check("fourstep pass count = ceil-log decomposition", 40, |g| {
+        let lg = g.usize(1, 20) as u32;
+        let tile_lg = g.usize(1, 11) as u32;
+        let n = 1usize << lg;
+        let tile = 1usize << tile_lg;
+        let plan = fft::FourStep::with_tile(n, tile);
+        let passes = plan.passes();
+        prop_assert!(passes >= 1);
+        // Two passes cover tile²; k passes cover tile^k.
+        let covered = (tile as u128).pow(passes as u32);
+        prop_assert!(covered >= n as u128, "passes={passes} insufficient for n={n} tile={tile}");
+        if passes > 1 {
+            let fewer = (tile as u128).pow(passes as u32 - 1);
+            prop_assert!(fewer < n as u128, "passes={passes} overshoots for n={n} tile={tile}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_split_invariants() {
+    check("capped_pow2_split", 50, |g| {
+        let n = g.pow2(0, 24);
+        let cap = g.pow2(1, 12);
+        let (a, b) = util::capped_pow2_split(n, cap);
+        prop_assert!(a * b == n, "{a}*{b} != {n}");
+        prop_assert!(util::is_pow2(a) && util::is_pow2(b));
+        prop_assert!(a <= cap.max(n), "cap violated: {a} > {cap}");
+        if n >= 2 && cap >= 2 {
+            prop_assert!(a <= cap);
+        }
+        Ok(())
+    });
+}
