@@ -14,7 +14,7 @@ use memfft::config::ServiceConfig;
 use memfft::coordinator::{Direction, FftService};
 use memfft::util::{Timer, Xoshiro256};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let clients: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
     let per_client: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);

@@ -13,7 +13,7 @@ use memfft::fft::{self, Algorithm, FftPlan};
 use memfft::util::complex::{max_abs_diff, C32};
 use memfft::util::Xoshiro256;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // --- 1. the library ---------------------------------------------------
     let n = 1024;
     let mut rng = Xoshiro256::seeded(1);
@@ -28,11 +28,24 @@ fn main() -> anyhow::Result<()> {
         max_abs_diff(&signal, &back)
     );
 
-    // Explicit plans — e.g. the paper's four-step schedule:
+    // Explicit plans speak the `Transform` trait — out-of-place, fallible,
+    // caller-owned scratch. Here: the paper's four-step schedule.
     let plan = FftPlan::new(n, Algorithm::FourStep);
-    let mut x = signal.clone();
-    plan.forward(&mut x);
+    let mut x = vec![C32::ZERO; n];
+    let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+    plan.forward_into(&signal, &mut x, &mut scratch)?;
     println!("library: four-step matches auto within {:.2e}", max_abs_diff(&x, &spectrum));
+
+    // Batched execution reuses the same scratch across rows — the unit of
+    // throughput the service's batcher feeds.
+    let batch = 4;
+    let rows: Vec<C32> = (0..batch).flat_map(|_| signal.clone()).collect();
+    let mut rows_out = vec![C32::ZERO; batch * n];
+    plan.forward_batch_into(batch, &rows, &mut rows_out, &mut scratch)?;
+    println!(
+        "library: batched rows match single transform within {:.2e}",
+        max_abs_diff(&rows_out[..n], &x)
+    );
 
     // --- 2. the service (native mode: no artifacts needed) ----------------
     let svc = FftService::start(ServiceConfig {

@@ -20,7 +20,7 @@ fn split_planes(xs: &[C32]) -> (Vec<f32>, Vec<f32>) {
     (xs.iter().map(|c| c.re).collect(), xs.iter().map(|c| c.im).collect())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // Geometry must match the AOT artifact (python/compile/aot.py).
     let (naz, nr) = (256usize, 1024usize);
     let scene = Scene::demo(naz, nr);

@@ -12,6 +12,21 @@ from compile import aot, model
 from compile.kernels.ref import fft_ref
 
 
+def _hlo_proto_to_stablehlo(proto: bytes):
+    """jaxlib moved this conversion across releases: older versions expose
+    a direct hlo_to_stablehlo(proto); newer ones (>=0.4.3x) only convert
+    from MHLO, so route proto -> XlaComputation -> MHLO -> StableHLO."""
+    mlir = xc._xla.mlir
+    direct = getattr(mlir, "hlo_to_stablehlo", None)
+    if direct is not None:
+        return direct(proto)
+    if hasattr(mlir, "xla_computation_to_mlir_module") and hasattr(mlir, "mhlo_to_stablehlo"):
+        comp = xc.XlaComputation(proto)
+        mhlo_text = mlir.xla_computation_to_mlir_module(comp)
+        return mlir.mhlo_to_stablehlo(mhlo_text.encode())
+    pytest.skip("installed jaxlib exposes no HLO->StableHLO conversion")
+
+
 def run_hlo_text(text: str, args):
     """Compile HLO text with the in-process CPU client and execute — the
     same path the Rust runtime takes (HloModuleProto::from_text)."""
@@ -20,9 +35,12 @@ def run_hlo_text(text: str, args):
     # proving the text is a complete, parseable program (the Rust runtime
     # parses the same text with HloModuleProto::from_text).
     mod = xc._xla.hlo_module_from_text(text)
-    stablehlo = xc._xla.mlir.hlo_to_stablehlo(mod.as_serialized_hlo_module_proto())
-    devices = xc._xla.DeviceList(tuple(client.devices()))
-    exe = client.compile_and_load(stablehlo, devices)
+    stablehlo = _hlo_proto_to_stablehlo(mod.as_serialized_hlo_module_proto())
+    if hasattr(client, "compile_and_load"):
+        devices = xc._xla.DeviceList(tuple(client.devices()))
+        exe = client.compile_and_load(stablehlo, devices)
+    else:
+        exe = client.compile(stablehlo)
     bufs = [client.buffer_from_pyval(a) for a in args]
     out = exe.execute(bufs)
     return [np.asarray(o) for o in out]

@@ -7,6 +7,8 @@ Table-1 sizes. This is the gate `make artifacts` quality rests on.
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="property sweeps need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import capped_pow2_split, is_pow2, log2_exact

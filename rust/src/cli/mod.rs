@@ -30,35 +30,35 @@ impl Args {
         self.get(key).unwrap_or(default)
     }
 
-    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+                .map_err(|_| CliError::BadValue(format!("--{key} expects an integer, got '{v}'"))),
         }
     }
 
-    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+                .map_err(|_| CliError::BadValue(format!("--{key} expects a number, got '{v}'"))),
         }
     }
 
-    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+                .map_err(|_| CliError::BadValue(format!("--{key} expects an integer, got '{v}'"))),
         }
     }
 
     /// Comma-separated list of usizes, e.g. `--sizes 16,64,256`.
-    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
         match self.get(key) {
             None => Ok(default.to_vec()),
             Some(v) => v
@@ -66,7 +66,7 @@ impl Args {
                 .map(|s| {
                     s.trim()
                         .parse()
-                        .map_err(|_| anyhow::anyhow!("--{key}: bad integer '{s}'"))
+                        .map_err(|_| CliError::BadValue(format!("--{key}: bad integer '{s}'")))
                 })
                 .collect(),
         }
@@ -117,17 +117,28 @@ pub struct Cli {
     pub commands: Vec<Command>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown subcommand '{0}'")]
     UnknownSubcommand(String),
-    #[error("unknown option '--{0}'")]
     UnknownOption(String),
-    #[error("option '--{0}' requires a value")]
     MissingValue(String),
-    #[error("help requested")]
+    BadValue(String),
     Help,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownSubcommand(s) => write!(f, "unknown subcommand '{s}'"),
+            CliError::UnknownOption(s) => write!(f, "unknown option '--{s}'"),
+            CliError::MissingValue(s) => write!(f, "option '--{s}' requires a value"),
+            CliError::BadValue(msg) => write!(f, "{msg}"),
+            CliError::Help => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Cli {
     pub fn new(bin: &'static str, about: &'static str) -> Self {

@@ -51,16 +51,40 @@ impl Value {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("line {0}: {1}")]
     Parse(usize, String),
-    #[error("missing key '{0}'")]
     Missing(String),
-    #[error("key '{0}' has wrong type (expected {1})")]
     Type(String, &'static str),
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse(line, msg) => write!(f, "line {line}: {msg}"),
+            ConfigError::Missing(key) => write!(f, "missing key '{key}'"),
+            ConfigError::Type(key, expected) => {
+                write!(f, "key '{key}' has wrong type (expected {expected})")
+            }
+            ConfigError::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
 }
 
 /// Parsed document: dotted-path -> value (e.g. `service.max_batch`).
@@ -221,7 +245,13 @@ pub struct ServiceConfig {
     pub max_delay_us: u64,
     /// Bounded queue depth before requests are rejected (backpressure).
     pub queue_depth: usize,
-    /// FFT method to serve: "fourstep" | "stockham" | "perlevel" | "xla".
+    /// Execution backend selector, routed once through
+    /// `coordinator::backend::for_config`:
+    /// - "fourstep" | "stockham" | "perlevel" | "xla" — the named AOT
+    ///   artifact family on the PJRT backend (degrades to native when the
+    ///   engine cannot start);
+    /// - "native" — the in-process CPU FFT library;
+    /// - "modeled" — native numerics with gpusim C2070 cost-model timing.
     pub method: String,
     /// Sizes the service accepts (must have artifacts).
     pub sizes: Vec<usize>,

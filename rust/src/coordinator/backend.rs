@@ -1,0 +1,503 @@
+//! The `Backend` execution interface: one contract from the coordinator to
+//! every substrate.
+//!
+//! A worker thread hands a size-homogeneous [`BatchSpec`] plus planar
+//! `f32` re/im planes to `Backend::execute_batch` and gets planar planes
+//! back — regardless of whether the batch runs on:
+//!
+//! - [`NativeBackend`] — the in-process CPU FFT library, batched through
+//!   the `Transform` trait with one planar↔interleaved conversion per
+//!   batch and a per-worker [`PlanCache`];
+//! - [`PjrtBackend`] — AOT HLO artifacts executed by `runtime::Engine`
+//!   (greedy chunking over the per-(n, batch) artifact variants);
+//! - [`ModeledBackend`] — numerics from the native library, but execution
+//!   time from the gpusim C2070 cost model, for capacity planning and
+//!   what-if tests without the paper's hardware.
+//!
+//! Backend selection is the `method` config knob, routed once through
+//! [`for_config`] — no per-method branches anywhere else in the
+//! coordinator. PJRT engines are thread-confined (`Rc`-based client), so
+//! each worker constructs its own backend on its own thread; the trait
+//! therefore takes `&mut self` and deliberately does not require `Send`.
+
+use std::time::{Duration, Instant};
+
+use super::request::{Direction, ServiceError};
+use crate::config::ServiceConfig;
+use crate::fft::{Algorithm, PlanCache};
+use crate::gpusim::{self, GpuDescriptor, TiledOptions};
+use crate::runtime::Engine;
+use crate::util::complex::C32;
+use crate::util::is_pow2;
+
+/// One size-homogeneous batch of transforms: `batch` rows of `n` points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchSpec {
+    pub n: usize,
+    pub batch: usize,
+    pub direction: Direction,
+}
+
+/// Planar result planes plus execution accounting.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+    /// Substrate execution time for the whole batch (PJRT execute wall
+    /// time, native transform time, or the cost model's prediction).
+    pub exec_time: Duration,
+    /// Plan/executable cache hits and misses this execution incurred.
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+}
+
+/// Errors a backend can surface; the service maps them onto
+/// [`ServiceError`] replies without tearing the worker down.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BackendError {
+    /// No plan/artifact can serve this size.
+    UnsupportedSize(usize),
+    /// Input planes do not match `batch * n`.
+    Shape { expected: usize, got: usize },
+    /// Substrate execution failed.
+    Exec(String),
+}
+
+impl std::fmt::Display for BackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendError::UnsupportedSize(n) => write!(f, "unsupported transform size {n}"),
+            BackendError::Shape { expected, got } => {
+                write!(f, "input planes hold {got} f32s, batch needs {expected}")
+            }
+            BackendError::Exec(msg) => write!(f, "execution failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+impl From<BackendError> for ServiceError {
+    fn from(e: BackendError) -> Self {
+        match e {
+            BackendError::UnsupportedSize(n) => ServiceError::UnsupportedSize(n),
+            // Shape carries batch-total plane lengths, not a transform
+            // size, so it does not fit BadInput's n/got fields.
+            shape @ BackendError::Shape { .. } => ServiceError::Exec(shape.to_string()),
+            BackendError::Exec(msg) => ServiceError::Exec(msg),
+        }
+    }
+}
+
+/// An execution substrate for batched FFTs.
+pub trait Backend {
+    /// Substrate name for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Pre-populate plan/executable caches for the configured sizes so the
+    /// request path never pays plan construction or XLA compiles.
+    fn warmup(&mut self, sizes: &[usize]) -> Result<(), BackendError>;
+
+    /// Execute one batch: `re`/`im` are planar `[batch * n]` planes,
+    /// row-major. Returns planar planes of the same shape.
+    fn execute_batch(
+        &mut self,
+        spec: &BatchSpec,
+        re: &[f32],
+        im: &[f32],
+    ) -> Result<BatchOutput, BackendError>;
+}
+
+fn check_planes(spec: &BatchSpec, re: &[f32], im: &[f32]) -> Result<usize, BackendError> {
+    if spec.n == 0 || spec.batch == 0 {
+        return Err(BackendError::UnsupportedSize(spec.n));
+    }
+    let total = spec
+        .batch
+        .checked_mul(spec.n)
+        .ok_or(BackendError::UnsupportedSize(spec.n))?;
+    if re.len() != total || im.len() != total {
+        return Err(BackendError::Shape { expected: total, got: re.len().min(im.len()) });
+    }
+    Ok(total)
+}
+
+/// CPU library substrate: `Transform`-batched, plan-cached per worker.
+pub struct NativeBackend {
+    plans: PlanCache,
+    algo: Algorithm,
+    /// Interleaved staging buffers + transform scratch, reused across
+    /// batches so steady-state serving does not allocate on the hot path.
+    input: Vec<C32>,
+    output: Vec<C32>,
+    scratch: Vec<C32>,
+}
+
+impl NativeBackend {
+    pub fn new(algo: Algorithm) -> Self {
+        Self {
+            plans: PlanCache::new(),
+            algo,
+            input: Vec::new(),
+            output: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Memoized plans held by this backend (observability).
+    pub fn plan_count(&self) -> usize {
+        self.plans.len()
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new(Algorithm::Auto)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn warmup(&mut self, sizes: &[usize]) -> Result<(), BackendError> {
+        for &n in sizes {
+            self.plans
+                .try_get(n, self.algo)
+                .map_err(|e| BackendError::Exec(e.to_string()))?;
+        }
+        Ok(())
+    }
+
+    fn execute_batch(
+        &mut self,
+        spec: &BatchSpec,
+        re: &[f32],
+        im: &[f32],
+    ) -> Result<BatchOutput, BackendError> {
+        let total = check_planes(spec, re, im)?;
+        let t = Instant::now();
+        let hit = self.plans.contains(spec.n, self.algo);
+        let plan = self
+            .plans
+            .try_get(spec.n, self.algo)
+            .map_err(|_| BackendError::UnsupportedSize(spec.n))?;
+
+        // Planar → interleaved, once per batch (not per request).
+        self.input.clear();
+        self.input.extend(re.iter().zip(im).map(|(&a, &b)| C32::new(a, b)));
+        self.output.resize(total, C32::ZERO);
+        self.scratch.resize(plan.scratch_len(), C32::ZERO);
+
+        let run = match spec.direction {
+            Direction::Forward => plan.forward_batch_into(
+                spec.batch,
+                &self.input,
+                &mut self.output,
+                &mut self.scratch,
+            ),
+            Direction::Inverse => plan.inverse_batch_into(
+                spec.batch,
+                &self.input,
+                &mut self.output,
+                &mut self.scratch,
+            ),
+        };
+        run.map_err(|e| BackendError::Exec(e.to_string()))?;
+
+        // Interleaved → planar, once per batch.
+        let mut out_re = Vec::with_capacity(total);
+        let mut out_im = Vec::with_capacity(total);
+        for c in &self.output {
+            out_re.push(c.re);
+            out_im.push(c.im);
+        }
+        Ok(BatchOutput {
+            re: out_re,
+            im: out_im,
+            exec_time: t.elapsed(),
+            plan_cache_hits: hit as u64,
+            plan_cache_misses: (!hit) as u64,
+        })
+    }
+}
+
+/// PJRT substrate: AOT HLO artifacts, greedy chunking over the available
+/// per-(n, batch) variants so padding waste stays bounded by the variant
+/// granularity (≤2x) even for odd tails.
+pub struct PjrtBackend {
+    engine: Engine,
+    method: String,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &str, method: &str) -> Result<Self, BackendError> {
+        let engine = Engine::new(artifacts_dir).map_err(|e| BackendError::Exec(e.to_string()))?;
+        Ok(Self { engine, method: method.to_string() })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn warmup(&mut self, sizes: &[usize]) -> Result<(), BackendError> {
+        self.engine
+            .warmup_sizes("fft", &self.method, sizes)
+            .map(|_| ())
+            .map_err(|e| BackendError::Exec(e.to_string()))
+    }
+
+    fn execute_batch(
+        &mut self,
+        spec: &BatchSpec,
+        re: &[f32],
+        im: &[f32],
+    ) -> Result<BatchOutput, BackendError> {
+        let total = check_planes(spec, re, im)?;
+        let n = spec.n;
+        let op = spec.direction.op();
+        // Fail fast (and cheaply) when no artifact family exists at all.
+        self.engine
+            .index()
+            .find_fft(op, &self.method, n, 1)
+            .map_err(|_| BackendError::UnsupportedSize(n))?;
+
+        let mut out_re = vec![0f32; total];
+        let mut out_im = vec![0f32; total];
+        let mut exec_time = Duration::ZERO;
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let mut done = 0usize;
+        while done < spec.batch {
+            let remaining = spec.batch - done;
+            // Smallest artifact variant covering the tail (falls back to
+            // the largest — then this loop round-trips again).
+            let entry = self
+                .engine
+                .index()
+                .find_fft(op, &self.method, n, remaining)
+                .map_err(|_| BackendError::UnsupportedSize(n))?
+                .clone();
+            let take = remaining.min(entry.batch);
+            if self.engine.is_loaded(&entry.name) {
+                hits += 1;
+            } else {
+                misses += 1;
+            }
+            // Pad the chunk up to the variant's batch.
+            let mut chunk_re = vec![0f32; entry.batch * n];
+            let mut chunk_im = vec![0f32; entry.batch * n];
+            chunk_re[..take * n].copy_from_slice(&re[done * n..(done + take) * n]);
+            chunk_im[..take * n].copy_from_slice(&im[done * n..(done + take) * n]);
+            let out = self
+                .engine
+                .run_fft(&entry, &chunk_re, &chunk_im)
+                .map_err(|e| BackendError::Exec(e.to_string()))?;
+            exec_time += out.exec_time;
+            out_re[done * n..(done + take) * n].copy_from_slice(&out.re[..take * n]);
+            out_im[done * n..(done + take) * n].copy_from_slice(&out.im[..take * n]);
+            done += take;
+        }
+        Ok(BatchOutput {
+            re: out_re,
+            im: out_im,
+            exec_time,
+            plan_cache_hits: hits,
+            plan_cache_misses: misses,
+        })
+    }
+}
+
+/// Cost-model substrate: numerics from the native library, `exec_time`
+/// from the gpusim tiled-schedule prediction for the paper's C2070 — lets
+/// capacity tests ask "what would this workload look like on the paper's
+/// GPU" without the hardware.
+pub struct ModeledBackend {
+    native: NativeBackend,
+    gpu: GpuDescriptor,
+}
+
+impl ModeledBackend {
+    pub fn new() -> Self {
+        Self { native: NativeBackend::default(), gpu: GpuDescriptor::tesla_c2070() }
+    }
+}
+
+impl Default for ModeledBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for ModeledBackend {
+    fn name(&self) -> &'static str {
+        "modeled"
+    }
+
+    fn warmup(&mut self, sizes: &[usize]) -> Result<(), BackendError> {
+        self.native.warmup(sizes)
+    }
+
+    fn execute_batch(
+        &mut self,
+        spec: &BatchSpec,
+        re: &[f32],
+        im: &[f32],
+    ) -> Result<BatchOutput, BackendError> {
+        let mut out = self.native.execute_batch(spec, re, im)?;
+        if is_pow2(spec.n) {
+            let sched = gpusim::tiled(spec.n, spec.batch, TiledOptions::default(), &self.gpu);
+            out.exec_time = Duration::from_secs_f64(sched.predict(&self.gpu).total_s);
+        }
+        Ok(out)
+    }
+}
+
+/// Resolve the configured `method` to a backend. Called once per worker
+/// thread (PJRT clients are thread-confined). PJRT methods degrade to the
+/// native library when the engine cannot start — a deployment without
+/// artifacts still serves.
+pub fn for_config(cfg: &ServiceConfig) -> Box<dyn Backend> {
+    match cfg.method.as_str() {
+        "native" => Box::new(NativeBackend::default()),
+        "modeled" => Box::new(ModeledBackend::new()),
+        method => match PjrtBackend::new(&cfg.artifacts_dir, method) {
+            Ok(b) => Box::new(b),
+            Err(err) => {
+                eprintln!("worker: engine init failed ({err}); falling back to native");
+                Box::new(NativeBackend::default())
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn impulse(n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut re = vec![0f32; n];
+        re[0] = 1.0;
+        (re, vec![0f32; n])
+    }
+
+    #[test]
+    fn native_impulse_batch_is_all_ones() {
+        let mut b = NativeBackend::default();
+        let n = 64;
+        let batch = 3;
+        let (ire, iim) = impulse(n);
+        let re: Vec<f32> = ire.iter().cycle().take(batch * n).copied().collect();
+        let im: Vec<f32> = iim.iter().cycle().take(batch * n).copied().collect();
+        let spec = BatchSpec { n, batch, direction: Direction::Forward };
+        let out = b.execute_batch(&spec, &re, &im).unwrap();
+        assert_eq!(out.re.len(), batch * n);
+        for k in 0..batch * n {
+            assert!((out.re[k] - 1.0).abs() < 1e-5, "re[{k}]={}", out.re[k]);
+            assert!(out.im[k].abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn native_counts_cache_hits_after_warmup() {
+        let mut b = NativeBackend::default();
+        b.warmup(&[256]).unwrap();
+        assert_eq!(b.plan_count(), 1);
+        let (re, im) = impulse(256);
+        let spec = BatchSpec { n: 256, batch: 1, direction: Direction::Forward };
+        let out = b.execute_batch(&spec, &re, &im).unwrap();
+        assert_eq!(out.plan_cache_hits, 1);
+        assert_eq!(out.plan_cache_misses, 0);
+        // An unwarmed size records a miss, then hits.
+        let (re, im) = impulse(128);
+        let spec = BatchSpec { n: 128, batch: 1, direction: Direction::Forward };
+        assert_eq!(b.execute_batch(&spec, &re, &im).unwrap().plan_cache_misses, 1);
+        assert_eq!(b.execute_batch(&spec, &re, &im).unwrap().plan_cache_hits, 1);
+    }
+
+    #[test]
+    fn native_roundtrip_forward_inverse() {
+        let mut b = NativeBackend::default();
+        let n = 128;
+        let mut rng = crate::util::Xoshiro256::seeded(9);
+        let re = rng.real_vec(n);
+        let im = rng.real_vec(n);
+        let fwd = BatchSpec { n, batch: 1, direction: Direction::Forward };
+        let f = b.execute_batch(&fwd, &re, &im).unwrap();
+        let inv = BatchSpec { n, batch: 1, direction: Direction::Inverse };
+        let back = b.execute_batch(&inv, &f.re, &f.im).unwrap();
+        for k in 0..n {
+            assert!((back.re[k] - re[k]).abs() < 1e-3);
+            assert!((back.im[k] - im[k]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn native_rejects_bad_planes_and_zero() {
+        let mut b = NativeBackend::default();
+        let spec = BatchSpec { n: 64, batch: 2, direction: Direction::Forward };
+        let err = b.execute_batch(&spec, &[0.0; 64], &[0.0; 64]).unwrap_err();
+        assert!(matches!(err, BackendError::Shape { expected: 128, got: 64 }));
+        let spec = BatchSpec { n: 0, batch: 1, direction: Direction::Forward };
+        assert!(matches!(
+            b.execute_batch(&spec, &[], &[]).unwrap_err(),
+            BackendError::UnsupportedSize(0)
+        ));
+    }
+
+    #[test]
+    fn modeled_backend_uses_cost_model_time() {
+        let mut b = ModeledBackend::new();
+        let n = 1024;
+        let (re, im) = impulse(n);
+        let spec = BatchSpec { n, batch: 1, direction: Direction::Forward };
+        let out = b.execute_batch(&spec, &re, &im).unwrap();
+        // Numerics still real...
+        for k in 0..n {
+            assert!((out.re[k] - 1.0).abs() < 1e-4);
+        }
+        // ...but the reported time is the deterministic model prediction.
+        let gpu = GpuDescriptor::tesla_c2070();
+        let predicted = gpusim::tiled(n, 1, TiledOptions::default(), &gpu).predict(&gpu).total_s;
+        assert_eq!(out.exec_time, Duration::from_secs_f64(predicted));
+    }
+
+    #[test]
+    fn for_config_routes_methods() {
+        let native = for_config(&ServiceConfig { method: "native".into(), ..Default::default() });
+        assert_eq!(native.name(), "native");
+        let modeled =
+            for_config(&ServiceConfig { method: "modeled".into(), ..Default::default() });
+        assert_eq!(modeled.name(), "modeled");
+        // PJRT methods degrade to native when no artifacts exist.
+        let fallback = for_config(&ServiceConfig {
+            method: "fourstep".into(),
+            artifacts_dir: "/nonexistent-artifacts".into(),
+            ..Default::default()
+        });
+        assert_eq!(fallback.name(), "native");
+    }
+
+    #[test]
+    fn backend_error_maps_to_service_error() {
+        assert_eq!(
+            ServiceError::from(BackendError::UnsupportedSize(12)),
+            ServiceError::UnsupportedSize(12)
+        );
+        assert!(matches!(
+            ServiceError::from(BackendError::Shape { expected: 8, got: 4 }),
+            ServiceError::Exec(msg) if msg.contains("8")
+        ));
+        assert_eq!(
+            ServiceError::from(BackendError::Exec("boom".into())),
+            ServiceError::Exec("boom".into())
+        );
+    }
+}

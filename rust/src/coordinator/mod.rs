@@ -3,14 +3,19 @@
 //! The paper's contribution lives at L1/L2 (the memory-optimized kernel),
 //! so per DESIGN.md the coordinator is the thin-but-real driver: request
 //! types, a size-bucketed dynamic batcher, a worker pool whose threads each
-//! own a PJRT engine with plan-cached executables, bounded-queue
-//! backpressure, and per-stage metrics.
+//! own one execution [`Backend`] (PJRT artifacts, the in-process CPU
+//! library, or the gpusim cost model — selected by the `method` config
+//! knob through `backend::for_config`), bounded-queue backpressure, and
+//! per-stage metrics. Workers speak only `Backend::execute_batch`; no
+//! substrate-specific branches exist outside `backend.rs`.
 
+pub mod backend;
 pub mod batcher;
 pub mod request;
 pub mod service;
 pub mod workload;
 
+pub use backend::{Backend, BackendError, BatchOutput, BatchSpec, ModeledBackend, NativeBackend, PjrtBackend};
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use request::{Direction, FftRequest, FftResponse, FftResult, ServiceError};
 pub use service::FftService;

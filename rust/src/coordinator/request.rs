@@ -33,19 +33,32 @@ pub struct FftRequest {
 }
 
 /// Service-level errors surfaced to clients.
-#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ServiceError {
-    #[error("queue full — request rejected (backpressure)")]
     Rejected,
-    #[error("unsupported size {0} (not a power of two or no artifact)")]
     UnsupportedSize(usize),
-    #[error("input length {got} does not match n={n}")]
     BadInput { n: usize, got: usize },
-    #[error("execution failed: {0}")]
     Exec(String),
-    #[error("service shutting down")]
     Shutdown,
 }
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Rejected => write!(f, "queue full — request rejected (backpressure)"),
+            ServiceError::UnsupportedSize(n) => {
+                write!(f, "unsupported size {n} (not a power of two or no artifact)")
+            }
+            ServiceError::BadInput { n, got } => {
+                write!(f, "input length {got} does not match n={n}")
+            }
+            ServiceError::Exec(msg) => write!(f, "execution failed: {msg}"),
+            ServiceError::Shutdown => write!(f, "service shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
 
 /// Successful response payload.
 #[derive(Debug, Clone)]

@@ -1,4 +1,4 @@
-//! The FFT service: leader (batcher) thread + worker pool over PJRT engines.
+//! The FFT service: leader (batcher) thread + worker pool over [`Backend`]s.
 //!
 //! Data flow (no Python anywhere on this path):
 //!
@@ -6,11 +6,14 @@
 //!              │ backpressure: Rejected            │ full / expired batches
 //!              ▼                                    ▼
 //!        FftResult rx  ◄── reply channels ──  worker threads
-//!                                              (each owns a PJRT Engine,
-//!                                               plan-cached executables)
+//!                                              (each owns one Backend:
+//!                                               pjrt / native / modeled)
 //!
-//! Method "native" bypasses PJRT and serves from the in-process Rust FFT
-//! library — used for tests without artifacts and as a deployment fallback.
+//! Workers are substrate-agnostic: every batch goes through
+//! `Backend::execute_batch` with planar f32 planes, and which substrate
+//! that is — PJRT artifacts, the in-process CPU library, or the gpusim
+//! cost model — is decided once per worker by `backend::for_config` from
+//! the `method` config knob.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
@@ -18,12 +21,11 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::backend::{self, Backend, BatchSpec};
 use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::request::{Direction, FftRequest, FftResponse, FftResult, ServiceError};
 use crate::config::ServiceConfig;
-use crate::fft::{Algorithm, PlanCache};
 use crate::metrics::ServiceMetrics;
-use crate::runtime::Engine;
 use crate::util::is_pow2;
 
 enum BatcherMsg {
@@ -205,29 +207,18 @@ fn worker_loop(
     cfg: ServiceConfig,
     ready: mpsc::Sender<()>,
 ) {
-    // Each worker owns its engine (PjRtClient is thread-confined) and a
-    // native-plan cache for the "native" method / fallback.
-    let engine: Option<Engine> = if cfg.method == "native" {
-        None
-    } else {
-        match Engine::new(&cfg.artifacts_dir) {
-            Ok(e) => {
-                if cfg.warmup {
-                    // Compile the served sizes up front; the request path
-                    // then only ever hits the plan cache.
-                    if let Err(err) = e.warmup_sizes("fft", &cfg.method, &cfg.sizes) {
-                        log::warn!("worker warmup: {err}");
-                    }
-                }
-                Some(e)
-            }
-            Err(err) => {
-                log::error!("worker: engine init failed ({err}); falling back to native");
-                None
-            }
+    // Each worker owns one Backend (PJRT clients are thread-confined, so
+    // construction must happen on this thread). Which substrate it is —
+    // and the pjrt→native degradation when artifacts are missing — is
+    // backend::for_config's business, not the worker's.
+    let mut backend = backend::for_config(&cfg);
+    if cfg.warmup {
+        // Populate plan/executable caches for the served sizes up front;
+        // the request path then never plans or compiles.
+        if let Err(err) = backend.warmup(&cfg.sizes) {
+            eprintln!("worker warmup ({}): {err}", backend.name());
         }
-    };
-    let native = PlanCache::new();
+    }
     let _ = ready.send(()); // init + warmup done; service may go live
 
     loop {
@@ -238,17 +229,14 @@ fn worker_loop(
                 Err(_) => return, // batcher gone, no more work
             }
         };
-        execute_batch(batch, engine.as_ref(), &native, &metrics, &cfg);
+        run_batch(batch, backend.as_mut(), &metrics);
     }
 }
 
-fn execute_batch(
-    batch: Batch,
-    engine: Option<&Engine>,
-    native: &PlanCache,
-    metrics: &ServiceMetrics,
-    cfg: &ServiceConfig,
-) {
+/// The one execution path: gather planar planes, run the batch through
+/// `Backend::execute_batch`, scatter responses. Substrate differences
+/// (chunking, plan caches, cost models) live behind the trait.
+fn run_batch(batch: Batch, backend: &mut dyn Backend, metrics: &ServiceMetrics) {
     let n = batch.n;
     let count = batch.requests.len();
     let now = Instant::now();
@@ -258,103 +246,36 @@ fn execute_batch(
         metrics.queue_latency.record(now.duration_since(r.submitted_at));
     }
 
-    match engine {
-        Some(engine) => execute_batch_pjrt(batch, engine, metrics, cfg),
-        None => execute_batch_native(batch, native, metrics),
+    // Planar gather: one [count * n] plane pair for the whole batch.
+    let mut re = Vec::with_capacity(count * n);
+    let mut im = Vec::with_capacity(count * n);
+    for r in &batch.requests {
+        re.extend_from_slice(&r.re);
+        im.extend_from_slice(&r.im);
     }
+    let spec = BatchSpec { n, batch: count, direction: batch.direction };
 
-    let _ = n;
-}
-
-fn execute_batch_pjrt(batch: Batch, engine: &Engine, metrics: &ServiceMetrics, cfg: &ServiceConfig) {
-    let n = batch.n;
-    let op = batch.direction.op();
-    if engine.index().find_fft(op, &cfg.method, n, 1).is_err() {
-        fail_batch(batch, ServiceError::UnsupportedSize(n), metrics);
-        return;
-    }
-    // Greedy chunking with per-chunk variant selection: each chunk runs on
-    // the smallest artifact batch that covers it, so padding waste stays
-    // bounded by the variant granularity (≤2x) even for odd tails.
-    let mut rest: &[FftRequest] = &batch.requests;
-    while !rest.is_empty() {
-        let entry = engine
-            .index()
-            .find_fft(op, &cfg.method, n, rest.len())
-            .expect("variant exists for batch>=1")
-            .clone();
-        let take = rest.len().min(entry.batch);
-        let (chunk, tail) = rest.split_at(take);
-        rest = tail;
-        if engine.is_loaded(&entry.name) {
-            metrics.plan_cache_hits.inc();
-        } else {
-            metrics.plan_cache_misses.inc();
-        }
-        let mut re = vec![0f32; entry.batch * n];
-        let mut im = vec![0f32; entry.batch * n];
-        for (i, r) in chunk.iter().enumerate() {
-            re[i * n..(i + 1) * n].copy_from_slice(&r.re);
-            im[i * n..(i + 1) * n].copy_from_slice(&r.im);
-        }
-        match engine.run_fft(&entry, &re, &im) {
-            Ok(out) => {
-                metrics.exec_latency.record(out.exec_time);
-                let done = Instant::now();
-                for (i, r) in chunk.iter().enumerate() {
-                    let resp = FftResponse {
-                        id: r.id,
-                        re: out.re[i * n..(i + 1) * n].to_vec(),
-                        im: out.im[i * n..(i + 1) * n].to_vec(),
-                        queue_time: done.duration_since(r.submitted_at).saturating_sub(out.exec_time),
-                        exec_time: out.exec_time,
-                        batch_size: chunk.len(),
-                    };
-                    metrics.e2e_latency.record(done.duration_since(r.submitted_at));
-                    metrics.requests_done.inc();
-                    let _ = r.reply.send(Ok(resp));
-                }
-            }
-            Err(err) => {
-                let msg = err.to_string();
-                for r in chunk {
-                    metrics.requests_failed.inc();
-                    let _ = r.reply.send(Err(ServiceError::Exec(msg.clone())));
-                }
+    match backend.execute_batch(&spec, &re, &im) {
+        Ok(out) => {
+            metrics.exec_latency.record(out.exec_time);
+            metrics.plan_cache_hits.add(out.plan_cache_hits);
+            metrics.plan_cache_misses.add(out.plan_cache_misses);
+            let done = Instant::now();
+            for (i, r) in batch.requests.iter().enumerate() {
+                let resp = FftResponse {
+                    id: r.id,
+                    re: out.re[i * n..(i + 1) * n].to_vec(),
+                    im: out.im[i * n..(i + 1) * n].to_vec(),
+                    queue_time: done.duration_since(r.submitted_at).saturating_sub(out.exec_time),
+                    exec_time: out.exec_time,
+                    batch_size: count,
+                };
+                metrics.e2e_latency.record(done.duration_since(r.submitted_at));
+                metrics.requests_done.inc();
+                let _ = r.reply.send(Ok(resp));
             }
         }
-    }
-}
-
-fn execute_batch_native(batch: Batch, native: &PlanCache, metrics: &ServiceMetrics) {
-    let n = batch.n;
-    let plan = native.get(n, Algorithm::Auto);
-    for r in batch.requests {
-        let t = Instant::now();
-        let mut data: Vec<crate::util::C32> = r
-            .re
-            .iter()
-            .zip(&r.im)
-            .map(|(&re, &im)| crate::util::C32::new(re, im))
-            .collect();
-        match r.direction {
-            Direction::Forward => plan.forward(&mut data),
-            Direction::Inverse => plan.inverse(&mut data),
-        }
-        let exec_time = t.elapsed();
-        metrics.exec_latency.record(exec_time);
-        let done = Instant::now();
-        metrics.e2e_latency.record(done.duration_since(r.submitted_at));
-        metrics.requests_done.inc();
-        let resp = FftResponse {
-            id: r.id,
-            re: data.iter().map(|c| c.re).collect(),
-            im: data.iter().map(|c| c.im).collect(),
-            queue_time: done.duration_since(r.submitted_at).saturating_sub(exec_time),
-            exec_time,
-            batch_size: 1,
-        };
-        let _ = r.reply.send(Ok(resp));
+        Err(err) => fail_batch(batch, err.into(), metrics),
     }
 }
 
@@ -474,6 +395,72 @@ mod tests {
         let batches = svc.metrics().batches_executed.get();
         assert!(batches < 32, "expected batching, got {batches} batches for 32 reqs");
         assert!(svc.metrics().mean_batch_fill() > 1.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn mixed_size_batched_workload_hits_warm_plan_cache() {
+        // Acceptance: method = "native" serves a mixed-size batched
+        // workload through Backend::execute_batch with ZERO per-request
+        // plan construction — after warmup every batch is a plan-cache
+        // hit, and the hit count equals the executed-batch count.
+        let sizes = [64usize, 256, 1024];
+        let svc = FftService::start(ServiceConfig {
+            method: "native".into(),
+            workers: 2,
+            max_batch: 8,
+            max_delay_us: 200,
+            queue_depth: 512,
+            sizes: sizes.to_vec(),
+            ..Default::default()
+        });
+        let mut rng = crate::util::Xoshiro256::seeded(11);
+        let rxs: Vec<_> = (0..90)
+            .map(|_| {
+                let n = *rng.choose(&sizes);
+                svc.submit(n, Direction::Forward, rng.real_vec(n), rng.real_vec(n)).unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        assert_eq!(svc.metrics().requests_done.get(), 90);
+        assert_eq!(
+            svc.metrics().plan_cache_misses.get(),
+            0,
+            "warmup must cover every served size — no request-path planning"
+        );
+        assert_eq!(
+            svc.metrics().plan_cache_hits.get(),
+            svc.metrics().batches_executed.get(),
+            "every executed batch is exactly one plan-cache hit"
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn modeled_method_serves_with_cost_model_exec_time() {
+        let svc = FftService::start(ServiceConfig {
+            method: "modeled".into(),
+            workers: 1,
+            max_batch: 4,
+            max_delay_us: 100,
+            queue_depth: 64,
+            ..Default::default()
+        });
+        let n = 1024;
+        let mut re = vec![0f32; n];
+        re[0] = 1.0;
+        let resp = svc.fft_blocking(n, Direction::Forward, re, vec![0f32; n]).unwrap();
+        for k in 0..n {
+            assert!((resp.re[k] - 1.0).abs() < 1e-4, "re[{k}]={}", resp.re[k]);
+        }
+        // exec_time is the deterministic C2070 prediction, not wall time.
+        let gpu = crate::gpusim::GpuDescriptor::tesla_c2070();
+        let predicted = crate::gpusim::tiled(n, 1, crate::gpusim::TiledOptions::default(), &gpu)
+            .predict(&gpu)
+            .total_s;
+        assert_eq!(resp.exec_time, Duration::from_secs_f64(predicted));
         svc.shutdown();
     }
 

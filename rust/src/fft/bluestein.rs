@@ -7,6 +7,7 @@
 //! `j² mod 2n` reduction to keep the angle exact.
 
 use super::stockham::Stockham;
+use super::transform::{check_inplace, FftError, Transform};
 use crate::util::complex::{C32, C64};
 use crate::util::next_pow2;
 
@@ -51,22 +52,41 @@ impl Bluestein {
     }
 
     pub fn forward(&self, x: &mut [C32]) {
+        super::scratch::with_scratch(Transform::scratch_len(self), |scratch| {
+            self.forward_with_scratch(x, scratch);
+        });
+    }
+
+    /// Forward FFT with caller-owned scratch of at least `2 * m` elements:
+    /// the length-m convolution buffer followed by the pow2-FFT ping-pong
+    /// buffer.
+    pub fn forward_with_scratch(&self, x: &mut [C32], scratch: &mut [C32]) {
         assert_eq!(x.len(), self.n);
+        assert!(scratch.len() >= 2 * self.m, "scratch too small");
         if self.n == 1 {
             return;
         }
+        let (a, fft_scratch) = scratch.split_at_mut(self.m);
+        let fft_scratch = &mut fft_scratch[..self.m];
         // a[j] = x[j] * chirp[j], zero-padded to m.
-        let mut a = vec![C32::ZERO; self.m];
         for j in 0..self.n {
             a[j] = x[j] * self.chirp[j];
         }
+        a[self.n..].fill(C32::ZERO);
         // Circular convolution with the kernel via the pow2 FFT.
-        self.fft.forward(&mut a);
-        for (v, k) in a.iter_mut().zip(&self.kernel_f) {
+        self.fft.forward_with_scratch(a, fft_scratch);
+        for (v, k) in a.iter_mut().zip(self.kernel_f.iter()) {
             *v *= *k;
         }
         // Inverse FFT (conjugation trick, 1/m scaling).
-        super::radix2::conj_inverse(&mut a, |buf| self.fft.forward(buf));
+        for v in a.iter_mut() {
+            *v = v.conj();
+        }
+        self.fft.forward_with_scratch(a, fft_scratch);
+        let scale = 1.0 / self.m as f32;
+        for v in a.iter_mut() {
+            *v = v.conj().scale(scale);
+        }
         // X[k] = chirp[k] * conv[k].
         for k in 0..self.n {
             x[k] = a[k] * self.chirp[k];
@@ -75,6 +95,24 @@ impl Bluestein {
 
     pub fn inverse(&self, x: &mut [C32]) {
         super::radix2::conj_inverse(x, |buf| self.forward(buf));
+    }
+}
+
+impl Transform for Bluestein {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn name(&self) -> &'static str {
+        "bluestein"
+    }
+    /// Length-m convolution buffer + length-m pow2-FFT ping-pong buffer.
+    fn scratch_len(&self) -> usize {
+        2 * self.m
+    }
+    fn forward_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
+        check_inplace(self.n, x, scratch, 2 * self.m)?;
+        self.forward_with_scratch(x, scratch);
+        Ok(())
     }
 }
 

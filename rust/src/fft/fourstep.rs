@@ -19,6 +19,7 @@
 //! replays its traffic.
 
 use super::stockham::Stockham;
+use super::transform::{check_inplace, FftError, Transform};
 use crate::util::complex::C32;
 use crate::util::{capped_pow2_split, is_pow2};
 
@@ -99,22 +100,30 @@ impl FourStep {
         }
     }
 
+    /// §Perf iter 1: scratch from the thread-local pool (a full-size
+    /// transpose buffer + a sub-FFT ping-pong buffer) instead of two
+    /// fresh allocations per call.
     pub fn forward(&self, x: &mut [C32]) {
-        assert_eq!(x.len(), self.n);
-        if let Some(direct) = &self.direct {
-            direct.forward(x);
-            return;
-        }
-        let (n1, n2) = (self.n1, self.n2);
-        // §Perf iter 1: scratch from the thread-local pool (a full-size
-        // transpose buffer + a sub-FFT ping-pong buffer) instead of two
-        // fresh allocations per call.
-        super::scratch::with_scratch2(self.n, n1.max(n2), |scratch, fft_scratch| {
-            self.forward_inner(x, scratch, fft_scratch);
+        super::scratch::with_scratch(Transform::scratch_len(self), |scratch| {
+            self.forward_with_scratch(x, scratch);
         });
     }
 
-    fn forward_inner(&self, x: &mut [C32], scratch: &mut [C32], fft_scratch: &mut [C32]) {
+    /// Forward FFT with caller-owned scratch of at least
+    /// `Transform::scratch_len(self)` elements: the full-size transpose
+    /// buffer followed by the sub-FFT ping-pong buffer.
+    pub fn forward_with_scratch(&self, x: &mut [C32], scratch: &mut [C32]) {
+        assert_eq!(x.len(), self.n);
+        assert!(scratch.len() >= Transform::scratch_len(self), "scratch too small");
+        if let Some(direct) = &self.direct {
+            direct.forward_with_scratch(x, &mut scratch[..self.n]);
+            return;
+        }
+        let (transpose_buf, fft_scratch) = scratch.split_at_mut(self.n);
+        self.forward_passes(x, transpose_buf, fft_scratch);
+    }
+
+    fn forward_passes(&self, x: &mut [C32], scratch: &mut [C32], fft_scratch: &mut [C32]) {
         let (n1, n2) = (self.n1, self.n2);
         let col = self.col_plan.as_ref().unwrap();
 
@@ -141,7 +150,10 @@ impl FourStep {
         // Step 4: transpose back (n2 × n1) -> x (n1 × n2).
         transpose(scratch, x, n2, n1);
 
-        // Step 5: per row k1 — FFT_{n2} (recursing if n2 > tile).
+        // Step 5: per row k1 — FFT_{n2} (recursing if n2 > tile). The
+        // recursion borrows the transpose buffer as its own scratch: it is
+        // dead between steps 4 and 6, and with n1 >= 2 its n elements
+        // always cover the inner plan's n2 + max(n2', n2'') requirement.
         match self.row_plan.as_ref().unwrap() {
             RowPlan::Leaf(plan) => {
                 for k1 in 0..n1 {
@@ -153,7 +165,7 @@ impl FourStep {
             }
             RowPlan::Recurse(plan) => {
                 for k1 in 0..n1 {
-                    plan.forward(&mut x[k1 * n2..(k1 + 1) * n2]);
+                    plan.forward_with_scratch(&mut x[k1 * n2..(k1 + 1) * n2], scratch);
                 }
             }
         }
@@ -166,6 +178,29 @@ impl FourStep {
 
     pub fn inverse(&self, x: &mut [C32]) {
         super::radix2::conj_inverse(x, |buf| self.forward(buf));
+    }
+}
+
+impl Transform for FourStep {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn name(&self) -> &'static str {
+        "fourstep"
+    }
+    /// Full-size transpose buffer plus the larger sub-FFT's ping-pong
+    /// buffer (single-pass plans need only the direct Stockham's buffer).
+    fn scratch_len(&self) -> usize {
+        if self.direct.is_some() {
+            self.n
+        } else {
+            self.n + self.n1.max(self.n2)
+        }
+    }
+    fn forward_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
+        check_inplace(self.n, x, scratch, Transform::scratch_len(self))?;
+        self.forward_with_scratch(x, scratch);
+        Ok(())
     }
 }
 

@@ -1,9 +1,21 @@
-//! CPU FFT library — the repo's FFTW-role comparator (DESIGN.md §2).
+//! CPU FFT library — the repo's FFTW-role comparator (DESIGN.md §2),
+//! unified behind the [`Transform`] execution API.
 //!
-//! Algorithms: iterative radix-2 DIT, Stockham autosort, mixed radix-4,
+//! Every kernel — iterative radix-2 DIT, Stockham autosort, mixed radix-4,
 //! recursive split-radix, Bailey four-step (the paper's method on CPU),
-//! Bluestein for arbitrary sizes, real-input RFFT and 2-D transforms —
-//! unified behind an FFTW-style planner with a process-wide plan cache.
+//! Bluestein for arbitrary sizes, real-input RFFT and the 2-D transform —
+//! implements the same trait: out-of-place fallible `forward_into` /
+//! `inverse_into`, batched `forward_batch_into`, and `scratch_len()` so
+//! callers own scratch reuse. The FFTW-style planner ([`FftPlan`],
+//! [`PlanCache`], [`Planner`]) wraps the chosen kernel as a
+//! `Box<dyn Transform>` and memoizes plans on the *resolved* algorithm, so
+//! `Auto` and its concrete winner share one plan.
+//!
+//! Migration note (execution-API redesign): the enum-dispatch era's
+//! `FftPlan::forward(&mut x)` remains as in-place, thread-local-scratch
+//! convenience sugar, but new code — anything batched, fallible, or
+//! scratch-sensitive — should use `forward_into` / `forward_batch_into`
+//! from the [`Transform`] trait. See DESIGN.md §Execution-API.
 //!
 //! Conventions (match the paper's eq. 1–2 and `python/compile/kernels/ref.py`):
 //! forward `X[k] = Σ x[n] e^{-2πi nk/N}` (no scaling), inverse carries `1/N`.
@@ -21,11 +33,13 @@ pub mod real;
 pub mod scratch;
 pub mod splitradix;
 pub mod stockham;
+pub mod transform;
 pub mod twiddle;
 pub mod window;
 
 pub use bitrev::BitRev;
 pub use bluestein::Bluestein;
+pub use conv::{circular_convolve, cross_correlate, linear_convolve, OverlapSave};
 pub use fft2d::Fft2d;
 pub use fourstep::FourStep;
 pub use plan::{fft, ifft, Algorithm, FftPlan, PlanCache, Planner};
@@ -34,6 +48,6 @@ pub use radix4::Radix4;
 pub use real::RealFft;
 pub use splitradix::SplitRadix;
 pub use stockham::Stockham;
-pub use conv::{circular_convolve, cross_correlate, linear_convolve, OverlapSave};
+pub use transform::{FftError, Transform};
 pub use twiddle::{AngleLut, TwiddleTable};
 pub use window::{apply as apply_window, Window};

@@ -1,13 +1,15 @@
-//! FFT planning — the FFTW-style front door.
+//! FFT planning — the FFTW-style front door over the [`Transform`] trait.
 //!
 //! `FftPlan::new(n, Algorithm::Auto)` picks an algorithm by size (the same
 //! role as FFTW's planner, heuristic rather than measured by default;
-//! `Planner::measured` actually times the candidates like FFTW_MEASURE).
-//! `PlanCache` memoizes plans across the process, which is what makes the
-//! Table-1 FFTW comparator honest: plan once, execute many.
+//! `Planner::measured` actually times the candidates like FFTW_MEASURE) and
+//! wraps the chosen kernel as a `Box<dyn Transform>`. `PlanCache` memoizes
+//! plans across the process keyed on the **resolved** algorithm, so
+//! `Auto` and its concrete winner share a single plan — that is what makes
+//! the Table-1 FFTW comparator honest: plan once, execute many.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::bluestein::Bluestein;
 use super::fourstep::FourStep;
@@ -15,6 +17,7 @@ use super::radix2::Radix2;
 use super::radix4::Radix4;
 use super::splitradix::SplitRadix;
 use super::stockham::Stockham;
+use super::transform::{FftError, Transform};
 use crate::util::complex::C32;
 use crate::util::is_pow2;
 
@@ -75,40 +78,52 @@ impl Algorithm {
     }
 }
 
-#[derive(Debug)]
-enum Impl {
-    Radix2(Radix2),
-    Radix4(Radix4),
-    SplitRadix(SplitRadix),
-    Stockham(Stockham),
-    FourStep(FourStep),
-    Bluestein(Bluestein),
-}
-
-/// A ready-to-execute plan for one transform size.
+/// A ready-to-execute plan for one transform size: a thin wrapper around a
+/// `Box<dyn Transform>` carrying the resolved algorithm tag.
 #[derive(Debug)]
 pub struct FftPlan {
     pub n: usize,
     algo: Algorithm,
-    imp: Impl,
+    imp: Box<dyn Transform>,
 }
 
 impl FftPlan {
-    pub fn new(n: usize, algo: Algorithm) -> Self {
-        let resolved = match algo {
+    /// Resolve `Auto` to the concrete algorithm the heuristic would pick
+    /// at size `n`; concrete algorithms resolve to themselves. This is the
+    /// key `PlanCache` memoizes on.
+    pub fn resolve(n: usize, algo: Algorithm) -> Algorithm {
+        match algo {
             Algorithm::Auto => Self::heuristic(n),
             a => a,
+        }
+    }
+
+    /// Build a plan, surfacing invalid sizes as `FftError` instead of
+    /// panicking — the serving path's entry point.
+    pub fn try_new(n: usize, algo: Algorithm) -> Result<Self, FftError> {
+        if n == 0 {
+            return Err(FftError::ZeroSize);
+        }
+        let resolved = Self::resolve(n, algo);
+        if !is_pow2(n) && resolved != Algorithm::Bluestein {
+            return Err(FftError::NonPowerOfTwo { algo: resolved.name(), n });
+        }
+        let imp: Box<dyn Transform> = match resolved {
+            Algorithm::Radix2 => Box::new(Radix2::new(n)),
+            Algorithm::Radix4 => Box::new(Radix4::new(n)),
+            Algorithm::SplitRadix => Box::new(SplitRadix::new(n)),
+            Algorithm::Stockham => Box::new(Stockham::new(n)),
+            Algorithm::FourStep => Box::new(FourStep::new(n)),
+            Algorithm::Bluestein => Box::new(Bluestein::new(n)),
+            Algorithm::Auto => unreachable!("resolve() never returns Auto"),
         };
-        let imp = match resolved {
-            Algorithm::Radix2 => Impl::Radix2(Radix2::new(n)),
-            Algorithm::Radix4 => Impl::Radix4(Radix4::new(n)),
-            Algorithm::SplitRadix => Impl::SplitRadix(SplitRadix::new(n)),
-            Algorithm::Stockham => Impl::Stockham(Stockham::new(n)),
-            Algorithm::FourStep => Impl::FourStep(FourStep::new(n)),
-            Algorithm::Bluestein => Impl::Bluestein(Bluestein::new(n)),
-            Algorithm::Auto => unreachable!(),
-        };
-        Self { n, algo: resolved, imp }
+        Ok(Self { n, algo: resolved, imp })
+    }
+
+    /// Build a plan; panics on invalid sizes (library convenience — use
+    /// `try_new` on request paths).
+    pub fn new(n: usize, algo: Algorithm) -> Self {
+        Self::try_new(n, algo).unwrap_or_else(|e| panic!("FftPlan::new({n}, {algo:?}): {e}"))
     }
 
     /// The size heuristic (mirrors FFTW_ESTIMATE's spirit), retuned from
@@ -128,34 +143,130 @@ impl FftPlan {
         }
     }
 
+    /// The resolved (never `Auto`) algorithm this plan executes.
     pub fn algorithm(&self) -> Algorithm {
         self.algo
     }
 
-    pub fn forward(&self, x: &mut [C32]) {
-        match &self.imp {
-            Impl::Radix2(p) => p.forward(x),
-            Impl::Radix4(p) => p.forward(x),
-            Impl::SplitRadix(p) => p.forward(x),
-            Impl::Stockham(p) => p.forward(x),
-            Impl::FourStep(p) => p.forward(x),
-            Impl::Bluestein(p) => p.forward(x),
-        }
+    /// Scratch one execution needs (see [`Transform::scratch_len`]).
+    pub fn scratch_len(&self) -> usize {
+        self.imp.scratch_len()
     }
 
+    /// In-place forward using the thread-local scratch pool. Convenience
+    /// sugar over [`Transform::forward_inplace`]; panics on length
+    /// mismatch (use `forward_into` for fallible execution).
+    pub fn forward(&self, x: &mut [C32]) {
+        super::scratch::with_scratch(self.imp.scratch_len(), |s| self.imp.forward_inplace(x, s))
+            .unwrap_or_else(|e| panic!("FftPlan::forward: {e}"));
+    }
+
+    /// In-place inverse (1/N scaling), thread-local scratch. See `forward`.
     pub fn inverse(&self, x: &mut [C32]) {
-        match &self.imp {
-            Impl::Radix2(p) => p.inverse(x),
-            Impl::Radix4(p) => p.inverse(x),
-            Impl::SplitRadix(p) => p.inverse(x),
-            Impl::Stockham(p) => p.inverse(x),
-            Impl::FourStep(p) => p.inverse(x),
-            Impl::Bluestein(p) => p.inverse(x),
-        }
+        super::scratch::with_scratch(self.imp.scratch_len(), |s| self.imp.inverse_inplace(x, s))
+            .unwrap_or_else(|e| panic!("FftPlan::inverse: {e}"));
+    }
+
+    /// Out-of-place forward with caller scratch (the `Transform` face).
+    pub fn forward_into(
+        &self,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.imp.forward_into(input, output, scratch)
+    }
+
+    /// Out-of-place inverse with caller scratch.
+    pub fn inverse_into(
+        &self,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.imp.inverse_into(input, output, scratch)
+    }
+
+    /// Batched out-of-place forward (`batch` rows of `n`), one scratch.
+    pub fn forward_batch_into(
+        &self,
+        batch: usize,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.imp.forward_batch_into(batch, input, output, scratch)
+    }
+
+    /// Batched out-of-place inverse.
+    pub fn inverse_batch_into(
+        &self,
+        batch: usize,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.imp.inverse_batch_into(batch, input, output, scratch)
     }
 }
 
-/// Process-wide plan cache (FFTW "wisdom" analog).
+/// Plans are transforms too, so anything holding an `FftPlan` (the 2-D
+/// transform, the coordinator backend) speaks the same interface.
+impl Transform for FftPlan {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn name(&self) -> &'static str {
+        self.algo.name()
+    }
+    fn scratch_len(&self) -> usize {
+        self.imp.scratch_len()
+    }
+    fn forward_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
+        self.imp.forward_inplace(x, scratch)
+    }
+    fn inverse_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
+        self.imp.inverse_inplace(x, scratch)
+    }
+    fn forward_into(
+        &self,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.imp.forward_into(input, output, scratch)
+    }
+    fn inverse_into(
+        &self,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.imp.inverse_into(input, output, scratch)
+    }
+    fn forward_batch_into(
+        &self,
+        batch: usize,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.imp.forward_batch_into(batch, input, output, scratch)
+    }
+    fn inverse_batch_into(
+        &self,
+        batch: usize,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.imp.inverse_batch_into(batch, input, output, scratch)
+    }
+}
+
+/// Process-wide plan cache (FFTW "wisdom" analog), keyed on the *resolved*
+/// algorithm: `get(n, Auto)` and `get(n, <its concrete winner>)` share one
+/// memoized plan.
 #[derive(Default)]
 pub struct PlanCache {
     plans: Mutex<HashMap<(usize, Algorithm), Arc<FftPlan>>>,
@@ -166,11 +277,28 @@ impl PlanCache {
         Self::default()
     }
 
-    pub fn get(&self, n: usize, algo: Algorithm) -> Arc<FftPlan> {
+    /// Fallible lookup-or-build — the serving path's entry point.
+    pub fn try_get(&self, n: usize, algo: Algorithm) -> Result<Arc<FftPlan>, FftError> {
+        let key = (n, FftPlan::resolve(n, algo));
         let mut map = self.plans.lock().unwrap();
-        map.entry((n, algo))
-            .or_insert_with(|| Arc::new(FftPlan::new(n, algo)))
-            .clone()
+        if let Some(plan) = map.get(&key) {
+            return Ok(plan.clone());
+        }
+        let plan = Arc::new(FftPlan::try_new(n, key.1)?);
+        map.insert(key, plan.clone());
+        Ok(plan)
+    }
+
+    /// Lookup-or-build; panics on invalid sizes (library convenience).
+    pub fn get(&self, n: usize, algo: Algorithm) -> Arc<FftPlan> {
+        self.try_get(n, algo)
+            .unwrap_or_else(|e| panic!("PlanCache::get({n}, {algo:?}): {e}"))
+    }
+
+    /// Is a plan for the resolved (n, algo) already memoized?
+    pub fn contains(&self, n: usize, algo: Algorithm) -> bool {
+        let key = (n, FftPlan::resolve(n, algo));
+        self.plans.lock().unwrap().contains_key(&key)
     }
 
     pub fn len(&self) -> usize {
@@ -182,17 +310,20 @@ impl PlanCache {
     }
 }
 
-static GLOBAL_CACHE: once_cell::sync::Lazy<PlanCache> =
-    once_cell::sync::Lazy::new(PlanCache::new);
+static GLOBAL_CACHE: OnceLock<PlanCache> = OnceLock::new();
+
+fn global_cache() -> &'static PlanCache {
+    GLOBAL_CACHE.get_or_init(PlanCache::new)
+}
 
 /// Forward FFT in place using the globally cached Auto plan.
 pub fn fft(x: &mut [C32]) {
-    GLOBAL_CACHE.get(x.len(), Algorithm::Auto).forward(x);
+    global_cache().get(x.len(), Algorithm::Auto).forward(x);
 }
 
 /// Inverse FFT in place (1/N scaling) using the globally cached Auto plan.
 pub fn ifft(x: &mut [C32]) {
-    GLOBAL_CACHE.get(x.len(), Algorithm::Auto).inverse(x);
+    global_cache().get(x.len(), Algorithm::Auto).inverse(x);
 }
 
 /// FFTW_MEASURE-style planner: time each candidate and keep the winner.
@@ -208,7 +339,10 @@ impl Default for Planner {
 
 impl Planner {
     /// Measure candidates on random data; return the fastest plan and the
-    /// per-algorithm timings (ns/iter), slowest-first pruned nothing.
+    /// per-algorithm timings (ns/iter), sorted fastest-first. Only the
+    /// transform itself is inside the timed region — the input refill
+    /// happens between reps, off the clock, so small-N candidates are not
+    /// biased by a memcpy that all of them would share.
     pub fn measured(&self, n: usize) -> (Arc<FftPlan>, Vec<(Algorithm, f64)>) {
         let mut rng = crate::util::prng::Xoshiro256::seeded(0xBEEF);
         let input = rng.complex_vec(n);
@@ -216,14 +350,16 @@ impl Planner {
         for algo in Algorithm::candidates(n) {
             let plan = FftPlan::new(n, algo);
             let mut buf = input.clone();
-            // one warm run
+            // one warm run (plan twiddles + thread-local scratch)
             plan.forward(&mut buf);
-            let t = crate::util::Timer::start();
+            let mut total_ns = 0f64;
             for _ in 0..self.reps {
                 buf.copy_from_slice(&input);
+                let t = crate::util::Timer::start();
                 plan.forward(&mut buf);
+                total_ns += t.elapsed().as_nanos() as f64;
             }
-            timings.push((algo, t.elapsed().as_nanos() as f64 / self.reps as f64));
+            timings.push((algo, total_ns / self.reps.max(1) as f64));
         }
         timings.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
         let best = timings[0].0;
@@ -260,17 +396,45 @@ mod tests {
         assert_eq!(FftPlan::new(1 << 14, Algorithm::Auto).algorithm(), Algorithm::Radix2);
         assert_eq!(FftPlan::new(1 << 20, Algorithm::Auto).algorithm(), Algorithm::Radix4);
         assert_eq!(FftPlan::new(100, Algorithm::Auto).algorithm(), Algorithm::Bluestein);
+        assert_eq!(FftPlan::resolve(256, Algorithm::Stockham), Algorithm::Stockham);
     }
 
     #[test]
-    fn cache_returns_same_plan() {
+    fn try_new_rejects_bad_sizes_without_panicking() {
+        assert_eq!(FftPlan::try_new(0, Algorithm::Auto).unwrap_err(), FftError::ZeroSize);
+        assert_eq!(FftPlan::try_new(0, Algorithm::Radix2).unwrap_err(), FftError::ZeroSize);
+        assert!(matches!(
+            FftPlan::try_new(100, Algorithm::Radix2).unwrap_err(),
+            FftError::NonPowerOfTwo { n: 100, .. }
+        ));
+        // Non-pow2 through Auto is fine: Bluestein serves it.
+        assert!(FftPlan::try_new(100, Algorithm::Auto).is_ok());
+    }
+
+    #[test]
+    fn cache_shares_auto_with_its_resolved_winner() {
         let cache = PlanCache::new();
         let a = cache.get(512, Algorithm::Auto);
         let b = cache.get(512, Algorithm::Auto);
         assert!(Arc::ptr_eq(&a, &b));
+        // Auto resolves to Radix2 at 512 — the concrete request must hit
+        // the SAME memoized plan, not a duplicate under a second key.
+        let c = cache.get(512, Algorithm::Radix2);
+        assert!(Arc::ptr_eq(&a, &c), "Auto and its winner must share one plan");
         assert_eq!(cache.len(), 1);
-        cache.get(512, Algorithm::Radix2);
+        assert!(cache.contains(512, Algorithm::Auto));
+        assert!(cache.contains(512, Algorithm::Radix2));
+        // A genuinely different algorithm is a different plan.
+        cache.get(512, Algorithm::Stockham);
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cache_try_get_propagates_errors() {
+        let cache = PlanCache::new();
+        assert!(cache.try_get(0, Algorithm::Auto).is_err());
+        assert!(cache.try_get(12, Algorithm::Radix4).is_err());
+        assert!(cache.is_empty(), "failed lookups must not populate the cache");
     }
 
     #[test]
@@ -312,5 +476,22 @@ mod tests {
             assert_eq!(Algorithm::parse(a.name()), Some(a));
         }
         assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn plan_implements_transform() {
+        let mut rng = Xoshiro256::seeded(104);
+        let n = 128;
+        let plan = FftPlan::new(n, Algorithm::Auto);
+        let t: &dyn Transform = &plan;
+        assert_eq!(t.len(), n);
+        assert!(!t.is_empty());
+        let x = rng.complex_vec(n);
+        let mut via_trait = vec![C32::ZERO; n];
+        let mut scratch = vec![C32::ZERO; t.scratch_len()];
+        t.forward_into(&x, &mut via_trait, &mut scratch).unwrap();
+        let mut direct = x;
+        plan.forward(&mut direct);
+        assert_eq!(via_trait, direct, "trait dispatch must be bit-identical");
     }
 }

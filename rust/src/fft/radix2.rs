@@ -6,6 +6,7 @@
 //! `gpusim::schedules::per_level` replays this loop's memory traffic.
 
 use super::bitrev::BitRev;
+use super::transform::{check_inplace, FftError, Transform};
 use super::twiddle::TwiddleTable;
 use crate::util::complex::C32;
 use crate::util::{is_pow2, log2_exact};
@@ -56,6 +57,24 @@ impl Radix2 {
     /// In-place inverse FFT with 1/N scaling (paper eq. 2 convention).
     pub fn inverse(&self, x: &mut [C32]) {
         conj_inverse(x, |buf| self.forward(buf));
+    }
+}
+
+impl Transform for Radix2 {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn name(&self) -> &'static str {
+        "radix2"
+    }
+    /// Fully in-place (bit-reversal permutation + butterflies): no scratch.
+    fn scratch_len(&self) -> usize {
+        0
+    }
+    fn forward_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
+        check_inplace(self.n, x, scratch, 0)?;
+        self.forward(x);
+        Ok(())
     }
 }
 

@@ -5,6 +5,7 @@
 //! cost of a wider butterfly. When `log2 n` is odd, a single radix-2 level
 //! runs first. Autosort (Stockham) form, so no digit-reversal pass.
 
+use super::transform::{check_inplace, FftError, Transform};
 use super::twiddle::TwiddleTable;
 use crate::util::complex::C32;
 use crate::util::{is_pow2, log2_exact};
@@ -93,6 +94,24 @@ impl Radix4 {
 
     pub fn inverse(&self, x: &mut [C32]) {
         super::radix2::conj_inverse(x, |buf| self.forward(buf));
+    }
+}
+
+impl Transform for Radix4 {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn name(&self) -> &'static str {
+        "radix4"
+    }
+    /// One autosort ping-pong buffer of the transform length.
+    fn scratch_len(&self) -> usize {
+        self.n
+    }
+    fn forward_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
+        check_inplace(self.n, x, scratch, self.n)?;
+        self.forward_with_scratch(x, &mut scratch[..self.n]);
+        Ok(())
     }
 }
 

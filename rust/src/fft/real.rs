@@ -7,6 +7,7 @@
 //! untangle with the split lemma.
 
 use super::stockham::Stockham;
+use super::transform::{check_inplace, FftError, Transform};
 use super::twiddle::TwiddleTable;
 use crate::util::complex::C32;
 use crate::util::is_pow2;
@@ -70,6 +71,81 @@ impl RealFft {
     }
 }
 
+/// The `Transform` view of the RFFT pair: a length-n transform over
+/// complex buffers whose **forward ignores imaginary parts** (it is the DFT
+/// of `re(input)`, producing the full Hermitian spectrum) and whose
+/// **inverse maps a Hermitian spectrum back to a real signal** (zero
+/// imaginary parts on output). Roundtrip `forward ∘ inverse` is the
+/// identity on real signals — which is exactly the contract SAR raw-echo
+/// pipelines need — while still paying only a half-size complex FFT.
+impl Transform for RealFft {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn name(&self) -> &'static str {
+        "rfft"
+    }
+    /// Packed half-size buffer + its Stockham ping-pong buffer.
+    fn scratch_len(&self) -> usize {
+        self.n
+    }
+    fn forward_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
+        check_inplace(self.n, x, scratch, self.n)?;
+        let h = self.n / 2;
+        let (z, fft_scratch) = scratch.split_at_mut(h);
+        // Pack z[k] = re(x[2k]) + i re(x[2k+1]); x is then dead until the
+        // write-back, so the transform is in-place over the complex view.
+        for k in 0..h {
+            z[k] = C32::new(x[2 * k].re, x[2 * k + 1].re);
+        }
+        self.half.forward_with_scratch(z, &mut fft_scratch[..h]);
+        // Untangle bins 0..=h (split lemma), then mirror the Hermitian
+        // upper half so the output is the full complex spectrum.
+        for k in 0..=h {
+            let zk = if k == h { z[0] } else { z[k] };
+            let zr = z[(h - k) % h].conj();
+            let fe = (zk + zr).scale(0.5);
+            let fo = (zk - zr).scale(0.5).mul_neg_i();
+            x[k] = fe + self.twiddles.w_any(k) * fo;
+        }
+        for k in 1..h {
+            x[self.n - k] = x[k].conj();
+        }
+        Ok(())
+    }
+    /// Hermitian-spectrum inverse: reads bins 0..=n/2 of `x`, writes the
+    /// real time samples (imaginary parts zeroed). The generic conjugation
+    /// default would feed imaginary parts into `forward_inplace`, which
+    /// discards them — so this must be overridden.
+    fn inverse_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
+        check_inplace(self.n, x, scratch, self.n)?;
+        let h = self.n / 2;
+        let (z, fft_scratch) = scratch.split_at_mut(h);
+        let fft_scratch = &mut fft_scratch[..h];
+        for k in 0..h {
+            let xk = x[k];
+            let xr = x[h - k].conj();
+            let fe = (xk + xr).scale(0.5);
+            let fo = (xk - xr).scale(0.5) * self.twiddles.w_any(k).conj();
+            z[k] = fe + fo.mul_i();
+        }
+        // Half-size inverse via the conjugation trick (1/h scaling).
+        for v in z.iter_mut() {
+            *v = v.conj();
+        }
+        self.half.forward_with_scratch(z, fft_scratch);
+        let scale = 1.0 / h as f32;
+        for v in z.iter_mut() {
+            *v = v.conj().scale(scale);
+        }
+        for k in 0..h {
+            x[2 * k] = C32::new(z[k].re, 0.0);
+            x[2 * k + 1] = C32::new(z[k].im, 0.0);
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::dft::dft;
@@ -116,6 +192,32 @@ mod tests {
             let back = plan.inverse(&plan.forward(&x));
             for (a, b) in x.iter().zip(&back) {
                 assert!((a - b).abs() < 1e-4, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn transform_view_matches_typed_api_and_roundtrips() {
+        let mut rng = Xoshiro256::seeded(85);
+        for n in [2usize, 64, 512] {
+            let plan = RealFft::new(n);
+            let x = rng.real_vec(n);
+            let mut buf: Vec<C32> = x.iter().map(|&r| C32::new(r, 0.0)).collect();
+            let mut scratch = vec![C32::ZERO; Transform::scratch_len(&plan)];
+            plan.forward_inplace(&mut buf, &mut scratch).unwrap();
+            // Lower bins bit-match the typed rfft API (same code path).
+            let typed = plan.forward(&x);
+            for k in 0..=n / 2 {
+                assert_eq!(buf[k], typed[k], "n={n} k={k}");
+            }
+            // Hermitian upper half + real roundtrip.
+            for k in n / 2 + 1..n {
+                assert_eq!(buf[k], buf[n - k].conj(), "n={n} k={k}");
+            }
+            plan.inverse_inplace(&mut buf, &mut scratch).unwrap();
+            for k in 0..n {
+                assert!((buf[k].re - x[k]).abs() < 1e-4, "n={n} k={k}");
+                assert_eq!(buf[k].im, 0.0, "imaginary parts must be zeroed");
             }
         }
     }

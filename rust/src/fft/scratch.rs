@@ -28,28 +28,6 @@ pub fn with_scratch<R>(n: usize, f: impl FnOnce(&mut [C32]) -> R) -> R {
     r
 }
 
-/// Two distinct scratch buffers of the same length (four-step needs a
-/// full-size transpose buffer plus a row buffer).
-pub fn with_scratch2<R>(a: usize, b: usize, f: impl FnOnce(&mut [C32], &mut [C32]) -> R) -> R {
-    with_scratch(a, |sa| {
-        // Key the second buffer differently when sizes collide by taking a
-        // fresh allocation path (removal above makes the pool entry absent).
-        let mut sb = if a == b {
-            vec![C32::ZERO; b]
-        } else {
-            POOL.with(|p| p.borrow_mut().remove(&b)).unwrap_or_default()
-        };
-        if sb.len() != b {
-            sb = vec![C32::ZERO; b];
-        }
-        let r = f(sa, &mut sb);
-        if a != b {
-            POOL.with(|p| p.borrow_mut().insert(b, sb));
-        }
-        r
-    })
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -69,20 +47,6 @@ mod tests {
                 inner[0] = C32::new(9.0, 0.0);
             });
             assert_eq!(outer[0], C32::new(7.0, 0.0), "inner call must not alias outer");
-        });
-    }
-
-    #[test]
-    fn scratch2_distinct_buffers() {
-        with_scratch2(128, 128, |a, b| {
-            a[0] = C32::new(1.0, 0.0);
-            b[0] = C32::new(2.0, 0.0);
-            assert_ne!(a[0], b[0]);
-            assert_ne!(a.as_ptr(), b.as_ptr());
-        });
-        with_scratch2(128, 64, |a, b| {
-            assert_eq!(a.len(), 128);
-            assert_eq!(b.len(), 64);
         });
     }
 

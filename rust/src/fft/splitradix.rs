@@ -7,6 +7,7 @@
 //! for clarity over speed; the planner prefers it only in the small-n
 //! regime where it wins anyway.
 
+use super::transform::{check_inplace, check_into, FftError, Transform};
 use super::twiddle::TwiddleTable;
 use crate::util::complex::C32;
 use crate::util::is_pow2;
@@ -68,6 +69,38 @@ impl SplitRadix {
                 out
             }
         }
+    }
+}
+
+impl Transform for SplitRadix {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn name(&self) -> &'static str {
+        "splitradix"
+    }
+    /// The recursion allocates per level (clarity implementation); no
+    /// caller scratch is consumed.
+    fn scratch_len(&self) -> usize {
+        0
+    }
+    fn forward_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
+        check_inplace(self.n, x, scratch, 0)?;
+        self.forward(x);
+        Ok(())
+    }
+    /// Natively out-of-place: the recursion already produces a fresh
+    /// buffer, so skip the default copy-then-run.
+    fn forward_into(
+        &self,
+        input: &[C32],
+        output: &mut [C32],
+        _scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        check_into(self.n, input, output)?;
+        let out = self.rec(input, 0, 1, self.n);
+        output.copy_from_slice(&out);
+        Ok(())
     }
 }
 

@@ -10,6 +10,7 @@
 //! This mirrors `python/compile/kernels/stockham.py`; the two are tested
 //! against the same oracle.
 
+use super::transform::{check_inplace, FftError, Transform};
 use super::twiddle::TwiddleTable;
 use crate::util::complex::C32;
 use crate::util::{is_pow2, log2_exact};
@@ -87,16 +88,23 @@ impl Stockham {
     pub fn inverse(&self, x: &mut [C32]) {
         super::radix2::conj_inverse(x, |buf| self.forward(buf));
     }
+}
 
-    /// Batched forward over `batch` contiguous rows of length n, reusing one
-    /// scratch allocation — the hot path the coordinator's batcher feeds.
-    pub fn forward_batch(&self, data: &mut [C32]) {
-        assert_eq!(data.len() % self.n, 0);
-        super::scratch::with_scratch(self.n, |scratch| {
-            for row in data.chunks_exact_mut(self.n) {
-                self.forward_with_scratch(row, scratch);
-            }
-        });
+impl Transform for Stockham {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn name(&self) -> &'static str {
+        "stockham"
+    }
+    /// One ping-pong buffer of the transform length.
+    fn scratch_len(&self) -> usize {
+        self.n
+    }
+    fn forward_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
+        check_inplace(self.n, x, scratch, self.n)?;
+        self.forward_with_scratch(x, &mut scratch[..self.n]);
+        Ok(())
     }
 }
 
@@ -152,8 +160,9 @@ mod tests {
         let batch = 5;
         let plan = Stockham::new(n);
         let data = rng.complex_vec(n * batch);
-        let mut batched = data.clone();
-        plan.forward_batch(&mut batched);
+        let mut batched = vec![C32::ZERO; n * batch];
+        let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+        plan.forward_batch_into(batch, &data, &mut batched, &mut scratch).unwrap();
         for b in 0..batch {
             let mut single = data[b * n..(b + 1) * n].to_vec();
             plan.forward(&mut single);

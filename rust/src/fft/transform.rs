@@ -1,0 +1,265 @@
+//! The unified execution API every FFT kernel implements.
+//!
+//! `Transform` is the one interface between algorithms and everything that
+//! runs them — the planner, the plan cache, the coordinator's
+//! `NativeBackend`, benches and tests. It is deliberately *scratch-explicit*
+//! and *fallible*:
+//!
+//! - **Scratch-explicit**: `scratch_len()` tells the caller how much working
+//!   memory one execution needs; the caller owns the buffer and reuses it
+//!   across calls (and across the rows of a batch). This is the CPU
+//!   realization of the paper's "execution owns its fast memory" discipline:
+//!   the schedule, not the kernel, decides where working sets live.
+//! - **Fallible**: size/scratch mismatches return [`FftError`] instead of
+//!   panicking, so a serving stack can reject bad requests without dying.
+//! - **Batched**: `forward_batch_into` / `inverse_batch_into` run `batch`
+//!   contiguous rows through one scratch allocation — the unit of
+//!   throughput the coordinator's batcher feeds.
+//!
+//! The required methods are the in-place pair (`forward_inplace` /
+//! `inverse_inplace`) because every kernel in this crate is natively
+//! in-place-with-scratch; the out-of-place `forward_into` / `inverse_into`
+//! have copy-then-run default implementations which naturally-out-of-place
+//! algorithms (split-radix) override.
+
+use crate::util::complex::C32;
+
+/// Execution-time errors of the [`Transform`] API.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FftError {
+    /// A zero-length transform or zero-row batch was requested.
+    ZeroSize,
+    /// The algorithm only handles power-of-two lengths.
+    NonPowerOfTwo { algo: &'static str, n: usize },
+    /// An input/output slice length does not match the plan.
+    SizeMismatch { expected: usize, got: usize },
+    /// Caller-provided scratch is shorter than `scratch_len()`.
+    ScratchTooSmall { needed: usize, got: usize },
+    /// `batch * n` overflows `usize`.
+    Overflow { n: usize, batch: usize },
+}
+
+impl std::fmt::Display for FftError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FftError::ZeroSize => write!(f, "transform size must be nonzero"),
+            FftError::NonPowerOfTwo { algo, n } => {
+                write!(f, "{algo} requires a power-of-two size, got {n}")
+            }
+            FftError::SizeMismatch { expected, got } => {
+                write!(f, "buffer length {got} does not match transform length {expected}")
+            }
+            FftError::ScratchTooSmall { needed, got } => {
+                write!(f, "scratch too small: need {needed} elements, got {got}")
+            }
+            FftError::Overflow { n, batch } => {
+                write!(f, "batch {batch} x n {n} overflows usize")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FftError {}
+
+/// One FFT kernel behind a uniform, scratch-explicit, fallible interface.
+///
+/// Implementors: `Radix2`, `Radix4`, `SplitRadix`, `Stockham`, `FourStep`,
+/// `Bluestein`, `RealFft`, `Fft2d` and the planner's `FftPlan` wrapper.
+///
+/// Contract: on `Ok(())` the output (or in-place buffer) holds the
+/// transform; on `Err` the destination contents are unspecified but the
+/// process is untouched — callers may retry with corrected arguments.
+pub trait Transform: std::fmt::Debug + Send + Sync {
+    /// Transform length in complex points (for 2-D: rows x cols).
+    fn len(&self) -> usize;
+
+    /// True iff `len() == 0` (never, for constructible transforms).
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Short algorithm name for reports and metrics.
+    fn name(&self) -> &'static str;
+
+    /// Scratch required by one execution, in complex elements. Batched
+    /// execution reuses this same scratch across rows.
+    fn scratch_len(&self) -> usize;
+
+    /// In-place forward DFT of `x` (`x.len() == len()`), using caller
+    /// scratch with `scratch.len() >= scratch_len()`.
+    fn forward_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError>;
+
+    /// In-place inverse DFT with 1/N scaling. Default: conjugation trick
+    /// around `forward_inplace` (exact for any linear DFT).
+    fn inverse_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
+        check_inplace(self.len(), x, scratch, self.scratch_len())?;
+        for v in x.iter_mut() {
+            *v = v.conj();
+        }
+        self.forward_inplace(x, scratch)?;
+        let scale = 1.0 / x.len() as f32;
+        for v in x.iter_mut() {
+            *v = v.conj().scale(scale);
+        }
+        Ok(())
+    }
+
+    /// Out-of-place forward: `output = FFT(input)`.
+    fn forward_into(
+        &self,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        check_into(self.len(), input, output)?;
+        output.copy_from_slice(input);
+        self.forward_inplace(output, scratch)
+    }
+
+    /// Out-of-place inverse: `output = IFFT(input)` (1/N scaling).
+    fn inverse_into(
+        &self,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        check_into(self.len(), input, output)?;
+        output.copy_from_slice(input);
+        self.inverse_inplace(output, scratch)
+    }
+
+    /// Batched out-of-place forward over `batch` contiguous rows of
+    /// `len()` points each, reusing one scratch buffer across rows.
+    fn forward_batch_into(
+        &self,
+        batch: usize,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        let n = check_batch(self.len(), batch, input, output)?;
+        for (i_row, o_row) in input.chunks_exact(n).zip(output.chunks_exact_mut(n)) {
+            self.forward_into(i_row, o_row, scratch)?;
+        }
+        Ok(())
+    }
+
+    /// Batched out-of-place inverse (1/N scaling per row).
+    fn inverse_batch_into(
+        &self,
+        batch: usize,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        let n = check_batch(self.len(), batch, input, output)?;
+        for (i_row, o_row) in input.chunks_exact(n).zip(output.chunks_exact_mut(n)) {
+            self.inverse_into(i_row, o_row, scratch)?;
+        }
+        Ok(())
+    }
+}
+
+/// Shared argument validation for in-place execution.
+pub(crate) fn check_inplace(
+    n: usize,
+    x: &[C32],
+    scratch: &[C32],
+    needed: usize,
+) -> Result<(), FftError> {
+    if n == 0 {
+        return Err(FftError::ZeroSize);
+    }
+    if x.len() != n {
+        return Err(FftError::SizeMismatch { expected: n, got: x.len() });
+    }
+    if scratch.len() < needed {
+        return Err(FftError::ScratchTooSmall { needed, got: scratch.len() });
+    }
+    Ok(())
+}
+
+/// Shared argument validation for out-of-place execution.
+pub(crate) fn check_into(n: usize, input: &[C32], output: &[C32]) -> Result<(), FftError> {
+    if n == 0 {
+        return Err(FftError::ZeroSize);
+    }
+    if input.len() != n {
+        return Err(FftError::SizeMismatch { expected: n, got: input.len() });
+    }
+    if output.len() != n {
+        return Err(FftError::SizeMismatch { expected: n, got: output.len() });
+    }
+    Ok(())
+}
+
+/// Shared validation for batched execution; returns the row length.
+pub(crate) fn check_batch(
+    n: usize,
+    batch: usize,
+    input: &[C32],
+    output: &[C32],
+) -> Result<usize, FftError> {
+    if n == 0 || batch == 0 {
+        return Err(FftError::ZeroSize);
+    }
+    let total = batch.checked_mul(n).ok_or(FftError::Overflow { n, batch })?;
+    if input.len() != total {
+        return Err(FftError::SizeMismatch { expected: total, got: input.len() });
+    }
+    if output.len() != total {
+        return Err(FftError::SizeMismatch { expected: total, got: output.len() });
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal transform (identity) to exercise the default methods.
+    #[derive(Debug)]
+    struct Identity(usize);
+
+    impl Transform for Identity {
+        fn len(&self) -> usize {
+            self.0
+        }
+        fn name(&self) -> &'static str {
+            "identity"
+        }
+        fn scratch_len(&self) -> usize {
+            0
+        }
+        fn forward_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
+            check_inplace(self.0, x, scratch, 0)
+        }
+    }
+
+    #[test]
+    fn default_batch_validates_overflow_and_zero() {
+        let t = Identity(1 << 20);
+        let err = t.forward_batch_into(usize::MAX / 4, &[], &mut [], &mut []).unwrap_err();
+        assert!(matches!(err, FftError::Overflow { .. }));
+        let err = t.forward_batch_into(0, &[], &mut [], &mut []).unwrap_err();
+        assert_eq!(err, FftError::ZeroSize);
+    }
+
+    #[test]
+    fn default_into_validates_lengths() {
+        let t = Identity(4);
+        let input = [C32::ZERO; 4];
+        let mut bad = [C32::ZERO; 3];
+        let err = t.forward_into(&input, &mut bad, &mut []).unwrap_err();
+        assert_eq!(err, FftError::SizeMismatch { expected: 4, got: 3 });
+    }
+
+    #[test]
+    fn errors_display() {
+        assert!(FftError::ZeroSize.to_string().contains("nonzero"));
+        assert!(FftError::Overflow { n: 8, batch: 9 }.to_string().contains("overflow"));
+        assert!(FftError::NonPowerOfTwo { algo: "radix2", n: 12 }
+            .to_string()
+            .contains("power-of-two"));
+    }
+}

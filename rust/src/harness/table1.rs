@@ -53,15 +53,24 @@ pub fn run(engine: Option<&Engine>, sizes: &[usize], reps: usize) -> Vec<Row> {
         .iter()
         .map(|&n| {
             // FFTW role: plan once (FFTW convention), measure executes.
+            // The input refill happens before each sample's timer starts —
+            // same fix as Planner::measured, so small-N rows are not
+            // inflated by a memcpy.
             let plan = FftPlan::new(n, Algorithm::Auto);
             let input = rng.complex_vec(n);
             let mut buf = input.clone();
             plan.forward(&mut buf); // warm
-            let fftw_ms = time_median_ms(reps, || {
-                buf.copy_from_slice(&input);
-                plan.forward(&mut buf);
-                std::hint::black_box(&buf);
-            });
+            let mut samples: Vec<f64> = (0..reps.max(1))
+                .map(|_| {
+                    buf.copy_from_slice(&input);
+                    let t = Timer::start();
+                    plan.forward(&mut buf);
+                    std::hint::black_box(&buf);
+                    t.elapsed_ms()
+                })
+                .collect();
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let fftw_ms = percentile_sorted(&samples, 50.0);
 
             let (cufft_ms, ours_ms) = match engine {
                 Some(engine) => {

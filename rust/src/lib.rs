@@ -14,7 +14,20 @@
 //!   Fermi-class GPU memory-hierarchy simulator (the Tesla C2070 stand-in),
 //!   and a synthetic SAR workload.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! Execution is unified by two traits:
+//!
+//! - [`fft::Transform`] — every CPU kernel (radix-2/4, split-radix,
+//!   Stockham, four-step, Bluestein, RFFT, 2-D) behind one out-of-place,
+//!   fallible, batched, scratch-explicit interface; `fft::FftPlan` is a
+//!   thin `Box<dyn Transform>` wrapper and `fft::PlanCache` memoizes on
+//!   the resolved algorithm.
+//! - [`coordinator::Backend`] — every serving substrate (PJRT artifacts,
+//!   the native library, the gpusim cost model) behind one
+//!   `execute_batch(&BatchSpec, planar f32) -> Result<..>` contract,
+//!   selected by the `method` config knob.
+//!
+//! See `DESIGN.md` for the system inventory (and §Execution-API for the
+//! trait design + migration notes) and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
 pub mod bench;

@@ -18,12 +18,18 @@ use memfft::runtime::Engine;
 use memfft::sar;
 use memfft::util::{Timer, Xoshiro256};
 
+type CmdResult = Result<(), Box<dyn std::error::Error>>;
+
 fn cli() -> Cli {
     Cli::new("memfft", "memory-optimized hierarchical FFT service (paper reproduction)")
         .command(
             Command::new("serve", "run the FFT service under a synthetic workload")
                 .arg_default("config", "", "TOML config path (optional)")
-                .arg_default("method", "fourstep", "fourstep|stockham|perlevel|xla|native")
+                .arg_default(
+                    "method",
+                    "fourstep",
+                    "backend: fourstep|stockham|perlevel|xla (PJRT) | native | modeled",
+                )
                 .arg_default("artifacts", "artifacts", "artifact directory")
                 .arg_default("workers", "2", "worker threads")
                 .arg_default("requests", "200", "synthetic requests to issue")
@@ -79,7 +85,7 @@ fn main() {
     }
 }
 
-fn cmd_serve(args: &memfft::cli::Args) -> anyhow::Result<()> {
+fn cmd_serve(args: &memfft::cli::Args) -> CmdResult {
     let mut cfg = match args.get("config") {
         Some(p) if !p.is_empty() => ServiceConfig::load(p)?,
         _ => ServiceConfig::default(),
@@ -136,7 +142,7 @@ fn engine_if_available(args: &memfft::cli::Args) -> Option<Engine> {
     }
 }
 
-fn cmd_table1(args: &memfft::cli::Args) -> anyhow::Result<()> {
+fn cmd_table1(args: &memfft::cli::Args) -> CmdResult {
     let reps = args.get_usize("reps", 5)?;
     let engine = engine_if_available(args);
     let rows = table1::run(engine.as_ref(), &table1::paper_sizes(), reps);
@@ -145,7 +151,7 @@ fn cmd_table1(args: &memfft::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_figs(args: &memfft::cli::Args) -> anyhow::Result<()> {
+fn cmd_figs(args: &memfft::cli::Args) -> CmdResult {
     let reps = args.get_usize("reps", 3)?;
     let engine = engine_if_available(args);
     let sizes = table1::paper_sizes();
@@ -166,7 +172,7 @@ fn cmd_figs(args: &memfft::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_ablation() -> anyhow::Result<()> {
+fn cmd_ablation() -> CmdResult {
     let rows = ablation::run(&[1024, 4096, 16384, 65536]);
     println!("Ablations (simulated C2070, ms):\n\n{}", ablation::render(&rows));
     println!("Tile sweep at N=65536 (kernel-only µs):");
@@ -176,7 +182,7 @@ fn cmd_ablation() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_sim() -> anyhow::Result<()> {
+fn cmd_sim() -> CmdResult {
     let gpu = GpuDescriptor::tesla_c2070();
     println!(
         "Device: {} ({} SMs, {:.2} TFLOP/s)\n",
@@ -218,7 +224,7 @@ fn cmd_sim() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_sar(args: &memfft::cli::Args) -> anyhow::Result<()> {
+fn cmd_sar(args: &memfft::cli::Args) -> CmdResult {
     let naz = args.get_usize("naz", 256)?;
     let nr = args.get_usize("nr", 1024)?;
     let scene = sar::Scene::demo(naz, nr);

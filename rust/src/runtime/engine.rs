@@ -4,44 +4,53 @@
 //! `Send`), so an `Engine` is **thread-confined** — each coordinator worker
 //! thread constructs its own. Raw `f32` buffers (which are `Send`) cross
 //! thread boundaries; `Literal`s are built and consumed inside the worker.
-
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::Path;
-use std::rc::Rc;
-use std::time::Instant;
+//!
+//! Feature gating: the real implementation needs the vendored `xla` crate
+//! and compiles only with `--features pjrt`. The default build ships an
+//! API-identical stub whose `Engine::new` returns
+//! `EngineError::Unavailable`, so the coordinator's pjrt→native fallback
+//! keeps every test and deployment working without the toolchain.
 
 use super::manifest::{ArtifactEntry, ArtifactIndex, ManifestError};
 
-/// Build an f32 literal of the given dims in ONE copy (§Perf iter 4:
-/// `Literal::vec1(..).reshape(..)` costs two copies plus an XLA reshape).
-fn f32_literal(dims: &[usize], data: &[f32]) -> Result<xla::Literal, EngineError> {
-    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
-    };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        dims,
-        bytes,
-    )?)
-}
-
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum EngineError {
-    #[error("manifest: {0}")]
-    Manifest(#[from] ManifestError),
-    #[error("xla: {0}")]
+    Manifest(ManifestError),
     Xla(String),
-    #[error("artifact '{0}' not found in index")]
     UnknownArtifact(String),
-    #[error("shape mismatch: expected {expected} f32s, got {got}")]
     Shape { expected: usize, got: usize },
+    /// Built without the `pjrt` feature (no `xla` crate available).
+    Unavailable(&'static str),
 }
 
-impl From<xla::Error> for EngineError {
-    fn from(e: xla::Error) -> Self {
-        EngineError::Xla(e.to_string())
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Manifest(e) => write!(f, "manifest: {e}"),
+            EngineError::Xla(msg) => write!(f, "xla: {msg}"),
+            EngineError::UnknownArtifact(name) => {
+                write!(f, "artifact '{name}' not found in index")
+            }
+            EngineError::Shape { expected, got } => {
+                write!(f, "shape mismatch: expected {expected} f32s, got {got}")
+            }
+            EngineError::Unavailable(why) => write!(f, "pjrt unavailable: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EngineError::Manifest(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ManifestError> for EngineError {
+    fn from(e: ManifestError) -> Self {
+        EngineError::Manifest(e)
     }
 }
 
@@ -62,171 +71,304 @@ pub struct EngineStats {
     pub exec_time: std::time::Duration,
 }
 
-pub struct Engine {
-    client: xla::PjRtClient,
-    index: ArtifactIndex,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    stats: RefCell<EngineStats>,
+#[cfg(feature = "pjrt")]
+mod real {
+    use super::*;
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::rc::Rc;
+    use std::time::Instant;
+
+    impl From<xla::Error> for EngineError {
+        fn from(e: xla::Error) -> Self {
+            EngineError::Xla(e.to_string())
+        }
+    }
+
+    /// Build an f32 literal of the given dims in ONE copy (§Perf iter 4:
+    /// `Literal::vec1(..).reshape(..)` costs two copies plus an XLA reshape).
+    fn f32_literal(dims: &[usize], data: &[f32]) -> Result<xla::Literal, EngineError> {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            dims,
+            bytes,
+        )?)
+    }
+
+    pub struct Engine {
+        client: xla::PjRtClient,
+        index: ArtifactIndex,
+        cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+        stats: RefCell<EngineStats>,
+    }
+
+    impl Engine {
+        /// CPU-PJRT engine over an artifact directory (expects `manifest.txt`).
+        pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self, EngineError> {
+            let index = ArtifactIndex::load(artifacts_dir)?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Self {
+                client,
+                index,
+                cache: RefCell::new(HashMap::new()),
+                stats: RefCell::new(EngineStats::default()),
+            })
+        }
+
+        pub fn index(&self) -> &ArtifactIndex {
+            &self.index
+        }
+
+        pub fn stats(&self) -> EngineStats {
+            self.stats.borrow().clone()
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an artifact by name (cached). First call pays the
+        /// XLA compile; subsequent calls are a map lookup.
+        pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>, EngineError> {
+            if let Some(exe) = self.cache.borrow().get(name) {
+                return Ok(exe.clone());
+            }
+            let entry = self
+                .index
+                .get(name)
+                .ok_or_else(|| EngineError::UnknownArtifact(name.to_string()))?
+                .clone();
+            let path = self.index.path(&entry);
+            let t = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = Rc::new(self.client.compile(&comp)?);
+            {
+                let mut stats = self.stats.borrow_mut();
+                stats.compiles += 1;
+                stats.compile_time += t.elapsed();
+            }
+            self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Is the artifact already compiled? (plan-cache introspection)
+        pub fn is_loaded(&self, name: &str) -> bool {
+            self.cache.borrow().contains_key(name)
+        }
+
+        /// Warm the cache for every (op, method) artifact — the launcher calls
+        /// this at startup so the request path never compiles.
+        pub fn warmup(&self, op: &str, method: &str) -> Result<usize, EngineError> {
+            let names: Vec<String> = self
+                .index
+                .entries()
+                .iter()
+                .filter(|e| e.op == op && e.method == method)
+                .map(|e| e.name.clone())
+                .collect();
+            let count = names.len();
+            for name in names {
+                self.load(&name)?;
+            }
+            Ok(count)
+        }
+
+        /// Warm only specific sizes (all batch variants) — cheaper startup when
+        /// the served size set is known from config.
+        pub fn warmup_sizes(
+            &self,
+            op: &str,
+            method: &str,
+            sizes: &[usize],
+        ) -> Result<usize, EngineError> {
+            let names: Vec<String> = self
+                .index
+                .entries()
+                .iter()
+                .filter(|e| e.op == op && e.method == method && sizes.contains(&e.n))
+                .map(|e| e.name.clone())
+                .collect();
+            let count = names.len();
+            for name in names {
+                self.load(&name)?;
+            }
+            Ok(count)
+        }
+
+        /// Execute an `fft`/`ifft` artifact: inputs are `[batch, n]` f32 planes.
+        pub fn run_fft(
+            &self,
+            entry: &ArtifactEntry,
+            re: &[f32],
+            im: &[f32],
+        ) -> Result<FftOutput, EngineError> {
+            let expected = entry.batch * entry.n;
+            if re.len() != expected || im.len() != expected {
+                return Err(EngineError::Shape { expected, got: re.len().min(im.len()) });
+            }
+            let exe = self.load(&entry.name)?;
+            let dims = [entry.batch, entry.n];
+            let lre = f32_literal(&dims, re)?;
+            let lim = f32_literal(&dims, im)?;
+            let t = Instant::now();
+            let result = exe.execute::<xla::Literal>(&[lre, lim])?[0][0].to_literal_sync()?;
+            let exec_time = t.elapsed();
+            {
+                let mut stats = self.stats.borrow_mut();
+                stats.executions += 1;
+                stats.exec_time += exec_time;
+            }
+            let (ore, oim) = result.to_tuple2()?;
+            Ok(FftOutput { re: ore.to_vec::<f32>()?, im: oim.to_vec::<f32>()?, exec_time })
+        }
+
+        /// Execute the SAR artifact: raw [naz, nr] planes + range filter [nr]
+        /// + azimuth filter [naz]; returns the focused image planes.
+        #[allow(clippy::too_many_arguments)]
+        pub fn run_sar(
+            &self,
+            entry: &ArtifactEntry,
+            naz: usize,
+            nr: usize,
+            raw_re: &[f32],
+            raw_im: &[f32],
+            rfilt_re: &[f32],
+            rfilt_im: &[f32],
+            afilt_re: &[f32],
+            afilt_im: &[f32],
+        ) -> Result<FftOutput, EngineError> {
+            if raw_re.len() != naz * nr {
+                return Err(EngineError::Shape { expected: naz * nr, got: raw_re.len() });
+            }
+            let exe = self.load(&entry.name)?;
+            let dims = [naz, nr];
+            let args = [
+                f32_literal(&dims, raw_re)?,
+                f32_literal(&dims, raw_im)?,
+                f32_literal(&[nr], rfilt_re)?,
+                f32_literal(&[nr], rfilt_im)?,
+                f32_literal(&[naz], afilt_re)?,
+                f32_literal(&[naz], afilt_im)?,
+            ];
+            let t = Instant::now();
+            let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let exec_time = t.elapsed();
+            {
+                let mut stats = self.stats.borrow_mut();
+                stats.executions += 1;
+                stats.exec_time += exec_time;
+            }
+            let (ore, oim) = result.to_tuple2()?;
+            Ok(FftOutput { re: ore.to_vec::<f32>()?, im: oim.to_vec::<f32>()?, exec_time })
+        }
+    }
 }
 
-impl Engine {
-    /// CPU-PJRT engine over an artifact directory (expects `manifest.txt`).
-    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self, EngineError> {
-        let index = ArtifactIndex::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self {
-            client,
-            index,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(EngineStats::default()),
-        })
+#[cfg(feature = "pjrt")]
+pub use real::Engine;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::*;
+    use std::path::Path;
+    use std::rc::Rc;
+
+    const UNAVAILABLE: &str =
+        "built without the 'pjrt' feature (requires the vendored `xla` crate); \
+         use method = \"native\" or \"modeled\"";
+
+    /// Placeholder for the compiled-executable handle of the real engine.
+    #[derive(Debug)]
+    pub struct Executable;
+
+    /// API-identical stand-in for the PJRT engine. `new` always fails, so
+    /// no instance ever exists; the methods keep call sites compiling.
+    pub struct Engine {
+        index: ArtifactIndex,
     }
 
-    pub fn index(&self) -> &ArtifactIndex {
-        &self.index
-    }
-
-    pub fn stats(&self) -> EngineStats {
-        self.stats.borrow().clone()
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an artifact by name (cached). First call pays the
-    /// XLA compile; subsequent calls are a map lookup.
-    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>, EngineError> {
-        if let Some(exe) = self.cache.borrow().get(name) {
-            return Ok(exe.clone());
+    impl Engine {
+        pub fn new(_artifacts_dir: impl AsRef<Path>) -> Result<Self, EngineError> {
+            Err(EngineError::Unavailable(UNAVAILABLE))
         }
-        let entry = self
-            .index
-            .get(name)
-            .ok_or_else(|| EngineError::UnknownArtifact(name.to_string()))?
-            .clone();
-        let path = self.index.path(&entry);
-        let t = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.client.compile(&comp)?);
-        {
-            let mut stats = self.stats.borrow_mut();
-            stats.compiles += 1;
-            stats.compile_time += t.elapsed();
-        }
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
 
-    /// Is the artifact already compiled? (plan-cache introspection)
-    pub fn is_loaded(&self, name: &str) -> bool {
-        self.cache.borrow().contains_key(name)
-    }
+        pub fn index(&self) -> &ArtifactIndex {
+            &self.index
+        }
 
-    /// Warm the cache for every (op, method) artifact — the launcher calls
-    /// this at startup so the request path never compiles.
-    pub fn warmup(&self, op: &str, method: &str) -> Result<usize, EngineError> {
-        let names: Vec<String> = self
-            .index
-            .entries()
-            .iter()
-            .filter(|e| e.op == op && e.method == method)
-            .map(|e| e.name.clone())
-            .collect();
-        let count = names.len();
-        for name in names {
-            self.load(&name)?;
+        pub fn stats(&self) -> EngineStats {
+            EngineStats::default()
         }
-        Ok(count)
-    }
 
-    /// Warm only specific sizes (all batch variants) — cheaper startup when
-    /// the served size set is known from config.
-    pub fn warmup_sizes(
-        &self,
-        op: &str,
-        method: &str,
-        sizes: &[usize],
-    ) -> Result<usize, EngineError> {
-        let names: Vec<String> = self
-            .index
-            .entries()
-            .iter()
-            .filter(|e| e.op == op && e.method == method && sizes.contains(&e.n))
-            .map(|e| e.name.clone())
-            .collect();
-        let count = names.len();
-        for name in names {
-            self.load(&name)?;
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
         }
-        Ok(count)
-    }
 
-    /// Execute an `fft`/`ifft` artifact: inputs are `[batch, n]` f32 planes.
-    pub fn run_fft(
-        &self,
-        entry: &ArtifactEntry,
-        re: &[f32],
-        im: &[f32],
-    ) -> Result<FftOutput, EngineError> {
-        let expected = entry.batch * entry.n;
-        if re.len() != expected || im.len() != expected {
-            return Err(EngineError::Shape { expected, got: re.len().min(im.len()) });
+        pub fn load(&self, _name: &str) -> Result<Rc<Executable>, EngineError> {
+            Err(EngineError::Unavailable(UNAVAILABLE))
         }
-        let exe = self.load(&entry.name)?;
-        let dims = [entry.batch, entry.n];
-        let lre = f32_literal(&dims, re)?;
-        let lim = f32_literal(&dims, im)?;
-        let t = Instant::now();
-        let result = exe.execute::<xla::Literal>(&[lre, lim])?[0][0].to_literal_sync()?;
-        let exec_time = t.elapsed();
-        {
-            let mut stats = self.stats.borrow_mut();
-            stats.executions += 1;
-            stats.exec_time += exec_time;
-        }
-        let (ore, oim) = result.to_tuple2()?;
-        Ok(FftOutput { re: ore.to_vec::<f32>()?, im: oim.to_vec::<f32>()?, exec_time })
-    }
 
-    /// Execute the SAR artifact: raw [naz, nr] planes + range filter [nr]
-    /// + azimuth filter [naz]; returns the focused image planes.
-    #[allow(clippy::too_many_arguments)]
-    pub fn run_sar(
-        &self,
-        entry: &ArtifactEntry,
-        naz: usize,
-        nr: usize,
-        raw_re: &[f32],
-        raw_im: &[f32],
-        rfilt_re: &[f32],
-        rfilt_im: &[f32],
-        afilt_re: &[f32],
-        afilt_im: &[f32],
-    ) -> Result<FftOutput, EngineError> {
-        if raw_re.len() != naz * nr {
-            return Err(EngineError::Shape { expected: naz * nr, got: raw_re.len() });
+        pub fn is_loaded(&self, _name: &str) -> bool {
+            false
         }
-        let exe = self.load(&entry.name)?;
-        let dims = [naz, nr];
-        let args = [
-            f32_literal(&dims, raw_re)?,
-            f32_literal(&dims, raw_im)?,
-            f32_literal(&[nr], rfilt_re)?,
-            f32_literal(&[nr], rfilt_im)?,
-            f32_literal(&[naz], afilt_re)?,
-            f32_literal(&[naz], afilt_im)?,
-        ];
-        let t = Instant::now();
-        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let exec_time = t.elapsed();
-        {
-            let mut stats = self.stats.borrow_mut();
-            stats.executions += 1;
-            stats.exec_time += exec_time;
+
+        pub fn warmup(&self, _op: &str, _method: &str) -> Result<usize, EngineError> {
+            Err(EngineError::Unavailable(UNAVAILABLE))
         }
-        let (ore, oim) = result.to_tuple2()?;
-        Ok(FftOutput { re: ore.to_vec::<f32>()?, im: oim.to_vec::<f32>()?, exec_time })
+
+        pub fn warmup_sizes(
+            &self,
+            _op: &str,
+            _method: &str,
+            _sizes: &[usize],
+        ) -> Result<usize, EngineError> {
+            Err(EngineError::Unavailable(UNAVAILABLE))
+        }
+
+        pub fn run_fft(
+            &self,
+            _entry: &ArtifactEntry,
+            _re: &[f32],
+            _im: &[f32],
+        ) -> Result<FftOutput, EngineError> {
+            Err(EngineError::Unavailable(UNAVAILABLE))
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        pub fn run_sar(
+            &self,
+            _entry: &ArtifactEntry,
+            _naz: usize,
+            _nr: usize,
+            _raw_re: &[f32],
+            _raw_im: &[f32],
+            _rfilt_re: &[f32],
+            _rfilt_im: &[f32],
+            _afilt_re: &[f32],
+            _afilt_im: &[f32],
+        ) -> Result<FftOutput, EngineError> {
+            Err(EngineError::Unavailable(UNAVAILABLE))
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Engine;
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_reports_unavailable() {
+        let err = Engine::new("artifacts").unwrap_err();
+        assert!(matches!(err, EngineError::Unavailable(_)));
+        assert!(err.to_string().contains("pjrt"));
     }
 }

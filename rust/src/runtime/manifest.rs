@@ -17,14 +17,42 @@ pub struct ArtifactEntry {
     pub extra: String,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("manifest io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("manifest line {0}: expected >=6 tab-separated fields, got '{1}'")]
+    Io(std::io::Error),
     Malformed(usize, String),
-    #[error("no artifact for op={op} method={method} n={n} batch>={batch} (have batches {available:?})")]
     NoVariant { op: String, method: String, n: usize, batch: usize, available: Vec<usize> },
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "manifest io: {e}"),
+            ManifestError::Malformed(line, text) => {
+                write!(f, "manifest line {line}: expected >=6 tab-separated fields, got '{text}'")
+            }
+            ManifestError::NoVariant { op, method, n, batch, available } => write!(
+                f,
+                "no artifact for op={op} method={method} n={n} batch>={batch} \
+                 (have batches {available:?})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ManifestError {
+    fn from(e: std::io::Error) -> Self {
+        ManifestError::Io(e)
+    }
 }
 
 /// Parsed manifest with fast lookups.

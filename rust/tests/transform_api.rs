@@ -1,0 +1,190 @@
+//! Execution-API redesign acceptance suite (tentpole coverage):
+//!
+//! 1. Trait-object dispatch through `Box<dyn Transform>` / `&dyn Transform`
+//!    produces bit-for-bit the results of the enum-era in-place API and of
+//!    the concrete algorithm structs, for every algorithm at
+//!    n ∈ {8, 1024, 2^18, non-pow2 100}.
+//! 2. Batched execution equals looping the single-transform path, bit for
+//!    bit, for every algorithm.
+//! 3. Invalid sizes (zero, overflow, mismatched buffers, short scratch)
+//!    come back as `FftError` values — never panics.
+
+use memfft::fft::{
+    Algorithm, Bluestein, Fft2d, FftError, FftPlan, FourStep, PlanCache, Radix2, Radix4, RealFft,
+    SplitRadix, Stockham, Transform,
+};
+use memfft::util::complex::C32;
+use memfft::util::Xoshiro256;
+
+/// The enum-era dispatch target: the concrete struct's inherent in-place
+/// API, selected by a match — exactly what `FftPlan`'s deleted `Impl` enum
+/// used to do.
+fn concrete_forward(algo: Algorithm, n: usize, x: &mut [C32]) {
+    match algo {
+        Algorithm::Radix2 => Radix2::new(n).forward(x),
+        Algorithm::Radix4 => Radix4::new(n).forward(x),
+        Algorithm::SplitRadix => SplitRadix::new(n).forward(x),
+        Algorithm::Stockham => Stockham::new(n).forward(x),
+        Algorithm::FourStep => FourStep::new(n).forward(x),
+        Algorithm::Bluestein => Bluestein::new(n).forward(x),
+        Algorithm::Auto => unreachable!("candidates() never yields Auto"),
+    }
+}
+
+fn input(n: usize) -> Vec<C32> {
+    Xoshiro256::seeded(n as u64 ^ 0xD15EA5E).complex_vec(n)
+}
+
+#[test]
+fn trait_dispatch_is_bit_identical_small_and_medium() {
+    for n in [8usize, 1024, 100] {
+        let x = input(n);
+        for algo in Algorithm::candidates(n) {
+            let plan = FftPlan::new(n, algo);
+            let t: &dyn Transform = &plan;
+            let mut scratch = vec![C32::ZERO; t.scratch_len()];
+            let mut via_dyn = vec![C32::ZERO; n];
+            t.forward_into(&x, &mut via_dyn, &mut scratch).unwrap();
+
+            // Enum-era path 1: the plan's in-place convenience API.
+            let mut via_plan = x.clone();
+            plan.forward(&mut via_plan);
+            assert_eq!(via_dyn, via_plan, "{algo:?} n={n}: dyn vs plan.forward");
+
+            // Enum-era path 2: the concrete struct, dispatched by match.
+            let mut via_concrete = x.clone();
+            concrete_forward(algo, n, &mut via_concrete);
+            assert_eq!(via_dyn, via_concrete, "{algo:?} n={n}: dyn vs concrete struct");
+
+            // Inverse agrees bit-for-bit too.
+            let mut inv_dyn = vec![C32::ZERO; n];
+            t.inverse_into(&via_dyn, &mut inv_dyn, &mut scratch).unwrap();
+            let mut inv_plan = via_plan;
+            plan.inverse(&mut inv_plan);
+            assert_eq!(inv_dyn, inv_plan, "{algo:?} n={n}: dyn vs plan.inverse");
+        }
+    }
+}
+
+#[test]
+fn trait_dispatch_is_bit_identical_large() {
+    // 2^18 — the heuristic's radix2/radix4 boundary; every algorithm must
+    // still agree with its own inherent path at DRAM-resident size.
+    let n = 1 << 18;
+    let x = input(n);
+    for algo in Algorithm::candidates(n) {
+        let plan = FftPlan::new(n, algo);
+        let t: &dyn Transform = &plan;
+        let mut scratch = vec![C32::ZERO; t.scratch_len()];
+        let mut via_dyn = vec![C32::ZERO; n];
+        t.forward_into(&x, &mut via_dyn, &mut scratch).unwrap();
+        let mut via_plan = x.clone();
+        plan.forward(&mut via_plan);
+        assert_eq!(via_dyn, via_plan, "{algo:?} n={n}: dyn vs plan.forward");
+    }
+}
+
+#[test]
+fn rfft_and_fft2d_speak_the_trait() {
+    // RealFft through a trait object: full Hermitian spectrum of re(input).
+    let n = 256;
+    let rf = RealFft::new(n);
+    let t: &dyn Transform = &rf;
+    let re = Xoshiro256::seeded(7).real_vec(n);
+    let x: Vec<C32> = re.iter().map(|&r| C32::new(r, 0.0)).collect();
+    let mut out = vec![C32::ZERO; n];
+    let mut scratch = vec![C32::ZERO; t.scratch_len()];
+    t.forward_into(&x, &mut out, &mut scratch).unwrap();
+    let typed = rf.forward(&re);
+    for k in 0..=n / 2 {
+        assert_eq!(out[k], typed[k], "k={k}");
+    }
+
+    // Fft2d through a trait object matches its inherent API bit-for-bit.
+    let (rows, cols) = (8, 64);
+    let f2 = Fft2d::new(rows, cols);
+    let t: &dyn Transform = &f2;
+    assert_eq!(t.len(), rows * cols);
+    let x = input(rows * cols);
+    let mut out = vec![C32::ZERO; rows * cols];
+    let mut scratch = vec![C32::ZERO; t.scratch_len()];
+    t.forward_into(&x, &mut out, &mut scratch).unwrap();
+    let mut direct = x;
+    f2.forward(&mut direct);
+    assert_eq!(out, direct);
+}
+
+#[test]
+fn batched_equals_looped_single_transforms() {
+    let n = 256;
+    let batch = 5;
+    let data = input(n * batch);
+    for algo in Algorithm::candidates(n) {
+        let plan = FftPlan::new(n, algo);
+        let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+        let mut batched = vec![C32::ZERO; n * batch];
+        plan.forward_batch_into(batch, &data, &mut batched, &mut scratch).unwrap();
+        for b in 0..batch {
+            let mut single = vec![C32::ZERO; n];
+            plan.forward_into(&data[b * n..(b + 1) * n], &mut single, &mut scratch).unwrap();
+            assert_eq!(&batched[b * n..(b + 1) * n], &single[..], "{algo:?} row {b}");
+        }
+        // Inverse batch roundtrips back to the input (within f32 noise).
+        let mut back = vec![C32::ZERO; n * batch];
+        plan.inverse_batch_into(batch, &batched, &mut back, &mut scratch).unwrap();
+        for (a, b) in back.iter().zip(&data) {
+            assert!((*a - *b).abs() < 1e-3, "{algo:?} roundtrip");
+        }
+    }
+}
+
+#[test]
+fn zero_and_overflow_sizes_return_errors_not_panics() {
+    // Plan construction.
+    assert_eq!(FftPlan::try_new(0, Algorithm::Auto).unwrap_err(), FftError::ZeroSize);
+    assert_eq!(FftPlan::try_new(0, Algorithm::Stockham).unwrap_err(), FftError::ZeroSize);
+    assert!(matches!(
+        FftPlan::try_new(100, Algorithm::FourStep).unwrap_err(),
+        FftError::NonPowerOfTwo { n: 100, .. }
+    ));
+
+    // Cache lookups surface the same errors (and stay empty).
+    let cache = PlanCache::new();
+    assert_eq!(cache.try_get(0, Algorithm::Auto).unwrap_err(), FftError::ZeroSize);
+    assert!(cache.is_empty());
+
+    // Batch-size overflow.
+    let plan = FftPlan::new(1 << 16, Algorithm::Auto);
+    let huge = usize::MAX / 2;
+    let err = plan.forward_batch_into(huge, &[], &mut [], &mut []).unwrap_err();
+    assert_eq!(err, FftError::Overflow { n: 1 << 16, batch: huge });
+
+    // Zero-row batch.
+    let err = plan.forward_batch_into(0, &[], &mut [], &mut []).unwrap_err();
+    assert_eq!(err, FftError::ZeroSize);
+}
+
+#[test]
+fn mismatched_buffers_and_short_scratch_return_errors() {
+    let n = 64;
+    let plan = FftPlan::new(n, Algorithm::Stockham);
+    let x = input(n);
+    let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+
+    let mut short_out = vec![C32::ZERO; n - 1];
+    assert_eq!(
+        plan.forward_into(&x, &mut short_out, &mut scratch).unwrap_err(),
+        FftError::SizeMismatch { expected: n, got: n - 1 }
+    );
+
+    let mut out = vec![C32::ZERO; n];
+    let mut no_scratch: Vec<C32> = Vec::new();
+    assert_eq!(
+        plan.forward_into(&x, &mut out, &mut no_scratch).unwrap_err(),
+        FftError::ScratchTooSmall { needed: n, got: 0 }
+    );
+
+    // Batch input shorter than batch * n.
+    let err = plan.forward_batch_into(3, &x, &mut out, &mut scratch).unwrap_err();
+    assert_eq!(err, FftError::SizeMismatch { expected: 3 * n, got: n });
+}
