@@ -1,0 +1,78 @@
+//! Serial vs pooled throughput for the batched execution path — the
+//! headline measurement for the std-only worker pool (util::pool).
+//!
+//!   cargo bench --bench parallel
+//!
+//! Grid: n ∈ {2^10, 2^14, 2^18} × batch ∈ {1, 8, 64}, each measured with
+//! the thread budget pinned to 1 (serial) and left automatic (pooled).
+//! Outputs are bit-for-bit identical between the two paths (proved by the
+//! equivalence property tests); this bench quantifies the speedup.
+
+use memfft::bench::Bench;
+use memfft::fft::{Algorithm, FftPlan};
+use memfft::util::complex::C32;
+use memfft::util::{pool, Xoshiro256};
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let mut rng = Xoshiro256::seeded(0x9A11);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("cores: {cores}  pooled thread budget: {}", pool::threads());
+
+    let quick = std::env::var("MEMFFT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let sizes: &[usize] = if quick { &[1 << 10, 1 << 14] } else { &[1 << 10, 1 << 14, 1 << 18] };
+    let batches: &[usize] = if quick { &[1, 8] } else { &[1, 8, 64] };
+
+    for &n in sizes {
+        let plan = FftPlan::new(n, Algorithm::Auto);
+        for &batch in batches {
+            let input = rng.complex_vec(n * batch);
+            let mut output = vec![C32::ZERO; n * batch];
+            let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+            let elements = (n * batch) as u64;
+            pool::with_threads(1, || {
+                bench.run_with_elements(format!("serial/{n}/{batch}"), Some(elements), || {
+                    plan.forward_batch_into(batch, &input, &mut output, &mut scratch).unwrap();
+                    memfft::bench::bb(&output);
+                });
+            });
+            bench.run_with_elements(format!("pooled/{n}/{batch}"), Some(elements), || {
+                plan.forward_batch_into(batch, &input, &mut output, &mut scratch).unwrap();
+                memfft::bench::bb(&output);
+            });
+        }
+    }
+
+    println!("\n{}", bench.table());
+
+    println!("speedups (serial / pooled):");
+    for &n in sizes {
+        for &batch in batches {
+            let serial = bench.find(&format!("serial/{n}/{batch}")).map(|m| m.median_ns);
+            let pooled = bench.find(&format!("pooled/{n}/{batch}")).map(|m| m.median_ns);
+            if let (Some(s), Some(p)) = (serial, pooled) {
+                println!("  n={n:>7} batch={batch:>3}: {:>5.2}x", s / p);
+            }
+        }
+    }
+
+    // Acceptance gate: on a ≥4-core host the pooled path must deliver
+    // ≥1.8x throughput at the service's bread-and-butter shape.
+    if cores >= 4 && !quick {
+        let serial =
+            bench.find("serial/16384/64").expect("missing serial/16384/64 measurement").median_ns;
+        let pooled =
+            bench.find("pooled/16384/64").expect("missing pooled/16384/64 measurement").median_ns;
+        let speedup = serial / pooled;
+        assert!(
+            speedup >= 1.8,
+            "pooled batch=64 n=2^14 must be >=1.8x serial on {cores} cores, got {speedup:.2}x"
+        );
+        println!("acceptance: n=2^14 batch=64 speedup {speedup:.2}x >= 1.8x on {cores} cores");
+    } else {
+        println!("acceptance gate skipped (cores={cores}, quick={quick})");
+    }
+
+    bench.write_csv("parallel.csv").ok();
+    println!("wrote target/bench-results/parallel.csv");
+}

@@ -239,6 +239,13 @@ pub struct ServiceConfig {
     pub artifacts_dir: String,
     /// Worker threads executing compiled plans.
     pub workers: usize,
+    /// Data-parallel thread budget for the in-process FFT library
+    /// (`util::pool`): how many chunks a kernel's row loops may fan out
+    /// into. Scoped to this service's worker threads (thread-local, not a
+    /// process-global), so concurrent services can differ. 0 = automatic
+    /// (`MEMFFT_THREADS` env, else all cores); 1 pins the serial path.
+    /// Results are bit-identical for any value.
+    pub threads: usize,
     /// Max requests folded into one executed batch.
     pub max_batch: usize,
     /// Max time a request may wait for its bucket to fill (microseconds).
@@ -267,6 +274,7 @@ impl Default for ServiceConfig {
         Self {
             artifacts_dir: "artifacts".into(),
             workers: 2,
+            threads: 0,
             max_batch: 8,
             max_delay_us: 200,
             queue_depth: 1024,
@@ -284,6 +292,7 @@ impl ServiceConfig {
         Ok(Self {
             artifacts_dir: doc.str_or("service.artifacts_dir", &d.artifacts_dir)?,
             workers: doc.usize_or("service.workers", d.workers)?,
+            threads: doc.usize_or("service.threads", d.threads)?,
             max_batch: doc.usize_or("service.max_batch", d.max_batch)?,
             max_delay_us: doc.usize_or("service.max_delay_us", d.max_delay_us as usize)? as u64,
             queue_depth: doc.usize_or("service.queue_depth", d.queue_depth)?,
@@ -378,7 +387,23 @@ bandwidth_gbps = 144.0
     fn defaults_when_missing() {
         let cfg = ServiceConfig::from_document(&Document::parse("").unwrap()).unwrap();
         assert_eq!(cfg.workers, ServiceConfig::default().workers);
+        assert_eq!(cfg.threads, 0, "thread budget defaults to automatic");
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn threads_knob_parses() {
+        let doc = Document::parse("[service]\nthreads = 3\n").unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.threads, 3);
+        cfg.validate().unwrap();
+        // threads = 1 (forced serial) and 0 (auto) are both valid.
+        for text in ["[service]\nthreads = 1\n", "[service]\nthreads = 0\n"] {
+            ServiceConfig::from_document(&Document::parse(text).unwrap())
+                .unwrap()
+                .validate()
+                .unwrap();
+        }
     }
 
     #[test]

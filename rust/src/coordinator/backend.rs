@@ -28,7 +28,7 @@ use crate::fft::{Algorithm, PlanCache};
 use crate::gpusim::{self, GpuDescriptor, TiledOptions};
 use crate::runtime::Engine;
 use crate::util::complex::C32;
-use crate::util::is_pow2;
+use crate::util::{is_pow2, pool};
 
 /// One size-homogeneous batch of transforms: `batch` rows of `n` points.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -123,6 +123,8 @@ fn check_planes(spec: &BatchSpec, re: &[f32], im: &[f32]) -> Result<usize, Backe
 }
 
 /// CPU library substrate: `Transform`-batched, plan-cached per worker.
+/// The planar↔interleaved conversions and the per-signal transform loop
+/// both fan out over `util::pool` (bit-identical to serial execution).
 pub struct NativeBackend {
     plans: PlanCache,
     algo: Algorithm,
@@ -184,9 +186,22 @@ impl Backend for NativeBackend {
             .try_get(spec.n, self.algo)
             .map_err(|_| BackendError::UnsupportedSize(spec.n))?;
 
-        // Planar → interleaved, once per batch (not per request).
-        self.input.clear();
-        self.input.extend(re.iter().zip(im).map(|(&a, &b)| C32::new(a, b)));
+        // Planar → interleaved, once per batch (not per request), chunked
+        // across the worker pool (pure data movement — any split is
+        // bit-identical). Serial path writes each element exactly once;
+        // the chunked path resizes without clearing (the chunk writers
+        // cover every element), so steady state pays no redundant memset.
+        if pool::effective_chunks(spec.batch) <= 1 {
+            self.input.clear();
+            self.input.extend(re.iter().zip(im).map(|(&a, &b)| C32::new(a, b)));
+        } else {
+            self.input.resize(total, C32::ZERO);
+            pool::for_each_chunk(&mut self.input, spec.n, |offset, chunk| {
+                for (i, c) in chunk.iter_mut().enumerate() {
+                    *c = C32::new(re[offset + i], im[offset + i]);
+                }
+            });
+        }
         self.output.resize(total, C32::ZERO);
         self.scratch.resize(plan.scratch_len(), C32::ZERO);
 
@@ -206,12 +221,28 @@ impl Backend for NativeBackend {
         };
         run.map_err(|e| BackendError::Exec(e.to_string()))?;
 
-        // Interleaved → planar, once per batch.
-        let mut out_re = Vec::with_capacity(total);
-        let mut out_im = Vec::with_capacity(total);
-        for c in &self.output {
-            out_re.push(c.re);
-            out_im.push(c.im);
+        // Interleaved → planar, once per batch, pool-chunked like the
+        // gather above (single-writer push loop when serial).
+        let mut out_re;
+        let mut out_im;
+        let interleaved = &self.output;
+        if pool::effective_chunks(spec.batch) <= 1 {
+            out_re = Vec::with_capacity(total);
+            out_im = Vec::with_capacity(total);
+            for c in interleaved {
+                out_re.push(c.re);
+                out_im.push(c.im);
+            }
+        } else {
+            out_re = vec![0f32; total];
+            out_im = vec![0f32; total];
+            pool::for_each_chunk2(&mut out_re, &mut out_im, spec.n, |offset, rc, ic| {
+                let src = &interleaved[offset..offset + rc.len()];
+                for ((r, i), c) in rc.iter_mut().zip(ic.iter_mut()).zip(src) {
+                    *r = c.re;
+                    *i = c.im;
+                }
+            });
         }
         Ok(BatchOutput {
             re: out_re,

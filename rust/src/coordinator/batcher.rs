@@ -87,12 +87,21 @@ impl Batcher {
         bucket.push(req);
         self.pending += 1;
         if bucket.len() >= self.config.max_batch {
-            let requests = std::mem::take(bucket);
+            // Remove the entry outright: a drained-but-present bucket would
+            // linger in the map forever (one stale key per (n, direction)
+            // ever served), inflating every flush/deadline scan.
+            let requests = self.buckets.remove(&key).expect("bucket just filled");
             self.pending -= requests.len();
             Some(Batch { n: key.0, direction: key.1, requests })
         } else {
             None
         }
+    }
+
+    /// Number of non-empty buckets currently pending (observability; also
+    /// the invariant checked by the no-stale-entries regression test).
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
     }
 
     /// Flush every bucket whose oldest request has waited >= max_delay.
@@ -247,6 +256,118 @@ mod tests {
         assert_eq!(total, 5);
         assert_eq!(b.pending(), 0);
         assert!(b.next_deadline(Instant::now()).is_none());
+    }
+
+    fn req_at(
+        id: u64,
+        n: usize,
+        direction: Direction,
+        at: Instant,
+    ) -> (FftRequest, mpsc::Receiver<FftResult>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            FftRequest {
+                id,
+                n,
+                direction,
+                re: vec![0.0; n],
+                im: vec![0.0; n],
+                submitted_at: at,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn aged_bucket_flushes_below_max_batch() {
+        // A bucket whose OLDEST request aged past max_delay must flush even
+        // when far below max_batch (nonzero delay, simulated clock).
+        let delay = Duration::from_millis(10);
+        let mut b = Batcher::new(cfg(100, delay.as_micros() as u64));
+        let base = Instant::now();
+        let mut _rxs = vec![];
+        for id in 0..3 {
+            let (r, rx) = req_at(id, 256, Direction::Forward, base);
+            _rxs.push(rx);
+            assert!(b.push(r).is_none(), "3 << max_batch=100 must not flush on push");
+        }
+        assert!(b.flush_expired(base + delay / 2).is_empty(), "not yet aged");
+        let flushed = b.flush_expired(base + delay * 2);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].requests.len(), 3, "partial batch flushes whole");
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn full_bucket_leaves_no_stale_entry() {
+        let mut b = Batcher::new(cfg(2, 1_000_000));
+        let mut _rxs = vec![];
+        for id in 0..2 {
+            let (r, rx) = req(id, 64);
+            _rxs.push(rx);
+            b.push(r);
+        }
+        assert_eq!(b.bucket_count(), 0, "drained bucket must be removed, not left empty");
+        assert!(b.next_deadline(Instant::now()).is_none());
+        // ...and many distinct sizes must not accumulate stale keys.
+        for round in 0..10u64 {
+            for lg in 4..10u64 {
+                let (r1, x1) = req(round * 100 + lg * 2, 1 << lg);
+                let (r2, x2) = req(round * 100 + lg * 2 + 1, 1 << lg);
+                _rxs.push(x1);
+                _rxs.push(x2);
+                b.push(r1);
+                assert!(b.push(r2).is_some());
+            }
+        }
+        assert_eq!(b.bucket_count(), 0);
+    }
+
+    #[test]
+    fn dominant_direction_cannot_starve_the_other() {
+        // Regression: a flood of same-size FORWARD requests (filling batch
+        // after batch) must not delay a lone INVERSE request in the same
+        // size bucket past its max_delay deadline.
+        let delay = Duration::from_micros(500);
+        let step = Duration::from_micros(100);
+        let mut b = Batcher::new(cfg(4, delay.as_micros() as u64));
+        let base = Instant::now();
+        let mut _rxs = vec![];
+
+        // t = 0: the lone inverse request arrives.
+        let (inv, rx) = req_at(1000, 64, Direction::Inverse, base);
+        _rxs.push(rx);
+        assert!(b.push(inv).is_none());
+
+        let mut inverse_flushed_at: Option<Duration> = None;
+        let mut id = 0u64;
+        for tick in 0..20u32 {
+            let now = base + step * tick;
+            // Forward arrivals dominate: a full batch every tick.
+            for _ in 0..4 {
+                let (r, rx) = req_at(id, 64, Direction::Forward, now);
+                id += 1;
+                _rxs.push(rx);
+                if let Some(batch) = b.push(r) {
+                    assert_eq!(batch.direction, Direction::Forward);
+                    assert_eq!(batch.requests.len(), 4);
+                }
+            }
+            // The service loop flushes expired buckets every iteration.
+            for batch in b.flush_expired(now) {
+                if batch.direction == Direction::Inverse {
+                    assert!(inverse_flushed_at.is_none(), "inverse flushed twice");
+                    inverse_flushed_at = Some(now - base);
+                }
+            }
+        }
+        let at = inverse_flushed_at.expect("inverse request was starved — never flushed");
+        assert!(
+            at <= delay + step,
+            "inverse flushed only after {at:?} (deadline {delay:?} + tick {step:?})"
+        );
+        assert_eq!(b.pending(), 0, "nothing may linger once the flood stops at a batch edge");
     }
 
     #[test]

@@ -207,6 +207,20 @@ fn worker_loop(
     cfg: ServiceConfig,
     ready: mpsc::Sender<()>,
 ) {
+    // The `threads` config knob scopes the FFT library's data-parallel
+    // budget to THIS worker thread (regions are budgeted by their opening
+    // thread), so concurrent services with different knobs never clobber
+    // each other and shutdown leaves no process-global residue. 0 = unset
+    // (fall through to pool::set_threads / MEMFFT_THREADS / cores).
+    crate::util::pool::with_threads(cfg.threads, || worker_body(rx, metrics, cfg, ready));
+}
+
+fn worker_body(
+    rx: Arc<Mutex<Receiver<Batch>>>,
+    metrics: Arc<ServiceMetrics>,
+    cfg: ServiceConfig,
+    ready: mpsc::Sender<()>,
+) {
     // Each worker owns one Backend (PJRT clients are thread-confined, so
     // construction must happen on this thread). Which substrate it is —
     // and the pjrt→native degradation when artifacts are missing — is

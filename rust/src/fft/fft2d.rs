@@ -2,11 +2,46 @@
 //!
 //! Used by the SAR range–Doppler processor (range FFTs along rows, azimuth
 //! FFTs along columns) and as the host-side mirror of `model.fft2d`.
+//!
+//! Both passes are row-parallel over `util::pool` (independent 1-D
+//! transforms per row, per-thread scratch), bit-for-bit identical to the
+//! serial path — see DESIGN.md §Parallel execution.
 
 use super::fourstep::transpose;
 use super::plan::{Algorithm, FftPlan};
 use super::transform::{check_inplace, FftError, Transform};
 use crate::util::complex::C32;
+use crate::util::pool;
+
+/// Run `plan` over every `row_len`-element row of `data`, row-parallel on
+/// the worker pool with per-thread scratch. Rows are independent and their
+/// results do not depend on scratch contents, so the output is bit-for-bit
+/// identical to the serial loop for any thread count.
+fn run_rows(plan: &FftPlan, data: &mut [C32], row_len: usize, inverse: bool) -> Result<(), FftError> {
+    let first_err = std::sync::Mutex::new(None);
+    pool::for_each_chunk(data, row_len, |_, rows| {
+        super::scratch::with_scratch(plan.scratch_len(), |s| {
+            for row in rows.chunks_exact_mut(row_len) {
+                let r = if inverse {
+                    plan.inverse_inplace(row, s)
+                } else {
+                    plan.forward_inplace(row, s)
+                };
+                if let Err(e) = r {
+                    let mut slot = first_err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                    return;
+                }
+            }
+        });
+    });
+    match first_err.into_inner().unwrap() {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
 
 #[derive(Debug)]
 pub struct Fft2d {
@@ -30,31 +65,24 @@ impl Fft2d {
         }
     }
 
-    /// Forward 2-D FFT of a row-major rows × cols matrix, in place.
+    /// Forward 2-D FFT of a row-major rows × cols matrix, in place. Row and
+    /// column passes run row-parallel on the worker pool.
     pub fn forward(&self, x: &mut [C32]) {
         assert_eq!(x.len(), self.rows * self.cols);
-        for r in 0..self.rows {
-            self.row_plan.forward(&mut x[r * self.cols..(r + 1) * self.cols]);
-        }
+        run_rows(&self.row_plan, x, self.cols, false).unwrap_or_else(|e| panic!("Fft2d::forward: {e}"));
         let mut t = vec![C32::ZERO; x.len()];
         transpose(x, &mut t, self.rows, self.cols);
-        for c in 0..self.cols {
-            self.col_plan.forward(&mut t[c * self.rows..(c + 1) * self.rows]);
-        }
+        run_rows(&self.col_plan, &mut t, self.rows, false).unwrap_or_else(|e| panic!("Fft2d::forward: {e}"));
         transpose(&t, x, self.cols, self.rows);
     }
 
     /// Inverse 2-D FFT with 1/(rows·cols) scaling, in place.
     pub fn inverse(&self, x: &mut [C32]) {
         assert_eq!(x.len(), self.rows * self.cols);
-        for r in 0..self.rows {
-            self.row_plan.inverse(&mut x[r * self.cols..(r + 1) * self.cols]);
-        }
+        run_rows(&self.row_plan, x, self.cols, true).unwrap_or_else(|e| panic!("Fft2d::inverse: {e}"));
         let mut t = vec![C32::ZERO; x.len()];
         transpose(x, &mut t, self.rows, self.cols);
-        for c in 0..self.cols {
-            self.col_plan.inverse(&mut t[c * self.rows..(c + 1) * self.rows]);
-        }
+        run_rows(&self.col_plan, &mut t, self.rows, true).unwrap_or_else(|e| panic!("Fft2d::inverse: {e}"));
         transpose(&t, x, self.cols, self.rows);
     }
 
@@ -62,17 +90,15 @@ impl Fft2d {
     /// range-compression primitive.
     pub fn forward_rows(&self, x: &mut [C32]) {
         assert_eq!(x.len(), self.rows * self.cols);
-        for r in 0..self.rows {
-            self.row_plan.forward(&mut x[r * self.cols..(r + 1) * self.cols]);
-        }
+        run_rows(&self.row_plan, x, self.cols, false)
+            .unwrap_or_else(|e| panic!("Fft2d::forward_rows: {e}"));
     }
 
     /// Inverse FFT along rows only.
     pub fn inverse_rows(&self, x: &mut [C32]) {
         assert_eq!(x.len(), self.rows * self.cols);
-        for r in 0..self.rows {
-            self.row_plan.inverse(&mut x[r * self.cols..(r + 1) * self.cols]);
-        }
+        run_rows(&self.row_plan, x, self.cols, true)
+            .unwrap_or_else(|e| panic!("Fft2d::inverse_rows: {e}"));
     }
 
     /// FFT along columns only — the SAR azimuth primitive.
@@ -80,9 +106,8 @@ impl Fft2d {
         assert_eq!(x.len(), self.rows * self.cols);
         let mut t = vec![C32::ZERO; x.len()];
         transpose(x, &mut t, self.rows, self.cols);
-        for c in 0..self.cols {
-            self.col_plan.forward(&mut t[c * self.rows..(c + 1) * self.rows]);
-        }
+        run_rows(&self.col_plan, &mut t, self.rows, false)
+            .unwrap_or_else(|e| panic!("Fft2d::forward_cols: {e}"));
         transpose(&t, x, self.cols, self.rows);
     }
 
@@ -91,9 +116,8 @@ impl Fft2d {
         assert_eq!(x.len(), self.rows * self.cols);
         let mut t = vec![C32::ZERO; x.len()];
         transpose(x, &mut t, self.rows, self.cols);
-        for c in 0..self.cols {
-            self.col_plan.inverse(&mut t[c * self.rows..(c + 1) * self.rows]);
-        }
+        run_rows(&self.col_plan, &mut t, self.rows, true)
+            .unwrap_or_else(|e| panic!("Fft2d::inverse_cols: {e}"));
         transpose(&t, x, self.cols, self.rows);
     }
 }
@@ -108,36 +132,29 @@ impl Transform for Fft2d {
     fn name(&self) -> &'static str {
         "fft2d"
     }
-    /// Full-size transpose buffer + the larger of the row/column plans'
-    /// own scratch requirements.
+    /// One full-size transpose buffer. Per-row plan scratch comes from the
+    /// per-thread pool inside the row-parallel passes, so it is no longer
+    /// part of the caller's requirement.
     fn scratch_len(&self) -> usize {
-        self.rows * self.cols + self.row_plan.scratch_len().max(self.col_plan.scratch_len())
+        self.rows * self.cols
     }
     fn forward_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
         let len = self.rows * self.cols;
         check_inplace(len, x, scratch, Transform::scratch_len(self))?;
-        let (t, ps) = scratch.split_at_mut(len);
-        for r in 0..self.rows {
-            self.row_plan.forward_inplace(&mut x[r * self.cols..(r + 1) * self.cols], ps)?;
-        }
+        let t = &mut scratch[..len];
+        run_rows(&self.row_plan, x, self.cols, false)?;
         transpose(x, t, self.rows, self.cols);
-        for c in 0..self.cols {
-            self.col_plan.forward_inplace(&mut t[c * self.rows..(c + 1) * self.rows], ps)?;
-        }
+        run_rows(&self.col_plan, t, self.rows, false)?;
         transpose(t, x, self.cols, self.rows);
         Ok(())
     }
     fn inverse_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
         let len = self.rows * self.cols;
         check_inplace(len, x, scratch, Transform::scratch_len(self))?;
-        let (t, ps) = scratch.split_at_mut(len);
-        for r in 0..self.rows {
-            self.row_plan.inverse_inplace(&mut x[r * self.cols..(r + 1) * self.cols], ps)?;
-        }
+        let t = &mut scratch[..len];
+        run_rows(&self.row_plan, x, self.cols, true)?;
         transpose(x, t, self.rows, self.cols);
-        for c in 0..self.cols {
-            self.col_plan.inverse_inplace(&mut t[c * self.rows..(c + 1) * self.rows], ps)?;
-        }
+        run_rows(&self.col_plan, t, self.rows, true)?;
         transpose(t, x, self.cols, self.rows);
         Ok(())
     }

@@ -21,7 +21,7 @@
 use super::stockham::Stockham;
 use super::transform::{check_inplace, FftError, Transform};
 use crate::util::complex::C32;
-use crate::util::{capped_pow2_split, is_pow2};
+use crate::util::{capped_pow2_split, is_pow2, pool};
 
 /// Default tile: complex elements that fit the fast-memory analog.
 /// 2048 × 8 bytes = 16 KB — comfortably inside L1 on the host CPU and the
@@ -100,9 +100,9 @@ impl FourStep {
         }
     }
 
-    /// §Perf iter 1: scratch from the thread-local pool (a full-size
-    /// transpose buffer + a sub-FFT ping-pong buffer) instead of two
-    /// fresh allocations per call.
+    /// §Perf iter 1: the transpose buffer comes from the thread-local
+    /// scratch pool instead of a fresh allocation per call (sub-FFT
+    /// ping-pong buffers are per-thread inside the parallel passes).
     pub fn forward(&self, x: &mut [C32]) {
         super::scratch::with_scratch(Transform::scratch_len(self), |scratch| {
             self.forward_with_scratch(x, scratch);
@@ -110,8 +110,8 @@ impl FourStep {
     }
 
     /// Forward FFT with caller-owned scratch of at least
-    /// `Transform::scratch_len(self)` elements: the full-size transpose
-    /// buffer followed by the sub-FFT ping-pong buffer.
+    /// `Transform::scratch_len(self)` elements (the full-size transpose
+    /// buffer; sub-FFT ping-pong buffers come from the per-thread pool).
     pub fn forward_with_scratch(&self, x: &mut [C32], scratch: &mut [C32]) {
         assert_eq!(x.len(), self.n);
         assert!(scratch.len() >= Transform::scratch_len(self), "scratch too small");
@@ -119,11 +119,10 @@ impl FourStep {
             direct.forward_with_scratch(x, &mut scratch[..self.n]);
             return;
         }
-        let (transpose_buf, fft_scratch) = scratch.split_at_mut(self.n);
-        self.forward_passes(x, transpose_buf, fft_scratch);
+        self.forward_passes(x, &mut scratch[..self.n]);
     }
 
-    fn forward_passes(&self, x: &mut [C32], scratch: &mut [C32], fft_scratch: &mut [C32]) {
+    fn forward_passes(&self, x: &mut [C32], scratch: &mut [C32]) {
         let (n1, n2) = (self.n1, self.n2);
         let col = self.col_plan.as_ref().unwrap();
 
@@ -131,42 +130,57 @@ impl FourStep {
         // column FFTs become contiguous row FFTs.
         transpose(x, scratch, n1, n2);
 
-        // Step 2+3: per row j2 — FFT_{n1}, then twiddle by W_n^{j2 k1}.
+        // Step 2+3: per row j2 — FFT_{n1}, then twiddle by W_n^{j2 k1} —
+        // row-parallel over the worker pool (the paper's "keep every
+        // execution unit busy on independent column FFTs", on host cores).
+        // Each chunk borrows its own ping-pong buffer from the per-thread
+        // scratch pool; row results do not depend on scratch contents, so
+        // any chunking is bit-identical to the serial loop.
         // §Perf iter 2: the twiddle walks a geometric series along the row
         // (ratio W_n^{j2}), so an f64 phase recurrence replaces the
         // per-element `(j2*k1) % n` + table lookup. f64 keeps the
-        // accumulated error over n1 ≤ tile steps below f32 noise.
-        for j2 in 0..n2 {
-            let row = &mut scratch[j2 * n1..(j2 + 1) * n1];
-            col.forward_with_scratch(row, &mut fft_scratch[..n1]);
-            let step = crate::util::C64::twiddle(j2, self.n);
-            let mut w = crate::util::C64::ONE;
-            for v in row.iter_mut() {
-                *v *= w.to_c32();
-                w *= step;
-            }
-        }
+        // accumulated error over n1 ≤ tile steps below f32 noise. The
+        // recurrence restarts at every row, never crossing a chunk edge.
+        pool::for_each_chunk(scratch, n1, |offset, rows| {
+            super::scratch::with_scratch(n1, |fft_scratch| {
+                let j2_base = offset / n1;
+                for (j, row) in rows.chunks_exact_mut(n1).enumerate() {
+                    col.forward_with_scratch(row, fft_scratch);
+                    let step = crate::util::C64::twiddle(j2_base + j, self.n);
+                    let mut w = crate::util::C64::ONE;
+                    for v in row.iter_mut() {
+                        *v *= w.to_c32();
+                        w *= step;
+                    }
+                }
+            });
+        });
 
         // Step 4: transpose back (n2 × n1) -> x (n1 × n2).
         transpose(scratch, x, n2, n1);
 
-        // Step 5: per row k1 — FFT_{n2} (recursing if n2 > tile). The
-        // recursion borrows the transpose buffer as its own scratch: it is
-        // dead between steps 4 and 6, and with n1 >= 2 its n elements
-        // always cover the inner plan's n2 + max(n2', n2'') requirement.
+        // Step 5: per row k1 — FFT_{n2}, row-parallel (recursing if
+        // n2 > tile; a nested recursion inside a pool region runs serially
+        // on its worker, so deep plans never oversubscribe).
         match self.row_plan.as_ref().unwrap() {
             RowPlan::Leaf(plan) => {
-                for k1 in 0..n1 {
-                    plan.forward_with_scratch(
-                        &mut x[k1 * n2..(k1 + 1) * n2],
-                        &mut fft_scratch[..n2],
-                    );
-                }
+                pool::for_each_chunk(x, n2, |_, rows| {
+                    super::scratch::with_scratch(n2, |fft_scratch| {
+                        for row in rows.chunks_exact_mut(n2) {
+                            plan.forward_with_scratch(row, fft_scratch);
+                        }
+                    });
+                });
             }
             RowPlan::Recurse(plan) => {
-                for k1 in 0..n1 {
-                    plan.forward_with_scratch(&mut x[k1 * n2..(k1 + 1) * n2], scratch);
-                }
+                let inner_len = Transform::scratch_len(plan.as_ref());
+                pool::for_each_chunk(x, n2, |_, rows| {
+                    super::scratch::with_scratch(inner_len, |inner_scratch| {
+                        for row in rows.chunks_exact_mut(n2) {
+                            plan.forward_with_scratch(row, inner_scratch);
+                        }
+                    });
+                });
             }
         }
 
@@ -188,14 +202,12 @@ impl Transform for FourStep {
     fn name(&self) -> &'static str {
         "fourstep"
     }
-    /// Full-size transpose buffer plus the larger sub-FFT's ping-pong
-    /// buffer (single-pass plans need only the direct Stockham's buffer).
+    /// One full-size transpose buffer. Sub-FFT ping-pong buffers live in
+    /// the per-thread scratch pool (one per worker touching the plan), so
+    /// the caller-visible requirement shrank from `n + max(n1, n2)` when
+    /// the row loops went parallel.
     fn scratch_len(&self) -> usize {
-        if self.direct.is_some() {
-            self.n
-        } else {
-            self.n + self.n1.max(self.n2)
-        }
+        self.n
     }
     fn forward_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
         check_inplace(self.n, x, scratch, Transform::scratch_len(self))?;
@@ -204,26 +216,46 @@ impl Transform for FourStep {
     }
 }
 
+/// Matrices below this element count transpose serially — a pool region's
+/// fixed cost (queue + wakeup) is not worth hiding for a few KB of copies.
+const PAR_TRANSPOSE_MIN: usize = 1 << 14;
+
 /// Cache-blocked out-of-place transpose: src is rows × cols, dst becomes
 /// cols × rows. Block of 32×32 complex = 16 KB working set.
+///
+/// Large matrices split across the worker pool by whole destination rows
+/// (tile groups); pure data movement, so any split is bit-identical.
 pub fn transpose(src: &[C32], dst: &mut [C32], rows: usize, cols: usize) {
     assert_eq!(src.len(), rows * cols);
     assert_eq!(dst.len(), rows * cols);
+    if src.len() >= PAR_TRANSPOSE_MIN {
+        pool::for_each_chunk(dst, rows, |offset, chunk| {
+            transpose_tile(src, chunk, rows, cols, offset / rows);
+        });
+    } else {
+        transpose_tile(src, dst, rows, cols, 0);
+    }
+}
+
+/// Transpose the source-column strip `[c0, c0 + dst.len()/rows)` of the
+/// rows × cols matrix `src` into `dst` (whole destination rows).
+fn transpose_tile(src: &[C32], dst: &mut [C32], rows: usize, cols: usize, c0: usize) {
     const B: usize = 32;
-    let mut r0 = 0;
-    while r0 < rows {
-        let r1 = (r0 + B).min(rows);
-        let mut c0 = 0;
-        while c0 < cols {
-            let c1 = (c0 + B).min(cols);
-            for r in r0..r1 {
-                for c in c0..c1 {
-                    dst[c * rows + r] = src[r * cols + c];
+    let ncols = dst.len() / rows;
+    let mut cb = 0;
+    while cb < ncols {
+        let ce = (cb + B).min(ncols);
+        let mut rb = 0;
+        while rb < rows {
+            let re = (rb + B).min(rows);
+            for c in cb..ce {
+                for r in rb..re {
+                    dst[c * rows + r] = src[r * cols + c0 + c];
                 }
             }
-            c0 = c1;
+            rb = re;
         }
-        r0 = r1;
+        cb = ce;
     }
 }
 
@@ -312,6 +344,20 @@ mod tests {
         plan.forward(&mut y);
         plan.inverse(&mut y);
         assert!(max_abs_diff(&x, &y) < 1e-3);
+    }
+
+    #[test]
+    fn transpose_parallel_matches_serial_bitwise() {
+        let mut rng = Xoshiro256::seeded(66);
+        let (r, c) = (128usize, 256usize); // above PAR_TRANSPOSE_MIN
+        let src = rng.complex_vec(r * c);
+        let mut serial = vec![C32::ZERO; r * c];
+        pool::with_threads(1, || transpose(&src, &mut serial, r, c));
+        for threads in [2usize, 7] {
+            let mut par = vec![C32::ZERO; r * c];
+            pool::with_threads(threads, || transpose(&src, &mut par, r, c));
+            assert_eq!(serial, par, "threads={threads}");
+        }
     }
 
     #[test]

@@ -17,6 +17,15 @@
 //! scratch-sensitive — should use `forward_into` / `forward_batch_into`
 //! from the [`Transform`] trait. See DESIGN.md §Execution-API.
 //!
+//! **Batch-parallel by default**: `forward_batch_into` /
+//! `inverse_batch_into` fan the batch out over the std-only worker pool
+//! (`util::pool`), one chunk of signals per thread with per-thread
+//! scratch; the four-step and 2-D transforms additionally parallelize
+//! their internal row/column passes and transposes. Outputs are
+//! bit-for-bit identical to serial execution for any thread budget
+//! (`MEMFFT_THREADS`, the `service.threads` knob, or
+//! `pool::with_threads`) — see DESIGN.md §Parallel execution.
+//!
 //! Conventions (match the paper's eq. 1–2 and `python/compile/kernels/ref.py`):
 //! forward `X[k] = Σ x[n] e^{-2πi nk/N}` (no scaling), inverse carries `1/N`.
 

@@ -129,7 +129,15 @@ pub trait Transform: std::fmt::Debug + Send + Sync {
     }
 
     /// Batched out-of-place forward over `batch` contiguous rows of
-    /// `len()` points each, reusing one scratch buffer across rows.
+    /// `len()` points each.
+    ///
+    /// Default: **row-parallel** on the [`crate::util::pool`] worker pool —
+    /// rows are split into disjoint contiguous chunks, each chunk running
+    /// rows through its own per-thread scratch. Because every row's
+    /// arithmetic is independent of chunking and of scratch contents, the
+    /// output is bit-for-bit identical to the serial path. With one
+    /// effective thread (or `batch == 1`) this degrades to the serial loop
+    /// reusing the caller's `scratch` across rows.
     fn forward_batch_into(
         &self,
         batch: usize,
@@ -138,13 +146,22 @@ pub trait Transform: std::fmt::Debug + Send + Sync {
         scratch: &mut [C32],
     ) -> Result<(), FftError> {
         let n = check_batch(self.len(), batch, input, output)?;
-        for (i_row, o_row) in input.chunks_exact(n).zip(output.chunks_exact_mut(n)) {
-            self.forward_into(i_row, o_row, scratch)?;
+        let needed = self.scratch_len();
+        if scratch.len() < needed {
+            return Err(FftError::ScratchTooSmall { needed, got: scratch.len() });
         }
-        Ok(())
+        if crate::util::pool::effective_chunks(batch) <= 1 {
+            for (i_row, o_row) in input.chunks_exact(n).zip(output.chunks_exact_mut(n)) {
+                self.forward_into(i_row, o_row, scratch)?;
+            }
+            return Ok(());
+        }
+        run_batch_rows(self, n, needed, input, output, false)
     }
 
-    /// Batched out-of-place inverse (1/N scaling per row).
+    /// Batched out-of-place inverse (1/N scaling per row). Row-parallel by
+    /// default — see [`Transform::forward_batch_into`] for the determinism
+    /// contract and serial degradation.
     fn inverse_batch_into(
         &self,
         batch: usize,
@@ -153,10 +170,56 @@ pub trait Transform: std::fmt::Debug + Send + Sync {
         scratch: &mut [C32],
     ) -> Result<(), FftError> {
         let n = check_batch(self.len(), batch, input, output)?;
-        for (i_row, o_row) in input.chunks_exact(n).zip(output.chunks_exact_mut(n)) {
-            self.inverse_into(i_row, o_row, scratch)?;
+        let needed = self.scratch_len();
+        if scratch.len() < needed {
+            return Err(FftError::ScratchTooSmall { needed, got: scratch.len() });
         }
-        Ok(())
+        if crate::util::pool::effective_chunks(batch) <= 1 {
+            for (i_row, o_row) in input.chunks_exact(n).zip(output.chunks_exact_mut(n)) {
+                self.inverse_into(i_row, o_row, scratch)?;
+            }
+            return Ok(());
+        }
+        run_batch_rows(self, n, needed, input, output, true)
+    }
+}
+
+/// The shared row-parallel batch body behind both batched defaults: chunk
+/// the output rows over the worker pool, run each row out-of-place with
+/// per-thread scratch, and report the first error observed (first-writer
+/// wins, so the surfaced error is stable regardless of scheduling).
+fn run_batch_rows<T: Transform + ?Sized>(
+    t: &T,
+    n: usize,
+    scratch_needed: usize,
+    input: &[C32],
+    output: &mut [C32],
+    inverse: bool,
+) -> Result<(), FftError> {
+    let first_err = std::sync::Mutex::new(None);
+    crate::util::pool::for_each_chunk(output, n, |offset, out_rows| {
+        super::scratch::with_scratch(scratch_needed, |s| {
+            for (i, o_row) in out_rows.chunks_exact_mut(n).enumerate() {
+                let start = offset + i * n;
+                let i_row = &input[start..start + n];
+                let r = if inverse {
+                    t.inverse_into(i_row, o_row, s)
+                } else {
+                    t.forward_into(i_row, o_row, s)
+                };
+                if let Err(e) = r {
+                    let mut slot = first_err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                    return;
+                }
+            }
+        });
+    });
+    match first_err.into_inner().unwrap() {
+        Some(e) => Err(e),
+        None => Ok(()),
     }
 }
 

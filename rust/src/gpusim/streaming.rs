@@ -110,6 +110,32 @@ mod tests {
     }
 
     #[test]
+    fn edge_chunk_counts_never_beat_the_sync_bound_dishonestly() {
+        // chunks == 1 (no overlap possible) and chunks > batch (more slices
+        // than independent transforms — each slice sub-divides a transform's
+        // transfers, the model's latency floor dominates) must both stay
+        // within [sync/3.5, sync]: never slower than the sync baseline the
+        // report clamps to, and never claiming a speedup beyond what a
+        // 3-stage pipeline can physically hide.
+        let g = gpu();
+        for (n, batch) in [(1024usize, 4usize), (16384, 2)] {
+            let s = tiled(n, batch, TiledOptions::default(), &g);
+            for chunks in [1usize, batch + 1, 8 * batch, 256] {
+                let r = pipeline(&s, chunks, &g);
+                assert!(
+                    r.streamed_total_s <= r.sync_total_s + 1e-12,
+                    "n={n} batch={batch} chunks={chunks}: streamed slower than sync"
+                );
+                assert!(
+                    r.speedup() >= 1.0 && r.speedup() < 3.5,
+                    "n={n} batch={batch} chunks={chunks}: speedup {:.2} out of range",
+                    r.speedup()
+                );
+            }
+        }
+    }
+
+    #[test]
     fn diminishing_returns_with_latency_floor() {
         // Past some chunk count, per-chunk PCIe latency dominates and more
         // chunks stop helping.

@@ -32,6 +32,7 @@ fn cli() -> Cli {
                 )
                 .arg_default("artifacts", "artifacts", "artifact directory")
                 .arg_default("workers", "2", "worker threads")
+                .arg_default("threads", "0", "FFT data-parallel threads (0 = all cores)")
                 .arg_default("requests", "200", "synthetic requests to issue")
                 .arg_default("sizes", "1024,4096,16384", "request sizes (comma)"),
         )
@@ -95,11 +96,17 @@ fn cmd_serve(args: &memfft::cli::Args) -> CmdResult {
     cfg.method = method;
     cfg.artifacts_dir = artifacts;
     cfg.workers = args.get_usize("workers", cfg.workers)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
     cfg.validate()?;
     let requests = args.get_usize("requests", 200)?;
     let sizes = args.get_usize_list("sizes", &[1024, 4096, 16384])?;
 
-    println!("starting service: method={} workers={}", cfg.method, cfg.workers);
+    println!(
+        "starting service: method={} workers={} fft-threads={}",
+        cfg.method,
+        cfg.workers,
+        if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() }
+    );
     let svc = FftService::start(cfg);
     let mut rng = Xoshiro256::seeded(42);
     let t = Timer::start();

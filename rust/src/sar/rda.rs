@@ -13,6 +13,7 @@ use super::chirp::matched_filter;
 use super::scene::Scene;
 use crate::fft::plan::{Algorithm, FftPlan};
 use crate::util::complex::C32;
+use crate::util::pool;
 
 /// Focused image + the filters used (so the AOT path can reuse them).
 pub struct Focused {
@@ -34,24 +35,31 @@ pub fn process_cpu(raw: &[C32], naz: usize, nr: usize) -> Focused {
     let az_plan = FftPlan::new(naz, Algorithm::Auto);
 
     let mut img = raw.to_vec();
-    // Range compression, row-wise.
-    for row in img.chunks_exact_mut(nr) {
-        range_plan.forward(row);
-        for (v, h) in row.iter_mut().zip(&rfilt) {
-            *v *= *h;
+    // Range compression, row-parallel over azimuth lines (each line's
+    // FFT·filter·IFFT is independent; per-thread scratch inside the plan
+    // calls keeps the output bit-identical to the serial loop).
+    pool::for_each_chunk(&mut img, nr, |_, lines| {
+        for row in lines.chunks_exact_mut(nr) {
+            range_plan.forward(row);
+            for (v, h) in row.iter_mut().zip(&rfilt) {
+                *v *= *h;
+            }
+            range_plan.inverse(row);
         }
-        range_plan.inverse(row);
-    }
-    // Azimuth compression, column-wise (via transpose).
+    });
+    // Azimuth compression, column-wise (via transpose), parallel over
+    // range columns.
     let mut t = vec![C32::ZERO; naz * nr];
     crate::fft::fourstep::transpose(&img, &mut t, naz, nr);
-    for col in t.chunks_exact_mut(naz) {
-        az_plan.forward(col);
-        for (v, h) in col.iter_mut().zip(&afilt) {
-            *v *= *h;
+    pool::for_each_chunk(&mut t, naz, |_, cols| {
+        for col in cols.chunks_exact_mut(naz) {
+            az_plan.forward(col);
+            for (v, h) in col.iter_mut().zip(&afilt) {
+                *v *= *h;
+            }
+            az_plan.inverse(col);
         }
-        az_plan.inverse(col);
-    }
+    });
     crate::fft::fourstep::transpose(&t, &mut img, nr, naz);
     Focused { naz, nr, image: img }
 }

@@ -1,6 +1,8 @@
-//! Shared utilities: complex arithmetic, PRNGs, timing, integer helpers.
+//! Shared utilities: complex arithmetic, PRNGs, timing, integer helpers,
+//! and the std-only data-parallel worker pool ([`pool`]).
 
 pub mod complex;
+pub mod pool;
 pub mod prng;
 pub mod timer;
 

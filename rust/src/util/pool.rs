@@ -1,0 +1,488 @@
+//! Std-only data-parallel worker pool — the CPU analog of the paper's rule
+//! that the data is "divided into parts reasonably according to the size of
+//! data" so every execution unit stays busy (§2.3.2, applied to host cores
+//! instead of SMs).
+//!
+//! Design constraints (see DESIGN.md §Parallel execution):
+//!
+//! - **Std-only**: no rayon. A global pool of `available_parallelism() - 1`
+//!   persistent workers lives in a `OnceLock`; the thread that opens a
+//!   parallel region always participates in draining it, so the pool can be
+//!   empty (single-core host) and everything still completes.
+//! - **Deterministic**: [`for_each_chunk`] splits a slice at *fixed*
+//!   boundaries into disjoint contiguous chunks of whole `stride` units.
+//!   Provided the closure treats each unit independently (no cross-unit
+//!   state, no reductions — true of every FFT row/column loop in this
+//!   crate), the result is bit-for-bit identical to the serial path for any
+//!   thread count: chunking only decides *which thread* runs a unit, never
+//!   the arithmetic performed on it.
+//! - **Serial degradation**: one effective thread, a single unit, or a call
+//!   from inside an existing region all run `f(0, data)` directly on the
+//!   caller — no queue, no synchronization, no nested oversubscription.
+//! - **Panic-transparent**: a panicking chunk is caught on the worker,
+//!   carried back, and re-raised on the calling thread after the region
+//!   drains (workers survive to serve the next region).
+//!
+//! The effective thread count is resolved per call, most-specific first:
+//! [`with_threads`] (thread-local, used by tests/benches) →
+//! [`set_threads`] (global, the `threads` config knob) →
+//! `MEMFFT_THREADS` (environment, read once) →
+//! `std::thread::available_parallelism()`.
+
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+
+/// A lifetime-erased unit of region work (see safety notes in `run_tasks`).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct WorkerPool {
+    /// Injector: workers block on the shared receiver; `Mutex` keeps the
+    /// sender usable from any thread on toolchains where `mpsc::Sender` is
+    /// not yet `Sync`.
+    sender: Mutex<mpsc::Sender<Job>>,
+    workers: usize,
+}
+
+static POOL: OnceLock<WorkerPool> = OnceLock::new();
+/// `threads` config knob; 0 = unset (fall through to env / hardware).
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+/// `MEMFFT_THREADS`, parsed once.
+static ENV_THREADS: OnceLock<Option<usize>> = OnceLock::new();
+
+thread_local! {
+    /// Per-thread override installed by [`with_threads`]; 0 = unset.
+    static LOCAL_THREADS: Cell<usize> = const { Cell::new(0) };
+    /// True while this thread is executing a region task — nested
+    /// [`for_each_chunk`] calls then run serially instead of re-queueing.
+    static IN_REGION: Cell<bool> = const { Cell::new(false) };
+}
+
+fn hardware_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn env_threads() -> Option<usize> {
+    *ENV_THREADS.get_or_init(|| {
+        std::env::var("MEMFFT_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+    })
+}
+
+/// Effective thread budget for parallel regions opened by this thread.
+pub fn threads() -> usize {
+    let local = LOCAL_THREADS.with(|c| c.get());
+    if local != 0 {
+        return local;
+    }
+    let global = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if global != 0 {
+        return global;
+    }
+    env_threads().unwrap_or_else(hardware_threads)
+}
+
+/// Set the process-wide thread budget (the `threads` config knob).
+/// `n = 0` resets to automatic (env / hardware). The budget caps how many
+/// chunks a region splits into; it does not resize the pool.
+pub fn set_threads(n: usize) {
+    GLOBAL_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Run `f` with a thread-local thread budget of `n` (restored on exit,
+/// including on panic). This is how tests pin the serial (`n = 1`) and
+/// parallel paths without racing other threads' budgets.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_THREADS.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(LOCAL_THREADS.with(|c| c.replace(n)));
+    f()
+}
+
+/// How many chunks a region over `units` independent units would use right
+/// now (1 = the serial path). Lets callers with a serial fast path (e.g.
+/// `Transform::forward_batch_into` reusing caller scratch) skip closure
+/// setup when no parallelism is available.
+pub fn effective_chunks(units: usize) -> usize {
+    if units <= 1 || IN_REGION.with(|c| c.get()) {
+        1
+    } else {
+        threads().min(units)
+    }
+}
+
+fn pool() -> &'static WorkerPool {
+    POOL.get_or_init(|| {
+        let workers = hardware_threads().saturating_sub(1);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        for i in 0..workers {
+            let rx = Arc::clone(&receiver);
+            std::thread::Builder::new()
+                .name(format!("memfft-pool-{i}"))
+                .spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        // Task panics are caught per-task inside the region;
+                        // this outer catch only shields the worker from a
+                        // panicking region wrapper.
+                        Ok(job) => drop(catch_unwind(AssertUnwindSafe(job))),
+                        Err(_) => return,
+                    }
+                })
+                .expect("spawn memfft pool worker");
+        }
+        WorkerPool { sender: Mutex::new(sender), workers }
+    })
+}
+
+/// One in-flight parallel region: a task queue drained cooperatively by the
+/// caller plus up to `pool().workers` helpers.
+struct Region {
+    queue: Mutex<VecDeque<Job>>,
+    /// Tasks not yet finished (a task is finished once executed *and*
+    /// dropped — only then are its borrows dead).
+    pending: Mutex<usize>,
+    done: Condvar,
+    /// First panic payload observed in any task.
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+}
+
+impl Region {
+    fn drain(&self) {
+        loop {
+            let task = self.queue.lock().unwrap().pop_front();
+            let Some(task) = task else { return };
+            let entered = IN_REGION.with(|c| c.replace(true));
+            let result = catch_unwind(AssertUnwindSafe(task));
+            IN_REGION.with(|c| c.set(entered));
+            if let Err(payload) = result {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            let mut pending = self.pending.lock().unwrap();
+            *pending -= 1;
+            if *pending == 0 {
+                self.done.notify_all();
+            }
+        }
+    }
+}
+
+/// Execute `tasks` across the pool with the caller participating. Blocks
+/// until every task has run and been dropped; the first task panic is
+/// re-raised here.
+fn run_tasks<'a>(tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+    let count = tasks.len();
+    if count == 0 {
+        return;
+    }
+    // SAFETY: lifetime erasure. This function does not return until
+    // `pending == 0`, and `pending` is only decremented after a task has
+    // been executed and its closure dropped — so every borrow captured by a
+    // task is dead before the caller's frame (which owns the borrowed data)
+    // can unwind. Helpers may outlive the call holding `Arc<Region>`, but by
+    // then the queue is empty and the region owns no borrowed data.
+    let tasks: VecDeque<Job> = tasks
+        .into_iter()
+        .map(|t| unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(t) })
+        .collect();
+    let region = Arc::new(Region {
+        queue: Mutex::new(tasks),
+        pending: Mutex::new(count),
+        done: Condvar::new(),
+        panic: Mutex::new(None),
+    });
+    let pool = pool();
+    let helpers = pool.workers.min(count - 1);
+    if helpers > 0 {
+        let sender = pool.sender.lock().unwrap();
+        for _ in 0..helpers {
+            let r = Arc::clone(&region);
+            // A helper that arrives after the queue drains just returns.
+            let _ = sender.send(Box::new(move || r.drain()));
+        }
+    }
+    region.drain();
+    let mut pending = region.pending.lock().unwrap();
+    while *pending > 0 {
+        pending = region.done.wait(pending).unwrap();
+    }
+    drop(pending);
+    if let Some(payload) = region.panic.lock().unwrap().take() {
+        resume_unwind(payload);
+    }
+}
+
+/// Fixed chunk boundaries as (element offset, element count) pairs — whole
+/// `stride` units, unit counts differing by at most one across chunks.
+/// The single source of truth for both region primitives, so the one- and
+/// two-slice forms can never disagree on where chunks fall.
+fn chunk_spans(units: usize, chunks: usize, stride: usize) -> Vec<(usize, usize)> {
+    let per = units / chunks;
+    let extra = units % chunks;
+    let mut spans = Vec::with_capacity(chunks);
+    let mut offset = 0usize;
+    for i in 0..chunks {
+        let take = (per + usize::from(i < extra)) * stride;
+        spans.push((offset, take));
+        offset += take;
+    }
+    spans
+}
+
+fn chunk_tasks<'a, T, F>(data: &'a mut [T], stride: usize, chunks: usize, f: &'a F) -> Vec<Box<dyn FnOnce() + Send + 'a>>
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let spans = chunk_spans(data.len() / stride, chunks, stride);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + 'a>> = Vec::with_capacity(chunks);
+    let mut rest = data;
+    for (offset, take) in spans {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+        rest = tail;
+        tasks.push(Box::new(move || f(offset, head)));
+    }
+    tasks
+}
+
+/// Deterministic data-parallel iteration over disjoint contiguous chunks.
+///
+/// `data` is split at fixed boundaries into at most [`threads()`] chunks,
+/// each a whole number of `stride`-element units (`data.len()` must be a
+/// multiple of `stride`; unit counts differ by at most one across chunks).
+/// `f(offset, chunk)` receives the element offset of its chunk within
+/// `data`, so row indices recover as `offset / stride + i`.
+///
+/// With one effective thread, a single unit, or when called from inside an
+/// existing region, this is exactly `f(0, data)` on the caller. See the
+/// module docs for the determinism contract `f` must uphold.
+pub fn for_each_chunk<T, F>(data: &mut [T], stride: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(
+        stride > 0 && data.len() % stride == 0,
+        "for_each_chunk: len {} is not a multiple of stride {stride}",
+        data.len()
+    );
+    let chunks = effective_chunks(data.len() / stride);
+    if chunks <= 1 {
+        f(0, data);
+        return;
+    }
+    run_tasks(chunk_tasks(data, stride, chunks, &f));
+}
+
+/// [`for_each_chunk`] over two equal-length slices split at the same
+/// boundaries — the planar-plane primitive (`re`/`im` pairs in the
+/// coordinator backend).
+pub fn for_each_chunk2<A, B, F>(a: &mut [A], b: &mut [B], stride: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert_eq!(a.len(), b.len(), "for_each_chunk2: slice lengths differ");
+    assert!(
+        stride > 0 && a.len() % stride == 0,
+        "for_each_chunk2: len {} is not a multiple of stride {stride}",
+        a.len()
+    );
+    let units = a.len() / stride;
+    let chunks = effective_chunks(units);
+    if chunks <= 1 {
+        f(0, a, b);
+        return;
+    }
+    let spans = chunk_spans(units, chunks, stride);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(chunks);
+    let mut rest_a = a;
+    let mut rest_b = b;
+    let fref = &f;
+    for (offset, take) in spans {
+        let (head_a, tail_a) = std::mem::take(&mut rest_a).split_at_mut(take);
+        let (head_b, tail_b) = std::mem::take(&mut rest_b).split_at_mut(take);
+        rest_a = tail_a;
+        rest_b = tail_b;
+        tasks.push(Box::new(move || fref(offset, head_a, head_b)));
+    }
+    run_tasks(tasks);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn covers_every_unit_exactly_once_with_correct_offsets() {
+        for threads in [1usize, 2, 3, 7, 16] {
+            with_threads(threads, || {
+                let stride = 3;
+                let mut data = vec![0u64; 3 * 41];
+                for_each_chunk(&mut data, stride, |offset, chunk| {
+                    assert_eq!(offset % stride, 0);
+                    assert_eq!(chunk.len() % stride, 0);
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v += (offset + i) as u64 + 1;
+                    }
+                });
+                for (i, v) in data.iter().enumerate() {
+                    assert_eq!(*v, i as u64 + 1, "threads={threads} i={i}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn parallel_output_matches_serial_bitwise() {
+        let transform = |offset: usize, chunk: &mut [f32]| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                let x = (offset + i) as f32;
+                *v = (x * 0.7).sin() * 1e3 + x.sqrt();
+            }
+        };
+        let mut serial = vec![0f32; 4096];
+        with_threads(1, || for_each_chunk(&mut serial, 16, transform));
+        for t in [2usize, 5, 7] {
+            let mut par = vec![0f32; 4096];
+            with_threads(t, || for_each_chunk(&mut par, 16, transform));
+            assert_eq!(serial, par, "threads={t} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn one_thread_runs_single_call_on_caller() {
+        let calls = AtomicUsize::new(0);
+        let caller = std::thread::current().id();
+        let mut data = vec![0u8; 64];
+        with_threads(1, || {
+            for_each_chunk(&mut data, 1, |offset, chunk| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                assert_eq!(offset, 0);
+                assert_eq!(chunk.len(), 64);
+                assert_eq!(std::thread::current().id(), caller);
+            });
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn nested_regions_degrade_to_serial() {
+        let mut data = vec![0u32; 8 * 32];
+        with_threads(4, || {
+            for_each_chunk(&mut data, 32, |_, chunk| {
+                // Inside a region: the nested call must be ONE serial call
+                // over the whole chunk, on this same thread.
+                let chunk_len = chunk.len();
+                let worker = std::thread::current().id();
+                let inner_calls = AtomicUsize::new(0);
+                for_each_chunk(chunk, 1, |offset, inner| {
+                    inner_calls.fetch_add(1, Ordering::Relaxed);
+                    assert_eq!(offset, 0);
+                    assert_eq!(inner.len(), chunk_len);
+                    assert_eq!(std::thread::current().id(), worker);
+                });
+                assert_eq!(inner_calls.load(Ordering::Relaxed), 1);
+            });
+        });
+    }
+
+    #[test]
+    fn chunk2_splits_both_slices_identically() {
+        let mut a = vec![0usize; 100];
+        let mut b = vec![0usize; 100];
+        with_threads(8, || {
+            for_each_chunk2(&mut a, &mut b, 5, |offset, ca, cb| {
+                assert_eq!(ca.len(), cb.len());
+                for i in 0..ca.len() {
+                    ca[i] = offset + i;
+                    cb[i] = 2 * (offset + i);
+                }
+            });
+        });
+        for (i, (&va, &vb)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(va, i);
+            assert_eq!(vb, 2 * i);
+        }
+    }
+
+    #[test]
+    fn oversubscribed_budget_still_completes() {
+        // More chunks than hardware threads: helpers + caller drain them all.
+        let mut data = vec![0u8; 97];
+        with_threads(64, || {
+            for_each_chunk(&mut data, 1, |_, chunk| {
+                for v in chunk.iter_mut() {
+                    *v = 1;
+                }
+            });
+        });
+        assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn task_panic_propagates_to_caller_and_pool_survives() {
+        let result = std::panic::catch_unwind(|| {
+            let mut data = vec![0u8; 16];
+            with_threads(4, || {
+                for_each_chunk(&mut data, 1, |offset, _| {
+                    if offset == 0 {
+                        panic!("chunk zero exploded");
+                    }
+                });
+            });
+        });
+        assert!(result.is_err(), "panic must cross the region boundary");
+        // The pool must still serve regions after a panic.
+        let mut data = vec![0u8; 16];
+        with_threads(4, || {
+            for_each_chunk(&mut data, 1, |_, chunk| chunk[0] = 7);
+        });
+        assert!(data.iter().all(|&v| v == 7));
+    }
+
+    #[test]
+    fn with_threads_overrides_and_restores() {
+        let before = threads();
+        with_threads(3, || {
+            assert_eq!(threads(), 3);
+            with_threads(1, || assert_eq!(threads(), 1));
+            assert_eq!(threads(), 3);
+        });
+        assert_eq!(threads(), before);
+    }
+
+    #[test]
+    fn empty_and_single_unit_inputs() {
+        let mut empty: Vec<u8> = Vec::new();
+        for_each_chunk(&mut empty, 4, |_, chunk| assert!(chunk.is_empty()));
+        let mut one = vec![1u8; 8];
+        with_threads(8, || {
+            // One unit → serial, whole slice.
+            for_each_chunk(&mut one, 8, |offset, chunk| {
+                assert_eq!(offset, 0);
+                assert_eq!(chunk.len(), 8);
+            });
+        });
+        assert_eq!(effective_chunks(0), 1);
+        assert_eq!(effective_chunks(1), 1);
+    }
+}

@@ -1,10 +1,15 @@
 //! Service-level integration: workload-driven serving against real
-//! artifacts, backpressure, mixed directions, failure behaviour.
+//! artifacts, backpressure, mixed directions, failure behaviour, and the
+//! concurrency stress battery for the parallel execution layer.
 
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use memfft::config::ServiceConfig;
-use memfft::coordinator::{drive, Direction, FftService, ServiceError, SizeDist, Workload};
+use memfft::coordinator::{drive, Direction, FftResult, FftService, ServiceError, SizeDist, Workload};
+use memfft::fft::{Algorithm, FftPlan};
+use memfft::util::complex::C32;
 use memfft::util::Xoshiro256;
 
 fn have_artifacts() -> bool {
@@ -73,6 +78,122 @@ fn forward_inverse_roundtrip_through_service() {
         assert!((b.im[k] - im[k]).abs() < 1e-3, "im[{k}]");
     }
     svc.shutdown();
+}
+
+/// Submit, retrying through bounded-queue backpressure. A queue that never
+/// drains (worker deadlock) fails the test instead of hanging it.
+fn submit_with_retry(
+    svc: &FftService,
+    n: usize,
+    direction: Direction,
+    re: &[f32],
+    im: &[f32],
+) -> Receiver<FftResult> {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match svc.submit(n, direction, re.to_vec(), im.to_vec()) {
+            Ok(rx) => return rx,
+            Err(ServiceError::Rejected) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "backpressure never cleared within 30s — service deadlocked?"
+                );
+                std::thread::sleep(Duration::from_micros(100));
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+}
+
+#[test]
+fn stress_16_clients_mixed_sizes_and_directions() {
+    // 16 client threads hammer a 3-worker native service through a small
+    // bounded queue. Every client pipelines windows of forwards, receives
+    // them in submit order, and checks:
+    //   1. each forward response is bit-identical to the locally computed
+    //      serial FFT of ITS OWN input (in-order, un-swapped delivery and
+    //      the parallel-backend determinism contract, end to end);
+    //   2. inverse(forward(x)) ≈ x through the service;
+    //   3. everything completes under backpressure (recv_timeout turns a
+    //      deadlock into a failure, not a hang).
+    const CLIENTS: u64 = 16;
+    const ROUNDS: usize = 5;
+    const PIPELINE: usize = 4;
+    let sizes = vec![64usize, 256, 1024];
+    let svc = Arc::new(FftService::start(ServiceConfig {
+        method: "native".into(),
+        workers: 3,
+        max_batch: 8,
+        max_delay_us: 200,
+        queue_depth: 32,
+        sizes: sizes.clone(),
+        ..Default::default()
+    }));
+
+    let mut handles = Vec::new();
+    for client in 0..CLIENTS {
+        let svc = Arc::clone(&svc);
+        let sizes = sizes.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256::seeded(0xC11E47 + client);
+            for round in 0..ROUNDS {
+                let mut window = Vec::new();
+                for _ in 0..PIPELINE {
+                    let n = *rng.choose(&sizes);
+                    let re = rng.real_vec(n);
+                    let im = rng.real_vec(n);
+                    let rx = submit_with_retry(&svc, n, Direction::Forward, &re, &im);
+                    window.push((n, re, im, rx));
+                }
+                for (i, (n, re, im, rx)) in window.into_iter().enumerate() {
+                    let resp = rx
+                        .recv_timeout(Duration::from_secs(30))
+                        .unwrap_or_else(|_| {
+                            panic!("client {client} round {round} req {i}: no response in 30s")
+                        })
+                        .expect("forward failed");
+                    assert_eq!(resp.re.len(), n);
+                    // (1) bit-identical to the local serial reference.
+                    let plan = FftPlan::new(n, Algorithm::Auto);
+                    let input: Vec<C32> =
+                        re.iter().zip(&im).map(|(&a, &b)| C32::new(a, b)).collect();
+                    let mut expect = vec![C32::ZERO; n];
+                    let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+                    plan.forward_into(&input, &mut expect, &mut scratch).unwrap();
+                    for k in 0..n {
+                        assert!(
+                            resp.re[k] == expect[k].re && resp.im[k] == expect[k].im,
+                            "client {client} round {round} req {i}: bin {k} differs from \
+                             serial reference — out-of-order or nondeterministic delivery"
+                        );
+                    }
+                    // (2) service round-trip restores the signal.
+                    let rx = submit_with_retry(&svc, n, Direction::Inverse, &resp.re, &resp.im);
+                    let back = rx
+                        .recv_timeout(Duration::from_secs(30))
+                        .unwrap_or_else(|_| {
+                            panic!("client {client} round {round} req {i}: inverse timed out")
+                        })
+                        .expect("inverse failed");
+                    for k in 0..n {
+                        assert!(
+                            (back.re[k] - re[k]).abs() < 1e-3 && (back.im[k] - im[k]).abs() < 1e-3,
+                            "client {client} round {round} req {i}: round-trip diverged at {k}"
+                        );
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let expected = CLIENTS * (ROUNDS as u64) * (PIPELINE as u64) * 2;
+    assert_eq!(
+        svc.metrics().requests_done.get(),
+        expected,
+        "every accepted request must complete exactly once"
+    );
 }
 
 #[test]

@@ -3,14 +3,40 @@
 //! algorithm must satisfy on random inputs of random sizes, plus
 //! cross-algorithm agreement — the strongest correctness net we have.
 
-use memfft::fft::{self, Algorithm, FftPlan};
+use memfft::fft::{self, Algorithm, FftPlan, Transform};
 use memfft::testing::{assert_close, check, Gen};
 use memfft::util::complex::C32;
+use memfft::util::pool;
 use memfft::{prop_assert, util};
 
 fn random_plan(g: &mut Gen, n: usize) -> FftPlan {
     let algo = *g.pick(&Algorithm::candidates(n));
     FftPlan::new(n, algo)
+}
+
+/// Every `Transform` implementor at size `n` (n a power of two >= 2):
+/// the five 1-D pow2 kernels, Bluestein, the RFFT pair, the 2-D transform,
+/// and a deep multi-pass four-step — the full surface the parallel
+/// execution layer must keep bit-identical to serial.
+fn all_transforms(n: usize) -> Vec<Box<dyn Transform>> {
+    let lg = n.trailing_zeros();
+    let rows = 1usize << (lg / 2);
+    let mut v: Vec<Box<dyn Transform>> = vec![
+        Box::new(fft::Radix2::new(n)),
+        Box::new(fft::Radix4::new(n)),
+        Box::new(fft::SplitRadix::new(n)),
+        Box::new(fft::Stockham::new(n)),
+        Box::new(fft::FourStep::new(n)),
+        Box::new(fft::Bluestein::new(n)),
+        Box::new(fft::RealFft::new(n)),
+        Box::new(fft::Fft2d::new(rows, n / rows)),
+    ];
+    if n >= 8 {
+        // Tiny tile forces the recursive (3+ pass) four-step schedule, so
+        // the nested-region serialization path is exercised too.
+        v.push(Box::new(fft::FourStep::with_tile(n, 4)));
+    }
+    v
 }
 
 #[test]
@@ -166,6 +192,79 @@ fn prop_fourstep_pass_structure() {
         if passes > 1 {
             let fewer = (tile as u128).pow(passes as u32 - 1);
             prop_assert!(fewer < n as u128, "passes={passes} overshoots for n={n} tile={tile}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_forward_inverse_bitwise_equal_serial() {
+    // The parallel execution layer's determinism contract: for every
+    // Transform impl, running with any thread budget produces output
+    // bit-for-bit EQUAL (==, not approximately close) to the serial path.
+    check("parallel == serial, single transform", 12, |g| {
+        let n = g.pow2(1, 11);
+        let x = g.complex_vec(n);
+        for t in all_transforms(n) {
+            let mut scratch = vec![C32::ZERO; t.scratch_len()];
+            let mut fwd_serial = vec![C32::ZERO; n];
+            let mut inv_serial = vec![C32::ZERO; n];
+            pool::with_threads(1, || {
+                t.forward_into(&x, &mut fwd_serial, &mut scratch)?;
+                t.inverse_into(&x, &mut inv_serial, &mut scratch)
+            })
+            .map_err(|e| format!("{} n={n} serial: {e}", t.name()))?;
+            for threads in [2usize, 7] {
+                let mut fwd = vec![C32::ZERO; n];
+                let mut inv = vec![C32::ZERO; n];
+                pool::with_threads(threads, || {
+                    t.forward_into(&x, &mut fwd, &mut scratch)?;
+                    t.inverse_into(&x, &mut inv, &mut scratch)
+                })
+                .map_err(|e| format!("{} n={n} threads={threads}: {e}", t.name()))?;
+                prop_assert!(
+                    fwd == fwd_serial,
+                    "{} n={n} threads={threads}: parallel forward is not bit-identical",
+                    t.name()
+                );
+                prop_assert!(
+                    inv == inv_serial,
+                    "{} n={n} threads={threads}: parallel inverse is not bit-identical",
+                    t.name()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_batch_bitwise_equal_serial() {
+    // Same contract for the batched path — the row-parallel default every
+    // impl inherits, which is what the coordinator's NativeBackend feeds.
+    check("parallel == serial, batched", 10, |g| {
+        let n = g.pow2(1, 9);
+        let batch = g.usize(2, 12);
+        let input = g.complex_vec(n * batch);
+        for t in all_transforms(n) {
+            let mut scratch = vec![C32::ZERO; t.scratch_len()];
+            let mut serial = vec![C32::ZERO; n * batch];
+            pool::with_threads(1, || {
+                t.forward_batch_into(batch, &input, &mut serial, &mut scratch)
+            })
+            .map_err(|e| format!("{} n={n} serial batch: {e}", t.name()))?;
+            for threads in [2usize, 7] {
+                let mut par = vec![C32::ZERO; n * batch];
+                pool::with_threads(threads, || {
+                    t.forward_batch_into(batch, &input, &mut par, &mut scratch)
+                })
+                .map_err(|e| format!("{} n={n} threads={threads} batch: {e}", t.name()))?;
+                prop_assert!(
+                    par == serial,
+                    "{} n={n} batch={batch} threads={threads}: batched parallel differs",
+                    t.name()
+                );
+            }
         }
         Ok(())
     });
