@@ -54,11 +54,11 @@ fn main() {
         })
         .collect();
 
-    let mut os = OverlapSave::new(&taps, 1024);
+    let mut os = OverlapSave::try_new(&taps, 1024).expect("valid filter config");
     let t = Timer::start();
     let mut filtered = Vec::with_capacity(total);
     for frame in signal.chunks(480) {
-        filtered.extend(os.process(frame));
+        filtered.extend(os.process(frame).expect("sized blocks"));
     }
     let ms = t.elapsed_ms();
     println!(

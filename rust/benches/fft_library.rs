@@ -5,7 +5,7 @@
 
 use memfft::bench::Bench;
 use memfft::fft::{Algorithm, FftPlan};
-use memfft::util::Xoshiro256;
+use memfft::util::{pool, Timer, Xoshiro256};
 
 fn main() {
     let mut bench = Bench::from_env();
@@ -58,6 +58,68 @@ fn main() {
         }
     }
     println!("planner sanity passed");
+
+    // ---- Memory-tier gate (PR 3 acceptance) -----------------------------
+    // The blocked memtier path must beat the PR-2 direct path (the old
+    // heuristic's radix-4 pick) by ≥1.25x at n = 2^20, batch 1, ONE
+    // thread — single-thread isolates the memory win from the pool win.
+    {
+        let n = 1usize << 20;
+        let reps = if quick { 2 } else { 5 };
+        let input = rng.complex_vec(n);
+        let direct = FftPlan::new(n, Algorithm::Radix4);
+        // Pin the tile so the gate measures the BLOCKED path regardless of
+        // MEMFFT_TILE or the host cache model (a huge resolved tile would
+        // silently collapse memtier to the direct Stockham kernel and the
+        // gate would prove nothing): 2^15 elements → a 1024×1024 split.
+        let gate_tile = 1usize << 15;
+        let tiered =
+            memfft::config::cache::with_tile(gate_tile, || FftPlan::new(n, Algorithm::MemTier));
+        let mut buf = input.clone();
+        let mut time = |plan: &FftPlan| {
+            buf.copy_from_slice(&input);
+            plan.forward(&mut buf); // warm: tables + thread-local scratch
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                buf.copy_from_slice(&input);
+                let t = Timer::start();
+                plan.forward(&mut buf);
+                best = best.min(t.elapsed().as_nanos() as f64);
+                memfft::bench::bb(&buf);
+            }
+            best
+        };
+        let (t_direct, t_tiered) = pool::with_threads(1, || (time(&direct), time(&tiered)));
+        let speedup = t_direct / t_tiered;
+        println!(
+            "memtier gate @ 2^20, 1 thread: direct(radix4) {:.2} ms vs memtier {:.2} ms -> {speedup:.2}x",
+            t_direct / 1e6,
+            t_tiered / 1e6
+        );
+        assert!(
+            speedup >= 1.25,
+            "memtier must be >=1.25x over the direct path at n=2^20 single-thread, got {speedup:.2}x"
+        );
+
+        // TableCache proof: this process is single-threaded, so the global
+        // counters are exact — a second plan of an already-planned size
+        // (same pinned tile → same shape) must recompute ZERO tables.
+        let mid = memfft::fft::table_stats();
+        let again =
+            memfft::config::cache::with_tile(gate_tile, || FftPlan::new(n, Algorithm::MemTier));
+        let after = memfft::fft::table_stats();
+        assert_eq!(
+            after.misses, mid.misses,
+            "re-planning n=2^20 must not recompute any table"
+        );
+        assert!(after.hits > mid.hits, "re-planning must hit the shared tables");
+        memfft::bench::bb(&again.scratch_len());
+        println!(
+            "table cache: {} entries, {} hits / {} misses (zero recomputation on re-plan)",
+            after.entries, after.hits, after.misses
+        );
+    }
+
     bench.write_csv("fft_library.csv").ok();
     println!("wrote target/bench-results/fft_library.csv");
 }

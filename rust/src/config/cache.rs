@@ -1,0 +1,226 @@
+//! Host cache model + tile-size resolution for the memory-tiered FFT
+//! layer (`fft::memtier`) — the CPU analog of the paper's rule that data
+//! is "divided into parts reasonably according to the size of data"
+//! (§2.3.2), applied to the L1/L2 hierarchy instead of shared memory.
+//!
+//! The *tile* is the fast-memory capacity, in complex<f32> elements, that
+//! one blocked FFT pass may assume stays cache-resident (the
+//! shared-memory analog — see DESIGN.md §7). The effective tile is
+//! resolved per plan construction, most-specific first:
+//!
+//! 1. [`with_tile`] — thread-local override (how the `cache.tile` service
+//!    knob is scoped to each service worker thread);
+//! 2. [`set_tile`] — process-global knob for embedders;
+//! 3. `MEMFFT_TILE` — environment, read once (the CI matrix pins a tiny
+//!    and a huge tile so the blocked path is exercised on every host);
+//! 4. [`CacheModel::detect`] — sysfs-probed geometry with conservative
+//!    fallbacks.
+//!
+//! `fft::MemoryPlan::with_tile` bypasses resolution entirely (tests and
+//! benches pin exact shapes with it).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Bytes per complex<f32> element (the wire format everywhere).
+const ELEM_BYTES: usize = 8;
+
+/// Smallest accepted tile, in complex elements: below this a "tile"
+/// cannot hold even a handful of butterfly rows and blocking degenerates
+/// into per-element shuffling.
+pub const MIN_TILE: usize = 16;
+
+/// Largest accepted tile: beyond this every practical transform runs
+/// un-blocked anyway (32 MiB of complex<f32>).
+pub const MAX_TILE: usize = 1 << 22;
+
+/// Probed (or default) cache geometry of the host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheModel {
+    /// Per-core L1 data cache, bytes.
+    pub l1_bytes: usize,
+    /// Per-core (or per-complex) L2 cache, bytes.
+    pub l2_bytes: usize,
+}
+
+impl Default for CacheModel {
+    fn default() -> Self {
+        // Conservative x86-ish geometry for hosts without sysfs.
+        Self { l1_bytes: 32 * 1024, l2_bytes: 1024 * 1024 }
+    }
+}
+
+impl CacheModel {
+    /// Probe `/sys/devices/system/cpu/cpu0/cache` for the L1-data and L2
+    /// sizes; any field that cannot be read keeps its default. The probe
+    /// runs once per process (see [`model`]).
+    pub fn detect() -> Self {
+        let mut m = Self::default();
+        for idx in 0..8 {
+            let base = format!("/sys/devices/system/cpu/cpu0/cache/index{idx}");
+            let level = read_trimmed(&format!("{base}/level"));
+            let ctype = read_trimmed(&format!("{base}/type"));
+            let size = read_trimmed(&format!("{base}/size")).and_then(|s| parse_size(&s));
+            match (level.as_deref(), ctype.as_deref(), size) {
+                (Some("1"), Some(t), Some(b)) if t != "Instruction" => m.l1_bytes = b,
+                (Some("2"), _, Some(b)) => m.l2_bytes = b,
+                _ => {}
+            }
+        }
+        m
+    }
+
+    /// Tile capacity this geometry implies: half the L2 in complex
+    /// elements (the other half is left to the streamed source and
+    /// destination), floored to a power of two and clamped to
+    /// [[`MIN_TILE`], [`MAX_TILE`]].
+    pub fn tile_elems(&self) -> usize {
+        clamp_tile(self.l2_bytes / 2 / ELEM_BYTES)
+    }
+}
+
+fn read_trimmed(path: &str) -> Option<String> {
+    std::fs::read_to_string(path).ok().map(|s| s.trim().to_string())
+}
+
+/// Parse sysfs cache sizes: "32K", "1024K", "8M", plain bytes.
+fn parse_size(s: &str) -> Option<usize> {
+    let (digits, mult) = match *s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        _ => (s, 1),
+    };
+    digits.parse::<usize>().ok().map(|v| v * mult)
+}
+
+/// Largest power of two `<= x` (x >= 1).
+fn prev_pow2(x: usize) -> usize {
+    debug_assert!(x >= 1);
+    1usize << (usize::BITS - 1 - x.leading_zeros())
+}
+
+/// Floor to a power of two and clamp into the accepted tile range.
+fn clamp_tile(elems: usize) -> usize {
+    prev_pow2(elems.clamp(MIN_TILE, MAX_TILE))
+}
+
+/// Process-global tile knob; 0 = unset (fall through to env / probe).
+static GLOBAL_TILE: AtomicUsize = AtomicUsize::new(0);
+/// `MEMFFT_TILE` (complex elements), parsed once.
+static ENV_TILE: OnceLock<Option<usize>> = OnceLock::new();
+/// Probed cache geometry, detected once.
+static MODEL: OnceLock<CacheModel> = OnceLock::new();
+
+thread_local! {
+    /// Per-thread override installed by [`with_tile`]; 0 = unset.
+    static LOCAL_TILE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// The host's cache geometry (probed once, then cached).
+pub fn model() -> CacheModel {
+    *MODEL.get_or_init(CacheModel::detect)
+}
+
+fn env_tile() -> Option<usize> {
+    *ENV_TILE.get_or_init(|| {
+        std::env::var("MEMFFT_TILE")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .map(clamp_tile)
+    })
+}
+
+/// Set the process-wide tile (complex elements; floored to a power of
+/// two, clamped). `n = 0` resets to automatic (env / probed model).
+pub fn set_tile(n: usize) {
+    let v = if n == 0 { 0 } else { clamp_tile(n) };
+    GLOBAL_TILE.store(v, Ordering::Relaxed);
+}
+
+/// Run `f` with a thread-local tile override (restored on exit, including
+/// on panic). `n = 0` installs no override — the signature service
+/// workers use so an unset `cache.tile` knob falls through cleanly.
+pub fn with_tile<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_TILE.with(|c| c.set(self.0));
+        }
+    }
+    let v = if n == 0 { 0 } else { clamp_tile(n) };
+    let _restore = Restore(LOCAL_TILE.with(|c| c.replace(v)));
+    f()
+}
+
+/// Effective tile, in complex elements, for plans built on this thread.
+pub fn tile_elems() -> usize {
+    let local = LOCAL_TILE.with(|c| c.get());
+    if local != 0 {
+        return local;
+    }
+    let global = GLOBAL_TILE.load(Ordering::Relaxed);
+    if global != 0 {
+        return global;
+    }
+    env_tile().unwrap_or_else(|| model().tile_elems())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sysfs_sizes() {
+        assert_eq!(parse_size("32K"), Some(32 * 1024));
+        assert_eq!(parse_size("1024K"), Some(1024 * 1024));
+        assert_eq!(parse_size("8M"), Some(8 * 1024 * 1024));
+        assert_eq!(parse_size("4096"), Some(4096));
+        assert_eq!(parse_size("junk"), None);
+    }
+
+    #[test]
+    fn tile_is_pow2_and_clamped() {
+        assert_eq!(clamp_tile(1), MIN_TILE);
+        assert_eq!(clamp_tile(usize::MAX / 2), MAX_TILE);
+        assert_eq!(clamp_tile(3000), 2048);
+        let t = CacheModel::default().tile_elems();
+        assert!(crate::util::is_pow2(t));
+        assert!((MIN_TILE..=MAX_TILE).contains(&t));
+        // Default 1 MiB L2 → 64 Ki elements × 8 B = 512 KiB tile.
+        assert_eq!(t, 65536);
+    }
+
+    #[test]
+    fn detect_never_panics_and_yields_sane_geometry() {
+        let m = CacheModel::detect();
+        assert!(m.l1_bytes >= 4 * 1024);
+        assert!(m.l2_bytes >= m.l1_bytes);
+    }
+
+    #[test]
+    fn with_tile_overrides_and_restores() {
+        let before = tile_elems();
+        with_tile(1 << 10, || {
+            assert_eq!(tile_elems(), 1 << 10);
+            // Nested override wins, then restores.
+            with_tile(1 << 5, || assert_eq!(tile_elems(), 1 << 5));
+            assert_eq!(tile_elems(), 1 << 10);
+            // Non-pow2 requests floor to a power of two.
+            with_tile(3000, || assert_eq!(tile_elems(), 2048));
+            // 0 = no override: falls through to the outer scope? No — a
+            // thread-local 0 *unsets* the local level, exposing the
+            // global/env/probed resolution, exactly like `threads = 0`.
+            with_tile(0, || assert!(crate::util::is_pow2(tile_elems())));
+        });
+        assert_eq!(tile_elems(), before);
+    }
+
+    #[test]
+    fn resolution_is_pow2_in_range() {
+        let t = tile_elems();
+        assert!(crate::util::is_pow2(t), "tile {t} must be a power of two");
+        assert!((MIN_TILE..=MAX_TILE).contains(&t));
+    }
+}

@@ -5,6 +5,8 @@
 //! `[section]` and `[section.sub]` headers, `key = value` with string,
 //! integer, float, boolean and flat-array values, `#` comments.
 
+pub mod cache;
+
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -258,8 +260,15 @@ pub struct ServiceConfig {
     ///   artifact family on the PJRT backend (degrades to native when the
     ///   engine cannot start);
     /// - "native" — the in-process CPU FFT library;
+    /// - "memtier" — the CPU library pinned to the memory-tiered
+    ///   cache-blocked plans (`fft::memtier`);
     /// - "modeled" — native numerics with gpusim C2070 cost-model timing.
     pub method: String,
+    /// Fast-memory tile for the memory-tiered FFT layer, in complex
+    /// elements (`cache.tile`). Scoped thread-locally to this service's
+    /// workers (`config::cache::with_tile`), like `threads`. 0 = automatic
+    /// (`config::cache::set_tile` / `MEMFFT_TILE` env / probed model).
+    pub cache_tile: usize,
     /// Sizes the service accepts (must have artifacts).
     pub sizes: Vec<usize>,
     /// Seed for any synthetic workload generation.
@@ -279,6 +288,7 @@ impl Default for ServiceConfig {
             max_delay_us: 200,
             queue_depth: 1024,
             method: "fourstep".into(),
+            cache_tile: 0,
             sizes: vec![16, 64, 256, 1024, 4096, 16384, 65536],
             seed: 42,
             warmup: true,
@@ -297,6 +307,7 @@ impl ServiceConfig {
             max_delay_us: doc.usize_or("service.max_delay_us", d.max_delay_us as usize)? as u64,
             queue_depth: doc.usize_or("service.queue_depth", d.queue_depth)?,
             method: doc.str_or("service.method", &d.method)?,
+            cache_tile: doc.usize_or("cache.tile", d.cache_tile)?,
             sizes: doc.usize_list_or("service.sizes", &d.sizes)?,
             seed: doc.usize_or("service.seed", d.seed as usize)? as u64,
             warmup: doc.bool_or("service.warmup", d.warmup)?,
@@ -313,6 +324,17 @@ impl ServiceConfig {
         }
         if self.max_batch == 0 {
             return Err(ConfigError::Type("service.max_batch".into(), "nonzero integer"));
+        }
+        if self.cache_tile != 0
+            && (!crate::util::is_pow2(self.cache_tile)
+                || !(cache::MIN_TILE..=cache::MAX_TILE).contains(&self.cache_tile))
+        {
+            // Reject rather than silently clamp at use time: the operator
+            // should see the value the workers will actually run with.
+            return Err(ConfigError::Type(
+                "cache.tile".into(),
+                "power of two in [16, 4194304] (or 0 = auto)",
+            ));
         }
         if self.sizes.is_empty() {
             return Err(ConfigError::Missing("service.sizes".into()));
@@ -404,6 +426,28 @@ bandwidth_gbps = 144.0
                 .validate()
                 .unwrap();
         }
+    }
+
+    #[test]
+    fn cache_tile_knob_parses_and_validates() {
+        let doc = Document::parse("[cache]\ntile = 4096\n").unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.cache_tile, 4096);
+        cfg.validate().unwrap();
+        // 0 = automatic is valid; non-power-of-two is not.
+        let cfg = ServiceConfig::from_document(&Document::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.cache_tile, 0);
+        cfg.validate().unwrap();
+        let doc = Document::parse("[cache]\ntile = 3000\n").unwrap();
+        assert!(ServiceConfig::from_document(&doc).unwrap().validate().is_err());
+        // Out-of-range powers of two are rejected too, not silently
+        // clamped at use time.
+        for bad in ["[cache]\ntile = 8\n", "[cache]\ntile = 8388608\n"] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(ServiceConfig::from_document(&doc).unwrap().validate().is_err(), "{bad}");
+        }
+        let doc = Document::parse("[cache]\ntile = 16\n").unwrap();
+        ServiceConfig::from_document(&doc).unwrap().validate().unwrap();
     }
 
     #[test]

@@ -160,7 +160,11 @@ impl Default for NativeBackend {
 
 impl Backend for NativeBackend {
     fn name(&self) -> &'static str {
-        "native"
+        if self.algo == Algorithm::MemTier {
+            "native-memtier"
+        } else {
+            "native"
+        }
     }
 
     fn warmup(&mut self, sizes: &[usize]) -> Result<(), BackendError> {
@@ -398,6 +402,9 @@ impl Backend for ModeledBackend {
 pub fn for_config(cfg: &ServiceConfig) -> Box<dyn Backend> {
     match cfg.method.as_str() {
         "native" => Box::new(NativeBackend::default()),
+        // The memory-tiered CPU library: cache-blocked plans + shared
+        // tables, pinned explicitly (Auto already picks it at large n).
+        "memtier" => Box::new(NativeBackend::new(Algorithm::MemTier)),
         "modeled" => Box::new(ModeledBackend::new()),
         method => match PjrtBackend::new(&cfg.artifacts_dir, method) {
             Ok(b) => Box::new(b),
@@ -484,6 +491,21 @@ mod tests {
     }
 
     #[test]
+    fn memtier_backend_serves_impulse_batches() {
+        let mut b = NativeBackend::new(Algorithm::MemTier);
+        b.warmup(&[512]).unwrap();
+        let n = 512;
+        let (re, im) = impulse(n);
+        let spec = BatchSpec { n, batch: 1, direction: Direction::Forward };
+        let out = b.execute_batch(&spec, &re, &im).unwrap();
+        assert_eq!(out.plan_cache_hits, 1, "warmup must pre-plan memtier sizes");
+        for k in 0..n {
+            assert!((out.re[k] - 1.0).abs() < 1e-5, "re[{k}]={}", out.re[k]);
+            assert!(out.im[k].abs() < 1e-5);
+        }
+    }
+
+    #[test]
     fn modeled_backend_uses_cost_model_time() {
         let mut b = ModeledBackend::new();
         let n = 1024;
@@ -507,6 +529,9 @@ mod tests {
         let modeled =
             for_config(&ServiceConfig { method: "modeled".into(), ..Default::default() });
         assert_eq!(modeled.name(), "modeled");
+        let memtier =
+            for_config(&ServiceConfig { method: "memtier".into(), ..Default::default() });
+        assert_eq!(memtier.name(), "native-memtier");
         // PJRT methods degrade to native when no artifacts exist.
         let fallback = for_config(&ServiceConfig {
             method: "fourstep".into(),

@@ -207,12 +207,17 @@ fn worker_loop(
     cfg: ServiceConfig,
     ready: mpsc::Sender<()>,
 ) {
-    // The `threads` config knob scopes the FFT library's data-parallel
-    // budget to THIS worker thread (regions are budgeted by their opening
+    // The `threads` and `cache.tile` config knobs scope the FFT library's
+    // data-parallel budget and memory-tier tile to THIS worker thread
+    // (regions are budgeted — and plans are tiled — by their opening
     // thread), so concurrent services with different knobs never clobber
     // each other and shutdown leaves no process-global residue. 0 = unset
-    // (fall through to pool::set_threads / MEMFFT_THREADS / cores).
-    crate::util::pool::with_threads(cfg.threads, || worker_body(rx, metrics, cfg, ready));
+    // (fall through to the global knob / env / hardware resolution).
+    let threads = cfg.threads;
+    let tile = cfg.cache_tile;
+    crate::util::pool::with_threads(threads, || {
+        crate::config::cache::with_tile(tile, || worker_body(rx, metrics, cfg, ready))
+    });
 }
 
 fn worker_body(

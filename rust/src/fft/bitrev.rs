@@ -1,4 +1,8 @@
 //! Bit-reversal permutation for decimation-in-time FFTs.
+//!
+//! Like the twiddle tables, `BitRev` tables are read-only after
+//! construction and shared across plans through
+//! [`super::memtier::TableCache`] — consumers hold `Arc<BitRev>`.
 
 use crate::util::{is_pow2, log2_exact};
 

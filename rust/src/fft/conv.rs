@@ -1,26 +1,40 @@
 //! FFT-based convolution and correlation: circular, linear (zero-padded),
 //! and streaming overlap-save — the classic FFT application layer that SAR
 //! pulse compression and matched filtering sit on.
+//!
+//! Execution-API port (PR 3): everything here runs on the fallible
+//! [`Transform`] face — `forward_into` / `*_inplace` with caller-owned
+//! scratch — instead of the legacy panicking `FftPlan::new` + `forward`
+//! path. The batch helpers keep their infallible `Vec` signatures (their
+//! only failure mode, a zero-length transform, is handled by returning an
+//! empty output); the *streaming* entry point, [`OverlapSave`], is fully
+//! fallible: `try_new` and `process` return `Result` so a serving stack
+//! can reject a bad filter configuration without dying.
 
 use super::plan::{Algorithm, FftPlan};
+use super::transform::{FftError, Transform};
 use crate::util::complex::C32;
-use crate::util::next_pow2;
+use crate::util::{is_pow2, next_pow2};
 
 /// Circular convolution of equal-length signals via the convolution
 /// theorem: IFFT(FFT(a) · FFT(b)). Lengths need not be powers of two
-/// (Bluestein handles the rest).
+/// (Bluestein handles the rest); empty inputs convolve to empty.
 pub fn circular_convolve(a: &[C32], b: &[C32]) -> Vec<C32> {
     assert_eq!(a.len(), b.len());
     let n = a.len();
-    let plan = FftPlan::new(n, Algorithm::Auto);
-    let mut fa = a.to_vec();
-    let mut fb = b.to_vec();
-    plan.forward(&mut fa);
-    plan.forward(&mut fb);
+    if n == 0 {
+        return Vec::new();
+    }
+    let plan = FftPlan::try_new(n, Algorithm::Auto).expect("nonzero length");
+    let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+    let mut fa = vec![C32::ZERO; n];
+    let mut fb = vec![C32::ZERO; n];
+    plan.forward_into(a, &mut fa, &mut scratch).expect("sized buffers");
+    plan.forward_into(b, &mut fb, &mut scratch).expect("sized buffers");
     for (x, y) in fa.iter_mut().zip(&fb) {
         *x *= *y;
     }
-    plan.inverse(&mut fa);
+    plan.inverse_inplace(&mut fa, &mut scratch).expect("sized buffers");
     fa
 }
 
@@ -32,17 +46,18 @@ pub fn linear_convolve(a: &[C32], b: &[C32]) -> Vec<C32> {
     }
     let out_len = a.len() + b.len() - 1;
     let m = next_pow2(out_len);
-    let plan = FftPlan::new(m, Algorithm::Auto);
+    let plan = FftPlan::try_new(m, Algorithm::Auto).expect("nonzero length");
+    let mut scratch = vec![C32::ZERO; plan.scratch_len()];
     let mut fa = vec![C32::ZERO; m];
     let mut fb = vec![C32::ZERO; m];
     fa[..a.len()].copy_from_slice(a);
     fb[..b.len()].copy_from_slice(b);
-    plan.forward(&mut fa);
-    plan.forward(&mut fb);
+    plan.forward_inplace(&mut fa, &mut scratch).expect("sized buffers");
+    plan.forward_inplace(&mut fb, &mut scratch).expect("sized buffers");
     for (x, y) in fa.iter_mut().zip(&fb) {
         *x *= *y;
     }
-    plan.inverse(&mut fa);
+    plan.inverse_inplace(&mut fa, &mut scratch).expect("sized buffers");
     fa.truncate(out_len);
     fa
 }
@@ -57,6 +72,10 @@ pub fn cross_correlate(a: &[C32], b: &[C32]) -> Vec<C32> {
 /// Streaming FIR filtering via overlap-save: convolve an arbitrarily long
 /// signal with a fixed kernel using fixed-size FFT blocks. This is the
 /// "streaming FFT" pattern the paper's reference [14] targets.
+///
+/// All transforms run through `forward_into` / `inverse_inplace` with the
+/// filter's own reused scratch and frequency block, so steady-state
+/// streaming performs no per-block transform allocations.
 pub struct OverlapSave {
     plan: FftPlan,
     kernel_freq: Vec<C32>,
@@ -66,19 +85,49 @@ pub struct OverlapSave {
     k: usize,
     /// Carry-over: last k−1 input samples from the previous block.
     tail: Vec<C32>,
+    /// Reused frequency-domain block (the `forward_into` destination).
+    block: Vec<C32>,
+    /// Caller-owned transform scratch, reused across blocks.
+    scratch: Vec<C32>,
 }
 
 impl OverlapSave {
-    /// `block` must be a power of two at least 2× the kernel length.
-    pub fn new(kernel: &[C32], block: usize) -> Self {
+    /// Fallible construction — the streaming entry point for request
+    /// paths. `block` must be a power of two at least 2× the kernel
+    /// length; violations come back as [`FftError`] values.
+    pub fn try_new(kernel: &[C32], block: usize) -> Result<Self, FftError> {
         let k = kernel.len();
-        assert!(k >= 1);
-        assert!(crate::util::is_pow2(block) && block >= 2 * k.max(1), "block {block} too small for kernel {k}");
-        let plan = FftPlan::new(block, Algorithm::Auto);
+        if k == 0 {
+            return Err(FftError::ZeroSize);
+        }
+        if !is_pow2(block) {
+            return Err(FftError::NonPowerOfTwo { algo: "overlap-save", n: block });
+        }
+        if block < 2 * k {
+            return Err(FftError::SizeMismatch { expected: 2 * k, got: block });
+        }
+        let plan = FftPlan::try_new(block, Algorithm::Auto)?;
+        let mut scratch = vec![C32::ZERO; plan.scratch_len()];
         let mut kernel_freq = vec![C32::ZERO; block];
         kernel_freq[..k].copy_from_slice(kernel);
-        plan.forward(&mut kernel_freq);
-        Self { plan, kernel_freq, m: block, k, tail: vec![C32::ZERO; k - 1] }
+        plan.forward_inplace(&mut kernel_freq, &mut scratch)?;
+        Ok(Self {
+            plan,
+            kernel_freq,
+            m: block,
+            k,
+            tail: vec![C32::ZERO; k - 1],
+            block: vec![C32::ZERO; block],
+            scratch,
+        })
+    }
+
+    /// Panicking sugar over [`OverlapSave::try_new`] (library convenience;
+    /// serving paths should use `try_new`).
+    pub fn new(kernel: &[C32], block: usize) -> Self {
+        Self::try_new(kernel, block).unwrap_or_else(|e| {
+            panic!("OverlapSave::new: block {block} too small or invalid for kernel {}: {e}", kernel.len())
+        })
     }
 
     /// Samples produced per processed block.
@@ -87,8 +136,11 @@ impl OverlapSave {
     }
 
     /// Feed input; returns filtered output aligned with the input (the
-    /// convolution's steady-state samples). Call with any chunk sizes.
-    pub fn process(&mut self, input: &[C32]) -> Vec<C32> {
+    /// convolution's steady-state samples). Call with any chunk sizes —
+    /// unconsumed samples carry over in the tail. Errors (which the sized
+    /// internal buffers cannot produce in normal operation) leave the
+    /// filter's tail untouched, so a retry sees consistent state.
+    pub fn process(&mut self, input: &[C32]) -> Result<Vec<C32>, FftError> {
         let step = self.step();
         let mut buffered: Vec<C32> = Vec::with_capacity(self.tail.len() + input.len());
         buffered.extend_from_slice(&self.tail);
@@ -97,19 +149,20 @@ impl OverlapSave {
         let mut out = Vec::new();
         let mut pos = 0;
         while buffered.len() - pos >= self.m {
-            let mut block = buffered[pos..pos + self.m].to_vec();
-            self.plan.forward(&mut block);
-            for (x, h) in block.iter_mut().zip(&self.kernel_freq) {
+            self.plan
+                .forward_into(&buffered[pos..pos + self.m], &mut self.block, &mut self.scratch)?;
+            for (x, h) in self.block.iter_mut().zip(&self.kernel_freq) {
                 *x *= *h;
             }
-            self.plan.inverse(&mut block);
+            self.plan.inverse_inplace(&mut self.block, &mut self.scratch)?;
             // First k−1 samples are circularly corrupted — discard.
-            out.extend_from_slice(&block[self.k - 1..]);
+            out.extend_from_slice(&self.block[self.k - 1..]);
             pos += step;
         }
         // Keep the unconsumed suffix as the next tail.
-        self.tail = buffered[pos..].to_vec();
-        out
+        self.tail.clear();
+        self.tail.extend_from_slice(&buffered[pos..]);
+        Ok(out)
     }
 }
 
@@ -121,6 +174,9 @@ mod tests {
 
     /// O(n·k) direct linear convolution oracle.
     fn direct_conv(a: &[C32], b: &[C32]) -> Vec<C32> {
+        if a.is_empty() || b.is_empty() {
+            return Vec::new();
+        }
         let mut out = vec![C32::ZERO; a.len() + b.len() - 1];
         for (i, &x) in a.iter().enumerate() {
             for (j, &y) in b.iter().enumerate() {
@@ -130,14 +186,26 @@ mod tests {
         out
     }
 
+    /// Direct circular convolution oracle: fold the linear result mod n.
+    fn direct_circular(a: &[C32], b: &[C32]) -> Vec<C32> {
+        let n = a.len();
+        let mut out = vec![C32::ZERO; n];
+        for (i, &v) in direct_conv(a, b).iter().enumerate() {
+            out[i % n] += v;
+        }
+        out
+    }
+
     #[test]
     fn linear_matches_direct() {
         let mut rng = Xoshiro256::seeded(201);
-        for (na, nb) in [(8usize, 8usize), (100, 13), (57, 57), (1, 5)] {
+        // Deliberately includes non-pow2 and length-1 shapes.
+        for (na, nb) in [(8usize, 8usize), (100, 13), (57, 57), (1, 5), (1, 1), (3, 200)] {
             let a = rng.complex_vec(na);
             let b = rng.complex_vec(nb);
             let got = linear_convolve(&a, &b);
             let expect = direct_conv(&a, &b);
+            assert_eq!(got.len(), na + nb - 1);
             assert!(max_abs_diff(&got, &expect) < 1e-3, "{na}x{nb}");
         }
     }
@@ -145,16 +213,22 @@ mod tests {
     #[test]
     fn circular_matches_direct_mod_n() {
         let mut rng = Xoshiro256::seeded(202);
-        let n = 16;
-        let a = rng.complex_vec(n);
-        let b = rng.complex_vec(n);
-        let lin = direct_conv(&a, &b);
-        let mut expect = vec![C32::ZERO; n];
-        for (i, &v) in lin.iter().enumerate() {
-            expect[i % n] += v;
+        // Pow2, non-pow2 and length-1 all agree with the fold-mod-n oracle.
+        for n in [16usize, 12, 1, 100] {
+            let a = rng.complex_vec(n);
+            let b = rng.complex_vec(n);
+            let got = circular_convolve(&a, &b);
+            let expect = direct_circular(&a, &b);
+            assert!(max_abs_diff(&got, &expect) < 2e-3, "n={n}");
         }
-        let got = circular_convolve(&a, &b);
-        assert!(max_abs_diff(&got, &expect) < 1e-3);
+    }
+
+    #[test]
+    fn empty_inputs_convolve_to_empty() {
+        assert!(linear_convolve(&[], &[C32::ONE]).is_empty());
+        assert!(linear_convolve(&[C32::ONE], &[]).is_empty());
+        assert!(circular_convolve(&[], &[]).is_empty());
+        assert!(cross_correlate(&[], &[]).is_empty());
     }
 
     #[test]
@@ -184,11 +258,11 @@ mod tests {
         let signal = rng.complex_vec(300);
         let expect = direct_conv(&signal, &kernel);
 
-        let mut os = OverlapSave::new(&kernel, 64);
+        let mut os = OverlapSave::try_new(&kernel, 64).unwrap();
         let mut got = Vec::new();
         // Feed in ragged chunks to exercise the tail buffering.
         for chunk in signal.chunks(37) {
-            got.extend(os.process(chunk));
+            got.extend(os.process(chunk).unwrap());
         }
         // Steady-state samples: got[i] == full_conv[i] for the samples the
         // streaming filter has fully seen.
@@ -203,10 +277,10 @@ mod tests {
         let kernel = rng.complex_vec(5);
         let signal = rng.complex_vec(200);
         let run = |chunk_size: usize| {
-            let mut os = OverlapSave::new(&kernel, 32);
+            let mut os = OverlapSave::try_new(&kernel, 32).unwrap();
             let mut out = Vec::new();
             for c in signal.chunks(chunk_size) {
-                out.extend(os.process(c));
+                out.extend(os.process(c).unwrap());
             }
             out
         };
@@ -215,6 +289,49 @@ mod tests {
         let n = a.len().min(b.len());
         assert!(n > 150);
         assert!(max_abs_diff(&a[..n], &b[..n]) < 1e-4);
+    }
+
+    #[test]
+    fn overlap_save_chunk_boundary_regression() {
+        // Feed EXACTLY one block, then exactly one step, then off-by-one
+        // around the step size — the boundary cases where a tail-handling
+        // bug would double-count or drop the k−1 carry-over samples.
+        let mut rng = Xoshiro256::seeded(206);
+        let kernel = rng.complex_vec(7);
+        let signal = rng.complex_vec(4 * 32 + 3);
+        let expect = direct_conv(&signal, &kernel);
+
+        let mut os = OverlapSave::try_new(&kernel, 32).unwrap();
+        let step = os.step();
+        assert_eq!(step, 32 - 7 + 1);
+        let mut got = Vec::new();
+        let sizes = [32usize, step, step - 1, step + 1, 1];
+        let mut pos = 0;
+        for &sz in &sizes {
+            let end = (pos + sz).min(signal.len());
+            got.extend(os.process(&signal[pos..end]).unwrap());
+            pos = end;
+        }
+        got.extend(os.process(&signal[pos..]).unwrap());
+        // Empty feed is a no-op that must not disturb the tail.
+        got.extend(os.process(&[]).unwrap());
+        assert!(got.len() >= 3 * step, "got {}", got.len());
+        assert!(max_abs_diff(&got, &expect[..got.len()]) < 1e-3);
+    }
+
+    #[test]
+    fn overlap_save_try_new_rejects_bad_configs() {
+        let kernel = vec![C32::ONE; 20];
+        assert_eq!(
+            OverlapSave::try_new(&kernel, 32).unwrap_err(),
+            FftError::SizeMismatch { expected: 40, got: 32 }
+        );
+        assert!(matches!(
+            OverlapSave::try_new(&kernel, 48).unwrap_err(),
+            FftError::NonPowerOfTwo { n: 48, .. }
+        ));
+        assert_eq!(OverlapSave::try_new(&[], 32).unwrap_err(), FftError::ZeroSize);
+        assert!(OverlapSave::try_new(&kernel, 64).is_ok());
     }
 
     #[test]

@@ -238,8 +238,9 @@ pub fn transpose(src: &[C32], dst: &mut [C32], rows: usize, cols: usize) {
 }
 
 /// Transpose the source-column strip `[c0, c0 + dst.len()/rows)` of the
-/// rows × cols matrix `src` into `dst` (whole destination rows).
-fn transpose_tile(src: &[C32], dst: &mut [C32], rows: usize, cols: usize, c0: usize) {
+/// rows × cols matrix `src` into `dst` (whole destination rows). Also the
+/// strip-gather primitive of the memtier blocked passes.
+pub(crate) fn transpose_tile(src: &[C32], dst: &mut [C32], rows: usize, cols: usize, c0: usize) {
     const B: usize = 32;
     let ncols = dst.len() / rows;
     let mut cb = 0;

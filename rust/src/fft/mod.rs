@@ -17,6 +17,17 @@
 //! scratch-sensitive — should use `forward_into` / `forward_batch_into`
 //! from the [`Transform`] trait. See DESIGN.md §Execution-API.
 //!
+//! **Memory-tiered by default at large n**: the [`memtier`] layer is the
+//! CPU realization of the paper's *memory* optimizations — a size-adaptive
+//! [`MemoryPlan`] (cache-resident direct kernel for small n; a blocked
+//! six-step with transpose/FFT/twiddle fused per tile for DRAM-resident n,
+//! so each element crosses slow memory once per pass) and a process-wide
+//! [`TableCache`] playing the texture-memory role (every kernel's twiddle
+//! and bit-reverse tables are `Arc`-shared across plans). The planner's
+//! `Auto` routes n > 2^18 through it; tile capacity resolves via
+//! `config::cache` (`MEMFFT_TILE`, knobs, probed cache model). See
+//! DESIGN.md §7.
+//!
 //! **Batch-parallel by default**: `forward_batch_into` /
 //! `inverse_batch_into` fan the batch out over the std-only worker pool
 //! (`util::pool`), one chunk of signals per thread with per-thread
@@ -35,6 +46,7 @@ pub mod conv;
 pub mod dft;
 pub mod fft2d;
 pub mod fourstep;
+pub mod memtier;
 pub mod plan;
 pub mod radix2;
 pub mod radix4;
@@ -51,6 +63,7 @@ pub use bluestein::Bluestein;
 pub use conv::{circular_convolve, cross_correlate, linear_convolve, OverlapSave};
 pub use fft2d::Fft2d;
 pub use fourstep::FourStep;
+pub use memtier::{table_stats, tables, MemoryPlan, TableCache, TableStats};
 pub use plan::{fft, ifft, Algorithm, FftPlan, PlanCache, Planner};
 pub use radix2::Radix2;
 pub use radix4::Radix4;

@@ -13,6 +13,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use super::bluestein::Bluestein;
 use super::fourstep::FourStep;
+use super::memtier::MemoryPlan;
 use super::radix2::Radix2;
 use super::radix4::Radix4;
 use super::splitradix::SplitRadix;
@@ -33,6 +34,11 @@ pub enum Algorithm {
     /// The paper's hierarchical method (CPU realization).
     FourStep,
     Bluestein,
+    /// Memory-tiered execution (`fft::memtier`): size-adaptive cache
+    /// blocking with fused passes and shared tables — the paper's memory
+    /// optimizations on the host hierarchy. Handles any length
+    /// (non-powers-of-two route through Bluestein internally).
+    MemTier,
 }
 
 impl Algorithm {
@@ -45,6 +51,7 @@ impl Algorithm {
             Algorithm::Stockham => "stockham",
             Algorithm::FourStep => "fourstep",
             Algorithm::Bluestein => "bluestein",
+            Algorithm::MemTier => "memtier",
         }
     }
 
@@ -57,21 +64,32 @@ impl Algorithm {
             "stockham" => Algorithm::Stockham,
             "fourstep" => Algorithm::FourStep,
             "bluestein" => Algorithm::Bluestein,
+            "memtier" => Algorithm::MemTier,
             _ => return None,
         })
     }
 
-    /// All concrete (non-Auto) algorithms applicable to size `n`.
+    /// All concrete (non-Auto) algorithms applicable to size `n` — the
+    /// set the measured planner times against each other, so degenerate
+    /// duplicates are excluded: MemTier at non-powers-of-two IS the
+    /// Bluestein path, and at tile-resident sizes (n ≤ the effective
+    /// `config::cache` tile) it IS the Stockham candidate; it joins the
+    /// list only where its blocked path actually differs. It stays
+    /// constructible explicitly at any length.
     pub fn candidates(n: usize) -> Vec<Algorithm> {
         if is_pow2(n) {
-            vec![
+            let mut v = vec![
                 Algorithm::Radix2,
                 Algorithm::Radix4,
                 Algorithm::SplitRadix,
                 Algorithm::Stockham,
                 Algorithm::FourStep,
                 Algorithm::Bluestein,
-            ]
+            ];
+            if n > crate::config::cache::tile_elems() {
+                v.push(Algorithm::MemTier);
+            }
+            v
         } else {
             vec![Algorithm::Bluestein]
         }
@@ -105,7 +123,7 @@ impl FftPlan {
             return Err(FftError::ZeroSize);
         }
         let resolved = Self::resolve(n, algo);
-        if !is_pow2(n) && resolved != Algorithm::Bluestein {
+        if !is_pow2(n) && !matches!(resolved, Algorithm::Bluestein | Algorithm::MemTier) {
             return Err(FftError::NonPowerOfTwo { algo: resolved.name(), n });
         }
         let imp: Box<dyn Transform> = match resolved {
@@ -115,6 +133,7 @@ impl FftPlan {
             Algorithm::Stockham => Box::new(Stockham::new(n)),
             Algorithm::FourStep => Box::new(FourStep::new(n)),
             Algorithm::Bluestein => Box::new(Bluestein::new(n)),
+            Algorithm::MemTier => Box::new(MemoryPlan::new(n)),
             Algorithm::Auto => unreachable!("resolve() never returns Auto"),
         };
         Ok(Self { n, algo: resolved, imp })
@@ -129,17 +148,21 @@ impl FftPlan {
     /// The size heuristic (mirrors FFTW_ESTIMATE's spirit), retuned from
     /// measurement on this host (§Perf iter 3, see EXPERIMENTS.md): the
     /// in-place bit-reversed radix-2 wins up to ~2^18 (cache-resident);
-    /// radix-4's shallower level count takes over for DRAM-resident sizes.
-    /// Bluestein is the only option for non-powers-of-two. The four-step
-    /// stays available explicitly (it is the paper's *GPU* schedule; its
-    /// CPU realization pays three transposes the GPU does not).
+    /// beyond that the working set is DRAM-resident and the memory-tiered
+    /// blocked path (two fused slow-memory passes instead of `log n`
+    /// level sweeps — the paper's core argument, applied to the host
+    /// hierarchy) replaces the PR-2 radix-4 pick (`benches/fft_library`
+    /// gates the ≥1.25x win at 2^20). Bluestein is the only direct option
+    /// for non-powers-of-two. The four-step stays available explicitly
+    /// (it is the paper's *GPU* schedule; its un-fused CPU realization
+    /// pays three transposes the GPU does not).
     fn heuristic(n: usize) -> Algorithm {
         if !is_pow2(n) {
             Algorithm::Bluestein
         } else if n <= 1 << 18 {
             Algorithm::Radix2
         } else {
-            Algorithm::Radix4
+            Algorithm::MemTier
         }
     }
 
@@ -267,9 +290,26 @@ impl Transform for FftPlan {
 /// Process-wide plan cache (FFTW "wisdom" analog), keyed on the *resolved*
 /// algorithm: `get(n, Auto)` and `get(n, <its concrete winner>)` share one
 /// memoized plan.
+///
+/// Memory-tier plans bake in the tile resolved at construction, so their
+/// key additionally carries the effective `config::cache` tile — a caller
+/// inside a different `with_tile`/`set_tile` scope gets a plan built for
+/// *its* tile, never a stale one (non-memtier keys use tile 0).
 #[derive(Default)]
 pub struct PlanCache {
-    plans: Mutex<HashMap<(usize, Algorithm), Arc<FftPlan>>>,
+    plans: Mutex<HashMap<(usize, Algorithm, usize), Arc<FftPlan>>>,
+}
+
+/// The memoization key: resolved algorithm, plus the effective tile when
+/// (and only when) that resolution is tile-dependent.
+fn cache_key(n: usize, algo: Algorithm) -> (usize, Algorithm, usize) {
+    let resolved = FftPlan::resolve(n, algo);
+    let tile = if resolved == Algorithm::MemTier {
+        crate::config::cache::tile_elems()
+    } else {
+        0
+    };
+    (n, resolved, tile)
 }
 
 impl PlanCache {
@@ -279,7 +319,7 @@ impl PlanCache {
 
     /// Fallible lookup-or-build — the serving path's entry point.
     pub fn try_get(&self, n: usize, algo: Algorithm) -> Result<Arc<FftPlan>, FftError> {
-        let key = (n, FftPlan::resolve(n, algo));
+        let key = cache_key(n, algo);
         let mut map = self.plans.lock().unwrap();
         if let Some(plan) = map.get(&key) {
             return Ok(plan.clone());
@@ -295,10 +335,10 @@ impl PlanCache {
             .unwrap_or_else(|e| panic!("PlanCache::get({n}, {algo:?}): {e}"))
     }
 
-    /// Is a plan for the resolved (n, algo) already memoized?
+    /// Is a plan for the resolved (n, algo) already memoized (under the
+    /// currently effective tile, for memtier resolutions)?
     pub fn contains(&self, n: usize, algo: Algorithm) -> bool {
-        let key = (n, FftPlan::resolve(n, algo));
-        self.plans.lock().unwrap().contains_key(&key)
+        self.plans.lock().unwrap().contains_key(&cache_key(n, algo))
     }
 
     pub fn len(&self) -> usize {
@@ -390,11 +430,12 @@ mod tests {
 
     #[test]
     fn auto_resolves_by_size() {
-        // §Perf iter 3 heuristic: radix2 ≤ 2^18, radix4 beyond, bluestein
-        // for non-powers-of-two.
+        // Heuristic: radix2 while cache-resident (≤ 2^18), the memory-
+        // tiered blocked path for DRAM-resident sizes, bluestein for
+        // non-powers-of-two.
         assert_eq!(FftPlan::new(256, Algorithm::Auto).algorithm(), Algorithm::Radix2);
         assert_eq!(FftPlan::new(1 << 14, Algorithm::Auto).algorithm(), Algorithm::Radix2);
-        assert_eq!(FftPlan::new(1 << 20, Algorithm::Auto).algorithm(), Algorithm::Radix4);
+        assert_eq!(FftPlan::new(1 << 20, Algorithm::Auto).algorithm(), Algorithm::MemTier);
         assert_eq!(FftPlan::new(100, Algorithm::Auto).algorithm(), Algorithm::Bluestein);
         assert_eq!(FftPlan::resolve(256, Algorithm::Stockham), Algorithm::Stockham);
     }
@@ -407,8 +448,10 @@ mod tests {
             FftPlan::try_new(100, Algorithm::Radix2).unwrap_err(),
             FftError::NonPowerOfTwo { n: 100, .. }
         ));
-        // Non-pow2 through Auto is fine: Bluestein serves it.
+        // Non-pow2 through Auto is fine: Bluestein serves it. MemTier
+        // accepts any length too (Bluestein strategy internally).
         assert!(FftPlan::try_new(100, Algorithm::Auto).is_ok());
+        assert!(FftPlan::try_new(100, Algorithm::MemTier).is_ok());
     }
 
     #[test]
@@ -427,6 +470,24 @@ mod tests {
         // A genuinely different algorithm is a different plan.
         cache.get(512, Algorithm::Stockham);
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn memtier_plans_are_keyed_on_effective_tile() {
+        // The tile is baked into a memtier plan at construction, so the
+        // cache must not serve a plan built under one tile scope to a
+        // caller in another (the knob would silently stop working).
+        let cache = PlanCache::new();
+        let a = crate::config::cache::with_tile(64, || cache.get(1 << 20, Algorithm::MemTier));
+        let b = crate::config::cache::with_tile(4096, || cache.get(1 << 20, Algorithm::MemTier));
+        assert!(!Arc::ptr_eq(&a, &b), "different tile scopes need different plans");
+        let a2 = crate::config::cache::with_tile(64, || cache.get(1 << 20, Algorithm::MemTier));
+        assert!(Arc::ptr_eq(&a, &a2), "same tile scope reuses the memoized plan");
+        assert_eq!(cache.len(), 2);
+        // Non-memtier resolutions ignore the tile entirely.
+        let r = crate::config::cache::with_tile(64, || cache.get(512, Algorithm::Radix2));
+        let r2 = crate::config::cache::with_tile(4096, || cache.get(512, Algorithm::Radix2));
+        assert!(Arc::ptr_eq(&r, &r2));
     }
 
     #[test]
@@ -472,6 +533,7 @@ mod tests {
             Algorithm::Stockham,
             Algorithm::FourStep,
             Algorithm::Bluestein,
+            Algorithm::MemTier,
         ] {
             assert_eq!(Algorithm::parse(a.name()), Some(a));
         }

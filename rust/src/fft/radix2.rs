@@ -5,24 +5,29 @@
 //! (paper Fig. 2) executes exactly one of these levels per kernel launch —
 //! `gpusim::schedules::per_level` replays this loop's memory traffic.
 
+use std::sync::Arc;
+
 use super::bitrev::BitRev;
 use super::transform::{check_inplace, FftError, Transform};
 use super::twiddle::TwiddleTable;
 use crate::util::complex::C32;
 use crate::util::{is_pow2, log2_exact};
 
-/// Precomputed radix-2 plan.
+/// Precomputed radix-2 plan. Both tables come from the shared
+/// [`super::memtier::TableCache`], so re-planning a size recomputes
+/// nothing.
 #[derive(Debug, Clone)]
 pub struct Radix2 {
     pub n: usize,
-    twiddles: TwiddleTable,
-    bitrev: BitRev,
+    twiddles: Arc<TwiddleTable>,
+    bitrev: Arc<BitRev>,
 }
 
 impl Radix2 {
     pub fn new(n: usize) -> Self {
         assert!(is_pow2(n), "radix-2 FFT needs a power of two, got {n}");
-        Self { n, twiddles: TwiddleTable::new(n), bitrev: BitRev::new(n) }
+        let tables = super::memtier::tables();
+        Self { n, twiddles: tables.twiddle(n), bitrev: tables.bitrev(n) }
     }
 
     /// In-place forward FFT.

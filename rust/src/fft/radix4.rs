@@ -5,6 +5,8 @@
 //! cost of a wider butterfly. When `log2 n` is odd, a single radix-2 level
 //! runs first. Autosort (Stockham) form, so no digit-reversal pass.
 
+use std::sync::Arc;
+
 use super::transform::{check_inplace, FftError, Transform};
 use super::twiddle::TwiddleTable;
 use crate::util::complex::C32;
@@ -13,13 +15,14 @@ use crate::util::{is_pow2, log2_exact};
 #[derive(Debug, Clone)]
 pub struct Radix4 {
     pub n: usize,
-    twiddles: TwiddleTable,
+    /// Shared through the memtier table cache (texture-memory analog).
+    twiddles: Arc<TwiddleTable>,
 }
 
 impl Radix4 {
     pub fn new(n: usize) -> Self {
         assert!(is_pow2(n), "radix-4 FFT needs a power of two, got {n}");
-        Self { n, twiddles: TwiddleTable::new(n) }
+        Self { n, twiddles: super::memtier::tables().twiddle(n) }
     }
 
     pub fn forward_with_scratch(&self, x: &mut [C32], scratch: &mut [C32]) {

@@ -6,6 +6,8 @@
 //! real samples into a complex signal of half the length, transform, then
 //! untangle with the split lemma.
 
+use std::sync::Arc;
+
 use super::stockham::Stockham;
 use super::transform::{check_inplace, FftError, Transform};
 use super::twiddle::TwiddleTable;
@@ -16,14 +18,15 @@ use crate::util::is_pow2;
 pub struct RealFft {
     pub n: usize,
     half: Stockham,
-    /// W_n^k for the untangle step.
-    twiddles: TwiddleTable,
+    /// W_n^k for the untangle step — the RFFT "split table", shared
+    /// through the memtier table cache like every other twiddle table.
+    twiddles: Arc<TwiddleTable>,
 }
 
 impl RealFft {
     pub fn new(n: usize) -> Self {
         assert!(is_pow2(n) && n >= 2, "RFFT needs a power of two >= 2, got {n}");
-        Self { n, half: Stockham::new(n / 2), twiddles: TwiddleTable::new(n) }
+        Self { n, half: Stockham::new(n / 2), twiddles: super::memtier::tables().twiddle(n) }
     }
 
     /// Forward RFFT: n reals -> n/2 + 1 complex bins (DC .. Nyquist).

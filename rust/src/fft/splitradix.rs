@@ -7,6 +7,8 @@
 //! for clarity over speed; the planner prefers it only in the small-n
 //! regime where it wins anyway.
 
+use std::sync::Arc;
+
 use super::transform::{check_inplace, check_into, FftError, Transform};
 use super::twiddle::TwiddleTable;
 use crate::util::complex::C32;
@@ -15,13 +17,14 @@ use crate::util::is_pow2;
 #[derive(Debug, Clone)]
 pub struct SplitRadix {
     pub n: usize,
-    twiddles: TwiddleTable,
+    /// Shared through the memtier table cache (texture-memory analog).
+    twiddles: Arc<TwiddleTable>,
 }
 
 impl SplitRadix {
     pub fn new(n: usize) -> Self {
         assert!(is_pow2(n), "split-radix FFT needs a power of two, got {n}");
-        Self { n, twiddles: TwiddleTable::new(n) }
+        Self { n, twiddles: super::memtier::tables().twiddle(n) }
     }
 
     pub fn forward(&self, x: &mut [C32]) {

@@ -10,6 +10,8 @@
 //! This mirrors `python/compile/kernels/stockham.py`; the two are tested
 //! against the same oracle.
 
+use std::sync::Arc;
+
 use super::transform::{check_inplace, FftError, Transform};
 use super::twiddle::TwiddleTable;
 use crate::util::complex::C32;
@@ -18,13 +20,16 @@ use crate::util::{is_pow2, log2_exact};
 #[derive(Debug, Clone)]
 pub struct Stockham {
     pub n: usize,
-    twiddles: TwiddleTable,
+    /// Shared through the memtier [`super::memtier::TableCache`] (the
+    /// texture-memory analog): every Stockham of size n — standalone, or
+    /// inside a four-step / Bluestein / memtier plan — reads one table.
+    twiddles: Arc<TwiddleTable>,
 }
 
 impl Stockham {
     pub fn new(n: usize) -> Self {
         assert!(is_pow2(n), "Stockham FFT needs a power of two, got {n}");
-        Self { n, twiddles: TwiddleTable::new(n) }
+        Self { n, twiddles: super::memtier::tables().twiddle(n) }
     }
 
     /// Forward FFT using caller-provided scratch (same length as x).

@@ -64,7 +64,8 @@ impl std::error::Error for FftError {}
 /// One FFT kernel behind a uniform, scratch-explicit, fallible interface.
 ///
 /// Implementors: `Radix2`, `Radix4`, `SplitRadix`, `Stockham`, `FourStep`,
-/// `Bluestein`, `RealFft`, `Fft2d` and the planner's `FftPlan` wrapper.
+/// `Bluestein`, `RealFft`, `Fft2d`, the memory-tiered `MemoryPlan` and the
+/// planner's `FftPlan` wrapper.
 ///
 /// Contract: on `Ok(())` the output (or in-place buffer) holds the
 /// transform; on `Err` the destination contents are unspecified but the

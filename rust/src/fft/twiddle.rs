@@ -3,6 +3,9 @@
 //! Two flavours:
 //! - [`TwiddleTable`]: exact per-size table `W_n^k = e^{-2πik/n}`, computed
 //!   in f64 and stored as f32 — what the Rust FFT algorithms consume.
+//!   Kernels do not build these directly: they resolve them through the
+//!   shared [`super::memtier::TableCache`] (the texture-memory analog), so
+//!   every plan of one size reads one `Arc`-published table.
 //! - [`AngleLut`]: the *paper's* texture-memory scheme (§2.3.1): sin/cos
 //!   sampled at a fixed angular resolution once, then *looked up* by angle.
 //!   Kept as a faithful (and ablatable) model of the texture-memory LUT,

@@ -32,6 +32,39 @@ impl Counter {
     }
 }
 
+/// Hit/miss counter pair for read-only caches (the FFT table cache, plan
+/// caches, artifact caches). Lock-free recording; snapshots are two
+/// relaxed loads, so a snapshot taken under concurrent traffic is a
+/// consistent-enough pair for rate reporting, not an atomic cut.
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    pub hits: Counter,
+    pub misses: Counter,
+}
+
+impl CacheCounters {
+    pub const fn new() -> Self {
+        Self { hits: Counter::new(), misses: Counter::new() }
+    }
+
+    /// (hits, misses) at this instant.
+    pub fn snapshot(&self) -> (u64, u64) {
+        (self.hits.get(), self.misses.get())
+    }
+
+    /// Fraction of lookups served without recomputation; 0.0 when no
+    /// lookups have happened.
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = self.snapshot();
+        let total = h + m;
+        if total == 0 {
+            0.0
+        } else {
+            h as f64 / total as f64
+        }
+    }
+}
+
 /// Latency histogram with logarithmic buckets from 1 µs to ~17 s.
 ///
 /// Log-bucketed so recording is one atomic increment; percentile queries
@@ -264,6 +297,16 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn cache_counters_rates() {
+        let c = CacheCounters::new();
+        assert_eq!(c.hit_rate(), 0.0, "no lookups yet");
+        c.misses.inc();
+        c.hits.add(3);
+        assert_eq!(c.snapshot(), (3, 1));
+        assert!((c.hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -263,6 +263,10 @@ where
 
 /// Deterministic data-parallel iteration over disjoint contiguous chunks.
 ///
+/// The `stride` unit is whatever the caller treats as independent — an FFT
+/// row, a signal in a batch, a transpose strip, or a memtier cache tile
+/// (`fft::memtier` fans its blocked passes out here, tiles as units).
+///
 /// `data` is split at fixed boundaries into at most [`threads()`] chunks,
 /// each a whole number of `stride`-element units (`data.len()` must be a
 /// multiple of `stride`; unit counts differ by at most one across chunks).

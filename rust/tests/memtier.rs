@@ -1,0 +1,257 @@
+//! Memory-tier acceptance battery (PR 3 tentpole coverage):
+//!
+//! 1. The blocked memtier path is **bit-for-bit equal** to the four-step
+//!    with the same tile (fusion changes data movement, never arithmetic
+//!    order), and equal to the direct kernels within f32 tolerance, at
+//!    n ∈ {2^8, 2^12, 2^18, non-pow2} × threads {1, 2, 7} × tile
+//!    overrides {tiny, huge} × {forward, inverse, batched}.
+//! 2. Parallel output is bit-identical to serial for any thread budget.
+//! 3. TableCache sharing: plans of the same size hold the SAME table
+//!    allocations (`Arc::ptr_eq`), so re-planning recomputes nothing.
+//! 4. The gpusim simulator's global-access pass count matches the pass
+//!    count the memtier layer reports for the same (n, tile) shape.
+
+use std::sync::Arc;
+
+use memfft::fft::{self, Algorithm, FftPlan, FourStep, MemoryPlan, Stockham, Transform};
+use memfft::gpusim::access::blocked_round_trips;
+use memfft::util::complex::{max_abs_diff, C32};
+use memfft::util::{pool, Xoshiro256};
+
+const TINY_TILE: usize = 16;
+const HUGE_TILE: usize = 1 << 22;
+
+fn input(n: usize) -> Vec<C32> {
+    Xoshiro256::seeded(0x3E3A_717E ^ n as u64).complex_vec(n)
+}
+
+#[test]
+fn blocked_path_is_bit_identical_to_fourstep() {
+    // Same (n1, n2) split, same Stockham leaves, same f64 twiddle
+    // recurrence → the fused passes must reproduce the four-step EXACTLY,
+    // for every tile shape and thread budget. This is the documented
+    // equivalence class (DESIGN.md §7): memtier vs four-step is == ; only
+    // cross-algorithm comparisons (different butterfly orders) carry a
+    // tolerance.
+    for n in [1usize << 8, 1 << 12, 1 << 18] {
+        let x = input(n);
+        for tile in [TINY_TILE, 1024, HUGE_TILE] {
+            let mt = MemoryPlan::with_tile(n, tile);
+            let fs = FourStep::with_tile(n, tile);
+            assert_eq!(mt.passes(), fs.passes(), "n={n} tile={tile}");
+            for threads in [1usize, 2, 7] {
+                pool::with_threads(threads, || {
+                    let mut a = x.clone();
+                    mt.forward(&mut a);
+                    let mut b = x.clone();
+                    fs.forward(&mut b);
+                    assert_eq!(a, b, "forward n={n} tile={tile} threads={threads}");
+                    mt.inverse(&mut a);
+                    fs.inverse(&mut b);
+                    assert_eq!(a, b, "inverse n={n} tile={tile} threads={threads}");
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn memtier_matches_direct_kernels_within_tolerance() {
+    // Cross-algorithm agreement (different add orders → tolerance), plus
+    // the tile-resident case collapsing to the direct kernel bit-for-bit.
+    for n in [1usize << 8, 1 << 12] {
+        let x = input(n);
+        let mut stockham = x.clone();
+        Stockham::new(n).forward(&mut stockham);
+        let tol = 2e-3 * (n as f32).sqrt();
+        for tile in [TINY_TILE, HUGE_TILE] {
+            let mt = MemoryPlan::with_tile(n, tile);
+            let mut got = x.clone();
+            mt.forward(&mut got);
+            assert!(
+                max_abs_diff(&got, &stockham) < tol,
+                "n={n} tile={tile} err={}",
+                max_abs_diff(&got, &stockham)
+            );
+            if tile >= n {
+                assert_eq!(got, stockham, "tile-resident memtier IS the direct kernel");
+            }
+            // Inverse roundtrips back to the input.
+            mt.inverse(&mut got);
+            assert!(max_abs_diff(&got, &x) < 1e-3, "roundtrip n={n} tile={tile}");
+        }
+    }
+}
+
+#[test]
+fn parallel_is_bitwise_equal_to_serial_all_shapes() {
+    // The pool determinism contract extended to the memtier layer:
+    // forward, inverse and batched outputs are == across thread budgets.
+    for n in [1usize << 8, 1 << 12] {
+        let x = input(n);
+        let batch = 3;
+        let data = Xoshiro256::seeded(0xBA7C_4ED ^ n as u64).complex_vec(n * batch);
+        for tile in [TINY_TILE, HUGE_TILE] {
+            let mt = MemoryPlan::with_tile(n, tile);
+            let mut scratch = vec![C32::ZERO; mt.scratch_len()];
+            let (mut fwd_serial, mut inv_serial) = (vec![C32::ZERO; n], vec![C32::ZERO; n]);
+            let mut batch_serial = vec![C32::ZERO; n * batch];
+            pool::with_threads(1, || {
+                mt.forward_into(&x, &mut fwd_serial, &mut scratch).unwrap();
+                mt.inverse_into(&x, &mut inv_serial, &mut scratch).unwrap();
+                mt.forward_batch_into(batch, &data, &mut batch_serial, &mut scratch).unwrap();
+            });
+            for threads in [2usize, 7] {
+                let (mut fwd, mut inv) = (vec![C32::ZERO; n], vec![C32::ZERO; n]);
+                let mut batched = vec![C32::ZERO; n * batch];
+                pool::with_threads(threads, || {
+                    mt.forward_into(&x, &mut fwd, &mut scratch).unwrap();
+                    mt.inverse_into(&x, &mut inv, &mut scratch).unwrap();
+                    mt.forward_batch_into(batch, &data, &mut batched, &mut scratch).unwrap();
+                });
+                assert_eq!(fwd, fwd_serial, "n={n} tile={tile} threads={threads}");
+                assert_eq!(inv, inv_serial, "n={n} tile={tile} threads={threads}");
+                assert_eq!(batched, batch_serial, "n={n} tile={tile} threads={threads}");
+            }
+            // Batched equals looping the single path, row by row.
+            for b in 0..batch {
+                let mut single = vec![C32::ZERO; n];
+                mt.forward_into(&data[b * n..(b + 1) * n], &mut single, &mut scratch).unwrap();
+                assert_eq!(&batch_serial[b * n..(b + 1) * n], &single[..], "row {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_large_n_parallel_equals_serial() {
+    // The DRAM-resident corner of the grid: batched memtier at 2^18 under
+    // a tiny tile (deep recursion inside a batch region must degrade to
+    // serial per row and stay bit-identical).
+    let n = 1usize << 18;
+    let batch = 2;
+    let data = Xoshiro256::seeded(0x1A96E).complex_vec(n * batch);
+    let mt = MemoryPlan::with_tile(n, TINY_TILE);
+    let mut scratch = vec![C32::ZERO; mt.scratch_len()];
+    let mut serial = vec![C32::ZERO; n * batch];
+    pool::with_threads(1, || {
+        mt.forward_batch_into(batch, &data, &mut serial, &mut scratch).unwrap();
+    });
+    let mut par = vec![C32::ZERO; n * batch];
+    pool::with_threads(7, || {
+        mt.forward_batch_into(batch, &data, &mut par, &mut scratch).unwrap();
+    });
+    assert_eq!(par, serial, "batched memtier at 2^18 must be thread-invariant");
+}
+
+#[test]
+fn non_pow2_memtier_is_bluestein_and_plannable() {
+    for n in [100usize, 1000] {
+        let x = input(n);
+        let mt = MemoryPlan::new(n);
+        assert_eq!(mt.passes(), 1);
+        let mut got = x.clone();
+        mt.forward(&mut got);
+        let mut expect = x.clone();
+        fft::Bluestein::new(n).forward(&mut expect);
+        assert_eq!(got, expect, "n={n}: arbitrary strategy is the Bluestein path");
+
+        // The planner accepts memtier at any length and the plan agrees
+        // with the DFT oracle.
+        let plan = FftPlan::try_new(n, Algorithm::MemTier).unwrap();
+        assert_eq!(plan.algorithm(), Algorithm::MemTier);
+        let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+        let mut via_plan = vec![C32::ZERO; n];
+        plan.forward_into(&x, &mut via_plan, &mut scratch).unwrap();
+        assert_eq!(via_plan, got, "plan wrapper is the same path");
+    }
+    let oracle_n = 100;
+    let x = input(oracle_n);
+    let expect = fft::dft::dft(&x);
+    let mut got = x;
+    MemoryPlan::new(oracle_n).forward(&mut got);
+    assert!(max_abs_diff(&got, &expect) < 5e-3 * (oracle_n as f32).sqrt());
+}
+
+#[test]
+fn auto_routes_dram_resident_sizes_through_memtier() {
+    let plan = FftPlan::new(1 << 20, Algorithm::Auto);
+    assert_eq!(plan.algorithm(), Algorithm::MemTier);
+    // And the cache shares Auto with the explicit memtier request.
+    let cache = fft::PlanCache::new();
+    let a = cache.get(1 << 20, Algorithm::Auto);
+    let b = cache.get(1 << 20, Algorithm::MemTier);
+    assert!(Arc::ptr_eq(&a, &b), "Auto and memtier must share one plan at 2^20");
+}
+
+#[test]
+fn table_cache_shares_tables_across_plans() {
+    // Two lookups of one size return the SAME allocation — the "zero
+    // table recomputation" contract. (Global counters are shared with
+    // concurrently running tests, so this asserts pointer identity and
+    // monotone hits, not absolute totals; the single-threaded
+    // fft_library bench gate asserts the exact zero-miss property.)
+    let before = fft::table_stats();
+    let t1 = fft::tables().twiddle(1 << 9);
+    let t2 = fft::tables().twiddle(1 << 9);
+    assert!(Arc::ptr_eq(&t1, &t2), "twiddle tables must be shared");
+    let b1 = fft::tables().bitrev(1 << 9);
+    let b2 = fft::tables().bitrev(1 << 9);
+    assert!(Arc::ptr_eq(&b1, &b2), "bit-reverse tables must be shared");
+    let after = fft::table_stats();
+    assert!(after.hits >= before.hits + 2, "second lookups must be hits");
+    assert!(after.entries >= 2);
+    // Kernels of every family resolve through the same store: building a
+    // plan twice adds no entries for its sizes.
+    let _warm = (Stockham::new(1 << 9), fft::Radix2::new(1 << 9), fft::RealFft::new(1 << 9));
+    let mid = fft::table_stats();
+    let _again = (Stockham::new(1 << 9), fft::Radix2::new(1 << 9), fft::RealFft::new(1 << 9));
+    let fin = fft::table_stats();
+    assert!(fin.hits > mid.hits, "re-planned kernels must hit the shared tables");
+}
+
+#[test]
+fn gpusim_pass_count_matches_memtier_report() {
+    // The simulator's global-access round-trip count, the memtier layer's
+    // reported pass count and the four-step's pass structure must agree
+    // for every (n, tile) shape.
+    for lg in 1..=20u32 {
+        let n = 1usize << lg;
+        for tile_lg in [4u32, 6, 10, 12] {
+            let tile = 1usize << tile_lg;
+            let mt = MemoryPlan::with_tile(n, tile);
+            assert_eq!(
+                mt.passes() as u32,
+                blocked_round_trips(n, tile),
+                "n={n} tile={tile}: simulator and memtier disagree"
+            );
+            assert_eq!(mt.passes(), FourStep::with_tile(n, tile).passes(), "n={n} tile={tile}");
+            assert_eq!(mt.global_traffic_elems(), mt.passes() * n);
+        }
+    }
+}
+
+#[test]
+fn tile_override_changes_plan_shape_not_results() {
+    // The config::cache thread-local override is what the service's
+    // cache.tile knob and the MEMFFT_TILE CI matrix exercise: shapes
+    // change, results do not.
+    let n = 1 << 12;
+    let x = input(n);
+    let mut expect = x.clone();
+    Stockham::new(n).forward(&mut expect);
+    for tile in [64usize, 1 << 20] {
+        memfft::config::cache::with_tile(tile, || {
+            let mt = MemoryPlan::new(n);
+            assert_eq!(mt.tile(), tile);
+            if tile >= n {
+                assert_eq!(mt.passes(), 1, "huge tile must run the direct kernel");
+            } else {
+                assert!(mt.passes() >= 2, "tiny tile must run the blocked path");
+            }
+            let mut got = x.clone();
+            mt.forward(&mut got);
+            assert!(max_abs_diff(&got, &expect) < 2e-3 * (n as f32).sqrt(), "tile={tile}");
+        });
+    }
+}

@@ -16,8 +16,9 @@ fn random_plan(g: &mut Gen, n: usize) -> FftPlan {
 
 /// Every `Transform` implementor at size `n` (n a power of two >= 2):
 /// the five 1-D pow2 kernels, Bluestein, the RFFT pair, the 2-D transform,
-/// and a deep multi-pass four-step — the full surface the parallel
-/// execution layer must keep bit-identical to serial.
+/// the memory-tiered plan, and deep multi-pass four-step / memtier shapes
+/// — the full surface the parallel execution layer must keep
+/// bit-identical to serial.
 fn all_transforms(n: usize) -> Vec<Box<dyn Transform>> {
     let lg = n.trailing_zeros();
     let rows = 1usize << (lg / 2);
@@ -30,11 +31,13 @@ fn all_transforms(n: usize) -> Vec<Box<dyn Transform>> {
         Box::new(fft::Bluestein::new(n)),
         Box::new(fft::RealFft::new(n)),
         Box::new(fft::Fft2d::new(rows, n / rows)),
+        Box::new(fft::MemoryPlan::new(n)),
     ];
     if n >= 8 {
-        // Tiny tile forces the recursive (3+ pass) four-step schedule, so
-        // the nested-region serialization path is exercised too.
+        // Tiny tiles force the recursive (3+ pass) schedules, so the
+        // nested-region serialization path is exercised too.
         v.push(Box::new(fft::FourStep::with_tile(n, 4)));
+        v.push(Box::new(fft::MemoryPlan::with_tile(n, 4)));
     }
     v
 }

@@ -10,8 +10,8 @@
 //!    come back as `FftError` values — never panics.
 
 use memfft::fft::{
-    Algorithm, Bluestein, Fft2d, FftError, FftPlan, FourStep, PlanCache, Radix2, Radix4, RealFft,
-    SplitRadix, Stockham, Transform,
+    Algorithm, Bluestein, Fft2d, FftError, FftPlan, FourStep, MemoryPlan, PlanCache, Radix2,
+    Radix4, RealFft, SplitRadix, Stockham, Transform,
 };
 use memfft::util::complex::C32;
 use memfft::util::Xoshiro256;
@@ -27,6 +27,7 @@ fn concrete_forward(algo: Algorithm, n: usize, x: &mut [C32]) {
         Algorithm::Stockham => Stockham::new(n).forward(x),
         Algorithm::FourStep => FourStep::new(n).forward(x),
         Algorithm::Bluestein => Bluestein::new(n).forward(x),
+        Algorithm::MemTier => MemoryPlan::new(n).forward(x),
         Algorithm::Auto => unreachable!("candidates() never yields Auto"),
     }
 }
