@@ -1,0 +1,108 @@
+//! Pipelined vs staged out-of-core throughput — the headline measurement
+//! for the streaming subsystem (`crate::stream`).
+//!
+//!   cargo bench --bench stream
+//!
+//! Shape: 64 rows × 2^14 points (8 MiB payload), file-backed on both
+//! sides. *Staged* is the naive out-of-core loop — read the whole
+//! dataset, compute, write — with every phase serialized. *Pipelined* is
+//! the same work through `stream::stream_transform`, where a reader
+//! thread prefetches chunk k+1 and a writer thread flushes chunk k−1
+//! while the caller computes chunk k. Outputs are bit-for-bit identical
+//! (proved by rust/tests/stream.rs); this bench quantifies how much of
+//! the IO the overlap hides. Compute is pinned to one thread on both
+//! sides so the comparison isolates stage overlap from data parallelism.
+
+use memfft::bench::Bench;
+use memfft::coordinator::{Backend, BatchSpec, Direction, NativeBackend};
+use memfft::stream::{
+    read_dataset, stream_transform, write_dataset, Dims, FileDataset, FileSink, ELEM_BYTES,
+};
+use memfft::util::{pool, Xoshiro256};
+use memfft::C32;
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let quick = std::env::var("MEMFFT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+
+    let (rows, cols) = if quick { (16usize, 1 << 12) } else { (64usize, 1 << 14) };
+    let chunk_rows = 4usize;
+    let budget = chunk_rows * cols * ELEM_BYTES;
+
+    let dir = std::env::temp_dir().join(format!("memfft-stream-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create bench dir");
+    let input = dir.join("input.mfft");
+    let staged_out = dir.join("staged.mfft");
+    let piped_out = dir.join("pipelined.mfft");
+
+    let mut rng = Xoshiro256::seeded(0x0C0);
+    let data = rng.complex_vec(rows * cols);
+    write_dataset(&input, rows, cols, &data).expect("write input dataset");
+    println!(
+        "dataset: {rows} x {cols} ({:.1} MiB), chunk = {chunk_rows} rows, cores = {cores}",
+        (rows * cols * ELEM_BYTES) as f64 / (1 << 20) as f64
+    );
+
+    let mut backend = NativeBackend::default();
+    backend.warmup(&[cols]).expect("warmup");
+    let elements = (rows * cols) as u64;
+
+    // Staged: read everything, compute everything, write everything —
+    // three serialized phases over the same files.
+    pool::with_threads(1, || {
+        bench.run_with_elements("staged", Some(elements), || {
+            let (dims, loaded) = read_dataset(&input).expect("read");
+            let re: Vec<f32> = loaded.iter().map(|c| c.re).collect();
+            let im: Vec<f32> = loaded.iter().map(|c| c.im).collect();
+            let spec = BatchSpec { n: cols, batch: rows, direction: Direction::Forward };
+            let out = backend.execute_batch(&spec, &re, &im).expect("batch");
+            let interleaved: Vec<C32> =
+                out.re.iter().zip(&out.im).map(|(&a, &b)| C32::new(a, b)).collect();
+            write_dataset(&staged_out, dims.rows, dims.cols, &interleaved).expect("write");
+            memfft::bench::bb(&interleaved);
+        });
+    });
+
+    // Pipelined: identical files, identical math, overlapped stages.
+    pool::with_threads(1, || {
+        bench.run_with_elements("pipelined", Some(elements), || {
+            let mut src = FileDataset::open(&input).expect("open");
+            let mut sink = FileSink::create(&piped_out, Dims::new(rows, cols)).expect("sink");
+            let report = stream_transform(
+                &mut src,
+                &mut sink,
+                &mut backend,
+                Direction::Forward,
+                budget,
+                None,
+            )
+            .expect("stream");
+            memfft::bench::bb(report.chunks);
+        });
+    });
+
+    println!("\n{}", bench.table());
+
+    let staged = bench.find("staged").expect("staged measurement").median_ns;
+    let piped = bench.find("pipelined").expect("pipelined measurement").median_ns;
+    let speedup = staged / piped;
+    println!("pipelined vs staged: {speedup:.2}x");
+
+    // Acceptance gate: with a reader and writer thread to hide IO behind,
+    // the pipeline must beat the serialized loop by ≥1.3x on a host with
+    // cores to run the stages on.
+    if cores >= 4 && !quick {
+        assert!(
+            speedup >= 1.3,
+            "pipelined must be >=1.3x staged at {rows}x{cols} on {cores} cores, got {speedup:.2}x"
+        );
+        println!("acceptance: {speedup:.2}x >= 1.3x on {cores} cores");
+    } else {
+        println!("acceptance gate skipped (cores={cores}, quick={quick})");
+    }
+
+    bench.write_csv("stream.csv").ok();
+    println!("wrote target/bench-results/stream.csv");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -269,6 +269,12 @@ pub struct ServiceConfig {
     /// workers (`config::cache::with_tile`), like `threads`. 0 = automatic
     /// (`config::cache::set_tile` / `MEMFFT_TILE` env / probed model).
     pub cache_tile: usize,
+    /// Per-chunk byte budget for out-of-core dataset jobs
+    /// (`stream.budget`) — a chunk of whole transform rows never exceeds
+    /// it, and the streaming pipeline's peak buffer memory is O(budget)
+    /// regardless of dataset size (`stream::ChunkPlan`). 0 = automatic
+    /// (`stream::set_budget` / `MEMFFT_STREAM_BUDGET` env / 32 MiB).
+    pub stream_budget: usize,
     /// Sizes the service accepts (must have artifacts).
     pub sizes: Vec<usize>,
     /// Seed for any synthetic workload generation.
@@ -289,6 +295,7 @@ impl Default for ServiceConfig {
             queue_depth: 1024,
             method: "fourstep".into(),
             cache_tile: 0,
+            stream_budget: 0,
             sizes: vec![16, 64, 256, 1024, 4096, 16384, 65536],
             seed: 42,
             warmup: true,
@@ -308,6 +315,7 @@ impl ServiceConfig {
             queue_depth: doc.usize_or("service.queue_depth", d.queue_depth)?,
             method: doc.str_or("service.method", &d.method)?,
             cache_tile: doc.usize_or("cache.tile", d.cache_tile)?,
+            stream_budget: doc.usize_or("stream.budget", d.stream_budget)?,
             sizes: doc.usize_list_or("service.sizes", &d.sizes)?,
             seed: doc.usize_or("service.seed", d.seed as usize)? as u64,
             warmup: doc.bool_or("service.warmup", d.warmup)?,
@@ -426,6 +434,18 @@ bandwidth_gbps = 144.0
                 .validate()
                 .unwrap();
         }
+    }
+
+    #[test]
+    fn stream_budget_knob_parses() {
+        let doc = Document::parse("[stream]\nbudget = 1048576\n").unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.stream_budget, 1 << 20);
+        cfg.validate().unwrap();
+        // Default is 0 = automatic (env / 32 MiB).
+        let cfg = ServiceConfig::from_document(&Document::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.stream_budget, 0);
+        cfg.validate().unwrap();
     }
 
     #[test]

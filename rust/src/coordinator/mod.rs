@@ -7,16 +7,21 @@
 //! library, or the gpusim cost model — selected by the `method` config
 //! knob through `backend::for_config`), bounded-queue backpressure, and
 //! per-stage metrics. Workers speak only `Backend::execute_batch`; no
-//! substrate-specific branches exist outside `backend.rs`.
+//! substrate-specific branches exist outside `backend.rs`. Bulk dataset
+//! jobs take the out-of-core lane instead of the batcher:
+//! [`StreamProcessor`] drives `crate::stream`'s prefetch/compute/
+//! writeback pipeline with the same config knobs and metric bundle.
 
 pub mod backend;
 pub mod batcher;
 pub mod request;
 pub mod service;
+pub mod stream;
 pub mod workload;
 
 pub use backend::{Backend, BackendError, BatchOutput, BatchSpec, ModeledBackend, NativeBackend, PjrtBackend};
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use request::{Direction, FftRequest, FftResponse, FftResult, ServiceError};
 pub use service::FftService;
+pub use stream::StreamProcessor;
 pub use workload::{drive, RunReport, SizeDist, Workload};

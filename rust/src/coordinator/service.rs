@@ -97,6 +97,12 @@ impl FftService {
         &self.metrics
     }
 
+    /// Shared handle to the metric bundle (what `stream_processor` clones
+    /// so dataset-job timings land in the same report).
+    pub(crate) fn metrics_arc(&self) -> Arc<ServiceMetrics> {
+        self.metrics.clone()
+    }
+
     pub fn config(&self) -> &ServiceConfig {
         &self.config
     }

@@ -1,0 +1,153 @@
+//! Dataset jobs for the coordinator: [`StreamProcessor`] drives the
+//! out-of-core streaming pipeline (`crate::stream`) with a service
+//! configuration — backend selection via the `method` knob and the same
+//! per-worker scoping the batch path uses (`threads`, `cache.tile`, plus
+//! the streaming-only `stream.budget`).
+//!
+//! Datasets do not ride the request batcher: one dataset job is already a
+//! maximal batch (millions of size-homogeneous rows), so folding it into
+//! the interactive lane would only add queuing latency for both sides.
+//! Instead [`FftService::stream_processor`] hands out a processor that
+//! shares the service's config and [`ServiceMetrics`] — stream timings
+//! land in the same `metrics().report()` the CLI prints — while owning
+//! its own `Backend` instance on the calling thread (backends are
+//! thread-confined, exactly like the service workers' own instances).
+
+use std::sync::Arc;
+
+use super::backend::{self, Backend};
+use super::request::Direction;
+use super::service::FftService;
+use crate::config::ServiceConfig;
+use crate::metrics::ServiceMetrics;
+use crate::sar;
+use crate::stream::{self, ChunkSink, ChunkSource, PipelineReport, SliceIo, StreamError};
+
+/// One-thread driver for dataset jobs over any configured backend.
+pub struct StreamProcessor {
+    backend: Box<dyn Backend>,
+    metrics: Arc<ServiceMetrics>,
+    /// Per-chunk byte budget (`stream.budget`); 0 = resolve via
+    /// `MEMFFT_STREAM_BUDGET` / default.
+    budget: usize,
+    /// FFT data-parallel budget (`threads`) and memtier tile
+    /// (`cache.tile`), scoped thread-locally around every job like the
+    /// service workers scope them.
+    threads: usize,
+    tile: usize,
+}
+
+impl StreamProcessor {
+    /// Processor with fresh metrics (standalone CLI use).
+    pub fn from_config(cfg: &ServiceConfig) -> Self {
+        Self::with_metrics(cfg, Arc::new(ServiceMetrics::new()))
+    }
+
+    /// Processor recording into an existing metric bundle (how
+    /// [`FftService::stream_processor`] shares the service's).
+    pub fn with_metrics(cfg: &ServiceConfig, metrics: Arc<ServiceMetrics>) -> Self {
+        Self {
+            backend: backend::for_config(cfg),
+            metrics,
+            budget: cfg.stream_budget,
+            threads: cfg.threads,
+            tile: cfg.cache_tile,
+        }
+    }
+
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Stream a dataset through `Backend::execute_batch`, one transform
+    /// per row (`direction` picks fft / ifft).
+    pub fn transform(
+        &mut self,
+        source: &mut dyn ChunkSource,
+        sink: &mut dyn ChunkSink,
+        direction: Direction,
+    ) -> Result<PipelineReport, StreamError> {
+        let (threads, tile, budget) = (self.threads, self.tile, self.budget);
+        let backend = self.backend.as_mut();
+        let metrics = &*self.metrics;
+        crate::util::pool::with_threads(threads, || {
+            crate::config::cache::with_tile(tile, || {
+                stream::stream_transform(source, sink, backend, direction, budget, Some(metrics))
+            })
+        })
+    }
+
+    /// Focus a SAR scene whose azimuth lines arrive chunk-by-chunk
+    /// (range–Doppler, see `sar::rda::process_streamed`).
+    pub fn sar(
+        &mut self,
+        source: &mut dyn ChunkSource,
+        out: &mut dyn SliceIo,
+    ) -> Result<sar::rda::StreamedFocus, StreamError> {
+        let (threads, tile, budget) = (self.threads, self.tile, self.budget);
+        let backend = self.backend.as_mut();
+        let metrics = &*self.metrics;
+        crate::util::pool::with_threads(threads, || {
+            crate::config::cache::with_tile(tile, || {
+                sar::rda::process_streamed(source, out, backend, budget, Some(metrics))
+            })
+        })
+    }
+}
+
+impl FftService {
+    /// A dataset-job processor bound to this service's configuration and
+    /// metric bundle (stream timings appear in `metrics().report()`).
+    /// The processor owns its own backend on the calling thread; run it
+    /// from whichever thread submits the dataset job.
+    pub fn stream_processor(&self) -> StreamProcessor {
+        StreamProcessor::with_metrics(self.config(), self.metrics_arc())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeBackend;
+    use crate::stream::{bitwise_mismatches, transform_in_memory, Dims, MemDataset, MemSink};
+    use crate::util::Xoshiro256;
+
+    fn native_cfg(budget: usize) -> ServiceConfig {
+        ServiceConfig { method: "native".into(), stream_budget: budget, ..Default::default() }
+    }
+
+    #[test]
+    fn processor_streams_bitwise_equal_to_one_shot_batch() {
+        let (rows, cols) = (11, 64);
+        let mut rng = Xoshiro256::seeded(77);
+        let data = rng.complex_vec(rows * cols);
+        // 2-row chunks → 6 chunks with a 1-row tail.
+        let mut proc = StreamProcessor::from_config(&native_cfg(2 * cols * 8));
+        let mut src = MemDataset::new(rows, cols, data.clone());
+        let mut sink = MemSink::new(Dims::new(rows, cols));
+        let report = proc.transform(&mut src, &mut sink, Direction::Forward).unwrap();
+        assert_eq!(report.chunks, 6);
+
+        let mut reference = NativeBackend::default();
+        let expect =
+            transform_in_memory(&mut reference, Dims::new(rows, cols), &data, Direction::Forward)
+                .unwrap();
+        assert_eq!(bitwise_mismatches(sink.data(), &expect), 0);
+        assert_eq!(proc.metrics().stream_chunks.get(), 6);
+    }
+
+    #[test]
+    fn processor_reports_backend_name() {
+        let proc = StreamProcessor::from_config(&native_cfg(0));
+        assert_eq!(proc.backend_name(), "native");
+        let memtier = StreamProcessor::from_config(&ServiceConfig {
+            method: "memtier".into(),
+            ..Default::default()
+        });
+        assert_eq!(memtier.backend_name(), "native-memtier");
+    }
+}

@@ -26,6 +26,12 @@
 //!   `execute_batch(&BatchSpec, planar f32) -> Result<..>` contract,
 //!   selected by the `method` config knob.
 //!
+//! Datasets larger than memory take the out-of-core lane: [`stream`]
+//! chunks file-backed complex-f32 datasets by a byte budget and pipelines
+//! prefetch → compute → writeback through any `Backend`, with peak buffer
+//! memory bounded by the budget instead of the dataset size (DESIGN.md
+//! §8; `memfft stream` on the CLI, `StreamProcessor` in the coordinator).
+//!
 //! See `DESIGN.md` for the system inventory (and §Execution-API for the
 //! trait design + migration notes) and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
@@ -39,6 +45,7 @@ pub mod gpusim;
 pub mod harness;
 pub mod runtime;
 pub mod sar;
+pub mod stream;
 pub mod metrics;
 pub mod testing;
 pub mod util;

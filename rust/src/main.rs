@@ -8,6 +8,8 @@
 //!   sim       device model: Fig-3 memory histogram, schedule breakdowns
 //!   sar       end-to-end SAR demo (CPU path; see examples/sar_imaging.rs
 //!             for the AOT path)
+//!   stream    out-of-core streamed FFT / SAR over a file-backed .mfft
+//!             dataset (prefetch/compute/writeback pipeline)
 
 use memfft::cli::{Cli, CliError, Command};
 use memfft::config::ServiceConfig;
@@ -55,6 +57,17 @@ fn cli() -> Cli {
                 .arg_default("naz", "256", "azimuth lines")
                 .arg_default("nr", "1024", "range samples"),
         )
+        .command(
+            Command::new("stream", "out-of-core streamed processing of a .mfft dataset")
+                .arg("input", "input dataset path (required)")
+                .arg("output", "output dataset path (required)")
+                .arg_default("op", "fft", "fft | ifft | sar")
+                .arg_default("method", "native", "backend: native | memtier | modeled")
+                .arg_default("budget", "0", "per-chunk bytes (0 = MEMFFT_STREAM_BUDGET / 32 MiB)")
+                .arg_default("threads", "0", "FFT data-parallel threads (0 = all cores)")
+                .arg_default("tile", "0", "memtier cache tile, complex elems (0 = auto)")
+                .flag("check", "recompute in memory and diff bit-for-bit"),
+        )
 }
 
 fn main() {
@@ -75,6 +88,7 @@ fn main() {
         Some("ablation") => cmd_ablation(),
         Some("sim") => cmd_sim(),
         Some("sar") => cmd_sar(&parsed),
+        Some("stream") => cmd_stream(&parsed),
         _ => {
             println!("{}", cli().usage());
             Ok(())
@@ -228,6 +242,142 @@ fn cmd_sim() -> CmdResult {
             );
         }
     }
+    Ok(())
+}
+
+fn cmd_stream(args: &memfft::cli::Args) -> CmdResult {
+    use memfft::coordinator::StreamProcessor;
+    use memfft::stream::{FileDataset, FileIo, FileSink};
+
+    let input = args
+        .get("input")
+        .filter(|p| !p.is_empty())
+        .ok_or("stream: --input <path> is required")?
+        .to_string();
+    let output = args
+        .get("output")
+        .filter(|p| !p.is_empty())
+        .ok_or("stream: --output <path> is required")?
+        .to_string();
+    // The sink truncates its target on create — refuse in-place streaming
+    // before any file is opened (string match plus resolved paths, so a
+    // symlinked output cannot sneak through and destroy the input).
+    let same_file = input == output
+        || matches!(
+            (std::fs::canonicalize(&input), std::fs::canonicalize(&output)),
+            (Ok(a), Ok(b)) if a == b
+        );
+    if same_file {
+        return Err("stream: --output must differ from --input (creating the sink truncates its target)".into());
+    }
+    let op = args.get_or("op", "fft").to_string();
+    let cfg = ServiceConfig {
+        method: args.get_or("method", "native").to_string(),
+        threads: args.get_usize("threads", 0)?,
+        cache_tile: args.get_usize("tile", 0)?,
+        stream_budget: args.get_usize("budget", 0)?,
+        ..ServiceConfig::default()
+    };
+    cfg.validate()?;
+
+    let mut src = FileDataset::open(&input)?;
+    let dims = src.dims();
+    let mut proc = StreamProcessor::from_config(&cfg);
+    println!(
+        "streaming {}x{} dataset ({:.1} MiB) op={op} backend={} budget={}",
+        dims.rows,
+        dims.cols,
+        dims.payload_bytes()? as f64 / (1 << 20) as f64,
+        proc.backend_name(),
+        if cfg.stream_budget == 0 { "auto".to_string() } else { cfg.stream_budget.to_string() },
+    );
+
+    let direction = match op.as_str() {
+        "fft" => Some(Direction::Forward),
+        "ifft" => Some(Direction::Inverse),
+        "sar" => None,
+        other => return Err(format!("stream: unknown op '{other}' (fft | ifft | sar)").into()),
+    };
+    let report = match direction {
+        Some(direction) => {
+            let mut sink = FileSink::create(&output, dims)?;
+            proc.transform(&mut src, &mut sink, direction)?
+        }
+        None => {
+            let mut io = FileIo::create(&output, dims)?;
+            let focus = proc.sar(&mut src, &mut io)?;
+            println!("sar: {} azimuth strips", focus.strips);
+            focus.report
+        }
+    };
+    println!("{}", report.summary());
+    println!("{}", proc.metrics().report());
+
+    if args.flag("check") {
+        check_streamed(&cfg, &input, &output, &op)?;
+    }
+    Ok(())
+}
+
+/// `--check`: load both datasets fully, recompute in memory, and require
+/// bit-for-bit equality with the streamed output.
+fn check_streamed(cfg: &ServiceConfig, input: &str, output: &str, op: &str) -> CmdResult {
+    use memfft::coordinator::backend;
+    use memfft::stream::{bitwise_mismatches, read_dataset, transform_in_memory};
+    use memfft::C32;
+
+    // --check only makes sense for methods that are bit-compatible with
+    // the in-memory reference: the SAR reference is always the native
+    // Auto-plan path (so memtier/pjrt streams would mis-diagnose), and
+    // PJRT artifact numerics vary with the batch variant, so chunked vs
+    // one-shot would differ even for fft/ifft. Fail rather than silently
+    // skip: a caller that asked for --check must never see exit 0 without
+    // bits actually being compared.
+    let verifiable = match op {
+        "sar" => matches!(cfg.method.as_str(), "native" | "modeled"),
+        _ => matches!(cfg.method.as_str(), "native" | "modeled" | "memtier"),
+    };
+    if !verifiable {
+        return Err(format!(
+            "check: --op {op} --method {} is not bit-comparable to the in-memory reference — \
+             drop --check or use a native-library method",
+            cfg.method
+        )
+        .into());
+    }
+    let (dims, data) = read_dataset(input)?;
+    let (odims, got) = read_dataset(output)?;
+    if odims != dims {
+        return Err(format!(
+            "check: output is {}x{}, input is {}x{}",
+            odims.rows, odims.cols, dims.rows, dims.cols
+        )
+        .into());
+    }
+    // The reference must plan under the same memtier tile the streamed
+    // run was scoped to (threads/budget need no scoping: results are
+    // thread-count-invariant and budget only affects chunking).
+    let expect: Vec<C32> = memfft::config::cache::with_tile(cfg.cache_tile, || {
+        Ok::<_, Box<dyn std::error::Error>>(match op {
+            "sar" if dims.rows == 0 => Vec::new(),
+            "sar" => memfft::sar::process(&data, dims.rows, dims.cols)?.image,
+            _ => {
+                let direction =
+                    if op == "ifft" { Direction::Inverse } else { Direction::Forward };
+                let mut reference = backend::for_config(cfg);
+                transform_in_memory(&mut *reference, dims, &data, direction)?
+            }
+        })
+    })?;
+    let mismatches = bitwise_mismatches(&expect, &got);
+    if mismatches > 0 {
+        return Err(format!(
+            "check FAILED: {mismatches} of {} elements differ from the in-memory reference",
+            expect.len()
+        )
+        .into());
+    }
+    println!("check ok: streamed output is bit-for-bit equal to the in-memory reference");
     Ok(())
 }
 

@@ -235,6 +235,16 @@ pub struct ServiceMetrics {
     pub queue_latency: LatencyHistogram,
     pub exec_latency: LatencyHistogram,
     pub e2e_latency: LatencyHistogram,
+    /// Out-of-core pipeline (`crate::stream`): chunks / rows streamed and
+    /// per-chunk stage latencies. Read, compute and write run on
+    /// different threads, so comparing the three histograms shows whether
+    /// IO actually hid behind compute (the overlap the paper's §3
+    /// transfer/execution pipelining is after).
+    pub stream_chunks: Counter,
+    pub stream_rows: Counter,
+    pub stream_read: LatencyHistogram,
+    pub stream_compute: LatencyHistogram,
+    pub stream_write: LatencyHistogram,
 }
 
 impl ServiceMetrics {
@@ -267,12 +277,39 @@ impl ServiceMetrics {
             self.plan_cache_hits.get(),
             self.plan_cache_misses.get()
         ));
+        // The table cache is process-global by design (DESIGN.md §7), so
+        // this line reports process-wide sharing, not per-service activity.
+        let tables = crate::fft::table_stats();
+        s.push_str(&format!(
+            "table-cache (process-wide): {} hits / {} misses ({} entries, {:.0}% hit rate)\n",
+            tables.hits,
+            tables.misses,
+            tables.entries,
+            if tables.hits + tables.misses == 0 {
+                0.0
+            } else {
+                100.0 * tables.hits as f64 / (tables.hits + tables.misses) as f64
+            }
+        ));
         s.push_str(&self.queue_latency.summary("queue"));
         s.push('\n');
         s.push_str(&self.exec_latency.summary("exec"));
         s.push('\n');
         s.push_str(&self.e2e_latency.summary("e2e"));
         s.push('\n');
+        if self.stream_chunks.get() > 0 {
+            s.push_str(&format!(
+                "stream: {} chunks / {} rows\n",
+                self.stream_chunks.get(),
+                self.stream_rows.get()
+            ));
+            s.push_str(&self.stream_read.summary("stream-read"));
+            s.push('\n');
+            s.push_str(&self.stream_compute.summary("stream-compute"));
+            s.push('\n');
+            s.push_str(&self.stream_write.summary("stream-write"));
+            s.push('\n');
+        }
         s
     }
 }
@@ -359,6 +396,17 @@ mod tests {
         m.batches_executed.inc();
         m.batch_fill.add(7);
         assert_eq!(m.mean_batch_fill(), 7.0);
-        assert!(m.report().contains("mean fill 7.00"));
+        let report = m.report();
+        assert!(report.contains("mean fill 7.00"));
+        // The table cache (fft::memtier) is always surfaced…
+        assert!(report.contains("table-cache (process-wide):"));
+        // …but the stream section only appears once chunks streamed.
+        assert!(!report.contains("stream-read"));
+        m.stream_chunks.inc();
+        m.stream_rows.add(42);
+        m.stream_read.record(Duration::from_micros(10));
+        let report = m.report();
+        assert!(report.contains("stream: 1 chunks / 42 rows"));
+        assert!(report.contains("stream-read"));
     }
 }

@@ -2,14 +2,20 @@
 //!
 //! `chirp` builds LFM pulses and matched filters, `scene` synthesizes
 //! point-target raw echoes (replacing unavailable airborne data), and
-//! `rda` is the range–Doppler processor with focusing-quality metrics.
-//! The AOT path (same math through the `sar_*` artifacts) is exercised by
-//! `examples/sar_imaging.rs` and `benches/sar.rs`.
+//! `rda` is the range–Doppler processor with focusing-quality metrics —
+//! in-memory ([`process`] / [`process_cpu`]) or out-of-core
+//! ([`process_streamed`], azimuth lines arriving chunk-by-chunk through
+//! `crate::stream`). The AOT path (same math through the `sar_*`
+//! artifacts) is exercised by `examples/sar_imaging.rs` and
+//! `benches/sar.rs`.
 
 pub mod chirp;
 pub mod rda;
 pub mod scene;
 
 pub use chirp::{compress, lfm_chirp, matched_filter};
-pub use rda::{filters, locate_targets, measure, process_cpu, Focused, ImageMetrics};
+pub use rda::{
+    filters, locate_targets, measure, process, process_cpu, process_streamed, Focused,
+    ImageMetrics, StreamedFocus,
+};
 pub use scene::{PointTarget, Scene};

@@ -1,17 +1,35 @@
 //! Range–Doppler processor + image quality metrics.
 //!
-//! Two execution paths over identical math:
-//! - [`process_cpu`]: the in-process Rust FFT library (baseline / oracle);
+//! Three execution paths over identical math:
+//! - [`process`] / [`process_cpu`]: in-memory, on the fallible
+//!   [`Transform`](crate::fft::Transform) API (`process_cpu` is the
+//!   panicking sugar the examples use);
+//! - [`process_streamed`]: out-of-core — azimuth lines arrive
+//!   chunk-by-chunk through the `crate::stream` pipeline and the focused
+//!   scene is assembled in a [`SliceIo`] store, with peak memory bounded
+//!   by the stream budget instead of the scene size;
 //! - the AOT path: `examples/sar_imaging.rs` feeds the same filters to the
 //!   `sar_fourstep_*` artifact through `runtime::Engine::run_sar`.
 //!
 //! Pipeline (no RCMC — targets near swath centre, see DESIGN.md):
 //!   range:   per azimuth line,  IFFT( FFT(line) · Hr )
 //!   azimuth: per range column,  IFFT( FFT(col)  · Ha )
+//!
+//! All three paths perform the same per-element arithmetic (the same
+//! resolved `Algorithm::Auto` plans, the same complex multiply), so the
+//! streamed output is **bit-for-bit equal** to [`process_cpu`] for any
+//! chunk budget and thread count — asserted in `rust/tests/stream.rs`.
+
+use std::sync::Mutex;
+use std::time::Instant;
 
 use super::chirp::matched_filter;
 use super::scene::Scene;
+use crate::coordinator::{Backend, BatchSpec, Direction};
 use crate::fft::plan::{Algorithm, FftPlan};
+use crate::fft::{scratch, FftError, Transform};
+use crate::metrics::ServiceMetrics;
+use crate::stream::{self, ChunkPlan, ChunkSource, PipelineReport, SliceIo, StreamError};
 use crate::util::complex::C32;
 use crate::util::pool;
 
@@ -27,41 +45,248 @@ pub fn filters(naz: usize, nr: usize) -> (Vec<C32>, Vec<C32>) {
     (matched_filter(nr), matched_filter(naz))
 }
 
-/// CPU range–Doppler processing of a raw echo matrix (row-major [naz, nr]).
-pub fn process_cpu(raw: &[C32], naz: usize, nr: usize) -> Focused {
-    assert_eq!(raw.len(), naz * nr);
+/// Fallible range–Doppler processing of a raw echo matrix (row-major
+/// [naz, nr]) — the `Transform`-API path: plans via `try_new`, execution
+/// via `forward_inplace` / `inverse_inplace` with explicitly owned
+/// scratch, bad dimensions surfacing as [`FftError`] instead of tearing
+/// the caller down.
+pub fn process(raw: &[C32], naz: usize, nr: usize) -> Result<Focused, FftError> {
+    if naz == 0 || nr == 0 {
+        return Err(FftError::ZeroSize);
+    }
+    let expected = naz.checked_mul(nr).ok_or(FftError::Overflow { n: nr, batch: naz })?;
+    if raw.len() != expected {
+        return Err(FftError::SizeMismatch { expected, got: raw.len() });
+    }
     let (rfilt, afilt) = filters(naz, nr);
-    let range_plan = FftPlan::new(nr, Algorithm::Auto);
-    let az_plan = FftPlan::new(naz, Algorithm::Auto);
+    let range_plan = FftPlan::try_new(nr, Algorithm::Auto)?;
+    let az_plan = FftPlan::try_new(naz, Algorithm::Auto)?;
 
     let mut img = raw.to_vec();
     // Range compression, row-parallel over azimuth lines (each line's
-    // FFT·filter·IFFT is independent; per-thread scratch inside the plan
-    // calls keeps the output bit-identical to the serial loop).
-    pool::for_each_chunk(&mut img, nr, |_, lines| {
-        for row in lines.chunks_exact_mut(nr) {
-            range_plan.forward(row);
-            for (v, h) in row.iter_mut().zip(&rfilt) {
-                *v *= *h;
-            }
-            range_plan.inverse(row);
-        }
-    });
+    // FFT·filter·IFFT is independent; per-thread scratch keeps the output
+    // bit-identical to the serial loop).
+    compress_rows(&mut img, nr, &range_plan, &rfilt)?;
     // Azimuth compression, column-wise (via transpose), parallel over
     // range columns.
     let mut t = vec![C32::ZERO; naz * nr];
     crate::fft::fourstep::transpose(&img, &mut t, naz, nr);
-    pool::for_each_chunk(&mut t, naz, |_, cols| {
-        for col in cols.chunks_exact_mut(naz) {
-            az_plan.forward(col);
-            for (v, h) in col.iter_mut().zip(&afilt) {
-                *v *= *h;
-            }
-            az_plan.inverse(col);
-        }
-    });
+    compress_rows(&mut t, naz, &az_plan, &afilt)?;
     crate::fft::fourstep::transpose(&t, &mut img, nr, naz);
-    Focused { naz, nr, image: img }
+    Ok(Focused { naz, nr, image: img })
+}
+
+/// Panicking convenience over [`process`] (examples / demos; request
+/// paths should call `process` and handle the `Result`).
+pub fn process_cpu(raw: &[C32], naz: usize, nr: usize) -> Focused {
+    process(raw, naz, nr)
+        .unwrap_or_else(|e| panic!("sar::process_cpu({naz}x{nr}, {} elems): {e}", raw.len()))
+}
+
+/// Matched-filter every `n`-point row of `data` in place:
+/// IFFT(FFT(row) · filt), fanned out over the worker pool with per-thread
+/// scratch. First error wins (stable regardless of chunk scheduling).
+fn compress_rows(
+    data: &mut [C32],
+    n: usize,
+    plan: &FftPlan,
+    filt: &[C32],
+) -> Result<(), FftError> {
+    let first_err = Mutex::new(None);
+    pool::for_each_chunk(data, n, |_, rows| {
+        scratch::with_scratch(Transform::scratch_len(plan), |s| {
+            for row in rows.chunks_exact_mut(n) {
+                if let Err(e) = compress_row(plan, filt, row, s) {
+                    let mut slot = first_err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                    return;
+                }
+            }
+        });
+    });
+    match first_err.into_inner().unwrap() {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// One matched-filtered row: FFT, pointwise filter, IFFT — the fallible
+/// `Transform` face with caller scratch.
+fn compress_row(
+    plan: &FftPlan,
+    filt: &[C32],
+    row: &mut [C32],
+    scratch: &mut [C32],
+) -> Result<(), FftError> {
+    plan.forward_inplace(row, scratch)?;
+    for (v, h) in row.iter_mut().zip(filt) {
+        *v *= *h;
+    }
+    plan.inverse_inplace(row, scratch)
+}
+
+/// What a streamed focusing run did: the stage-A pipeline report with
+/// stage-B (azimuth strip) busy time folded in, plus the strip count.
+#[derive(Debug, Clone)]
+pub struct StreamedFocus {
+    pub report: PipelineReport,
+    /// Azimuth column strips processed in stage B.
+    pub strips: usize,
+}
+
+/// Out-of-core range–Doppler focusing: azimuth lines arrive
+/// chunk-by-chunk from `source`, and the focused scene is assembled in
+/// `out` without the matrix ever being resident.
+///
+/// Two stages, both through `Backend::execute_batch`:
+///
+/// 1. **Range compression (streamed).** The prefetch/compute/writeback
+///    pipeline runs each chunk of azimuth lines through
+///    FFT·Hr·IFFT and writes the compressed rows straight into `out` —
+///    which doubles as the working store, so no separate intermediate
+///    exists.
+/// 2. **Azimuth compression (strided strips).** Column strips sized to
+///    the same budget are gathered from `out` (naz strided spans),
+///    FFT·Ha·IFFT'd as one `n = naz` batch, and scattered back in place.
+///
+/// Peak memory is O(budget) for both stages. Per-element arithmetic is
+/// identical to [`process_cpu`] (same `Auto` plans through a native
+/// backend, same multiply), so the result is bit-for-bit equal to the
+/// in-memory path for any budget / thread count.
+pub fn process_streamed(
+    source: &mut dyn ChunkSource,
+    out: &mut dyn SliceIo,
+    backend: &mut dyn Backend,
+    budget: usize,
+    metrics: Option<&ServiceMetrics>,
+) -> Result<StreamedFocus, StreamError> {
+    let dims = source.dims();
+    let (naz, nr) = (dims.rows, dims.cols);
+    if out.dims() != dims {
+        return Err(StreamError::Format(format!(
+            "output is {}x{}, scene is {naz}x{nr}",
+            out.dims().rows,
+            out.dims().cols
+        )));
+    }
+    if naz == 0 {
+        return Ok(StreamedFocus { report: PipelineReport::default(), strips: 0 });
+    }
+    if nr == 0 {
+        return Err(StreamError::Format("scene rows have zero range samples".into()));
+    }
+    let budget = if budget == 0 { stream::budget_bytes() } else { budget };
+    let started = Instant::now();
+
+    let (rfilt, afilt) = filters(naz, nr);
+    let (rf_re, rf_im) = planar_filter(&rfilt);
+    let (af_re, af_im) = planar_filter(&afilt);
+
+    // Stage A: streamed range compression, written in place into `out`.
+    let plan = ChunkPlan::new(naz, nr, budget);
+    let out_ref = &mut *out;
+    let mut report = {
+        let mut rowbuf: Vec<C32> = Vec::new();
+        stream::run_chunks(
+            source,
+            &plan,
+            metrics,
+            |meta, re, im| {
+                let fwd = BatchSpec { n: nr, batch: meta.rows, direction: Direction::Forward };
+                let f = backend.execute_batch(&fwd, &re, &im)?;
+                let (mut fre, mut fim) = (f.re, f.im);
+                multiply_rows(&mut fre, &mut fim, &rf_re, &rf_im);
+                let inv = BatchSpec { n: nr, batch: meta.rows, direction: Direction::Inverse };
+                let g = backend.execute_batch(&inv, &fre, &fim)?;
+                Ok((g.re, g.im))
+            },
+            move |meta, re, im| {
+                rowbuf.clear();
+                rowbuf.extend(re.iter().zip(im).map(|(&a, &b)| C32::new(a, b)));
+                out_ref.write_span(meta.row0 * nr, &rowbuf)
+            },
+        )?
+    };
+
+    // Stage B: azimuth compression over column strips. A strip of `w`
+    // columns is gathered transposed (each column becomes one contiguous
+    // `naz`-point batch row — the same layout `process` reaches via its
+    // full transpose), compressed, and scattered back.
+    let strip_w = (budget / (naz * stream::ELEM_BYTES)).clamp(1, nr);
+    let mut col_re = vec![0f32; strip_w * naz];
+    let mut col_im = vec![0f32; strip_w * naz];
+    let mut seg = vec![C32::ZERO; strip_w];
+    let mut strips = 0usize;
+    let mut c0 = 0usize;
+    while c0 < nr {
+        let w = strip_w.min(nr - c0);
+        let t = Instant::now();
+        for j in 0..naz {
+            out.read_span(j * nr + c0, &mut seg[..w])?;
+            for (c, s) in seg[..w].iter().enumerate() {
+                col_re[c * naz + j] = s.re;
+                col_im[c * naz + j] = s.im;
+            }
+        }
+        let gather = t.elapsed();
+
+        let t = Instant::now();
+        let fwd = BatchSpec { n: naz, batch: w, direction: Direction::Forward };
+        let f = backend.execute_batch(&fwd, &col_re[..w * naz], &col_im[..w * naz])?;
+        let (mut fre, mut fim) = (f.re, f.im);
+        multiply_rows(&mut fre, &mut fim, &af_re, &af_im);
+        let inv = BatchSpec { n: naz, batch: w, direction: Direction::Inverse };
+        let g = backend.execute_batch(&inv, &fre, &fim)?;
+        let compute = t.elapsed();
+
+        let t = Instant::now();
+        for j in 0..naz {
+            for (c, s) in seg[..w].iter_mut().enumerate() {
+                *s = C32::new(g.re[c * naz + j], g.im[c * naz + j]);
+            }
+            out.write_span(j * nr + c0, &seg[..w])?;
+        }
+        let scatter = t.elapsed();
+
+        // Strip stage timings land in the same per-stage histograms, but
+        // stream_chunks/stream_rows stay stage-A row accounting — the
+        // counters and the PipelineReport agree; strips are reported
+        // separately via `StreamedFocus::strips`.
+        if let Some(m) = metrics {
+            m.stream_read.record(gather);
+            m.stream_compute.record(compute);
+            m.stream_write.record(scatter);
+        }
+        report.read_busy += gather;
+        report.compute_busy += compute;
+        report.write_busy += scatter;
+        strips += 1;
+        c0 += w;
+    }
+
+    report.wall = started.elapsed();
+    Ok(StreamedFocus { report, strips })
+}
+
+/// Split a filter into planar planes for the `Backend` wire format.
+fn planar_filter(filt: &[C32]) -> (Vec<f32>, Vec<f32>) {
+    (filt.iter().map(|c| c.re).collect(), filt.iter().map(|c| c.im).collect())
+}
+
+/// Pointwise multiply every `filt`-length row of the planar planes by the
+/// filter, with exactly the complex-multiply expression `C32: Mul` uses —
+/// the streamed paths stay bit-for-bit equal to the in-memory `*v *= *h`.
+fn multiply_rows(re: &mut [f32], im: &mut [f32], f_re: &[f32], f_im: &[f32]) {
+    let n = f_re.len();
+    for (row_re, row_im) in re.chunks_exact_mut(n).zip(im.chunks_exact_mut(n)) {
+        for (k, (a, b)) in row_re.iter_mut().zip(row_im.iter_mut()).enumerate() {
+            let (va, vb) = (*a, *b);
+            *a = va * f_re[k] - vb * f_im[k];
+            *b = va * f_im[k] + vb * f_re[k];
+        }
+    }
 }
 
 /// Image-quality metrics for focused point targets.
@@ -188,5 +413,54 @@ mod tests {
             "compressed point should concentrate energy, got {}",
             m.mainlobe_energy_ratio
         );
+    }
+
+    #[test]
+    fn process_rejects_bad_dims_fallibly() {
+        assert_eq!(process(&[], 0, 16).unwrap_err(), FftError::ZeroSize);
+        assert_eq!(process(&[], 16, 0).unwrap_err(), FftError::ZeroSize);
+        assert_eq!(
+            process(&[C32::ZERO; 10], 4, 4).unwrap_err(),
+            FftError::SizeMismatch { expected: 16, got: 10 }
+        );
+    }
+
+    /// Independent oracle: the pre-refactor computation, written out the
+    /// way the legacy `process_cpu` did it — serial per-row loops on the
+    /// panicking plan sugar, fresh thread-local scratch every call. Pins
+    /// the Transform-API rewrite (chunked rows, reused explicit scratch)
+    /// to the exact bits of the original implementation.
+    fn legacy_reference(raw: &[C32], naz: usize, nr: usize) -> Vec<C32> {
+        let (rfilt, afilt) = filters(naz, nr);
+        let range_plan = FftPlan::new(nr, Algorithm::Auto);
+        let az_plan = FftPlan::new(naz, Algorithm::Auto);
+        let mut img = raw.to_vec();
+        for row in img.chunks_exact_mut(nr) {
+            range_plan.forward(row);
+            for (v, h) in row.iter_mut().zip(&rfilt) {
+                *v *= *h;
+            }
+            range_plan.inverse(row);
+        }
+        let mut t = vec![C32::ZERO; naz * nr];
+        crate::fft::fourstep::transpose(&img, &mut t, naz, nr);
+        for col in t.chunks_exact_mut(naz) {
+            az_plan.forward(col);
+            for (v, h) in col.iter_mut().zip(&afilt) {
+                *v *= *h;
+            }
+            az_plan.inverse(col);
+        }
+        crate::fft::fourstep::transpose(&t, &mut img, nr, naz);
+        img
+    }
+
+    #[test]
+    fn process_matches_legacy_computation_bitwise() {
+        let scene = Scene::demo(16, 32);
+        let raw = scene.raw_echo(9);
+        let got = process(&raw, 16, 32).unwrap();
+        let expect = legacy_reference(&raw, 16, 32);
+        assert_eq!(got.image, expect, "Transform-API rewrite must not change a bit");
     }
 }

@@ -1,0 +1,206 @@
+//! Size-adaptive chunk partitioning and the stream-budget knob.
+//!
+//! The paper "divide[s] the data into parts reasonably according to the
+//! size of data" so transfers overlap execution (§2.3.2); [`ChunkPlan`] is
+//! that rule at dataset scale: chunk whole transform rows so one chunk's
+//! payload stays within the *budget* — the slow-tier transfer unit the
+//! operator is willing to hold in flight. A transform row is never split
+//! (a row is the indivisible unit of work, like the paper's single FFT);
+//! when even one row exceeds the budget, the chunk is exactly one row and
+//! the memory story continues *inside* the kernel, where `fft::memtier`
+//! re-partitions the row into cache tiles (DESIGN.md §7) — budget governs
+//! the disk↔RAM tier, tile governs RAM↔cache.
+//!
+//! Budget resolution mirrors `threads` (`util::pool`) and `cache.tile`
+//! (`config::cache`), most-specific first:
+//!
+//! 1. [`with_budget`] — thread-local override (how the `stream.budget`
+//!    service knob is scoped by `coordinator::StreamProcessor`);
+//! 2. [`set_budget`] — process-global knob for embedders;
+//! 3. `MEMFFT_STREAM_BUDGET` — environment (bytes), read once;
+//! 4. [`DEFAULT_BUDGET_BYTES`] — 32 MiB.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::util::div_ceil;
+
+/// Bytes per complex<f32> element (the wire format everywhere).
+pub const ELEM_BYTES: usize = 8;
+
+/// Default per-chunk budget: 32 MiB — large enough that chunk overheads
+/// vanish, small enough that the pipeline's ~4-chunk working set stays
+/// comfortably in RAM on any host.
+pub const DEFAULT_BUDGET_BYTES: usize = 32 << 20;
+
+/// Process-global budget knob; 0 = unset (fall through to env / default).
+static GLOBAL_BUDGET: AtomicUsize = AtomicUsize::new(0);
+/// `MEMFFT_STREAM_BUDGET` (bytes), parsed once.
+static ENV_BUDGET: OnceLock<Option<usize>> = OnceLock::new();
+
+thread_local! {
+    /// Per-thread override installed by [`with_budget`]; 0 = unset.
+    static LOCAL_BUDGET: Cell<usize> = const { Cell::new(0) };
+}
+
+fn env_budget() -> Option<usize> {
+    *ENV_BUDGET.get_or_init(|| {
+        std::env::var("MEMFFT_STREAM_BUDGET")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+    })
+}
+
+/// Set the process-wide chunk budget in bytes; `0` resets to automatic
+/// (env / default).
+pub fn set_budget(bytes: usize) {
+    GLOBAL_BUDGET.store(bytes, Ordering::Relaxed);
+}
+
+/// Run `f` with a thread-local budget override (restored on exit,
+/// including on panic). `bytes = 0` installs no override, so an unset
+/// `stream.budget` knob falls through cleanly.
+pub fn with_budget<R>(bytes: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_BUDGET.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(LOCAL_BUDGET.with(|c| c.replace(bytes)));
+    f()
+}
+
+/// Effective chunk budget in bytes for plans built on this thread.
+pub fn budget_bytes() -> usize {
+    let local = LOCAL_BUDGET.with(|c| c.get());
+    if local != 0 {
+        return local;
+    }
+    let global = GLOBAL_BUDGET.load(Ordering::Relaxed);
+    if global != 0 {
+        return global;
+    }
+    env_budget().unwrap_or(DEFAULT_BUDGET_BYTES)
+}
+
+/// One chunk of a partitioned dataset: whole rows `[row0, row0 + rows)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkSpec {
+    pub index: usize,
+    pub row0: usize,
+    pub rows: usize,
+}
+
+/// Row partition of a `rows × cols` dataset under a byte budget.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkPlan {
+    rows: usize,
+    cols: usize,
+    rows_per_chunk: usize,
+}
+
+impl ChunkPlan {
+    /// Partition `rows` transform rows of `cols` complex points so each
+    /// chunk's payload is ≤ `budget` bytes, floored at one whole row.
+    /// `budget = 0` resolves through [`budget_bytes`]. `cols` must be
+    /// nonzero unless the dataset is empty.
+    pub fn new(rows: usize, cols: usize, budget: usize) -> Self {
+        let budget = if budget == 0 { budget_bytes() } else { budget };
+        let row_bytes = cols.saturating_mul(ELEM_BYTES).max(1);
+        let rows_per_chunk = (budget / row_bytes).clamp(1, rows.max(1));
+        Self { rows, cols, rows_per_chunk }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Rows in every chunk except possibly the last.
+    pub fn rows_per_chunk(&self) -> usize {
+        self.rows_per_chunk
+    }
+
+    /// Number of chunks (0 for an empty dataset).
+    pub fn chunks(&self) -> usize {
+        div_ceil(self.rows, self.rows_per_chunk)
+    }
+
+    /// Payload bytes of a full chunk (the last may be smaller).
+    pub fn chunk_bytes(&self) -> usize {
+        self.rows_per_chunk * self.cols * ELEM_BYTES
+    }
+
+    /// The `i`-th chunk (`i < chunks()`); the last chunk carries the
+    /// non-divisible remainder.
+    pub fn spec(&self, i: usize) -> ChunkSpec {
+        debug_assert!(i < self.chunks());
+        let row0 = i * self.rows_per_chunk;
+        ChunkSpec { index: i, row0, rows: self.rows_per_chunk.min(self.rows - row0) }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = ChunkSpec> + '_ {
+        (0..self.chunks()).map(|i| self.spec(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_splits_a_row() {
+        // Budget smaller than one row: chunks are exactly one row.
+        let p = ChunkPlan::new(5, 1024, 16);
+        assert_eq!(p.rows_per_chunk(), 1);
+        assert_eq!(p.chunks(), 5);
+        assert_eq!(p.chunk_bytes(), 1024 * ELEM_BYTES);
+    }
+
+    #[test]
+    fn covers_all_rows_with_nondivisible_tail() {
+        // 3-row chunks over 7 rows: 3 + 3 + 1.
+        let p = ChunkPlan::new(7, 16, 3 * 16 * ELEM_BYTES);
+        assert_eq!(p.rows_per_chunk(), 3);
+        let specs: Vec<_> = p.iter().collect();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[2], ChunkSpec { index: 2, row0: 6, rows: 1 });
+        let total: usize = specs.iter().map(|s| s.rows).sum();
+        assert_eq!(total, 7);
+        // Contiguous, in order.
+        for w in specs.windows(2) {
+            assert_eq!(w[0].row0 + w[0].rows, w[1].row0);
+        }
+    }
+
+    #[test]
+    fn big_budget_is_one_chunk_and_empty_is_zero() {
+        let p = ChunkPlan::new(9, 8, usize::MAX / 2);
+        assert_eq!(p.chunks(), 1);
+        assert_eq!(p.spec(0).rows, 9);
+        let empty = ChunkPlan::new(0, 8, 1024);
+        assert_eq!(empty.chunks(), 0);
+    }
+
+    #[test]
+    fn budget_resolution_most_specific_first() {
+        let base = budget_bytes();
+        with_budget(4096, || {
+            assert_eq!(budget_bytes(), 4096);
+            with_budget(128, || assert_eq!(budget_bytes(), 128));
+            assert_eq!(budget_bytes(), 4096);
+            // 0 = no local override: falls through to global/env/default.
+            with_budget(0, || assert!(budget_bytes() >= 1));
+            // Plans resolve through the ladder when budget = 0.
+            let p = ChunkPlan::new(10, 64, 0);
+            assert_eq!(p.rows_per_chunk(), (4096 / (64 * ELEM_BYTES)).clamp(1, 10));
+        });
+        assert_eq!(budget_bytes(), base);
+    }
+}

@@ -1,0 +1,330 @@
+//! The `.mfft` dataset container and sequential chunk readers.
+//!
+//! Wire format (little-endian, the same `f32[..., 2]` interleaved (re, im)
+//! convention as the HLO boundary — see `util::complex`):
+//!
+//! ```text
+//! offset 0   4 bytes  magic  "MFFT"
+//! offset 4   4 bytes  u32    version (= 1)
+//! offset 8   8 bytes  u64    rows  (transforms)
+//! offset 16  8 bytes  u64    cols  (points per transform row)
+//! offset 24  ...      rows × cols × (f32 re, f32 im)
+//! ```
+//!
+//! Readers hand out **whole rows** in planar (re, im) planes — the
+//! `Backend::execute_batch` wire shape — so a chunk is directly a
+//! size-homogeneous batch. [`FileDataset`] streams from disk through one
+//! reused byte buffer (no per-chunk reallocation in steady state);
+//! [`MemDataset`] is the in-memory variant the equivalence tests use.
+
+use std::fs::File;
+use std::io::{BufReader, Read};
+use std::path::Path;
+
+use super::StreamError;
+use crate::util::complex::C32;
+
+pub(crate) const MAGIC: [u8; 4] = *b"MFFT";
+pub(crate) const VERSION: u32 = 1;
+/// Header length in bytes.
+pub(crate) const HEADER_BYTES: usize = 24;
+
+/// Dataset dimensions: `rows` independent transform rows of `cols`
+/// complex points each.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dims {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Dims {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols }
+    }
+
+    /// Total complex elements (`rows * cols`); errors on overflow.
+    pub fn elems(&self) -> Result<usize, StreamError> {
+        self.rows.checked_mul(self.cols).ok_or_else(|| {
+            StreamError::Format(format!("{} x {} overflows usize", self.rows, self.cols))
+        })
+    }
+
+    /// Payload bytes (8 per complex element).
+    pub fn payload_bytes(&self) -> Result<usize, StreamError> {
+        self.elems()?.checked_mul(super::ELEM_BYTES).ok_or_else(|| {
+            StreamError::Format(format!("{} x {} bytes overflows usize", self.rows, self.cols))
+        })
+    }
+
+    pub(crate) fn encode(&self) -> [u8; HEADER_BYTES] {
+        let mut h = [0u8; HEADER_BYTES];
+        h[0..4].copy_from_slice(&MAGIC);
+        h[4..8].copy_from_slice(&VERSION.to_le_bytes());
+        h[8..16].copy_from_slice(&(self.rows as u64).to_le_bytes());
+        h[16..24].copy_from_slice(&(self.cols as u64).to_le_bytes());
+        h
+    }
+
+    pub(crate) fn decode(h: &[u8; HEADER_BYTES]) -> Result<Self, StreamError> {
+        if h[0..4] != MAGIC {
+            return Err(StreamError::Format(format!("bad magic {:?} (want \"MFFT\")", &h[0..4])));
+        }
+        let version = u32::from_le_bytes(h[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(StreamError::Format(format!("unsupported version {version}")));
+        }
+        let rows = u64::from_le_bytes(h[8..16].try_into().unwrap());
+        let cols = u64::from_le_bytes(h[16..24].try_into().unwrap());
+        let rows: usize = rows
+            .try_into()
+            .map_err(|_| StreamError::Format(format!("rows {rows} exceeds usize")))?;
+        let cols: usize = cols
+            .try_into()
+            .map_err(|_| StreamError::Format(format!("cols {cols} exceeds usize")))?;
+        let dims = Self { rows, cols };
+        dims.payload_bytes()?; // reject undressable sizes up front
+        Ok(dims)
+    }
+}
+
+/// Sequential reader of whole transform rows as planar (re, im) planes.
+/// `Send` is a supertrait: the pipeline's prefetch runs the source on a
+/// dedicated reader thread.
+pub trait ChunkSource: Send {
+    fn dims(&self) -> Dims;
+
+    /// Read exactly `rows` further rows, replacing the contents of `re` /
+    /// `im` with `rows * cols` planar f32s each. The pipeline never asks
+    /// past the header's row count; a source that runs out early must
+    /// return `Format` ("truncated"), not short data.
+    fn read_rows(
+        &mut self,
+        rows: usize,
+        re: &mut Vec<f32>,
+        im: &mut Vec<f32>,
+    ) -> Result<(), StreamError>;
+}
+
+/// File-backed dataset: buffered sequential reads, one reused byte
+/// buffer, interleaved→planar conversion on the reader thread (so the
+/// compute thread never touches the wire format).
+pub struct FileDataset {
+    reader: BufReader<File>,
+    dims: Dims,
+    /// Reused raw chunk buffer.
+    buf: Vec<u8>,
+}
+
+impl FileDataset {
+    pub fn open(path: impl AsRef<Path>) -> Result<Self, StreamError> {
+        let file = File::open(path)?;
+        let mut reader = BufReader::new(file);
+        let mut h = [0u8; HEADER_BYTES];
+        reader.read_exact(&mut h).map_err(|e| match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => {
+                StreamError::Format("file shorter than the 24-byte header".into())
+            }
+            _ => StreamError::Io(e),
+        })?;
+        let dims = Dims::decode(&h)?;
+        Ok(Self { reader, dims, buf: Vec::new() })
+    }
+}
+
+impl ChunkSource for FileDataset {
+    fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    fn read_rows(
+        &mut self,
+        rows: usize,
+        re: &mut Vec<f32>,
+        im: &mut Vec<f32>,
+    ) -> Result<(), StreamError> {
+        let elems = rows * self.dims.cols;
+        self.buf.resize(elems * super::ELEM_BYTES, 0);
+        self.reader.read_exact(&mut self.buf).map_err(|e| match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => {
+                StreamError::Format("truncated payload (fewer rows than the header claims)".into())
+            }
+            _ => StreamError::Io(e),
+        })?;
+        deinterleave(&self.buf, re, im);
+        Ok(())
+    }
+}
+
+/// In-memory dataset over an interleaved `C32` matrix — the oracle-side
+/// source for the streamed-vs-in-memory equivalence tests.
+pub struct MemDataset {
+    dims: Dims,
+    data: Vec<C32>,
+    next_row: usize,
+}
+
+impl MemDataset {
+    /// `data` is row-major `[rows][cols]`; panics on a length mismatch
+    /// (test-side constructor, not a request path).
+    pub fn new(rows: usize, cols: usize, data: Vec<C32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "MemDataset: data does not match {rows}x{cols}");
+        Self { dims: Dims::new(rows, cols), data, next_row: 0 }
+    }
+}
+
+impl ChunkSource for MemDataset {
+    fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    fn read_rows(
+        &mut self,
+        rows: usize,
+        re: &mut Vec<f32>,
+        im: &mut Vec<f32>,
+    ) -> Result<(), StreamError> {
+        if self.next_row + rows > self.dims.rows {
+            return Err(StreamError::Format(format!(
+                "read past the end: row {} + {rows} > {}",
+                self.next_row, self.dims.rows
+            )));
+        }
+        let start = self.next_row * self.dims.cols;
+        let src = &self.data[start..start + rows * self.dims.cols];
+        re.clear();
+        im.clear();
+        re.extend(src.iter().map(|c| c.re));
+        im.extend(src.iter().map(|c| c.im));
+        self.next_row += rows;
+        Ok(())
+    }
+}
+
+/// Interleaved little-endian bytes → planar planes (replaces contents).
+pub(crate) fn deinterleave(bytes: &[u8], re: &mut Vec<f32>, im: &mut Vec<f32>) {
+    re.clear();
+    im.clear();
+    re.reserve(bytes.len() / super::ELEM_BYTES);
+    im.reserve(bytes.len() / super::ELEM_BYTES);
+    for pair in bytes.chunks_exact(super::ELEM_BYTES) {
+        re.push(f32::from_le_bytes([pair[0], pair[1], pair[2], pair[3]]));
+        im.push(f32::from_le_bytes([pair[4], pair[5], pair[6], pair[7]]));
+    }
+}
+
+/// Planar planes → interleaved little-endian bytes (replaces contents).
+pub(crate) fn interleave(re: &[f32], im: &[f32], bytes: &mut Vec<u8>) {
+    debug_assert_eq!(re.len(), im.len());
+    bytes.clear();
+    bytes.reserve(re.len() * super::ELEM_BYTES);
+    for (&a, &b) in re.iter().zip(im) {
+        bytes.extend_from_slice(&a.to_le_bytes());
+        bytes.extend_from_slice(&b.to_le_bytes());
+    }
+}
+
+/// `C32` span → interleaved little-endian bytes (replaces contents).
+pub(crate) fn encode_c32(data: &[C32], bytes: &mut Vec<u8>) {
+    bytes.clear();
+    bytes.reserve(data.len() * super::ELEM_BYTES);
+    for c in data {
+        bytes.extend_from_slice(&c.re.to_le_bytes());
+        bytes.extend_from_slice(&c.im.to_le_bytes());
+    }
+}
+
+/// Interleaved little-endian bytes → `C32` slice (must match in length).
+pub(crate) fn decode_c32(bytes: &[u8], out: &mut [C32]) {
+    debug_assert_eq!(bytes.len(), out.len() * super::ELEM_BYTES);
+    for (pair, c) in bytes.chunks_exact(super::ELEM_BYTES).zip(out.iter_mut()) {
+        *c = C32::new(
+            f32::from_le_bytes([pair[0], pair[1], pair[2], pair[3]]),
+            f32::from_le_bytes([pair[4], pair[5], pair[6], pair[7]]),
+        );
+    }
+}
+
+/// Write a whole in-memory matrix as a `.mfft` dataset (examples / CLI /
+/// test fixtures — the streaming paths never materialize the full data).
+pub fn write_dataset(
+    path: impl AsRef<Path>,
+    rows: usize,
+    cols: usize,
+    data: &[C32],
+) -> Result<(), StreamError> {
+    assert_eq!(data.len(), rows * cols, "write_dataset: data does not match {rows}x{cols}");
+    use std::io::Write;
+    let mut w = std::io::BufWriter::new(File::create(path)?);
+    w.write_all(&Dims::new(rows, cols).encode())?;
+    let mut bytes = Vec::new();
+    encode_c32(data, &mut bytes);
+    w.write_all(&bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a whole `.mfft` dataset into memory (the in-memory reference side
+/// of `--check` diffs; refuses nothing, so only call it on datasets known
+/// to fit).
+pub fn read_dataset(path: impl AsRef<Path>) -> Result<(Dims, Vec<C32>), StreamError> {
+    let mut src = FileDataset::open(path)?;
+    let dims = src.dims();
+    let mut re = Vec::new();
+    let mut im = Vec::new();
+    let mut data = vec![C32::ZERO; dims.elems()?];
+    if dims.rows > 0 {
+        src.read_rows(dims.rows, &mut re, &mut im)?;
+        for ((c, &a), &b) in data.iter_mut().zip(&re).zip(&im) {
+            *c = C32::new(a, b);
+        }
+    }
+    Ok((dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let d = Dims::new(12, 1024);
+        assert_eq!(Dims::decode(&d.encode()).unwrap(), d);
+        let empty = Dims::new(0, 0);
+        assert_eq!(Dims::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn header_rejects_bad_magic_and_version() {
+        let mut h = Dims::new(1, 1).encode();
+        h[0] = b'X';
+        assert!(matches!(Dims::decode(&h), Err(StreamError::Format(_))));
+        let mut h = Dims::new(1, 1).encode();
+        h[4] = 9;
+        assert!(matches!(Dims::decode(&h), Err(StreamError::Format(_))));
+    }
+
+    #[test]
+    fn interleave_roundtrip() {
+        let re = [1.0f32, -2.5, 3.25];
+        let im = [0.5f32, f32::MIN_POSITIVE, -0.0];
+        let mut bytes = Vec::new();
+        interleave(&re, &im, &mut bytes);
+        let (mut r2, mut i2) = (Vec::new(), Vec::new());
+        deinterleave(&bytes, &mut r2, &mut i2);
+        assert_eq!(re.to_vec(), r2);
+        // -0.0 must survive bit-for-bit.
+        assert_eq!(im[2].to_bits(), i2[2].to_bits());
+    }
+
+    #[test]
+    fn mem_dataset_reads_rows_in_order() {
+        let data: Vec<C32> = (0..6).map(|k| C32::new(k as f32, -(k as f32))).collect();
+        let mut src = MemDataset::new(3, 2, data);
+        let (mut re, mut im) = (Vec::new(), Vec::new());
+        src.read_rows(2, &mut re, &mut im).unwrap();
+        assert_eq!(re, vec![0.0, 1.0, 2.0, 3.0]);
+        src.read_rows(1, &mut re, &mut im).unwrap();
+        assert_eq!(im, vec![-4.0, -5.0]);
+        assert!(src.read_rows(1, &mut re, &mut im).is_err(), "past-the-end read must fail");
+    }
+}

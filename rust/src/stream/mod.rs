@@ -1,0 +1,109 @@
+//! Out-of-core streaming pipeline — chunked file-backed datasets with
+//! prefetch / compute / writeback overlap.
+//!
+//! The paper's target scenario is remote sensing, where "large amounts of
+//! data need to be processed with FFT" and the data is "divided into parts
+//! reasonably according to the size" so host↔device transfer overlaps
+//! kernel execution (§2.3.2 / §3). This subsystem is that idea applied to
+//! the host's slowest memory tier — the filesystem: datasets larger than
+//! RAM stream through any [`crate::coordinator::Backend`] with peak buffer
+//! memory bounded by the *chunk budget*, not the dataset size.
+//!
+//! Pieces (one file each):
+//!
+//! - [`dataset`] — the `.mfft` container (magic + dims + interleaved
+//!   complex-f32 payload), sequential [`ChunkSource`] readers
+//!   ([`FileDataset`], [`MemDataset`]) and whole-file helpers;
+//! - [`sink`] — sequential [`ChunkSink`] writers ([`FileSink`],
+//!   [`MemSink`]) plus the random-access [`SliceIo`] face ([`FileIo`],
+//!   [`MemIo`]) that the streamed SAR azimuth pass updates in place;
+//! - [`chunker`] — [`ChunkPlan`]: size-adaptive partitioning in the
+//!   paper's spirit (chunk rows so `chunk_bytes ≤ budget`, never splitting
+//!   a transform row; within a chunk the kernels recurse to their own
+//!   `fft::memtier` cache tiles) and the budget-resolution ladder
+//!   ([`with_budget`] → [`set_budget`] → `MEMFFT_STREAM_BUDGET` →
+//!   default);
+//! - [`pipeline`] — the triple-buffered [`run_chunks`] engine: a dedicated
+//!   reader thread prefetches chunk k+1 and a writer thread flushes chunk
+//!   k−1 while the caller computes chunk k (through
+//!   `Backend::execute_batch` in [`stream_transform`]), with rendezvous
+//!   channels for backpressure, buffer-ledger accounting for the O(budget)
+//!   peak-memory bound (≤ 4 chunk payloads live: the three stages plus
+//!   the compute stage's out-of-place output), and
+//!   bit-for-bit-deterministic in-order writeback.
+//!
+//! Entry points: [`stream_transform`] (fft/ifft over any backend),
+//! `sar::rda::process_streamed` (range–Doppler focusing with azimuth
+//! lines arriving chunk-by-chunk), and the coordinator's
+//! [`crate::coordinator::StreamProcessor`] (dataset jobs with the service
+//! config's `method` / `threads` / `cache.tile` / `stream.budget` knobs
+//! and `FftService` metrics). See DESIGN.md §8.
+
+pub mod chunker;
+pub mod dataset;
+pub mod pipeline;
+pub mod sink;
+
+use crate::coordinator::BackendError;
+use crate::fft::FftError;
+
+pub use chunker::{budget_bytes, set_budget, with_budget, ChunkPlan, ChunkSpec, DEFAULT_BUDGET_BYTES, ELEM_BYTES};
+pub use dataset::{read_dataset, write_dataset, ChunkSource, Dims, FileDataset, MemDataset};
+pub use pipeline::{
+    bitwise_mismatches, run_chunks, stream_transform, transform_in_memory, ChunkMeta,
+    PipelineReport,
+};
+pub use sink::{ChunkSink, FileIo, FileSink, MemIo, MemSink, SliceIo};
+
+/// Errors of the streaming subsystem. IO failures carry the underlying
+/// `io::Error`; malformed containers and dimension mismatches surface as
+/// `Format`; substrate failures pass the backend / transform error up.
+#[derive(Debug)]
+pub enum StreamError {
+    Io(std::io::Error),
+    /// Bad magic / version / header, truncated payload, or a shape that
+    /// does not match the dataset's dims.
+    Format(String),
+    Backend(BackendError),
+    Fft(FftError),
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::Io(e) => write!(f, "stream io: {e}"),
+            StreamError::Format(msg) => write!(f, "bad dataset: {msg}"),
+            StreamError::Backend(e) => write!(f, "stream backend: {e}"),
+            StreamError::Fft(e) => write!(f, "stream transform: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StreamError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StreamError::Io(e) => Some(e),
+            StreamError::Backend(e) => Some(e),
+            StreamError::Fft(e) => Some(e),
+            StreamError::Format(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for StreamError {
+    fn from(e: std::io::Error) -> Self {
+        StreamError::Io(e)
+    }
+}
+
+impl From<BackendError> for StreamError {
+    fn from(e: BackendError) -> Self {
+        StreamError::Backend(e)
+    }
+}
+
+impl From<FftError> for StreamError {
+    fn from(e: FftError) -> Self {
+        StreamError::Fft(e)
+    }
+}

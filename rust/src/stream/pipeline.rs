@@ -1,0 +1,472 @@
+//! The triple-buffered prefetch → compute → writeback engine.
+//!
+//! [`run_chunks`] is the paper's transfer/compute overlap (§3: "the data
+//! transmission and kernel execution are overlapped") mapped onto host
+//! threads: a dedicated **reader** thread prefetches chunk k+1 from the
+//! source and a dedicated **writer** thread flushes chunk k−1 to the sink
+//! while the **caller** computes chunk k (backends are `&mut self` and
+//! thread-confined, so compute stays on the calling thread — which is
+//! also where `util::pool` fans the chunk's rows out across cores).
+//!
+//! **Backpressure.** Both hand-offs are rendezvous channels
+//! (`sync_channel(0)`): the reader cannot run ahead of compute by more
+//! than the one chunk it is prefetching, and compute cannot run ahead of
+//! the writer. The stages therefore hold a bounded working set no matter
+//! how large the dataset is: the prefetched chunk, the compute input +
+//! output pair, and the chunk being written — **≤ 4 chunk payloads ≈
+//! O(chunk budget)**, independent of dataset size. A [`BufLedger`]
+//! accounts every payload allocation; `PipelineReport::peak_buffer_bytes`
+//! is the asserted bound (the backend's internal staging adds its own
+//! O(chunk) on top — also dataset-size-independent, see DESIGN.md §8).
+//!
+//! **Determinism.** Within a chunk, rows fan out over the pool
+//! out-of-order (bit-identical by the §6 contract); across chunks, the
+//! single reader, single compute loop and single writer are connected by
+//! FIFO channels, so chunks are computed and written **strictly in
+//! dataset order**. Streamed output is therefore bit-for-bit identical to
+//! the one-shot in-memory `Backend::execute_batch` over the whole dataset
+//! — chunking only decides *when* a row is computed, never what is
+//! computed (asserted across budgets × thread counts in
+//! `rust/tests/stream.rs`).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::chunker::{ChunkPlan, ELEM_BYTES};
+use super::dataset::{ChunkSource, Dims};
+use super::sink::ChunkSink;
+use super::StreamError;
+use crate::coordinator::{Backend, BatchSpec, Direction};
+use crate::metrics::ServiceMetrics;
+use crate::util::complex::C32;
+
+/// Identity of a chunk moving through the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkMeta {
+    pub index: usize,
+    /// First dataset row in this chunk.
+    pub row0: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl ChunkMeta {
+    fn payload_bytes(&self) -> usize {
+        self.rows * self.cols * ELEM_BYTES
+    }
+}
+
+/// What one streamed run did: stage busy times (their sum divided by the
+/// wall time is the overlap factor — up to 3.0 for perfectly hidden IO)
+/// and the buffer-accounting bound.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineReport {
+    pub chunks: usize,
+    pub rows: usize,
+    /// Payload bytes of a full chunk under the effective budget.
+    pub chunk_bytes: usize,
+    /// High-water mark of live pipeline payload buffers (ledger-tracked);
+    /// bounded by ~4 × `chunk_bytes` regardless of dataset size.
+    pub peak_buffer_bytes: usize,
+    pub read_busy: Duration,
+    pub compute_busy: Duration,
+    pub write_busy: Duration,
+    pub wall: Duration,
+}
+
+impl PipelineReport {
+    /// Stage-busy sum over wall time: 1.0 = fully serialized stages,
+    /// approaching 3.0 = read and write fully hidden behind compute.
+    pub fn overlap(&self) -> f64 {
+        let wall = self.wall.as_secs_f64();
+        if wall == 0.0 {
+            return 0.0;
+        }
+        (self.read_busy + self.compute_busy + self.write_busy).as_secs_f64() / wall
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "chunks={} rows={} chunk={}KiB peak-buffers={}KiB read={:.1}ms compute={:.1}ms write={:.1}ms wall={:.1}ms overlap={:.2}x",
+            self.chunks,
+            self.rows,
+            self.chunk_bytes / 1024,
+            self.peak_buffer_bytes / 1024,
+            self.read_busy.as_secs_f64() * 1e3,
+            self.compute_busy.as_secs_f64() * 1e3,
+            self.write_busy.as_secs_f64() * 1e3,
+            self.wall.as_secs_f64() * 1e3,
+            self.overlap(),
+        )
+    }
+}
+
+/// Live-payload accounting: every chunk buffer the pipeline allocates is
+/// added here and subtracted when it dies, so the peak is an *observed*
+/// bound, not a derivation — the test hook for the O(budget) guarantee.
+struct BufLedger {
+    current: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl BufLedger {
+    fn new() -> Self {
+        Self { current: AtomicUsize::new(0), peak: AtomicUsize::new(0) }
+    }
+
+    fn add(&self, bytes: usize) {
+        let now = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn sub(&self, bytes: usize) {
+        self.current.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
+type ChunkPayload = (ChunkMeta, Vec<f32>, Vec<f32>);
+
+/// Stream every chunk of `plan` from `source` through `compute` into
+/// `write`, with prefetch and writeback overlapped on dedicated threads.
+///
+/// `compute` runs on the calling thread (backends are thread-confined and
+/// `&mut`), consuming the chunk's planar planes and returning the output
+/// planes. `write` runs on the writer thread, in chunk order. The first
+/// error from any stage aborts the run: downstream hand-offs disconnect,
+/// the reader observes the hang-up and exits, and the error is returned
+/// (source/sink state is then unspecified, like a failed `Transform`
+/// call — callers restart the stream, they do not resume it).
+pub fn run_chunks<C, W>(
+    source: &mut dyn ChunkSource,
+    plan: &ChunkPlan,
+    metrics: Option<&ServiceMetrics>,
+    mut compute: C,
+    mut write: W,
+) -> Result<PipelineReport, StreamError>
+where
+    C: FnMut(&ChunkMeta, Vec<f32>, Vec<f32>) -> Result<(Vec<f32>, Vec<f32>), StreamError>,
+    W: FnMut(&ChunkMeta, &[f32], &[f32]) -> Result<(), StreamError> + Send,
+{
+    let chunks = plan.chunks();
+    let mut report = PipelineReport { chunk_bytes: plan.chunk_bytes(), ..Default::default() };
+    if chunks == 0 {
+        return Ok(report);
+    }
+    debug_assert_eq!(source.dims().cols, plan.cols(), "plan does not match source");
+
+    let cols = plan.cols();
+    let ledger = BufLedger::new();
+    let read_ns = AtomicU64::new(0);
+    let write_ns = AtomicU64::new(0);
+    let mut compute_busy = Duration::ZERO;
+    let started = Instant::now();
+
+    let (result, rows_done, chunks_done) = std::thread::scope(|s| {
+        // Rendezvous hand-offs: capacity 0 means a send blocks until the
+        // next stage takes the chunk — the backpressure that caps the
+        // pipeline's working set at the triple-buffer bound. Drained
+        // plane buffers flow back to the reader on the recycle channel,
+        // so steady state allocates only the backend's output planes.
+        let (read_tx, read_rx) = mpsc::sync_channel::<ChunkPayload>(0);
+        let (write_tx, write_rx) = mpsc::sync_channel::<ChunkPayload>(0);
+        let (recycle_tx, recycle_rx) = mpsc::channel::<(Vec<f32>, Vec<f32>)>();
+
+        let reader = s.spawn({
+            let ledger = &ledger;
+            let read_ns = &read_ns;
+            move || -> Result<(), StreamError> {
+                for spec in plan.iter() {
+                    let meta = ChunkMeta { index: spec.index, row0: spec.row0, rows: spec.rows, cols };
+                    let t = Instant::now();
+                    let (mut re, mut im) =
+                        recycle_rx.try_recv().unwrap_or_else(|_| (Vec::new(), Vec::new()));
+                    ledger.add(meta.payload_bytes());
+                    if let Err(e) = source.read_rows(spec.rows, &mut re, &mut im) {
+                        ledger.sub(meta.payload_bytes());
+                        return Err(e);
+                    }
+                    let dt = t.elapsed();
+                    read_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+                    if let Some(m) = metrics {
+                        m.stream_read.record(dt);
+                    }
+                    if read_tx.send((meta, re, im)).is_err() {
+                        // Compute hung up (downstream error): stop quietly,
+                        // the real error surfaces from the other stage.
+                        ledger.sub(meta.payload_bytes());
+                        return Ok(());
+                    }
+                }
+                Ok(())
+            }
+        });
+
+        let writer = s.spawn({
+            let ledger = &ledger;
+            let write_ns = &write_ns;
+            let write = &mut write;
+            move || -> Result<(usize, usize), StreamError> {
+                let mut rows = 0usize;
+                let mut done = 0usize;
+                while let Ok((meta, re, im)) = write_rx.recv() {
+                    let t = Instant::now();
+                    write(&meta, &re, &im)?;
+                    ledger.sub(meta.payload_bytes());
+                    // Drained planes go back to the reader for reuse (the
+                    // ledger already retired their payload; a reader that
+                    // has exited just drops them).
+                    let _ = recycle_tx.send((re, im));
+                    let dt = t.elapsed();
+                    write_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+                    if let Some(m) = metrics {
+                        m.stream_write.record(dt);
+                        m.stream_chunks.inc();
+                        m.stream_rows.add(meta.rows as u64);
+                    }
+                    rows += meta.rows;
+                    done += 1;
+                }
+                Ok((rows, done))
+            }
+        });
+
+        // Compute stage — the calling thread.
+        let mut compute_err: Option<StreamError> = None;
+        for _ in 0..chunks {
+            let Ok((meta, re, im)) = read_rx.recv() else {
+                break; // reader errored and hung up; its Err surfaces below
+            };
+            let t = Instant::now();
+            let in_bytes = meta.payload_bytes();
+            match compute(&meta, re, im) {
+                Ok((ore, oim)) => {
+                    ledger.add((ore.len() + oim.len()) * 4);
+                    ledger.sub(in_bytes); // input planes dropped by compute
+                    let dt = t.elapsed();
+                    compute_busy += dt;
+                    if let Some(m) = metrics {
+                        m.stream_compute.record(dt);
+                    }
+                    if write_tx.send((meta, ore, oim)).is_err() {
+                        break; // writer errored; its Err surfaces below
+                    }
+                }
+                Err(e) => {
+                    ledger.sub(in_bytes);
+                    compute_err = Some(e);
+                    break;
+                }
+            }
+        }
+        // Hang up both channels: a blocked reader send fails and the
+        // writer loop drains out, so the scope always joins.
+        drop(read_rx);
+        drop(write_tx);
+        let reader_res = reader.join().expect("stream reader thread panicked");
+        let writer_res = writer.join().expect("stream writer thread panicked");
+
+        match (compute_err, reader_res, writer_res) {
+            (Some(e), _, _) => (Err(e), 0, 0),
+            (None, Err(e), _) => (Err(e), 0, 0),
+            (None, Ok(()), Err(e)) => (Err(e), 0, 0),
+            (None, Ok(()), Ok((rows, done))) => (Ok(()), rows, done),
+        }
+    });
+    result?;
+    if chunks_done != chunks {
+        // All stages reported success but the writer saw fewer chunks —
+        // only possible if a stage was starved by a bug; fail loudly.
+        return Err(StreamError::Format(format!(
+            "pipeline wrote {chunks_done} of {chunks} chunks"
+        )));
+    }
+
+    report.chunks = chunks_done;
+    report.rows = rows_done;
+    report.peak_buffer_bytes = ledger.peak();
+    report.read_busy = Duration::from_nanos(read_ns.load(Ordering::Relaxed));
+    report.compute_busy = compute_busy;
+    report.write_busy = Duration::from_nanos(write_ns.load(Ordering::Relaxed));
+    report.wall = started.elapsed();
+    Ok(report)
+}
+
+/// Stream a whole dataset through `Backend::execute_batch`: every chunk
+/// is one size-homogeneous batch of `cols`-point transforms. This is the
+/// `memfft stream` / `StreamProcessor` execution path for fft and ifft.
+pub fn stream_transform(
+    source: &mut dyn ChunkSource,
+    sink: &mut dyn ChunkSink,
+    backend: &mut dyn Backend,
+    direction: Direction,
+    budget: usize,
+    metrics: Option<&ServiceMetrics>,
+) -> Result<PipelineReport, StreamError> {
+    let dims = source.dims();
+    if sink.dims() != dims {
+        return Err(StreamError::Format(format!(
+            "sink is {}x{}, source is {}x{}",
+            sink.dims().rows,
+            sink.dims().cols,
+            dims.rows,
+            dims.cols
+        )));
+    }
+    if dims.rows > 0 && dims.cols == 0 {
+        return Err(StreamError::Format("dataset rows have zero points".into()));
+    }
+    let plan = ChunkPlan::new(dims.rows, dims.cols, budget);
+    let report = run_chunks(
+        source,
+        &plan,
+        metrics,
+        |meta, re, im| {
+            let spec = BatchSpec { n: meta.cols, batch: meta.rows, direction };
+            let out = backend.execute_batch(&spec, &re, &im)?;
+            Ok((out.re, out.im))
+        },
+        |_, re, im| sink.write_rows(re, im),
+    )?;
+    sink.finish()?;
+    Ok(report)
+}
+
+/// One-shot in-memory reference for a streamed transform: the whole
+/// dataset as a single `execute_batch` call. This is the oracle side of
+/// every bit-for-bit diff — the CLI's `--check`, the out-of-core example
+/// and the equivalence tests all compare [`stream_transform`]'s output
+/// against exactly this.
+pub fn transform_in_memory(
+    backend: &mut dyn Backend,
+    dims: Dims,
+    data: &[C32],
+    direction: Direction,
+) -> Result<Vec<C32>, StreamError> {
+    if data.len() != dims.elems()? {
+        return Err(StreamError::Format(format!(
+            "data holds {} elements, dims are {}x{}",
+            data.len(),
+            dims.rows,
+            dims.cols
+        )));
+    }
+    if dims.rows == 0 {
+        return Ok(Vec::new());
+    }
+    let re: Vec<f32> = data.iter().map(|c| c.re).collect();
+    let im: Vec<f32> = data.iter().map(|c| c.im).collect();
+    let spec = BatchSpec { n: dims.cols, batch: dims.rows, direction };
+    let out = backend.execute_batch(&spec, &re, &im)?;
+    Ok(out.re.iter().zip(&out.im).map(|(&a, &b)| C32::new(a, b)).collect())
+}
+
+/// Elements whose bit patterns differ between two complex buffers — the
+/// one diff the `--check` CLI, the example and the coordinator tests all
+/// gate on (bitwise, so `-0.0` vs `0.0` and NaN payloads count; a length
+/// mismatch counts every unmatched element).
+pub fn bitwise_mismatches(a: &[C32], b: &[C32]) -> usize {
+    let common = a.len().min(b.len());
+    let differing = a[..common]
+        .iter()
+        .zip(&b[..common])
+        .filter(|(x, y)| x.re.to_bits() != y.re.to_bits() || x.im.to_bits() != y.im.to_bits())
+        .count();
+    differing + (a.len().max(b.len()) - common)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::{Dims, MemDataset, MemSink};
+    use crate::util::complex::C32;
+
+    fn ramp(rows: usize, cols: usize) -> Vec<C32> {
+        (0..rows * cols).map(|k| C32::new(k as f32, -(k as f32) * 0.5)).collect()
+    }
+
+    #[test]
+    fn identity_pipeline_preserves_order_and_rows() {
+        let (rows, cols) = (7, 4);
+        let mut src = MemDataset::new(rows, cols, ramp(rows, cols));
+        let plan = ChunkPlan::new(rows, cols, 2 * cols * ELEM_BYTES);
+        let mut sink = MemSink::new(Dims::new(rows, cols));
+        let report = run_chunks(
+            &mut src,
+            &plan,
+            None,
+            |_, re, im| Ok((re, im)),
+            |_, re, im| sink.write_rows(re, im),
+        )
+        .unwrap();
+        sink.finish().unwrap();
+        assert_eq!(report.chunks, 4);
+        assert_eq!(report.rows, rows);
+        assert_eq!(sink.data(), &ramp(rows, cols)[..], "in-order writeback must reassemble");
+    }
+
+    #[test]
+    fn compute_error_aborts_without_hanging() {
+        let (rows, cols) = (6, 2);
+        let mut src = MemDataset::new(rows, cols, ramp(rows, cols));
+        let plan = ChunkPlan::new(rows, cols, cols * ELEM_BYTES);
+        let mut sink = MemSink::new(Dims::new(rows, cols));
+        let err = run_chunks(
+            &mut src,
+            &plan,
+            None,
+            |meta, re, im| {
+                if meta.index == 2 {
+                    Err(StreamError::Format("boom".into()))
+                } else {
+                    Ok((re, im))
+                }
+            },
+            |_, re, im| sink.write_rows(re, im),
+        )
+        .unwrap_err();
+        assert!(matches!(err, StreamError::Format(msg) if msg == "boom"));
+    }
+
+    #[test]
+    fn writer_error_aborts_without_hanging() {
+        let (rows, cols) = (5, 2);
+        let mut src = MemDataset::new(rows, cols, ramp(rows, cols));
+        let plan = ChunkPlan::new(rows, cols, cols * ELEM_BYTES);
+        let err = run_chunks(
+            &mut src,
+            &plan,
+            None,
+            |_, re, im| Ok((re, im)),
+            |meta, _, _| {
+                if meta.index == 1 {
+                    Err(StreamError::Format("disk full".into()))
+                } else {
+                    Ok(())
+                }
+            },
+        )
+        .unwrap_err();
+        assert!(matches!(err, StreamError::Format(msg) if msg.contains("disk full")));
+    }
+
+    #[test]
+    fn empty_dataset_streams_zero_chunks() {
+        let mut src = MemDataset::new(0, 4, Vec::new());
+        let plan = ChunkPlan::new(0, 4, 1024);
+        let report = run_chunks(
+            &mut src,
+            &plan,
+            None,
+            |_, re, im| Ok((re, im)),
+            |_, _, _| panic!("no chunks to write"),
+        )
+        .unwrap();
+        assert_eq!(report.chunks, 0);
+        assert_eq!(report.peak_buffer_bytes, 0);
+    }
+}

@@ -1,0 +1,298 @@
+//! Chunk writers and the random-access dataset face.
+//!
+//! [`ChunkSink`] is the sequential write side of the pipeline: the writer
+//! thread appends whole rows in chunk order (in-order writeback is what
+//! makes the streamed output byte-identical to the in-memory path
+//! regardless of stage overlap). [`SliceIo`] is the random-access face the
+//! streamed SAR processor needs: its azimuth pass updates the
+//! already-written range-compressed matrix column-strip by column-strip,
+//! in place, without ever holding more than one strip in memory.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use super::dataset::{decode_c32, encode_c32, interleave, Dims, HEADER_BYTES};
+use super::StreamError;
+use crate::util::complex::C32;
+
+/// Sequential writer of whole transform rows (planar planes in, the
+/// `.mfft` wire format out). `Send` is a supertrait: the pipeline runs the
+/// sink on a dedicated writer thread.
+pub trait ChunkSink: Send {
+    fn dims(&self) -> Dims;
+
+    /// Append `re.len() / cols` rows. Lengths must be equal and a whole
+    /// number of rows.
+    fn write_rows(&mut self, re: &[f32], im: &[f32]) -> Result<(), StreamError>;
+
+    /// Flush and validate: every row the header promised must have been
+    /// written.
+    fn finish(&mut self) -> Result<(), StreamError>;
+}
+
+/// File-backed sink: header up front, buffered row appends, one reused
+/// byte buffer for the planar→interleaved conversion.
+pub struct FileSink {
+    writer: BufWriter<File>,
+    dims: Dims,
+    rows_written: usize,
+    buf: Vec<u8>,
+}
+
+impl FileSink {
+    /// Create (truncate) `path` and write the header immediately, so even
+    /// an interrupted stream leaves a structurally parseable file.
+    pub fn create(path: impl AsRef<Path>, dims: Dims) -> Result<Self, StreamError> {
+        let mut writer = BufWriter::new(File::create(path)?);
+        writer.write_all(&dims.encode())?;
+        Ok(Self { writer, dims, rows_written: 0, buf: Vec::new() })
+    }
+}
+
+fn check_rows(dims: &Dims, written: usize, re: &[f32], im: &[f32]) -> Result<usize, StreamError> {
+    if re.len() != im.len() || dims.cols == 0 || re.len() % dims.cols != 0 {
+        return Err(StreamError::Format(format!(
+            "write of {}/{} f32s is not whole rows of {} cols",
+            re.len(),
+            im.len(),
+            dims.cols
+        )));
+    }
+    let rows = re.len() / dims.cols;
+    if written + rows > dims.rows {
+        return Err(StreamError::Format(format!(
+            "write past the end: row {written} + {rows} > {}",
+            dims.rows
+        )));
+    }
+    Ok(rows)
+}
+
+impl ChunkSink for FileSink {
+    fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    fn write_rows(&mut self, re: &[f32], im: &[f32]) -> Result<(), StreamError> {
+        let rows = check_rows(&self.dims, self.rows_written, re, im)?;
+        interleave(re, im, &mut self.buf);
+        self.writer.write_all(&self.buf)?;
+        self.rows_written += rows;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<(), StreamError> {
+        if self.rows_written != self.dims.rows {
+            return Err(StreamError::Format(format!(
+                "stream ended after {} of {} rows",
+                self.rows_written, self.dims.rows
+            )));
+        }
+        self.writer.flush()?;
+        Ok(())
+    }
+}
+
+/// In-memory sink — the inspectable output side of the equivalence tests.
+pub struct MemSink {
+    dims: Dims,
+    data: Vec<C32>,
+    rows_written: usize,
+}
+
+impl MemSink {
+    pub fn new(dims: Dims) -> Self {
+        Self { dims, data: Vec::new(), rows_written: 0 }
+    }
+
+    /// Rows written so far, interleaved row-major.
+    pub fn data(&self) -> &[C32] {
+        &self.data
+    }
+
+    pub fn into_data(self) -> Vec<C32> {
+        self.data
+    }
+}
+
+impl ChunkSink for MemSink {
+    fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    fn write_rows(&mut self, re: &[f32], im: &[f32]) -> Result<(), StreamError> {
+        let rows = check_rows(&self.dims, self.rows_written, re, im)?;
+        self.data.extend(re.iter().zip(im).map(|(&a, &b)| C32::new(a, b)));
+        self.rows_written += rows;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<(), StreamError> {
+        if self.rows_written != self.dims.rows {
+            return Err(StreamError::Format(format!(
+                "stream ended after {} of {} rows",
+                self.rows_written, self.dims.rows
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Random-access span IO over a dataset-shaped store, addressed in
+/// complex elements from the start of the payload. The streamed SAR
+/// azimuth pass gathers column strips (`naz` strided spans of `strip`
+/// elements) and scatters them back — O(strip) memory against an
+/// arbitrarily large matrix.
+pub trait SliceIo: Send {
+    fn dims(&self) -> Dims;
+
+    fn read_span(&mut self, elem0: usize, buf: &mut [C32]) -> Result<(), StreamError>;
+
+    fn write_span(&mut self, elem0: usize, data: &[C32]) -> Result<(), StreamError>;
+}
+
+fn check_span(dims: &Dims, elem0: usize, len: usize) -> Result<(), StreamError> {
+    let total = dims.elems()?;
+    if elem0.checked_add(len).map(|end| end > total).unwrap_or(true) {
+        return Err(StreamError::Format(format!(
+            "span {elem0}..+{len} outside {} x {}",
+            dims.rows, dims.cols
+        )));
+    }
+    Ok(())
+}
+
+/// File-backed [`SliceIo`]: seek + exact read/write per span, with one
+/// reused byte buffer. No `BufWriter` — spans are the caller's batching
+/// unit, and interposed buffering would turn the strided azimuth scatter
+/// into read-modify-write churn.
+pub struct FileIo {
+    file: File,
+    dims: Dims,
+    buf: Vec<u8>,
+}
+
+impl FileIo {
+    /// Create (truncate) a dataset-shaped file: header written, payload
+    /// zero-extended to its final size so spans can be written in any
+    /// order.
+    pub fn create(path: impl AsRef<Path>, dims: Dims) -> Result<Self, StreamError> {
+        let mut file = OpenOptions::new().read(true).write(true).create(true).truncate(true).open(path)?;
+        file.write_all(&dims.encode())?;
+        file.set_len((HEADER_BYTES + dims.payload_bytes()?) as u64)?;
+        Ok(Self { file, dims, buf: Vec::new() })
+    }
+
+    /// Open an existing dataset read-write.
+    pub fn open_rw(path: impl AsRef<Path>) -> Result<Self, StreamError> {
+        let mut file = OpenOptions::new().read(true).write(true).open(path)?;
+        let mut h = [0u8; HEADER_BYTES];
+        file.read_exact(&mut h).map_err(|e| match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => {
+                StreamError::Format("file shorter than the 24-byte header".into())
+            }
+            _ => StreamError::Io(e),
+        })?;
+        let dims = Dims::decode(&h)?;
+        Ok(Self { file, dims, buf: Vec::new() })
+    }
+}
+
+impl SliceIo for FileIo {
+    fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    fn read_span(&mut self, elem0: usize, buf: &mut [C32]) -> Result<(), StreamError> {
+        check_span(&self.dims, elem0, buf.len())?;
+        self.buf.resize(buf.len() * super::ELEM_BYTES, 0);
+        self.file.seek(SeekFrom::Start((HEADER_BYTES + elem0 * super::ELEM_BYTES) as u64))?;
+        self.file.read_exact(&mut self.buf)?;
+        decode_c32(&self.buf, buf);
+        Ok(())
+    }
+
+    fn write_span(&mut self, elem0: usize, data: &[C32]) -> Result<(), StreamError> {
+        check_span(&self.dims, elem0, data.len())?;
+        encode_c32(data, &mut self.buf);
+        self.file.seek(SeekFrom::Start((HEADER_BYTES + elem0 * super::ELEM_BYTES) as u64))?;
+        self.file.write_all(&self.buf)?;
+        Ok(())
+    }
+}
+
+/// In-memory [`SliceIo`] for the streamed-SAR equivalence tests.
+pub struct MemIo {
+    dims: Dims,
+    data: Vec<C32>,
+}
+
+impl MemIo {
+    pub fn new(dims: Dims) -> Result<Self, StreamError> {
+        Ok(Self { data: vec![C32::ZERO; dims.elems()?], dims })
+    }
+
+    pub fn data(&self) -> &[C32] {
+        &self.data
+    }
+
+    pub fn into_data(self) -> Vec<C32> {
+        self.data
+    }
+}
+
+impl SliceIo for MemIo {
+    fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    fn read_span(&mut self, elem0: usize, buf: &mut [C32]) -> Result<(), StreamError> {
+        check_span(&self.dims, elem0, buf.len())?;
+        buf.copy_from_slice(&self.data[elem0..elem0 + buf.len()]);
+        Ok(())
+    }
+
+    fn write_span(&mut self, elem0: usize, data: &[C32]) -> Result<(), StreamError> {
+        check_span(&self.dims, elem0, data.len())?;
+        self.data[elem0..elem0 + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_sink_appends_and_validates() {
+        let mut sink = MemSink::new(Dims::new(2, 3));
+        sink.write_rows(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]).unwrap();
+        assert!(sink.finish().is_err(), "finish before all rows must fail");
+        sink.write_rows(&[7.0, 8.0, 9.0], &[0.0, 0.0, 0.0]).unwrap();
+        sink.finish().unwrap();
+        assert_eq!(sink.data()[3], C32::new(7.0, 0.0));
+        assert!(
+            sink.write_rows(&[0.0; 3], &[0.0; 3]).is_err(),
+            "write past the promised rows must fail"
+        );
+    }
+
+    #[test]
+    fn mem_sink_rejects_partial_rows() {
+        let mut sink = MemSink::new(Dims::new(2, 3));
+        assert!(sink.write_rows(&[1.0, 2.0], &[3.0, 4.0]).is_err());
+        assert!(sink.write_rows(&[1.0, 2.0, 3.0], &[3.0, 4.0]).is_err());
+    }
+
+    #[test]
+    fn mem_io_span_bounds() {
+        let mut io = MemIo::new(Dims::new(2, 4)).unwrap();
+        io.write_span(6, &[C32::ONE, C32::I]).unwrap();
+        let mut buf = [C32::ZERO; 2];
+        io.read_span(6, &mut buf).unwrap();
+        assert_eq!(buf, [C32::ONE, C32::I]);
+        assert!(io.read_span(7, &mut buf).is_err(), "out-of-range span must fail");
+        assert!(io.write_span(usize::MAX, &[C32::ONE]).is_err());
+    }
+}

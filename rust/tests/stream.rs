@@ -1,0 +1,378 @@
+//! Out-of-core streaming battery: streamed output must be **bit-for-bit**
+//! equal to the in-memory `Backend::execute_batch` path for every op ×
+//! chunk budget × thread count, edge datasets (0 rows, 1 row,
+//! non-divisible tails) must behave, and the pipeline's peak buffer
+//! allocation must be bounded by the chunk budget — independent of
+//! dataset size (the O(budget) out-of-core guarantee).
+
+use memfft::config::ServiceConfig;
+use memfft::coordinator::{Direction, FftService, NativeBackend, StreamProcessor};
+use memfft::sar;
+use memfft::stream::{
+    self, read_dataset, stream_transform, transform_in_memory, write_dataset, ChunkPlan, Dims,
+    FileDataset, FileIo, FileSink, MemDataset, MemIo, MemSink, StreamError, ELEM_BYTES,
+};
+use memfft::util::{pool, Xoshiro256};
+use memfft::C32;
+
+/// Unique scratch path under the OS temp dir (std-only tempfile stand-in).
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("memfft-stream-{}-{seq}-{tag}.mfft", std::process::id()))
+}
+
+fn assert_bits_eq(got: &[C32], expect: &[C32], what: &str) {
+    assert_eq!(got.len(), expect.len(), "{what}: length");
+    for (k, (g, e)) in got.iter().zip(expect).enumerate() {
+        assert_eq!(g.re.to_bits(), e.re.to_bits(), "{what}: re[{k}] {} vs {}", g.re, e.re);
+        assert_eq!(g.im.to_bits(), e.im.to_bits(), "{what}: im[{k}] {} vs {}", g.im, e.im);
+    }
+}
+
+/// In-memory oracle: the whole dataset as ONE `execute_batch` call (the
+/// shared `transform_in_memory` helper the CLI's `--check` also uses).
+fn reference_batch(data: &[C32], rows: usize, cols: usize, direction: Direction) -> Vec<C32> {
+    let mut backend = NativeBackend::default();
+    transform_in_memory(&mut backend, Dims::new(rows, cols), data, direction).unwrap()
+}
+
+/// Acceptance sweep: fft and ifft, budgets {1 row, 3 rows, all rows} ×
+/// threads {1, 2, 7}, rows chosen so the 3-row budget leaves a
+/// non-divisible last chunk. Exact equality, not tolerance.
+#[test]
+fn streamed_fft_ifft_bitwise_equals_in_memory_batch() {
+    let (rows, cols) = (11usize, 64usize);
+    let mut rng = Xoshiro256::seeded(0x57AB);
+    let data = rng.complex_vec(rows * cols);
+    let budgets =
+        [(cols * ELEM_BYTES, "1-row"), (3 * cols * ELEM_BYTES, "3-row"), (rows * cols * ELEM_BYTES, "all-rows")];
+    for direction in [Direction::Forward, Direction::Inverse] {
+        let expect = reference_batch(&data, rows, cols, direction);
+        for (budget, tag) in budgets {
+            for threads in [1usize, 2, 7] {
+                let mut src = MemDataset::new(rows, cols, data.clone());
+                let mut sink = MemSink::new(Dims::new(rows, cols));
+                let mut backend = NativeBackend::default();
+                let report = pool::with_threads(threads, || {
+                    stream_transform(&mut src, &mut sink, &mut backend, direction, budget, None)
+                })
+                .unwrap();
+                assert_eq!(report.rows, rows);
+                assert_bits_eq(
+                    sink.data(),
+                    &expect,
+                    &format!("{direction:?} budget={tag} threads={threads}"),
+                );
+            }
+        }
+    }
+}
+
+/// Same sweep for the streamed SAR path vs the in-memory processor.
+#[test]
+fn streamed_sar_bitwise_equals_process_cpu() {
+    let (naz, nr) = (32usize, 64usize);
+    let scene = sar::Scene::demo(naz, nr);
+    let raw = scene.raw_echo(21);
+    let expect = sar::process_cpu(&raw, naz, nr).image;
+    let budgets = [nr * ELEM_BYTES, 3 * nr * ELEM_BYTES, naz * nr * ELEM_BYTES];
+    for budget in budgets {
+        for threads in [1usize, 2, 7] {
+            let mut src = MemDataset::new(naz, nr, raw.clone());
+            let mut out = MemIo::new(Dims::new(naz, nr)).unwrap();
+            let mut backend = NativeBackend::default();
+            let focus = pool::with_threads(threads, || {
+                sar::process_streamed(&mut src, &mut out, &mut backend, budget, None)
+            })
+            .unwrap();
+            assert!(focus.strips >= 1);
+            assert_bits_eq(
+                out.data(),
+                &expect,
+                &format!("sar budget={budget} threads={threads}"),
+            );
+        }
+    }
+}
+
+/// Non-power-of-two scene dimensions route through Bluestein inside the
+/// backend and must still match the in-memory path exactly.
+#[test]
+fn streamed_sar_non_pow2_scene_matches() {
+    let (naz, nr) = (24usize, 40usize);
+    let scene = sar::Scene::new(naz, nr).with_target(10, 17, 1.0);
+    let raw = scene.raw_echo(5);
+    let expect = sar::process_cpu(&raw, naz, nr).image;
+    let mut src = MemDataset::new(naz, nr, raw);
+    let mut out = MemIo::new(Dims::new(naz, nr)).unwrap();
+    let mut backend = NativeBackend::default();
+    sar::process_streamed(&mut src, &mut out, &mut backend, 5 * nr * ELEM_BYTES, None).unwrap();
+    assert_bits_eq(out.data(), &expect, "sar non-pow2");
+}
+
+/// Edge battery: 0-row and 1-row datasets stream cleanly through every op.
+#[test]
+fn zero_and_one_row_datasets() {
+    // 0 rows: no chunks, valid (empty) output, no backend calls.
+    let mut src = MemDataset::new(0, 16, Vec::new());
+    let mut sink = MemSink::new(Dims::new(0, 16));
+    let mut backend = NativeBackend::default();
+    let report =
+        stream_transform(&mut src, &mut sink, &mut backend, Direction::Forward, 0, None).unwrap();
+    assert_eq!(report.chunks, 0);
+    assert!(sink.data().is_empty());
+
+    let mut src = MemDataset::new(0, 16, Vec::new());
+    let mut out = MemIo::new(Dims::new(0, 16)).unwrap();
+    let focus = sar::process_streamed(&mut src, &mut out, &mut backend, 0, None).unwrap();
+    assert_eq!(focus.strips, 0);
+
+    // 1 row: one chunk, still bit-equal to the oracle.
+    let mut rng = Xoshiro256::seeded(3);
+    let data = rng.complex_vec(32);
+    let expect = reference_batch(&data, 1, 32, Direction::Forward);
+    let mut src = MemDataset::new(1, 32, data);
+    let mut sink = MemSink::new(Dims::new(1, 32));
+    let report =
+        stream_transform(&mut src, &mut sink, &mut backend, Direction::Forward, 1, None).unwrap();
+    assert_eq!(report.chunks, 1, "sub-row budget must still move one whole row");
+    assert_bits_eq(sink.data(), &expect, "1-row dataset");
+}
+
+/// The out-of-core guarantee: peak pipeline buffers are bounded by the
+/// chunk budget (≤ 4 chunk payloads: prefetched + compute in/out pair +
+/// draining) and — crucially — DO NOT grow with the dataset.
+#[test]
+fn peak_buffers_bounded_and_dataset_size_independent() {
+    let cols = 256usize;
+    let budget = 4 * cols * ELEM_BYTES; // 4-row chunks
+    for rows in [16usize, 128] {
+        let mut rng = Xoshiro256::seeded(rows as u64);
+        let data = rng.complex_vec(rows * cols);
+        let dataset_bytes = rows * cols * ELEM_BYTES;
+        let mut src = MemDataset::new(rows, cols, data);
+        let mut sink = MemSink::new(Dims::new(rows, cols));
+        let mut backend = NativeBackend::default();
+        let report =
+            stream_transform(&mut src, &mut sink, &mut backend, Direction::Forward, budget, None)
+                .unwrap();
+        assert_eq!(report.chunk_bytes, budget);
+        // The bound is a function of the budget alone — 4 chunk payloads
+        // (prefetched + compute in/out + draining) — so it holds at 16
+        // rows and is untouched by an 8x larger dataset (where it is 4x
+        // the budget vs 32x chunks streamed).
+        assert!(
+            report.peak_buffer_bytes >= report.chunk_bytes,
+            "rows={rows}: at least one chunk must have been live"
+        );
+        assert!(
+            report.peak_buffer_bytes <= 4 * report.chunk_bytes,
+            "rows={rows}: peak {} exceeds 4 x chunk {}",
+            report.peak_buffer_bytes,
+            report.chunk_bytes
+        );
+        assert!(
+            report.peak_buffer_bytes <= dataset_bytes / 2 || rows == 16,
+            "rows={rows}: peak {} is not decoupled from the {dataset_bytes}-byte dataset",
+            report.peak_buffer_bytes
+        );
+    }
+}
+
+/// File-backed end to end: write → stream through a real file pair → read
+/// back, still bit-equal; plus container-format failure modes.
+#[test]
+fn file_backed_roundtrip_and_format_errors() {
+    let (rows, cols) = (7usize, 32usize);
+    let mut rng = Xoshiro256::seeded(0xF11E);
+    let data = rng.complex_vec(rows * cols);
+    let input = temp_path("in");
+    let output = temp_path("out");
+    write_dataset(&input, rows, cols, &data).unwrap();
+
+    // Whole-file reader sees exactly what was written.
+    let (dims, loaded) = read_dataset(&input).unwrap();
+    assert_eq!(dims, Dims::new(rows, cols));
+    assert_bits_eq(&loaded, &data, "write/read roundtrip");
+
+    let mut src = FileDataset::open(&input).unwrap();
+    let mut sink = FileSink::create(&output, dims).unwrap();
+    let mut backend = NativeBackend::default();
+    stream_transform(
+        &mut src,
+        &mut sink,
+        &mut backend,
+        Direction::Forward,
+        2 * cols * ELEM_BYTES,
+        None,
+    )
+    .unwrap();
+    let (_, got) = read_dataset(&output).unwrap();
+    let expect = reference_batch(&data, rows, cols, Direction::Forward);
+    assert_bits_eq(&got, &expect, "file-backed streamed fft");
+
+    // Corrupt magic → Format error.
+    std::fs::write(&input, b"NOPExxxxxxxxxxxxxxxxxxxxxxxx").unwrap();
+    assert!(matches!(FileDataset::open(&input), Err(StreamError::Format(_))));
+    // Truncated payload → Format error at read time.
+    write_dataset(&input, rows, cols, &data).unwrap();
+    let full = std::fs::read(&input).unwrap();
+    std::fs::write(&input, &full[..full.len() - 4]).unwrap();
+    let mut short = FileDataset::open(&input).unwrap();
+    let (mut re, mut im) = (Vec::new(), Vec::new());
+    assert!(matches!(short.read_rows(rows, &mut re, &mut im), Err(StreamError::Format(_))));
+
+    std::fs::remove_file(&input).ok();
+    std::fs::remove_file(&output).ok();
+}
+
+/// File-backed SAR: FileIo doubles as working store and output.
+#[test]
+fn file_backed_sar_matches_in_memory() {
+    let (naz, nr) = (16usize, 32usize);
+    let scene = sar::Scene::demo(naz, nr);
+    let raw = scene.raw_echo(8);
+    let expect = sar::process_cpu(&raw, naz, nr).image;
+    let input = temp_path("sar-in");
+    let output = temp_path("sar-out");
+    write_dataset(&input, naz, nr, &raw).unwrap();
+
+    let mut src = FileDataset::open(&input).unwrap();
+    let mut io = FileIo::create(&output, Dims::new(naz, nr)).unwrap();
+    let mut backend = NativeBackend::default();
+    sar::process_streamed(&mut src, &mut io, &mut backend, 2 * nr * ELEM_BYTES, None).unwrap();
+    drop(io);
+    let (_, got) = read_dataset(&output).unwrap();
+    assert_bits_eq(&got, &expect, "file-backed streamed sar");
+
+    std::fs::remove_file(&input).ok();
+    std::fs::remove_file(&output).ok();
+}
+
+/// The ChunkPlan honors the paper's partition rule at dataset scale:
+/// `chunk_bytes ≤ budget`, rows never split, full coverage in order.
+#[test]
+fn chunk_plan_respects_budget_and_covers() {
+    for (rows, cols, budget) in [(100usize, 64usize, 10 * 64 * ELEM_BYTES), (5, 1 << 16, 1024)] {
+        let plan = ChunkPlan::new(rows, cols, budget);
+        assert!(plan.rows_per_chunk() >= 1, "at least one whole row per chunk");
+        if plan.rows_per_chunk() > 1 {
+            assert!(plan.chunk_bytes() <= budget, "chunk must fit the budget when a row fits");
+        }
+        let mut next = 0usize;
+        for spec in plan.iter() {
+            assert_eq!(spec.row0, next, "chunks must be contiguous and ordered");
+            assert!(spec.rows >= 1);
+            next += spec.rows;
+        }
+        assert_eq!(next, rows, "chunks must cover every row exactly once");
+    }
+}
+
+/// A service hands out processors that share its metrics: stream timings
+/// and the table-cache counters surface through `metrics().report()`.
+#[test]
+fn service_stream_processor_records_shared_metrics() {
+    let svc = FftService::start(ServiceConfig {
+        method: "native".into(),
+        workers: 1,
+        stream_budget: 2 * 64 * ELEM_BYTES,
+        ..Default::default()
+    });
+    let (rows, cols) = (6usize, 64usize);
+    let mut rng = Xoshiro256::seeded(99);
+    let data = rng.complex_vec(rows * cols);
+    let expect = reference_batch(&data, rows, cols, Direction::Forward);
+
+    let mut proc = svc.stream_processor();
+    let mut src = MemDataset::new(rows, cols, data);
+    let mut sink = MemSink::new(Dims::new(rows, cols));
+    let report = proc.transform(&mut src, &mut sink, Direction::Forward).unwrap();
+    assert_eq!(report.chunks, 3);
+    assert_bits_eq(sink.data(), &expect, "service stream processor");
+
+    assert_eq!(svc.metrics().stream_chunks.get(), 3, "dataset job must hit the service metrics");
+    assert_eq!(svc.metrics().stream_rows.get(), rows as u64);
+    let printed = svc.metrics().report();
+    assert!(printed.contains("stream: 3 chunks"), "report:\n{printed}");
+    assert!(printed.contains("stream-read"));
+    assert!(printed.contains("table-cache (process-wide):"));
+    svc.shutdown();
+}
+
+/// Errors from a mid-stream source abort the run (no hang, no partial
+/// success) — exercised through a source that fails on its third chunk.
+#[test]
+fn failing_source_aborts_cleanly() {
+    struct Flaky {
+        inner: MemDataset,
+        reads: usize,
+    }
+    impl stream::ChunkSource for Flaky {
+        fn dims(&self) -> Dims {
+            self.inner.dims()
+        }
+        fn read_rows(
+            &mut self,
+            rows: usize,
+            re: &mut Vec<f32>,
+            im: &mut Vec<f32>,
+        ) -> Result<(), StreamError> {
+            self.reads += 1;
+            if self.reads == 3 {
+                return Err(StreamError::Format("sensor dropout".into()));
+            }
+            self.inner.read_rows(rows, re, im)
+        }
+    }
+    let (rows, cols) = (8usize, 16usize);
+    let mut rng = Xoshiro256::seeded(1);
+    let mut src = Flaky { inner: MemDataset::new(rows, cols, rng.complex_vec(rows * cols)), reads: 0 };
+    let mut sink = MemSink::new(Dims::new(rows, cols));
+    let mut backend = NativeBackend::default();
+    let err = stream_transform(
+        &mut src,
+        &mut sink,
+        &mut backend,
+        Direction::Forward,
+        cols * ELEM_BYTES,
+        None,
+    )
+    .unwrap_err();
+    assert!(matches!(err, StreamError::Format(msg) if msg.contains("sensor dropout")));
+}
+
+/// `stream.budget` resolution: an explicit processor budget beats the
+/// thread-local override, which beats the default — mirroring
+/// `cache.tile` / `threads` scoping.
+#[test]
+fn budget_resolution_scopes_like_other_knobs() {
+    let (rows, cols) = (8usize, 32usize);
+    let mut rng = Xoshiro256::seeded(12);
+    let data = rng.complex_vec(rows * cols);
+
+    // Config budget (via StreamProcessor) pins the chunking.
+    let cfg = ServiceConfig {
+        method: "native".into(),
+        stream_budget: 2 * cols * ELEM_BYTES,
+        ..Default::default()
+    };
+    let mut proc = StreamProcessor::from_config(&cfg);
+    let mut src = MemDataset::new(rows, cols, data.clone());
+    let mut sink = MemSink::new(Dims::new(rows, cols));
+    let report = proc.transform(&mut src, &mut sink, Direction::Forward).unwrap();
+    assert_eq!(report.chunks, 4, "config budget must control the chunking");
+
+    // Unset config budget falls through to the thread-local override.
+    let cfg = ServiceConfig { method: "native".into(), ..Default::default() };
+    let mut proc = StreamProcessor::from_config(&cfg);
+    let mut src = MemDataset::new(rows, cols, data);
+    let mut sink = MemSink::new(Dims::new(rows, cols));
+    let report = stream::with_budget(4 * cols * ELEM_BYTES, || {
+        proc.transform(&mut src, &mut sink, Direction::Forward)
+    })
+    .unwrap();
+    assert_eq!(report.chunks, 2, "thread-local budget must apply when config is unset");
+}
