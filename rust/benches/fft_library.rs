@@ -4,8 +4,21 @@
 //!   cargo bench --bench fft_library
 
 use memfft::bench::Bench;
-use memfft::fft::{Algorithm, FftPlan};
+use memfft::fft::{plan, Algorithm, Fft2d, FftPlan, ProblemSpec, Transform};
 use memfft::util::{pool, Timer, Xoshiro256};
+use memfft::C32;
+
+/// Minimum time of `reps` runs after one warm run, in ns.
+fn min_ns(reps: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warm: tables + scratch
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Timer::start();
+        f();
+        best = best.min(t.elapsed().as_nanos() as f64);
+    }
+    best
+}
 
 fn main() {
     let mut bench = Bench::from_env();
@@ -117,6 +130,100 @@ fn main() {
         println!(
             "table cache: {} entries, {} hits / {} misses (zero recomputation on re-plan)",
             after.entries, after.hits, after.misses
+        );
+    }
+
+    // ---- Descriptor parity gate (descriptor-API redesign acceptance) ----
+    // The ProblemSpec → plan() indirection must provably cost nothing in
+    // the plan-once / execute-many regime: descriptor throughput ≥ 0.95x
+    // of the legacy constructors on a 2^18 1-D c2c transform and a
+    // 512×512 2-D transform (min-of-reps, like the memtier gate).
+    {
+        let reps = if quick { 3 } else { 7 };
+
+        // 1-D: 2^18 c2c, in-place with thread-local scratch on both sides.
+        let n = 1usize << 18;
+        let input = rng.complex_vec(n);
+        let legacy = FftPlan::new(n, Algorithm::Auto);
+        let desc = plan(&ProblemSpec::one_d(n).unwrap().in_place()).unwrap();
+        assert_eq!(legacy.algorithm(), desc.algorithm(), "both sides must resolve alike");
+        let mut buf = input.clone();
+        let t_legacy = min_ns(reps, || {
+            buf.copy_from_slice(&input);
+            legacy.forward(&mut buf);
+            memfft::bench::bb(&buf);
+        });
+        let mut buf2 = input.clone();
+        let t_desc = min_ns(reps, || {
+            buf2.copy_from_slice(&input);
+            desc.forward(&mut buf2);
+            memfft::bench::bb(&buf2);
+        });
+        let ratio_1d = t_legacy / t_desc;
+        println!(
+            "descriptor parity @ 2^18 c2c: legacy {:.2} ms vs descriptor {:.2} ms -> {ratio_1d:.3}x",
+            t_legacy / 1e6,
+            t_desc / 1e6
+        );
+        assert!(
+            ratio_1d >= 0.95,
+            "descriptor plan must be >=0.95x of legacy at 2^18 c2c, got {ratio_1d:.3}x"
+        );
+
+        // 2-D: 512×512, explicit scratch on both sides.
+        let (rows, cols) = (512usize, 512usize);
+        let input2 = rng.complex_vec(rows * cols);
+        let legacy2 = Fft2d::new(rows, cols);
+        let desc2 = plan(&ProblemSpec::two_d(rows, cols).unwrap().in_place()).unwrap();
+        let mut scratch = vec![C32::ZERO; Transform::scratch_len(&legacy2).max(desc2.scratch_len())];
+        let mut buf = input2.clone();
+        let t_legacy2 = min_ns(reps, || {
+            buf.copy_from_slice(&input2);
+            legacy2.forward_inplace(&mut buf, &mut scratch).unwrap();
+            memfft::bench::bb(&buf);
+        });
+        let mut buf2 = input2.clone();
+        let mut scratch2 = vec![C32::ZERO; desc2.scratch_len()];
+        let t_desc2 = min_ns(reps, || {
+            buf2.copy_from_slice(&input2);
+            desc2.forward_batched_inplace(&mut buf2, &mut scratch2).unwrap();
+            memfft::bench::bb(&buf2);
+        });
+        let ratio_2d = t_legacy2 / t_desc2;
+        println!(
+            "descriptor parity @ 512x512 2-D: legacy {:.2} ms vs descriptor {:.2} ms -> {ratio_2d:.3}x",
+            t_legacy2 / 1e6,
+            t_desc2 / 1e6
+        );
+        assert!(
+            ratio_2d >= 0.95,
+            "descriptor plan must be >=0.95x of legacy at 512x512 2-D, got {ratio_2d:.3}x"
+        );
+
+        // The real path's non-allocating descriptor face must also hold
+        // parity against the legacy allocating RealFft::forward.
+        let n = 1usize << 16;
+        let x: Vec<f32> = (0..n).map(|k| (k as f32 * 0.37).sin()).collect();
+        let legacy_r = memfft::fft::RealFft::new(n);
+        let desc_r = plan(&ProblemSpec::real(n).unwrap()).unwrap();
+        let mut spec_out = vec![C32::ZERO; desc_r.spectrum_len().unwrap()];
+        let mut rscratch = vec![C32::ZERO; desc_r.scratch_len()];
+        let t_legacy_r = min_ns(reps, || {
+            memfft::bench::bb(&legacy_r.forward(&x));
+        });
+        let t_desc_r = min_ns(reps, || {
+            desc_r.forward_real_into(&x, &mut spec_out, &mut rscratch).unwrap();
+            memfft::bench::bb(&spec_out);
+        });
+        let ratio_r = t_legacy_r / t_desc_r;
+        println!(
+            "descriptor parity @ 2^16 r2c: legacy {:.3} ms vs descriptor {:.3} ms -> {ratio_r:.3}x",
+            t_legacy_r / 1e6,
+            t_desc_r / 1e6
+        );
+        assert!(
+            ratio_r >= 0.95,
+            "non-allocating r2c face must be >=0.95x of the allocating legacy, got {ratio_r:.3}x"
         );
     }
 

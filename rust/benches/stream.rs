@@ -55,7 +55,7 @@ fn main() {
             let (dims, loaded) = read_dataset(&input).expect("read");
             let re: Vec<f32> = loaded.iter().map(|c| c.re).collect();
             let im: Vec<f32> = loaded.iter().map(|c| c.im).collect();
-            let spec = BatchSpec { n: cols, batch: rows, direction: Direction::Forward };
+            let spec = BatchSpec::c2c(cols, rows, Direction::Forward).expect("valid batch spec");
             let out = backend.execute_batch(&spec, &re, &im).expect("batch");
             let interleaved: Vec<C32> =
                 out.re.iter().zip(&out.im).map(|(&a, &b)| C32::new(a, b)).collect();

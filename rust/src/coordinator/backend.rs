@@ -1,9 +1,10 @@
 //! The `Backend` execution interface: one contract from the coordinator to
 //! every substrate.
 //!
-//! A worker thread hands a size-homogeneous [`BatchSpec`] plus planar
-//! `f32` re/im planes to `Backend::execute_batch` and gets planar planes
-//! back — regardless of whether the batch runs on:
+//! A worker thread hands a descriptor-homogeneous [`BatchSpec`] — a
+//! validated [`ProblemSpec`] (1-D / 2-D, complex / real, batched) plus a
+//! direction — with planar `f32` re/im planes to `Backend::execute_batch`
+//! and gets planar planes back — regardless of whether the batch runs on:
 //!
 //! - [`NativeBackend`] — the in-process CPU FFT library, batched through
 //!   the `Transform` trait with one planar↔interleaved conversion per
@@ -24,18 +25,50 @@ use std::time::{Duration, Instant};
 
 use super::request::{Direction, ServiceError};
 use crate::config::ServiceConfig;
-use crate::fft::{Algorithm, PlanCache};
+use crate::fft::{Algorithm, Domain, FftError, PlanCache, ProblemSpec, Shape, Transform};
 use crate::gpusim::{self, GpuDescriptor, TiledOptions};
 use crate::runtime::Engine;
 use crate::util::complex::C32;
 use crate::util::{is_pow2, pool};
 
-/// One size-homogeneous batch of transforms: `batch` rows of `n` points.
+/// One descriptor-homogeneous batch of transforms: `problem.batch()`
+/// contiguous transforms of the descriptor's shape and domain. The
+/// descriptor is validated at construction ([`ProblemSpec`]), so a
+/// `BatchSpec` in hand always names a plannable, non-overflowing problem.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BatchSpec {
-    pub n: usize,
-    pub batch: usize,
+    /// The batched problem descriptor (shape × domain × batch × placement
+    /// × algorithm hint).
+    pub problem: ProblemSpec,
     pub direction: Direction,
+}
+
+impl BatchSpec {
+    pub fn new(problem: ProblemSpec, direction: Direction) -> Self {
+        Self { problem, direction }
+    }
+
+    /// Compat shorthand: `batch` 1-D complex transforms of `n` points —
+    /// the classic service lane. Fails like `ProblemSpec` construction
+    /// (zero size / overflow).
+    pub fn c2c(n: usize, batch: usize, direction: Direction) -> Result<Self, FftError> {
+        Ok(Self::new(ProblemSpec::one_d(n)?.batched(batch)?, direction))
+    }
+
+    /// Complex points per transform.
+    pub fn n(&self) -> usize {
+        self.problem.transform_elems()
+    }
+
+    /// Transforms in this batch.
+    pub fn batch(&self) -> usize {
+        self.problem.batch()
+    }
+
+    /// Complex points the whole batch spans (validated — cannot overflow).
+    pub fn total_elems(&self) -> usize {
+        self.problem.total_elems()
+    }
 }
 
 /// Planar result planes plus execution accounting.
@@ -109,13 +142,10 @@ pub trait Backend {
 }
 
 fn check_planes(spec: &BatchSpec, re: &[f32], im: &[f32]) -> Result<usize, BackendError> {
-    if spec.n == 0 || spec.batch == 0 {
-        return Err(BackendError::UnsupportedSize(spec.n));
-    }
-    let total = spec
-        .batch
-        .checked_mul(spec.n)
-        .ok_or(BackendError::UnsupportedSize(spec.n))?;
+    // Zero sizes and batch×n overflow cannot reach here: ProblemSpec
+    // construction already rejected them. Plane lengths are the one
+    // wire-level invariant left to check.
+    let total = spec.total_elems();
     if re.len() != total || im.len() != total {
         return Err(BackendError::Shape { expected: total, got: re.len().min(im.len()) });
     }
@@ -184,23 +214,32 @@ impl Backend for NativeBackend {
     ) -> Result<BatchOutput, BackendError> {
         let total = check_planes(spec, re, im)?;
         let t = Instant::now();
-        let hit = self.plans.contains(spec.n, self.algo);
+        // The backend's pinned algorithm (the `method` knob) fills in an
+        // unspecified hint; an explicit per-request hint wins.
+        let problem = if spec.problem.algorithm() == Algorithm::Auto {
+            spec.problem.with_algorithm(self.algo)
+        } else {
+            spec.problem
+        };
+        let hit = self.plans.contains_spec(&problem);
         let plan = self
             .plans
-            .try_get(spec.n, self.algo)
-            .map_err(|_| BackendError::UnsupportedSize(spec.n))?;
+            .try_get_spec(&problem)
+            .map_err(|_| BackendError::UnsupportedSize(spec.n()))?;
+        let n = spec.n();
+        let batch = spec.batch();
 
         // Planar → interleaved, once per batch (not per request), chunked
         // across the worker pool (pure data movement — any split is
         // bit-identical). Serial path writes each element exactly once;
         // the chunked path resizes without clearing (the chunk writers
         // cover every element), so steady state pays no redundant memset.
-        if pool::effective_chunks(spec.batch) <= 1 {
+        if pool::effective_chunks(batch) <= 1 {
             self.input.clear();
             self.input.extend(re.iter().zip(im).map(|(&a, &b)| C32::new(a, b)));
         } else {
             self.input.resize(total, C32::ZERO);
-            pool::for_each_chunk(&mut self.input, spec.n, |offset, chunk| {
+            pool::for_each_chunk(&mut self.input, n, |offset, chunk| {
                 for (i, c) in chunk.iter_mut().enumerate() {
                     *c = C32::new(re[offset + i], im[offset + i]);
                 }
@@ -211,13 +250,13 @@ impl Backend for NativeBackend {
 
         let run = match spec.direction {
             Direction::Forward => plan.forward_batch_into(
-                spec.batch,
+                batch,
                 &self.input,
                 &mut self.output,
                 &mut self.scratch,
             ),
             Direction::Inverse => plan.inverse_batch_into(
-                spec.batch,
+                batch,
                 &self.input,
                 &mut self.output,
                 &mut self.scratch,
@@ -230,7 +269,7 @@ impl Backend for NativeBackend {
         let mut out_re;
         let mut out_im;
         let interleaved = &self.output;
-        if pool::effective_chunks(spec.batch) <= 1 {
+        if pool::effective_chunks(batch) <= 1 {
             out_re = Vec::with_capacity(total);
             out_im = Vec::with_capacity(total);
             for c in interleaved {
@@ -240,7 +279,7 @@ impl Backend for NativeBackend {
         } else {
             out_re = vec![0f32; total];
             out_im = vec![0f32; total];
-            pool::for_each_chunk2(&mut out_re, &mut out_im, spec.n, |offset, rc, ic| {
+            pool::for_each_chunk2(&mut out_re, &mut out_im, n, |offset, rc, ic| {
                 let src = &interleaved[offset..offset + rc.len()];
                 for ((r, i), c) in rc.iter_mut().zip(ic.iter_mut()).zip(src) {
                     *r = c.re;
@@ -296,7 +335,18 @@ impl Backend for PjrtBackend {
         im: &[f32],
     ) -> Result<BatchOutput, BackendError> {
         let total = check_planes(spec, re, im)?;
-        let n = spec.n;
+        // AOT artifacts exist per (n, batch) for 1-D complex transforms
+        // only; other descriptors must be routed to a native method.
+        let n = match (spec.problem.shape(), spec.problem.domain()) {
+            (Shape::OneD { n }, Domain::ComplexToComplex) => n,
+            (shape, _) => {
+                return Err(BackendError::Exec(format!(
+                    "pjrt artifacts serve 1-D complex transforms only, got shape {shape} / {:?}",
+                    spec.problem.domain()
+                )))
+            }
+        };
+        let batch = spec.batch();
         let op = spec.direction.op();
         // Fail fast (and cheaply) when no artifact family exists at all.
         self.engine
@@ -310,8 +360,8 @@ impl Backend for PjrtBackend {
         let mut hits = 0u64;
         let mut misses = 0u64;
         let mut done = 0usize;
-        while done < spec.batch {
-            let remaining = spec.batch - done;
+        while done < batch {
+            let remaining = batch - done;
             // Smallest artifact variant covering the tail (falls back to
             // the largest — then this loop round-trips again).
             let entry = self
@@ -387,9 +437,15 @@ impl Backend for ModeledBackend {
         im: &[f32],
     ) -> Result<BatchOutput, BackendError> {
         let mut out = self.native.execute_batch(spec, re, im)?;
-        if is_pow2(spec.n) {
-            let sched = gpusim::tiled(spec.n, spec.batch, TiledOptions::default(), &self.gpu);
-            out.exec_time = Duration::from_secs_f64(sched.predict(&self.gpu).total_s);
+        // The C2070 cost model covers the paper's case: 1-D complex
+        // power-of-two transforms. Everything else keeps native timing.
+        if let (Shape::OneD { n }, Domain::ComplexToComplex) =
+            (spec.problem.shape(), spec.problem.domain())
+        {
+            if is_pow2(n) {
+                let sched = gpusim::tiled(n, spec.batch(), TiledOptions::default(), &self.gpu);
+                out.exec_time = Duration::from_secs_f64(sched.predict(&self.gpu).total_s);
+            }
         }
         Ok(out)
     }
@@ -434,7 +490,7 @@ mod tests {
         let (ire, iim) = impulse(n);
         let re: Vec<f32> = ire.iter().cycle().take(batch * n).copied().collect();
         let im: Vec<f32> = iim.iter().cycle().take(batch * n).copied().collect();
-        let spec = BatchSpec { n, batch, direction: Direction::Forward };
+        let spec = BatchSpec::c2c(n, batch, Direction::Forward).unwrap();
         let out = b.execute_batch(&spec, &re, &im).unwrap();
         assert_eq!(out.re.len(), batch * n);
         for k in 0..batch * n {
@@ -449,13 +505,13 @@ mod tests {
         b.warmup(&[256]).unwrap();
         assert_eq!(b.plan_count(), 1);
         let (re, im) = impulse(256);
-        let spec = BatchSpec { n: 256, batch: 1, direction: Direction::Forward };
+        let spec = BatchSpec::c2c(256, 1, Direction::Forward).unwrap();
         let out = b.execute_batch(&spec, &re, &im).unwrap();
         assert_eq!(out.plan_cache_hits, 1);
         assert_eq!(out.plan_cache_misses, 0);
         // An unwarmed size records a miss, then hits.
         let (re, im) = impulse(128);
-        let spec = BatchSpec { n: 128, batch: 1, direction: Direction::Forward };
+        let spec = BatchSpec::c2c(128, 1, Direction::Forward).unwrap();
         assert_eq!(b.execute_batch(&spec, &re, &im).unwrap().plan_cache_misses, 1);
         assert_eq!(b.execute_batch(&spec, &re, &im).unwrap().plan_cache_hits, 1);
     }
@@ -467,9 +523,9 @@ mod tests {
         let mut rng = crate::util::Xoshiro256::seeded(9);
         let re = rng.real_vec(n);
         let im = rng.real_vec(n);
-        let fwd = BatchSpec { n, batch: 1, direction: Direction::Forward };
+        let fwd = BatchSpec::c2c(n, 1, Direction::Forward).unwrap();
         let f = b.execute_batch(&fwd, &re, &im).unwrap();
-        let inv = BatchSpec { n, batch: 1, direction: Direction::Inverse };
+        let inv = BatchSpec::c2c(n, 1, Direction::Inverse).unwrap();
         let back = b.execute_batch(&inv, &f.re, &f.im).unwrap();
         for k in 0..n {
             assert!((back.re[k] - re[k]).abs() < 1e-3);
@@ -480,14 +536,51 @@ mod tests {
     #[test]
     fn native_rejects_bad_planes_and_zero() {
         let mut b = NativeBackend::default();
-        let spec = BatchSpec { n: 64, batch: 2, direction: Direction::Forward };
+        let spec = BatchSpec::c2c(64, 2, Direction::Forward).unwrap();
         let err = b.execute_batch(&spec, &[0.0; 64], &[0.0; 64]).unwrap_err();
         assert!(matches!(err, BackendError::Shape { expected: 128, got: 64 }));
-        let spec = BatchSpec { n: 0, batch: 1, direction: Direction::Forward };
-        assert!(matches!(
-            b.execute_batch(&spec, &[], &[]).unwrap_err(),
-            BackendError::UnsupportedSize(0)
-        ));
+        // Zero sizes never reach a backend: the descriptor rejects them
+        // at construction (the redesign moved this validation up front).
+        assert_eq!(BatchSpec::c2c(0, 1, Direction::Forward).unwrap_err(), FftError::ZeroSize);
+        assert_eq!(BatchSpec::c2c(64, 0, Direction::Forward).unwrap_err(), FftError::ZeroSize);
+    }
+
+    #[test]
+    fn native_serves_2d_and_real_descriptors() {
+        // A 2-D descriptor executes through the same wire format and
+        // matches the legacy Fft2d path bit-for-bit.
+        let mut b = NativeBackend::default();
+        let (rows, cols) = (8usize, 32usize);
+        let mut rng = crate::util::Xoshiro256::seeded(21);
+        let re = rng.real_vec(rows * cols);
+        let im = rng.real_vec(rows * cols);
+        let spec = BatchSpec::new(
+            ProblemSpec::two_d(rows, cols).unwrap(),
+            Direction::Forward,
+        );
+        let out = b.execute_batch(&spec, &re, &im).unwrap();
+        let mut legacy: Vec<C32> =
+            re.iter().zip(&im).map(|(&a, &b)| C32::new(a, b)).collect();
+        let f2 = crate::fft::Fft2d::try_new(rows, cols, Algorithm::Auto).unwrap();
+        let mut scratch = vec![C32::ZERO; Transform::scratch_len(&f2)];
+        f2.forward_inplace(&mut legacy, &mut scratch).unwrap();
+        for (k, c) in legacy.iter().enumerate() {
+            assert_eq!(out.re[k].to_bits(), c.re.to_bits(), "re[{k}]");
+            assert_eq!(out.im[k].to_bits(), c.im.to_bits(), "im[{k}]");
+        }
+
+        // A real-domain descriptor produces the full Hermitian spectrum of
+        // the re plane (imaginary inputs ignored by contract).
+        let n = 64usize;
+        let x = rng.real_vec(n);
+        let zeros = vec![0.0f32; n];
+        let spec = BatchSpec::new(ProblemSpec::real(n).unwrap(), Direction::Forward);
+        let out = b.execute_batch(&spec, &x, &zeros).unwrap();
+        let typed = crate::fft::RealFft::try_new(n).unwrap().forward(&x);
+        for k in 0..=n / 2 {
+            assert_eq!(out.re[k].to_bits(), typed[k].re.to_bits(), "bin {k}");
+            assert_eq!(out.im[k].to_bits(), typed[k].im.to_bits(), "bin {k}");
+        }
     }
 
     #[test]
@@ -496,7 +589,7 @@ mod tests {
         b.warmup(&[512]).unwrap();
         let n = 512;
         let (re, im) = impulse(n);
-        let spec = BatchSpec { n, batch: 1, direction: Direction::Forward };
+        let spec = BatchSpec::c2c(n, 1, Direction::Forward).unwrap();
         let out = b.execute_batch(&spec, &re, &im).unwrap();
         assert_eq!(out.plan_cache_hits, 1, "warmup must pre-plan memtier sizes");
         for k in 0..n {
@@ -510,7 +603,7 @@ mod tests {
         let mut b = ModeledBackend::new();
         let n = 1024;
         let (re, im) = impulse(n);
-        let spec = BatchSpec { n, batch: 1, direction: Direction::Forward };
+        let spec = BatchSpec::c2c(n, 1, Direction::Forward).unwrap();
         let out = b.execute_batch(&spec, &re, &im).unwrap();
         // Numerics still real...
         for k in 0..n {

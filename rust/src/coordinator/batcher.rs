@@ -1,10 +1,14 @@
-//! Size-bucketed dynamic batcher.
+//! Descriptor-bucketed dynamic batcher.
 //!
-//! Requests for the same transform size land in the same bucket; a bucket
-//! flushes when it reaches `max_batch` or its oldest request has waited
-//! `max_delay`. This is the vLLM-style continuous-batching idea scaled to
-//! the FFT service: the AOT artifacts exist per (n, batch) variant, so
-//! batching multiplies PJRT throughput without recompilation.
+//! Requests with the same **descriptor key** ([`SpecKey`]: shape × domain
+//! × algorithm hint) and direction land in the same bucket; a
+//! bucket flushes when it reaches `max_batch` or its oldest request has
+//! waited `max_delay`. This is the vLLM-style continuous-batching idea
+//! scaled to the FFT service: the AOT artifacts exist per (n, batch)
+//! variant, so batching multiplies PJRT throughput without recompilation.
+//! Keying on the full descriptor — not a bare element count — is what
+//! keeps distinct 2-D shapes with equal element counts (8×1024 vs 1024×8)
+//! out of each other's batches.
 //!
 //! Pure data structure — no threads — so it is exhaustively property-tested;
 //! the service (`service.rs`) drives it from the batcher thread.
@@ -13,12 +17,23 @@ use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use super::request::{Direction, FftRequest};
+use crate::fft::{ProblemSpec, SpecKey};
 
-/// A flushed batch, ready for a worker.
+/// A flushed batch, ready for a worker: `requests.len()` transforms of one
+/// shared descriptor.
 pub struct Batch {
-    pub n: usize,
+    /// The per-transform descriptor every request in this batch shares
+    /// (`batch() == 1`; the worker re-batches it to `requests.len()`).
+    pub problem: ProblemSpec,
     pub direction: Direction,
     pub requests: Vec<FftRequest>,
+}
+
+impl Batch {
+    /// Complex points per transform in this batch.
+    pub fn n(&self) -> usize {
+        self.problem.transform_elems()
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -36,7 +51,7 @@ impl Default for BatcherConfig {
 /// Bucketed pending requests.
 pub struct Batcher {
     config: BatcherConfig,
-    buckets: BTreeMap<(usize, Direction), Vec<FftRequest>>,
+    buckets: BTreeMap<(SpecKey, Direction), Vec<FftRequest>>,
     pending: usize,
 }
 
@@ -82,17 +97,17 @@ impl Batcher {
 
     /// Add a request. Returns a full batch if the bucket hit `max_batch`.
     pub fn push(&mut self, req: FftRequest) -> Option<Batch> {
-        let key = (req.n, req.direction);
+        let key = (req.problem.key(), req.direction);
         let bucket = self.buckets.entry(key).or_default();
         bucket.push(req);
         self.pending += 1;
         if bucket.len() >= self.config.max_batch {
             // Remove the entry outright: a drained-but-present bucket would
-            // linger in the map forever (one stale key per (n, direction)
-            // ever served), inflating every flush/deadline scan.
+            // linger in the map forever (one stale key per (descriptor,
+            // direction) ever served), inflating every flush/deadline scan.
             let requests = self.buckets.remove(&key).expect("bucket just filled");
             self.pending -= requests.len();
-            Some(Batch { n: key.0, direction: key.1, requests })
+            Some(Batch { problem: requests[0].problem, direction: key.1, requests })
         } else {
             None
         }
@@ -106,7 +121,7 @@ impl Batcher {
 
     /// Flush every bucket whose oldest request has waited >= max_delay.
     pub fn flush_expired(&mut self, now: Instant) -> Vec<Batch> {
-        let expired: Vec<(usize, Direction)> = self
+        let expired: Vec<(SpecKey, Direction)> = self
             .buckets
             .iter()
             .filter(|(_, reqs)| {
@@ -124,14 +139,14 @@ impl Batcher {
                     return None;
                 }
                 self.pending -= requests.len();
-                Some(Batch { n: k.0, direction: k.1, requests })
+                Some(Batch { problem: requests[0].problem, direction: k.1, requests })
             })
             .collect()
     }
 
     /// Flush everything (shutdown path).
     pub fn flush_all(&mut self) -> Vec<Batch> {
-        let keys: Vec<(usize, Direction)> = self.buckets.keys().copied().collect();
+        let keys: Vec<(SpecKey, Direction)> = self.buckets.keys().copied().collect();
         keys.into_iter()
             .filter_map(|k| {
                 let requests = self.buckets.remove(&k)?;
@@ -139,7 +154,7 @@ impl Batcher {
                     return None;
                 }
                 self.pending -= requests.len();
-                Some(Batch { n: k.0, direction: k.1, requests })
+                Some(Batch { problem: requests[0].problem, direction: k.1, requests })
             })
             .collect()
     }
@@ -169,7 +184,27 @@ mod tests {
         (
             FftRequest {
                 id,
-                n,
+                problem: ProblemSpec::one_d(n).unwrap(),
+                direction: Direction::Forward,
+                re: vec![0.0; n],
+                im: vec![0.0; n],
+                submitted_at: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    fn req_spec(
+        id: u64,
+        problem: ProblemSpec,
+    ) -> (FftRequest, mpsc::Receiver<FftResult>) {
+        let n = problem.transform_elems();
+        let (tx, rx) = mpsc::channel();
+        (
+            FftRequest {
+                id,
+                problem,
                 direction: Direction::Forward,
                 re: vec![0.0; n],
                 im: vec![0.0; n],
@@ -197,8 +232,43 @@ mod tests {
         rxs.push(rx);
         let batch = b.push(r).expect("third push fills the bucket");
         assert_eq!(batch.requests.len(), 3);
-        assert_eq!(batch.n, 64);
+        assert_eq!(batch.n(), 64);
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn distinct_2d_shapes_with_equal_elems_do_not_merge() {
+        // Regression (descriptor redesign): 8×1024 and 1024×8 both span
+        // 8192 elements — bucketing on a bare element count would fold
+        // them into one batch and execute half the requests with the
+        // wrong plan. The full descriptor key must keep them apart.
+        let mut b = Batcher::new(cfg(2, 1_000_000));
+        let mut _rxs = vec![];
+        let wide = ProblemSpec::two_d(8, 1024).unwrap();
+        let tall = ProblemSpec::two_d(1024, 8).unwrap();
+        assert_eq!(wide.transform_elems(), tall.transform_elems());
+        let (r1, x1) = req_spec(1, wide);
+        let (r2, x2) = req_spec(2, tall);
+        _rxs.push(x1);
+        _rxs.push(x2);
+        assert!(b.push(r1).is_none());
+        assert!(
+            b.push(r2).is_none(),
+            "a transposed shape must not complete the other shape's batch"
+        );
+        assert_eq!(b.bucket_count(), 2, "equal-elems shapes must occupy distinct buckets");
+        // Each shape still batches with itself.
+        let (r3, x3) = req_spec(3, wide);
+        _rxs.push(x3);
+        let batch = b.push(r3).expect("second 8x1024 fills that bucket");
+        assert_eq!(batch.problem, wide);
+        assert!(batch.requests.iter().all(|r| r.problem == wide));
+        assert_eq!(b.pending(), 1, "the 1024x8 request stays queued");
+        // A 1-D request of the same element count is yet another bucket.
+        let (r4, x4) = req_spec(4, ProblemSpec::one_d(8 * 1024).unwrap());
+        _rxs.push(x4);
+        assert!(b.push(r4).is_none());
+        assert_eq!(b.bucket_count(), 2);
     }
 
     #[test]
@@ -268,7 +338,7 @@ mod tests {
         (
             FftRequest {
                 id,
-                n,
+                problem: ProblemSpec::one_d(n).unwrap(),
                 direction,
                 re: vec![0.0; n],
                 im: vec![0.0; n],
@@ -389,8 +459,8 @@ mod tests {
                         "push-triggered batch must be exactly max_batch"
                     );
                     crate::prop_assert!(
-                        batch.requests.iter().all(|r| r.n == batch.n),
-                        "mixed sizes in batch"
+                        batch.requests.iter().all(|r| r.problem == batch.problem),
+                        "mixed descriptors in batch"
                     );
                     emitted += batch.requests.len();
                     for r in &batch.requests {

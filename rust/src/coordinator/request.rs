@@ -3,6 +3,8 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::fft::ProblemSpec;
+
 /// Transform direction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Direction {
@@ -19,17 +21,27 @@ impl Direction {
     }
 }
 
-/// One FFT request: `n`-point transform of the (re, im) planes.
+/// One FFT request: a single transform (`problem.batch() == 1`) described
+/// by its validated descriptor, over planar (re, im) planes.
 #[derive(Debug)]
 pub struct FftRequest {
     pub id: u64,
-    pub n: usize,
+    /// The transform descriptor (shape / domain / placement / algorithm
+    /// hint) — what the batcher buckets on and the backend plans from.
+    pub problem: ProblemSpec,
     pub direction: Direction,
     pub re: Vec<f32>,
     pub im: Vec<f32>,
     pub submitted_at: Instant,
     /// One-shot reply channel.
     pub reply: mpsc::Sender<FftResult>,
+}
+
+impl FftRequest {
+    /// Complex points one transform of this request spans.
+    pub fn n(&self) -> usize {
+        self.problem.transform_elems()
+    }
 }
 
 /// Service-level errors surfaced to clients.

@@ -25,6 +25,7 @@ use super::backend::{self, Backend, BatchSpec};
 use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::request::{Direction, FftRequest, FftResponse, FftResult, ServiceError};
 use crate::config::ServiceConfig;
+use crate::fft::{Domain, ProblemSpec, Shape};
 use crate::metrics::ServiceMetrics;
 use crate::util::is_pow2;
 
@@ -107,8 +108,10 @@ impl FftService {
         &self.config
     }
 
-    /// Submit an FFT; returns the reply channel immediately. Backpressure:
-    /// a full submit queue rejects synchronously.
+    /// Submit a classic 1-D complex FFT; returns the reply channel
+    /// immediately. Backpressure: a full submit queue rejects
+    /// synchronously. (Compat face over [`FftService::submit_spec`] —
+    /// sizes are restricted to powers of two, the artifact-servable set.)
     pub fn submit(
         &self,
         n: usize,
@@ -119,13 +122,39 @@ impl FftService {
         if !is_pow2(n) {
             return Err(ServiceError::UnsupportedSize(n));
         }
+        let problem = ProblemSpec::one_d(n).map_err(|_| ServiceError::UnsupportedSize(n))?;
+        self.submit_spec(problem, direction, re, im)
+    }
+
+    /// Submit one transform described by a validated descriptor — the
+    /// descriptor-planning entry point: 1-D, 2-D and real-domain problems
+    /// all enter here and are bucketed by descriptor key. The descriptor
+    /// must name a single transform (`batch() == 1`); batching across
+    /// requests is the batcher's job.
+    pub fn submit_spec(
+        &self,
+        problem: ProblemSpec,
+        direction: Direction,
+        re: Vec<f32>,
+        im: Vec<f32>,
+    ) -> Result<Receiver<FftResult>, ServiceError> {
+        let n = problem.transform_elems();
+        if problem.batch() != 1 {
+            return Err(ServiceError::BadInput { n, got: n * problem.batch() });
+        }
         if re.len() != n || im.len() != n {
             return Err(ServiceError::BadInput { n, got: re.len().min(im.len()) });
+        }
+        if matches!(problem.shape(), Shape::TwoD { .. }) {
+            self.metrics.requests_2d.inc();
+        }
+        if problem.domain() == Domain::RealToComplex {
+            self.metrics.requests_r2c.inc();
         }
         let (reply, rx) = mpsc::channel();
         let req = FftRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            n,
+            problem,
             direction,
             re,
             im,
@@ -152,6 +181,18 @@ impl FftService {
         im: Vec<f32>,
     ) -> FftResult {
         let rx = self.submit(n, direction, re, im)?;
+        rx.recv().map_err(|_| ServiceError::Shutdown)?
+    }
+
+    /// Convenience: submit a descriptor and wait.
+    pub fn transform_blocking(
+        &self,
+        problem: ProblemSpec,
+        direction: Direction,
+        re: Vec<f32>,
+        im: Vec<f32>,
+    ) -> FftResult {
+        let rx = self.submit_spec(problem, direction, re, im)?;
         rx.recv().map_err(|_| ServiceError::Shutdown)?
     }
 
@@ -262,7 +303,7 @@ fn worker_body(
 /// `Backend::execute_batch`, scatter responses. Substrate differences
 /// (chunking, plan caches, cost models) live behind the trait.
 fn run_batch(batch: Batch, backend: &mut dyn Backend, metrics: &ServiceMetrics) {
-    let n = batch.n;
+    let n = batch.n();
     let count = batch.requests.len();
     let now = Instant::now();
     metrics.batches_executed.inc();
@@ -278,7 +319,12 @@ fn run_batch(batch: Batch, backend: &mut dyn Backend, metrics: &ServiceMetrics) 
         re.extend_from_slice(&r.re);
         im.extend_from_slice(&r.im);
     }
-    let spec = BatchSpec { n, batch: count, direction: batch.direction };
+    // Re-batch the shared per-transform descriptor to the bucket's fill.
+    let problem = match batch.problem.batched(count) {
+        Ok(p) => p,
+        Err(e) => return fail_batch(batch, ServiceError::Exec(e.to_string()), metrics),
+    };
+    let spec = BatchSpec::new(problem, batch.direction);
 
     match backend.execute_batch(&spec, &re, &im) {
         Ok(out) => {
@@ -486,6 +532,62 @@ mod tests {
             .predict(&gpu)
             .total_s;
         assert_eq!(resp.exec_time, Duration::from_secs_f64(predicted));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn two_d_descriptor_round_trips_bitwise_against_legacy() {
+        // The acceptance 2-D service round trip: a TwoD descriptor
+        // submitted through submit_spec must come back bit-for-bit equal
+        // to the legacy in-memory Fft2d reference, and invert back.
+        use crate::fft::Transform;
+        let svc = FftService::start(native_cfg());
+        let (rows, cols) = (8usize, 64usize);
+        let mut rng = crate::util::Xoshiro256::seeded(31);
+        let re = rng.real_vec(rows * cols);
+        let im = rng.real_vec(rows * cols);
+        let problem = crate::fft::ProblemSpec::two_d(rows, cols).unwrap();
+        let f = svc
+            .transform_blocking(problem, Direction::Forward, re.clone(), im.clone())
+            .unwrap();
+
+        let mut legacy: Vec<crate::util::complex::C32> = re
+            .iter()
+            .zip(&im)
+            .map(|(&a, &b)| crate::util::complex::C32::new(a, b))
+            .collect();
+        let plan =
+            crate::fft::Fft2d::try_new(rows, cols, crate::fft::Algorithm::Auto).unwrap();
+        let mut scratch =
+            vec![crate::util::complex::C32::ZERO; Transform::scratch_len(&plan)];
+        plan.forward_inplace(&mut legacy, &mut scratch).unwrap();
+        for (k, c) in legacy.iter().enumerate() {
+            assert_eq!(f.re[k].to_bits(), c.re.to_bits(), "re[{k}]");
+            assert_eq!(f.im[k].to_bits(), c.im.to_bits(), "im[{k}]");
+        }
+
+        let b = svc.transform_blocking(problem, Direction::Inverse, f.re, f.im).unwrap();
+        for k in 0..rows * cols {
+            assert!((b.re[k] - re[k]).abs() < 1e-3);
+            assert!((b.im[k] - im[k]).abs() < 1e-3);
+        }
+        assert_eq!(svc.metrics().requests_2d.get(), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_spec_rejects_batched_descriptors_and_bad_planes() {
+        let svc = FftService::start(native_cfg());
+        let batched = crate::fft::ProblemSpec::one_d(64).unwrap().batched(2).unwrap();
+        assert!(matches!(
+            svc.submit_spec(batched, Direction::Forward, vec![0.0; 128], vec![0.0; 128]),
+            Err(ServiceError::BadInput { .. })
+        ));
+        let one = crate::fft::ProblemSpec::one_d(64).unwrap();
+        assert!(matches!(
+            svc.submit_spec(one, Direction::Forward, vec![0.0; 3], vec![0.0; 3]),
+            Err(ServiceError::BadInput { .. })
+        ));
         svc.shutdown();
     }
 

@@ -19,9 +19,12 @@ use super::backend::{self, Backend};
 use super::request::Direction;
 use super::service::FftService;
 use crate::config::ServiceConfig;
+use crate::fft::ProblemSpec;
 use crate::metrics::ServiceMetrics;
 use crate::sar;
-use crate::stream::{self, ChunkSink, ChunkSource, PipelineReport, SliceIo, StreamError};
+use crate::stream::{
+    self, ChunkSink, ChunkSource, PipelineReport, SliceIo, StreamError, Streamed2d,
+};
 
 /// One-thread driver for dataset jobs over any configured backend.
 pub struct StreamProcessor {
@@ -63,8 +66,9 @@ impl StreamProcessor {
         self.backend.name()
     }
 
-    /// Stream a dataset through `Backend::execute_batch`, one transform
-    /// per row (`direction` picks fft / ifft).
+    /// Stream a dataset through `Backend::execute_batch`, one complex
+    /// transform per row (`direction` picks fft / ifft) — the c2c compat
+    /// face of [`StreamProcessor::transform_spec`].
     pub fn transform(
         &mut self,
         source: &mut dyn ChunkSource,
@@ -77,6 +81,51 @@ impl StreamProcessor {
         crate::util::pool::with_threads(threads, || {
             crate::config::cache::with_tile(tile, || {
                 stream::stream_transform(source, sink, backend, direction, budget, Some(metrics))
+            })
+        })
+    }
+
+    /// Stream a dataset under a per-row descriptor (c2c, or r2c with
+    /// half-spectrum output — see `stream::stream_transform_spec`).
+    pub fn transform_spec(
+        &mut self,
+        source: &mut dyn ChunkSource,
+        sink: &mut dyn ChunkSink,
+        row_spec: &ProblemSpec,
+        direction: Direction,
+    ) -> Result<PipelineReport, StreamError> {
+        let (threads, tile, budget) = (self.threads, self.tile, self.budget);
+        let backend = self.backend.as_mut();
+        let metrics = &*self.metrics;
+        crate::util::pool::with_threads(threads, || {
+            crate::config::cache::with_tile(tile, || {
+                stream::stream_transform_spec(
+                    source,
+                    sink,
+                    backend,
+                    row_spec,
+                    direction,
+                    budget,
+                    Some(metrics),
+                )
+            })
+        })
+    }
+
+    /// Execute one whole-dataset 2-D transform out of core (row-chunked
+    /// stage A, column-strip stage B — see `stream::twod`).
+    pub fn transform_2d(
+        &mut self,
+        source: &mut dyn ChunkSource,
+        out: &mut dyn SliceIo,
+        direction: Direction,
+    ) -> Result<Streamed2d, StreamError> {
+        let (threads, tile, budget) = (self.threads, self.tile, self.budget);
+        let backend = self.backend.as_mut();
+        let metrics = &*self.metrics;
+        crate::util::pool::with_threads(threads, || {
+            crate::config::cache::with_tile(tile, || {
+                stream::stream_transform_2d(source, out, backend, direction, budget, Some(metrics))
             })
         })
     }

@@ -52,17 +52,37 @@ pub struct Fft2d {
 }
 
 impl Fft2d {
+    /// Fallible constructor — the descriptor path (`fft::spec::plan`)
+    /// entry point: zero dims, overflowing geometries and unservable
+    /// pinned algorithms surface as `FftError`.
+    pub fn try_new(rows: usize, cols: usize, algo: Algorithm) -> Result<Self, FftError> {
+        if rows == 0 || cols == 0 {
+            return Err(FftError::ZeroSize);
+        }
+        rows.checked_mul(cols).ok_or(FftError::Overflow { n: cols, batch: rows })?;
+        Ok(Self {
+            rows,
+            cols,
+            row_plan: FftPlan::try_new(cols, algo)?,
+            col_plan: FftPlan::try_new(rows, algo)?,
+        })
+    }
+
+    /// Panicking convenience over [`Fft2d::try_new`] with `Auto` (compat
+    /// shim; request paths plan through `fft::spec`).
     pub fn new(rows: usize, cols: usize) -> Self {
         Self::with_algorithm(rows, cols, Algorithm::Auto)
     }
 
     pub fn with_algorithm(rows: usize, cols: usize, algo: Algorithm) -> Self {
-        Self {
-            rows,
-            cols,
-            row_plan: FftPlan::new(cols, algo),
-            col_plan: FftPlan::new(rows, algo),
-        }
+        Self::try_new(rows, cols, algo)
+            .unwrap_or_else(|e| panic!("Fft2d::new({rows}x{cols}, {algo:?}): {e}"))
+    }
+
+    /// The resolved row-pass algorithm (column pass resolves the same hint
+    /// at its own size).
+    pub fn algorithm(&self) -> Algorithm {
+        self.row_plan.algorithm()
     }
 
     /// Forward 2-D FFT of a row-major rows × cols matrix, in place. Row and

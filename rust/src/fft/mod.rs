@@ -1,21 +1,52 @@
 //! CPU FFT library — the repo's FFTW-role comparator (DESIGN.md §2),
-//! unified behind the [`Transform`] execution API.
+//! unified behind the [`Transform`] execution API and planned through the
+//! descriptor entry point [`spec::plan`].
 //!
 //! Every kernel — iterative radix-2 DIT, Stockham autosort, mixed radix-4,
 //! recursive split-radix, Bailey four-step (the paper's method on CPU),
 //! Bluestein for arbitrary sizes, real-input RFFT and the 2-D transform —
 //! implements the same trait: out-of-place fallible `forward_into` /
 //! `inverse_into`, batched `forward_batch_into`, and `scratch_len()` so
-//! callers own scratch reuse. The FFTW-style planner ([`FftPlan`],
-//! [`PlanCache`], [`Planner`]) wraps the chosen kernel as a
-//! `Box<dyn Transform>` and memoizes plans on the *resolved* algorithm, so
-//! `Auto` and its concrete winner share one plan.
+//! callers own scratch reuse.
 //!
-//! Migration note (execution-API redesign): the enum-dispatch era's
-//! `FftPlan::forward(&mut x)` remains as in-place, thread-local-scratch
-//! convenience sugar, but new code — anything batched, fallible, or
-//! scratch-sensitive — should use `forward_into` / `forward_batch_into`
-//! from the [`Transform`] trait. See DESIGN.md §Execution-API.
+//! **Plan by problem shape.** A [`ProblemSpec`] describes the whole
+//! problem — `Shape` (1-D / 2-D), `Domain` (complex / real), batch count,
+//! `Placement` and an algorithm hint — validated at construction; one
+//! fallible call composes the kernels:
+//!
+//! ```
+//! use memfft::fft::{plan, ProblemSpec};
+//! use memfft::C32;
+//!
+//! // 3 batched 1024-point complex transforms, planned once.
+//! let spec = ProblemSpec::one_d(1024).and_then(|s| s.batched(3)).unwrap();
+//! let p = plan(&spec).unwrap();
+//! let input = vec![C32::ONE; p.total_elems()];
+//! let mut output = vec![C32::ZERO; p.total_elems()];
+//! let mut scratch = vec![C32::ZERO; p.scratch_len()];
+//! p.forward_batched(&input, &mut output, &mut scratch).unwrap();
+//!
+//! // A 16×64 2-D transform and a real-input (half-spectrum) transform
+//! // plan through the same entry point:
+//! let p2 = plan(&ProblemSpec::two_d(16, 64).unwrap()).unwrap();
+//! let pr = plan(&ProblemSpec::real(256).unwrap()).unwrap();
+//! assert_eq!(pr.spectrum_len(), Some(129));
+//! # assert_eq!(p2.transform_len(), 1024);
+//! ```
+//!
+//! [`PlanCache`] memoizes plans on the **resolved descriptor** (+
+//! effective memory-tier tile), so `Auto` and its concrete winner share
+//! one plan; `Planner::measured` times candidates like FFTW_MEASURE.
+//!
+//! Migration note (descriptor redesign, DESIGN.md §9): the legacy
+//! constructors remain as thin compat shims — `FftPlan::new(n, algo)` ≡
+//! `plan(&ProblemSpec::one_d(n)?.with_algorithm(algo))`, `Fft2d::new(r, c)`
+//! ≡ `plan(&ProblemSpec::two_d(r, c)?)`, `RealFft::new(n)` ≡
+//! `plan(&ProblemSpec::real(n)?)` — but everything batched, fallible, or
+//! scratch-sensitive should describe its problem as a `ProblemSpec` and go
+//! through `plan()` / `PlanCache::try_get_spec`. The real path's
+//! non-allocating faces are `Plan::forward_real_into` /
+//! `Plan::inverse_real_into`.
 //!
 //! **Memory-tiered by default at large n**: the [`memtier`] layer is the
 //! CPU realization of the paper's *memory* optimizations — a size-adaptive
@@ -52,6 +83,7 @@ pub mod radix2;
 pub mod radix4;
 pub mod real;
 pub mod scratch;
+pub mod spec;
 pub mod splitradix;
 pub mod stockham;
 pub mod transform;
@@ -68,6 +100,7 @@ pub use plan::{fft, ifft, Algorithm, FftPlan, PlanCache, Planner};
 pub use radix2::Radix2;
 pub use radix4::Radix4;
 pub use real::RealFft;
+pub use spec::{plan, Domain, Placement, Plan, ProblemSpec, Shape, SpecKey};
 pub use splitradix::SplitRadix;
 pub use stockham::Stockham;
 pub use transform::{FftError, Transform};

@@ -1,12 +1,18 @@
-//! FFT planning — the FFTW-style front door over the [`Transform`] trait.
+//! FFT planning — algorithm selection, the 1-D plan wrapper, and the
+//! descriptor-keyed plan cache.
 //!
 //! `FftPlan::new(n, Algorithm::Auto)` picks an algorithm by size (the same
 //! role as FFTW's planner, heuristic rather than measured by default;
 //! `Planner::measured` actually times the candidates like FFTW_MEASURE) and
-//! wraps the chosen kernel as a `Box<dyn Transform>`. `PlanCache` memoizes
-//! plans across the process keyed on the **resolved** algorithm, so
-//! `Auto` and its concrete winner share a single plan — that is what makes
-//! the Table-1 FFTW comparator honest: plan once, execute many.
+//! wraps the chosen kernel as a `Box<dyn Transform>`. Since the descriptor
+//! redesign (DESIGN.md §9) `FftPlan` is the 1-D complex *component* that
+//! `fft::spec::plan` composes — new code describes its problem as a
+//! `ProblemSpec` and plans through `fft::spec::plan` / `PlanCache`;
+//! `FftPlan::new` stays as the 1-D compat shim. `PlanCache` memoizes
+//! plans across the process keyed on the **resolved descriptor** (+
+//! effective memory-tier tile), so `Auto` and its concrete winner share a
+//! single plan — that is what makes the Table-1 FFTW comparator honest:
+//! plan once, execute many.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -23,7 +29,7 @@ use crate::util::complex::C32;
 use crate::util::is_pow2;
 
 /// Algorithm selector.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Algorithm {
     /// Pick by size heuristic (non-pow2 always → Bluestein).
     Auto,
@@ -287,29 +293,18 @@ impl Transform for FftPlan {
     }
 }
 
-/// Process-wide plan cache (FFTW "wisdom" analog), keyed on the *resolved*
-/// algorithm: `get(n, Auto)` and `get(n, <its concrete winner>)` share one
-/// memoized plan.
-///
-/// Memory-tier plans bake in the tile resolved at construction, so their
-/// key additionally carries the effective `config::cache` tile — a caller
-/// inside a different `with_tile`/`set_tile` scope gets a plan built for
-/// *its* tile, never a stale one (non-memtier keys use tile 0).
+/// Process-wide plan cache (FFTW "wisdom" analog), keyed on the
+/// **resolved descriptor** (`fft::spec`): shape × domain × resolved
+/// algorithm, plus the effective `config::cache` tile when (and only
+/// when) a resolved component is tile-dependent — a caller inside a
+/// different `with_tile`/`set_tile` scope gets a plan built for *its*
+/// tile, never a stale one. Batch and placement are not part of the key:
+/// cached plans are per-transform and serve every execution face, so
+/// `get(n, Auto)` and `get(n, <its concrete winner>)` — and any batch of
+/// either — share one memoized [`Plan`].
 #[derive(Default)]
 pub struct PlanCache {
-    plans: Mutex<HashMap<(usize, Algorithm, usize), Arc<FftPlan>>>,
-}
-
-/// The memoization key: resolved algorithm, plus the effective tile when
-/// (and only when) that resolution is tile-dependent.
-fn cache_key(n: usize, algo: Algorithm) -> (usize, Algorithm, usize) {
-    let resolved = FftPlan::resolve(n, algo);
-    let tile = if resolved == Algorithm::MemTier {
-        crate::config::cache::tile_elems()
-    } else {
-        0
-    };
-    (n, resolved, tile)
+    plans: Mutex<HashMap<super::spec::PlanKey, Arc<super::spec::Plan>>>,
 }
 
 impl PlanCache {
@@ -317,28 +312,60 @@ impl PlanCache {
         Self::default()
     }
 
-    /// Fallible lookup-or-build — the serving path's entry point.
-    pub fn try_get(&self, n: usize, algo: Algorithm) -> Result<Arc<FftPlan>, FftError> {
-        let key = cache_key(n, algo);
+    /// Fallible descriptor lookup-or-build — the serving path's entry
+    /// point for every shape and domain.
+    ///
+    /// The returned plan is **per-transform** (normalized to batch 1 so
+    /// every batch count of a descriptor shares it): run batches through
+    /// `Transform::forward_batch_into(batch, ..)` with an explicit count,
+    /// not through the plan's own `forward_batched` face (whose count is
+    /// the normalized 1, not the descriptor's).
+    pub fn try_get_spec(
+        &self,
+        spec: &super::spec::ProblemSpec,
+    ) -> Result<Arc<super::spec::Plan>, FftError> {
+        let key = spec.plan_key();
         let mut map = self.plans.lock().unwrap();
         if let Some(plan) = map.get(&key) {
             return Ok(plan.clone());
         }
-        let plan = Arc::new(FftPlan::try_new(n, key.1)?);
+        // Normalize to a per-transform (batch 1) plan: the cache serves
+        // every batch count of a descriptor, so the stored plan must not
+        // bake in whichever batch the first caller happened to use.
+        let per_transform = spec.batched(1).expect("batch 1 is always valid");
+        let plan = Arc::new(super::spec::plan(&per_transform)?);
         map.insert(key, plan.clone());
         Ok(plan)
     }
 
+    /// Is a plan for this descriptor already memoized (under the currently
+    /// effective tile, for tile-dependent resolutions)?
+    pub fn contains_spec(&self, spec: &super::spec::ProblemSpec) -> bool {
+        self.plans.lock().unwrap().contains_key(&spec.plan_key())
+    }
+
+    /// Fallible 1-D complex lookup-or-build (compat face over
+    /// [`PlanCache::try_get_spec`]).
+    pub fn try_get(
+        &self,
+        n: usize,
+        algo: Algorithm,
+    ) -> Result<Arc<super::spec::Plan>, FftError> {
+        self.try_get_spec(&super::spec::ProblemSpec::one_d(n)?.with_algorithm(algo))
+    }
+
     /// Lookup-or-build; panics on invalid sizes (library convenience).
-    pub fn get(&self, n: usize, algo: Algorithm) -> Arc<FftPlan> {
+    pub fn get(&self, n: usize, algo: Algorithm) -> Arc<super::spec::Plan> {
         self.try_get(n, algo)
             .unwrap_or_else(|e| panic!("PlanCache::get({n}, {algo:?}): {e}"))
     }
 
-    /// Is a plan for the resolved (n, algo) already memoized (under the
-    /// currently effective tile, for memtier resolutions)?
+    /// Is a plan for the resolved (n, algo) already memoized?
     pub fn contains(&self, n: usize, algo: Algorithm) -> bool {
-        self.plans.lock().unwrap().contains_key(&cache_key(n, algo))
+        match super::spec::ProblemSpec::one_d(n) {
+            Ok(spec) => self.contains_spec(&spec.with_algorithm(algo)),
+            Err(_) => false,
+        }
     }
 
     pub fn len(&self) -> usize {

@@ -24,20 +24,56 @@ pub struct RealFft {
 }
 
 impl RealFft {
-    pub fn new(n: usize) -> Self {
-        assert!(is_pow2(n) && n >= 2, "RFFT needs a power of two >= 2, got {n}");
-        Self { n, half: Stockham::new(n / 2), twiddles: super::memtier::tables().twiddle(n) }
+    /// Fallible constructor — the descriptor path (`fft::spec::plan`)
+    /// entry point. RFFT needs a power-of-two length ≥ 2; odd and
+    /// otherwise invalid lengths come back as `NonPowerOfTwo`.
+    pub fn try_new(n: usize) -> Result<Self, FftError> {
+        if n == 0 {
+            return Err(FftError::ZeroSize);
+        }
+        if !is_pow2(n) || n < 2 {
+            return Err(FftError::NonPowerOfTwo { algo: "rfft", n });
+        }
+        Ok(Self { n, half: Stockham::new(n / 2), twiddles: super::memtier::tables().twiddle(n) })
     }
 
-    /// Forward RFFT: n reals -> n/2 + 1 complex bins (DC .. Nyquist).
-    pub fn forward(&self, x: &[f32]) -> Vec<C32> {
-        assert_eq!(x.len(), self.n);
-        let h = self.n / 2;
-        // Pack z[k] = x[2k] + i x[2k+1].
-        let mut z: Vec<C32> = (0..h).map(|k| C32::new(x[2 * k], x[2 * k + 1])).collect();
-        self.half.forward(&mut z);
+    /// Panicking convenience over [`RealFft::try_new`] (compat shim;
+    /// request paths plan through `fft::spec`).
+    pub fn new(n: usize) -> Self {
+        Self::try_new(n).unwrap_or_else(|e| panic!("RealFft::new({n}): {e}"))
+    }
 
-        let mut out = vec![C32::ZERO; h + 1];
+    /// Half-spectrum length of the typed faces: `n/2 + 1` bins.
+    pub fn spectrum_len(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    /// Non-allocating forward RFFT: `n` reals → `n/2 + 1` complex bins
+    /// (DC .. Nyquist) into `out`, through caller scratch of
+    /// `scratch_len()` elements. Buffer reuse across calls is the point:
+    /// the allocating [`RealFft::forward`] is sugar over this.
+    pub fn forward_into_spectrum(
+        &self,
+        x: &[f32],
+        out: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        let h = self.n / 2;
+        if x.len() != self.n {
+            return Err(FftError::SizeMismatch { expected: self.n, got: x.len() });
+        }
+        if out.len() != h + 1 {
+            return Err(FftError::SizeMismatch { expected: h + 1, got: out.len() });
+        }
+        if scratch.len() < self.n {
+            return Err(FftError::ScratchTooSmall { needed: self.n, got: scratch.len() });
+        }
+        let (z, fft_scratch) = scratch.split_at_mut(h);
+        // Pack z[k] = x[2k] + i x[2k+1].
+        for k in 0..h {
+            z[k] = C32::new(x[2 * k], x[2 * k + 1]);
+        }
+        self.half.forward_with_scratch(z, &mut fft_scratch[..h]);
         for k in 0..=h {
             let zk = if k == h { z[0] } else { z[k] };
             let zr = z[(h - k) % h].conj();
@@ -45,14 +81,30 @@ impl RealFft {
             let fo = (zk - zr).scale(0.5).mul_neg_i(); // (zk - zr) / (2i)
             out[k] = fe + self.twiddles.w_any(k) * fo;
         }
-        out
+        Ok(())
     }
 
-    /// Inverse RFFT: n/2 + 1 complex bins -> n reals (with 1/n scaling).
-    pub fn inverse(&self, spec: &[C32]) -> Vec<f32> {
+    /// Non-allocating inverse RFFT: `n/2 + 1` bins → `n` reals (1/n
+    /// scaling) into `out`; the allocating [`RealFft::inverse`] is sugar
+    /// over this.
+    pub fn inverse_into_real(
+        &self,
+        spec: &[C32],
+        out: &mut [f32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
         let h = self.n / 2;
-        assert_eq!(spec.len(), h + 1);
-        let mut z = vec![C32::ZERO; h];
+        if spec.len() != h + 1 {
+            return Err(FftError::SizeMismatch { expected: h + 1, got: spec.len() });
+        }
+        if out.len() != self.n {
+            return Err(FftError::SizeMismatch { expected: self.n, got: out.len() });
+        }
+        if scratch.len() < self.n {
+            return Err(FftError::ScratchTooSmall { needed: self.n, got: scratch.len() });
+        }
+        let (z, fft_scratch) = scratch.split_at_mut(h);
+        let fft_scratch = &mut fft_scratch[..h];
         for k in 0..h {
             let xk = spec[k];
             let xr = spec[h - k].conj();
@@ -61,15 +113,37 @@ impl RealFft {
             let fo = (xk - xr).scale(0.5) * self.twiddles.w_any(k).conj();
             z[k] = fe + fo.mul_i(); // Z[k] = Fe[k] + i Fo[k]
         }
-        self.half.inverse(&mut z);
-        let mut out = vec![0f32; self.n];
-        for k in 0..h {
-            // half.inverse applied 1/h; the full transform needs 1/n = 1/(2h),
-            // but packing already halves the effective length — the factors
-            // work out so z holds the exact time samples.
-            out[2 * k] = z[k].re;
-            out[2 * k + 1] = z[k].im;
+        // Half-size inverse via the conjugation trick (1/h scaling); the
+        // packing already halved the effective length, so z then holds the
+        // exact time samples.
+        for v in z.iter_mut() {
+            *v = v.conj();
         }
+        self.half.forward_with_scratch(z, fft_scratch);
+        let scale = 1.0 / h as f32;
+        for k in 0..h {
+            let v = z[k].conj().scale(scale);
+            out[2 * k] = v.re;
+            out[2 * k + 1] = v.im;
+        }
+        Ok(())
+    }
+
+    /// Forward RFFT: n reals -> n/2 + 1 complex bins (allocating sugar
+    /// over [`RealFft::forward_into_spectrum`]; panics on bad lengths).
+    pub fn forward(&self, x: &[f32]) -> Vec<C32> {
+        let mut out = vec![C32::ZERO; self.spectrum_len()];
+        super::scratch::with_scratch(self.n, |s| self.forward_into_spectrum(x, &mut out, s))
+            .unwrap_or_else(|e| panic!("RealFft::forward: {e}"));
+        out
+    }
+
+    /// Inverse RFFT: n/2 + 1 complex bins -> n reals (allocating sugar
+    /// over [`RealFft::inverse_into_real`]; panics on bad lengths).
+    pub fn inverse(&self, spec: &[C32]) -> Vec<f32> {
+        let mut out = vec![0f32; self.n];
+        super::scratch::with_scratch(self.n, |s| self.inverse_into_real(spec, &mut out, s))
+            .unwrap_or_else(|e| panic!("RealFft::inverse: {e}"));
         out
     }
 }

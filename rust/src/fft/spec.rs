@@ -1,0 +1,772 @@
+//! Descriptor-based planning — the one entry point from problem shape to
+//! executable plan.
+//!
+//! The paper's core move is to *plan by problem shape*: the data is
+//! partitioned against the memory hierarchy before any butterfly runs.
+//! [`ProblemSpec`] is that idea as an API — an FFTW-style descriptor
+//! (`Shape` × `Domain` × batch × `Placement` × algorithm hint), **validated
+//! at construction**, and [`plan`] is the single fallible entry point that
+//! composes the existing kernels into one batched, scratch-explicit
+//! executor:
+//!
+//! | descriptor                      | kernel composition                              |
+//! |---------------------------------|-------------------------------------------------|
+//! | `OneD{n}` × `ComplexToComplex`  | resolved 1-D kernel (Stockham / radix / memtier…)|
+//! | `OneD{n}` × `RealToComplex`     | packed half-size RFFT (`RealFft` split tables)   |
+//! | `TwoD{r,c}` × `ComplexToComplex`| row pass → transpose → column pass (`Fft2d`)     |
+//! | `TwoD{..}` × `RealToComplex`    | rejected at construction (`FftError::Unsupported`)|
+//!
+//! The legacy constructors (`FftPlan::new`, `Fft2d::new`, `RealFft::new`)
+//! remain as compat shims inside `fft::`; everything outside this module —
+//! the coordinator's `BatchSpec`, the batcher's buckets, `PlanCache` keys,
+//! the streaming pipeline and the CLI — speaks descriptors. See DESIGN.md
+//! §9.
+//!
+//! ```
+//! use memfft::fft::{plan, Domain, ProblemSpec, Shape};
+//! use memfft::C32;
+//!
+//! // 4 batched 1-D complex transforms of 8 points each.
+//! let spec = ProblemSpec::new(Shape::OneD { n: 8 }, Domain::ComplexToComplex)
+//!     .and_then(|s| s.batched(4))
+//!     .unwrap();
+//! let p = plan(&spec).unwrap();
+//! let input = vec![C32::ONE; p.total_elems()];
+//! let mut output = vec![C32::ZERO; p.total_elems()];
+//! let mut scratch = vec![C32::ZERO; p.scratch_len()];
+//! p.forward_batched(&input, &mut output, &mut scratch).unwrap();
+//! ```
+
+use super::fft2d::Fft2d;
+use super::plan::{Algorithm, FftPlan};
+use super::real::RealFft;
+use super::transform::{FftError, Transform};
+use crate::util::complex::C32;
+
+/// Transform geometry: how many points, laid out how.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Shape {
+    /// One `n`-point transform.
+    OneD { n: usize },
+    /// One row-major `rows × cols` 2-D transform (rows along `cols`-point
+    /// lines, then columns).
+    TwoD { rows: usize, cols: usize },
+}
+
+impl Shape {
+    /// Complex points one transform of this shape spans; rejects empty and
+    /// overflowing geometries.
+    pub fn elems(&self) -> Result<usize, FftError> {
+        match *self {
+            Shape::OneD { n } => {
+                if n == 0 {
+                    Err(FftError::ZeroSize)
+                } else {
+                    Ok(n)
+                }
+            }
+            Shape::TwoD { rows, cols } => {
+                if rows == 0 || cols == 0 {
+                    return Err(FftError::ZeroSize);
+                }
+                rows.checked_mul(cols).ok_or(FftError::Overflow { n: cols, batch: rows })
+            }
+        }
+    }
+
+    /// Points along one contiguous row (`n` for 1-D, `cols` for 2-D).
+    pub fn row_len(&self) -> usize {
+        match *self {
+            Shape::OneD { n } => n,
+            Shape::TwoD { cols, .. } => cols,
+        }
+    }
+
+    /// Parse `"2048"` → `OneD` or `"64x2048"` → `TwoD` (the CLI `--shape`
+    /// syntax).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.split_once('x') {
+            Some((r, c)) => {
+                let rows = r.trim().parse().ok()?;
+                let cols = c.trim().parse().ok()?;
+                Some(Shape::TwoD { rows, cols })
+            }
+            None => Some(Shape::OneD { n: s.trim().parse().ok()? }),
+        }
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Shape::OneD { n } => write!(f, "{n}"),
+            Shape::TwoD { rows, cols } => write!(f, "{rows}x{cols}"),
+        }
+    }
+}
+
+/// Input/output domain of the transform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Domain {
+    /// Complex input, complex output (the default everywhere).
+    ComplexToComplex,
+    /// Real input, Hermitian-symmetric complex output (forward) /
+    /// Hermitian input, real output (inverse) — the RFFT pair. 1-D only,
+    /// power-of-two length ≥ 2.
+    RealToComplex,
+}
+
+impl Domain {
+    /// Parse the CLI `--domain` syntax (`"c2c"` | `"r2c"`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "c2c" => Some(Domain::ComplexToComplex),
+            "r2c" => Some(Domain::RealToComplex),
+            _ => None,
+        }
+    }
+}
+
+/// Where the executor's output lands: the caller's preferred execution
+/// face. Plans serve both faces either way (the kernels are in-place with
+/// scratch and out-of-place is copy-then-run or native), so placement is
+/// an execution-face *preference*, not part of the transform's identity —
+/// it is excluded from [`SpecKey`] and the plan-cache key, and in-place
+/// and out-of-place requests of one transform batch together.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Placement {
+    InPlace,
+    OutOfPlace,
+}
+
+/// A validated transform descriptor: everything [`plan`] needs to compose
+/// kernels, and everything the batcher/caches need to identify work.
+///
+/// Invariants held from construction on: no dimension is zero, no
+/// `batch × elems` product overflows, and a `RealToComplex` descriptor is
+/// 1-D with a power-of-two length ≥ 2 (odd/invalid lengths surface as
+/// [`FftError`] immediately — not at execution time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ProblemSpec {
+    shape: Shape,
+    domain: Domain,
+    batch: usize,
+    placement: Placement,
+    algo: Algorithm,
+}
+
+/// The descriptor's bucketing identity: everything that changes *what is
+/// computed* — shape, domain, algorithm hint. Batch count (what the
+/// coordinator varies over a key) and placement (an execution-face
+/// preference the backend wire format does not even see) are excluded,
+/// so they never fragment batcher buckets. Two specs with equal element
+/// counts but different shapes — `8×1024` vs `1024×8` — have different
+/// keys, so they never share a bucket or a plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SpecKey {
+    pub shape: Shape,
+    pub domain: Domain,
+    pub algo: Algorithm,
+}
+
+/// The plan cache's memoization key: the descriptor with its algorithm
+/// hint *resolved* (so `Auto` and its concrete winner share one plan) plus
+/// the effective memory-tier tile when — and only when — a resolved
+/// component is tile-dependent. Batch and placement are dropped: plans are
+/// per-transform and serve both execution faces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) struct PlanKey {
+    shape: Shape,
+    domain: Domain,
+    row_algo: Algorithm,
+    col_algo: Algorithm,
+    tile: usize,
+}
+
+impl ProblemSpec {
+    /// Validate and build a descriptor (batch 1, out-of-place, `Auto`
+    /// algorithm hint). This is where shape/domain invariants are
+    /// enforced; see the type-level docs.
+    pub fn new(shape: Shape, domain: Domain) -> Result<Self, FftError> {
+        shape.elems()?;
+        if domain == Domain::RealToComplex {
+            match shape {
+                Shape::OneD { n } => {
+                    if !crate::util::is_pow2(n) || n < 2 {
+                        return Err(FftError::NonPowerOfTwo { algo: "rfft", n });
+                    }
+                }
+                Shape::TwoD { .. } => {
+                    return Err(FftError::Unsupported("2-D real-to-complex transforms"));
+                }
+            }
+        }
+        Ok(Self {
+            shape,
+            domain,
+            batch: 1,
+            placement: Placement::OutOfPlace,
+            algo: Algorithm::Auto,
+        })
+    }
+
+    /// Shorthand: one 1-D complex transform of `n` points.
+    pub fn one_d(n: usize) -> Result<Self, FftError> {
+        Self::new(Shape::OneD { n }, Domain::ComplexToComplex)
+    }
+
+    /// Shorthand: one `rows × cols` 2-D complex transform.
+    pub fn two_d(rows: usize, cols: usize) -> Result<Self, FftError> {
+        Self::new(Shape::TwoD { rows, cols }, Domain::ComplexToComplex)
+    }
+
+    /// Shorthand: one real-input transform of `n` points (n = power of two
+    /// ≥ 2; odd or otherwise invalid lengths are rejected here).
+    pub fn real(n: usize) -> Result<Self, FftError> {
+        Self::new(Shape::OneD { n }, Domain::RealToComplex)
+    }
+
+    /// Set the batch count (contiguous independent transforms of this
+    /// shape); rejects zero and `batch × elems` overflow.
+    pub fn batched(mut self, batch: usize) -> Result<Self, FftError> {
+        if batch == 0 {
+            return Err(FftError::ZeroSize);
+        }
+        let elems = self.shape.elems()?;
+        elems.checked_mul(batch).ok_or(FftError::Overflow { n: elems, batch })?;
+        self.batch = batch;
+        Ok(self)
+    }
+
+    /// Pin a concrete algorithm (1-D and 2-D row/column kernels); the
+    /// default `Auto` resolves by size. Real-domain plans ignore the hint
+    /// (the RFFT composition is fixed).
+    pub fn with_algorithm(mut self, algo: Algorithm) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    /// Declare in-place execution (`forward_batched_inplace` face).
+    pub fn in_place(mut self) -> Self {
+        self.placement = Placement::InPlace;
+        self
+    }
+
+    /// Declare out-of-place execution (the default).
+    pub fn out_of_place(mut self) -> Self {
+        self.placement = Placement::OutOfPlace;
+        self
+    }
+
+    pub fn shape(&self) -> Shape {
+        self.shape
+    }
+
+    pub fn domain(&self) -> Domain {
+        self.domain
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    pub fn algorithm(&self) -> Algorithm {
+        self.algo
+    }
+
+    /// Complex slots one transform spans (`rows × cols` for 2-D; for the
+    /// real domain this is the full Hermitian spectrum length `n`, the
+    /// `Transform`-view convention).
+    pub fn transform_elems(&self) -> usize {
+        self.shape.elems().expect("validated at construction")
+    }
+
+    /// Complex slots the whole batch spans (`batch × transform_elems`;
+    /// cannot overflow — validated by [`ProblemSpec::batched`]).
+    pub fn total_elems(&self) -> usize {
+        self.batch * self.transform_elems()
+    }
+
+    /// Half-spectrum length `n/2 + 1` for real-domain descriptors.
+    pub fn spectrum_elems(&self) -> Option<usize> {
+        match (self.domain, self.shape) {
+            (Domain::RealToComplex, Shape::OneD { n }) => Some(n / 2 + 1),
+            _ => None,
+        }
+    }
+
+    /// The bucketing identity (shape + domain + algorithm hint; batch and
+    /// placement excluded) — what the coordinator's batcher keys on.
+    pub fn key(&self) -> SpecKey {
+        SpecKey { shape: self.shape, domain: self.domain, algo: self.algo }
+    }
+
+    /// The resolved memoization key for plan caches.
+    pub(crate) fn plan_key(&self) -> PlanKey {
+        let (row_algo, col_algo) = match (self.shape, self.domain) {
+            (Shape::OneD { n }, Domain::ComplexToComplex) => {
+                let a = FftPlan::resolve(n, self.algo);
+                (a, a)
+            }
+            // The RFFT composition is fixed: a half-size Stockham plus the
+            // split tables, whatever the hint says.
+            (Shape::OneD { .. }, Domain::RealToComplex) => {
+                (Algorithm::Stockham, Algorithm::Stockham)
+            }
+            (Shape::TwoD { rows, cols }, _) => {
+                (FftPlan::resolve(cols, self.algo), FftPlan::resolve(rows, self.algo))
+            }
+        };
+        let tile = if row_algo == Algorithm::MemTier || col_algo == Algorithm::MemTier {
+            crate::config::cache::tile_elems()
+        } else {
+            0
+        };
+        PlanKey { shape: self.shape, domain: self.domain, row_algo, col_algo, tile }
+    }
+}
+
+impl std::fmt::Display for ProblemSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let d = match self.domain {
+            Domain::ComplexToComplex => "c2c",
+            Domain::RealToComplex => "r2c",
+        };
+        write!(f, "{} {d} batch={} {}", self.shape, self.batch, self.algo.name())
+    }
+}
+
+/// The kernel composition behind one plan — typed, so the real-domain
+/// faces stay reachable without downcasting.
+#[derive(Debug)]
+enum Kernel {
+    OneD(FftPlan),
+    Real(RealFft),
+    TwoD(Fft2d),
+}
+
+/// A ready-to-execute descriptor plan: the composed kernel plus the spec
+/// it was planned for. Fallible, batched and scratch-explicit like every
+/// [`Transform`]; `Plan` *is* a `Transform` (per-transform view), so the
+/// coordinator backends, the streaming pipeline and the SAR processor all
+/// run it through the same interface.
+#[derive(Debug)]
+pub struct Plan {
+    spec: ProblemSpec,
+    kernel: Kernel,
+}
+
+/// Build the plan for a validated descriptor — the single entry point
+/// from problem shape to executor (see the module docs for the
+/// composition table). Errors surface as [`FftError`] (e.g. a pinned
+/// algorithm that cannot serve the size).
+pub fn plan(spec: &ProblemSpec) -> Result<Plan, FftError> {
+    let kernel = match (spec.shape(), spec.domain()) {
+        (Shape::OneD { n }, Domain::ComplexToComplex) => {
+            Kernel::OneD(FftPlan::try_new(n, spec.algorithm())?)
+        }
+        (Shape::OneD { n }, Domain::RealToComplex) => Kernel::Real(RealFft::try_new(n)?),
+        (Shape::TwoD { rows, cols }, Domain::ComplexToComplex) => {
+            Kernel::TwoD(Fft2d::try_new(rows, cols, spec.algorithm())?)
+        }
+        (Shape::TwoD { .. }, Domain::RealToComplex) => {
+            // Unreachable through a validated ProblemSpec; kept for defense.
+            return Err(FftError::Unsupported("2-D real-to-complex transforms"));
+        }
+    };
+    Ok(Plan { spec: *spec, kernel })
+}
+
+impl Plan {
+    pub fn spec(&self) -> &ProblemSpec {
+        &self.spec
+    }
+
+    fn as_transform(&self) -> &dyn Transform {
+        match &self.kernel {
+            Kernel::OneD(p) => p,
+            Kernel::Real(p) => p,
+            Kernel::TwoD(p) => p,
+        }
+    }
+
+    /// The resolved row algorithm this plan executes (`Stockham` for the
+    /// real domain — the RFFT's half-size kernel).
+    pub fn algorithm(&self) -> Algorithm {
+        match &self.kernel {
+            Kernel::OneD(p) => p.algorithm(),
+            Kernel::Real(_) => Algorithm::Stockham,
+            Kernel::TwoD(p) => p.algorithm(),
+        }
+    }
+
+    /// Composed kernel name for reports.
+    pub fn kernel_name(&self) -> &'static str {
+        self.as_transform().name()
+    }
+
+    /// Complex slots per transform (the `Transform::len` of the kernel).
+    pub fn transform_len(&self) -> usize {
+        self.spec.transform_elems()
+    }
+
+    pub fn batch(&self) -> usize {
+        self.spec.batch()
+    }
+
+    /// `batch × transform_len` — the buffer length the batched faces take.
+    pub fn total_elems(&self) -> usize {
+        self.spec.total_elems()
+    }
+
+    /// Scratch one execution needs (shared across the rows of a batch).
+    pub fn scratch_len(&self) -> usize {
+        self.as_transform().scratch_len()
+    }
+
+    /// Forward-transform the whole declared batch out of place.
+    pub fn forward_batched(
+        &self,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.as_transform().forward_batch_into(self.spec.batch(), input, output, scratch)
+    }
+
+    /// Inverse-transform the whole declared batch out of place (1/N per
+    /// transform).
+    pub fn inverse_batched(
+        &self,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.as_transform().inverse_batch_into(self.spec.batch(), input, output, scratch)
+    }
+
+    /// Forward-transform the whole declared batch in place (the
+    /// `Placement::InPlace` face): row-parallel over the worker pool with
+    /// per-thread scratch — bit-equal to the serial loop and to the
+    /// out-of-place path per the §6 determinism contract (rows are
+    /// independent and scratch-content-insensitive). With one effective
+    /// thread it degrades to the serial loop over the caller's scratch.
+    pub fn forward_batched_inplace(
+        &self,
+        data: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.run_batched_inplace(data, scratch, false)
+    }
+
+    /// In-place batched inverse; see [`Plan::forward_batched_inplace`].
+    pub fn inverse_batched_inplace(
+        &self,
+        data: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.run_batched_inplace(data, scratch, true)
+    }
+
+    fn run_batched_inplace(
+        &self,
+        data: &mut [C32],
+        scratch: &mut [C32],
+        inverse: bool,
+    ) -> Result<(), FftError> {
+        let n = self.transform_len();
+        let total = self.total_elems();
+        if data.len() != total {
+            return Err(FftError::SizeMismatch { expected: total, got: data.len() });
+        }
+        let t = self.as_transform();
+        let needed = t.scratch_len();
+        if scratch.len() < needed {
+            return Err(FftError::ScratchTooSmall { needed, got: scratch.len() });
+        }
+        if crate::util::pool::effective_chunks(self.spec.batch()) <= 1 {
+            for row in data.chunks_exact_mut(n) {
+                if inverse {
+                    t.inverse_inplace(row, scratch)?;
+                } else {
+                    t.forward_inplace(row, scratch)?;
+                }
+            }
+            return Ok(());
+        }
+        // Row-parallel with per-thread scratch; first error wins (stable
+        // regardless of chunk scheduling).
+        let first_err = std::sync::Mutex::new(None);
+        crate::util::pool::for_each_chunk(data, n, |_, rows| {
+            super::scratch::with_scratch(needed, |s| {
+                for row in rows.chunks_exact_mut(n) {
+                    let r = if inverse {
+                        t.inverse_inplace(row, s)
+                    } else {
+                        t.forward_inplace(row, s)
+                    };
+                    if let Err(e) = r {
+                        let mut slot = first_err.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                        return;
+                    }
+                }
+            });
+        });
+        match first_err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// In-place forward of ONE transform using the thread-local scratch
+    /// pool — the panicking convenience the legacy `FftPlan::forward`
+    /// offered (library sugar; request paths use the fallible faces).
+    pub fn forward(&self, x: &mut [C32]) {
+        let t = self.as_transform();
+        super::scratch::with_scratch(t.scratch_len(), |s| t.forward_inplace(x, s))
+            .unwrap_or_else(|e| panic!("Plan::forward({}): {e}", self.spec));
+    }
+
+    /// In-place inverse of ONE transform (1/N scaling), thread-local
+    /// scratch. See [`Plan::forward`].
+    pub fn inverse(&self, x: &mut [C32]) {
+        let t = self.as_transform();
+        super::scratch::with_scratch(t.scratch_len(), |s| t.inverse_inplace(x, s))
+            .unwrap_or_else(|e| panic!("Plan::inverse({}): {e}", self.spec));
+    }
+
+    /// Half-spectrum length for real-domain plans (`n/2 + 1`).
+    pub fn spectrum_len(&self) -> Option<usize> {
+        self.spec.spectrum_elems()
+    }
+
+    /// Real-domain typed forward, non-allocating: `n` real samples →
+    /// `n/2 + 1` spectrum bins into `out` through caller scratch. Errors
+    /// with `Unsupported` on non-real descriptors.
+    pub fn forward_real_into(
+        &self,
+        x: &[f32],
+        out: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        match &self.kernel {
+            Kernel::Real(rf) => rf.forward_into_spectrum(x, out, scratch),
+            _ => Err(FftError::Unsupported("forward_real_into on a non-real descriptor")),
+        }
+    }
+
+    /// Real-domain typed inverse, non-allocating: `n/2 + 1` bins → `n`
+    /// real samples (1/n scaling).
+    pub fn inverse_real_into(
+        &self,
+        bins: &[C32],
+        out: &mut [f32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        match &self.kernel {
+            Kernel::Real(rf) => rf.inverse_into_real(bins, out, scratch),
+            _ => Err(FftError::Unsupported("inverse_real_into on a non-real descriptor")),
+        }
+    }
+}
+
+/// The per-transform `Transform` view: what lets a descriptor plan ride
+/// every execution path a bare kernel can (backends, row-parallel batch
+/// defaults, the streaming compute stage).
+impl Transform for Plan {
+    fn len(&self) -> usize {
+        self.transform_len()
+    }
+    fn name(&self) -> &'static str {
+        self.as_transform().name()
+    }
+    fn scratch_len(&self) -> usize {
+        self.as_transform().scratch_len()
+    }
+    fn forward_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
+        self.as_transform().forward_inplace(x, scratch)
+    }
+    fn inverse_inplace(&self, x: &mut [C32], scratch: &mut [C32]) -> Result<(), FftError> {
+        self.as_transform().inverse_inplace(x, scratch)
+    }
+    fn forward_into(
+        &self,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.as_transform().forward_into(input, output, scratch)
+    }
+    fn inverse_into(
+        &self,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.as_transform().inverse_into(input, output, scratch)
+    }
+    fn forward_batch_into(
+        &self,
+        batch: usize,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.as_transform().forward_batch_into(batch, input, output, scratch)
+    }
+    fn inverse_batch_into(
+        &self,
+        batch: usize,
+        input: &[C32],
+        output: &mut [C32],
+        scratch: &mut [C32],
+    ) -> Result<(), FftError> {
+        self.as_transform().inverse_batch_into(batch, input, output, scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn construction_validates_shapes_and_domains() {
+        assert_eq!(ProblemSpec::one_d(0).unwrap_err(), FftError::ZeroSize);
+        assert_eq!(ProblemSpec::two_d(0, 4).unwrap_err(), FftError::ZeroSize);
+        assert_eq!(ProblemSpec::two_d(4, 0).unwrap_err(), FftError::ZeroSize);
+        assert!(matches!(
+            ProblemSpec::new(Shape::TwoD { rows: usize::MAX, cols: 2 }, Domain::ComplexToComplex)
+                .unwrap_err(),
+            FftError::Overflow { .. }
+        ));
+        // r2c: odd / non-pow2 / sub-2 lengths rejected at construction.
+        assert!(matches!(
+            ProblemSpec::real(7).unwrap_err(),
+            FftError::NonPowerOfTwo { algo: "rfft", n: 7 }
+        ));
+        assert!(matches!(ProblemSpec::real(12).unwrap_err(), FftError::NonPowerOfTwo { .. }));
+        assert!(matches!(ProblemSpec::real(1).unwrap_err(), FftError::NonPowerOfTwo { .. }));
+        assert!(ProblemSpec::real(2).is_ok());
+        assert!(matches!(
+            ProblemSpec::new(Shape::TwoD { rows: 4, cols: 4 }, Domain::RealToComplex).unwrap_err(),
+            FftError::Unsupported(_)
+        ));
+        // Batch: zero and overflow rejected.
+        let s = ProblemSpec::one_d(1 << 16).unwrap();
+        assert_eq!(s.batched(0).unwrap_err(), FftError::ZeroSize);
+        assert!(matches!(s.batched(usize::MAX / 2).unwrap_err(), FftError::Overflow { .. }));
+        assert_eq!(s.batched(3).unwrap().total_elems(), 3 << 16);
+    }
+
+    #[test]
+    fn shape_parse_and_display_roundtrip() {
+        assert_eq!(Shape::parse("2048"), Some(Shape::OneD { n: 2048 }));
+        assert_eq!(Shape::parse("64x2048"), Some(Shape::TwoD { rows: 64, cols: 2048 }));
+        assert_eq!(Shape::parse("64 x 2048"), Some(Shape::TwoD { rows: 64, cols: 2048 }));
+        assert_eq!(Shape::parse("abc"), None);
+        assert_eq!(Shape::parse("4x"), None);
+        assert_eq!(Shape::OneD { n: 8 }.to_string(), "8");
+        assert_eq!(Shape::TwoD { rows: 3, cols: 5 }.to_string(), "3x5");
+        assert_eq!(Domain::parse("r2c"), Some(Domain::RealToComplex));
+        assert_eq!(Domain::parse("c2c"), Some(Domain::ComplexToComplex));
+        assert_eq!(Domain::parse("x"), None);
+    }
+
+    #[test]
+    fn keys_distinguish_shapes_with_equal_element_counts() {
+        let a = ProblemSpec::two_d(8, 1024).unwrap();
+        let b = ProblemSpec::two_d(1024, 8).unwrap();
+        let c = ProblemSpec::one_d(8 * 1024).unwrap();
+        assert_eq!(a.transform_elems(), b.transform_elems());
+        assert_ne!(a.key(), b.key(), "transposed shapes must not share a key");
+        assert_ne!(a.key(), c.key(), "1-D and 2-D of equal elems must not share a key");
+        // Batch and placement are NOT part of the key (the batcher varies
+        // the former; the latter is only an execution-face preference)…
+        assert_eq!(a.key(), a.batched(5).unwrap().key());
+        assert_eq!(a.key(), a.in_place().key());
+        // …but the algorithm hint is.
+        assert_ne!(a.key(), a.with_algorithm(Algorithm::Stockham).key());
+    }
+
+    #[test]
+    fn plan_composes_the_expected_kernels() {
+        let p1 = plan(&ProblemSpec::one_d(256).unwrap()).unwrap();
+        assert_eq!(p1.transform_len(), 256);
+        assert_eq!(p1.algorithm(), FftPlan::resolve(256, Algorithm::Auto));
+        let p2 = plan(&ProblemSpec::two_d(8, 32).unwrap()).unwrap();
+        assert_eq!(p2.transform_len(), 256);
+        assert_eq!(p2.kernel_name(), "fft2d");
+        let pr = plan(&ProblemSpec::real(256).unwrap()).unwrap();
+        assert_eq!(pr.kernel_name(), "rfft");
+        assert_eq!(pr.spectrum_len(), Some(129));
+        // Pinned hints that cannot serve the size fail at plan time.
+        assert!(matches!(
+            plan(&ProblemSpec::one_d(100).unwrap().with_algorithm(Algorithm::Radix2)).unwrap_err(),
+            FftError::NonPowerOfTwo { .. }
+        ));
+        // Non-pow2 through Auto plans fine (Bluestein), 1-D and 2-D.
+        assert!(plan(&ProblemSpec::one_d(100).unwrap()).is_ok());
+        assert!(plan(&ProblemSpec::two_d(24, 40).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn plan_key_resolves_auto_to_its_winner() {
+        let auto = ProblemSpec::one_d(512).unwrap();
+        let winner = auto.with_algorithm(FftPlan::resolve(512, Algorithm::Auto));
+        assert_eq!(auto.plan_key(), winner.plan_key());
+        let other = auto.with_algorithm(Algorithm::FourStep);
+        assert_ne!(auto.plan_key(), other.plan_key());
+        // Real-domain keys ignore the hint entirely.
+        let r = ProblemSpec::real(512).unwrap();
+        assert_eq!(r.plan_key(), r.with_algorithm(Algorithm::FourStep).plan_key());
+        // Batch and placement never reach the plan key.
+        assert_eq!(auto.plan_key(), auto.batched(9).unwrap().in_place().plan_key());
+    }
+
+    #[test]
+    fn batched_faces_match_single_transform_loop() {
+        let mut rng = Xoshiro256::seeded(0x5EC);
+        let spec = ProblemSpec::one_d(64).unwrap().batched(5).unwrap();
+        let p = plan(&spec).unwrap();
+        let input = rng.complex_vec(p.total_elems());
+        let mut out = vec![C32::ZERO; p.total_elems()];
+        let mut scratch = vec![C32::ZERO; p.scratch_len()];
+        p.forward_batched(&input, &mut out, &mut scratch).unwrap();
+        let mut inplace = input.clone();
+        p.forward_batched_inplace(&mut inplace, &mut scratch).unwrap();
+        assert_eq!(out, inplace, "both placements must produce identical bits");
+        let mut looped = input.clone();
+        for row in looped.chunks_exact_mut(64) {
+            p.forward(row);
+        }
+        assert_eq!(out, looped, "batched must equal the per-transform loop");
+        // Short scratch surfaces as an error on every face.
+        let mut short = vec![C32::ZERO; p.scratch_len().saturating_sub(1)];
+        if !short.is_empty() || p.scratch_len() > 0 {
+            assert!(matches!(
+                p.forward_batched(&input, &mut out, &mut short).unwrap_err(),
+                FftError::ScratchTooSmall { .. }
+            ));
+        }
+    }
+
+    #[test]
+    fn real_typed_faces_reject_complex_descriptors() {
+        let p = plan(&ProblemSpec::one_d(16).unwrap()).unwrap();
+        let mut out = vec![C32::ZERO; 9];
+        let mut scratch = vec![C32::ZERO; p.scratch_len().max(16)];
+        assert!(matches!(
+            p.forward_real_into(&[0.0; 16], &mut out, &mut scratch).unwrap_err(),
+            FftError::Unsupported(_)
+        ));
+        assert_eq!(p.spectrum_len(), None);
+    }
+}

@@ -37,6 +37,10 @@ pub enum FftError {
     ScratchTooSmall { needed: usize, got: usize },
     /// `batch * n` overflows `usize`.
     Overflow { n: usize, batch: usize },
+    /// The requested descriptor combination has no kernel composition
+    /// (e.g. a 2-D real-to-complex transform, or a real-typed call on a
+    /// complex plan).
+    Unsupported(&'static str),
 }
 
 impl std::fmt::Display for FftError {
@@ -55,6 +59,7 @@ impl std::fmt::Display for FftError {
             FftError::Overflow { n, batch } => {
                 write!(f, "batch {batch} x n {n} overflows usize")
             }
+            FftError::Unsupported(what) => write!(f, "unsupported: {what}"),
         }
     }
 }

@@ -7,7 +7,7 @@
 //!   Ours  → `fft_fourstep_*` artifact             — the paper's kernel
 
 use crate::bench::{percentile_sorted, render_table};
-use crate::fft::{Algorithm, FftPlan};
+use crate::fft::{plan as plan_spec, ProblemSpec};
 use crate::gpusim::{self, CpuDescriptor, GpuDescriptor, TiledOptions};
 use crate::harness::paper::{paper_row, TABLE1};
 use crate::runtime::Engine;
@@ -55,8 +55,11 @@ pub fn run(engine: Option<&Engine>, sizes: &[usize], reps: usize) -> Vec<Row> {
             // FFTW role: plan once (FFTW convention), measure executes.
             // The input refill happens before each sample's timer starts —
             // same fix as Planner::measured, so small-N rows are not
-            // inflated by a memcpy.
-            let plan = FftPlan::new(n, Algorithm::Auto);
+            // inflated by a memcpy. Planned through the descriptor API,
+            // like every production caller.
+            let plan = ProblemSpec::one_d(n)
+                .and_then(|s| plan_spec(&s.in_place()))
+                .expect("table1 sizes are valid");
             let input = rng.complex_vec(n);
             let mut buf = input.clone();
             plan.forward(&mut buf); // warm
@@ -173,7 +176,9 @@ pub fn fftw_role_only(sizes: &[usize], reps: usize) -> Vec<(usize, f64)> {
 
 /// Sanity: plan reuse means repeated transforms don't re-plan.
 pub fn plan_once_execute_many(n: usize, execs: usize) -> f64 {
-    let plan = FftPlan::new(n, Algorithm::Auto);
+    let plan = ProblemSpec::one_d(n)
+        .and_then(|s| plan_spec(&s.in_place()))
+        .expect("plan_once_execute_many needs a valid size");
     let mut rng = Xoshiro256::seeded(1);
     let mut buf: Vec<C32> = rng.complex_vec(n);
     let t = Timer::start();

@@ -14,17 +14,23 @@
 //!   Fermi-class GPU memory-hierarchy simulator (the Tesla C2070 stand-in),
 //!   and a synthetic SAR workload.
 //!
-//! Execution is unified by two traits:
+//! Execution is unified by two traits and one planning descriptor:
 //!
+//! - [`fft::ProblemSpec`] → [`fft::plan()`](fft::spec::plan) — the descriptor entry point
+//!   (DESIGN.md §9): shape (1-D / 2-D) × domain (complex / real) × batch
+//!   × placement × algorithm hint, validated at construction, composed
+//!   into one fallible, batched, scratch-explicit [`fft::Plan`]. The
+//!   legacy per-kernel constructors remain as compat shims inside
+//!   `fft::`.
 //! - [`fft::Transform`] — every CPU kernel (radix-2/4, split-radix,
 //!   Stockham, four-step, Bluestein, RFFT, 2-D) behind one out-of-place,
-//!   fallible, batched, scratch-explicit interface; `fft::FftPlan` is a
-//!   thin `Box<dyn Transform>` wrapper and `fft::PlanCache` memoizes on
-//!   the resolved algorithm.
+//!   fallible, batched, scratch-explicit interface; `fft::PlanCache`
+//!   memoizes plans on the resolved descriptor.
 //! - [`coordinator::Backend`] — every serving substrate (PJRT artifacts,
 //!   the native library, the gpusim cost model) behind one
 //!   `execute_batch(&BatchSpec, planar f32) -> Result<..>` contract,
-//!   selected by the `method` config knob.
+//!   where `BatchSpec` carries the batched `ProblemSpec`; the batcher
+//!   buckets requests by descriptor key, selected by the `method` knob.
 //!
 //! Datasets larger than memory take the out-of-core lane: [`stream`]
 //! chunks file-backed complex-f32 datasets by a byte budget and pipelines

@@ -8,12 +8,16 @@
 //!   sim       device model: Fig-3 memory histogram, schedule breakdowns
 //!   sar       end-to-end SAR demo (CPU path; see examples/sar_imaging.rs
 //!             for the AOT path)
+//!   transform one-shot in-memory transform of a .mfft dataset through the
+//!             descriptor planner (--shape RxC / --domain r2c)
 //!   stream    out-of-core streamed FFT / SAR over a file-backed .mfft
-//!             dataset (prefetch/compute/writeback pipeline)
+//!             dataset (prefetch/compute/writeback pipeline; same
+//!             --shape/--domain descriptors as `transform`)
 
 use memfft::cli::{Cli, CliError, Command};
 use memfft::config::ServiceConfig;
 use memfft::coordinator::{Direction, FftService};
+use memfft::fft::{Domain, ProblemSpec, Shape};
 use memfft::gpusim::{self, GpuDescriptor, TiledOptions};
 use memfft::harness::{ablation, figs, table1};
 use memfft::runtime::Engine;
@@ -58,10 +62,22 @@ fn cli() -> Cli {
                 .arg_default("nr", "1024", "range samples"),
         )
         .command(
+            Command::new("transform", "one-shot in-memory transform of a .mfft dataset")
+                .arg("input", "input dataset path (required)")
+                .arg("output", "output dataset path (required)")
+                .arg_default("op", "fft", "fft | ifft")
+                .arg_default("shape", "", "problem shape: N (per-row 1-D) or RxC (with c2c: ONE 2-D transform); default = per-row over the dataset")
+                .arg_default("domain", "c2c", "c2c | r2c (r2c is always per-row — 2-D real transforms have no kernel — and writes Rx(C/2+1) half spectra; fft only)")
+                .arg_default("algo", "auto", "algorithm hint (auto|radix2|...|memtier)"),
+        )
+        .command(
             Command::new("stream", "out-of-core streamed processing of a .mfft dataset")
                 .arg("input", "input dataset path (required)")
                 .arg("output", "output dataset path (required)")
                 .arg_default("op", "fft", "fft | ifft | sar")
+                .arg_default("shape", "", "declared shape, validated against the file: N (per-row 1-D) or RxC (with c2c: ONE 2-D transform, like the transform subcommand)")
+                .arg_default("domain", "c2c", "per-row domain: c2c | r2c (r2c is always per-row and streams Rx(C/2+1) half spectra; fft only)")
+                .flag("fft2d", "force the ONE-RxC-2-D-transform lane (implied by --shape RxC with c2c)")
                 .arg_default("method", "native", "backend: native | memtier | modeled")
                 .arg_default("budget", "0", "per-chunk bytes (0 = MEMFFT_STREAM_BUDGET / 32 MiB)")
                 .arg_default("threads", "0", "FFT data-parallel threads (0 = all cores)")
@@ -88,6 +104,7 @@ fn main() {
         Some("ablation") => cmd_ablation(),
         Some("sim") => cmd_sim(),
         Some("sar") => cmd_sar(&parsed),
+        Some("transform") => cmd_transform(&parsed),
         Some("stream") => cmd_stream(&parsed),
         _ => {
             println!("{}", cli().usage());
@@ -245,32 +262,152 @@ fn cmd_sim() -> CmdResult {
     Ok(())
 }
 
-fn cmd_stream(args: &memfft::cli::Args) -> CmdResult {
-    use memfft::coordinator::StreamProcessor;
-    use memfft::stream::{FileDataset, FileIo, FileSink};
-
+/// Require --input/--output and refuse in-place processing: the output
+/// is created with truncation, so `--output == --input` (directly or via
+/// a symlink) would destroy the input before it is read.
+fn io_paths(args: &memfft::cli::Args, cmd: &str) -> Result<(String, String), Box<dyn std::error::Error>> {
     let input = args
         .get("input")
         .filter(|p| !p.is_empty())
-        .ok_or("stream: --input <path> is required")?
+        .ok_or_else(|| format!("{cmd}: --input <path> is required"))?
         .to_string();
     let output = args
         .get("output")
         .filter(|p| !p.is_empty())
-        .ok_or("stream: --output <path> is required")?
+        .ok_or_else(|| format!("{cmd}: --output <path> is required"))?
         .to_string();
-    // The sink truncates its target on create — refuse in-place streaming
-    // before any file is opened (string match plus resolved paths, so a
-    // symlinked output cannot sneak through and destroy the input).
     let same_file = input == output
         || matches!(
             (std::fs::canonicalize(&input), std::fs::canonicalize(&output)),
             (Ok(a), Ok(b)) if a == b
         );
     if same_file {
-        return Err("stream: --output must differ from --input (creating the sink truncates its target)".into());
+        return Err(format!(
+            "{cmd}: --output must differ from --input (creating the output truncates its target)"
+        )
+        .into());
     }
+    Ok((input, output))
+}
+
+/// Parse the `--shape` / `--domain` descriptor flags and validate the
+/// declared shape against the dataset's actual header dims.
+fn parse_descriptor(
+    args: &memfft::cli::Args,
+    dims: memfft::stream::Dims,
+    cmd: &str,
+) -> Result<(Shape, Domain), Box<dyn std::error::Error>> {
+    let d = args.get_or("domain", "c2c");
+    let domain = Domain::parse(d)
+        .ok_or_else(|| format!("{cmd}: --domain must be c2c or r2c, got '{d}'"))?;
+    let shape = match args.get("shape").filter(|s| !s.is_empty()) {
+        None => Shape::OneD { n: dims.cols },
+        Some(s) => {
+            Shape::parse(s).ok_or_else(|| format!("{cmd}: bad --shape '{s}' (N or RxC)"))?
+        }
+    };
+    match shape {
+        Shape::OneD { n } if n != dims.cols => {
+            return Err(format!(
+                "{cmd}: --shape {n} does not match the dataset's {}-point rows",
+                dims.cols
+            )
+            .into())
+        }
+        Shape::TwoD { rows, cols } if rows != dims.rows || cols != dims.cols => {
+            return Err(format!(
+                "{cmd}: --shape {rows}x{cols} does not match the {}x{} dataset",
+                dims.rows, dims.cols
+            )
+            .into())
+        }
+        _ => {}
+    }
+    Ok((shape, domain))
+}
+
+fn cmd_transform(args: &memfft::cli::Args) -> CmdResult {
+    use memfft::fft::{plan, Algorithm};
+    use memfft::stream::{read_dataset, write_dataset};
+    use memfft::C32;
+
+    let (input, output) = io_paths(args, "transform")?;
     let op = args.get_or("op", "fft").to_string();
+    let a = args.get_or("algo", "auto");
+    let algo = Algorithm::parse(a).ok_or_else(|| format!("transform: unknown --algo '{a}'"))?;
+    let direction = match op.as_str() {
+        "fft" => Direction::Forward,
+        "ifft" => Direction::Inverse,
+        other => return Err(format!("transform: unknown op '{other}' (fft | ifft)").into()),
+    };
+    let (dims, data) = read_dataset(&input)?;
+    let (shape, domain) = parse_descriptor(args, dims, "transform")?;
+
+    match (shape, domain) {
+        // One whole-dataset 2-D transform through the descriptor planner.
+        (Shape::TwoD { rows, cols }, Domain::ComplexToComplex) => {
+            let spec = ProblemSpec::two_d(rows, cols)?.with_algorithm(algo).in_place();
+            let p = plan(&spec)?;
+            let mut buf = data;
+            let mut scratch = vec![C32::ZERO; p.scratch_len()];
+            match direction {
+                Direction::Forward => p.forward_batched_inplace(&mut buf, &mut scratch)?,
+                Direction::Inverse => p.inverse_batched_inplace(&mut buf, &mut scratch)?,
+            }
+            write_dataset(&output, rows, cols, &buf)?;
+            println!("transform: 2-D {rows}x{cols} {op} via {}", p.kernel_name());
+        }
+        // Per-row real transform: half-spectrum output, routed through the
+        // non-allocating RFFT faces. A 2-D --shape with r2c also lands
+        // here by documented contract (the --domain help): 2-D real
+        // transforms have no kernel composition, so the shape declares
+        // the dataset and each row transforms independently.
+        (_, Domain::RealToComplex) => {
+            if direction == Direction::Inverse {
+                return Err("transform: --domain r2c supports --op fft only".into());
+            }
+            let row_spec = ProblemSpec::real(dims.cols)?;
+            let p = plan(&row_spec)?;
+            let h1 = p.spectrum_len().expect("r2c plans have a spectrum length");
+            let mut out = vec![C32::ZERO; dims.rows * h1];
+            let mut scratch = vec![C32::ZERO; p.scratch_len()];
+            let mut rowbuf = vec![0f32; dims.cols];
+            for (r, row) in data.chunks_exact(dims.cols).enumerate() {
+                for (x, c) in rowbuf.iter_mut().zip(row) {
+                    *x = c.re;
+                }
+                p.forward_real_into(&rowbuf, &mut out[r * h1..(r + 1) * h1], &mut scratch)?;
+            }
+            write_dataset(&output, dims.rows, h1, &out)?;
+            println!("transform: {} r2c rows -> {}x{h1} half spectra", dims.rows, dims.rows);
+        }
+        // Per-row batched 1-D complex transforms.
+        (Shape::OneD { n }, Domain::ComplexToComplex) => {
+            let mut buf = data;
+            if dims.rows > 0 {
+                let spec =
+                    ProblemSpec::one_d(n)?.batched(dims.rows)?.with_algorithm(algo).in_place();
+                let p = plan(&spec)?;
+                let mut scratch = vec![C32::ZERO; p.scratch_len()];
+                match direction {
+                    Direction::Forward => p.forward_batched_inplace(&mut buf, &mut scratch)?,
+                    Direction::Inverse => p.inverse_batched_inplace(&mut buf, &mut scratch)?,
+                }
+            }
+            write_dataset(&output, dims.rows, dims.cols, &buf)?;
+            println!("transform: {} x {n}-point {op} rows", dims.rows);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_stream(args: &memfft::cli::Args) -> CmdResult {
+    use memfft::coordinator::StreamProcessor;
+    use memfft::stream::{Dims, FileDataset, FileIo, FileSink};
+
+    let (input, output) = io_paths(args, "stream")?;
+    let op = args.get_or("op", "fft").to_string();
+    let fft2d = args.flag("fft2d");
     let cfg = ServiceConfig {
         method: args.get_or("method", "native").to_string(),
         threads: args.get_usize("threads", 0)?,
@@ -282,48 +419,91 @@ fn cmd_stream(args: &memfft::cli::Args) -> CmdResult {
 
     let mut src = FileDataset::open(&input)?;
     let dims = src.dims();
+    let (shape, domain) = parse_descriptor(args, dims, "stream")?;
+    // A declared 2-D c2c shape IS the 2-D problem — same semantics as the
+    // `transform` subcommand — so fft/ifft route to the whole-dataset 2-D
+    // lane with or without the explicit --fft2d flag. (r2c is per-row by
+    // contract; sar interprets the 2-D scene itself.)
+    let fft2d = fft2d
+        || (matches!(op.as_str(), "fft" | "ifft")
+            && domain == Domain::ComplexToComplex
+            && matches!(shape, Shape::TwoD { .. }));
     let mut proc = StreamProcessor::from_config(&cfg);
     println!(
-        "streaming {}x{} dataset ({:.1} MiB) op={op} backend={} budget={}",
+        "streaming {}x{} dataset ({:.1} MiB) op={op}{} backend={} budget={}",
         dims.rows,
         dims.cols,
         dims.payload_bytes()? as f64 / (1 << 20) as f64,
+        match (fft2d, domain) {
+            (true, _) => " (one 2-D transform)",
+            (false, Domain::RealToComplex) => " (r2c rows, half-spectrum out)",
+            _ => "",
+        },
         proc.backend_name(),
         if cfg.stream_budget == 0 { "auto".to_string() } else { cfg.stream_budget.to_string() },
     );
 
-    let direction = match op.as_str() {
-        "fft" => Some(Direction::Forward),
-        "ifft" => Some(Direction::Inverse),
-        "sar" => None,
-        other => return Err(format!("stream: unknown op '{other}' (fft | ifft | sar)").into()),
-    };
-    let report = match direction {
-        Some(direction) => {
-            let mut sink = FileSink::create(&output, dims)?;
-            proc.transform(&mut src, &mut sink, direction)?
-        }
-        None => {
+    let report = match op.as_str() {
+        "sar" => {
+            if fft2d || domain != Domain::ComplexToComplex {
+                return Err("stream: --op sar takes neither --fft2d nor --domain r2c".into());
+            }
             let mut io = FileIo::create(&output, dims)?;
             let focus = proc.sar(&mut src, &mut io)?;
             println!("sar: {} azimuth strips", focus.strips);
             focus.report
         }
+        "fft" | "ifft" => {
+            let direction =
+                if op == "ifft" { Direction::Inverse } else { Direction::Forward };
+            if fft2d {
+                if domain != Domain::ComplexToComplex {
+                    return Err("stream: --fft2d supports --domain c2c only".into());
+                }
+                let mut io = FileIo::create(&output, dims)?;
+                let done = proc.transform_2d(&mut src, &mut io, direction)?;
+                println!("fft2d: {} column strips", done.strips);
+                done.report
+            } else if domain == Domain::RealToComplex {
+                if direction == Direction::Inverse {
+                    return Err("stream: --domain r2c supports --op fft only".into());
+                }
+                let row_spec = ProblemSpec::real(dims.cols)?;
+                let h1 = row_spec.spectrum_elems().expect("r2c rows have a spectrum length");
+                let mut sink = FileSink::create(&output, Dims::new(dims.rows, h1))?;
+                proc.transform_spec(&mut src, &mut sink, &row_spec, direction)?
+            } else {
+                let mut sink = FileSink::create(&output, dims)?;
+                proc.transform(&mut src, &mut sink, direction)?
+            }
+        }
+        other => return Err(format!("stream: unknown op '{other}' (fft | ifft | sar)").into()),
     };
     println!("{}", report.summary());
     println!("{}", proc.metrics().report());
 
     if args.flag("check") {
-        check_streamed(&cfg, &input, &output, &op)?;
+        check_streamed(&cfg, &input, &output, &op, domain, fft2d)?;
     }
     Ok(())
 }
 
 /// `--check`: load both datasets fully, recompute in memory, and require
 /// bit-for-bit equality with the streamed output.
-fn check_streamed(cfg: &ServiceConfig, input: &str, output: &str, op: &str) -> CmdResult {
+fn check_streamed(
+    cfg: &ServiceConfig,
+    input: &str,
+    output: &str,
+    op: &str,
+    domain: Domain,
+    fft2d: bool,
+) -> CmdResult {
     use memfft::coordinator::backend;
-    use memfft::stream::{bitwise_mismatches, read_dataset, transform_in_memory};
+    use memfft::fft::Algorithm;
+    use memfft::stream::{
+        bitwise_mismatches, read_dataset, transform_2d_in_memory, transform_in_memory,
+        transform_in_memory_spec,
+    };
     use memfft::C32;
 
     // --check only makes sense for methods that are bit-compatible with
@@ -347,10 +527,16 @@ fn check_streamed(cfg: &ServiceConfig, input: &str, output: &str, op: &str) -> C
     }
     let (dims, data) = read_dataset(input)?;
     let (odims, got) = read_dataset(output)?;
-    if odims != dims {
+    let r2c = domain == Domain::RealToComplex && op != "sar" && !fft2d;
+    let want_odims = if r2c {
+        memfft::stream::Dims::new(dims.rows, dims.cols / 2 + 1)
+    } else {
+        dims
+    };
+    if odims != want_odims {
         return Err(format!(
-            "check: output is {}x{}, input is {}x{}",
-            odims.rows, odims.cols, dims.rows, dims.cols
+            "check: output is {}x{}, expected {}x{} for this descriptor",
+            odims.rows, odims.cols, want_odims.rows, want_odims.cols
         )
         .into());
     }
@@ -364,8 +550,23 @@ fn check_streamed(cfg: &ServiceConfig, input: &str, output: &str, op: &str) -> C
             _ => {
                 let direction =
                     if op == "ifft" { Direction::Inverse } else { Direction::Forward };
-                let mut reference = backend::for_config(cfg);
-                transform_in_memory(&mut *reference, dims, &data, direction)?
+                if fft2d {
+                    // The streamed 2-D path went through the backend's
+                    // pinned hint; mirror it in the descriptor plan.
+                    let algo = if cfg.method == "memtier" {
+                        Algorithm::MemTier
+                    } else {
+                        Algorithm::Auto
+                    };
+                    transform_2d_in_memory(dims, &data, direction, algo)?
+                } else if r2c {
+                    let row_spec = ProblemSpec::real(dims.cols)?;
+                    let mut reference = backend::for_config(cfg);
+                    transform_in_memory_spec(&mut *reference, dims, &data, &row_spec, direction)?
+                } else {
+                    let mut reference = backend::for_config(cfg);
+                    transform_in_memory(&mut *reference, dims, &data, direction)?
+                }
             }
         })
     })?;

@@ -228,6 +228,10 @@ pub struct ServiceMetrics {
     pub requests_done: Counter,
     pub requests_failed: Counter,
     pub requests_rejected: Counter,
+    /// Descriptor-lane traffic beyond the classic 1-D complex path
+    /// (`FftService::submit_spec`): 2-D-shaped and real-domain requests.
+    pub requests_2d: Counter,
+    pub requests_r2c: Counter,
     pub batches_executed: Counter,
     pub batch_fill: Counter, // sum of batch sizes, for mean fill = fill/batches
     pub plan_cache_hits: Counter,
@@ -270,6 +274,13 @@ impl ServiceMetrics {
             self.requests_failed.get(),
             self.requests_rejected.get()
         ));
+        if self.requests_2d.get() > 0 || self.requests_r2c.get() > 0 {
+            s.push_str(&format!(
+                "descriptors: 2d={} r2c={}\n",
+                self.requests_2d.get(),
+                self.requests_r2c.get()
+            ));
+        }
         s.push_str(&format!(
             "batches: {} (mean fill {:.2})  plan-cache: {} hits / {} misses\n",
             self.batches_executed.get(),

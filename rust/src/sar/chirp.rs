@@ -4,7 +4,8 @@
 //! thousands", §3); this module builds that workload from first
 //! principles.
 
-use crate::fft::plan::{fft, Algorithm, FftPlan};
+use crate::fft::plan::fft;
+use crate::fft::{plan as plan_spec, ProblemSpec};
 use crate::util::complex::{C32, C64};
 
 /// Baseband LFM chirp of length `n` centred at sample `center`:
@@ -34,7 +35,9 @@ pub fn matched_filter(n: usize) -> Vec<C32> {
 pub fn compress(signal: &[C32], filter_freq: &[C32]) -> Vec<C32> {
     let n = signal.len();
     assert_eq!(filter_freq.len(), n);
-    let plan = FftPlan::new(n, Algorithm::Auto);
+    let plan = ProblemSpec::one_d(n)
+        .and_then(|s| plan_spec(&s.in_place()))
+        .unwrap_or_else(|e| panic!("chirp::compress({n}): {e}"));
     let mut spec = signal.to_vec();
     plan.forward(&mut spec);
     for (s, h) in spec.iter_mut().zip(filter_freq) {

@@ -26,8 +26,7 @@ use std::time::Instant;
 use super::chirp::matched_filter;
 use super::scene::Scene;
 use crate::coordinator::{Backend, BatchSpec, Direction};
-use crate::fft::plan::{Algorithm, FftPlan};
-use crate::fft::{scratch, FftError, Transform};
+use crate::fft::{plan as plan_spec, scratch, FftError, Plan, ProblemSpec, Transform};
 use crate::metrics::ServiceMetrics;
 use crate::stream::{self, ChunkPlan, ChunkSource, PipelineReport, SliceIo, StreamError};
 use crate::util::complex::C32;
@@ -46,10 +45,12 @@ pub fn filters(naz: usize, nr: usize) -> (Vec<C32>, Vec<C32>) {
 }
 
 /// Fallible range–Doppler processing of a raw echo matrix (row-major
-/// [naz, nr]) — the `Transform`-API path: plans via `try_new`, execution
-/// via `forward_inplace` / `inverse_inplace` with explicitly owned
-/// scratch, bad dimensions surfacing as [`FftError`] instead of tearing
-/// the caller down.
+/// [naz, nr]) — the descriptor path: the processor *declares* its two
+/// stages as `ProblemSpec`s (range: `naz` batched in-place `nr`-point
+/// lines; azimuth: `nr` batched in-place `naz`-point columns) and plans
+/// both through `fft::plan`, with execution via `forward_inplace` /
+/// `inverse_inplace` over explicitly owned scratch; bad dimensions
+/// surface as [`FftError`] instead of tearing the caller down.
 pub fn process(raw: &[C32], naz: usize, nr: usize) -> Result<Focused, FftError> {
     if naz == 0 || nr == 0 {
         return Err(FftError::ZeroSize);
@@ -59,8 +60,10 @@ pub fn process(raw: &[C32], naz: usize, nr: usize) -> Result<Focused, FftError> 
         return Err(FftError::SizeMismatch { expected, got: raw.len() });
     }
     let (rfilt, afilt) = filters(naz, nr);
-    let range_plan = FftPlan::try_new(nr, Algorithm::Auto)?;
-    let az_plan = FftPlan::try_new(naz, Algorithm::Auto)?;
+    let range_stage = ProblemSpec::one_d(nr)?.batched(naz)?.in_place();
+    let azimuth_stage = ProblemSpec::one_d(naz)?.batched(nr)?.in_place();
+    let range_plan = plan_spec(&range_stage)?;
+    let az_plan = plan_spec(&azimuth_stage)?;
 
     let mut img = raw.to_vec();
     // Range compression, row-parallel over azimuth lines (each line's
@@ -89,7 +92,7 @@ pub fn process_cpu(raw: &[C32], naz: usize, nr: usize) -> Focused {
 fn compress_rows(
     data: &mut [C32],
     n: usize,
-    plan: &FftPlan,
+    plan: &Plan,
     filt: &[C32],
 ) -> Result<(), FftError> {
     let first_err = Mutex::new(None);
@@ -115,7 +118,7 @@ fn compress_rows(
 /// One matched-filtered row: FFT, pointwise filter, IFFT — the fallible
 /// `Transform` face with caller scratch.
 fn compress_row(
-    plan: &FftPlan,
+    plan: &Plan,
     filt: &[C32],
     row: &mut [C32],
     scratch: &mut [C32],
@@ -194,11 +197,13 @@ pub fn process_streamed(
             &plan,
             metrics,
             |meta, re, im| {
-                let fwd = BatchSpec { n: nr, batch: meta.rows, direction: Direction::Forward };
+                let fwd = BatchSpec::c2c(nr, meta.rows, Direction::Forward)
+                    .map_err(StreamError::Fft)?;
                 let f = backend.execute_batch(&fwd, &re, &im)?;
                 let (mut fre, mut fim) = (f.re, f.im);
                 multiply_rows(&mut fre, &mut fim, &rf_re, &rf_im);
-                let inv = BatchSpec { n: nr, batch: meta.rows, direction: Direction::Inverse };
+                let inv = BatchSpec::c2c(nr, meta.rows, Direction::Inverse)
+                    .map_err(StreamError::Fft)?;
                 let g = backend.execute_batch(&inv, &fre, &fim)?;
                 Ok((g.re, g.im))
             },
@@ -233,11 +238,11 @@ pub fn process_streamed(
         let gather = t.elapsed();
 
         let t = Instant::now();
-        let fwd = BatchSpec { n: naz, batch: w, direction: Direction::Forward };
+        let fwd = BatchSpec::c2c(naz, w, Direction::Forward).map_err(StreamError::Fft)?;
         let f = backend.execute_batch(&fwd, &col_re[..w * naz], &col_im[..w * naz])?;
         let (mut fre, mut fim) = (f.re, f.im);
         multiply_rows(&mut fre, &mut fim, &af_re, &af_im);
-        let inv = BatchSpec { n: naz, batch: w, direction: Direction::Inverse };
+        let inv = BatchSpec::c2c(naz, w, Direction::Inverse).map_err(StreamError::Fft)?;
         let g = backend.execute_batch(&inv, &fre, &fim)?;
         let compute = t.elapsed();
 
@@ -431,9 +436,10 @@ mod tests {
     /// the Transform-API rewrite (chunked rows, reused explicit scratch)
     /// to the exact bits of the original implementation.
     fn legacy_reference(raw: &[C32], naz: usize, nr: usize) -> Vec<C32> {
+        use crate::fft::{Algorithm, FftPlan};
         let (rfilt, afilt) = filters(naz, nr);
-        let range_plan = FftPlan::new(nr, Algorithm::Auto);
-        let az_plan = FftPlan::new(naz, Algorithm::Auto);
+        let range_plan = FftPlan::try_new(nr, Algorithm::Auto).unwrap();
+        let az_plan = FftPlan::try_new(naz, Algorithm::Auto).unwrap();
         let mut img = raw.to_vec();
         for row in img.chunks_exact_mut(nr) {
             range_plan.forward(row);

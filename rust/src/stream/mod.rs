@@ -32,17 +32,21 @@
 //!   the compute stage's out-of-place output), and
 //!   bit-for-bit-deterministic in-order writeback.
 //!
-//! Entry points: [`stream_transform`] (fft/ifft over any backend),
+//! Entry points: [`stream_transform_spec`] (per-row descriptor — c2c, or
+//! r2c with half-spectrum output; [`stream_transform`] is the c2c compat
+//! face), [`stream_transform_2d`] (one whole-dataset 2-D transform,
+//! row-chunked then column-strip — [`twod`]),
 //! `sar::rda::process_streamed` (range–Doppler focusing with azimuth
 //! lines arriving chunk-by-chunk), and the coordinator's
 //! [`crate::coordinator::StreamProcessor`] (dataset jobs with the service
 //! config's `method` / `threads` / `cache.tile` / `stream.budget` knobs
-//! and `FftService` metrics). See DESIGN.md §8.
+//! and `FftService` metrics). See DESIGN.md §8–§9.
 
 pub mod chunker;
 pub mod dataset;
 pub mod pipeline;
 pub mod sink;
+pub mod twod;
 
 use crate::coordinator::BackendError;
 use crate::fft::FftError;
@@ -50,10 +54,11 @@ use crate::fft::FftError;
 pub use chunker::{budget_bytes, set_budget, with_budget, ChunkPlan, ChunkSpec, DEFAULT_BUDGET_BYTES, ELEM_BYTES};
 pub use dataset::{read_dataset, write_dataset, ChunkSource, Dims, FileDataset, MemDataset};
 pub use pipeline::{
-    bitwise_mismatches, run_chunks, stream_transform, transform_in_memory, ChunkMeta,
-    PipelineReport,
+    bitwise_mismatches, run_chunks, stream_transform, stream_transform_spec,
+    transform_in_memory, transform_in_memory_spec, ChunkMeta, PipelineReport,
 };
 pub use sink::{ChunkSink, FileIo, FileSink, MemIo, MemSink, SliceIo};
+pub use twod::{stream_transform_2d, transform_2d_in_memory, Streamed2d};
 
 /// Errors of the streaming subsystem. IO failures carry the underlying
 /// `io::Error`; malformed containers and dimension mismatches surface as

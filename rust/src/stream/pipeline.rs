@@ -38,6 +38,7 @@ use super::dataset::{ChunkSource, Dims};
 use super::sink::ChunkSink;
 use super::StreamError;
 use crate::coordinator::{Backend, BatchSpec, Direction};
+use crate::fft::{Domain, FftError, ProblemSpec, Shape};
 use crate::metrics::ServiceMetrics;
 use crate::util::complex::C32;
 
@@ -216,7 +217,11 @@ where
                 while let Ok((meta, re, im)) = write_rx.recv() {
                     let t = Instant::now();
                     write(&meta, &re, &im)?;
-                    ledger.sub(meta.payload_bytes());
+                    // Retire the bytes these planes actually hold (the
+                    // compute stage may shrink a chunk — e.g. the r2c
+                    // half-spectrum — so the input-sized payload_bytes()
+                    // would over-subtract and wrap the ledger).
+                    ledger.sub((re.len() + im.len()) * 4);
                     // Drained planes go back to the reader for reuse (the
                     // ledger already retired their payload; a reader that
                     // has exited just drops them).
@@ -297,8 +302,10 @@ where
 }
 
 /// Stream a whole dataset through `Backend::execute_batch`: every chunk
-/// is one size-homogeneous batch of `cols`-point transforms. This is the
-/// `memfft stream` / `StreamProcessor` execution path for fft and ifft.
+/// is one descriptor-homogeneous batch of `cols`-point complex
+/// transforms. This is the classic `memfft stream` / `StreamProcessor`
+/// execution path for fft and ifft — a compat face over
+/// [`stream_transform_spec`] with a `OneD{cols}` c2c row descriptor.
 pub fn stream_transform(
     source: &mut dyn ChunkSource,
     sink: &mut dyn ChunkSink,
@@ -317,8 +324,76 @@ pub fn stream_transform(
             dims.cols
         )));
     }
-    if dims.rows > 0 && dims.cols == 0 {
+    if dims.rows == 0 {
+        // Nothing to describe (a row descriptor needs a nonzero length):
+        // run the empty plan so the report/sink contract stays identical.
+        let plan = ChunkPlan::new(0, dims.cols, budget);
+        let report =
+            run_chunks(source, &plan, metrics, |_, re, im| Ok((re, im)), |_, _, _| Ok(()))?;
+        sink.finish()?;
+        return Ok(report);
+    }
+    if dims.cols == 0 {
         return Err(StreamError::Format("dataset rows have zero points".into()));
+    }
+    let row_spec = ProblemSpec::one_d(dims.cols).map_err(StreamError::Fft)?;
+    stream_transform_spec(source, sink, backend, &row_spec, direction, budget, metrics)
+}
+
+/// Stream a dataset through `Backend::execute_batch` under a **row
+/// descriptor**: `row_spec` names the transform applied to each dataset
+/// row (`batch() == 1`; the dataset's rows are the streaming batch
+/// dimension, re-batched per chunk).
+///
+/// - `ComplexToComplex`: sink dims equal source dims — the classic lane.
+/// - `RealToComplex` (forward only): each row's `re` plane is the real
+///   signal (`im` ignored by the RFFT contract) and the sink holds the
+///   **half spectrum** — `rows × (n/2 + 1)` bins per the `--domain r2c`
+///   wire convention.
+pub fn stream_transform_spec(
+    source: &mut dyn ChunkSource,
+    sink: &mut dyn ChunkSink,
+    backend: &mut dyn Backend,
+    row_spec: &ProblemSpec,
+    direction: Direction,
+    budget: usize,
+    metrics: Option<&ServiceMetrics>,
+) -> Result<PipelineReport, StreamError> {
+    let dims = source.dims();
+    match row_spec.shape() {
+        Shape::OneD { n } if n == dims.cols => {}
+        shape => {
+            return Err(StreamError::Format(format!(
+                "descriptor shape {shape} does not name this dataset's {}-point rows",
+                dims.cols
+            )))
+        }
+    }
+    if row_spec.batch() != 1 {
+        return Err(StreamError::Format(
+            "streamed row descriptors are per-row (batch 1); the dataset's rows are the \
+             batch dimension"
+                .into(),
+        ));
+    }
+    let r2c = row_spec.domain() == Domain::RealToComplex;
+    if r2c && direction == Direction::Inverse {
+        return Err(StreamError::Fft(FftError::Unsupported(
+            "streamed r2c inverse (half-spectrum datasets are forward-only)",
+        )));
+    }
+    let out_cols = if r2c {
+        row_spec.spectrum_elems().expect("r2c descriptors have a spectrum length")
+    } else {
+        dims.cols
+    };
+    if sink.dims() != (Dims { rows: dims.rows, cols: out_cols }) {
+        return Err(StreamError::Format(format!(
+            "sink is {}x{}, descriptor output is {}x{out_cols}",
+            sink.dims().rows,
+            sink.dims().cols,
+            dims.rows,
+        )));
     }
     let plan = ChunkPlan::new(dims.rows, dims.cols, budget);
     let report = run_chunks(
@@ -326,9 +401,29 @@ pub fn stream_transform(
         &plan,
         metrics,
         |meta, re, im| {
-            let spec = BatchSpec { n: meta.cols, batch: meta.rows, direction };
+            let problem = row_spec.batched(meta.rows).map_err(StreamError::Fft)?;
+            let spec = BatchSpec::new(problem, direction);
             let out = backend.execute_batch(&spec, &re, &im)?;
-            Ok((out.re, out.im))
+            if r2c {
+                // Keep bins 0..=n/2 of each row's Hermitian spectrum (the
+                // other half is redundant by symmetry), compacting IN
+                // PLACE: the full-spectrum planes keep their capacity
+                // through truncate, so the writer→reader buffer recycling
+                // still hands back full-size allocations and the
+                // steady-state zero-allocation contract holds for r2c too.
+                let (mut tre, mut tim) = (out.re, out.im);
+                for r in 1..meta.rows {
+                    let src = r * meta.cols;
+                    let dst = r * out_cols;
+                    tre.copy_within(src..src + out_cols, dst);
+                    tim.copy_within(src..src + out_cols, dst);
+                }
+                tre.truncate(meta.rows * out_cols);
+                tim.truncate(meta.rows * out_cols);
+                Ok((tre, tim))
+            } else {
+                Ok((out.re, out.im))
+            }
         },
         |_, re, im| sink.write_rows(re, im),
     )?;
@@ -360,9 +455,64 @@ pub fn transform_in_memory(
     }
     let re: Vec<f32> = data.iter().map(|c| c.re).collect();
     let im: Vec<f32> = data.iter().map(|c| c.im).collect();
-    let spec = BatchSpec { n: dims.cols, batch: dims.rows, direction };
+    let spec = BatchSpec::c2c(dims.cols, dims.rows, direction).map_err(StreamError::Fft)?;
     let out = backend.execute_batch(&spec, &re, &im)?;
     Ok(out.re.iter().zip(&out.im).map(|(&a, &b)| C32::new(a, b)).collect())
+}
+
+/// One-shot in-memory reference for a **row-descriptor** streamed
+/// transform ([`stream_transform_spec`]): the whole dataset as one
+/// `execute_batch`, with the r2c half-spectrum truncation applied the
+/// same way. The oracle side of the descriptor `--check` diffs.
+pub fn transform_in_memory_spec(
+    backend: &mut dyn Backend,
+    dims: Dims,
+    data: &[C32],
+    row_spec: &ProblemSpec,
+    direction: Direction,
+) -> Result<Vec<C32>, StreamError> {
+    if data.len() != dims.elems()? {
+        return Err(StreamError::Format(format!(
+            "data holds {} elements, dims are {}x{}",
+            data.len(),
+            dims.rows,
+            dims.cols
+        )));
+    }
+    match row_spec.shape() {
+        Shape::OneD { n } if n == dims.cols => {}
+        shape => {
+            return Err(StreamError::Format(format!(
+                "descriptor shape {shape} does not name this dataset's {}-point rows",
+                dims.cols
+            )))
+        }
+    }
+    if dims.rows == 0 {
+        return Ok(Vec::new());
+    }
+    let r2c = row_spec.domain() == Domain::RealToComplex;
+    if r2c && direction == Direction::Inverse {
+        return Err(StreamError::Fft(FftError::Unsupported(
+            "streamed r2c inverse (half-spectrum datasets are forward-only)",
+        )));
+    }
+    let re: Vec<f32> = data.iter().map(|c| c.re).collect();
+    let im: Vec<f32> = data.iter().map(|c| c.im).collect();
+    let problem = row_spec.batched(dims.rows).map_err(StreamError::Fft)?;
+    let out = backend.execute_batch(&BatchSpec::new(problem, direction), &re, &im)?;
+    let full: Vec<C32> =
+        out.re.iter().zip(&out.im).map(|(&a, &b)| C32::new(a, b)).collect();
+    if r2c {
+        let h1 = row_spec.spectrum_elems().expect("r2c descriptors have a spectrum length");
+        let mut half = Vec::with_capacity(dims.rows * h1);
+        for row in full.chunks_exact(dims.cols) {
+            half.extend_from_slice(&row[..h1]);
+        }
+        Ok(half)
+    } else {
+        Ok(full)
+    }
 }
 
 /// Elements whose bit patterns differ between two complex buffers — the

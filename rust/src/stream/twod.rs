@@ -1,0 +1,252 @@
+//! Out-of-core 2-D transforms: a whole `rows × cols` FFT streamed as
+//! row-chunked plans.
+//!
+//! The descriptor redesign lets a dataset *be* one 2-D problem
+//! (`ProblemSpec::two_d(rows, cols)`) instead of a batch of independent
+//! rows. [`stream_transform_2d`] executes that problem without the matrix
+//! ever being resident, mirroring the streamed SAR processor's two-stage
+//! structure (`sar::rda::process_streamed`) with plain transforms:
+//!
+//! 1. **Row pass (streamed).** The prefetch/compute/writeback pipeline
+//!    runs each chunk of rows through the `cols`-point row transform via
+//!    `Backend::execute_batch` and writes them straight into the
+//!    random-access output store (`SliceIo`), which doubles as the
+//!    working matrix.
+//! 2. **Column pass (strided strips).** Budget-sized column strips are
+//!    gathered transposed from the store (each column becomes one
+//!    contiguous `rows`-point batch row — the same layout `Fft2d`
+//!    reaches via its full transpose), transformed as one `n = rows`
+//!    batch, and scattered back.
+//!
+//! Per-element arithmetic is identical to the in-memory
+//! `plan(&ProblemSpec::two_d(..))` path (same resolved row/column plans
+//! through a native backend, same pass order and scaling), so the
+//! streamed matrix is **bit-for-bit equal** to the one-shot 2-D transform
+//! for any chunk budget and thread count — asserted in
+//! `rust/tests/spec_api.rs`. Peak memory is O(budget) for both stages.
+
+use std::time::Instant;
+
+use super::chunker::{budget_bytes, ChunkPlan, ELEM_BYTES};
+use super::dataset::ChunkSource;
+use super::pipeline::{run_chunks, PipelineReport};
+use super::sink::SliceIo;
+use super::StreamError;
+use crate::coordinator::{Backend, BatchSpec, Direction};
+use crate::fft::ProblemSpec;
+use crate::metrics::ServiceMetrics;
+use crate::util::complex::C32;
+
+/// What one streamed 2-D run did: the stage-A pipeline report with the
+/// stage-B strip busy time folded in, plus the strip count.
+#[derive(Debug, Clone)]
+pub struct Streamed2d {
+    pub report: PipelineReport,
+    /// Column strips processed in the second pass.
+    pub strips: usize,
+}
+
+/// Execute one `rows × cols` 2-D transform over a dataset that streams in
+/// row by row, assembling the result in `out` (see the module docs for
+/// the two-stage structure and the bit-equality contract).
+pub fn stream_transform_2d(
+    source: &mut dyn ChunkSource,
+    out: &mut dyn SliceIo,
+    backend: &mut dyn Backend,
+    direction: Direction,
+    budget: usize,
+    metrics: Option<&ServiceMetrics>,
+) -> Result<Streamed2d, StreamError> {
+    let dims = source.dims();
+    let (rows, cols) = (dims.rows, dims.cols);
+    if out.dims() != dims {
+        return Err(StreamError::Format(format!(
+            "output is {}x{}, dataset is {rows}x{cols}",
+            out.dims().rows,
+            out.dims().cols
+        )));
+    }
+    if rows == 0 {
+        return Ok(Streamed2d { report: PipelineReport::default(), strips: 0 });
+    }
+    if cols == 0 {
+        return Err(StreamError::Format("dataset rows have zero points".into()));
+    }
+    // Validates the geometry (and documents what this function runs).
+    ProblemSpec::two_d(rows, cols).map_err(StreamError::Fft)?;
+    let budget = if budget == 0 { budget_bytes() } else { budget };
+    let started = Instant::now();
+
+    // Stage A: streamed row transforms, written in place into `out`.
+    let row_spec = ProblemSpec::one_d(cols).map_err(StreamError::Fft)?;
+    let plan = ChunkPlan::new(rows, cols, budget);
+    let out_ref = &mut *out;
+    let mut report = {
+        let mut rowbuf: Vec<C32> = Vec::new();
+        run_chunks(
+            source,
+            &plan,
+            metrics,
+            |meta, re, im| {
+                let problem = row_spec.batched(meta.rows).map_err(StreamError::Fft)?;
+                let spec = BatchSpec::new(problem, direction);
+                let b = backend.execute_batch(&spec, &re, &im)?;
+                Ok((b.re, b.im))
+            },
+            move |meta, re, im| {
+                rowbuf.clear();
+                rowbuf.extend(re.iter().zip(im).map(|(&a, &b)| C32::new(a, b)));
+                out_ref.write_span(meta.row0 * cols, &rowbuf)
+            },
+        )?
+    };
+
+    // Stage B: column transforms over budget-sized strips. A strip of `w`
+    // columns is gathered transposed (each column contiguous), run as one
+    // n = rows batch, and scattered back.
+    let col_spec = ProblemSpec::one_d(rows).map_err(StreamError::Fft)?;
+    let strip_w = (budget / (rows * ELEM_BYTES).max(1)).clamp(1, cols);
+    let mut col_re = vec![0f32; strip_w * rows];
+    let mut col_im = vec![0f32; strip_w * rows];
+    let mut seg = vec![C32::ZERO; strip_w];
+    let mut strips = 0usize;
+    let mut c0 = 0usize;
+    while c0 < cols {
+        let w = strip_w.min(cols - c0);
+        let t = Instant::now();
+        for j in 0..rows {
+            out.read_span(j * cols + c0, &mut seg[..w])?;
+            for (c, s) in seg[..w].iter().enumerate() {
+                col_re[c * rows + j] = s.re;
+                col_im[c * rows + j] = s.im;
+            }
+        }
+        let gather = t.elapsed();
+
+        let t = Instant::now();
+        let problem = col_spec.batched(w).map_err(StreamError::Fft)?;
+        let spec = BatchSpec::new(problem, direction);
+        let g = backend.execute_batch(&spec, &col_re[..w * rows], &col_im[..w * rows])?;
+        let compute = t.elapsed();
+
+        let t = Instant::now();
+        for j in 0..rows {
+            for (c, s) in seg[..w].iter_mut().enumerate() {
+                *s = C32::new(g.re[c * rows + j], g.im[c * rows + j]);
+            }
+            out.write_span(j * cols + c0, &seg[..w])?;
+        }
+        let scatter = t.elapsed();
+
+        if let Some(m) = metrics {
+            m.stream_read.record(gather);
+            m.stream_compute.record(compute);
+            m.stream_write.record(scatter);
+        }
+        report.read_busy += gather;
+        report.compute_busy += compute;
+        report.write_busy += scatter;
+        strips += 1;
+        c0 += w;
+    }
+
+    report.wall = started.elapsed();
+    Ok(Streamed2d { report, strips })
+}
+
+/// One-shot in-memory reference for a streamed 2-D transform: the whole
+/// matrix through the descriptor plan (`algo` is the backend's pinned
+/// hint — `Auto` for native/modeled). The oracle side of the `--check`
+/// diff and the equivalence tests.
+pub fn transform_2d_in_memory(
+    dims: super::dataset::Dims,
+    data: &[C32],
+    direction: Direction,
+    algo: crate::fft::Algorithm,
+) -> Result<Vec<C32>, StreamError> {
+    if data.len() != dims.elems()? {
+        return Err(StreamError::Format(format!(
+            "data holds {} elements, dims are {}x{}",
+            data.len(),
+            dims.rows,
+            dims.cols
+        )));
+    }
+    if dims.rows == 0 {
+        return Ok(Vec::new());
+    }
+    let spec = ProblemSpec::two_d(dims.rows, dims.cols)
+        .map_err(StreamError::Fft)?
+        .with_algorithm(algo)
+        .in_place();
+    let plan = crate::fft::plan(&spec).map_err(StreamError::Fft)?;
+    let mut buf = data.to_vec();
+    let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+    let run = match direction {
+        Direction::Forward => plan.forward_batched_inplace(&mut buf, &mut scratch),
+        Direction::Inverse => plan.inverse_batched_inplace(&mut buf, &mut scratch),
+    };
+    run.map_err(StreamError::Fft)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::{Dims, MemDataset, MemIo};
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn streamed_2d_is_bitwise_equal_to_in_memory_plan() {
+        let (rows, cols) = (16usize, 32usize);
+        let mut rng = Xoshiro256::seeded(0x2D);
+        let data = rng.complex_vec(rows * cols);
+        for budget in [cols * ELEM_BYTES, 5 * cols * ELEM_BYTES, 1 << 30] {
+            for direction in [Direction::Forward, Direction::Inverse] {
+                let mut src = MemDataset::new(rows, cols, data.clone());
+                let mut io = MemIo::new(Dims::new(rows, cols)).unwrap();
+                let mut backend = crate::coordinator::NativeBackend::default();
+                let done = stream_transform_2d(
+                    &mut src,
+                    &mut io,
+                    &mut backend,
+                    direction,
+                    budget,
+                    None,
+                )
+                .unwrap();
+                assert!(done.strips >= 1);
+                let expect = transform_2d_in_memory(
+                    Dims::new(rows, cols),
+                    &data,
+                    direction,
+                    crate::fft::Algorithm::Auto,
+                )
+                .unwrap();
+                assert_eq!(
+                    super::super::bitwise_mismatches(io.data(), &expect),
+                    0,
+                    "budget={budget} {direction:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_output_and_empty_rows_pass_through() {
+        let mut src = MemDataset::new(2, 4, vec![C32::ZERO; 8]);
+        let mut io = MemIo::new(Dims::new(2, 5)).unwrap();
+        let mut backend = crate::coordinator::NativeBackend::default();
+        assert!(matches!(
+            stream_transform_2d(&mut src, &mut io, &mut backend, Direction::Forward, 0, None),
+            Err(StreamError::Format(_))
+        ));
+        let mut empty = MemDataset::new(0, 4, Vec::new());
+        let mut io = MemIo::new(Dims::new(0, 4)).unwrap();
+        let done =
+            stream_transform_2d(&mut empty, &mut io, &mut backend, Direction::Forward, 0, None)
+                .unwrap();
+        assert_eq!(done.strips, 0);
+        assert_eq!(done.report.chunks, 0);
+    }
+}

@@ -160,7 +160,14 @@ fn prop_rfft_matches_complex_fft() {
     check("rfft = fft on real input", 30, |g| {
         let n = g.pow2(1, 11);
         let x = g.real_vec(n);
-        let spec = fft::RealFft::new(n).forward(&x);
+        // The buffer-reusing fallible face — the descriptor path's r2c
+        // entry — must agree with the allocating sugar bit-for-bit.
+        let rf = fft::RealFft::new(n);
+        let mut spec = vec![C32::new(0.0, 0.0); rf.spectrum_len()];
+        let mut scratch = vec![C32::new(0.0, 0.0); n];
+        rf.forward_into_spectrum(&x, &mut spec, &mut scratch).unwrap();
+        let sugar = rf.forward(&x);
+        prop_assert!(spec == sugar, "non-allocating face must match the allocating sugar");
         let mut full: Vec<C32> = x.iter().map(|&r| C32::new(r, 0.0)).collect();
         fft::fft(&mut full);
         assert_close(&spec, &full[..n / 2 + 1], 2e-3 * (n as f32).sqrt(), "rfft")

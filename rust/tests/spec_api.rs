@@ -1,0 +1,350 @@
+//! Descriptor-planning acceptance suite (the `ProblemSpec` → `plan()`
+//! redesign, DESIGN.md §9):
+//!
+//! 1. Descriptor-planned execution is **bit-for-bit** equal to the legacy
+//!    constructor paths (`FftPlan` / `Fft2d` / `RealFft`) across the
+//!    issue's size grid — n ∈ {1, 100, 2^10, 2^18}, shapes {1×n, 8×1024,
+//!    24×40} — and thread budgets {1, 2, 7}.
+//! 2. Invalid descriptors come back as `FftError` values at
+//!    *construction* (zero sizes, overflow, r2c odd lengths) or at
+//!    execution (short scratch) — never panics.
+//! 3. The descriptor flows end to end: plan-cache keying, service
+//!    round-trips (2-D and r2c through `submit_spec`), and the streaming
+//!    lanes (r2c half-spectrum, whole-dataset 2-D) all bucket and execute
+//!    by descriptor, bit-equal to their in-memory references.
+
+use memfft::coordinator::{Direction, FftService, NativeBackend};
+use memfft::fft::{
+    plan, Algorithm, Domain, Fft2d, FftError, FftPlan, PlanCache, ProblemSpec, RealFft, Shape,
+    Transform,
+};
+use memfft::stream::{
+    bitwise_mismatches, stream_transform_2d, stream_transform_spec, transform_2d_in_memory,
+    transform_in_memory_spec, Dims, MemDataset, MemIo, MemSink, ELEM_BYTES,
+};
+use memfft::util::complex::C32;
+use memfft::util::{pool, Xoshiro256};
+
+fn input(len: usize, seed: u64) -> Vec<C32> {
+    Xoshiro256::seeded(seed ^ 0xDE5C).complex_vec(len)
+}
+
+#[test]
+fn descriptor_1d_matches_legacy_fftplan_bitwise() {
+    for n in [1usize, 100, 1 << 10, 1 << 18] {
+        let x = input(n, n as u64);
+        for threads in [1usize, 2, 7] {
+            pool::with_threads(threads, || {
+                let legacy = FftPlan::new(n, Algorithm::Auto);
+                let desc = plan(&ProblemSpec::one_d(n).unwrap()).unwrap();
+                assert_eq!(desc.algorithm(), legacy.algorithm(), "n={n}");
+                let mut scratch = vec![C32::ZERO; desc.scratch_len().max(legacy.scratch_len())];
+                let mut via_legacy = vec![C32::ZERO; n];
+                legacy.forward_into(&x, &mut via_legacy, &mut scratch).unwrap();
+                let mut via_desc = vec![C32::ZERO; n];
+                desc.forward_into(&x, &mut via_desc, &mut scratch).unwrap();
+                assert_eq!(via_desc, via_legacy, "forward n={n} threads={threads}");
+                legacy.inverse_into(&x, &mut via_legacy, &mut scratch).unwrap();
+                desc.inverse_into(&x, &mut via_desc, &mut scratch).unwrap();
+                assert_eq!(via_desc, via_legacy, "inverse n={n} threads={threads}");
+            });
+        }
+    }
+}
+
+#[test]
+fn descriptor_2d_matches_legacy_fft2d_bitwise() {
+    // 1×n, a batched pow2 panel, and a non-pow2 scene (Bluestein dims).
+    for (rows, cols) in [(1usize, 64usize), (8, 1024), (24, 40)] {
+        let x = input(rows * cols, (rows * 1000 + cols) as u64);
+        for threads in [1usize, 2, 7] {
+            pool::with_threads(threads, || {
+                let legacy = Fft2d::new(rows, cols);
+                let desc = plan(&ProblemSpec::two_d(rows, cols).unwrap()).unwrap();
+                assert_eq!(desc.transform_len(), rows * cols);
+                let mut scratch = vec![
+                    C32::ZERO;
+                    desc.scratch_len().max(Transform::scratch_len(&legacy))
+                ];
+                let mut via_legacy = x.clone();
+                legacy.forward_inplace(&mut via_legacy, &mut scratch).unwrap();
+                let mut via_desc = x.clone();
+                desc.forward_inplace(&mut via_desc, &mut scratch).unwrap();
+                assert_eq!(via_desc, via_legacy, "{rows}x{cols} threads={threads}");
+                legacy.inverse_inplace(&mut via_legacy, &mut scratch).unwrap();
+                desc.inverse_inplace(&mut via_desc, &mut scratch).unwrap();
+                assert_eq!(via_desc, via_legacy, "{rows}x{cols} inverse threads={threads}");
+            });
+        }
+    }
+}
+
+#[test]
+fn descriptor_real_matches_legacy_realfft_bitwise() {
+    for n in [2usize, 1 << 10, 1 << 18] {
+        let mut rng = Xoshiro256::seeded(n as u64 ^ 0x0EA1);
+        let x = rng.real_vec(n);
+        for threads in [1usize, 2, 7] {
+            pool::with_threads(threads, || {
+                let legacy = RealFft::new(n);
+                let desc = plan(&ProblemSpec::real(n).unwrap()).unwrap();
+                let h1 = desc.spectrum_len().unwrap();
+                assert_eq!(h1, n / 2 + 1);
+                // Typed faces: non-allocating descriptor vs allocating legacy.
+                let mut spec_bins = vec![C32::ZERO; h1];
+                let mut scratch = vec![C32::ZERO; desc.scratch_len()];
+                desc.forward_real_into(&x, &mut spec_bins, &mut scratch).unwrap();
+                let sugar = legacy.forward(&x);
+                assert_eq!(spec_bins, sugar, "n={n} threads={threads}");
+                // Inverse roundtrip through the non-allocating face.
+                let mut back = vec![0f32; n];
+                desc.inverse_real_into(&spec_bins, &mut back, &mut scratch).unwrap();
+                for (a, b) in x.iter().zip(&back) {
+                    assert!((a - b).abs() < 1e-3, "n={n} roundtrip");
+                }
+                // The Transform view agrees with the legacy Transform view.
+                let mut via_legacy: Vec<C32> =
+                    x.iter().map(|&r| C32::new(r, 0.0)).collect();
+                let mut via_desc = via_legacy.clone();
+                let mut tscratch =
+                    vec![C32::ZERO; Transform::scratch_len(&legacy).max(desc.scratch_len())];
+                legacy.forward_inplace(&mut via_legacy, &mut tscratch).unwrap();
+                desc.forward_inplace(&mut via_desc, &mut tscratch).unwrap();
+                assert_eq!(via_desc, via_legacy, "transform view n={n}");
+            });
+        }
+    }
+}
+
+#[test]
+fn batched_descriptor_matches_looped_legacy_bitwise() {
+    let (n, batch) = (1usize << 10, 7usize);
+    let x = input(n * batch, 0xBA7C);
+    for threads in [1usize, 2, 7] {
+        pool::with_threads(threads, || {
+            let spec = ProblemSpec::one_d(n).unwrap().batched(batch).unwrap();
+            let p = plan(&spec).unwrap();
+            let mut out = vec![C32::ZERO; n * batch];
+            let mut scratch = vec![C32::ZERO; p.scratch_len()];
+            p.forward_batched(&x, &mut out, &mut scratch).unwrap();
+            let legacy = FftPlan::new(n, Algorithm::Auto);
+            let mut looped = vec![C32::ZERO; n * batch];
+            let mut lscratch = vec![C32::ZERO; legacy.scratch_len()];
+            for (i_row, o_row) in x.chunks_exact(n).zip(looped.chunks_exact_mut(n)) {
+                legacy.forward_into(i_row, o_row, &mut lscratch).unwrap();
+            }
+            assert_eq!(out, looped, "threads={threads}");
+        });
+    }
+}
+
+#[test]
+fn invalid_descriptors_error_instead_of_panicking() {
+    // Zero sizes — every shape.
+    assert_eq!(ProblemSpec::one_d(0).unwrap_err(), FftError::ZeroSize);
+    assert_eq!(ProblemSpec::two_d(0, 8).unwrap_err(), FftError::ZeroSize);
+    assert_eq!(ProblemSpec::two_d(8, 0).unwrap_err(), FftError::ZeroSize);
+    assert_eq!(
+        ProblemSpec::one_d(16).unwrap().batched(0).unwrap_err(),
+        FftError::ZeroSize
+    );
+    // Overflow — geometry and batch.
+    assert!(matches!(
+        ProblemSpec::new(
+            Shape::TwoD { rows: usize::MAX / 2, cols: 4 },
+            Domain::ComplexToComplex
+        )
+        .unwrap_err(),
+        FftError::Overflow { .. }
+    ));
+    assert!(matches!(
+        ProblemSpec::one_d(1 << 20).unwrap().batched(usize::MAX >> 4).unwrap_err(),
+        FftError::Overflow { .. }
+    ));
+    // r2c odd / non-pow2 / sub-2 lengths.
+    for bad in [1usize, 3, 7, 100, 1025] {
+        assert!(
+            matches!(
+                ProblemSpec::real(bad).unwrap_err(),
+                FftError::NonPowerOfTwo { algo: "rfft", .. }
+            ),
+            "r2c n={bad} must be rejected at construction"
+        );
+    }
+    assert!(matches!(
+        ProblemSpec::new(Shape::TwoD { rows: 4, cols: 8 }, Domain::RealToComplex).unwrap_err(),
+        FftError::Unsupported(_)
+    ));
+    // Short scratch at execution time.
+    let p = plan(&ProblemSpec::one_d(64).unwrap()).unwrap();
+    let x = input(64, 1);
+    let mut out = vec![C32::ZERO; 64];
+    let mut none: Vec<C32> = Vec::new();
+    if p.scratch_len() > 0 {
+        assert!(matches!(
+            p.forward_into(&x, &mut out, &mut none).unwrap_err(),
+            FftError::ScratchTooSmall { .. }
+        ));
+    }
+    let spec = ProblemSpec::one_d(64).unwrap().batched(3).unwrap();
+    let pb = plan(&spec).unwrap();
+    let xb = input(192, 2);
+    let mut outb = vec![C32::ZERO; 192];
+    assert!(matches!(
+        pb.forward_batched(&xb, &mut outb[..191], &mut none).unwrap_err(),
+        FftError::SizeMismatch { .. }
+    ));
+    // Pinned algorithms that cannot serve the size fail at plan time.
+    assert!(matches!(
+        plan(&ProblemSpec::one_d(100).unwrap().with_algorithm(Algorithm::Radix4)).unwrap_err(),
+        FftError::NonPowerOfTwo { .. }
+    ));
+}
+
+#[test]
+fn plan_cache_keys_on_full_descriptor() {
+    use std::sync::Arc;
+    let cache = PlanCache::new();
+    // Equal element counts, different shapes → different plans.
+    let wide = ProblemSpec::two_d(8, 1024).unwrap();
+    let tall = ProblemSpec::two_d(1024, 8).unwrap();
+    let flat = ProblemSpec::one_d(8 * 1024).unwrap();
+    let a = cache.try_get_spec(&wide).unwrap();
+    let b = cache.try_get_spec(&tall).unwrap();
+    let c = cache.try_get_spec(&flat).unwrap();
+    assert!(!Arc::ptr_eq(&a, &b));
+    assert!(!Arc::ptr_eq(&a, &c));
+    assert_eq!(cache.len(), 3);
+    // Batch does not multiply plans.
+    let batched = cache.try_get_spec(&wide.batched(16).unwrap()).unwrap();
+    assert!(Arc::ptr_eq(&a, &batched), "batch counts must share the per-transform plan");
+    assert_eq!(cache.len(), 3);
+    // Auto shares with its resolved winner (1-D lane, via the compat face).
+    let auto = cache.get(512, Algorithm::Auto);
+    let winner = cache.get(512, FftPlan::resolve(512, Algorithm::Auto));
+    assert!(Arc::ptr_eq(&auto, &winner));
+    // r2c descriptors ignore the algorithm hint.
+    let r = cache.try_get_spec(&ProblemSpec::real(256).unwrap()).unwrap();
+    let r2 = cache
+        .try_get_spec(&ProblemSpec::real(256).unwrap().with_algorithm(Algorithm::FourStep))
+        .unwrap();
+    assert!(Arc::ptr_eq(&r, &r2));
+}
+
+#[test]
+fn service_round_trips_r2c_descriptor_bitwise() {
+    let svc = FftService::start(memfft::config::ServiceConfig {
+        method: "native".into(),
+        workers: 2,
+        max_batch: 4,
+        max_delay_us: 100,
+        queue_depth: 64,
+        ..Default::default()
+    });
+    let n = 256usize;
+    let mut rng = Xoshiro256::seeded(0x512C);
+    let x = rng.real_vec(n);
+    let problem = ProblemSpec::real(n).unwrap();
+    let rx = svc
+        .submit_spec(problem, Direction::Forward, x.clone(), vec![0.0; n])
+        .unwrap();
+    let resp = rx.recv().unwrap().unwrap();
+    // The full Hermitian spectrum comes back; its lower bins bit-match
+    // the typed legacy RFFT.
+    let typed = RealFft::new(n).forward(&x);
+    for k in 0..=n / 2 {
+        assert_eq!(resp.re[k].to_bits(), typed[k].re.to_bits(), "bin {k}");
+        assert_eq!(resp.im[k].to_bits(), typed[k].im.to_bits(), "bin {k}");
+    }
+    assert_eq!(svc.metrics().requests_r2c.get(), 1);
+    svc.shutdown();
+}
+
+#[test]
+fn streamed_r2c_rows_equal_in_memory_reference_bitwise() {
+    let (rows, cols) = (11usize, 64usize);
+    let mut rng = Xoshiro256::seeded(0x52C);
+    let data = rng.complex_vec(rows * cols);
+    let row_spec = ProblemSpec::real(cols).unwrap();
+    let h1 = row_spec.spectrum_elems().unwrap();
+    for budget in [cols * ELEM_BYTES, 3 * cols * ELEM_BYTES, 1 << 30] {
+        for threads in [1usize, 2, 7] {
+            pool::with_threads(threads, || {
+                let mut src = MemDataset::new(rows, cols, data.clone());
+                let mut sink = MemSink::new(Dims::new(rows, h1));
+                let mut backend = NativeBackend::default();
+                stream_transform_spec(
+                    &mut src,
+                    &mut sink,
+                    &mut backend,
+                    &row_spec,
+                    Direction::Forward,
+                    budget,
+                    None,
+                )
+                .unwrap();
+                let mut reference = NativeBackend::default();
+                let expect = transform_in_memory_spec(
+                    &mut reference,
+                    Dims::new(rows, cols),
+                    &data,
+                    &row_spec,
+                    Direction::Forward,
+                )
+                .unwrap();
+                assert_eq!(expect.len(), rows * h1);
+                assert_eq!(
+                    bitwise_mismatches(sink.data(), &expect),
+                    0,
+                    "budget={budget} threads={threads}"
+                );
+            });
+        }
+    }
+    // The streamed r2c inverse is rejected, not silently wrong.
+    let mut src = MemDataset::new(rows, cols, data);
+    let mut sink = MemSink::new(Dims::new(rows, h1));
+    let mut backend = NativeBackend::default();
+    assert!(stream_transform_spec(
+        &mut src,
+        &mut sink,
+        &mut backend,
+        &row_spec,
+        Direction::Inverse,
+        0,
+        None,
+    )
+    .is_err());
+}
+
+#[test]
+fn streamed_2d_dataset_equals_descriptor_plan_bitwise() {
+    let (rows, cols) = (24usize, 40usize); // non-pow2 on both axes
+    let mut rng = Xoshiro256::seeded(0x2D2D);
+    let data = rng.complex_vec(rows * cols);
+    for threads in [1usize, 2, 7] {
+        pool::with_threads(threads, || {
+            let mut src = MemDataset::new(rows, cols, data.clone());
+            let mut io = MemIo::new(Dims::new(rows, cols)).unwrap();
+            let mut backend = NativeBackend::default();
+            let done = stream_transform_2d(
+                &mut src,
+                &mut io,
+                &mut backend,
+                Direction::Forward,
+                2 * cols * ELEM_BYTES,
+                None,
+            )
+            .unwrap();
+            assert!(done.report.chunks > 1, "budget must actually chunk the rows");
+            let expect = transform_2d_in_memory(
+                Dims::new(rows, cols),
+                &data,
+                Direction::Forward,
+                Algorithm::Auto,
+            )
+            .unwrap();
+            assert_eq!(bitwise_mismatches(io.data(), &expect), 0, "threads={threads}");
+        });
+    }
+}
