@@ -1,17 +1,25 @@
-//! Batched FFT serving under concurrent load — the serving E2E driver.
+//! Batched FFT serving under concurrent load — the serving E2E driver,
+//! now over real TCP.
 //!
 //!   cargo run --release --example fft_server -- [clients] [requests-per-client]
 //!
-//! Spawns client threads issuing mixed-size FFT requests at the service,
-//! which buckets them by size, batches up to `max_batch`, executes each
-//! batch on one PJRT call against the AOT artifacts (or the native library
-//! if artifacts are missing), and reports latency percentiles, throughput
-//! and batching efficiency.
+//! Starts the daemon on an ephemeral loopback port, then spawns client
+//! threads that each open their own `NetClient` connection and issue
+//! mixed-size FFT requests through the wire protocol. The daemon buckets
+//! them by descriptor, batches up to `max_batch`, executes each batch on
+//! one backend call (PJRT artifacts, or the native library if artifacts
+//! are missing), and writes responses back in order. The driver reports
+//! client-observed latency percentiles, throughput, shed counts, and the
+//! daemon's own metrics report fetched over a `STATS` frame.
 
 use std::sync::Arc;
 
 use memfft::config::ServiceConfig;
-use memfft::coordinator::{Direction, FftService};
+use memfft::coordinator::Direction;
+use memfft::coordinator::FftService;
+use memfft::fft::ProblemSpec;
+use memfft::metrics::{LatencyHistogram, Meter};
+use memfft::net::{NetClient, NetError, NetServer, Status};
 use memfft::util::{Timer, Xoshiro256};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -20,7 +28,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let per_client: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
 
     let have_artifacts = std::path::Path::new("artifacts/manifest.txt").exists();
-    let cfg = ServiceConfig {
+    let mut cfg = ServiceConfig {
         method: if have_artifacts { "fourstep".into() } else { "native".into() },
         workers: 2,
         max_batch: 8,
@@ -28,57 +36,73 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         queue_depth: 4096,
         ..Default::default()
     };
+    cfg.net.listen = "127.0.0.1:0".into();
+    cfg.net.max_connections = clients.max(1) + 1;
     // Sizes the paper calls the SAR band: "a few thousands to tens of
     // thousands".
     let sizes = [1024usize, 4096, 16384];
     println!(
-        "fft_server: {clients} clients × {per_client} reqs, method={}, sizes={sizes:?}",
+        "fft_server: {clients} clients × {per_client} reqs over TCP, method={}, sizes={sizes:?}",
         cfg.method
     );
 
-    let svc = Arc::new(FftService::start(cfg));
+    let server = NetServer::start(FftService::start(cfg))?;
+    let addr = server.local_addr();
+    println!("daemon on {addr}");
+
+    let hist = Arc::new(LatencyHistogram::new());
+    let meter = Arc::new(Meter::new());
     let t = Timer::start();
     let handles: Vec<_> = (0..clients)
         .map(|c| {
-            let svc = svc.clone();
-            std::thread::spawn(move || {
+            let (hist, meter) = (hist.clone(), meter.clone());
+            std::thread::spawn(move || -> Result<(usize, usize), NetError> {
+                let mut client = NetClient::connect(addr)?;
                 let mut rng = Xoshiro256::seeded(c as u64 + 100);
                 let mut ok = 0usize;
-                let mut rejected = 0usize;
+                let mut shed = 0usize;
                 for _ in 0..per_client {
                     let n = *rng.choose(&sizes);
-                    match svc.submit(n, Direction::Forward, rng.real_vec(n), rng.real_vec(n)) {
-                        Ok(rx) => {
-                            if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
-                                ok += 1;
-                            }
+                    let spec = ProblemSpec::one_d(n).expect("pow2 sizes are plannable");
+                    let (re, im) = (rng.real_vec(n), rng.real_vec(n));
+                    let rt = Timer::start();
+                    match client.transform(&spec, Direction::Forward, &re, &im) {
+                        Ok(_) => {
+                            hist.record(rt.elapsed());
+                            meter.record(n as u64 * 8);
+                            ok += 1;
                         }
-                        Err(_) => rejected += 1,
+                        Err(NetError::Remote { status: Status::Overloaded, .. }) => shed += 1,
+                        Err(e) => return Err(e),
                     }
                 }
-                (ok, rejected)
+                Ok((ok, shed))
             })
         })
         .collect();
 
     let mut total_ok = 0;
-    let mut total_rej = 0;
+    let mut total_shed = 0;
     for h in handles {
-        let (ok, rej) = h.join().unwrap();
+        let (ok, shed) = h.join().expect("client thread panicked")?;
         total_ok += ok;
-        total_rej += rej;
+        total_shed += shed;
     }
     let elapsed = t.elapsed();
 
     println!(
-        "\n{total_ok} ok / {total_rej} rejected in {:.1} ms  →  {:.0} req/s",
+        "\n{total_ok} ok / {total_shed} shed in {:.1} ms  →  {:.0} req/s, {:.1} MiB/s payload",
         elapsed.as_secs_f64() * 1e3,
-        total_ok as f64 / elapsed.as_secs_f64()
+        total_ok as f64 / elapsed.as_secs_f64().max(1e-9),
+        meter.payload_per_sec() / (1 << 20) as f64
     );
-    println!("\n{}", svc.metrics().report());
-    println!(
-        "batching efficiency: {:.2} requests per executed batch",
-        svc.metrics().mean_batch_fill()
-    );
+    println!("{}", hist.summary("client-observed e2e"));
+
+    // The daemon's own view, over the wire.
+    let mut probe = NetClient::connect(addr)?;
+    println!("\n{}", probe.health()?);
+    println!("\n{}", probe.stats()?);
+    drop(probe);
+    server.shutdown();
     Ok(())
 }

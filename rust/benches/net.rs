@@ -1,0 +1,79 @@
+//! Wire-protocol overhead: loopback TCP round-trip vs the same request
+//! submitted in-process. Informational (no gate) — the daemon's job is
+//! admission and fan-in, not beating a function call; this bench records
+//! what the socket + encode/decode lane costs per request so protocol
+//! regressions are visible.
+//!
+//!   cargo bench --bench net
+
+use std::time::Instant;
+
+use memfft::config::ServiceConfig;
+use memfft::coordinator::{Direction, FftService};
+use memfft::fft::ProblemSpec;
+use memfft::net::{NetClient, NetServer};
+use memfft::util::Xoshiro256;
+
+const SIZES: [usize; 3] = [1024, 16384, 262144];
+const REPS: usize = 30;
+
+fn cfg() -> ServiceConfig {
+    let mut cfg = ServiceConfig {
+        method: "native".into(),
+        workers: 2,
+        max_batch: 8,
+        max_delay_us: 100,
+        queue_depth: 256,
+        ..Default::default()
+    };
+    cfg.net.listen = "127.0.0.1:0".into();
+    cfg
+}
+
+/// Best-of-reps per-request seconds for one already-built closure.
+fn time_reps(mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let mut rng = Xoshiro256::seeded(0xBE7C);
+    println!("{:>9}  {:>12}  {:>12}  {:>8}  {:>10}", "n", "in-proc", "tcp", "ratio", "tcp MiB/s");
+
+    for n in SIZES {
+        let spec = ProblemSpec::one_d(n).expect("pow2");
+        let (re, im) = (rng.real_vec(n), rng.real_vec(n));
+
+        // In-process lane: submit + block on the reply channel.
+        let svc = FftService::start(cfg());
+        let local = time_reps(|| {
+            let rx = svc.submit_spec(spec, Direction::Forward, re.clone(), im.clone()).unwrap();
+            rx.recv().unwrap().unwrap();
+        });
+        svc.shutdown();
+
+        // Wire lane: same request through encode → TCP → decode.
+        let server = NetServer::start(FftService::start(cfg())).expect("bind loopback");
+        let mut client = NetClient::connect(server.local_addr()).expect("connect");
+        let wire = time_reps(|| {
+            client.transform(&spec, Direction::Forward, &re, &im).unwrap();
+        });
+        drop(client);
+        server.shutdown();
+
+        // Payload crosses the wire twice (request + response), 8 bytes/elem.
+        let mib_s = (2 * n * 8) as f64 / wire / (1 << 20) as f64;
+        println!(
+            "{n:>9}  {:>10.1}us  {:>10.1}us  {:>7.2}x  {mib_s:>10.0}",
+            local * 1e6,
+            wire * 1e6,
+            wire / local,
+        );
+    }
+    println!("\nratio = tcp / in-process (same service config, best of {REPS} reps)");
+}

@@ -234,6 +234,79 @@ fn parse_value(s: &str) -> Option<Value> {
     None
 }
 
+/// Network front-end configuration (`[net]` section; DESIGN.md §10).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    /// Listen address for `memfft serve` (`net.listen`). Port 0 binds an
+    /// ephemeral port — used by tests and the loopback example.
+    pub listen: String,
+    /// Concurrent-connection cap (`net.max_connections`). Connections over
+    /// the cap receive one `Overloaded` response and are closed.
+    pub max_connections: usize,
+    /// Server-wide cap on requests admitted but not yet answered
+    /// (`net.max_inflight`). Requests over the cap are shed with
+    /// `Overloaded` instead of queuing without bound. 0 sheds every
+    /// transform request — drain/maintenance mode; health and stats frames
+    /// are still served.
+    pub max_inflight: usize,
+    /// Largest frame (header + body) accepted or produced, in bytes
+    /// (`net.max_frame_bytes`).
+    pub max_frame_bytes: usize,
+    /// Per-connection socket read/write timeout in milliseconds
+    /// (`net.read_timeout_ms`) so dead clients cannot pin handler threads.
+    /// 0 disables the timeout.
+    pub read_timeout_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:7070".into(),
+            max_connections: 64,
+            max_inflight: 256,
+            max_frame_bytes: 64 << 20,
+            read_timeout_ms: 30_000,
+        }
+    }
+}
+
+impl NetConfig {
+    pub fn from_document(doc: &Document) -> Result<Self, ConfigError> {
+        let d = Self::default();
+        Ok(Self {
+            listen: doc.str_or("net.listen", &d.listen)?,
+            max_connections: doc.usize_or("net.max_connections", d.max_connections)?,
+            max_inflight: doc.usize_or("net.max_inflight", d.max_inflight)?,
+            max_frame_bytes: doc.usize_or("net.max_frame_bytes", d.max_frame_bytes)?,
+            read_timeout_ms: doc.usize_or("net.read_timeout_ms", d.read_timeout_ms as usize)?
+                as u64,
+        })
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.listen.is_empty() {
+            return Err(ConfigError::Missing("net.listen".into()));
+        }
+        if self.max_connections == 0 {
+            return Err(ConfigError::Type("net.max_connections".into(), "nonzero integer"));
+        }
+        if self.max_frame_bytes < 4096 {
+            // A frame must at least fit the header plus a small request.
+            return Err(ConfigError::Type("net.max_frame_bytes".into(), "integer >= 4096"));
+        }
+        Ok(())
+    }
+
+    /// Socket timeout as the `std::net` setters want it.
+    pub fn read_timeout(&self) -> Option<std::time::Duration> {
+        if self.read_timeout_ms == 0 {
+            None
+        } else {
+            Some(std::time::Duration::from_millis(self.read_timeout_ms))
+        }
+    }
+}
+
 /// Typed service configuration consumed by the launcher and coordinator.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
@@ -282,6 +355,8 @@ pub struct ServiceConfig {
     /// Pre-compile artifacts for `sizes` at worker startup so the request
     /// path never pays XLA compile time.
     pub warmup: bool,
+    /// TCP front-end knobs (`[net]` section) used by `memfft serve`.
+    pub net: NetConfig,
 }
 
 impl Default for ServiceConfig {
@@ -299,6 +374,7 @@ impl Default for ServiceConfig {
             sizes: vec![16, 64, 256, 1024, 4096, 16384, 65536],
             seed: 42,
             warmup: true,
+            net: NetConfig::default(),
         }
     }
 }
@@ -319,6 +395,7 @@ impl ServiceConfig {
             sizes: doc.usize_list_or("service.sizes", &d.sizes)?,
             seed: doc.usize_or("service.seed", d.seed as usize)? as u64,
             warmup: doc.bool_or("service.warmup", d.warmup)?,
+            net: NetConfig::from_document(doc)?,
         })
     }
 
@@ -352,7 +429,7 @@ impl ServiceConfig {
                 return Err(ConfigError::Type("service.sizes".into(), "powers of two"));
             }
         }
-        Ok(())
+        self.net.validate()
     }
 }
 
@@ -468,6 +545,39 @@ bandwidth_gbps = 144.0
         }
         let doc = Document::parse("[cache]\ntile = 16\n").unwrap();
         ServiceConfig::from_document(&doc).unwrap().validate().unwrap();
+    }
+
+    #[test]
+    fn net_section_parses_and_validates() {
+        let doc = Document::parse(
+            "[net]\nlisten = \"0.0.0.0:9000\"\nmax_connections = 8\nmax_inflight = 0\n\
+             max_frame_bytes = 1048576\nread_timeout_ms = 250\n",
+        )
+        .unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.net.listen, "0.0.0.0:9000");
+        assert_eq!(cfg.net.max_connections, 8);
+        assert_eq!(cfg.net.max_inflight, 0, "0 = shed-everything maintenance mode is legal");
+        assert_eq!(cfg.net.max_frame_bytes, 1 << 20);
+        assert_eq!(cfg.net.read_timeout(), Some(std::time::Duration::from_millis(250)));
+        cfg.validate().unwrap();
+        // Defaults apply when the section is absent.
+        let cfg = ServiceConfig::from_document(&Document::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.net, NetConfig::default());
+        assert_eq!(cfg.net.listen, "127.0.0.1:7070");
+        cfg.validate().unwrap();
+        // Bad knobs are rejected, not clamped.
+        for bad in [
+            "[net]\nmax_connections = 0\n",
+            "[net]\nmax_frame_bytes = 64\n",
+            "[net]\nlisten = \"\"\n",
+        ] {
+            let cfg = ServiceConfig::from_document(&Document::parse(bad).unwrap()).unwrap();
+            assert!(cfg.validate().is_err(), "{bad}");
+        }
+        // read_timeout_ms = 0 disables the socket timeout.
+        let doc = Document::parse("[net]\nread_timeout_ms = 0\n").unwrap();
+        assert_eq!(ServiceConfig::from_document(&doc).unwrap().net.read_timeout(), None);
     }
 
     #[test]

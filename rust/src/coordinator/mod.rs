@@ -11,6 +11,13 @@
 //! jobs take the out-of-core lane instead of the batcher:
 //! [`StreamProcessor`] drives `crate::stream`'s prefetch/compute/
 //! writeback pipeline with the same config knobs and metric bundle.
+//!
+//! Remote callers reach [`FftService`] through `crate::net` (DESIGN.md
+//! §10): the daemon decodes wire requests into the same
+//! [`FftRequest`]/[`Direction`] submissions used in-process, maps
+//! [`ServiceError`] onto typed wire statuses, and drains into
+//! `FftService::shutdown` — the service itself never knows whether a
+//! request arrived over a socket or a channel.
 
 pub mod backend;
 pub mod batcher;

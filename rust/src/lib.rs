@@ -38,6 +38,13 @@
 //! memory bounded by the budget instead of the dataset size (DESIGN.md
 //! §8; `memfft stream` on the CLI, `StreamProcessor` in the coordinator).
 //!
+//! Remote clients reach the same service over TCP: [`net`] wraps an
+//! `FftService` in a length-prefixed wire protocol (`memfft serve` /
+//! `memfft client` on the CLI, [`net::NetClient`] in code) with bounded
+//! admission — connection cap + in-flight cap — that sheds load with a
+//! typed `Overloaded` response instead of queuing without bound
+//! (DESIGN.md §10).
+//!
 //! See `DESIGN.md` for the system inventory (and §Execution-API for the
 //! trait design + migration notes) and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
@@ -53,6 +60,7 @@ pub mod runtime;
 pub mod sar;
 pub mod stream;
 pub mod metrics;
+pub mod net;
 pub mod testing;
 pub mod util;
 

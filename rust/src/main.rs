@@ -1,7 +1,12 @@
 //! memfft CLI — the launcher.
 //!
 //! Subcommands map to the deliverables:
-//!   serve     run the FFT service under a synthetic workload, print metrics
+//!   serve     run the FFT daemon: TCP wire protocol on --listen, graceful
+//!             drain on stdin close / 'shutdown' line (--synthetic replays
+//!             the old in-process workload instead)
+//!   client    send FFT requests to a running daemon (--check compares the
+//!             response bit-for-bit against a local plan; --stats/--health
+//!             query the daemon; --garbage probes malformed-frame handling)
 //!   table1    regenerate the paper's Table 1 (measured + simulated)
 //!   figs      regenerate Figs 7–10 speedup series
 //!   ablation  A1–A3 optimization ablations + tile sweep
@@ -20,6 +25,7 @@ use memfft::coordinator::{Direction, FftService};
 use memfft::fft::{Domain, ProblemSpec, Shape};
 use memfft::gpusim::{self, GpuDescriptor, TiledOptions};
 use memfft::harness::{ablation, figs, table1};
+use memfft::net::{NetClient, NetError, NetServer, Status};
 use memfft::runtime::Engine;
 use memfft::sar;
 use memfft::util::{Timer, Xoshiro256};
@@ -29,8 +35,8 @@ type CmdResult = Result<(), Box<dyn std::error::Error>>;
 fn cli() -> Cli {
     Cli::new("memfft", "memory-optimized hierarchical FFT service (paper reproduction)")
         .command(
-            Command::new("serve", "run the FFT service under a synthetic workload")
-                .arg_default("config", "", "TOML config path (optional)")
+            Command::new("serve", "run the FFT daemon (TCP wire protocol; see DESIGN.md §10)")
+                .arg_default("config", "", "TOML config path with [service]/[net] sections (optional)")
                 .arg_default(
                     "method",
                     "fourstep",
@@ -39,8 +45,28 @@ fn cli() -> Cli {
                 .arg_default("artifacts", "artifacts", "artifact directory")
                 .arg_default("workers", "2", "worker threads")
                 .arg_default("threads", "0", "FFT data-parallel threads (0 = all cores)")
-                .arg_default("requests", "200", "synthetic requests to issue")
-                .arg_default("sizes", "1024,4096,16384", "request sizes (comma)"),
+                .arg_default("listen", "", "listen address, e.g. 127.0.0.1:7070 (overrides net.listen)")
+                .arg_default("max-conns", "0", "connection cap (0 = net.max_connections)")
+                .arg_default("run-secs", "0", "serve for N seconds then drain (0 = until stdin closes or a 'shutdown' line)")
+                .flag("synthetic", "replay the old in-process synthetic workload instead of serving TCP")
+                .arg_default("requests", "200", "synthetic requests to issue (--synthetic)")
+                .arg_default("sizes", "1024,4096,16384", "synthetic request sizes (--synthetic)"),
+        )
+        .command(
+            Command::new("client", "send FFT requests to a running daemon over TCP")
+                .arg_default("addr", "127.0.0.1:7070", "daemon address")
+                .arg_default("op", "fft", "fft | ifft")
+                .arg_default("shape", "1024", "problem shape: N or RxC")
+                .arg_default("domain", "c2c", "c2c | r2c (r2c sends a real signal, receives the full Hermitian spectrum; fft only)")
+                .arg_default("algo", "auto", "algorithm hint (auto|radix2|...|memtier)")
+                .arg_default("input", "", ".mfft dataset to send (default: generated signal); 1-D shapes go row-by-row, RxC c2c as one 2-D request")
+                .arg_default("count", "1", "requests to send in generated-signal mode")
+                .arg_default("seed", "42", "signal generator seed")
+                .arg_default("timeout-ms", "30000", "socket timeout (0 = none)")
+                .flag("check", "recompute locally through fft::plan() and require bit-for-bit equality (same-host check; assumes a native-library daemon method)")
+                .flag("stats", "fetch and print the daemon's metrics report, then exit")
+                .flag("health", "fetch and print the daemon's health line, then exit")
+                .flag("garbage", "send a deliberately malformed frame; expect a typed bad-frame rejection, then exit"),
         )
         .command(
             Command::new("table1", "regenerate paper Table 1")
@@ -99,6 +125,7 @@ fn main() {
     };
     let result = match parsed.subcommand.as_deref() {
         Some("serve") => cmd_serve(&parsed),
+        Some("client") => cmd_client(&parsed),
         Some("table1") => cmd_table1(&parsed),
         Some("figs") => cmd_figs(&parsed),
         Some("ablation") => cmd_ablation(),
@@ -128,7 +155,50 @@ fn cmd_serve(args: &memfft::cli::Args) -> CmdResult {
     cfg.artifacts_dir = artifacts;
     cfg.workers = args.get_usize("workers", cfg.workers)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
+    if let Some(listen) = args.get("listen").filter(|s| !s.is_empty()) {
+        cfg.net.listen = listen.to_string();
+    }
+    let max_conns = args.get_usize("max-conns", 0)?;
+    if max_conns > 0 {
+        cfg.net.max_connections = max_conns;
+    }
     cfg.validate()?;
+    if args.flag("synthetic") {
+        return serve_synthetic(args, cfg);
+    }
+
+    let run_secs = args.get_u64("run-secs", 0)?;
+    println!(
+        "starting daemon: listen={} method={} workers={} max-conns={} max-inflight={}",
+        cfg.net.listen, cfg.method, cfg.workers, cfg.net.max_connections, cfg.net.max_inflight
+    );
+    let server = NetServer::start(FftService::start(cfg))?;
+    let metrics = server.metrics();
+    println!(
+        "memfft daemon ready on {} (close stdin or send a 'shutdown' line to drain)",
+        server.local_addr()
+    );
+    if run_secs > 0 {
+        std::thread::sleep(std::time::Duration::from_secs(run_secs));
+    } else {
+        use std::io::BufRead;
+        for line in std::io::stdin().lock().lines() {
+            match line {
+                Ok(l) if l.trim() == "shutdown" => break,
+                Ok(_) => continue,
+                Err(_) => break,
+            }
+        }
+    }
+    println!("draining...");
+    server.shutdown();
+    println!("{}", metrics.report());
+    Ok(())
+}
+
+/// The pre-daemon `serve` behavior: an in-process service fed a synthetic
+/// workload, kept for harness runs that need no socket.
+fn serve_synthetic(args: &memfft::cli::Args, cfg: ServiceConfig) -> CmdResult {
     let requests = args.get_usize("requests", 200)?;
     let sizes = args.get_usize_list("sizes", &[1024, 4096, 16384])?;
 
@@ -164,6 +234,182 @@ fn cmd_serve(args: &memfft::cli::Args) -> CmdResult {
     println!("{}", svc.metrics().report());
     svc.shutdown();
     Ok(())
+}
+
+fn cmd_client(args: &memfft::cli::Args) -> CmdResult {
+    use memfft::metrics::LatencyHistogram;
+
+    let addr = args.get_or("addr", "127.0.0.1:7070").to_string();
+    let timeout_ms = args.get_u64("timeout-ms", 30_000)?;
+    let mut client = NetClient::connect(&addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    client.set_timeout(if timeout_ms == 0 {
+        None
+    } else {
+        Some(std::time::Duration::from_millis(timeout_ms))
+    })?;
+
+    if args.flag("health") {
+        println!("{}", client.health()?);
+        return Ok(());
+    }
+    if args.flag("stats") {
+        println!("{}", client.stats()?);
+        return Ok(());
+    }
+    if args.flag("garbage") {
+        // Deliberately corrupt bytes: wrong magic, junk everywhere else.
+        // Exactly one header's worth, so the daemon closes the connection
+        // with no unread bytes (a clean FIN, not an RST racing the reply).
+        // The daemon must answer with a typed bad-frame status and stay up
+        // (the CI job sends a real request right after this probe).
+        match client.send_raw(&[0xde; 10]) {
+            Ok(memfft::net::WireResponse::Err { status: Status::BadFrame, message }) => {
+                println!("daemon rejected garbage as expected: {message}");
+                return Ok(());
+            }
+            other => return Err(format!("expected a BadFrame rejection, got {other:?}").into()),
+        }
+    }
+
+    let op = args.get_or("op", "fft");
+    let direction = match op {
+        "fft" => Direction::Forward,
+        "ifft" => Direction::Inverse,
+        other => return Err(format!("client: unknown op '{other}' (fft | ifft)").into()),
+    };
+    let d = args.get_or("domain", "c2c");
+    let domain =
+        Domain::parse(d).ok_or_else(|| format!("client: --domain must be c2c or r2c, got '{d}'"))?;
+    if domain == Domain::RealToComplex && direction == Direction::Inverse {
+        return Err("client: --domain r2c supports --op fft only".into());
+    }
+    let a = args.get_or("algo", "auto");
+    let algo = memfft::fft::Algorithm::parse(a)
+        .ok_or_else(|| format!("client: unknown --algo '{a}'"))?;
+    let check = args.flag("check");
+
+    // Build the request list: either the rows of a .mfft dataset (a 2-D
+    // c2c --shape sends the whole dataset as ONE request) or `--count`
+    // seeded random signals of the declared shape.
+    let mut requests: Vec<(ProblemSpec, Vec<f32>, Vec<f32>)> = Vec::new();
+    match args.get("input").filter(|p| !p.is_empty()) {
+        Some(input) => {
+            let (dims, data) = memfft::stream::read_dataset(input)?;
+            let (shape, domain) = parse_descriptor(args, dims, "client")?;
+            match (shape, domain) {
+                (Shape::TwoD { rows, cols }, Domain::ComplexToComplex) => {
+                    let spec = ProblemSpec::two_d(rows, cols)?.with_algorithm(algo);
+                    let re = data.iter().map(|c| c.re).collect();
+                    let im = data.iter().map(|c| c.im).collect();
+                    requests.push((spec, re, im));
+                }
+                _ => {
+                    // Per-row requests; r2c rows send re = samples, im = 0.
+                    let spec = ProblemSpec::new(Shape::OneD { n: dims.cols }, domain)?
+                        .with_algorithm(algo);
+                    for row in data.chunks_exact(dims.cols) {
+                        let re = row.iter().map(|c| c.re).collect();
+                        let im = if domain == Domain::RealToComplex {
+                            vec![0f32; dims.cols]
+                        } else {
+                            row.iter().map(|c| c.im).collect()
+                        };
+                        requests.push((spec, re, im));
+                    }
+                }
+            }
+        }
+        None => {
+            let s = args.get_or("shape", "1024");
+            let shape =
+                Shape::parse(s).ok_or_else(|| format!("client: bad --shape '{s}' (N or RxC)"))?;
+            let spec = ProblemSpec::new(shape, domain)?.with_algorithm(algo);
+            let count = args.get_usize("count", 1)?;
+            let mut rng = Xoshiro256::seeded(args.get_u64("seed", 42)?);
+            let n = spec.total_elems();
+            for _ in 0..count {
+                let re = rng.real_vec(n);
+                let im = if domain == Domain::RealToComplex {
+                    vec![0f32; n]
+                } else {
+                    rng.real_vec(n)
+                };
+                requests.push((spec, re, im));
+            }
+        }
+    }
+
+    let hist = LatencyHistogram::new();
+    let (mut ok, mut shed) = (0usize, 0usize);
+    let total = requests.len();
+    let t = Timer::start();
+    for (spec, re, im) in requests {
+        let rt = Timer::start();
+        match client.transform(&spec, direction, &re, &im) {
+            Ok((out_re, out_im)) => {
+                hist.record(rt.elapsed());
+                ok += 1;
+                if check {
+                    let (want_re, want_im) = local_reference(&spec, direction, &re, &im)?;
+                    let mismatches = bit_mismatches(&want_re, &out_re)
+                        + bit_mismatches(&want_im, &out_im);
+                    if mismatches > 0 {
+                        return Err(format!(
+                            "check FAILED: {mismatches} of {} samples differ from the local plan",
+                            2 * out_re.len()
+                        )
+                        .into());
+                    }
+                }
+            }
+            Err(NetError::Remote { status: Status::Overloaded, .. }) => shed += 1,
+            Err(e) => return Err(format!("request failed: {e}").into()),
+        }
+    }
+    let elapsed = t.elapsed();
+    println!(
+        "client: {ok}/{total} ok, {shed} overloaded in {:.1} ms ({:.0} req/s)",
+        elapsed.as_secs_f64() * 1e3,
+        ok as f64 / elapsed.as_secs_f64().max(1e-9)
+    );
+    if hist.count() > 0 {
+        println!("{}", hist.summary("latency"));
+    }
+    if check && ok > 0 {
+        println!("check ok: daemon responses are bit-for-bit equal to the local plan");
+    }
+    if check && ok == 0 {
+        return Err("check: no request was served, nothing was compared".into());
+    }
+    Ok(())
+}
+
+/// Execute the same transform locally through the descriptor planner,
+/// mirroring the native backend's exact call path
+/// (`plan` → `forward_batch_into`) so `--check` can demand bit equality.
+fn local_reference(
+    spec: &ProblemSpec,
+    direction: Direction,
+    re: &[f32],
+    im: &[f32],
+) -> Result<(Vec<f32>, Vec<f32>), Box<dyn std::error::Error>> {
+    use memfft::fft::{plan, Transform};
+    use memfft::C32;
+
+    let p = plan(spec)?;
+    let input: Vec<C32> = re.iter().zip(im).map(|(&r, &i)| C32::new(r, i)).collect();
+    let mut output = vec![C32::ZERO; input.len()];
+    let mut scratch = vec![C32::ZERO; p.scratch_len()];
+    match direction {
+        Direction::Forward => p.forward_batch_into(spec.batch(), &input, &mut output, &mut scratch)?,
+        Direction::Inverse => p.inverse_batch_into(spec.batch(), &input, &mut output, &mut scratch)?,
+    }
+    Ok((output.iter().map(|c| c.re).collect(), output.iter().map(|c| c.im).collect()))
+}
+
+fn bit_mismatches(want: &[f32], got: &[f32]) -> usize {
+    want.len().abs_diff(got.len())
+        + want.iter().zip(got).filter(|(w, g)| w.to_bits() != g.to_bits()).count()
 }
 
 fn engine_if_available(args: &memfft::cli::Args) -> Option<Engine> {

@@ -2,7 +2,7 @@
 //! queries, and throughput meters. Used by the coordinator's hot path, so
 //! recording is lock-free (atomics) where it matters.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -28,6 +28,38 @@ impl Counter {
     }
 
     pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level (may go up and down), e.g. active connections.
+/// Signed so a late decrement under teardown races reads as a visible
+/// negative instead of wrapping to 2^64.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicI64,
+}
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Self { value: AtomicI64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.value.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        self.value.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
         self.value.load(Ordering::Relaxed)
     }
 }
@@ -198,22 +230,30 @@ impl Meter {
         self.payload.add(payload);
     }
 
-    pub fn events_per_sec(&self) -> f64 {
-        let elapsed = self.start.lock().unwrap().elapsed().as_secs_f64();
-        if elapsed == 0.0 {
-            0.0
-        } else {
-            self.events.get() as f64 / elapsed
-        }
+    /// Seconds since start/reset, clamped away from zero so rates divide
+    /// cleanly even when queried within the same clock tick as `new()`.
+    fn window_secs(&self) -> f64 {
+        self.start.lock().unwrap().elapsed().as_secs_f64().max(1e-9)
     }
 
-    pub fn payload_per_sec(&self) -> f64 {
-        let elapsed = self.start.lock().unwrap().elapsed().as_secs_f64();
-        if elapsed == 0.0 {
-            0.0
-        } else {
-            self.payload.get() as f64 / elapsed
+    /// Events per second over the window. An idle meter (no events) reports
+    /// exactly 0.0 regardless of elapsed time — never NaN or infinity.
+    pub fn events_per_sec(&self) -> f64 {
+        let events = self.events.get();
+        if events == 0 {
+            return 0.0;
         }
+        events as f64 / self.window_secs()
+    }
+
+    /// Payload bytes per second over the window; 0.0 when idle, finite
+    /// always (same contract as [`Meter::events_per_sec`]).
+    pub fn payload_per_sec(&self) -> f64 {
+        let payload = self.payload.get();
+        if payload == 0 {
+            return 0.0;
+        }
+        payload as f64 / self.window_secs()
     }
 
     pub fn reset(&self) {
@@ -249,6 +289,14 @@ pub struct ServiceMetrics {
     pub stream_read: LatencyHistogram,
     pub stream_compute: LatencyHistogram,
     pub stream_write: LatencyHistogram,
+    /// TCP front end (`crate::net`): connection accounting and the two
+    /// failure lanes the daemon distinguishes — load shed with a typed
+    /// `Overloaded` response vs. structurally malformed frames.
+    pub connections_accepted: Counter,
+    pub connections_refused: Counter,
+    pub connections_active: Gauge,
+    pub requests_shed: Counter,
+    pub frames_malformed: Counter,
 }
 
 impl ServiceMetrics {
@@ -321,7 +369,26 @@ impl ServiceMetrics {
             s.push_str(&self.stream_write.summary("stream-write"));
             s.push('\n');
         }
+        if self.net_traffic_seen() {
+            s.push_str(&format!(
+                "net: conns active={} accepted={} refused={}  shed={} malformed={}\n",
+                self.connections_active.get(),
+                self.connections_accepted.get(),
+                self.connections_refused.get(),
+                self.requests_shed.get(),
+                self.frames_malformed.get()
+            ));
+        }
         s
+    }
+
+    /// Whether the TCP front end has seen any traffic (gates the `net:`
+    /// report line so in-process services keep their old report shape).
+    fn net_traffic_seen(&self) -> bool {
+        self.connections_accepted.get() > 0
+            || self.connections_refused.get() > 0
+            || self.requests_shed.get() > 0
+            || self.frames_malformed.get() > 0
     }
 }
 
@@ -398,6 +465,46 @@ mod tests {
         std::thread::sleep(Duration::from_millis(5));
         assert!(m.events_per_sec() > 0.0);
         assert!(m.payload_per_sec() > m.events_per_sec());
+    }
+
+    #[test]
+    fn meter_idle_rates_are_finite_zero() {
+        // An idle meter must read exactly 0.0 — and never NaN/inf — no
+        // matter how soon after construction or reset it is queried.
+        let m = Meter::new();
+        assert_eq!(m.events_per_sec(), 0.0);
+        assert_eq!(m.payload_per_sec(), 0.0);
+        m.reset();
+        assert_eq!(m.events_per_sec(), 0.0);
+        // Recording then querying within the same clock tick stays finite.
+        m.record(64);
+        let rate = m.events_per_sec();
+        assert!(rate.is_finite() && rate > 0.0, "rate {rate}");
+        let bps = m.payload_per_sec();
+        assert!(bps.is_finite() && bps > 0.0, "bps {bps}");
+    }
+
+    #[test]
+    fn gauge_tracks_levels() {
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.set(-3);
+        assert_eq!(g.get(), -3, "gauges are signed; underflow is visible, not wrapped");
+    }
+
+    #[test]
+    fn report_net_section_gated_on_traffic() {
+        let m = ServiceMetrics::new();
+        assert!(!m.report().contains("net:"), "no net line before any network traffic");
+        m.connections_accepted.inc();
+        m.connections_active.inc();
+        m.requests_shed.add(2);
+        m.frames_malformed.inc();
+        let report = m.report();
+        assert!(report.contains("net: conns active=1 accepted=1 refused=0  shed=2 malformed=1"));
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! Blocking client for the `memfft` wire protocol: one TCP connection,
+//! synchronous request/response. Used by `memfft client`, the loopback
+//! example, and the protocol test battery.
+
+use std::fmt;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::proto::{self, FrameError, FrameKind, ProtoError, Status, WireResponse};
+use crate::coordinator::Direction;
+use crate::fft::ProblemSpec;
+
+/// Client-side failure: transport, protocol, or a typed server rejection.
+#[derive(Debug)]
+pub enum NetError {
+    Io(std::io::Error),
+    Proto(ProtoError),
+    /// The daemon answered with a non-`Ok` status.
+    Remote { status: Status, message: String },
+    /// The daemon hung up where a reply was expected.
+    Closed,
+    /// The daemon answered with a frame kind that makes no sense here.
+    UnexpectedFrame(FrameKind),
+}
+
+impl fmt::Display for NetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetError::Io(e) => write!(f, "io: {e}"),
+            NetError::Proto(e) => write!(f, "protocol: {e}"),
+            NetError::Remote { status, message } => {
+                write!(f, "server rejected request ({status}): {message}")
+            }
+            NetError::Closed => f.write_str("server closed the connection mid-exchange"),
+            NetError::UnexpectedFrame(kind) => write!(f, "unexpected reply frame {kind:?}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<std::io::Error> for NetError {
+    fn from(e: std::io::Error) -> Self {
+        NetError::Io(e)
+    }
+}
+
+impl From<FrameError> for NetError {
+    fn from(e: FrameError) -> Self {
+        match e {
+            FrameError::Io(e) => NetError::Io(e),
+            FrameError::Proto(e) => NetError::Proto(e),
+        }
+    }
+}
+
+impl From<ProtoError> for NetError {
+    fn from(e: ProtoError) -> Self {
+        NetError::Proto(e)
+    }
+}
+
+/// A blocking connection to a `memfft` daemon.
+pub struct NetClient {
+    stream: TcpStream,
+    max_frame_bytes: usize,
+}
+
+impl NetClient {
+    /// Connect with the default frame cap (matches `NetConfig::default`).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient, NetError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(NetClient { stream, max_frame_bytes: crate::config::NetConfig::default().max_frame_bytes })
+    }
+
+    /// Connect with a bounded connect timeout.
+    pub fn connect_timeout(addr: &SocketAddr, timeout: Duration) -> Result<NetClient, NetError> {
+        let stream = TcpStream::connect_timeout(addr, timeout)?;
+        stream.set_nodelay(true)?;
+        Ok(NetClient { stream, max_frame_bytes: crate::config::NetConfig::default().max_frame_bytes })
+    }
+
+    /// Socket read/write timeout for every subsequent exchange.
+    pub fn set_timeout(&self, timeout: Option<Duration>) -> Result<(), NetError> {
+        self.stream.set_read_timeout(timeout)?;
+        self.stream.set_write_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Largest reply frame this client will accept.
+    pub fn set_max_frame_bytes(&mut self, bytes: usize) {
+        self.max_frame_bytes = bytes;
+    }
+
+    /// Execute one transform remotely; planar planes in, planar planes out.
+    pub fn transform(
+        &mut self,
+        problem: &ProblemSpec,
+        direction: Direction,
+        re: &[f32],
+        im: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>), NetError> {
+        let frame = proto::encode_request(problem, direction, re, im)?;
+        proto::write_frame(&mut self.stream, &frame)?;
+        match self.read_reply(FrameKind::Response)? {
+            WireResponse::Ok { re, im } => Ok((re, im)),
+            WireResponse::Err { status, message } => Err(NetError::Remote { status, message }),
+        }
+    }
+
+    /// Fetch the daemon's metrics report (`ServiceMetrics::report` + uptime).
+    pub fn stats(&mut self) -> Result<String, NetError> {
+        proto::write_frame(&mut self.stream, &proto::encode_empty(FrameKind::Stats))?;
+        let body = self.read_frame_of_kind(FrameKind::StatsReply)?;
+        Ok(proto::decode_text_body(&body)?)
+    }
+
+    /// Liveness probe; returns the daemon's one-line health summary.
+    pub fn health(&mut self) -> Result<String, NetError> {
+        proto::write_frame(&mut self.stream, &proto::encode_empty(FrameKind::Health))?;
+        let body = self.read_frame_of_kind(FrameKind::HealthReply)?;
+        Ok(proto::decode_text_body(&body)?)
+    }
+
+    /// Write raw bytes and read back one response frame. Exists for probing
+    /// the daemon's malformed-frame handling (`memfft client --garbage` and
+    /// the test battery) — not part of the normal request path.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<WireResponse, NetError> {
+        proto::write_frame(&mut self.stream, bytes)?;
+        self.read_reply(FrameKind::Response)
+    }
+
+    fn read_reply(&mut self, kind: FrameKind) -> Result<WireResponse, NetError> {
+        let body = self.read_frame_of_kind(kind)?;
+        Ok(proto::decode_response_body(&body)?)
+    }
+
+    fn read_frame_of_kind(&mut self, want: FrameKind) -> Result<Vec<u8>, NetError> {
+        match proto::read_frame(&mut self.stream, self.max_frame_bytes)? {
+            Some((kind, body)) if kind == want => Ok(body),
+            Some((kind, _)) => Err(NetError::UnexpectedFrame(kind)),
+            None => Err(NetError::Closed),
+        }
+    }
+}
+
+/// One-shot convenience: connect, transform, disconnect.
+pub fn roundtrip(
+    addr: impl ToSocketAddrs,
+    problem: &ProblemSpec,
+    direction: Direction,
+    re: &[f32],
+    im: &[f32],
+) -> Result<(Vec<f32>, Vec<f32>), NetError> {
+    NetClient::connect(addr)?.transform(problem, direction, re, im)
+}

@@ -1,0 +1,24 @@
+//! Network serving subsystem (DESIGN.md §10): the `memfft` daemon's TCP
+//! front end in front of [`crate::coordinator::FftService`].
+//!
+//! - [`proto`] — the versioned length-prefixed wire protocol: a request
+//!   carries a serialized [`crate::fft::ProblemSpec`] descriptor, a
+//!   direction, and interleaved complex-f32 payload; a response carries a
+//!   typed [`Status`] plus payload or diagnostic. Pure encode/decode.
+//! - [`server`] — [`NetServer`]: accept loop, per-connection handler
+//!   threads behind a connection cap, a bounded in-flight request cap that
+//!   sheds with `Overloaded` instead of blocking, plaintext stats/health
+//!   frames, and graceful drain into `FftService::shutdown`.
+//! - [`client`] — [`NetClient`]: blocking connect/request/roundtrip used by
+//!   `memfft client`, the `fft_server` example, and the test battery.
+//!
+//! Everything is std-only (`std::net` + threads), like the rest of the
+//! crate.
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::{roundtrip, NetClient, NetError};
+pub use proto::{FrameError, FrameKind, ProtoError, Status, WireRequest, WireResponse};
+pub use server::NetServer;

@@ -1,0 +1,760 @@
+//! Wire protocol for the `memfft` network daemon (DESIGN.md §10).
+//!
+//! Versioned, length-prefixed binary frames over TCP. Every frame is
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic            b"MFNT"
+//!      4     1  protocol version (VERSION = 1)
+//!      5     1  frame kind       (FrameKind)
+//!      6     4  body length      u32 LE
+//!     10     N  body             kind-specific
+//! ```
+//!
+//! A `Request` body serializes a [`ProblemSpec`] descriptor followed by the
+//! direction and the interleaved complex-f32 payload:
+//!
+//! ```text
+//! offset  size  field
+//!      0     1  shape tag        1 = 1-D, 2 = 2-D
+//!      1     8  dim0             u64 LE (n, or rows)
+//!      9     8  dim1             u64 LE (0 for 1-D, cols for 2-D)
+//!     17     1  domain           1 = c2c, 2 = r2c
+//!     18     4  batch            u32 LE
+//!     22     1  placement        1 = out-of-place, 2 = in-place
+//!     23     1  algorithm hint   0 = auto .. 7 = memtier
+//!     24     1  direction        1 = forward, 2 = inverse
+//!     25    8N  payload          interleaved (re, im) f32 LE pairs
+//! ```
+//!
+//! A `Response` body is one [`Status`] byte followed by the interleaved
+//! payload on `Ok`, or a UTF-8 diagnostic message otherwise. `Stats` /
+//! `Health` requests have empty bodies; their replies carry UTF-8 text.
+//!
+//! Encode/decode are pure functions over byte slices so every malformed-frame
+//! case is unit-testable without a socket; [`read_frame`] / [`write_frame`]
+//! are the only IO-touching helpers. Decoding never panics: structural
+//! damage (bad magic/version/field, truncation, length lies) comes back as a
+//! typed [`ProtoError`], and a structurally sound frame naming an
+//! unplannable transform comes back as [`ProtoError::Descriptor`] so the
+//! server can reject it with [`Status::Unsupported`] while keeping the
+//! connection synchronized.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+use crate::coordinator::{Direction, ServiceError};
+use crate::fft::{Algorithm, Domain, FftError, Placement, ProblemSpec, Shape};
+
+/// Frame magic — distinct from the `MFFT` dataset magic so a daemon pointed
+/// at a dataset file (or vice versa) fails immediately with `BadMagic`.
+pub const MAGIC: [u8; 4] = *b"MFNT";
+/// Wire protocol version carried in every frame header.
+pub const VERSION: u8 = 1;
+/// Fixed frame header length in bytes (magic + version + kind + body len).
+pub const HEADER_LEN: usize = 10;
+/// Byte length of the request-body prelude before the payload.
+const REQUEST_PRELUDE: usize = 25;
+
+/// What a frame carries; byte 5 of the header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Transform request: descriptor + direction + payload.
+    Request,
+    /// Transform response: status + payload or diagnostic.
+    Response,
+    /// Metrics-report request (empty body).
+    Stats,
+    /// Metrics-report reply (UTF-8 text body).
+    StatsReply,
+    /// Liveness probe (empty body).
+    Health,
+    /// Liveness reply (UTF-8 text body).
+    HealthReply,
+}
+
+impl FrameKind {
+    fn to_u8(self) -> u8 {
+        match self {
+            FrameKind::Request => 1,
+            FrameKind::Response => 2,
+            FrameKind::Stats => 3,
+            FrameKind::StatsReply => 4,
+            FrameKind::Health => 5,
+            FrameKind::HealthReply => 6,
+        }
+    }
+
+    fn from_u8(b: u8) -> Option<FrameKind> {
+        match b {
+            1 => Some(FrameKind::Request),
+            2 => Some(FrameKind::Response),
+            3 => Some(FrameKind::Stats),
+            4 => Some(FrameKind::StatsReply),
+            5 => Some(FrameKind::Health),
+            6 => Some(FrameKind::HealthReply),
+            _ => None,
+        }
+    }
+}
+
+/// Response status byte. Maps the service/plan error taxonomy onto the wire
+/// so clients can react without parsing diagnostic text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Transform executed; payload follows.
+    Ok,
+    /// Shed by admission control (connection cap, in-flight cap, or the
+    /// service queue) — retry later, possibly elsewhere.
+    Overloaded,
+    /// The frame itself was structurally invalid; the connection is closed
+    /// after this response because the stream can no longer be trusted.
+    BadFrame,
+    /// Valid frame, but the descriptor names a transform this build cannot
+    /// plan (`FftError` at plan time). The connection stays usable.
+    Unsupported,
+    /// Payload inconsistent with the descriptor (`ServiceError::BadInput`).
+    BadInput,
+    /// The backend failed mid-execution (`ServiceError::Exec`).
+    Exec,
+    /// The daemon is draining; no further requests will be served.
+    Shutdown,
+}
+
+impl Status {
+    fn to_u8(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::Overloaded => 1,
+            Status::BadFrame => 2,
+            Status::Unsupported => 3,
+            Status::BadInput => 4,
+            Status::Exec => 5,
+            Status::Shutdown => 6,
+        }
+    }
+
+    fn from_u8(b: u8) -> Option<Status> {
+        match b {
+            0 => Some(Status::Ok),
+            1 => Some(Status::Overloaded),
+            2 => Some(Status::BadFrame),
+            3 => Some(Status::Unsupported),
+            4 => Some(Status::BadInput),
+            5 => Some(Status::Exec),
+            6 => Some(Status::Shutdown),
+            _ => None,
+        }
+    }
+
+    /// Wire status for a service-side failure.
+    pub fn from_service_error(err: &ServiceError) -> Status {
+        match err {
+            ServiceError::Rejected => Status::Overloaded,
+            ServiceError::UnsupportedSize(_) => Status::Unsupported,
+            ServiceError::BadInput { .. } => Status::BadInput,
+            ServiceError::Exec(_) => Status::Exec,
+            ServiceError::Shutdown => Status::Shutdown,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Overloaded => "overloaded",
+            Status::BadFrame => "bad-frame",
+            Status::Unsupported => "unsupported",
+            Status::BadInput => "bad-input",
+            Status::Exec => "exec-error",
+            Status::Shutdown => "shutdown",
+        }
+    }
+}
+
+impl fmt::Display for Status {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Typed decode failure. Everything except `Descriptor` means the byte
+/// stream itself is damaged and the connection should be dropped.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtoError {
+    /// First four bytes were not `MFNT`.
+    BadMagic([u8; 4]),
+    /// Protocol version mismatch.
+    BadVersion(u8),
+    /// Unknown frame-kind byte.
+    BadKind(u8),
+    /// Declared frame length exceeds the configured cap.
+    Oversized { frame_bytes: usize, max_bytes: usize },
+    /// Body shorter than its fixed fields require.
+    Truncated { needed: usize, got: usize },
+    /// An enum field carried an out-of-range byte.
+    BadField { field: &'static str, value: u8 },
+    /// Payload length disagrees with the descriptor.
+    Payload { expected_bytes: usize, got_bytes: usize },
+    /// Structurally sound descriptor that the planner rejects.
+    Descriptor(FftError),
+    /// Unknown response status byte.
+    BadStatus(u8),
+    /// Diagnostic text was not valid UTF-8.
+    Utf8,
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtoError::BadMagic(m) => write!(f, "bad frame magic {m:02x?} (want \"MFNT\")"),
+            ProtoError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (speak version {VERSION})")
+            }
+            ProtoError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            ProtoError::Oversized { frame_bytes, max_bytes } => {
+                write!(f, "frame of {frame_bytes} bytes exceeds the {max_bytes}-byte cap")
+            }
+            ProtoError::Truncated { needed, got } => {
+                write!(f, "truncated frame: needed {needed} bytes, got {got}")
+            }
+            ProtoError::BadField { field, value } => {
+                write!(f, "bad value {value} for request field `{field}`")
+            }
+            ProtoError::Payload { expected_bytes, got_bytes } => {
+                write!(f, "payload is {got_bytes} bytes, descriptor requires {expected_bytes}")
+            }
+            ProtoError::Descriptor(e) => write!(f, "unplannable descriptor: {e}"),
+            ProtoError::BadStatus(s) => write!(f, "unknown response status {s}"),
+            ProtoError::Utf8 => f.write_str("diagnostic text is not valid UTF-8"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Failure reading a frame from a stream: transport vs. protocol.
+#[derive(Debug)]
+pub enum FrameError {
+    Io(std::io::Error),
+    Proto(ProtoError),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "io: {e}"),
+            FrameError::Proto(e) => write!(f, "protocol: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+impl From<ProtoError> for FrameError {
+    fn from(e: ProtoError) -> Self {
+        FrameError::Proto(e)
+    }
+}
+
+/// Decoded frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub kind: FrameKind,
+    pub body_len: usize,
+}
+
+/// A decoded transform request: validated descriptor + planar payload.
+#[derive(Debug, Clone)]
+pub struct WireRequest {
+    pub problem: ProblemSpec,
+    pub direction: Direction,
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+}
+
+/// A decoded transform response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireResponse {
+    Ok { re: Vec<f32>, im: Vec<f32> },
+    Err { status: Status, message: String },
+}
+
+// ---------------------------------------------------------------------------
+// encoding
+
+fn frame(kind: FrameKind, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind.to_u8());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+fn push_planes(out: &mut Vec<u8>, re: &[f32], im: &[f32]) {
+    for (r, i) in re.iter().zip(im) {
+        out.extend_from_slice(&r.to_le_bytes());
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+}
+
+fn shape_tag(shape: Shape) -> (u8, u64, u64) {
+    match shape {
+        Shape::OneD { n } => (1, n as u64, 0),
+        Shape::TwoD { rows, cols } => (2, rows as u64, cols as u64),
+    }
+}
+
+fn domain_tag(domain: Domain) -> u8 {
+    match domain {
+        Domain::ComplexToComplex => 1,
+        Domain::RealToComplex => 2,
+    }
+}
+
+fn placement_tag(placement: Placement) -> u8 {
+    match placement {
+        Placement::OutOfPlace => 1,
+        Placement::InPlace => 2,
+    }
+}
+
+fn algorithm_tag(algo: Algorithm) -> u8 {
+    match algo {
+        Algorithm::Auto => 0,
+        Algorithm::Radix2 => 1,
+        Algorithm::Radix4 => 2,
+        Algorithm::SplitRadix => 3,
+        Algorithm::Stockham => 4,
+        Algorithm::FourStep => 5,
+        Algorithm::Bluestein => 6,
+        Algorithm::MemTier => 7,
+    }
+}
+
+fn direction_tag(direction: Direction) -> u8 {
+    match direction {
+        Direction::Forward => 1,
+        Direction::Inverse => 2,
+    }
+}
+
+/// Encode a complete request frame. The payload planes must each hold
+/// exactly `problem.total_elems()` samples.
+pub fn encode_request(
+    problem: &ProblemSpec,
+    direction: Direction,
+    re: &[f32],
+    im: &[f32],
+) -> Result<Vec<u8>, ProtoError> {
+    let elems = problem.total_elems();
+    if re.len() != elems || im.len() != elems {
+        return Err(ProtoError::Payload {
+            expected_bytes: elems * 8,
+            got_bytes: re.len().min(im.len()) * 8,
+        });
+    }
+    let (tag, dim0, dim1) = shape_tag(problem.shape());
+    let mut body = Vec::with_capacity(REQUEST_PRELUDE + elems * 8);
+    body.push(tag);
+    body.extend_from_slice(&dim0.to_le_bytes());
+    body.extend_from_slice(&dim1.to_le_bytes());
+    body.push(domain_tag(problem.domain()));
+    body.extend_from_slice(&(problem.batch() as u32).to_le_bytes());
+    body.push(placement_tag(problem.placement()));
+    body.push(algorithm_tag(problem.algorithm()));
+    body.push(direction_tag(direction));
+    push_planes(&mut body, re, im);
+    Ok(frame(FrameKind::Request, &body))
+}
+
+/// Encode a successful response frame carrying the transformed planes.
+pub fn encode_response_ok(re: &[f32], im: &[f32]) -> Vec<u8> {
+    let mut body = Vec::with_capacity(1 + re.len() * 8);
+    body.push(Status::Ok.to_u8());
+    push_planes(&mut body, re, im);
+    frame(FrameKind::Response, &body)
+}
+
+/// Encode a failure response frame with a diagnostic message.
+pub fn encode_response_err(status: Status, message: &str) -> Vec<u8> {
+    let mut body = Vec::with_capacity(1 + message.len());
+    body.push(status.to_u8());
+    body.extend_from_slice(message.as_bytes());
+    frame(FrameKind::Response, &body)
+}
+
+/// Encode a bodiless frame (`Stats` / `Health` probes).
+pub fn encode_empty(kind: FrameKind) -> Vec<u8> {
+    frame(kind, &[])
+}
+
+/// Encode a plaintext reply frame (`StatsReply` / `HealthReply`).
+pub fn encode_text_reply(kind: FrameKind, text: &str) -> Vec<u8> {
+    frame(kind, text.as_bytes())
+}
+
+// ---------------------------------------------------------------------------
+// decoding
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.buf.len() - self.pos < n {
+            return Err(ProtoError::Truncated {
+                needed: self.pos + n,
+                got: self.buf.len(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn rest(self) -> &'a [u8] {
+        &self.buf[self.pos..]
+    }
+}
+
+/// Parse and validate a frame header against a frame-size cap.
+pub fn decode_header(hdr: &[u8], max_frame_bytes: usize) -> Result<FrameHeader, ProtoError> {
+    let mut r = Reader::new(hdr);
+    let magic: [u8; 4] = r.take(4)?.try_into().unwrap();
+    if magic != MAGIC {
+        return Err(ProtoError::BadMagic(magic));
+    }
+    let version = r.u8()?;
+    if version != VERSION {
+        return Err(ProtoError::BadVersion(version));
+    }
+    let kind_byte = r.u8()?;
+    let kind = FrameKind::from_u8(kind_byte).ok_or(ProtoError::BadKind(kind_byte))?;
+    let body_len = r.u32()? as usize;
+    if HEADER_LEN + body_len > max_frame_bytes {
+        return Err(ProtoError::Oversized {
+            frame_bytes: HEADER_LEN + body_len,
+            max_bytes: max_frame_bytes,
+        });
+    }
+    Ok(FrameHeader { kind, body_len })
+}
+
+fn split_planes(payload: &[u8]) -> Result<(Vec<f32>, Vec<f32>), ProtoError> {
+    if payload.len() % 8 != 0 {
+        return Err(ProtoError::Payload {
+            expected_bytes: payload.len() / 8 * 8,
+            got_bytes: payload.len(),
+        });
+    }
+    let elems = payload.len() / 8;
+    let mut re = Vec::with_capacity(elems);
+    let mut im = Vec::with_capacity(elems);
+    for pair in payload.chunks_exact(8) {
+        re.push(f32::from_le_bytes(pair[..4].try_into().unwrap()));
+        im.push(f32::from_le_bytes(pair[4..].try_into().unwrap()));
+    }
+    Ok((re, im))
+}
+
+/// Decode a request body into a validated [`WireRequest`].
+pub fn decode_request_body(body: &[u8]) -> Result<WireRequest, ProtoError> {
+    let mut r = Reader::new(body);
+    let tag = r.u8()?;
+    let dim0 = r.u64()? as usize;
+    let dim1 = r.u64()? as usize;
+    let shape = match tag {
+        1 => Shape::OneD { n: dim0 },
+        2 => Shape::TwoD { rows: dim0, cols: dim1 },
+        v => return Err(ProtoError::BadField { field: "shape", value: v }),
+    };
+    let domain = match r.u8()? {
+        1 => Domain::ComplexToComplex,
+        2 => Domain::RealToComplex,
+        v => return Err(ProtoError::BadField { field: "domain", value: v }),
+    };
+    let batch = r.u32()? as usize;
+    let placement = match r.u8()? {
+        1 => Placement::OutOfPlace,
+        2 => Placement::InPlace,
+        v => return Err(ProtoError::BadField { field: "placement", value: v }),
+    };
+    let algorithm = match r.u8()? {
+        0 => Algorithm::Auto,
+        1 => Algorithm::Radix2,
+        2 => Algorithm::Radix4,
+        3 => Algorithm::SplitRadix,
+        4 => Algorithm::Stockham,
+        5 => Algorithm::FourStep,
+        6 => Algorithm::Bluestein,
+        7 => Algorithm::MemTier,
+        v => return Err(ProtoError::BadField { field: "algorithm", value: v }),
+    };
+    let direction = match r.u8()? {
+        1 => Direction::Forward,
+        2 => Direction::Inverse,
+        v => return Err(ProtoError::BadField { field: "direction", value: v }),
+    };
+    let mut problem =
+        ProblemSpec::new(shape, domain).map_err(ProtoError::Descriptor)?;
+    problem = problem.batched(batch).map_err(ProtoError::Descriptor)?;
+    if placement == Placement::InPlace {
+        problem = problem.in_place();
+    }
+    problem = problem.with_algorithm(algorithm);
+    let payload = r.rest();
+    let expected = problem.total_elems() * 8;
+    if payload.len() != expected {
+        return Err(ProtoError::Payload { expected_bytes: expected, got_bytes: payload.len() });
+    }
+    let (re, im) = split_planes(payload)?;
+    Ok(WireRequest { problem, direction, re, im })
+}
+
+/// Decode a response body into payload planes or a typed failure.
+pub fn decode_response_body(body: &[u8]) -> Result<WireResponse, ProtoError> {
+    let mut r = Reader::new(body);
+    let status_byte = r.u8()?;
+    let status = Status::from_u8(status_byte).ok_or(ProtoError::BadStatus(status_byte))?;
+    let rest = r.rest();
+    if status == Status::Ok {
+        let (re, im) = split_planes(rest)?;
+        return Ok(WireResponse::Ok { re, im });
+    }
+    let message = std::str::from_utf8(rest).map_err(|_| ProtoError::Utf8)?.to_string();
+    Ok(WireResponse::Err { status, message })
+}
+
+/// Decode a plaintext reply body.
+pub fn decode_text_body(body: &[u8]) -> Result<String, ProtoError> {
+    Ok(std::str::from_utf8(body).map_err(|_| ProtoError::Utf8)?.to_string())
+}
+
+// ---------------------------------------------------------------------------
+// framed IO
+
+/// Read one frame. Returns `Ok(None)` on clean EOF at a frame boundary —
+/// the peer hung up between frames, which is not an error.
+pub fn read_frame(
+    r: &mut impl Read,
+    max_frame_bytes: usize,
+) -> Result<Option<(FrameKind, Vec<u8>)>, FrameError> {
+    let mut hdr = [0u8; HEADER_LEN];
+    let mut filled = 0;
+    while filled < HEADER_LEN {
+        match r.read(&mut hdr[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(None);
+                }
+                return Err(ProtoError::Truncated { needed: HEADER_LEN, got: filled }.into());
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let header = decode_header(&hdr, max_frame_bytes)?;
+    let mut body = vec![0u8; header.body_len];
+    match r.read_exact(&mut body) {
+        Ok(()) => Ok(Some((header.kind, body))),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Err(ProtoError::Truncated {
+            needed: HEADER_LEN + header.body_len,
+            got: HEADER_LEN,
+        }
+        .into()),
+        Err(e) => Err(e.into()),
+    }
+}
+
+/// Write one already-encoded frame and flush it.
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> std::io::Result<()> {
+    w.write_all(frame)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ProblemSpec> {
+        vec![
+            ProblemSpec::one_d(16).unwrap(),
+            ProblemSpec::one_d(12).unwrap(),
+            ProblemSpec::real(64).unwrap(),
+            ProblemSpec::two_d(4, 8).unwrap(),
+            ProblemSpec::one_d(8).unwrap().batched(3).unwrap().in_place(),
+            ProblemSpec::one_d(32).unwrap().with_algorithm(Algorithm::Stockham),
+        ]
+    }
+
+    #[test]
+    fn request_round_trips_every_descriptor_and_direction() {
+        for spec in specs() {
+            for direction in [Direction::Forward, Direction::Inverse] {
+                let n = spec.total_elems();
+                let re: Vec<f32> = (0..n).map(|i| i as f32 * 0.5 - 3.0).collect();
+                let im: Vec<f32> = (0..n).map(|i| 1.0 / (i as f32 + 1.0)).collect();
+                let frame = encode_request(&spec, direction, &re, &im).unwrap();
+                let header = decode_header(&frame[..HEADER_LEN], 1 << 30).unwrap();
+                assert_eq!(header.kind, FrameKind::Request);
+                assert_eq!(header.body_len, frame.len() - HEADER_LEN);
+                let req = decode_request_body(&frame[HEADER_LEN..]).unwrap();
+                assert_eq!(req.problem.key(), spec.key());
+                assert_eq!(req.problem.placement(), spec.placement());
+                assert_eq!(req.direction, direction);
+                assert_eq!(req.re, re);
+                assert_eq!(req.im, im);
+            }
+        }
+    }
+
+    #[test]
+    fn response_round_trips_ok_and_err() {
+        let re = [1.5f32, -2.0, 0.0];
+        let im = [0.25f32, f32::MIN_POSITIVE, -1.0];
+        let frame = encode_response_ok(&re, &im);
+        let header = decode_header(&frame[..HEADER_LEN], 1 << 20).unwrap();
+        assert_eq!(header.kind, FrameKind::Response);
+        match decode_response_body(&frame[HEADER_LEN..]).unwrap() {
+            WireResponse::Ok { re: r, im: i } => {
+                assert_eq!(r, re);
+                assert_eq!(i, im);
+            }
+            other => panic!("expected Ok, got {other:?}"),
+        }
+        let frame = encode_response_err(Status::Overloaded, "queue full");
+        match decode_response_body(&frame[HEADER_LEN..]).unwrap() {
+            WireResponse::Err { status, message } => {
+                assert_eq!(status, Status::Overloaded);
+                assert_eq!(message, "queue full");
+            }
+            other => panic!("expected Err, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_rejections_are_typed() {
+        let good = encode_empty(FrameKind::Health);
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            decode_header(&bad[..HEADER_LEN], 1 << 20),
+            Err(ProtoError::BadMagic(_))
+        ));
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert_eq!(decode_header(&bad[..HEADER_LEN], 1 << 20), Err(ProtoError::BadVersion(9)));
+        let mut bad = good.clone();
+        bad[5] = 200;
+        assert_eq!(decode_header(&bad[..HEADER_LEN], 1 << 20), Err(ProtoError::BadKind(200)));
+        let mut bad = good;
+        bad[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_header(&bad[..HEADER_LEN], 1 << 20),
+            Err(ProtoError::Oversized { .. })
+        ));
+        assert!(matches!(decode_header(&[0u8; 4], 1 << 20), Err(ProtoError::Truncated { .. })));
+    }
+
+    #[test]
+    fn request_body_rejections_are_typed() {
+        let spec = ProblemSpec::one_d(8).unwrap();
+        let frame =
+            encode_request(&spec, Direction::Forward, &[0.0; 8], &[0.0; 8]).unwrap();
+        let body = &frame[HEADER_LEN..];
+
+        // Truncated prelude.
+        assert!(matches!(decode_request_body(&body[..10]), Err(ProtoError::Truncated { .. })));
+        // Bad enum bytes, field by field.
+        for (off, field) in [(0usize, "shape"), (17, "domain"), (22, "placement"),
+                             (23, "algorithm"), (24, "direction")]
+        {
+            let mut bad = body.to_vec();
+            bad[off] = 99;
+            match decode_request_body(&bad) {
+                Err(ProtoError::BadField { field: f, value: 99 }) => assert_eq!(f, field),
+                other => panic!("field {field}: expected BadField, got {other:?}"),
+            }
+        }
+        // Payload shorter than the descriptor demands.
+        assert!(matches!(
+            decode_request_body(&body[..body.len() - 8]),
+            Err(ProtoError::Payload { .. })
+        ));
+        // Semantically invalid descriptors decode as Descriptor errors.
+        let mut bad = body.to_vec();
+        bad[1..9].copy_from_slice(&0u64.to_le_bytes()); // n = 0
+        assert!(matches!(decode_request_body(&bad), Err(ProtoError::Descriptor(_))));
+        let twod = encode_request(
+            &ProblemSpec::two_d(4, 8).unwrap(),
+            Direction::Forward,
+            &[0.0; 32],
+            &[0.0; 32],
+        )
+        .unwrap();
+        let mut bad = twod[HEADER_LEN..].to_vec();
+        bad[17] = 2; // 2-D r2c is not plannable
+        assert!(matches!(decode_request_body(&bad), Err(ProtoError::Descriptor(_))));
+    }
+
+    #[test]
+    fn response_body_rejections_are_typed() {
+        assert_eq!(decode_response_body(&[42]), Err(ProtoError::BadStatus(42)));
+        // Ok status with a ragged payload.
+        let mut body = vec![0u8];
+        body.extend_from_slice(&[1, 2, 3]);
+        assert!(matches!(decode_response_body(&body), Err(ProtoError::Payload { .. })));
+        // Error status with invalid UTF-8 diagnostic.
+        assert_eq!(decode_response_body(&[1, 0xff, 0xfe]), Err(ProtoError::Utf8));
+        assert!(matches!(decode_response_body(&[]), Err(ProtoError::Truncated { .. })));
+    }
+
+    #[test]
+    fn read_frame_handles_eof_and_truncation() {
+        let frame = encode_text_reply(FrameKind::HealthReply, "ok");
+        let mut cur = std::io::Cursor::new(frame.clone());
+        let (kind, body) = read_frame(&mut cur, 1 << 20).unwrap().unwrap();
+        assert_eq!(kind, FrameKind::HealthReply);
+        assert_eq!(decode_text_body(&body).unwrap(), "ok");
+        // Clean EOF at the boundary.
+        assert!(read_frame(&mut cur, 1 << 20).unwrap().is_none());
+        // EOF mid-header and mid-body are both truncation errors.
+        let mut cur = std::io::Cursor::new(frame[..4].to_vec());
+        assert!(matches!(
+            read_frame(&mut cur, 1 << 20),
+            Err(FrameError::Proto(ProtoError::Truncated { .. }))
+        ));
+        let mut cur = std::io::Cursor::new(frame[..HEADER_LEN + 1].to_vec());
+        assert!(matches!(
+            read_frame(&mut cur, 1 << 20),
+            Err(FrameError::Proto(ProtoError::Truncated { .. }))
+        ));
+    }
+}

@@ -1,0 +1,392 @@
+//! The `memfft` TCP daemon: accept loop, per-connection handler threads,
+//! bounded admission, and graceful drain (DESIGN.md §10).
+//!
+//! Concurrency model — three bounded layers, each of which sheds instead of
+//! blocking:
+//!
+//! 1. **Connection cap** (`net.max_connections`): admission is a lock-free
+//!    compare-exchange on an atomic slot counter; a connection over the cap
+//!    gets one `Overloaded` response to its first frame and is closed.
+//! 2. **In-flight cap** (`net.max_inflight`): requests admitted but not yet
+//!    answered, across all connections. The service's own `queue_depth`
+//!    bounds *queued* work, but its batcher drains that queue into workers
+//!    almost immediately, so a server-side cap is what actually bounds
+//!    memory under a flood of large payloads. Over the cap → `Overloaded`.
+//! 3. **Service queue** (`service.queue_depth`): `submit_spec` rejections
+//!    surface as `Overloaded` too, counted by the same `requests_shed`.
+//!
+//! Each connection is one handler thread reading frames in a loop and
+//! writing responses in order; socket read/write timeouts (idle timeout)
+//! keep dead clients from pinning threads forever. Shutdown drains: stop
+//! accepting, half-close every connection's read side (in-flight responses
+//! still go out), join handlers, then `FftService::shutdown()` which drains
+//! the service queue.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::proto::{self, FrameError, FrameKind, ProtoError, Status};
+use crate::config::NetConfig;
+use crate::coordinator::{FftService, ServiceError};
+use crate::metrics::ServiceMetrics;
+
+struct ServerState {
+    /// `Some` while serving; taken (and drained) exactly once at shutdown.
+    svc: Mutex<Option<Arc<FftService>>>,
+    metrics: Arc<ServiceMetrics>,
+    cfg: NetConfig,
+    shutting_down: AtomicBool,
+    /// Admitted connections (layer 1).
+    conn_slots: AtomicUsize,
+    /// Requests admitted but not yet answered (layer 2).
+    inflight: AtomicUsize,
+    /// Read-half clones of every live connection, so drain can unblock
+    /// handler reads without touching the write half.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    started: Instant,
+}
+
+/// The running daemon. Dropping it drains gracefully; [`NetServer::shutdown`]
+/// does the same explicitly.
+pub struct NetServer {
+    state: Arc<ServerState>,
+    local_addr: SocketAddr,
+    accept_handle: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `svc.config().net.listen` and start serving. Takes ownership of
+    /// the service: the daemon is its only owner and shuts it down on drain.
+    pub fn start(svc: FftService) -> std::io::Result<NetServer> {
+        let cfg = svc.config().net.clone();
+        let metrics = svc.metrics_arc();
+        let listener = TcpListener::bind(&cfg.listen)?;
+        // Nonblocking accept so the loop can poll the shutdown flag.
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let state = Arc::new(ServerState {
+            svc: Mutex::new(Some(Arc::new(svc))),
+            metrics,
+            cfg,
+            shutting_down: AtomicBool::new(false),
+            conn_slots: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
+            conns: Mutex::new(HashMap::new()),
+            handles: Mutex::new(Vec::new()),
+            started: Instant::now(),
+        });
+        let accept_state = state.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("memfft-net-accept".into())
+            .spawn(move || accept_loop(listener, accept_state))?;
+        Ok(NetServer { state, local_addr, accept_handle: Some(accept_handle) })
+    }
+
+    /// The bound address — the actual port when `listen` used port 0.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The service's metric bundle (shared with the daemon's own gauges).
+    pub fn metrics(&self) -> Arc<ServiceMetrics> {
+        self.state.metrics.clone()
+    }
+
+    /// Graceful drain: stop accepting, let in-flight requests finish and
+    /// their responses go out, join every handler, then drain the service.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.state.shutting_down.store(true, Ordering::Release);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        // Half-close the read side of every connection: blocked reads
+        // return EOF, while handlers mid-request keep the write side to
+        // deliver their response.
+        for (_, conn) in self.state.conns.lock().unwrap().drain() {
+            let _ = conn.shutdown(Shutdown::Read);
+        }
+        let handles: Vec<_> = self.state.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        // Every handler clone is gone; this is the last owner, so the
+        // service drains its queue and joins its workers here.
+        if let Some(svc) = self.state.svc.lock().unwrap().take() {
+            match Arc::try_unwrap(svc) {
+                Ok(svc) => svc.shutdown(),
+                Err(arc) => drop(arc),
+            }
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        if self.accept_handle.is_some() || self.state.svc.lock().unwrap().is_some() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+/// Acquire one slot of a capped atomic counter; never blocks.
+fn try_acquire(counter: &AtomicUsize, cap: usize) -> bool {
+    counter
+        .fetch_update(Ordering::AcqRel, Ordering::Acquire, |c| (c < cap).then_some(c + 1))
+        .is_ok()
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
+    let mut next_id = 0u64;
+    loop {
+        if state.shutting_down.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                next_id += 1;
+                admit(stream, next_id, &state);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            // Transient accept failure (e.g. EMFILE): back off and retry.
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+fn admit(stream: TcpStream, id: u64, state: &Arc<ServerState>) {
+    // The listener is nonblocking; accepted sockets must not inherit that.
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let timeout = state.cfg.read_timeout();
+    let _ = stream.set_read_timeout(timeout);
+    let _ = stream.set_write_timeout(timeout);
+    let _ = stream.set_nodelay(true);
+
+    let admitted = try_acquire(&state.conn_slots, state.cfg.max_connections);
+    if admitted {
+        state.metrics.connections_accepted.inc();
+        state.metrics.connections_active.inc();
+    } else {
+        state.metrics.connections_refused.inc();
+    }
+    if let Ok(clone) = stream.try_clone() {
+        state.conns.lock().unwrap().insert(id, clone);
+    }
+    let st = state.clone();
+    let spawned = std::thread::Builder::new()
+        .name(format!("memfft-net-conn-{id}"))
+        .spawn(move || {
+            if admitted {
+                handle_connection(stream, &st);
+            } else {
+                refuse_connection(stream, &st);
+            }
+            st.conns.lock().unwrap().remove(&id);
+            if admitted {
+                st.metrics.connections_active.dec();
+                st.conn_slots.fetch_sub(1, Ordering::AcqRel);
+            }
+        });
+    match spawned {
+        Ok(handle) => state.handles.lock().unwrap().push(handle),
+        Err(_) => {
+            // Thread spawn failed; the closure (and socket) were dropped
+            // without running, so undo the accounting it would have done.
+            state.conns.lock().unwrap().remove(&id);
+            if admitted {
+                state.metrics.connections_active.dec();
+                state.conn_slots.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+    }
+}
+
+/// Over the connection cap: answer the first frame with `Overloaded` so the
+/// client gets a typed shed instead of a silent close, then hang up.
+fn refuse_connection(mut stream: TcpStream, state: &Arc<ServerState>) {
+    match proto::read_frame(&mut stream, state.cfg.max_frame_bytes) {
+        Ok(Some(_)) => {
+            let frame =
+                proto::encode_response_err(Status::Overloaded, "connection cap reached");
+            let _ = proto::write_frame(&mut stream, &frame);
+        }
+        Ok(None) | Err(_) => {}
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, state: &Arc<ServerState>) {
+    loop {
+        if state.shutting_down.load(Ordering::Acquire) {
+            return;
+        }
+        let (kind, body) = match proto::read_frame(&mut stream, state.cfg.max_frame_bytes) {
+            Ok(Some(frame)) => frame,
+            // Clean close, idle timeout, or transport failure: hang up.
+            Ok(None) | Err(FrameError::Io(_)) => return,
+            Err(FrameError::Proto(e)) => {
+                // The byte stream is unsynchronized; answer with a typed
+                // rejection, then close — the daemon itself stays up.
+                state.metrics.frames_malformed.inc();
+                let frame = proto::encode_response_err(Status::BadFrame, &e.to_string());
+                let _ = proto::write_frame(&mut stream, &frame);
+                return;
+            }
+        };
+        let keep_open = match kind {
+            FrameKind::Request => handle_request(&mut stream, &body, state),
+            FrameKind::Stats => {
+                write_reply(&mut stream, proto::encode_text_reply(FrameKind::StatsReply, &stats_text(state)))
+            }
+            FrameKind::Health => {
+                write_reply(&mut stream, proto::encode_text_reply(FrameKind::HealthReply, &health_text(state)))
+            }
+            // A reply kind arriving at the server is a peer bug.
+            FrameKind::Response | FrameKind::StatsReply | FrameKind::HealthReply => {
+                state.metrics.frames_malformed.inc();
+                let frame = proto::encode_response_err(
+                    Status::BadFrame,
+                    "reply frame kind sent to a server",
+                );
+                let _ = proto::write_frame(&mut stream, &frame);
+                false
+            }
+        };
+        if !keep_open {
+            return;
+        }
+    }
+}
+
+/// Serve one transform request. Returns whether the connection stays open.
+fn handle_request(stream: &mut TcpStream, body: &[u8], state: &Arc<ServerState>) -> bool {
+    let req = match proto::decode_request_body(body) {
+        Ok(req) => req,
+        Err(ProtoError::Descriptor(e)) => {
+            // Well-framed but unplannable: reject, keep the connection.
+            let frame = proto::encode_response_err(Status::Unsupported, &e.to_string());
+            return write_reply(stream, frame);
+        }
+        Err(e) => {
+            state.metrics.frames_malformed.inc();
+            let frame = proto::encode_response_err(Status::BadFrame, &e.to_string());
+            let _ = proto::write_frame(stream, &frame);
+            return false;
+        }
+    };
+    if !try_acquire(&state.inflight, state.cfg.max_inflight) {
+        state.metrics.requests_shed.inc();
+        let frame = proto::encode_response_err(
+            Status::Overloaded,
+            "server at max in-flight requests",
+        );
+        return write_reply(stream, frame);
+    }
+    let result = submit_and_wait(req, state);
+    state.inflight.fetch_sub(1, Ordering::AcqRel);
+    let frame = match result {
+        Ok((re, im)) => proto::encode_response_ok(&re, &im),
+        Err(err) => {
+            let status = Status::from_service_error(&err);
+            if status == Status::Overloaded {
+                // The service queue itself rejected: same shed lane.
+                state.metrics.requests_shed.inc();
+            }
+            proto::encode_response_err(status, &err.to_string())
+        }
+    };
+    write_reply(stream, frame)
+}
+
+fn submit_and_wait(
+    req: proto::WireRequest,
+    state: &Arc<ServerState>,
+) -> Result<(Vec<f32>, Vec<f32>), ServiceError> {
+    let svc = match state.svc.lock().unwrap().clone() {
+        Some(svc) => svc,
+        None => return Err(ServiceError::Shutdown),
+    };
+    let rx = svc.submit_spec(req.problem, req.direction, req.re, req.im)?;
+    let response = rx.recv().map_err(|_| ServiceError::Shutdown)??;
+    Ok((response.re, response.im))
+}
+
+fn write_reply(stream: &mut TcpStream, frame: Vec<u8>) -> bool {
+    proto::write_frame(stream, &frame).is_ok()
+}
+
+fn stats_text(state: &Arc<ServerState>) -> String {
+    let mut text = state.metrics.report();
+    text.push_str(&format!("uptime: {:.1}s\n", state.started.elapsed().as_secs_f64()));
+    text
+}
+
+fn health_text(state: &Arc<ServerState>) -> String {
+    format!(
+        "ok uptime={:.1}s active_connections={} inflight={}",
+        state.started.elapsed().as_secs_f64(),
+        state.metrics.connections_active.get(),
+        state.inflight.load(Ordering::Acquire),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServiceConfig;
+
+    fn server() -> NetServer {
+        let mut cfg = ServiceConfig {
+            method: "native".into(),
+            workers: 1,
+            max_batch: 4,
+            max_delay_us: 100,
+            queue_depth: 64,
+            ..Default::default()
+        };
+        cfg.net.listen = "127.0.0.1:0".into();
+        NetServer::start(FftService::start(cfg)).unwrap()
+    }
+
+    #[test]
+    fn binds_ephemeral_port_and_shuts_down() {
+        let server = server();
+        let addr = server.local_addr();
+        assert_ne!(addr.port(), 0, "port 0 must resolve to a real ephemeral port");
+        server.shutdown();
+        // The listener is gone: a fresh connection must be refused.
+        assert!(TcpStream::connect_timeout(&addr, Duration::from_millis(500)).is_err());
+    }
+
+    #[test]
+    fn drop_drains_like_shutdown() {
+        let addr = {
+            let server = server();
+            server.local_addr()
+            // Drop runs shutdown_inner here.
+        };
+        assert!(TcpStream::connect_timeout(&addr, Duration::from_millis(500)).is_err());
+    }
+
+    #[test]
+    fn try_acquire_respects_cap() {
+        let slots = AtomicUsize::new(0);
+        assert!(try_acquire(&slots, 2));
+        assert!(try_acquire(&slots, 2));
+        assert!(!try_acquire(&slots, 2), "third acquire exceeds cap 2");
+        slots.fetch_sub(1, Ordering::AcqRel);
+        assert!(try_acquire(&slots, 2), "released slot is reusable");
+        assert!(!try_acquire(&slots, 0), "cap 0 admits nothing");
+    }
+}

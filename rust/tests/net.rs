@@ -1,0 +1,504 @@
+//! Acceptance battery for the network serving subsystem (ISSUE 6 /
+//! DESIGN.md §10).
+//!
+//! Proves, over real loopback sockets:
+//! - wire protocol round-trips for every Shape × Domain × direction, and
+//!   damaged frames (truncated / oversized / bad magic / wrong version)
+//!   come back as typed errors, never panics or hangs;
+//! - daemon responses are bit-for-bit equal to local `plan()` execution
+//!   for 1-D c2c, 2-D, and r2c — including under concurrent clients and
+//!   pipelined requests on one connection;
+//! - saturating admission yields typed `Overloaded` responses counted by
+//!   `requests_shed`, with no deadlock;
+//! - malformed frames are rejected without taking the daemon down;
+//! - shutdown drains: the in-flight request is answered, then the
+//!   listener is gone.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use memfft::config::ServiceConfig;
+use memfft::coordinator::{Direction, FftService};
+use memfft::fft::{plan, Algorithm, Domain, ProblemSpec, Transform};
+use memfft::net::proto::{self, HEADER_LEN};
+use memfft::net::{
+    FrameError, FrameKind, NetClient, NetError, NetServer, ProtoError, Status, WireResponse,
+};
+use memfft::util::Xoshiro256;
+use memfft::C32;
+
+const DEADLINE: Duration = Duration::from_secs(30);
+
+fn native_cfg() -> ServiceConfig {
+    let mut cfg = ServiceConfig {
+        method: "native".into(),
+        workers: 2,
+        max_batch: 4,
+        max_delay_us: 100,
+        queue_depth: 64,
+        ..Default::default()
+    };
+    cfg.net.listen = "127.0.0.1:0".into();
+    cfg
+}
+
+fn start(cfg: ServiceConfig) -> NetServer {
+    NetServer::start(FftService::start(cfg)).expect("bind loopback")
+}
+
+fn connect(server: &NetServer) -> NetClient {
+    let client = NetClient::connect(server.local_addr()).expect("connect");
+    client.set_timeout(Some(Duration::from_secs(20))).unwrap();
+    client
+}
+
+/// The daemon's native backend executes `plan(spec)` via
+/// `forward_batch_into` / `inverse_batch_into`; mirror that exactly so bit
+/// equality is a fair demand.
+fn local_bits(
+    spec: &ProblemSpec,
+    direction: Direction,
+    re: &[f32],
+    im: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let p = plan(spec).expect("plannable spec");
+    let input: Vec<C32> = re.iter().zip(im).map(|(&r, &i)| C32::new(r, i)).collect();
+    let mut output = vec![C32::ZERO; input.len()];
+    let mut scratch = vec![C32::ZERO; p.scratch_len()];
+    match direction {
+        Direction::Forward => {
+            p.forward_batch_into(spec.batch(), &input, &mut output, &mut scratch).unwrap()
+        }
+        Direction::Inverse => {
+            p.inverse_batch_into(spec.batch(), &input, &mut output, &mut scratch).unwrap()
+        }
+    }
+    (output.iter().map(|c| c.re).collect(), output.iter().map(|c| c.im).collect())
+}
+
+fn assert_bits_equal(want: &[f32], got: &[f32], what: &str) {
+    assert_eq!(want.len(), got.len(), "{what}: length");
+    for (k, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(w.to_bits(), g.to_bits(), "{what}: sample {k}: {w} vs {g}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// protocol, no sockets
+
+#[test]
+fn proto_round_trips_every_shape_domain_direction() {
+    let specs = [
+        ProblemSpec::one_d(64).unwrap(),
+        ProblemSpec::one_d(24).unwrap(), // non-pow2 survives the wire too
+        ProblemSpec::real(128).unwrap(),
+        ProblemSpec::two_d(8, 16).unwrap(),
+        ProblemSpec::one_d(16).unwrap().batched(4).unwrap(),
+        ProblemSpec::two_d(4, 8).unwrap().with_algorithm(Algorithm::Stockham).in_place(),
+    ];
+    let mut rng = Xoshiro256::seeded(0xE77);
+    for spec in specs {
+        for direction in [Direction::Forward, Direction::Inverse] {
+            let n = spec.total_elems();
+            let (re, im) = (rng.real_vec(n), rng.real_vec(n));
+            let frame = proto::encode_request(&spec, direction, &re, &im).unwrap();
+            let header = proto::decode_header(&frame[..HEADER_LEN], 1 << 30).unwrap();
+            assert_eq!(header.kind, FrameKind::Request);
+            let req = proto::decode_request_body(&frame[HEADER_LEN..]).unwrap();
+            assert_eq!(req.problem.shape(), spec.shape(), "{spec:?}");
+            assert_eq!(req.problem.domain(), spec.domain());
+            assert_eq!(req.problem.batch(), spec.batch());
+            assert_eq!(req.problem.placement(), spec.placement());
+            assert_eq!(req.problem.algorithm(), spec.algorithm());
+            assert_eq!(req.direction, direction);
+            assert_bits_equal(&re, &req.re, "re plane");
+            assert_bits_equal(&im, &req.im, "im plane");
+        }
+    }
+}
+
+#[test]
+fn proto_damaged_frames_yield_typed_errors() {
+    let spec = ProblemSpec::one_d(8).unwrap();
+    let good = proto::encode_request(&spec, Direction::Forward, &[1.0; 8], &[0.0; 8]).unwrap();
+
+    let mut bad_magic = good.clone();
+    bad_magic[..4].copy_from_slice(b"HTTP");
+    assert!(matches!(
+        proto::decode_header(&bad_magic[..HEADER_LEN], 1 << 20),
+        Err(ProtoError::BadMagic(_))
+    ));
+
+    let mut bad_version = good.clone();
+    bad_version[4] = 42;
+    assert_eq!(
+        proto::decode_header(&bad_version[..HEADER_LEN], 1 << 20),
+        Err(ProtoError::BadVersion(42))
+    );
+
+    let mut oversized = good.clone();
+    oversized[6..10].copy_from_slice(&(1u32 << 30).to_le_bytes());
+    assert!(matches!(
+        proto::decode_header(&oversized[..HEADER_LEN], 1 << 20),
+        Err(ProtoError::Oversized { .. })
+    ));
+
+    // Truncation at every prefix length: typed error or clean EOF, never
+    // a panic, whether the cut lands in the header or the body.
+    for cut in 0..good.len() {
+        let mut cursor = std::io::Cursor::new(good[..cut].to_vec());
+        match proto::read_frame(&mut cursor, 1 << 20) {
+            Ok(None) => assert_eq!(cut, 0, "only an empty stream is a clean EOF"),
+            Ok(Some(_)) => panic!("cut {cut}: truncated frame decoded"),
+            Err(FrameError::Proto(ProtoError::Truncated { .. })) | Err(FrameError::Io(_)) => {}
+            Err(e) => panic!("cut {cut}: unexpected error {e}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// loopback end-to-end
+
+#[test]
+fn loopback_responses_bitwise_equal_local_plan() {
+    let server = start(native_cfg());
+    let mut client = connect(&server);
+    let mut rng = Xoshiro256::seeded(0xB175);
+
+    let cases = [
+        (ProblemSpec::one_d(256).unwrap(), Direction::Forward),
+        (ProblemSpec::one_d(256).unwrap(), Direction::Inverse),
+        (ProblemSpec::two_d(8, 32).unwrap(), Direction::Forward),
+        (ProblemSpec::real(64).unwrap(), Direction::Forward),
+    ];
+    for (spec, direction) in cases {
+        let n = spec.total_elems();
+        let re = rng.real_vec(n);
+        let im = if spec.domain() == Domain::RealToComplex {
+            vec![0f32; n]
+        } else {
+            rng.real_vec(n)
+        };
+        let (got_re, got_im) = client.transform(&spec, direction, &re, &im).unwrap();
+        let (want_re, want_im) = local_bits(&spec, direction, &re, &im);
+        assert_bits_equal(&want_re, &got_re, "re");
+        assert_bits_equal(&want_im, &got_im, "im");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_each_get_their_own_bits() {
+    let server = start(native_cfg());
+    let addr = server.local_addr();
+    let metrics = server.metrics();
+
+    let clients = 5;
+    let per_client = 12;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let client = NetClient::connect(addr).unwrap();
+                client.set_timeout(Some(Duration::from_secs(20))).unwrap();
+                let mut client = client;
+                let mut rng = Xoshiro256::seeded(0xC0 + c as u64);
+                for r in 0..per_client {
+                    // Mixed shapes so batches interleave across clients.
+                    let spec = match r % 3 {
+                        0 => ProblemSpec::one_d(64).unwrap(),
+                        1 => ProblemSpec::one_d(256).unwrap(),
+                        _ => ProblemSpec::two_d(4, 16).unwrap(),
+                    };
+                    let n = spec.total_elems();
+                    let (re, im) = (rng.real_vec(n), rng.real_vec(n));
+                    let (got_re, got_im) =
+                        client.transform(&spec, Direction::Forward, &re, &im).unwrap();
+                    let (want_re, want_im) = local_bits(&spec, Direction::Forward, &re, &im);
+                    // Any cross-wiring of responses between connections or
+                    // within a connection shows up as a bit mismatch here.
+                    assert_bits_equal(&want_re, &got_re, "re");
+                    assert_bits_equal(&want_im, &got_im, "im");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    assert_eq!(metrics.requests_done.get(), (clients * per_client) as u64);
+    assert_eq!(metrics.requests_shed.get(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_requests_answered_in_order() {
+    let server = start(native_cfg());
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+
+    // Write 5 requests back-to-back before reading anything; the handler
+    // must answer them strictly in arrival order.
+    let mut rng = Xoshiro256::seeded(0x0A0B);
+    let spec = ProblemSpec::one_d(64).unwrap();
+    let mut expected = Vec::new();
+    for _ in 0..5 {
+        let (re, im) = (rng.real_vec(64), rng.real_vec(64));
+        let frame = proto::encode_request(&spec, Direction::Forward, &re, &im).unwrap();
+        proto::write_frame(&mut stream, &frame).unwrap();
+        expected.push(local_bits(&spec, Direction::Forward, &re, &im));
+    }
+    for (i, (want_re, want_im)) in expected.iter().enumerate() {
+        let (kind, body) = proto::read_frame(&mut stream, 1 << 20).unwrap().unwrap();
+        assert_eq!(kind, FrameKind::Response);
+        match proto::decode_response_body(&body).unwrap() {
+            WireResponse::Ok { re, im } => {
+                assert_bits_equal(want_re, &re, &format!("response {i} re"));
+                assert_bits_equal(want_im, &im, &format!("response {i} im"));
+            }
+            other => panic!("response {i}: {other:?}"),
+        }
+    }
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// admission control
+
+#[test]
+fn inflight_cap_zero_sheds_every_request_without_hanging() {
+    let mut cfg = native_cfg();
+    cfg.net.max_inflight = 0; // maintenance mode: shed all transforms
+    let server = start(cfg);
+    let metrics = server.metrics();
+    let mut client = connect(&server);
+
+    let spec = ProblemSpec::one_d(64).unwrap();
+    for _ in 0..4 {
+        match client.transform(&spec, Direction::Forward, &[1.0; 64], &[0.0; 64]) {
+            Err(NetError::Remote { status: Status::Overloaded, .. }) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+    assert_eq!(metrics.requests_shed.get(), 4, "every shed is counted");
+    // Health and stats are not transforms: still served while shedding.
+    assert!(client.health().unwrap().starts_with("ok"));
+    assert!(client.stats().unwrap().contains("shed=4"));
+    server.shutdown();
+}
+
+#[test]
+fn saturating_inflight_cap_sheds_with_typed_response() {
+    let mut cfg = native_cfg();
+    cfg.workers = 1;
+    cfg.net.max_inflight = 1;
+    let server = start(cfg);
+    let addr = server.local_addr();
+    let metrics = server.metrics();
+
+    // A slow lane: repeated large transforms that hold the single
+    // in-flight slot for their whole execution.
+    let slow_ok = Arc::new(AtomicUsize::new(0));
+    let slow_counter = slow_ok.clone();
+    let slow = std::thread::spawn(move || {
+        let mut client = NetClient::connect(addr).unwrap();
+        client.set_timeout(Some(Duration::from_secs(25))).unwrap();
+        let spec = ProblemSpec::one_d(1 << 19).unwrap();
+        let mut rng = Xoshiro256::seeded(0x510);
+        let (re, im) = (rng.real_vec(1 << 19), rng.real_vec(1 << 19));
+        let deadline = Instant::now() + DEADLINE;
+        while slow_counter.load(Ordering::Acquire) < 2 && Instant::now() < deadline {
+            match client.transform(&spec, Direction::Forward, &re, &im) {
+                Ok(_) => {
+                    slow_counter.fetch_add(1, Ordering::AcqRel);
+                }
+                // The fast lane stole the slot; that IS the contention
+                // this test wants. Try again.
+                Err(NetError::Remote { status: Status::Overloaded, .. }) => {}
+                Err(e) => panic!("slow lane: {e}"),
+            }
+        }
+    });
+
+    // A fast lane hammering small requests until it observes a shed.
+    let mut client = connect(&server);
+    let spec = ProblemSpec::one_d(64).unwrap();
+    let deadline = Instant::now() + DEADLINE;
+    let mut saw_overloaded = false;
+    while !saw_overloaded && Instant::now() < deadline {
+        match client.transform(&spec, Direction::Forward, &[1.0; 64], &[0.0; 64]) {
+            Ok(_) => {}
+            Err(NetError::Remote { status: Status::Overloaded, .. }) => saw_overloaded = true,
+            Err(e) => panic!("fast lane: {e}"),
+        }
+    }
+    slow.join().expect("slow lane thread");
+    assert!(saw_overloaded, "saturation never produced an Overloaded response");
+    assert!(metrics.requests_shed.get() >= 1, "sheds must be counted");
+    assert!(slow_ok.load(Ordering::Acquire) >= 2, "slow lane must still make progress");
+    server.shutdown();
+}
+
+#[test]
+fn connection_cap_refuses_with_overloaded() {
+    let mut cfg = native_cfg();
+    cfg.net.max_connections = 1;
+    let server = start(cfg);
+    let metrics = server.metrics();
+
+    let mut first = connect(&server);
+    let spec = ProblemSpec::one_d(64).unwrap();
+    // Round-trip proves the first connection holds the only slot.
+    first.transform(&spec, Direction::Forward, &[1.0; 64], &[0.0; 64]).unwrap();
+
+    let mut second = connect(&server);
+    match second.transform(&spec, Direction::Forward, &[1.0; 64], &[0.0; 64]) {
+        Err(NetError::Remote { status: Status::Overloaded, .. }) => {}
+        other => panic!("expected connection-cap Overloaded, got {other:?}"),
+    }
+    assert!(metrics.connections_refused.get() >= 1);
+
+    // Releasing the first connection frees the slot for a newcomer.
+    drop(first);
+    drop(second);
+    let deadline = Instant::now() + DEADLINE;
+    loop {
+        let mut retry = connect(&server);
+        match retry.transform(&spec, Direction::Forward, &[1.0; 64], &[0.0; 64]) {
+            Ok(_) => break,
+            Err(NetError::Remote { status: Status::Overloaded, .. })
+                if Instant::now() < deadline =>
+            {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            other => panic!("slot never released: {other:?}"),
+        }
+    }
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// malformed traffic
+
+#[test]
+fn malformed_frame_rejected_and_daemon_survives() {
+    let server = start(native_cfg());
+    let metrics = server.metrics();
+
+    let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    // One header's worth of garbage: the server reads it, rejects it, and
+    // closes with nothing left unread (clean FIN, not an RST).
+    use std::io::Write;
+    raw.write_all(&[0xde; HEADER_LEN]).unwrap();
+    raw.flush().unwrap();
+    let (kind, body) = proto::read_frame(&mut raw, 1 << 20).unwrap().expect("a reply");
+    assert_eq!(kind, FrameKind::Response);
+    match proto::decode_response_body(&body).unwrap() {
+        WireResponse::Err { status: Status::BadFrame, .. } => {}
+        other => panic!("expected BadFrame, got {other:?}"),
+    }
+    // The connection is closed after a framing error…
+    assert!(proto::read_frame(&mut raw, 1 << 20).unwrap().is_none());
+    assert!(metrics.frames_malformed.get() >= 1);
+
+    // …but the daemon itself keeps serving new connections.
+    let mut client = connect(&server);
+    let spec = ProblemSpec::one_d(64).unwrap();
+    let mut rng = Xoshiro256::seeded(7);
+    let (re, im) = (rng.real_vec(64), rng.real_vec(64));
+    let (got_re, got_im) = client.transform(&spec, Direction::Forward, &re, &im).unwrap();
+    let (want_re, want_im) = local_bits(&spec, Direction::Forward, &re, &im);
+    assert_bits_equal(&want_re, &got_re, "re after garbage");
+    assert_bits_equal(&want_im, &got_im, "im after garbage");
+    server.shutdown();
+}
+
+#[test]
+fn unplannable_descriptor_keeps_connection_open() {
+    let server = start(native_cfg());
+    let mut client = connect(&server);
+    // 2-D r2c is structurally valid on the wire but has no kernel: the
+    // daemon must answer Unsupported and keep the connection usable.
+    let frame = {
+        let spec = ProblemSpec::two_d(4, 8).unwrap();
+        let mut f =
+            proto::encode_request(&spec, Direction::Forward, &[0.0; 32], &[0.0; 32]).unwrap();
+        f[HEADER_LEN + 17] = 2; // domain byte → r2c
+        f
+    };
+    match client.send_raw(&frame) {
+        Ok(WireResponse::Err { status: Status::Unsupported, .. }) => {}
+        other => panic!("expected Unsupported, got {other:?}"),
+    }
+    // Same connection still serves valid work.
+    let spec = ProblemSpec::one_d(64).unwrap();
+    client.transform(&spec, Direction::Forward, &[1.0; 64], &[0.0; 64]).unwrap();
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// graceful drain
+
+#[test]
+fn shutdown_answers_in_flight_request_then_closes_listener() {
+    let mut cfg = native_cfg();
+    cfg.workers = 1;
+    let server = start(cfg);
+    let addr = server.local_addr();
+    let metrics = server.metrics();
+
+    let worker = std::thread::spawn(move || {
+        let mut client = NetClient::connect(addr).unwrap();
+        client.set_timeout(Some(Duration::from_secs(25))).unwrap();
+        let n = 1 << 20;
+        let spec = ProblemSpec::one_d(n).unwrap();
+        let mut rng = Xoshiro256::seeded(0xD3A1);
+        let (re, im) = (rng.real_vec(n), rng.real_vec(n));
+        let got = client.transform(&spec, Direction::Forward, &re, &im);
+        (spec, re, im, got)
+    });
+
+    // Wait until the request is demonstrably inside the service…
+    let deadline = Instant::now() + DEADLINE;
+    while metrics.requests_in.get() < 1 {
+        assert!(Instant::now() < deadline, "request never arrived");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // …then drain. Shutdown must block until the response went out.
+    server.shutdown();
+
+    let (spec, re, im, got) = worker.join().expect("client thread");
+    let (got_re, got_im) = got.expect("in-flight request must be answered during drain");
+    let (want_re, want_im) = local_bits(&spec, Direction::Forward, &re, &im);
+    assert_bits_equal(&want_re, &got_re, "drained re");
+    assert_bits_equal(&want_im, &got_im, "drained im");
+
+    // The listener is gone: fresh connections are refused.
+    assert!(
+        TcpStream::connect_timeout(&addr, Duration::from_millis(500)).is_err(),
+        "listener must be closed after shutdown"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// health / stats
+
+#[test]
+fn health_and_stats_render_service_state() {
+    let server = start(native_cfg());
+    let mut client = connect(&server);
+
+    let health = client.health().unwrap();
+    assert!(health.starts_with("ok "), "health line: {health}");
+    assert!(health.contains("active_connections="), "health line: {health}");
+
+    let spec = ProblemSpec::one_d(64).unwrap();
+    client.transform(&spec, Direction::Forward, &[1.0; 64], &[0.0; 64]).unwrap();
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("requests: in=1"), "stats:\n{stats}");
+    assert!(stats.contains("net: conns active=1 accepted=1"), "stats:\n{stats}");
+    assert!(stats.contains("uptime:"), "stats:\n{stats}");
+    server.shutdown();
+}
