@@ -227,6 +227,83 @@ fn main() {
         );
     }
 
+    // ---- SIMD kernel gates (PR 7 acceptance) ----------------------------
+    // (a) The radix-8 SIMD Stockham must beat the radix-4 baseline ≥1.2x
+    //     at n = 2^16, ONE thread (isolates the kernel win from the pool).
+    // (b) The vectorized planar↔interleaved conversions must beat the
+    //     scalar path ≥1.5x at n = 2^20 on AVX2 hosts (informational on
+    //     scalar/NEON hosts — lane width and memory systems differ).
+    {
+        use memfft::fft::simd::{self, MaxRadix, SimdLevel};
+        use memfft::fft::Stockham;
+
+        let reps = if quick { 3 } else { 7 };
+        let n = 1usize << 16;
+        let input = rng.complex_vec(n);
+        let radix8 = Stockham::with_config(n, MaxRadix::Eight, simd::detected());
+        let radix4 = FftPlan::new(n, Algorithm::Radix4);
+        let mut buf = input.clone();
+        let (t8, t4) = pool::with_threads(1, || {
+            let t8 = min_ns(reps, || {
+                buf.copy_from_slice(&input);
+                radix8.forward(&mut buf);
+                memfft::bench::bb(&buf);
+            });
+            let t4 = min_ns(reps, || {
+                buf.copy_from_slice(&input);
+                radix4.forward(&mut buf);
+                memfft::bench::bb(&buf);
+            });
+            (t8, t4)
+        });
+        let speedup = t4 / t8;
+        println!(
+            "radix-8 gate @ 2^16, 1 thread: radix4 {:.3} ms vs stockham8+{} {:.3} ms -> {speedup:.2}x",
+            t4 / 1e6,
+            simd::detected().name(),
+            t8 / 1e6
+        );
+        if simd::detected() == SimdLevel::Scalar {
+            println!("(scalar host: radix-8 gate informational)");
+        } else {
+            assert!(
+                speedup >= 1.2,
+                "radix-8 SIMD Stockham must be >=1.2x over radix-4 at 2^16 single-thread, got {speedup:.2}x"
+            );
+        }
+
+        let n = 1usize << 20;
+        let re = rng.real_vec(n);
+        let im = rng.real_vec(n);
+        let mut inter = vec![C32::ZERO; n];
+        let mut out_re = vec![0f32; n];
+        let mut out_im = vec![0f32; n];
+        let mut roundtrip = |lvl: SimdLevel| {
+            min_ns(reps, || {
+                simd::interleave(lvl, &re, &im, &mut inter);
+                simd::deinterleave(lvl, &inter, &mut out_re, &mut out_im);
+                memfft::bench::bb(&out_re);
+            })
+        };
+        let t_scalar = roundtrip(SimdLevel::Scalar);
+        let t_vector = roundtrip(simd::detected());
+        let conv_speedup = t_scalar / t_vector;
+        println!(
+            "conversion gate @ 2^20: scalar {:.3} ms vs {} {:.3} ms -> {conv_speedup:.2}x",
+            t_scalar / 1e6,
+            simd::detected().name(),
+            t_vector / 1e6
+        );
+        if simd::detected() == SimdLevel::Avx2 {
+            assert!(
+                conv_speedup >= 1.5,
+                "AVX2 planar<->interleaved must be >=1.5x over scalar at 2^20, got {conv_speedup:.2}x"
+            );
+        } else {
+            println!("(non-AVX2 host: conversion gate informational)");
+        }
+    }
+
     bench.write_csv("fft_library.csv").ok();
     println!("wrote target/bench-results/fft_library.csv");
 }

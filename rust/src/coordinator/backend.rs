@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 
 use super::request::{Direction, ServiceError};
 use crate::config::ServiceConfig;
+use crate::fft::simd;
 use crate::fft::{Algorithm, Domain, FftError, PlanCache, ProblemSpec, Shape, Transform};
 use crate::gpusim::{self, GpuDescriptor, TiledOptions};
 use crate::runtime::Engine;
@@ -230,19 +231,18 @@ impl Backend for NativeBackend {
         let batch = spec.batch();
 
         // Planar → interleaved, once per batch (not per request), chunked
-        // across the worker pool (pure data movement — any split is
-        // bit-identical). Serial path writes each element exactly once;
-        // the chunked path resizes without clearing (the chunk writers
-        // cover every element), so steady state pays no redundant memset.
+        // across the worker pool and vectorized per chunk via `fft::simd`
+        // (pure data movement — any split and any lane width are
+        // bit-identical). The buffer resizes without clearing beyond
+        // growth: the writers cover every element.
+        let lvl = simd::active();
+        self.input.resize(total, C32::ZERO);
         if pool::effective_chunks(batch) <= 1 {
-            self.input.clear();
-            self.input.extend(re.iter().zip(im).map(|(&a, &b)| C32::new(a, b)));
+            simd::interleave(lvl, re, im, &mut self.input);
         } else {
-            self.input.resize(total, C32::ZERO);
             pool::for_each_chunk(&mut self.input, n, |offset, chunk| {
-                for (i, c) in chunk.iter_mut().enumerate() {
-                    *c = C32::new(re[offset + i], im[offset + i]);
-                }
+                let end = offset + chunk.len();
+                simd::interleave(lvl, &re[offset..end], &im[offset..end], chunk);
             });
         }
         self.output.resize(total, C32::ZERO);
@@ -264,27 +264,16 @@ impl Backend for NativeBackend {
         };
         run.map_err(|e| BackendError::Exec(e.to_string()))?;
 
-        // Interleaved → planar, once per batch, pool-chunked like the
-        // gather above (single-writer push loop when serial).
-        let mut out_re;
-        let mut out_im;
+        // Interleaved → planar, once per batch, pool-chunked and
+        // SIMD-widened like the gather above.
+        let mut out_re = vec![0f32; total];
+        let mut out_im = vec![0f32; total];
         let interleaved = &self.output;
         if pool::effective_chunks(batch) <= 1 {
-            out_re = Vec::with_capacity(total);
-            out_im = Vec::with_capacity(total);
-            for c in interleaved {
-                out_re.push(c.re);
-                out_im.push(c.im);
-            }
+            simd::deinterleave(lvl, interleaved, &mut out_re, &mut out_im);
         } else {
-            out_re = vec![0f32; total];
-            out_im = vec![0f32; total];
             pool::for_each_chunk2(&mut out_re, &mut out_im, n, |offset, rc, ic| {
-                let src = &interleaved[offset..offset + rc.len()];
-                for ((r, i), c) in rc.iter_mut().zip(ic.iter_mut()).zip(src) {
-                    *r = c.re;
-                    *i = c.im;
-                }
+                simd::deinterleave(lvl, &interleaved[offset..offset + rc.len()], rc, ic);
             });
         }
         Ok(BatchOutput {

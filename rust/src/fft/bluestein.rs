@@ -73,11 +73,12 @@ impl Bluestein {
             a[j] = x[j] * self.chirp[j];
         }
         a[self.n..].fill(C32::ZERO);
-        // Circular convolution with the kernel via the pow2 FFT.
+        // Circular convolution with the kernel via the pow2 FFT. The
+        // pointwise kernel multiply uses the plan's SIMD level (captured at
+        // construction, like the embedded Stockham) — the vector complex
+        // multiply is bit-identical to the scalar one by contract.
         self.fft.forward_with_scratch(a, fft_scratch);
-        for (v, k) in a.iter_mut().zip(self.kernel_f.iter()) {
-            *v *= *k;
-        }
+        super::simd::cmul_pointwise(self.fft.simd_level(), a, &self.kernel_f);
         // Inverse FFT (conjugation trick, 1/m scaling).
         for v in a.iter_mut() {
             *v = v.conj();

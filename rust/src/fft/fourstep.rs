@@ -18,6 +18,7 @@
 //! `python/compile/kernels/fourstep.py`, and `gpusim::schedules::tiled`
 //! replays its traffic.
 
+use super::simd;
 use super::stockham::Stockham;
 use super::transform::{check_inplace, FftError, Transform};
 use crate::util::complex::C32;
@@ -240,8 +241,13 @@ pub fn transpose(src: &[C32], dst: &mut [C32], rows: usize, cols: usize) {
 /// Transpose the source-column strip `[c0, c0 + dst.len()/rows)` of the
 /// rows × cols matrix `src` into `dst` (whole destination rows). Also the
 /// strip-gather primitive of the memtier blocked passes.
+///
+/// Each 32×32 cache block is copied through [`simd::transpose_block`]
+/// (register-tiled on AVX2/NEON, scalar remainder) — pure data movement,
+/// so output bits do not depend on the active SIMD level.
 pub(crate) fn transpose_tile(src: &[C32], dst: &mut [C32], rows: usize, cols: usize, c0: usize) {
     const B: usize = 32;
+    let lvl = simd::active();
     let ncols = dst.len() / rows;
     let mut cb = 0;
     while cb < ncols {
@@ -249,11 +255,13 @@ pub(crate) fn transpose_tile(src: &[C32], dst: &mut [C32], rows: usize, cols: us
         let mut rb = 0;
         while rb < rows {
             let re = (rb + B).min(rows);
-            for c in cb..ce {
-                for r in rb..re {
-                    dst[c * rows + r] = src[r * cols + c0 + c];
-                }
-            }
+            simd::transpose_block(
+                lvl,
+                &src[rb * cols + c0 + cb..],
+                &mut dst[cb * rows + rb..],
+                (cols, rows),
+                (re - rb, ce - cb),
+            );
             rb = re;
         }
         cb = ce;

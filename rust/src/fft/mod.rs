@@ -2,12 +2,21 @@
 //! unified behind the [`Transform`] execution API and planned through the
 //! descriptor entry point [`spec::plan`].
 //!
-//! Every kernel — iterative radix-2 DIT, Stockham autosort, mixed radix-4,
-//! recursive split-radix, Bailey four-step (the paper's method on CPU),
-//! Bluestein for arbitrary sizes, real-input RFFT and the 2-D transform —
-//! implements the same trait: out-of-place fallible `forward_into` /
-//! `inverse_into`, batched `forward_batch_into`, and `scratch_len()` so
-//! callers own scratch reuse.
+//! Every kernel — iterative radix-2 DIT, multi-radix Stockham autosort
+//! (radix-8/4/2, SIMD-dispatched), mixed radix-4, recursive split-radix,
+//! Bailey four-step (the paper's method on CPU), Bluestein for arbitrary
+//! sizes, real-input RFFT and the 2-D transform — implements the same
+//! trait: out-of-place fallible `forward_into` / `inverse_into`, batched
+//! `forward_batch_into`, and `scratch_len()` so callers own scratch reuse.
+//!
+//! **SIMD kernel layer** ([`simd`], DESIGN.md §11): runtime feature
+//! detection (AVX2 on x86_64, NEON on aarch64, scalar elsewhere or under
+//! `MEMFFT_SIMD=off`) dispatches the butterfly groups, pointwise twiddle
+//! multiplies, planar↔interleaved conversions and transpose tiles the
+//! kernels above are built from. Vector and scalar paths run the same IEEE
+//! operation sequence (no FMA), so results are bit-for-bit identical at
+//! every level — the determinism contract is per configuration `(radix,
+//! SIMD level)`, and [`PlanCache`] keys on it.
 //!
 //! **Plan by problem shape.** A [`ProblemSpec`] describes the whole
 //! problem — `Shape` (1-D / 2-D), `Domain` (complex / real), batch count,
@@ -83,6 +92,7 @@ pub mod radix2;
 pub mod radix4;
 pub mod real;
 pub mod scratch;
+pub mod simd;
 pub mod spec;
 pub mod splitradix;
 pub mod stockham;

@@ -153,12 +153,16 @@ impl FftPlan {
 
     /// The size heuristic (mirrors FFTW_ESTIMATE's spirit), retuned from
     /// measurement on this host (§Perf iter 3, see EXPERIMENTS.md): the
-    /// in-place bit-reversed radix-2 wins up to ~2^18 (cache-resident);
-    /// beyond that the working set is DRAM-resident and the memory-tiered
-    /// blocked path (two fused slow-memory passes instead of `log n`
-    /// level sweeps — the paper's core argument, applied to the host
-    /// hierarchy) replaces the PR-2 radix-4 pick (`benches/fft_library`
-    /// gates the ≥1.25x win at 2^20). Bluestein is the only direct option
+    /// multi-radix SIMD Stockham (radix-8 level loop + AVX2/NEON
+    /// butterflies, DESIGN.md §11 — `benches/fft_library` gates its
+    /// ≥1.2x win over the radix-4 schedule at 2^16) wins while the
+    /// working set is cache-resident (≤ 2^18), replacing the PR-2/PR-3
+    /// bit-reversed radix-2 pick; beyond that the working set is
+    /// DRAM-resident and the memory-tiered blocked path (two fused
+    /// slow-memory passes instead of `log n` level sweeps — the paper's
+    /// core argument, applied to the host hierarchy — whose leaves are
+    /// the same Stockham kernel) takes over (`benches/fft_library` gates
+    /// the ≥1.25x win at 2^20). Bluestein is the only direct option
     /// for non-powers-of-two. The four-step stays available explicitly
     /// (it is the paper's *GPU* schedule; its un-fused CPU realization
     /// pays three transposes the GPU does not).
@@ -166,7 +170,7 @@ impl FftPlan {
         if !is_pow2(n) {
             Algorithm::Bluestein
         } else if n <= 1 << 18 {
-            Algorithm::Radix2
+            Algorithm::Stockham
         } else {
             Algorithm::MemTier
         }
@@ -298,7 +302,11 @@ impl Transform for FftPlan {
 /// algorithm, plus the effective `config::cache` tile when (and only
 /// when) a resolved component is tile-dependent — a caller inside a
 /// different `with_tile`/`set_tile` scope gets a plan built for *its*
-/// tile, never a stale one. Batch and placement are not part of the key:
+/// tile, never a stale one — plus the resolved `(MaxRadix, SimdLevel)`
+/// kernel configuration when a component runs the Stockham kernel
+/// (`fft::simd` overrides are baked into plans at construction, so they
+/// key the cache the same way the tile does). Batch and placement are
+/// not part of the key:
 /// cached plans are per-transform and serve every execution face, so
 /// `get(n, Auto)` and `get(n, <its concrete winner>)` — and any batch of
 /// either — share one memoized [`Plan`].
@@ -428,10 +436,20 @@ impl Planner {
             }
             timings.push((algo, total_ns / self.reps.max(1) as f64));
         }
-        timings.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        rank_timings(&mut timings);
         let best = timings[0].0;
         (Arc::new(FftPlan::new(n, best)), timings)
     }
+}
+
+/// Sort measured timings fastest-first with a *total* order on the ns
+/// values. `partial_cmp(..).unwrap()` here once panicked the planner on
+/// a NaN timing (clock anomalies / zero-duration quantization can
+/// produce one); `f64::total_cmp` instead orders every NaN after every
+/// real timing, so an anomalous candidate loses the ranking rather than
+/// poisoning the plan.
+fn rank_timings(timings: &mut [(Algorithm, f64)]) {
+    timings.sort_by(|a, b| a.1.total_cmp(&b.1));
 }
 
 #[cfg(test)]
@@ -457,14 +475,14 @@ mod tests {
 
     #[test]
     fn auto_resolves_by_size() {
-        // Heuristic: radix2 while cache-resident (≤ 2^18), the memory-
-        // tiered blocked path for DRAM-resident sizes, bluestein for
-        // non-powers-of-two.
-        assert_eq!(FftPlan::new(256, Algorithm::Auto).algorithm(), Algorithm::Radix2);
-        assert_eq!(FftPlan::new(1 << 14, Algorithm::Auto).algorithm(), Algorithm::Radix2);
+        // Heuristic: the SIMD multi-radix stockham while cache-resident
+        // (≤ 2^18), the memory-tiered blocked path for DRAM-resident
+        // sizes, bluestein for non-powers-of-two.
+        assert_eq!(FftPlan::new(256, Algorithm::Auto).algorithm(), Algorithm::Stockham);
+        assert_eq!(FftPlan::new(1 << 14, Algorithm::Auto).algorithm(), Algorithm::Stockham);
         assert_eq!(FftPlan::new(1 << 20, Algorithm::Auto).algorithm(), Algorithm::MemTier);
         assert_eq!(FftPlan::new(100, Algorithm::Auto).algorithm(), Algorithm::Bluestein);
-        assert_eq!(FftPlan::resolve(256, Algorithm::Stockham), Algorithm::Stockham);
+        assert_eq!(FftPlan::resolve(256, Algorithm::Radix2), Algorithm::Radix2);
     }
 
     #[test]
@@ -487,15 +505,15 @@ mod tests {
         let a = cache.get(512, Algorithm::Auto);
         let b = cache.get(512, Algorithm::Auto);
         assert!(Arc::ptr_eq(&a, &b));
-        // Auto resolves to Radix2 at 512 — the concrete request must hit
-        // the SAME memoized plan, not a duplicate under a second key.
-        let c = cache.get(512, Algorithm::Radix2);
+        // Auto resolves to Stockham at 512 — the concrete request must
+        // hit the SAME memoized plan, not a duplicate under a second key.
+        let c = cache.get(512, Algorithm::Stockham);
         assert!(Arc::ptr_eq(&a, &c), "Auto and its winner must share one plan");
         assert_eq!(cache.len(), 1);
         assert!(cache.contains(512, Algorithm::Auto));
-        assert!(cache.contains(512, Algorithm::Radix2));
+        assert!(cache.contains(512, Algorithm::Stockham));
         // A genuinely different algorithm is a different plan.
-        cache.get(512, Algorithm::Stockham);
+        cache.get(512, Algorithm::Radix2);
         assert_eq!(cache.len(), 2);
     }
 
@@ -548,6 +566,61 @@ mod tests {
         let mut got = x;
         plan.forward(&mut got);
         assert!(max_abs_diff(&got, &expect) < 1e-2);
+    }
+
+    /// Regression: a NaN timing used to hit `partial_cmp(..).unwrap()`
+    /// and panic the planner mid-plan. With `total_cmp` the anomalous
+    /// candidate sorts after every real timing and the ranking survives.
+    #[test]
+    fn rank_timings_survives_nan() {
+        let mut timings = vec![
+            (Algorithm::Radix2, 120.0),
+            (Algorithm::Stockham, f64::NAN),
+            (Algorithm::Radix4, 80.0),
+            (Algorithm::FourStep, f64::NAN),
+            (Algorithm::SplitRadix, 100.0),
+        ];
+        rank_timings(&mut timings); // must not panic
+        assert_eq!(timings[0].0, Algorithm::Radix4);
+        assert_eq!(timings[1].0, Algorithm::SplitRadix);
+        assert_eq!(timings[2].0, Algorithm::Radix2);
+        // NaN candidates lose: they rank strictly after every real timing.
+        assert!(timings[3].1.is_nan() && timings[4].1.is_nan());
+        // Degenerate but possible on coarse clocks: every candidate NaN.
+        let mut all_nan = vec![(Algorithm::Radix2, f64::NAN), (Algorithm::Stockham, f64::NAN)];
+        rank_timings(&mut all_nan); // still no panic, any order is valid
+        assert_eq!(all_nan.len(), 2);
+    }
+
+    /// The cache key carries the resolved (radix, lane) kernel
+    /// configuration for Stockham-backed plans: a plan built under a
+    /// forced-scalar/radix-2 scope must not be served to the default
+    /// configuration, and vice versa.
+    #[test]
+    fn cache_keys_on_kernel_config() {
+        use crate::fft::simd::{self, MaxRadix, SimdLevel};
+        let cache = PlanCache::new();
+        let default_cfg = cache.get(1024, Algorithm::Stockham);
+        let forced = simd::with_radix(MaxRadix::Two, || {
+            simd::with_level(SimdLevel::Scalar, || cache.get(1024, Algorithm::Stockham))
+        });
+        let again = simd::with_radix(MaxRadix::Two, || {
+            simd::with_level(SimdLevel::Scalar, || cache.get(1024, Algorithm::Stockham))
+        });
+        assert!(Arc::ptr_eq(&forced, &again), "same config reuses the memoized plan");
+        if simd::radix() != MaxRadix::Two || simd::active() != SimdLevel::Scalar {
+            assert!(
+                !Arc::ptr_eq(&default_cfg, &forced),
+                "different kernel configs need different plans"
+            );
+        }
+        // Algorithms that never touch the Stockham kernel ignore the
+        // configuration entirely.
+        let r = cache.get(512, Algorithm::Radix2);
+        let r2 = simd::with_radix(MaxRadix::Two, || {
+            simd::with_level(SimdLevel::Scalar, || cache.get(512, Algorithm::Radix2))
+        });
+        assert!(Arc::ptr_eq(&r, &r2));
     }
 
     #[test]

@@ -1,0 +1,249 @@
+//! NEON kernels (2 complex f32 per 128-bit register).
+//!
+//! Same bit-for-bit discipline as `x86.rs`: plain `vmulq`/`vaddq`/
+//! `vsubq` only — never `vmlaq`/`vfmaq` (those fuse on AArch64) — with
+//! `addsub` emulated as `a + (b with even-lane signs flipped)`, which is
+//! exactly `a - b` on even lanes. Each body handles the aligned prefix
+//! and returns how many elements it consumed; the dispatcher runs the
+//! scalar loop for the rest.
+//!
+//! NEON is part of the AArch64 baseline ISA, so no runtime check is
+//! needed beyond compiling for aarch64. Geometry is asserted in-bounds
+//! by the dispatcher before the call.
+
+use core::arch::aarch64::*;
+
+use super::{GroupGeom, W8_1, W8_3};
+use crate::util::complex::C32;
+
+/// Complex f32 elements per register.
+const LANES: usize = 2;
+
+const SIGN_ODD: [u32; 4] = [0, 0x8000_0000, 0, 0x8000_0000];
+const SIGN_EVEN: [u32; 4] = [0x8000_0000, 0, 0x8000_0000, 0];
+
+/// Flip the sign of the odd (imaginary) lanes. Exact.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn neg_odd(v: float32x4_t) -> float32x4_t {
+    let m = vld1q_u32(SIGN_ODD.as_ptr());
+    vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(v), m))
+}
+
+/// Even lanes `a - b`, odd lanes `a + b` (the AVX2 `addsub` shape).
+/// `a + (-b) == a - b` for every input, so this is bit-exact.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn addsub(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+    let m = vld1q_u32(SIGN_EVEN.as_ptr());
+    vaddq_f32(a, vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(b), m)))
+}
+
+/// Swap (re, im) within each complex slot.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn swap_pairs(z: float32x4_t) -> float32x4_t {
+    vrev64q_f32(z)
+}
+
+/// Multiply 2 complex lanes by a broadcast twiddle; same op DAG as the
+/// scalar/AVX2 complex multiply (mul, mul, addsub).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn cmul(z: float32x4_t, wre: float32x4_t, wim: float32x4_t) -> float32x4_t {
+    addsub(vmulq_f32(z, wre), vmulq_f32(swap_pairs(z), wim))
+}
+
+/// Multiply 2 complex lanes by `-i`: (re, im) -> (im, -re). Exact.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn mul_neg_i(z: float32x4_t) -> float32x4_t {
+    neg_odd(swap_pairs(z))
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn radix2(w: C32, src: &[C32], dst: &mut [C32], g: GroupGeom) -> usize {
+    let GroupGeom { base, stride, r, .. } = g;
+    let sp = src.as_ptr() as *const f32;
+    let dp = dst.as_mut_ptr() as *mut f32;
+    let wre = vdupq_n_f32(w.re);
+    let wim = vdupq_n_f32(w.im);
+    let mut k = 0;
+    while k + LANES <= r {
+        let a = vld1q_f32(sp.add(2 * k));
+        let b = cmul(vld1q_f32(sp.add(2 * (r + k))), wre, wim);
+        vst1q_f32(dp.add(2 * (base + k)), vaddq_f32(a, b));
+        vst1q_f32(dp.add(2 * (base + stride + k)), vsubq_f32(a, b));
+        k += LANES;
+    }
+    k
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn radix4(ws: &[C32; 3], src: &[C32], dst: &mut [C32], g: GroupGeom) -> usize {
+    let GroupGeom { base, stride, r, .. } = g;
+    let sp = src.as_ptr() as *const f32;
+    let dp = dst.as_mut_ptr() as *mut f32;
+    let mut wre = [vdupq_n_f32(0.0); 3];
+    let mut wim = [vdupq_n_f32(0.0); 3];
+    for p in 0..3 {
+        wre[p] = vdupq_n_f32(ws[p].re);
+        wim[p] = vdupq_n_f32(ws[p].im);
+    }
+    let mut k = 0;
+    while k + LANES <= r {
+        let t0 = vld1q_f32(sp.add(2 * k));
+        let t1 = cmul(vld1q_f32(sp.add(2 * (r + k))), wre[0], wim[0]);
+        let t2 = cmul(vld1q_f32(sp.add(2 * (2 * r + k))), wre[1], wim[1]);
+        let t3 = cmul(vld1q_f32(sp.add(2 * (3 * r + k))), wre[2], wim[2]);
+        let a0 = vaddq_f32(t0, t2);
+        let a1 = vsubq_f32(t0, t2);
+        let a2 = vaddq_f32(t1, t3);
+        let a3 = mul_neg_i(vsubq_f32(t1, t3));
+        vst1q_f32(dp.add(2 * (base + k)), vaddq_f32(a0, a2));
+        vst1q_f32(dp.add(2 * (base + stride + k)), vaddq_f32(a1, a3));
+        vst1q_f32(dp.add(2 * (base + 2 * stride + k)), vsubq_f32(a0, a2));
+        vst1q_f32(dp.add(2 * (base + 3 * stride + k)), vsubq_f32(a1, a3));
+        k += LANES;
+    }
+    k
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn radix8(ws: &[C32; 7], src: &[C32], dst: &mut [C32], g: GroupGeom) -> usize {
+    let GroupGeom { base, stride, r, .. } = g;
+    let sp = src.as_ptr() as *const f32;
+    let dp = dst.as_mut_ptr() as *mut f32;
+    let mut wre = [vdupq_n_f32(0.0); 7];
+    let mut wim = [vdupq_n_f32(0.0); 7];
+    for p in 0..7 {
+        wre[p] = vdupq_n_f32(ws[p].re);
+        wim[p] = vdupq_n_f32(ws[p].im);
+    }
+    let w81re = vdupq_n_f32(W8_1.re);
+    let w81im = vdupq_n_f32(W8_1.im);
+    let w83re = vdupq_n_f32(W8_3.re);
+    let w83im = vdupq_n_f32(W8_3.im);
+    let mut k = 0;
+    while k + LANES <= r {
+        let t0 = vld1q_f32(sp.add(2 * k));
+        let t1 = cmul(vld1q_f32(sp.add(2 * (r + k))), wre[0], wim[0]);
+        let t2 = cmul(vld1q_f32(sp.add(2 * (2 * r + k))), wre[1], wim[1]);
+        let t3 = cmul(vld1q_f32(sp.add(2 * (3 * r + k))), wre[2], wim[2]);
+        let t4 = cmul(vld1q_f32(sp.add(2 * (4 * r + k))), wre[3], wim[3]);
+        let t5 = cmul(vld1q_f32(sp.add(2 * (5 * r + k))), wre[4], wim[4]);
+        let t6 = cmul(vld1q_f32(sp.add(2 * (6 * r + k))), wre[5], wim[5]);
+        let t7 = cmul(vld1q_f32(sp.add(2 * (7 * r + k))), wre[6], wim[6]);
+
+        let a0 = vaddq_f32(t0, t4);
+        let a1 = vsubq_f32(t0, t4);
+        let a2 = vaddq_f32(t2, t6);
+        let a3 = mul_neg_i(vsubq_f32(t2, t6));
+        let a4 = vaddq_f32(t1, t5);
+        let a5 = vsubq_f32(t1, t5);
+        let a6 = vaddq_f32(t3, t7);
+        let a7 = mul_neg_i(vsubq_f32(t3, t7));
+
+        let e0 = vaddq_f32(a0, a2);
+        let e1 = vaddq_f32(a1, a3);
+        let e2 = vsubq_f32(a0, a2);
+        let e3 = vsubq_f32(a1, a3);
+        let o0 = vaddq_f32(a4, a6);
+        let o1 = vaddq_f32(a5, a7);
+        let o2 = vsubq_f32(a4, a6);
+        let o3 = vsubq_f32(a5, a7);
+
+        let u1 = cmul(o1, w81re, w81im);
+        let u2 = mul_neg_i(o2);
+        let u3 = cmul(o3, w83re, w83im);
+
+        vst1q_f32(dp.add(2 * (base + k)), vaddq_f32(e0, o0));
+        vst1q_f32(dp.add(2 * (base + stride + k)), vaddq_f32(e1, u1));
+        vst1q_f32(dp.add(2 * (base + 2 * stride + k)), vaddq_f32(e2, u2));
+        vst1q_f32(dp.add(2 * (base + 3 * stride + k)), vaddq_f32(e3, u3));
+        vst1q_f32(dp.add(2 * (base + 4 * stride + k)), vsubq_f32(e0, o0));
+        vst1q_f32(dp.add(2 * (base + 5 * stride + k)), vsubq_f32(e1, u1));
+        vst1q_f32(dp.add(2 * (base + 6 * stride + k)), vsubq_f32(e2, u2));
+        vst1q_f32(dp.add(2 * (base + 7 * stride + k)), vsubq_f32(e3, u3));
+        k += LANES;
+    }
+    k
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn cmul_pointwise(xs: &mut [C32], ws: &[C32]) -> usize {
+    let n = xs.len();
+    let xp = xs.as_mut_ptr() as *mut f32;
+    let wp = ws.as_ptr() as *const f32;
+    let mut i = 0;
+    while i + LANES <= n {
+        let x = vld1q_f32(xp.add(2 * i) as *const f32);
+        let w = vld1q_f32(wp.add(2 * i));
+        // Per-lane twiddles: duplicate even lanes for re, odd for im.
+        let wre = vtrn1q_f32(w, w);
+        let wim = vtrn2q_f32(w, w);
+        vst1q_f32(xp.add(2 * i), cmul(x, wre, wim));
+        i += LANES;
+    }
+    i
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn interleave(re: &[f32], im: &[f32], out: &mut [C32]) -> usize {
+    let n = out.len();
+    let op = out.as_mut_ptr() as *mut f32;
+    let mut i = 0;
+    while i + 4 <= n {
+        let a = vld1q_f32(re.as_ptr().add(i));
+        let b = vld1q_f32(im.as_ptr().add(i));
+        vst2q_f32(op.add(2 * i), float32x4x2_t(a, b));
+        i += 4;
+    }
+    i
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn deinterleave(src: &[C32], re: &mut [f32], im: &mut [f32]) -> usize {
+    let n = src.len();
+    let sp = src.as_ptr() as *const f32;
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = vld2q_f32(sp.add(2 * i));
+        vst1q_f32(re.as_mut_ptr().add(i), v.0);
+        vst1q_f32(im.as_mut_ptr().add(i), v.1);
+        i += 4;
+    }
+    i
+}
+
+/// Transpose the aligned 2x2-tiled top-left region; returns how many
+/// (rows, cols) were covered. One complex = one f64 move (pure bits).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn transpose(
+    src: &[C32],
+    dst: &mut [C32],
+    strides: (usize, usize),
+    dims: (usize, usize),
+) -> (usize, usize) {
+    let (src_stride, dst_stride) = strides;
+    let (rows, cols) = dims;
+    let rv = rows & !1;
+    let cv = cols & !1;
+    let sp = src.as_ptr() as *const f32;
+    let dp = dst.as_mut_ptr() as *mut f32;
+    let mut rb = 0;
+    while rb < rv {
+        let mut cb = 0;
+        while cb < cv {
+            let r0 = vreinterpretq_f64_f32(vld1q_f32(sp.add(2 * (rb * src_stride + cb))));
+            let r1 = vreinterpretq_f64_f32(vld1q_f32(sp.add(2 * ((rb + 1) * src_stride + cb))));
+            let c0 = vtrn1q_f64(r0, r1); // src[rb][cb],   src[rb+1][cb]
+            let c1 = vtrn2q_f64(r0, r1); // src[rb][cb+1], src[rb+1][cb+1]
+            vst1q_f32(dp.add(2 * (cb * dst_stride + rb)), vreinterpretq_f32_f64(c0));
+            vst1q_f32(dp.add(2 * ((cb + 1) * dst_stride + rb)), vreinterpretq_f32_f64(c1));
+            cb += 2;
+        }
+        rb += 2;
+    }
+    (rv, cv)
+}

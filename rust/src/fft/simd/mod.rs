@@ -1,0 +1,572 @@
+//! SIMD kernel layer: runtime-dispatched vector implementations of the
+//! FFT inner loops (complex butterflies, twiddle application,
+//! planar<->interleaved conversion, transpose tiles).
+//!
+//! # Dispatch table
+//!
+//! | op                | scalar | AVX2 (x86_64)        | NEON (aarch64)      |
+//! |-------------------|--------|----------------------|---------------------|
+//! | `radix2_group`    | yes    | 4 complex / iter     | 2 complex / iter    |
+//! | `radix4_group`    | yes    | 4 complex / iter     | 2 complex / iter    |
+//! | `radix8_group`    | yes    | 4 complex / iter     | 2 complex / iter    |
+//! | `cmul_pointwise`  | yes    | 4 complex / iter     | 2 complex / iter    |
+//! | `interleave`      | yes    | 8 pairs / iter       | 4 pairs / iter      |
+//! | `deinterleave`    | yes    | 8 pairs / iter       | 4 pairs / iter      |
+//! | `transpose_block` | yes    | 4x4 complex tiles    | 2x2 complex tiles   |
+//!
+//! # Bit-for-bit contract
+//!
+//! Every vector implementation performs the *same IEEE-754 operation
+//! sequence* as the scalar reference in `scalar.rs`: plain mul/add/sub
+//! only (no FMA, no reassociation beyond commuting one addition, which
+//! is exact), and sign flips via sign-bit XOR (exact for every input
+//! including -0.0 and NaN). Data-movement ops (interleave, transpose)
+//! perform no arithmetic at all. Consequently the output of every op is
+//! bit-identical across `Scalar`, `Avx2` and `Neon` — SIMD selection is
+//! purely a performance decision, and the PR-2 determinism contract
+//! (bit-for-bit equal results across thread counts) holds per
+//! `(MaxRadix, SimdLevel)` configuration. Vector bodies handle the
+//! aligned prefix; the remainder always falls through to the scalar
+//! loop, which uses the identical formulas.
+//!
+//! # Feature detection and override order
+//!
+//! [`active()`] resolves the effective level as: thread-local override
+//! ([`with_level`]) > `MEMFFT_SIMD` env (`off`/`scalar` forces the
+//! fallback, `avx2`/`neon` force a level *if the host supports it*) >
+//! [`detected()`] (AVX2 via `is_x86_feature_detected!` on x86_64, NEON
+//! unconditionally on aarch64 — it is part of the baseline ISA — scalar
+//! everywhere else). Any requested level the host cannot execute is
+//! sanitized down to `Scalar`, so the dispatch entry points are safe to
+//! call with arbitrary levels. [`radix()`] resolves the Stockham radix
+//! cap the same way (thread-local > `MEMFFT_RADIX` in {2,4,8} > 8).
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+use crate::util::complex::C32;
+
+mod scalar;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+#[cfg(target_arch = "aarch64")]
+mod aarch64;
+
+/// W_8^1 = e^{-i pi/4}. Shared by every implementation so the radix-8
+/// butterfly is bit-identical across levels.
+const W8_1: C32 = C32::new(std::f32::consts::FRAC_1_SQRT_2, -std::f32::consts::FRAC_1_SQRT_2);
+/// W_8^3 = e^{-3i pi/4}.
+const W8_3: C32 = C32::new(-std::f32::consts::FRAC_1_SQRT_2, -std::f32::consts::FRAC_1_SQRT_2);
+
+/// Instruction-set level a kernel runs at. Present on every architecture
+/// (so plan-cache keys are portable); levels the host cannot execute
+/// sanitize to [`SimdLevel::Scalar`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// Portable reference loops. Always available.
+    Scalar,
+    /// 256-bit AVX2 (4 complex f32 lanes), x86_64 only.
+    Avx2,
+    /// 128-bit NEON (2 complex f32 lanes), aarch64 only.
+    Neon,
+}
+
+impl SimdLevel {
+    /// Short stable name, used by `MEMFFT_SIMD` and metrics reporting.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Complex (f32, f32) elements per vector register.
+    pub fn lanes(self) -> usize {
+        match self {
+            SimdLevel::Scalar => 1,
+            SimdLevel::Avx2 => 4,
+            SimdLevel::Neon => 2,
+        }
+    }
+
+    /// Parse a `MEMFFT_SIMD` value. `off`/`scalar`/`0` force the fallback.
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "scalar" | "0" => Some(SimdLevel::Scalar),
+            "avx2" => Some(SimdLevel::Avx2),
+            "neon" => Some(SimdLevel::Neon),
+            _ => None,
+        }
+    }
+
+    /// True iff this host can execute kernels at this level.
+    pub fn available(self) -> bool {
+        self == SimdLevel::Scalar || self == detected()
+    }
+
+    /// This level if the host supports it, otherwise `Scalar`. All
+    /// kernel entry points sanitize, so a stale level (e.g. a plan key
+    /// deserialized on different hardware) degrades instead of faulting.
+    pub fn sanitize(self) -> SimdLevel {
+        if self.available() {
+            self
+        } else {
+            SimdLevel::Scalar
+        }
+    }
+}
+
+/// Largest butterfly radix the Stockham level loop may use. Smaller
+/// transforms still get a single radix-2 or radix-4 head level when
+/// log2(n) is not a multiple of log2(radix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MaxRadix {
+    Two,
+    Four,
+    Eight,
+}
+
+impl MaxRadix {
+    /// The radix as a number (2, 4 or 8).
+    pub fn value(self) -> usize {
+        match self {
+            MaxRadix::Two => 2,
+            MaxRadix::Four => 4,
+            MaxRadix::Eight => 8,
+        }
+    }
+
+    /// Parse a `MEMFFT_RADIX` value (`2`, `4` or `8`).
+    pub fn parse(s: &str) -> Option<MaxRadix> {
+        match s.trim() {
+            "2" => Some(MaxRadix::Two),
+            "4" => Some(MaxRadix::Four),
+            "8" => Some(MaxRadix::Eight),
+            _ => None,
+        }
+    }
+}
+
+fn detect() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    let level = if std::arch::is_x86_feature_detected!("avx2") {
+        SimdLevel::Avx2
+    } else {
+        SimdLevel::Scalar
+    };
+    #[cfg(target_arch = "aarch64")]
+    let level = SimdLevel::Neon;
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let level = SimdLevel::Scalar;
+    level
+}
+
+/// Best level this host supports (env/overrides ignored). Cached after
+/// the first call.
+pub fn detected() -> SimdLevel {
+    static DETECTED: OnceLock<SimdLevel> = OnceLock::new();
+    *DETECTED.get_or_init(detect)
+}
+
+fn env_level() -> Option<SimdLevel> {
+    static ENV: OnceLock<Option<SimdLevel>> = OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("MEMFFT_SIMD").ok().and_then(|s| SimdLevel::parse(&s)))
+}
+
+fn env_radix() -> Option<MaxRadix> {
+    static ENV: OnceLock<Option<MaxRadix>> = OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("MEMFFT_RADIX").ok().and_then(|s| MaxRadix::parse(&s)))
+}
+
+thread_local! {
+    static LOCAL_LEVEL: Cell<Option<SimdLevel>> = const { Cell::new(None) };
+    static LOCAL_RADIX: Cell<Option<MaxRadix>> = const { Cell::new(None) };
+}
+
+/// Effective SIMD level for plans built on this thread:
+/// thread-local override > `MEMFFT_SIMD` > detected. Always sanitized to
+/// something the host can execute.
+pub fn active() -> SimdLevel {
+    if let Some(level) = LOCAL_LEVEL.with(|c| c.get()) {
+        return level.sanitize();
+    }
+    match env_level() {
+        Some(level) => level.sanitize(),
+        None => detected(),
+    }
+}
+
+/// Effective Stockham radix cap: thread-local override > `MEMFFT_RADIX`
+/// > radix 8 (the fewest-passes default the paper's argument favors).
+pub fn radix() -> MaxRadix {
+    if let Some(r) = LOCAL_RADIX.with(|c| c.get()) {
+        return r;
+    }
+    env_radix().unwrap_or(MaxRadix::Eight)
+}
+
+/// Run `f` with the SIMD level pinned for this thread (plans constructed
+/// inside capture it). Restores the previous override on exit, including
+/// on panic. Mirrors `config::cache::with_tile`.
+pub fn with_level<R>(level: SimdLevel, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<SimdLevel>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_LEVEL.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(LOCAL_LEVEL.with(|c| c.replace(Some(level))));
+    f()
+}
+
+/// Run `f` with the Stockham radix cap pinned for this thread.
+pub fn with_radix<R>(radix: MaxRadix, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<MaxRadix>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_RADIX.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(LOCAL_RADIX.with(|c| c.replace(Some(radix))));
+    f()
+}
+
+/// Geometry of one Stockham butterfly group: inputs are `radix`
+/// consecutive length-`r` rows of the group block, outputs go to
+/// `dst[base + q*stride + k]`. `k0` is where the k-loop starts (vector
+/// bodies process `[0, k0)` and leave `[k0, r)` to the scalar tail).
+#[derive(Clone, Copy)]
+struct GroupGeom {
+    base: usize,
+    stride: usize,
+    r: usize,
+    k0: usize,
+}
+
+/// Radix-2 butterfly over one Stockham group.
+///
+/// `src` holds the group block (`>= 2r` elements: rows at offsets `0`
+/// and `r`); writes `dst[base + k]` and `dst[base + stride + k]` for
+/// `k < r`.
+pub fn radix2_group(
+    level: SimdLevel,
+    w: C32,
+    src: &[C32],
+    dst: &mut [C32],
+    base: usize,
+    stride: usize,
+    r: usize,
+) {
+    assert!(src.len() >= 2 * r, "radix2 group: src too short");
+    assert!(dst.len() >= base + stride + r, "radix2 group: dst too short");
+    let g = GroupGeom { base, stride, r, k0: 0 };
+    let done = match level.sanitize() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: sanitize() established AVX2 is available; bounds
+        // asserted above.
+        SimdLevel::Avx2 => unsafe { x86::radix2(w, src, dst, g) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; bounds asserted above.
+        SimdLevel::Neon => unsafe { aarch64::radix2(w, src, dst, g) },
+        _ => 0,
+    };
+    scalar::radix2(w, src, dst, GroupGeom { k0: done, ..g });
+}
+
+/// Radix-4 butterfly over one group. `ws[p-1] = W^{pj}` for `p = 1..4`;
+/// `src` holds the `4r`-element group block.
+pub fn radix4_group(
+    level: SimdLevel,
+    ws: &[C32; 3],
+    src: &[C32],
+    dst: &mut [C32],
+    base: usize,
+    stride: usize,
+    r: usize,
+) {
+    assert!(src.len() >= 4 * r, "radix4 group: src too short");
+    assert!(dst.len() >= base + 3 * stride + r, "radix4 group: dst too short");
+    let g = GroupGeom { base, stride, r, k0: 0 };
+    let done = match level.sanitize() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: sanitize() established AVX2; bounds asserted above.
+        SimdLevel::Avx2 => unsafe { x86::radix4(ws, src, dst, g) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; bounds asserted above.
+        SimdLevel::Neon => unsafe { aarch64::radix4(ws, src, dst, g) },
+        _ => 0,
+    };
+    scalar::radix4(ws, src, dst, GroupGeom { k0: done, ..g });
+}
+
+/// Radix-8 butterfly over one group. `ws[p-1] = W^{pj}` for `p = 1..8`;
+/// `src` holds the `8r`-element group block.
+pub fn radix8_group(
+    level: SimdLevel,
+    ws: &[C32; 7],
+    src: &[C32],
+    dst: &mut [C32],
+    base: usize,
+    stride: usize,
+    r: usize,
+) {
+    assert!(src.len() >= 8 * r, "radix8 group: src too short");
+    assert!(dst.len() >= base + 7 * stride + r, "radix8 group: dst too short");
+    let g = GroupGeom { base, stride, r, k0: 0 };
+    let done = match level.sanitize() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: sanitize() established AVX2; bounds asserted above.
+        SimdLevel::Avx2 => unsafe { x86::radix8(ws, src, dst, g) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; bounds asserted above.
+        SimdLevel::Neon => unsafe { aarch64::radix8(ws, src, dst, g) },
+        _ => 0,
+    };
+    scalar::radix8(ws, src, dst, GroupGeom { k0: done, ..g });
+}
+
+/// Pointwise complex multiply `xs[i] *= ws[i]` (twiddle / chirp-kernel
+/// application). Panics if lengths differ.
+pub fn cmul_pointwise(level: SimdLevel, xs: &mut [C32], ws: &[C32]) {
+    assert_eq!(xs.len(), ws.len(), "cmul_pointwise: length mismatch");
+    let done = match level.sanitize() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: sanitize() established AVX2; slices same length.
+        SimdLevel::Avx2 => unsafe { x86::cmul_pointwise(xs, ws) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; slices same length.
+        SimdLevel::Neon => unsafe { aarch64::cmul_pointwise(xs, ws) },
+        _ => 0,
+    };
+    scalar::cmul_pointwise(&mut xs[done..], &ws[done..]);
+}
+
+/// Planar -> interleaved: `out[i] = (re[i], im[i])`. Pure data movement,
+/// bit-identical at every level. Panics if lengths differ.
+pub fn interleave(level: SimdLevel, re: &[f32], im: &[f32], out: &mut [C32]) {
+    assert_eq!(re.len(), out.len(), "interleave: re length mismatch");
+    assert_eq!(im.len(), out.len(), "interleave: im length mismatch");
+    let done = match level.sanitize() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: sanitize() established AVX2; slices same length.
+        SimdLevel::Avx2 => unsafe { x86::interleave(re, im, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; slices same length.
+        SimdLevel::Neon => unsafe { aarch64::interleave(re, im, out) },
+        _ => 0,
+    };
+    scalar::interleave(&re[done..], &im[done..], &mut out[done..]);
+}
+
+/// Interleaved -> planar: `(re[i], im[i]) = src[i]`. Pure data movement.
+pub fn deinterleave(level: SimdLevel, src: &[C32], re: &mut [f32], im: &mut [f32]) {
+    assert_eq!(re.len(), src.len(), "deinterleave: re length mismatch");
+    assert_eq!(im.len(), src.len(), "deinterleave: im length mismatch");
+    let done = match level.sanitize() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: sanitize() established AVX2; slices same length.
+        SimdLevel::Avx2 => unsafe { x86::deinterleave(src, re, im) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; slices same length.
+        SimdLevel::Neon => unsafe { aarch64::deinterleave(src, re, im) },
+        _ => 0,
+    };
+    scalar::deinterleave(&src[done..], &mut re[done..], &mut im[done..]);
+}
+
+/// Transpose a `rows x cols` block: `dst[c*dst_stride + r] =
+/// src[r*src_stride + c]`. `strides = (src_stride, dst_stride)`,
+/// `dims = (rows, cols)`. Pure data movement.
+pub fn transpose_block(
+    level: SimdLevel,
+    src: &[C32],
+    dst: &mut [C32],
+    strides: (usize, usize),
+    dims: (usize, usize),
+) {
+    let (src_stride, dst_stride) = strides;
+    let (rows, cols) = dims;
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    assert!(src_stride >= cols && src.len() >= (rows - 1) * src_stride + cols);
+    assert!(dst_stride >= rows && dst.len() >= (cols - 1) * dst_stride + rows);
+    let done = match level.sanitize() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: sanitize() established AVX2; bounds asserted above.
+        SimdLevel::Avx2 => unsafe { x86::transpose(src, dst, strides, dims) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; bounds asserted above.
+        SimdLevel::Neon => unsafe { aarch64::transpose(src, dst, strides, dims) },
+        _ => (0, 0),
+    };
+    scalar::transpose_remainder(src, dst, strides, dims, done);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft;
+    use crate::util::complex::max_abs_diff;
+    use crate::util::prng::Xoshiro256;
+
+    fn bits(xs: &[C32]) -> Vec<(u32, u32)> {
+        xs.iter().map(|c| (c.re.to_bits(), c.im.to_bits())).collect()
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(SimdLevel::parse("off"), Some(SimdLevel::Scalar));
+        assert_eq!(SimdLevel::parse("Scalar"), Some(SimdLevel::Scalar));
+        assert_eq!(SimdLevel::parse("AVX2"), Some(SimdLevel::Avx2));
+        assert_eq!(SimdLevel::parse("neon"), Some(SimdLevel::Neon));
+        assert_eq!(SimdLevel::parse("sse9"), None);
+        assert_eq!(MaxRadix::parse("2"), Some(MaxRadix::Two));
+        assert_eq!(MaxRadix::parse("8"), Some(MaxRadix::Eight));
+        assert_eq!(MaxRadix::parse("16"), None);
+    }
+
+    #[test]
+    fn sanitize_degrades_to_host() {
+        assert_eq!(SimdLevel::Scalar.sanitize(), SimdLevel::Scalar);
+        let det = detected();
+        assert_eq!(det.sanitize(), det);
+        // A level from the "other" architecture must degrade, not fault.
+        let foreign = match det {
+            SimdLevel::Neon => SimdLevel::Avx2,
+            _ => SimdLevel::Neon,
+        };
+        assert_eq!(foreign.sanitize(), SimdLevel::Scalar);
+    }
+
+    #[test]
+    fn with_level_overrides_and_restores() {
+        let outer = active();
+        with_level(SimdLevel::Scalar, || {
+            assert_eq!(active(), SimdLevel::Scalar);
+            with_level(detected(), || assert_eq!(active(), detected()));
+            assert_eq!(active(), SimdLevel::Scalar);
+        });
+        assert_eq!(active(), outer);
+        with_radix(MaxRadix::Two, || {
+            assert_eq!(radix(), MaxRadix::Two);
+            with_radix(MaxRadix::Four, || assert_eq!(radix(), MaxRadix::Four));
+            assert_eq!(radix(), MaxRadix::Two);
+        });
+    }
+
+    /// `MEMFFT_SIMD=off` must force the scalar fallback (the rust-simd CI
+    /// lane runs the whole suite with it set); without the variable,
+    /// `active()` follows hardware detection.
+    #[test]
+    fn env_override_respected() {
+        match std::env::var("MEMFFT_SIMD") {
+            Ok(v) if SimdLevel::parse(&v).is_some() => {
+                assert_eq!(active(), SimdLevel::parse(&v).unwrap().sanitize());
+            }
+            _ => assert_eq!(active(), detected()),
+        }
+    }
+
+    #[test]
+    fn radix4_group_is_a_4_point_dft() {
+        let mut rng = Xoshiro256::seeded(401);
+        let x = rng.complex_vec(4);
+        let expect = dft(&x);
+        let mut got = vec![C32::ZERO; 4];
+        // l=1, j=0, r=1: all twiddles are 1 and the group IS the DFT.
+        radix4_group(SimdLevel::Scalar, &[C32::ONE; 3], &x, &mut got, 0, 1, 1);
+        assert!(max_abs_diff(&got, &expect) < 1e-5);
+    }
+
+    #[test]
+    fn radix8_group_is_an_8_point_dft() {
+        let mut rng = Xoshiro256::seeded(402);
+        let x = rng.complex_vec(8);
+        let expect = dft(&x);
+        let mut got = vec![C32::ZERO; 8];
+        radix8_group(SimdLevel::Scalar, &[C32::ONE; 7], &x, &mut got, 0, 1, 1);
+        assert!(max_abs_diff(&got, &expect) < 1e-5);
+    }
+
+    /// Every op must agree bit-for-bit between the scalar reference and
+    /// the detected vector level, including ragged tails.
+    #[test]
+    fn vector_ops_match_scalar_bitwise() {
+        let det = detected();
+        if det == SimdLevel::Scalar {
+            return; // nothing to compare on this host
+        }
+        let mut rng = Xoshiro256::seeded(403);
+        for r in [1usize, 2, 3, 4, 5, 7, 8, 13, 16, 33] {
+            // Butterfly groups with a non-trivial twiddle set.
+            let ws8: Vec<C32> = (1..8).map(|p| crate::util::complex::C64::twiddle(p, 16).to_c32()).collect();
+            let ws8: [C32; 7] = [ws8[0], ws8[1], ws8[2], ws8[3], ws8[4], ws8[5], ws8[6]];
+            let ws4: [C32; 3] = [ws8[0], ws8[1], ws8[2]];
+            let src2 = rng.complex_vec(2 * r);
+            let src4 = rng.complex_vec(4 * r);
+            let src8 = rng.complex_vec(8 * r);
+            let mut a = vec![C32::ZERO; 2 * r];
+            let mut b = a.clone();
+            radix2_group(SimdLevel::Scalar, ws8[0], &src2, &mut a, 0, r, r);
+            radix2_group(det, ws8[0], &src2, &mut b, 0, r, r);
+            assert_eq!(bits(&a), bits(&b), "radix2 r={r}");
+            let mut a = vec![C32::ZERO; 4 * r];
+            let mut b = a.clone();
+            radix4_group(SimdLevel::Scalar, &ws4, &src4, &mut a, 0, r, r);
+            radix4_group(det, &ws4, &src4, &mut b, 0, r, r);
+            assert_eq!(bits(&a), bits(&b), "radix4 r={r}");
+            let mut a = vec![C32::ZERO; 8 * r];
+            let mut b = a.clone();
+            radix8_group(SimdLevel::Scalar, &ws8, &src8, &mut a, 0, r, r);
+            radix8_group(det, &ws8, &src8, &mut b, 0, r, r);
+            assert_eq!(bits(&a), bits(&b), "radix8 r={r}");
+            // Twiddle application.
+            let w = rng.complex_vec(8 * r);
+            let mut a = src8.clone();
+            let mut b = src8.clone();
+            cmul_pointwise(SimdLevel::Scalar, &mut a, &w);
+            cmul_pointwise(det, &mut b, &w);
+            assert_eq!(bits(&a), bits(&b), "cmul r={r}");
+        }
+    }
+
+    #[test]
+    fn conversions_roundtrip_and_match_scalar() {
+        let det = detected();
+        let mut rng = Xoshiro256::seeded(404);
+        for n in [0usize, 1, 7, 8, 9, 64, 100] {
+            let src = rng.complex_vec(n);
+            let mut re = vec![0f32; n];
+            let mut im = vec![0f32; n];
+            deinterleave(det, &src, &mut re, &mut im);
+            for i in 0..n {
+                assert_eq!(re[i].to_bits(), src[i].re.to_bits());
+                assert_eq!(im[i].to_bits(), src[i].im.to_bits());
+            }
+            let mut back = vec![C32::ZERO; n];
+            interleave(det, &re, &im, &mut back);
+            assert_eq!(bits(&back), bits(&src), "n={n}");
+        }
+    }
+
+    #[test]
+    fn transpose_block_all_shapes() {
+        let det = detected();
+        let mut rng = Xoshiro256::seeded(405);
+        for (rows, cols) in [(1usize, 1usize), (2, 2), (3, 5), (4, 4), (5, 3), (8, 8), (9, 13)] {
+            let src = rng.complex_vec(rows * cols);
+            let mut a = vec![C32::ZERO; rows * cols];
+            let mut b = vec![C32::ZERO; rows * cols];
+            transpose_block(SimdLevel::Scalar, &src, &mut a, (cols, rows), (rows, cols));
+            transpose_block(det, &src, &mut b, (cols, rows), (rows, cols));
+            for r in 0..rows {
+                for c in 0..cols {
+                    assert_eq!(a[c * rows + r], src[r * cols + c], "{rows}x{cols}");
+                }
+            }
+            assert_eq!(bits(&a), bits(&b), "{rows}x{cols}");
+        }
+    }
+}

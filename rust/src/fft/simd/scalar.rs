@@ -1,0 +1,134 @@
+//! Scalar reference kernels. These define the exact IEEE-754 operation
+//! DAG; the AVX2/NEON implementations replicate it lane-for-lane (no
+//! FMA), which is what makes every level bit-identical. The vector
+//! bodies also rely on these loops for ragged tails via `GroupGeom::k0`,
+//! so any formula change here MUST be mirrored in `x86.rs`/`aarch64.rs`.
+
+use super::{GroupGeom, W8_1, W8_3};
+use crate::util::complex::C32;
+
+/// Radix-2 butterfly: `a +/- b*w` for `k` in `[k0, r)`.
+pub(super) fn radix2(w: C32, src: &[C32], dst: &mut [C32], g: GroupGeom) {
+    let GroupGeom { base, stride, r, k0 } = g;
+    for k in k0..r {
+        let a = src[k];
+        let b = src[r + k] * w;
+        dst[base + k] = a + b;
+        dst[base + stride + k] = a - b;
+    }
+}
+
+/// Radix-4 butterfly DAG (two radix-2 stages fused; `-i` rotation via
+/// exact lane swap + sign flip).
+pub(super) fn radix4(ws: &[C32; 3], src: &[C32], dst: &mut [C32], g: GroupGeom) {
+    let GroupGeom { base, stride, r, k0 } = g;
+    for k in k0..r {
+        let t0 = src[k];
+        let t1 = src[r + k] * ws[0];
+        let t2 = src[2 * r + k] * ws[1];
+        let t3 = src[3 * r + k] * ws[2];
+        let a0 = t0 + t2;
+        let a1 = t0 - t2;
+        let a2 = t1 + t3;
+        let a3 = (t1 - t3).mul_neg_i();
+        dst[base + k] = a0 + a2;
+        dst[base + stride + k] = a1 + a3;
+        dst[base + 2 * stride + k] = a0 - a2;
+        dst[base + 3 * stride + k] = a1 - a3;
+    }
+}
+
+/// Radix-8 butterfly DAG: three fused radix-2 stages; the only interior
+/// twiddles are `W_8^1`, `-i`, `W_8^3` (shared constants `W8_1`/`W8_3`).
+pub(super) fn radix8(ws: &[C32; 7], src: &[C32], dst: &mut [C32], g: GroupGeom) {
+    let GroupGeom { base, stride, r, k0 } = g;
+    for k in k0..r {
+        // p = 0 skips the multiply (w_0 == 1) in EVERY implementation,
+        // so no +/-0 rounding drift can distinguish levels.
+        let t0 = src[k];
+        let t1 = src[r + k] * ws[0];
+        let t2 = src[2 * r + k] * ws[1];
+        let t3 = src[3 * r + k] * ws[2];
+        let t4 = src[4 * r + k] * ws[3];
+        let t5 = src[5 * r + k] * ws[4];
+        let t6 = src[6 * r + k] * ws[5];
+        let t7 = src[7 * r + k] * ws[6];
+
+        let a0 = t0 + t4;
+        let a1 = t0 - t4;
+        let a2 = t2 + t6;
+        let a3 = (t2 - t6).mul_neg_i();
+        let a4 = t1 + t5;
+        let a5 = t1 - t5;
+        let a6 = t3 + t7;
+        let a7 = (t3 - t7).mul_neg_i();
+
+        let e0 = a0 + a2;
+        let e1 = a1 + a3;
+        let e2 = a0 - a2;
+        let e3 = a1 - a3;
+        let o0 = a4 + a6;
+        let o1 = a5 + a7;
+        let o2 = a4 - a6;
+        let o3 = a5 - a7;
+
+        let u1 = o1 * W8_1;
+        let u2 = o2.mul_neg_i();
+        let u3 = o3 * W8_3;
+
+        dst[base + k] = e0 + o0;
+        dst[base + stride + k] = e1 + u1;
+        dst[base + 2 * stride + k] = e2 + u2;
+        dst[base + 3 * stride + k] = e3 + u3;
+        dst[base + 4 * stride + k] = e0 - o0;
+        dst[base + 5 * stride + k] = e1 - u1;
+        dst[base + 6 * stride + k] = e2 - u2;
+        dst[base + 7 * stride + k] = e3 - u3;
+    }
+}
+
+/// Pointwise `xs[i] *= ws[i]`.
+pub(super) fn cmul_pointwise(xs: &mut [C32], ws: &[C32]) {
+    for (x, w) in xs.iter_mut().zip(ws) {
+        *x *= *w;
+    }
+}
+
+/// Planar -> interleaved.
+pub(super) fn interleave(re: &[f32], im: &[f32], out: &mut [C32]) {
+    for ((o, &a), &b) in out.iter_mut().zip(re).zip(im) {
+        *o = C32::new(a, b);
+    }
+}
+
+/// Interleaved -> planar.
+pub(super) fn deinterleave(src: &[C32], re: &mut [f32], im: &mut [f32]) {
+    for ((c, rr), ii) in src.iter().zip(re.iter_mut()).zip(im.iter_mut()) {
+        *rr = c.re;
+        *ii = c.im;
+    }
+}
+
+/// Finish a transpose block after a vector body handled the aligned
+/// `done.0 x done.1` top-left region: bottom rows, then the right strip.
+pub(super) fn transpose_remainder(
+    src: &[C32],
+    dst: &mut [C32],
+    strides: (usize, usize),
+    dims: (usize, usize),
+    done: (usize, usize),
+) {
+    let (src_stride, dst_stride) = strides;
+    let (rows, cols) = dims;
+    let (rv, cv) = done;
+    for r in rv..rows {
+        for c in 0..cols {
+            dst[c * dst_stride + r] = src[r * src_stride + c];
+        }
+    }
+    for r in 0..rv {
+        for c in cv..cols {
+            dst[c * dst_stride + r] = src[r * src_stride + c];
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! AVX2 kernels (4 complex f32 per 256-bit register).
+//!
+//! Bit-for-bit discipline: every lane performs the same mul/add/sub
+//! sequence as `scalar.rs` — complex multiply is two `vmulps` plus one
+//! `vaddsubps` (never FMA), and `-i` rotation / subtraction-by-negation
+//! are sign-bit XORs, which are exact. Each body handles the aligned
+//! prefix and returns how many `k` it consumed; the dispatcher runs the
+//! scalar loop for the rest.
+//!
+//! All functions require AVX2 (guaranteed by `SimdLevel::sanitize` in
+//! the dispatcher) and in-bounds geometry (asserted by the dispatcher
+//! before the call).
+
+use core::arch::x86_64::*;
+
+use super::{GroupGeom, W8_1, W8_3};
+use crate::util::complex::C32;
+
+/// Complex f32 elements per register.
+const LANES: usize = 4;
+
+/// `[-0.0, +0.0]` repeated: XOR negates the odd (imaginary) f32 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn neg_odd_mask() -> __m256 {
+    _mm256_castsi256_ps(_mm256_set_epi32(i32::MIN, 0, i32::MIN, 0, i32::MIN, 0, i32::MIN, 0))
+}
+
+/// Swap (re, im) pairs in each complex slot: [a, b, c, d] -> [b, a, d, c].
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn swap_pairs(z: __m256) -> __m256 {
+    _mm256_permute_ps(z, 0b1011_0001)
+}
+
+/// Multiply 4 complex lanes by a broadcast twiddle (wre/wim are
+/// `set1(w.re)` / `set1(w.im)`):
+///   re = z.re*w.re - z.im*w.im   (addsub even lanes)
+///   im = z.im*w.re + z.re*w.im   (addsub odd lanes; the scalar form
+///        z.re*w.im + z.im*w.re is the same addition commuted — exact)
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn cmul(z: __m256, wre: __m256, wim: __m256) -> __m256 {
+    let t1 = _mm256_mul_ps(z, wre);
+    let t2 = _mm256_mul_ps(swap_pairs(z), wim);
+    _mm256_addsub_ps(t1, t2)
+}
+
+/// Multiply 4 complex lanes by `-i`: (re, im) -> (im, -re). Exact.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mul_neg_i(z: __m256, neg_odd: __m256) -> __m256 {
+    _mm256_xor_ps(swap_pairs(z), neg_odd)
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn radix2(w: C32, src: &[C32], dst: &mut [C32], g: GroupGeom) -> usize {
+    let GroupGeom { base, stride, r, .. } = g;
+    let sp = src.as_ptr() as *const f32;
+    let dp = dst.as_mut_ptr() as *mut f32;
+    let wre = _mm256_set1_ps(w.re);
+    let wim = _mm256_set1_ps(w.im);
+    let mut k = 0;
+    while k + LANES <= r {
+        let a = _mm256_loadu_ps(sp.add(2 * k));
+        let b = cmul(_mm256_loadu_ps(sp.add(2 * (r + k))), wre, wim);
+        _mm256_storeu_ps(dp.add(2 * (base + k)), _mm256_add_ps(a, b));
+        _mm256_storeu_ps(dp.add(2 * (base + stride + k)), _mm256_sub_ps(a, b));
+        k += LANES;
+    }
+    k
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn radix4(ws: &[C32; 3], src: &[C32], dst: &mut [C32], g: GroupGeom) -> usize {
+    let GroupGeom { base, stride, r, .. } = g;
+    let sp = src.as_ptr() as *const f32;
+    let dp = dst.as_mut_ptr() as *mut f32;
+    let neg_odd = neg_odd_mask();
+    let mut wre = [_mm256_setzero_ps(); 3];
+    let mut wim = [_mm256_setzero_ps(); 3];
+    for p in 0..3 {
+        wre[p] = _mm256_set1_ps(ws[p].re);
+        wim[p] = _mm256_set1_ps(ws[p].im);
+    }
+    let mut k = 0;
+    while k + LANES <= r {
+        let t0 = _mm256_loadu_ps(sp.add(2 * k));
+        let t1 = cmul(_mm256_loadu_ps(sp.add(2 * (r + k))), wre[0], wim[0]);
+        let t2 = cmul(_mm256_loadu_ps(sp.add(2 * (2 * r + k))), wre[1], wim[1]);
+        let t3 = cmul(_mm256_loadu_ps(sp.add(2 * (3 * r + k))), wre[2], wim[2]);
+        let a0 = _mm256_add_ps(t0, t2);
+        let a1 = _mm256_sub_ps(t0, t2);
+        let a2 = _mm256_add_ps(t1, t3);
+        let a3 = mul_neg_i(_mm256_sub_ps(t1, t3), neg_odd);
+        _mm256_storeu_ps(dp.add(2 * (base + k)), _mm256_add_ps(a0, a2));
+        _mm256_storeu_ps(dp.add(2 * (base + stride + k)), _mm256_add_ps(a1, a3));
+        _mm256_storeu_ps(dp.add(2 * (base + 2 * stride + k)), _mm256_sub_ps(a0, a2));
+        _mm256_storeu_ps(dp.add(2 * (base + 3 * stride + k)), _mm256_sub_ps(a1, a3));
+        k += LANES;
+    }
+    k
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn radix8(ws: &[C32; 7], src: &[C32], dst: &mut [C32], g: GroupGeom) -> usize {
+    let GroupGeom { base, stride, r, .. } = g;
+    let sp = src.as_ptr() as *const f32;
+    let dp = dst.as_mut_ptr() as *mut f32;
+    let neg_odd = neg_odd_mask();
+    let mut wre = [_mm256_setzero_ps(); 7];
+    let mut wim = [_mm256_setzero_ps(); 7];
+    for p in 0..7 {
+        wre[p] = _mm256_set1_ps(ws[p].re);
+        wim[p] = _mm256_set1_ps(ws[p].im);
+    }
+    let w81re = _mm256_set1_ps(W8_1.re);
+    let w81im = _mm256_set1_ps(W8_1.im);
+    let w83re = _mm256_set1_ps(W8_3.re);
+    let w83im = _mm256_set1_ps(W8_3.im);
+    let mut k = 0;
+    while k + LANES <= r {
+        let t0 = _mm256_loadu_ps(sp.add(2 * k));
+        let t1 = cmul(_mm256_loadu_ps(sp.add(2 * (r + k))), wre[0], wim[0]);
+        let t2 = cmul(_mm256_loadu_ps(sp.add(2 * (2 * r + k))), wre[1], wim[1]);
+        let t3 = cmul(_mm256_loadu_ps(sp.add(2 * (3 * r + k))), wre[2], wim[2]);
+        let t4 = cmul(_mm256_loadu_ps(sp.add(2 * (4 * r + k))), wre[3], wim[3]);
+        let t5 = cmul(_mm256_loadu_ps(sp.add(2 * (5 * r + k))), wre[4], wim[4]);
+        let t6 = cmul(_mm256_loadu_ps(sp.add(2 * (6 * r + k))), wre[5], wim[5]);
+        let t7 = cmul(_mm256_loadu_ps(sp.add(2 * (7 * r + k))), wre[6], wim[6]);
+
+        let a0 = _mm256_add_ps(t0, t4);
+        let a1 = _mm256_sub_ps(t0, t4);
+        let a2 = _mm256_add_ps(t2, t6);
+        let a3 = mul_neg_i(_mm256_sub_ps(t2, t6), neg_odd);
+        let a4 = _mm256_add_ps(t1, t5);
+        let a5 = _mm256_sub_ps(t1, t5);
+        let a6 = _mm256_add_ps(t3, t7);
+        let a7 = mul_neg_i(_mm256_sub_ps(t3, t7), neg_odd);
+
+        let e0 = _mm256_add_ps(a0, a2);
+        let e1 = _mm256_add_ps(a1, a3);
+        let e2 = _mm256_sub_ps(a0, a2);
+        let e3 = _mm256_sub_ps(a1, a3);
+        let o0 = _mm256_add_ps(a4, a6);
+        let o1 = _mm256_add_ps(a5, a7);
+        let o2 = _mm256_sub_ps(a4, a6);
+        let o3 = _mm256_sub_ps(a5, a7);
+
+        let u1 = cmul(o1, w81re, w81im);
+        let u2 = mul_neg_i(o2, neg_odd);
+        let u3 = cmul(o3, w83re, w83im);
+
+        _mm256_storeu_ps(dp.add(2 * (base + k)), _mm256_add_ps(e0, o0));
+        _mm256_storeu_ps(dp.add(2 * (base + stride + k)), _mm256_add_ps(e1, u1));
+        _mm256_storeu_ps(dp.add(2 * (base + 2 * stride + k)), _mm256_add_ps(e2, u2));
+        _mm256_storeu_ps(dp.add(2 * (base + 3 * stride + k)), _mm256_add_ps(e3, u3));
+        _mm256_storeu_ps(dp.add(2 * (base + 4 * stride + k)), _mm256_sub_ps(e0, o0));
+        _mm256_storeu_ps(dp.add(2 * (base + 5 * stride + k)), _mm256_sub_ps(e1, u1));
+        _mm256_storeu_ps(dp.add(2 * (base + 6 * stride + k)), _mm256_sub_ps(e2, u2));
+        _mm256_storeu_ps(dp.add(2 * (base + 7 * stride + k)), _mm256_sub_ps(e3, u3));
+        k += LANES;
+    }
+    k
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn cmul_pointwise(xs: &mut [C32], ws: &[C32]) -> usize {
+    let n = xs.len();
+    let xp = xs.as_mut_ptr() as *mut f32;
+    let wp = ws.as_ptr() as *const f32;
+    let mut i = 0;
+    while i + LANES <= n {
+        let x = _mm256_loadu_ps(xp.add(2 * i) as *const f32);
+        let w = _mm256_loadu_ps(wp.add(2 * i));
+        // Per-lane twiddles: duplicate even lanes for re, odd for im.
+        let wre = _mm256_moveldup_ps(w);
+        let wim = _mm256_movehdup_ps(w);
+        _mm256_storeu_ps(xp.add(2 * i), cmul(x, wre, wim));
+        i += LANES;
+    }
+    i
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn interleave(re: &[f32], im: &[f32], out: &mut [C32]) -> usize {
+    let n = out.len();
+    let op = out.as_mut_ptr() as *mut f32;
+    let mut i = 0;
+    while i + 8 <= n {
+        let a = _mm256_loadu_ps(re.as_ptr().add(i)); // r0..r7
+        let b = _mm256_loadu_ps(im.as_ptr().add(i)); // i0..i7
+        let lo = _mm256_unpacklo_ps(a, b); // r0 i0 r1 i1 | r4 i4 r5 i5
+        let hi = _mm256_unpackhi_ps(a, b); // r2 i2 r3 i3 | r6 i6 r7 i7
+        _mm256_storeu_ps(op.add(2 * i), _mm256_permute2f128_ps(lo, hi, 0x20));
+        _mm256_storeu_ps(op.add(2 * i + 8), _mm256_permute2f128_ps(lo, hi, 0x31));
+        i += 8;
+    }
+    i
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn deinterleave(src: &[C32], re: &mut [f32], im: &mut [f32]) -> usize {
+    let n = src.len();
+    let sp = src.as_ptr() as *const f32;
+    let mut i = 0;
+    while i + 8 <= n {
+        let in0 = _mm256_loadu_ps(sp.add(2 * i)); //     r0 i0 r1 i1 | r2 i2 r3 i3
+        let in1 = _mm256_loadu_ps(sp.add(2 * i + 8)); // r4 i4 r5 i5 | r6 i6 r7 i7
+        let a = _mm256_permute2f128_ps(in0, in1, 0x20); // r0 i0 r1 i1 | r4 i4 r5 i5
+        let b = _mm256_permute2f128_ps(in0, in1, 0x31); // r2 i2 r3 i3 | r6 i6 r7 i7
+        _mm256_storeu_ps(re.as_mut_ptr().add(i), _mm256_shuffle_ps(a, b, 0b10_00_10_00));
+        _mm256_storeu_ps(im.as_mut_ptr().add(i), _mm256_shuffle_ps(a, b, 0b11_01_11_01));
+        i += 8;
+    }
+    i
+}
+
+/// Transpose the aligned 4x4-tiled top-left region; returns how many
+/// (rows, cols) were covered. One complex = one f64 move (pure bits).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn transpose(
+    src: &[C32],
+    dst: &mut [C32],
+    strides: (usize, usize),
+    dims: (usize, usize),
+) -> (usize, usize) {
+    let (src_stride, dst_stride) = strides;
+    let (rows, cols) = dims;
+    let rv = rows & !3;
+    let cv = cols & !3;
+    let sp = src.as_ptr() as *const f64;
+    let dp = dst.as_mut_ptr() as *mut f64;
+    let mut rb = 0;
+    while rb < rv {
+        let mut cb = 0;
+        while cb < cv {
+            let r0 = _mm256_loadu_pd(sp.add(rb * src_stride + cb));
+            let r1 = _mm256_loadu_pd(sp.add((rb + 1) * src_stride + cb));
+            let r2 = _mm256_loadu_pd(sp.add((rb + 2) * src_stride + cb));
+            let r3 = _mm256_loadu_pd(sp.add((rb + 3) * src_stride + cb));
+            let t0 = _mm256_unpacklo_pd(r0, r1); // r0c0 r1c0 | r0c2 r1c2
+            let t1 = _mm256_unpackhi_pd(r0, r1); // r0c1 r1c1 | r0c3 r1c3
+            let t2 = _mm256_unpacklo_pd(r2, r3);
+            let t3 = _mm256_unpackhi_pd(r2, r3);
+            let c0 = _mm256_permute2f128_pd(t0, t2, 0x20);
+            let c1 = _mm256_permute2f128_pd(t1, t3, 0x20);
+            let c2 = _mm256_permute2f128_pd(t0, t2, 0x31);
+            let c3 = _mm256_permute2f128_pd(t1, t3, 0x31);
+            _mm256_storeu_pd(dp.add(cb * dst_stride + rb), c0);
+            _mm256_storeu_pd(dp.add((cb + 1) * dst_stride + rb), c1);
+            _mm256_storeu_pd(dp.add((cb + 2) * dst_stride + rb), c2);
+            _mm256_storeu_pd(dp.add((cb + 3) * dst_stride + rb), c3);
+            cb += 4;
+        }
+        rb += 4;
+    }
+    (rv, cv)
+}

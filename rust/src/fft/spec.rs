@@ -172,7 +172,13 @@ pub struct SpecKey {
 /// The plan cache's memoization key: the descriptor with its algorithm
 /// hint *resolved* (so `Auto` and its concrete winner share one plan) plus
 /// the effective memory-tier tile when — and only when — a resolved
-/// component is tile-dependent. Batch and placement are dropped: plans are
+/// component is tile-dependent, plus the resolved `(MaxRadix, SimdLevel)`
+/// kernel configuration when — and only when — a component runs the
+/// configurable Stockham kernel (directly, or as the leaf inside
+/// four-step / memtier / Bluestein / RFFT compositions). Plans bake the
+/// configuration in at construction, so a `simd::with_radix` /
+/// `simd::with_level` scope must never be served a plan built under a
+/// different one. Batch and placement are dropped: plans are
 /// per-transform and serve both execution faces.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub(crate) struct PlanKey {
@@ -181,6 +187,7 @@ pub(crate) struct PlanKey {
     row_algo: Algorithm,
     col_algo: Algorithm,
     tile: usize,
+    kernel_cfg: Option<(crate::fft::simd::MaxRadix, crate::fft::simd::SimdLevel)>,
 }
 
 impl ProblemSpec {
@@ -326,7 +333,29 @@ impl ProblemSpec {
         } else {
             0
         };
-        PlanKey { shape: self.shape, domain: self.domain, row_algo, col_algo, tile }
+        // Stockham-backed compositions capture the effective (radix,
+        // lane) configuration at construction, so it is part of their
+        // identity. Real-domain plans always are (fixed RFFT
+        // composition); four-step / memtier / Bluestein run Stockham
+        // leaves.
+        let stockham_backed = |a: Algorithm| {
+            matches!(
+                a,
+                Algorithm::Stockham
+                    | Algorithm::FourStep
+                    | Algorithm::MemTier
+                    | Algorithm::Bluestein
+            )
+        };
+        let kernel_cfg = if self.domain == Domain::RealToComplex
+            || stockham_backed(row_algo)
+            || stockham_backed(col_algo)
+        {
+            Some((crate::fft::simd::radix(), crate::fft::simd::active()))
+        } else {
+            None
+        };
+        PlanKey { shape: self.shape, domain: self.domain, row_algo, col_algo, tile, kernel_cfg }
     }
 }
 
@@ -729,6 +758,30 @@ mod tests {
         assert_eq!(r.plan_key(), r.with_algorithm(Algorithm::FourStep).plan_key());
         // Batch and placement never reach the plan key.
         assert_eq!(auto.plan_key(), auto.batched(9).unwrap().in_place().plan_key());
+    }
+
+    #[test]
+    fn plan_key_carries_kernel_config_for_stockham_backed_plans() {
+        use crate::fft::simd::{self, MaxRadix, SimdLevel};
+        // Auto at 512 resolves to Stockham: the effective (radix, lane)
+        // configuration is part of the key.
+        let auto = ProblemSpec::one_d(512).unwrap();
+        let forced =
+            simd::with_radix(MaxRadix::Two, || simd::with_level(SimdLevel::Scalar, || auto.plan_key()));
+        if simd::radix() != MaxRadix::Two || simd::active() != SimdLevel::Scalar {
+            assert_ne!(auto.plan_key(), forced, "kernel config must fragment the key");
+        }
+        // A plan that never touches the Stockham kernel ignores it.
+        let r2 = auto.with_algorithm(Algorithm::Radix2);
+        let r2_forced =
+            simd::with_radix(MaxRadix::Two, || simd::with_level(SimdLevel::Scalar, || r2.plan_key()));
+        assert_eq!(r2.plan_key(), r2_forced);
+        // Real-domain plans are always Stockham-backed.
+        let real = ProblemSpec::real(512).unwrap();
+        let real_forced = simd::with_level(SimdLevel::Scalar, || real.plan_key());
+        if simd::active() != SimdLevel::Scalar {
+            assert_ne!(real.plan_key(), real_forced);
+        }
     }
 
     #[test]

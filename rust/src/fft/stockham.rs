@@ -1,4 +1,5 @@
-//! Stockham autosort radix-2 FFT.
+//! Stockham autosort FFT with a multi-radix (2/4/8) level loop and
+//! SIMD-dispatched butterflies.
 //!
 //! The Stockham formulation reorders as it goes (ping-pong between two
 //! buffers), so it needs no bit-reversal scatter — every level reads and
@@ -7,15 +8,44 @@
 //! - the exact structure the Pallas VMEM kernel uses (contiguous lane
 //!   access = the coalescing the paper engineers in §2.3.3).
 //!
+//! Radix 8 is the default: it folds three radix-2 levels into one sweep,
+//! so a transform makes `log8(n)` passes over the data instead of
+//! `log2(n)` — the paper's fewer-wider-passes argument applied to host
+//! memory (SNIPPETS.md's bellman kernel runs radix-256 for the same
+//! reason). Radix 16 was evaluated and rejected: see DESIGN.md §11.
+//! The per-level butterflies live in [`super::simd`] and are dispatched
+//! by the [`SimdLevel`] captured at plan construction; scalar and vector
+//! paths are bit-identical, so the (radix, lane) configuration — not the
+//! hardware path — defines the output bits.
+//!
 //! This mirrors `python/compile/kernels/stockham.py`; the two are tested
 //! against the same oracle.
 
 use std::sync::Arc;
 
+use super::simd::{self, MaxRadix, SimdLevel};
 use super::transform::{check_inplace, FftError, Transform};
 use super::twiddle::TwiddleTable;
 use crate::util::complex::C32;
 use crate::util::{is_pow2, log2_exact};
+
+/// Per-level radices for a transform of `levels` radix-2 levels under a
+/// radix cap: one head level of 2 or 4 when `levels` is not a multiple
+/// of log2(cap), then cap-radix levels. The head comes FIRST, where the
+/// butterfly count `r` is largest — that keeps the widest levels on the
+/// vector path.
+fn level_radices(levels: usize, max: MaxRadix) -> Vec<u8> {
+    let step = max.value();
+    let lg_step = step.trailing_zeros() as usize;
+    let mut v = Vec::with_capacity(levels / lg_step + 1);
+    match levels % lg_step {
+        0 => {}
+        1 => v.push(2u8),
+        _ => v.push(4u8),
+    }
+    v.extend(std::iter::repeat(step as u8).take(levels / lg_step));
+    v
+}
 
 #[derive(Debug, Clone)]
 pub struct Stockham {
@@ -24,12 +54,41 @@ pub struct Stockham {
     /// texture-memory analog): every Stockham of size n — standalone, or
     /// inside a four-step / Bluestein / memtier plan — reads one table.
     twiddles: Arc<TwiddleTable>,
+    /// Radix of each level, innermost first; product = n.
+    schedule: Vec<u8>,
+    radix: MaxRadix,
+    simd: SimdLevel,
 }
 
 impl Stockham {
+    /// Plan with the ambient configuration ([`simd::radix()`] /
+    /// [`simd::active()`] — thread-local override > env > detected).
     pub fn new(n: usize) -> Self {
+        Self::with_config(n, simd::radix(), simd::active())
+    }
+
+    /// Plan with an explicit (radix, lane) configuration. The SIMD level
+    /// is sanitized to what this host can execute; output bits depend
+    /// only on the resulting configuration, never on thread count.
+    pub fn with_config(n: usize, radix: MaxRadix, level: SimdLevel) -> Self {
         assert!(is_pow2(n), "Stockham FFT needs a power of two, got {n}");
-        Self { n, twiddles: super::memtier::tables().twiddle(n) }
+        Self {
+            n,
+            twiddles: super::memtier::tables().twiddle(n),
+            schedule: level_radices(log2_exact(n) as usize, radix),
+            radix,
+            simd: level.sanitize(),
+        }
+    }
+
+    /// The radix cap this plan was built with.
+    pub fn radix_config(&self) -> MaxRadix {
+        self.radix
+    }
+
+    /// The (sanitized) SIMD level this plan dispatches to.
+    pub fn simd_level(&self) -> SimdLevel {
+        self.simd
     }
 
     /// Forward FFT using caller-provided scratch (same length as x).
@@ -41,38 +100,62 @@ impl Stockham {
         if n <= 1 {
             return;
         }
-        let levels = log2_exact(n);
-        // Stockham DIT with the autosort layout invariant: after `s` levels
-        // the buffer holds `c = n / 2^s` sub-transforms of length `l = 2^s`,
-        // with frequency j of sub-transform m at index `j*c + m` (the
-        // sub-transform id is the FAST dimension — that is what makes every
-        // level's reads and writes contiguous in k).
+        // Stockham DIT with the autosort layout invariant: after the
+        // first levels produce `l` sub-transforms-so-far of length `l`
+        // (product of the consumed radices), the buffer holds frequency
+        // j of sub-transform m at index `j*c + m`, `c = n/l` — the
+        // sub-transform id is the FAST dimension, which is what makes
+        // every level's reads and writes contiguous in k.
         //
-        // Level s merges sub-transform pairs (m, m + c/2): with r = c/2,
-        //   a = src[2jr + k],  b = src[2jr + r + k] * W_{2l}^j
-        //   dst[jr + k] = a + b,  dst[(j+l)r + k] = a - b.
+        // A radix-R level merges R sub-transforms at once. With
+        // `r = n/(R*l)` butterflies per group and `stride = l*r`:
+        //   t_p = src[R*j*r + p*r + k] * W_{Rl}^{pj}   (p = 0..R)
+        //   dst[j*r + q*stride + k] = sum_p t_p W_R^{pq}
+        // and W_{Rl}^{pj} = W_n^{p*j*r}. R=2 with W_R^{pq} = ±1 is the
+        // classic radix-2 loop; R=4/8 fold the constant inner twiddles
+        // (±1, ±i, W_8^{1,3}) into the butterfly DAG in `simd`.
         let mut src_is_x = true;
-        for s in 0..levels {
-            let l = 1usize << s;
-            let r = n >> (s + 1);
+        let mut l = 1usize;
+        for &rad in &self.schedule {
+            let rad = rad as usize;
+            let r = n / (rad * l);
+            let stride = l * r;
             let (src, dst): (&[C32], &mut [C32]) = if src_is_x {
                 (&*x, &mut *scratch)
             } else {
                 (&*scratch, &mut *x)
             };
-            for j in 0..l {
-                // twiddle W_{2l}^j = W_n^{j * n/(2l)} = W_n^{j * r}
-                let w = self.twiddles.w(j * r);
-                let in_base = 2 * j * r;
-                let out_a = j * r;
-                let out_b = (j + l) * r;
-                for k in 0..r {
-                    let a = src[in_base + k];
-                    let b = src[in_base + r + k] * w;
-                    dst[out_a + k] = a + b;
-                    dst[out_b + k] = a - b;
+            match rad {
+                2 => {
+                    for j in 0..l {
+                        let w = self.twiddles.w(j * r);
+                        let block = &src[2 * j * r..(2 * j + 2) * r];
+                        simd::radix2_group(self.simd, w, block, dst, j * r, stride, r);
+                    }
+                }
+                4 => {
+                    for j in 0..l {
+                        let ws = [
+                            self.twiddles.w_any(j * r),
+                            self.twiddles.w_any(2 * j * r),
+                            self.twiddles.w_any(3 * j * r),
+                        ];
+                        let block = &src[4 * j * r..(4 * j + 4) * r];
+                        simd::radix4_group(self.simd, &ws, block, dst, j * r, stride, r);
+                    }
+                }
+                _ => {
+                    let mut ws = [C32::ZERO; 7];
+                    for j in 0..l {
+                        for (p, slot) in ws.iter_mut().enumerate() {
+                            *slot = self.twiddles.w_any((p + 1) * j * r);
+                        }
+                        let block = &src[8 * j * r..(8 * j + 8) * r];
+                        simd::radix8_group(self.simd, &ws, block, dst, j * r, stride, r);
+                    }
                 }
             }
+            l *= rad;
             src_is_x = !src_is_x;
         }
         if !src_is_x {
@@ -121,6 +204,21 @@ mod tests {
     use crate::util::prng::Xoshiro256;
 
     #[test]
+    fn schedule_products_cover_n() {
+        for levels in 0..=20 {
+            for max in [MaxRadix::Two, MaxRadix::Four, MaxRadix::Eight] {
+                let sched = level_radices(levels, max);
+                let product: usize = sched.iter().map(|&r| r as usize).product();
+                assert_eq!(product, 1usize << levels, "levels={levels} max={max:?}");
+                // Head level (if any) is the only non-max radix.
+                for &r in sched.iter().skip(1) {
+                    assert_eq!(r as usize, max.value());
+                }
+            }
+        }
+    }
+
+    #[test]
     fn matches_dft() {
         let mut rng = Xoshiro256::seeded(31);
         for lg in 0..=11 {
@@ -131,6 +229,24 @@ mod tests {
             Stockham::new(n).forward(&mut got);
             let err = max_abs_diff(&got, &expect);
             assert!(err < 1e-3 * (n as f32).sqrt(), "n={n} err={err}");
+        }
+    }
+
+    /// Every (radix, lane) configuration is a correct FFT in its own
+    /// right (radix-8 vs radix-2 vs the DFT oracle).
+    #[test]
+    fn all_radices_match_dft() {
+        let mut rng = Xoshiro256::seeded(35);
+        for lg in 0..=12 {
+            let n = 1usize << lg;
+            let x = rng.complex_vec(n);
+            let expect = dft(&x);
+            for radix in [MaxRadix::Two, MaxRadix::Four, MaxRadix::Eight] {
+                let mut got = x.clone();
+                Stockham::with_config(n, radix, SimdLevel::Scalar).forward(&mut got);
+                let err = max_abs_diff(&got, &expect);
+                assert!(err < 1e-3 * (n as f32).sqrt().max(1.0), "n={n} radix={radix:?} err={err}");
+            }
         }
     }
 
@@ -177,13 +293,27 @@ mod tests {
 
     #[test]
     fn odd_and_even_level_counts_land_in_x() {
-        // n=4 (2 levels, even) and n=8 (3 levels, odd) both must return the
-        // result in x regardless of which buffer the ping-pong ended in.
-        for n in [4usize, 8] {
+        // Every levels%3 residue (n=4: head 4; n=8: pure radix-8; n=16:
+        // head 2) must return the result in x regardless of which buffer
+        // the ping-pong ended in.
+        for n in [2usize, 4, 8, 16, 32, 64] {
             let mut x: Vec<C32> = (0..n).map(|i| C32::new(i as f32, 0.0)).collect();
             let expect = dft(&x);
             Stockham::new(n).forward(&mut x);
-            assert!(max_abs_diff(&x, &expect) < 1e-5, "n={n}");
+            assert!(max_abs_diff(&x, &expect) < 1e-4, "n={n}");
         }
+    }
+
+    /// The plan captures the thread-local configuration at construction.
+    #[test]
+    fn captures_ambient_config() {
+        let plan = simd::with_radix(MaxRadix::Two, || {
+            simd::with_level(SimdLevel::Scalar, || Stockham::new(256))
+        });
+        assert_eq!(plan.radix_config(), MaxRadix::Two);
+        assert_eq!(plan.simd_level(), SimdLevel::Scalar);
+        assert_eq!(plan.schedule.len(), 8);
+        let default_plan = Stockham::new(256);
+        assert_eq!(default_plan.radix_config(), simd::radix());
     }
 }

@@ -50,9 +50,19 @@ impl TwiddleTable {
 
     /// Twiddle for a *sub*-transform of size `m` dividing `n`:
     /// W_m^k = W_n^{k * n/m} (paper eq. 5, reducibility).
+    ///
+    /// Panics if `m` does not divide `n` — in that case `n/m` truncates
+    /// and the reduction identity is simply wrong, so this must fail in
+    /// release builds too (a `debug_assert!` here once let release
+    /// callers read a silently wrong twiddle; the rust-release CI lane
+    /// exercises this path).
     #[inline]
     pub fn w_sub(&self, k: usize, m: usize) -> C32 {
-        debug_assert!(self.n % m == 0);
+        assert!(
+            m != 0 && self.n % m == 0,
+            "w_sub: sub-transform size {m} does not divide n={}",
+            self.n
+        );
         self.w_any(k * (self.n / m))
     }
 
@@ -160,6 +170,23 @@ mod tests {
                 assert!((t.w_sub(k, m) - direct).abs() < 1e-6, "m={m} k={k}");
             }
         }
+    }
+
+    /// Must fire in release builds too (regression: this used to be a
+    /// `debug_assert!`, so `cargo test --release` would read a wrong
+    /// twiddle instead of panicking).
+    #[test]
+    #[should_panic(expected = "does not divide")]
+    fn w_sub_rejects_non_dividing_m() {
+        let t = TwiddleTable::new(256);
+        let _ = t.w_sub(1, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not divide")]
+    fn w_sub_rejects_zero_m() {
+        let t = TwiddleTable::new(16);
+        let _ = t.w_sub(0, 0);
     }
 
     #[test]

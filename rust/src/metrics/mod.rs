@@ -169,20 +169,33 @@ impl LatencyHistogram {
     }
 
     /// Percentile (0-100) with intra-bucket linear interpolation.
+    ///
+    /// Hardened against the boundary cases an unchecked implementation gets
+    /// wrong: `pct` outside [0, 100] (or NaN) clamps to a real sample rank,
+    /// the rank arithmetic cannot underflow even if buckets are incremented
+    /// concurrently between loads, and the interpolated value is capped at
+    /// the observed maximum (a bucket's upper edge is only a bound, so raw
+    /// interpolation could report a latency no request ever had).
     pub fn percentile(&self, pct: f64) -> Duration {
         let total = self.count();
         if total == 0 {
             return Duration::ZERO;
         }
-        let target = (pct / 100.0 * total as f64).ceil().max(1.0) as u64;
+        let target = ((pct / 100.0 * total as f64).ceil() as u64).clamp(1, total);
+        let max_ns = self.max_ns.load(Ordering::Relaxed);
         let mut seen = 0u64;
         for i in 0..HIST_BUCKETS {
             let c = self.buckets[i].load(Ordering::Relaxed);
-            if seen + c >= target {
-                let frac = if c == 0 { 0.0 } else { (target - seen) as f64 / c as f64 };
+            if c > 0 && seen + c >= target {
+                // `seen < target` here (an earlier bucket would have matched
+                // otherwise), so the subtraction cannot underflow; `.min(c)`
+                // keeps the fraction ≤ 1 under concurrent recording.
+                let into = target.saturating_sub(seen).min(c);
+                let frac = into as f64 / c as f64;
                 let lo = Self::bucket_edge(i);
                 let hi = Self::bucket_edge(i + 1);
-                return Duration::from_nanos((lo + frac * (hi - lo)) as u64);
+                let ns = ((lo + frac * (hi - lo)) as u64).min(max_ns);
+                return Duration::from_nanos(ns);
             }
             seen += c;
         }
@@ -336,6 +349,14 @@ impl ServiceMetrics {
             self.plan_cache_hits.get(),
             self.plan_cache_misses.get()
         ));
+        // Resolved kernel configuration (DESIGN.md §11): what the Stockham
+        // level loop will actually run on this host, after env overrides.
+        s.push_str(&format!(
+            "kernel: radix={} simd={} (detected {})\n",
+            crate::fft::simd::radix().value(),
+            crate::fft::simd::active().name(),
+            crate::fft::simd::detected().name()
+        ));
         // The table cache is process-global by design (DESIGN.md §7), so
         // this line reports process-wide sharing, not per-service activity.
         let tables = crate::fft::table_stats();
@@ -448,6 +469,52 @@ mod tests {
         assert_eq!(h.mean(), Duration::ZERO);
     }
 
+    /// Regression: interpolation used to return a bucket's *upper* edge at
+    /// p100, reporting a latency larger than any recorded sample. 2 µs sits
+    /// exactly on a bucket lower edge, so the old code interpolated to
+    /// ~2.38 µs (the next edge) while max() said 2 µs.
+    #[test]
+    fn percentile_never_exceeds_max() {
+        let h = LatencyHistogram::new();
+        for _ in 0..1000 {
+            h.record(Duration::from_micros(2));
+        }
+        for pct in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert!(
+                h.percentile(pct) <= h.max(),
+                "p{pct} {:?} > max {:?}",
+                h.percentile(pct),
+                h.max()
+            );
+        }
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(123));
+        // Every percentile of a one-sample histogram is that sample
+        // (clamped to max, so no interpolation overshoot either).
+        for pct in [0.0, 50.0, 100.0] {
+            let p = h.percentile(pct);
+            assert!(p > Duration::ZERO && p <= h.max(), "p{pct} {p:?}");
+        }
+    }
+
+    #[test]
+    fn percentile_pct_out_of_range_clamps() {
+        let h = LatencyHistogram::new();
+        for i in 1..=100u64 {
+            h.record(Duration::from_micros(i));
+        }
+        // NaN / negative / >100 percentiles clamp to a real rank instead of
+        // underflowing or walking off the bucket array.
+        assert!(h.percentile(f64::NAN) > Duration::ZERO);
+        assert!(h.percentile(-5.0) > Duration::ZERO);
+        assert!(h.percentile(250.0) <= h.max());
+        assert!(h.percentile(-5.0) <= h.percentile(250.0));
+    }
+
     #[test]
     fn histogram_extremes_clamped() {
         let h = LatencyHistogram::new();
@@ -516,6 +583,9 @@ mod tests {
         assert_eq!(m.mean_batch_fill(), 7.0);
         let report = m.report();
         assert!(report.contains("mean fill 7.00"));
+        // Resolved kernel config is always surfaced.
+        assert!(report.contains("kernel: radix="), "missing kernel line: {report}");
+        assert!(report.contains(" simd="), "missing simd field: {report}");
         // The table cache (fft::memtier) is always surfaced…
         assert!(report.contains("table-cache (process-wide):"));
         // …but the stream section only appears once chunks streamed.

@@ -1,0 +1,147 @@
+//! SIMD kernel-layer contract suite (DESIGN.md §11).
+//!
+//! The determinism contract under test: for a **fixed** kernel
+//! configuration `(max radix, SIMD level)`, transform outputs are
+//! bit-for-bit identical across SIMD levels (scalar vs AVX2/NEON), thread
+//! counts, and batch paths — because scalar and vector bodies run the same
+//! IEEE operation sequence (no FMA) and data movement is exact. Accuracy
+//! (vs the O(n²) DFT oracle) is tolerance-based, per configuration.
+
+use std::sync::Arc;
+
+use memfft::fft::simd::{self, MaxRadix, SimdLevel};
+use memfft::fft::{dft::dft, Algorithm, PlanCache, ProblemSpec, Stockham};
+use memfft::util::complex::{max_abs_diff, C32};
+use memfft::util::{pool, Xoshiro256};
+
+fn bits(v: &[C32]) -> Vec<(u32, u32)> {
+    v.iter().map(|c| (c.re.to_bits(), c.im.to_bits())).collect()
+}
+
+/// Scalar and the host's detected vector level produce identical bits for
+/// every radix configuration across the full size sweep. On a host without
+/// AVX2/NEON this degenerates to scalar-vs-scalar (trivially true) — the
+/// CI matrix covers both sides via MEMFFT_SIMD.
+#[test]
+fn scalar_matches_detected_bitwise_across_sizes() {
+    let mut rng = Xoshiro256::seeded(0x51);
+    for radix in [MaxRadix::Two, MaxRadix::Four, MaxRadix::Eight] {
+        for lg in 3usize..=18 {
+            let n = 1usize << lg;
+            let x = rng.complex_vec(n);
+            let mut scalar_out = x.clone();
+            Stockham::with_config(n, radix, SimdLevel::Scalar).forward(&mut scalar_out);
+            let mut vector_out = x;
+            Stockham::with_config(n, radix, simd::detected()).forward(&mut vector_out);
+            assert_eq!(
+                bits(&scalar_out),
+                bits(&vector_out),
+                "radix={radix:?} n={n}: scalar vs {:?} diverged",
+                simd::detected()
+            );
+        }
+    }
+}
+
+/// Radix-8 and radix-2 schedules agree with the DFT oracle (and hence
+/// with each other) at small n; at large n (oracle too slow) they agree
+/// with each other within f32 accumulation noise.
+#[test]
+fn radix8_matches_radix2_and_dft_oracle() {
+    let mut rng = Xoshiro256::seeded(0x52);
+    for n in [8usize, 64, 512, 2048] {
+        let x = rng.complex_vec(n);
+        let expect = dft(&x);
+        for radix in [MaxRadix::Two, MaxRadix::Eight] {
+            let mut got = x.clone();
+            Stockham::with_config(n, radix, simd::detected()).forward(&mut got);
+            let err = max_abs_diff(&got, &expect);
+            assert!(err < 1e-3 * (n as f32).sqrt(), "radix={radix:?} n={n} err={err}");
+        }
+    }
+    let n = 1usize << 16;
+    let x = rng.complex_vec(n);
+    let mut r8 = x.clone();
+    Stockham::with_config(n, MaxRadix::Eight, simd::detected()).forward(&mut r8);
+    let mut r2 = x;
+    Stockham::with_config(n, MaxRadix::Two, simd::detected()).forward(&mut r2);
+    let err = max_abs_diff(&r8, &r2);
+    assert!(err < 1e-3 * (n as f32).sqrt(), "n={n} radix8 vs radix2 err={err}");
+}
+
+/// One plan, many thread budgets: batched execution is bit-identical for
+/// 1, 2 and 7 workers, on both the Stockham and the memory-tiered path.
+/// (Plans capture their kernel config at construction, so worker threads
+/// inherit it — this is what makes the contract hold per *plan*, not per
+/// thread.)
+#[test]
+fn thread_counts_are_bit_identical_per_config() {
+    let cache = PlanCache::new();
+    let mut rng = Xoshiro256::seeded(0x53);
+    for (algo, n, batch) in
+        [(Algorithm::Stockham, 1usize << 12, 8usize), (Algorithm::MemTier, 1 << 15, 4)]
+    {
+        let plan = cache.try_get(n, algo).unwrap();
+        let input = rng.complex_vec(n * batch);
+        let mut reference = vec![C32::ZERO; n * batch];
+        let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+        pool::with_threads(1, || {
+            plan.forward_batch_into(batch, &input, &mut reference, &mut scratch).unwrap();
+        });
+        for threads in [2usize, 7] {
+            let mut out = vec![C32::ZERO; n * batch];
+            pool::with_threads(threads, || {
+                plan.forward_batch_into(batch, &input, &mut out, &mut scratch).unwrap();
+            });
+            assert_eq!(
+                bits(&reference),
+                bits(&out),
+                "{algo:?} n={n} batch={batch} threads={threads}"
+            );
+        }
+    }
+}
+
+/// `MEMFFT_SIMD=off` (and friends) force the scalar path; the scoped
+/// override always does, regardless of environment. Run under the CI
+/// rust-simd matrix with MEMFFT_SIMD unset and =off to cover both arms.
+#[test]
+fn env_and_scoped_overrides_force_scalar_fallback() {
+    match std::env::var("MEMFFT_SIMD").ok().as_deref() {
+        Some("off") | Some("scalar") | Some("0") => {
+            assert_eq!(simd::active(), SimdLevel::Scalar, "MEMFFT_SIMD=off must win");
+        }
+        None => {
+            assert_eq!(simd::active(), simd::detected(), "no override: host level");
+        }
+        Some(_) => {} // explicit avx2/neon: sanitize() already covers it
+    }
+    simd::with_level(SimdLevel::Scalar, || {
+        assert_eq!(simd::active(), SimdLevel::Scalar);
+        // A plan built in this scope really is scalar.
+        let plan = Stockham::new(64);
+        assert_eq!(plan.simd_level(), SimdLevel::Scalar);
+    });
+}
+
+/// PlanCache keys on the resolved (radix, SIMD level): a forced-scalar
+/// radix-2 scope gets its own plan, reused within the same scope.
+#[test]
+fn plan_cache_keys_on_kernel_config() {
+    let cache = PlanCache::new();
+    let spec = ProblemSpec::one_d(1024).unwrap().with_algorithm(Algorithm::Stockham);
+    let base = cache.try_get_spec(&spec).unwrap();
+    let forced = simd::with_radix(MaxRadix::Two, || {
+        simd::with_level(SimdLevel::Scalar, || cache.try_get_spec(&spec).unwrap())
+    });
+    if (simd::radix(), simd::active()) != (MaxRadix::Two, SimdLevel::Scalar) {
+        assert!(
+            !Arc::ptr_eq(&base, &forced),
+            "different kernel configs must not share a cached plan"
+        );
+    }
+    let again = simd::with_radix(MaxRadix::Two, || {
+        simd::with_level(SimdLevel::Scalar, || cache.try_get_spec(&spec).unwrap())
+    });
+    assert!(Arc::ptr_eq(&forced, &again), "same config must reuse the cached plan");
+}
