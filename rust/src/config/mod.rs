@@ -307,6 +307,60 @@ impl NetConfig {
     }
 }
 
+/// Autotuning / wisdom knobs (`[tune]` section; DESIGN.md §12).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneConfig {
+    /// Wisdom file path (`tune.wisdom`). When non-empty the service
+    /// attaches it at startup: `Auto` planning resolves through persisted
+    /// measured winners, and the cost book's admission predictions are
+    /// seeded from the persisted ns/iter. A damaged or foreign-host file
+    /// logs a warning and the process plans heuristically. Empty = no
+    /// wisdom (the `MEMFFT_WISDOM` env var still applies).
+    pub wisdom: String,
+    /// Append cold measured-planner results to the attached wisdom file
+    /// (`tune.append_on_miss`). The `memfft tune` subcommand always
+    /// appends regardless of this knob.
+    pub append_on_miss: bool,
+    /// Default per-request completion deadline in milliseconds
+    /// (`tune.deadline_ms`). When the cost book predicts queue + execution
+    /// over this budget, the request is shed at admission with a typed
+    /// `Deadline` error (`Overloaded` on the wire). 0 = no default
+    /// deadline; per-request deadlines still apply.
+    pub deadline_ms: u64,
+    /// Adaptive batching target in microseconds (`tune.target_batch_us`):
+    /// buckets flush once the measured per-transform cost says one batch
+    /// would exceed this. 0 disables adaptation (static `max_batch`).
+    pub target_batch_us: u64,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        Self { wisdom: String::new(), append_on_miss: false, deadline_ms: 0, target_batch_us: 0 }
+    }
+}
+
+impl TuneConfig {
+    pub fn from_document(doc: &Document) -> Result<Self, ConfigError> {
+        let d = Self::default();
+        Ok(Self {
+            wisdom: doc.str_or("tune.wisdom", &d.wisdom)?,
+            append_on_miss: doc.bool_or("tune.append_on_miss", d.append_on_miss)?,
+            deadline_ms: doc.usize_or("tune.deadline_ms", d.deadline_ms as usize)? as u64,
+            target_batch_us: doc.usize_or("tune.target_batch_us", d.target_batch_us as usize)?
+                as u64,
+        })
+    }
+
+    /// The default deadline as the service wants it; `None` when disabled.
+    pub fn default_deadline(&self) -> Option<std::time::Duration> {
+        if self.deadline_ms == 0 {
+            None
+        } else {
+            Some(std::time::Duration::from_millis(self.deadline_ms))
+        }
+    }
+}
+
 /// Typed service configuration consumed by the launcher and coordinator.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
@@ -357,6 +411,9 @@ pub struct ServiceConfig {
     pub warmup: bool,
     /// TCP front-end knobs (`[net]` section) used by `memfft serve`.
     pub net: NetConfig,
+    /// Autotuning knobs (`[tune]` section): wisdom file, deadline
+    /// admission control, adaptive batching.
+    pub tune: TuneConfig,
 }
 
 impl Default for ServiceConfig {
@@ -375,6 +432,7 @@ impl Default for ServiceConfig {
             seed: 42,
             warmup: true,
             net: NetConfig::default(),
+            tune: TuneConfig::default(),
         }
     }
 }
@@ -396,6 +454,7 @@ impl ServiceConfig {
             seed: doc.usize_or("service.seed", d.seed as usize)? as u64,
             warmup: doc.bool_or("service.warmup", d.warmup)?,
             net: NetConfig::from_document(doc)?,
+            tune: TuneConfig::from_document(doc)?,
         })
     }
 
@@ -578,6 +637,32 @@ bandwidth_gbps = 144.0
         // read_timeout_ms = 0 disables the socket timeout.
         let doc = Document::parse("[net]\nread_timeout_ms = 0\n").unwrap();
         assert_eq!(ServiceConfig::from_document(&doc).unwrap().net.read_timeout(), None);
+    }
+
+    #[test]
+    fn tune_section_parses_with_defaults() {
+        let doc = Document::parse(
+            "[tune]\nwisdom = \"/tmp/host.wisdom\"\nappend_on_miss = true\n\
+             deadline_ms = 250\ntarget_batch_us = 500\n",
+        )
+        .unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.tune.wisdom, "/tmp/host.wisdom");
+        assert!(cfg.tune.append_on_miss);
+        assert_eq!(cfg.tune.deadline_ms, 250);
+        assert_eq!(cfg.tune.target_batch_us, 500);
+        assert_eq!(
+            cfg.tune.default_deadline(),
+            Some(std::time::Duration::from_millis(250))
+        );
+        cfg.validate().unwrap();
+        // Absent section: everything off (no wisdom, no deadline, static
+        // batching) — the pre-tune behavior.
+        let cfg = ServiceConfig::from_document(&Document::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.tune, TuneConfig::default());
+        assert!(cfg.tune.wisdom.is_empty());
+        assert_eq!(cfg.tune.default_deadline(), None);
+        cfg.validate().unwrap();
     }
 
     #[test]

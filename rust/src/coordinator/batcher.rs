@@ -97,11 +97,23 @@ impl Batcher {
 
     /// Add a request. Returns a full batch if the bucket hit `max_batch`.
     pub fn push(&mut self, req: FftRequest) -> Option<Batch> {
+        self.push_capped(req, self.config.max_batch)
+    }
+
+    /// Add a request with an adaptive flush threshold: the bucket flushes
+    /// at `cap` requests instead of the static `max_batch` (`cap` is
+    /// clamped to `1..=max_batch`, so adaptation can only shrink batches
+    /// below the configured ceiling, never grow past it). The service
+    /// derives `cap` from the cost book's measured per-transform cost so
+    /// expensive descriptors flush in small batches (bounded latency)
+    /// while cheap ones still fill wide ones (throughput).
+    pub fn push_capped(&mut self, req: FftRequest, cap: usize) -> Option<Batch> {
+        let cap = cap.clamp(1, self.config.max_batch);
         let key = (req.problem.key(), req.direction);
         let bucket = self.buckets.entry(key).or_default();
         bucket.push(req);
         self.pending += 1;
-        if bucket.len() >= self.config.max_batch {
+        if bucket.len() >= cap {
             // Remove the entry outright: a drained-but-present bucket would
             // linger in the map forever (one stale key per (descriptor,
             // direction) ever served), inflating every flush/deadline scan.
@@ -189,6 +201,8 @@ mod tests {
                 re: vec![0.0; n],
                 im: vec![0.0; n],
                 submitted_at: Instant::now(),
+                deadline: None,
+                charged_ns: 0,
                 reply: tx,
             },
             rx,
@@ -209,6 +223,8 @@ mod tests {
                 re: vec![0.0; n],
                 im: vec![0.0; n],
                 submitted_at: Instant::now(),
+                deadline: None,
+                charged_ns: 0,
                 reply: tx,
             },
             rx,
@@ -269,6 +285,36 @@ mod tests {
         _rxs.push(x4);
         assert!(b.push(r4).is_none());
         assert_eq!(b.bucket_count(), 2);
+    }
+
+    #[test]
+    fn push_capped_flushes_below_max_batch_and_clamps() {
+        // Adaptive cap: an expensive descriptor flushes at 2 even though
+        // max_batch is 8...
+        let mut b = Batcher::new(cfg(8, 1_000_000));
+        let mut _rxs = vec![];
+        let (r1, x1) = req(1, 64);
+        _rxs.push(x1);
+        assert!(b.push_capped(r1, 2).is_none());
+        let (r2, x2) = req(2, 64);
+        _rxs.push(x2);
+        let batch = b.push_capped(r2, 2).expect("cap of 2 flushes at 2");
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.pending(), 0);
+        // ...a cap of 0 clamps to 1 (every push flushes)...
+        let (r3, x3) = req(3, 64);
+        _rxs.push(x3);
+        assert_eq!(b.push_capped(r3, 0).expect("cap clamps to 1").requests.len(), 1);
+        // ...and a huge cap clamps DOWN to max_batch, never past it.
+        for id in 10..17 {
+            let (r, x) = req(id, 64);
+            _rxs.push(x);
+            assert!(b.push_capped(r, usize::MAX).is_none());
+        }
+        let (r, x) = req(17, 64);
+        _rxs.push(x);
+        let full = b.push_capped(r, usize::MAX).expect("max_batch still flushes");
+        assert_eq!(full.requests.len(), 8);
     }
 
     #[test]
@@ -343,6 +389,8 @@ mod tests {
                 re: vec![0.0; n],
                 im: vec![0.0; n],
                 submitted_at: at,
+                deadline: None,
+                charged_ns: 0,
                 reply: tx,
             },
             rx,

@@ -1,0 +1,245 @@
+//! Per-descriptor cost book: the service's measured-cost ledger behind
+//! deadline admission control and adaptive batch sizing (DESIGN.md §12).
+//!
+//! Every executed batch feeds an EWMA of per-transform execution cost,
+//! keyed like the batcher buckets on `(SpecKey, Direction)`. Before a
+//! descriptor has ever executed, the estimate falls back to persisted
+//! wisdom (`fft::wisdom::peek_ns`, 1-D complex lanes only). From the
+//! estimate the service derives:
+//!
+//! - **Admission**: predicted wait = (pending charged work / workers) +
+//!   own cost. If a request carries a deadline the prediction cannot
+//!   meet, it is shed *now* with `ServiceError::Deadline` instead of
+//!   burning a worker on a response the client will have abandoned.
+//!   No estimate → admit: the book refuses to guess; the first
+//!   execution of a descriptor is how it learns.
+//! - **Adaptive batching**: `batch_cap` sizes a bucket's flush threshold
+//!   so one batch costs ~`target_ns` — expensive descriptors flush in
+//!   small batches (bounded latency), cheap ones fill wide (throughput).
+//!
+//! Pure data structure (no threads, no clocks of its own), so it is
+//! directly unit-tested; `service.rs` owns the single instance.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::request::Direction;
+use crate::fft::{ProblemSpec, Shape, SpecKey};
+
+/// EWMA smoothing factor: new = α·sample + (1-α)·old. 0.3 follows load
+/// shifts within a few batches without letting one outlier (a page fault,
+/// a cold cache) repoint the whole book.
+const ALPHA: f64 = 0.3;
+
+#[derive(Default)]
+struct Ewma {
+    ns_per_transform: f64,
+    samples: u64,
+}
+
+/// Measured + predicted per-transform cost, and the pending-work ledger.
+#[derive(Default)]
+pub struct CostBook {
+    measured: Mutex<HashMap<(SpecKey, Direction), Ewma>>,
+    /// Execution nanoseconds admitted but not yet completed, summed over
+    /// every in-flight request that had an estimate at admission.
+    pending_ns: AtomicU64,
+}
+
+impl CostBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Best current per-transform cost estimate for a descriptor:
+    /// measured EWMA first, persisted wisdom second (1-D complex lanes,
+    /// where wisdom entries exist), `None` when the book has never seen
+    /// the descriptor and wisdom has nothing — in which case admission
+    /// control admits rather than guessing.
+    pub fn estimate_ns(&self, problem: &ProblemSpec, direction: Direction) -> Option<f64> {
+        let key = (problem.key(), direction);
+        if let Some(e) = self.measured.lock().unwrap().get(&key) {
+            if e.samples > 0 {
+                return Some(e.ns_per_transform);
+            }
+        }
+        match problem.shape() {
+            Shape::OneD { n } => crate::fft::wisdom::peek_ns(n),
+            _ => None,
+        }
+    }
+
+    /// Fold one executed batch into the EWMA: `exec` covered
+    /// `batch_size` transforms of this descriptor.
+    pub fn observe(
+        &self,
+        problem: &ProblemSpec,
+        direction: Direction,
+        exec: Duration,
+        batch_size: usize,
+    ) {
+        if batch_size == 0 {
+            return;
+        }
+        let sample = exec.as_nanos() as f64 / batch_size as f64;
+        if !sample.is_finite() {
+            return;
+        }
+        let mut map = self.measured.lock().unwrap();
+        let e = map.entry((problem.key(), direction)).or_default();
+        if e.samples == 0 {
+            e.ns_per_transform = sample;
+        } else {
+            e.ns_per_transform = ALPHA * sample + (1.0 - ALPHA) * e.ns_per_transform;
+        }
+        e.samples += 1;
+    }
+
+    /// Charge `ns` of predicted work to the in-flight ledger (at
+    /// admission). Returns the charged amount for the request to carry,
+    /// so the discharge at completion removes exactly what was added.
+    pub fn charge(&self, ns: u64) -> u64 {
+        self.pending_ns.fetch_add(ns, Ordering::Relaxed);
+        ns
+    }
+
+    /// Discharge previously charged work (batch completed or failed).
+    pub fn discharge(&self, ns: u64) {
+        // Saturating: a racing reset can never wrap the ledger negative.
+        self.pending_ns
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                Some(cur.saturating_sub(ns))
+            })
+            .ok();
+    }
+
+    /// Predicted nanoseconds of already-admitted work ahead of a new
+    /// arrival, spread across `workers` lanes.
+    pub fn predicted_queue_ns(&self, workers: usize) -> u64 {
+        self.pending_ns.load(Ordering::Relaxed) / workers.max(1) as u64
+    }
+
+    /// Predicted completion time for a new request of this descriptor:
+    /// queue drain + its own execution. `None` when no estimate exists
+    /// for the descriptor itself (admit — never shed on a guess).
+    pub fn predicted_total_ns(
+        &self,
+        problem: &ProblemSpec,
+        direction: Direction,
+        workers: usize,
+    ) -> Option<u64> {
+        let own = self.estimate_ns(problem, direction)?;
+        Some(self.predicted_queue_ns(workers).saturating_add(own as u64))
+    }
+
+    /// Adaptive flush threshold: how many transforms of this descriptor
+    /// fit in `target_ns` of batch execution. No estimate or no target →
+    /// `fallback` (the static `max_batch`); the batcher clamps to
+    /// `1..=max_batch` regardless.
+    pub fn batch_cap(
+        &self,
+        problem: &ProblemSpec,
+        direction: Direction,
+        target_ns: u64,
+        fallback: usize,
+    ) -> usize {
+        if target_ns == 0 {
+            return fallback;
+        }
+        match self.estimate_ns(problem, direction) {
+            Some(ns) if ns > 0.0 => ((target_ns as f64 / ns) as usize).max(1),
+            _ => fallback,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(n: usize) -> ProblemSpec {
+        ProblemSpec::one_d(n).unwrap()
+    }
+
+    #[test]
+    fn ewma_tracks_observed_batches() {
+        let book = CostBook::new();
+        let p = spec(1024);
+        assert_eq!(book.estimate_ns(&p, Direction::Forward), None);
+        // 4 transforms in 4 µs → 1000 ns each.
+        book.observe(&p, Direction::Forward, Duration::from_micros(4), 4);
+        assert_eq!(book.estimate_ns(&p, Direction::Forward), Some(1000.0));
+        // A slower sample moves the average toward it, but not all the way.
+        book.observe(&p, Direction::Forward, Duration::from_micros(8), 4);
+        let e = book.estimate_ns(&p, Direction::Forward).unwrap();
+        assert!(e > 1000.0 && e < 2000.0, "EWMA must smooth, got {e}");
+        // Directions are independent lanes.
+        assert_eq!(book.estimate_ns(&p, Direction::Inverse), None);
+        // Distinct descriptors are independent.
+        assert_eq!(book.estimate_ns(&spec(2048), Direction::Forward), None);
+    }
+
+    #[test]
+    fn ledger_charges_and_discharges() {
+        let book = CostBook::new();
+        assert_eq!(book.predicted_queue_ns(1), 0);
+        let c1 = book.charge(10_000);
+        let c2 = book.charge(6_000);
+        assert_eq!(book.predicted_queue_ns(1), 16_000);
+        // Two workers drain in parallel.
+        assert_eq!(book.predicted_queue_ns(2), 8_000);
+        book.discharge(c1);
+        assert_eq!(book.predicted_queue_ns(1), 6_000);
+        book.discharge(c2);
+        assert_eq!(book.predicted_queue_ns(1), 0);
+        // Over-discharge saturates instead of wrapping.
+        book.discharge(1_000_000);
+        assert_eq!(book.predicted_queue_ns(1), 0);
+    }
+
+    #[test]
+    fn predicted_total_combines_queue_and_own_cost() {
+        let book = CostBook::new();
+        let p = spec(512);
+        // Never seen, no wisdom → no prediction → admit.
+        assert_eq!(book.predicted_total_ns(&p, Direction::Forward, 1), None);
+        book.observe(&p, Direction::Forward, Duration::from_micros(2), 1); // 2000 ns
+        book.charge(8_000);
+        assert_eq!(book.predicted_total_ns(&p, Direction::Forward, 1), Some(10_000));
+        assert_eq!(book.predicted_total_ns(&p, Direction::Forward, 4), Some(4_000));
+    }
+
+    #[test]
+    fn wisdom_backfills_estimates_for_one_d_lanes() {
+        use crate::fft::wisdom::{self, Wisdom, WisdomEntry, WisdomKey};
+        use crate::fft::Algorithm;
+        let n = 8192usize;
+        let mut w = Wisdom::for_current_host();
+        w.insert(WisdomKey::current(n), WisdomEntry { algo: Algorithm::Stockham, ns: 4500.0 });
+        wisdom::with_attached(&w, || {
+            let book = CostBook::new();
+            let p = spec(n);
+            assert_eq!(book.estimate_ns(&p, Direction::Forward), Some(4500.0));
+            // A measured sample outranks the wisdom backfill.
+            book.observe(&p, Direction::Forward, Duration::from_nanos(9000), 1);
+            assert_eq!(book.estimate_ns(&p, Direction::Forward), Some(9000.0));
+        });
+    }
+
+    #[test]
+    fn batch_cap_scales_inverse_to_cost() {
+        let book = CostBook::new();
+        let p = spec(256);
+        // No estimate → fallback.
+        assert_eq!(book.batch_cap(&p, Direction::Forward, 1_000_000, 8), 8);
+        // 1000 ns per transform against a 4 µs target → cap 4.
+        book.observe(&p, Direction::Forward, Duration::from_micros(1), 1);
+        assert_eq!(book.batch_cap(&p, Direction::Forward, 4_000, 8), 4);
+        // A target below one transform still caps at 1, never 0.
+        assert_eq!(book.batch_cap(&p, Direction::Forward, 10, 8), 1);
+        // Target 0 disables adaptation.
+        assert_eq!(book.batch_cap(&p, Direction::Forward, 0, 8), 8);
+    }
+}

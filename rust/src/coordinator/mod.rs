@@ -21,6 +21,7 @@
 
 pub mod backend;
 pub mod batcher;
+pub mod cost;
 pub mod request;
 pub mod service;
 pub mod stream;
@@ -28,6 +29,7 @@ pub mod workload;
 
 pub use backend::{Backend, BackendError, BatchOutput, BatchSpec, ModeledBackend, NativeBackend, PjrtBackend};
 pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use cost::CostBook;
 pub use request::{Direction, FftRequest, FftResponse, FftResult, ServiceError};
 pub use service::FftService;
 pub use stream::StreamProcessor;

@@ -1,7 +1,7 @@
 //! Request/response types for the FFT service.
 
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::fft::ProblemSpec;
 
@@ -33,6 +33,16 @@ pub struct FftRequest {
     pub re: Vec<f32>,
     pub im: Vec<f32>,
     pub submitted_at: Instant,
+    /// Completion deadline for this request lane, measured from
+    /// submission. Admission control (`coordinator::cost`) sheds the
+    /// request up front with [`ServiceError::Deadline`] when the
+    /// predicted queue + execution cost already exceeds it. `None`
+    /// admits unconditionally (the pre-deadline behavior).
+    pub deadline: Option<Duration>,
+    /// Predicted execution cost (ns) charged against the cost book's
+    /// pending-work ledger at admission; discharged when the batch this
+    /// request rode in completes or fails. Zero when no estimate existed.
+    pub charged_ns: u64,
     /// One-shot reply channel.
     pub reply: mpsc::Sender<FftResult>,
 }
@@ -48,6 +58,11 @@ impl FftRequest {
 #[derive(Debug, Clone, PartialEq)]
 pub enum ServiceError {
     Rejected,
+    /// Shed at admission: the cost model predicts `predicted_ms` of
+    /// queue + execution time against a `deadline_ms` budget, so the
+    /// request is doomed — answering `Overloaded` now beats timing out
+    /// the client after burning a worker on it.
+    Deadline { predicted_ms: u64, deadline_ms: u64 },
     UnsupportedSize(usize),
     BadInput { n: usize, got: usize },
     Exec(String),
@@ -58,6 +73,11 @@ impl std::fmt::Display for ServiceError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ServiceError::Rejected => write!(f, "queue full — request rejected (backpressure)"),
+            ServiceError::Deadline { predicted_ms, deadline_ms } => write!(
+                f,
+                "deadline unmeetable — predicted {predicted_ms} ms against a \
+                 {deadline_ms} ms deadline (shed at admission)"
+            ),
             ServiceError::UnsupportedSize(n) => {
                 write!(f, "unsupported size {n} (not a power of two or no artifact)")
             }
@@ -102,5 +122,9 @@ mod tests {
     fn errors_display() {
         assert!(ServiceError::Rejected.to_string().contains("backpressure"));
         assert!(ServiceError::UnsupportedSize(12).to_string().contains("12"));
+        let d = ServiceError::Deadline { predicted_ms: 120, deadline_ms: 50 };
+        let msg = d.to_string();
+        assert!(msg.contains("120") && msg.contains("50"), "{msg}");
+        assert!(msg.contains("deadline"), "{msg}");
     }
 }

@@ -23,6 +23,7 @@ use std::time::{Duration, Instant};
 
 use super::backend::{self, Backend, BatchSpec};
 use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::cost::CostBook;
 use super::request::{Direction, FftRequest, FftResponse, FftResult, ServiceError};
 use crate::config::ServiceConfig;
 use crate::fft::{Domain, ProblemSpec, Shape};
@@ -40,6 +41,8 @@ pub struct FftService {
     metrics: Arc<ServiceMetrics>,
     next_id: AtomicU64,
     config: ServiceConfig,
+    costs: Arc<CostBook>,
+    default_deadline: Option<Duration>,
     batcher_handle: Option<JoinHandle<()>>,
     worker_handles: Vec<JoinHandle<()>>,
 }
@@ -50,7 +53,25 @@ impl FftService {
     /// manifest (workers fail requests with `Exec` errors if compile
     /// fails, they do not crash the service).
     pub fn start(config: ServiceConfig) -> Self {
+        // Attach persisted wisdom before any worker plans: `Auto`
+        // resolution and warmup then serve measured winners from the file
+        // instead of heuristics. Damage degrades to heuristic planning
+        // with a warning — a bad wisdom file must never stop the service.
+        if !config.tune.wisdom.is_empty() {
+            match crate::fft::wisdom::attach(std::path::Path::new(&config.tune.wisdom)) {
+                Ok(entries) => {
+                    eprintln!("wisdom: attached {} ({entries} entries)", config.tune.wisdom)
+                }
+                Err(e) => eprintln!(
+                    "wisdom: {e}; falling back to heuristic planning ({})",
+                    config.tune.wisdom
+                ),
+            }
+            crate::fft::wisdom::set_append(config.tune.append_on_miss);
+        }
+
         let metrics = Arc::new(ServiceMetrics::new());
+        let costs = Arc::new(CostBook::new());
         let (submit_tx, submit_rx) = mpsc::sync_channel::<BatcherMsg>(config.queue_depth);
         let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
@@ -59,9 +80,11 @@ impl FftService {
             max_batch: config.max_batch,
             max_delay: Duration::from_micros(config.max_delay_us),
         };
+        let batcher_costs = costs.clone();
+        let target_ns = config.tune.target_batch_us.saturating_mul(1_000);
         let batcher_handle = std::thread::Builder::new()
             .name("memfft-batcher".into())
-            .spawn(move || batcher_loop(submit_rx, batch_tx, batcher_cfg))
+            .spawn(move || batcher_loop(submit_rx, batch_tx, batcher_cfg, batcher_costs, target_ns))
             .expect("spawn batcher");
 
         let (ready_tx, ready_rx) = mpsc::channel::<()>();
@@ -71,9 +94,10 @@ impl FftService {
                 let metrics = metrics.clone();
                 let cfg = config.clone();
                 let ready = ready_tx.clone();
+                let costs = costs.clone();
                 std::thread::Builder::new()
                     .name(format!("memfft-worker-{w}"))
-                    .spawn(move || worker_loop(rx, metrics, cfg, ready))
+                    .spawn(move || worker_loop(rx, metrics, cfg, costs, ready))
                     .expect("spawn worker")
             })
             .collect();
@@ -84,11 +108,14 @@ impl FftService {
             let _ = ready_rx.recv();
         }
 
+        let default_deadline = config.tune.default_deadline();
         Self {
             submit_tx,
             metrics,
             next_id: AtomicU64::new(1),
             config,
+            costs,
+            default_deadline,
             batcher_handle: Some(batcher_handle),
             worker_handles,
         }
@@ -138,6 +165,26 @@ impl FftService {
         re: Vec<f32>,
         im: Vec<f32>,
     ) -> Result<Receiver<FftResult>, ServiceError> {
+        self.submit_spec_with_deadline(problem, direction, re, im, None)
+    }
+
+    /// [`FftService::submit_spec`] with an explicit per-request deadline
+    /// (overrides the `tune.deadline_ms` default; `None` falls back to
+    /// it). Admission control: when the cost book can predict this
+    /// request's queue + execution time and the prediction already
+    /// exceeds the deadline, the request is shed *now* with a typed
+    /// [`ServiceError::Deadline`] (counted in `requests_shed`) instead of
+    /// admitting work the client will have given up on. A descriptor the
+    /// book has never measured — and wisdom cannot price — always admits:
+    /// the service never sheds on a guess.
+    pub fn submit_spec_with_deadline(
+        &self,
+        problem: ProblemSpec,
+        direction: Direction,
+        re: Vec<f32>,
+        im: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<FftResult>, ServiceError> {
         let n = problem.transform_elems();
         if problem.batch() != 1 {
             return Err(ServiceError::BadInput { n, got: n * problem.batch() });
@@ -145,6 +192,28 @@ impl FftService {
         if re.len() != n || im.len() != n {
             return Err(ServiceError::BadInput { n, got: re.len().min(im.len()) });
         }
+        let deadline = deadline.or(self.default_deadline);
+        if let Some(d) = deadline {
+            if let Some(predicted) =
+                self.costs.predicted_total_ns(&problem, direction, self.config.workers)
+            {
+                if predicted as u128 > d.as_nanos() {
+                    self.metrics.requests_shed.inc();
+                    return Err(ServiceError::Deadline {
+                        predicted_ms: predicted / 1_000_000,
+                        deadline_ms: d.as_millis() as u64,
+                    });
+                }
+            }
+        }
+        // Charge the admitted request's predicted cost to the in-flight
+        // ledger (deadline or not — deadline-carrying arrivals must see
+        // the queue depth that unconstrained traffic creates). Discharged
+        // by the worker when the batch completes or fails.
+        let charged_ns = match self.costs.estimate_ns(&problem, direction) {
+            Some(est) if est > 0.0 => self.costs.charge(est as u64),
+            _ => 0,
+        };
         if matches!(problem.shape(), Shape::TwoD { .. }) {
             self.metrics.requests_2d.inc();
         }
@@ -159,12 +228,19 @@ impl FftService {
             re,
             im,
             submitted_at: Instant::now(),
+            deadline,
+            charged_ns,
             reply,
         };
         self.metrics.requests_in.inc();
         match self.submit_tx.try_send(BatcherMsg::Request(req)) {
             Ok(()) => Ok(rx),
-            Err(TrySendError::Full(_)) => {
+            Err(TrySendError::Full(req)) => {
+                // Roll back the ledger charge: a rejected request never
+                // reaches a worker, so nothing would discharge it.
+                if let BatcherMsg::Request(r) = req {
+                    self.costs.discharge(r.charged_ns);
+                }
                 self.metrics.requests_rejected.inc();
                 Err(ServiceError::Rejected)
             }
@@ -220,13 +296,25 @@ impl Drop for FftService {
     }
 }
 
-fn batcher_loop(rx: Receiver<BatcherMsg>, tx: mpsc::Sender<Batch>, cfg: BatcherConfig) {
+fn batcher_loop(
+    rx: Receiver<BatcherMsg>,
+    tx: mpsc::Sender<Batch>,
+    cfg: BatcherConfig,
+    costs: Arc<CostBook>,
+    target_ns: u64,
+) {
     let mut batcher = Batcher::new(cfg);
     loop {
         let timeout = batcher.next_deadline(Instant::now()).unwrap_or(cfg.max_delay.max(Duration::from_millis(10)));
         match rx.recv_timeout(timeout) {
             Ok(BatcherMsg::Request(req)) => {
-                if let Some(batch) = batcher.push(req) {
+                // Adaptive batch sizing: flush this descriptor's bucket
+                // once one batch would cost ~target_ns of measured
+                // execution (cap clamped to 1..=max_batch by the batcher;
+                // target 0 or an unmeasured descriptor keeps the static
+                // max_batch).
+                let cap = costs.batch_cap(&req.problem, req.direction, target_ns, cfg.max_batch);
+                if let Some(batch) = batcher.push_capped(req, cap) {
                     if tx.send(batch).is_err() {
                         return;
                     }
@@ -252,6 +340,7 @@ fn worker_loop(
     rx: Arc<Mutex<Receiver<Batch>>>,
     metrics: Arc<ServiceMetrics>,
     cfg: ServiceConfig,
+    costs: Arc<CostBook>,
     ready: mpsc::Sender<()>,
 ) {
     // The `threads` and `cache.tile` config knobs scope the FFT library's
@@ -263,7 +352,7 @@ fn worker_loop(
     let threads = cfg.threads;
     let tile = cfg.cache_tile;
     crate::util::pool::with_threads(threads, || {
-        crate::config::cache::with_tile(tile, || worker_body(rx, metrics, cfg, ready))
+        crate::config::cache::with_tile(tile, || worker_body(rx, metrics, cfg, costs, ready))
     });
 }
 
@@ -271,6 +360,7 @@ fn worker_body(
     rx: Arc<Mutex<Receiver<Batch>>>,
     metrics: Arc<ServiceMetrics>,
     cfg: ServiceConfig,
+    costs: Arc<CostBook>,
     ready: mpsc::Sender<()>,
 ) {
     // Each worker owns one Backend (PJRT clients are thread-confined, so
@@ -295,19 +385,20 @@ fn worker_body(
                 Err(_) => return, // batcher gone, no more work
             }
         };
-        run_batch(batch, backend.as_mut(), &metrics);
+        run_batch(batch, backend.as_mut(), &metrics, &costs);
     }
 }
 
 /// The one execution path: gather planar planes, run the batch through
 /// `Backend::execute_batch`, scatter responses. Substrate differences
 /// (chunking, plan caches, cost models) live behind the trait.
-fn run_batch(batch: Batch, backend: &mut dyn Backend, metrics: &ServiceMetrics) {
+fn run_batch(batch: Batch, backend: &mut dyn Backend, metrics: &ServiceMetrics, costs: &CostBook) {
     let n = batch.n();
     let count = batch.requests.len();
     let now = Instant::now();
     metrics.batches_executed.inc();
     metrics.batch_fill.add(count as u64);
+    let charged_total: u64 = batch.requests.iter().map(|r| r.charged_ns).sum();
     for r in &batch.requests {
         metrics.queue_latency.record(now.duration_since(r.submitted_at));
     }
@@ -322,7 +413,7 @@ fn run_batch(batch: Batch, backend: &mut dyn Backend, metrics: &ServiceMetrics) 
     // Re-batch the shared per-transform descriptor to the bucket's fill.
     let problem = match batch.problem.batched(count) {
         Ok(p) => p,
-        Err(e) => return fail_batch(batch, ServiceError::Exec(e.to_string()), metrics),
+        Err(e) => return fail_batch(batch, ServiceError::Exec(e.to_string()), metrics, costs),
     };
     let spec = BatchSpec::new(problem, batch.direction);
 
@@ -331,6 +422,16 @@ fn run_batch(batch: Batch, backend: &mut dyn Backend, metrics: &ServiceMetrics) 
             metrics.exec_latency.record(out.exec_time);
             metrics.plan_cache_hits.add(out.plan_cache_hits);
             metrics.plan_cache_misses.add(out.plan_cache_misses);
+            // Feed the cost book: discharge what admission charged, fold
+            // the measured per-transform cost into the EWMA, and surface
+            // the prediction error (|predicted − actual| / actual).
+            costs.discharge(charged_total);
+            costs.observe(&batch.problem, batch.direction, out.exec_time, count);
+            let actual_ns = out.exec_time.as_nanos() as u64;
+            if charged_total > 0 && actual_ns > 0 {
+                let err_pct = (charged_total.abs_diff(actual_ns)) * 100 / actual_ns;
+                metrics.cost_err_pct.set(err_pct as i64);
+            }
             let done = Instant::now();
             for (i, r) in batch.requests.iter().enumerate() {
                 let resp = FftResponse {
@@ -346,11 +447,15 @@ fn run_batch(batch: Batch, backend: &mut dyn Backend, metrics: &ServiceMetrics) 
                 let _ = r.reply.send(Ok(resp));
             }
         }
-        Err(err) => fail_batch(batch, err.into(), metrics),
+        Err(err) => fail_batch(batch, err.into(), metrics, costs),
     }
 }
 
-fn fail_batch(batch: Batch, err: ServiceError, metrics: &ServiceMetrics) {
+fn fail_batch(batch: Batch, err: ServiceError, metrics: &ServiceMetrics, costs: &CostBook) {
+    // A failed batch still discharges its admission charges — leaked
+    // pending work would inflate every future wait prediction.
+    let charged: u64 = batch.requests.iter().map(|r| r.charged_ns).sum();
+    costs.discharge(charged);
     for r in batch.requests {
         metrics.requests_failed.inc();
         let _ = r.reply.send(Err(err.clone()));
@@ -599,5 +704,160 @@ mod tests {
         svc.shutdown();
         // The request must have been answered (flushed on shutdown), not lost.
         assert!(rx.recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn deadline_admission_sheds_unmeetable_requests() {
+        use crate::util::complex::C32;
+        let svc = FftService::start(ServiceConfig {
+            method: "native".into(),
+            workers: 1,
+            max_batch: 4,
+            max_delay_us: 100,
+            queue_depth: 64,
+            ..Default::default()
+        });
+        let n = 1024usize;
+        let problem = ProblemSpec::one_d(n).unwrap();
+        let mut rng = crate::util::Xoshiro256::seeded(23);
+        let re = rng.real_vec(n);
+        let im = rng.real_vec(n);
+
+        // Before the cost book has ever priced this descriptor, admission
+        // must admit — never shed on a guess — even with a 1 ns deadline.
+        let rx = svc
+            .submit_spec_with_deadline(
+                problem,
+                Direction::Forward,
+                re.clone(),
+                im.clone(),
+                Some(Duration::from_nanos(1)),
+            )
+            .expect("unmeasured descriptor always admits");
+        rx.recv().unwrap().unwrap();
+
+        // The book now holds a measured per-transform cost; a 1 ns
+        // deadline is provably unmeetable → typed shed at admission,
+        // counted in requests_shed, and no worker ever sees the request.
+        let before = svc.metrics().batches_executed.get();
+        let err = svc
+            .submit_spec_with_deadline(
+                problem,
+                Direction::Forward,
+                re.clone(),
+                im.clone(),
+                Some(Duration::from_nanos(1)),
+            )
+            .expect_err("measured descriptor against 1 ns deadline must shed");
+        match err {
+            ServiceError::Deadline { predicted_ms, deadline_ms } => {
+                assert_eq!(deadline_ms, 0, "1 ns deadline rounds to 0 ms");
+                // predicted_ms may round to 0 for a fast transform; the
+                // typed variant itself is the contract.
+                let _ = predicted_ms;
+            }
+            other => panic!("expected Deadline, got {other:?}"),
+        }
+        assert_eq!(svc.metrics().requests_shed.get(), 1);
+        assert_eq!(
+            svc.metrics().batches_executed.get(),
+            before,
+            "a shed request must not reach a worker"
+        );
+
+        // An in-deadline request completes and is bit-identical to the
+        // local library plan for the same descriptor (Auto resolution,
+        // batch 1 — the same path the native worker takes).
+        let resp = svc
+            .submit_spec_with_deadline(
+                problem,
+                Direction::Forward,
+                re.clone(),
+                im.clone(),
+                Some(Duration::from_secs(60)),
+            )
+            .expect("generous deadline admits")
+            .recv()
+            .unwrap()
+            .unwrap();
+        let local = crate::fft::plan(&problem).unwrap();
+        let input: Vec<C32> =
+            re.iter().zip(&im).map(|(&a, &b)| C32::new(a, b)).collect();
+        let mut out = vec![C32::ZERO; n];
+        let mut scratch = vec![C32::ZERO; local.scratch_len()];
+        local.forward_batched(&input, &mut out, &mut scratch).unwrap();
+        for k in 0..n {
+            assert_eq!(resp.re[k].to_bits(), out[k].re.to_bits(), "re[{k}]");
+            assert_eq!(resp.im[k].to_bits(), out[k].im.to_bits(), "im[{k}]");
+        }
+        // Ledger drained: nothing in flight once all replies arrived.
+        assert_eq!(svc.costs.predicted_queue_ns(1), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn deadline_default_comes_from_tune_config_and_ledger_rolls_back() {
+        // tune.deadline_ms applies to plain submit_spec calls, and a
+        // queue-full rejection rolls its admission charge back off the
+        // pending-work ledger.
+        let mut cfg = ServiceConfig {
+            method: "native".into(),
+            workers: 1,
+            max_batch: 4,
+            max_delay_us: 100,
+            queue_depth: 64,
+            ..Default::default()
+        };
+        cfg.tune.deadline_ms = 0; // 0 = no default deadline
+        let svc = FftService::start(cfg);
+        assert_eq!(svc.default_deadline, None);
+        let n = 256;
+        // Warm the book, then verify charges discharge to zero.
+        svc.fft_blocking(n, Direction::Forward, vec![1.0; n], vec![0.0; n]).unwrap();
+        svc.fft_blocking(n, Direction::Forward, vec![1.0; n], vec![0.0; n]).unwrap();
+        assert_eq!(svc.costs.predicted_queue_ns(1), 0, "completed work must discharge");
+        svc.shutdown();
+
+        let mut cfg2 = native_cfg();
+        cfg2.tune.deadline_ms = 5_000;
+        let svc2 = FftService::start(cfg2);
+        assert_eq!(svc2.default_deadline, Some(Duration::from_millis(5_000)));
+        svc2.shutdown();
+    }
+
+    #[test]
+    fn adaptive_batching_caps_buckets_by_measured_cost() {
+        // A microscopic target_batch_us forces every measured descriptor
+        // to flush in batches of 1 even under a queue pile-up that the
+        // static max_batch would have coalesced.
+        let mut cfg = ServiceConfig {
+            method: "native".into(),
+            workers: 1,
+            max_batch: 8,
+            max_delay_us: 5000,
+            queue_depth: 256,
+            ..Default::default()
+        };
+        cfg.tune.target_batch_us = 1; // 1 µs per batch: cap collapses to 1
+        let svc = FftService::start(cfg);
+        let n = 1024;
+        // First request measures the descriptor (unmeasured → static cap).
+        svc.fft_blocking(n, Direction::Forward, vec![1.0; n], vec![0.0; n]).unwrap();
+        let warm_batches = svc.metrics().batches_executed.get();
+
+        // Pile up 16 requests against the single worker; with the EWMA
+        // priced far above 1 µs, every bucket flushes at cap 1.
+        let rxs: Vec<_> = (0..16)
+            .map(|_| svc.submit(n, Direction::Forward, vec![1.0; n], vec![0.0; n]).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let batches = svc.metrics().batches_executed.get() - warm_batches;
+        assert_eq!(
+            batches, 16,
+            "cost-capped batcher must flush each measured request alone, got {batches} batches"
+        );
+        svc.shutdown();
     }
 }

@@ -45,7 +45,10 @@
 //!
 //! [`PlanCache`] memoizes plans on the **resolved descriptor** (+
 //! effective memory-tier tile), so `Auto` and its concrete winner share
-//! one plan; `Planner::measured` times candidates like FFTW_MEASURE.
+//! one plan; `Planner::measured` times candidates like FFTW_MEASURE,
+//! pruned by the gpusim cost model, and the [`wisdom`] layer persists
+//! the winners per host (DESIGN.md §12) so measurement is paid once per
+//! machine, not once per process.
 //!
 //! Migration note (descriptor redesign, DESIGN.md §9): the legacy
 //! constructors remain as thin compat shims — `FftPlan::new(n, algo)` ≡
@@ -99,6 +102,7 @@ pub mod stockham;
 pub mod transform;
 pub mod twiddle;
 pub mod window;
+pub mod wisdom;
 
 pub use bitrev::BitRev;
 pub use bluestein::Bluestein;
@@ -116,3 +120,4 @@ pub use stockham::Stockham;
 pub use transform::{FftError, Transform};
 pub use twiddle::{AngleLut, TwiddleTable};
 pub use window::{apply as apply_window, Window};
+pub use wisdom::{Wisdom, WisdomError};

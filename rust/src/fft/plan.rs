@@ -75,6 +75,38 @@ impl Algorithm {
         })
     }
 
+    /// Stable one-byte code for the wisdom file (`fft::wisdom`). Codes are
+    /// append-only: renumbering an existing algorithm would silently remap
+    /// every persisted entry, so new algorithms take the next free code.
+    pub fn code(self) -> u8 {
+        match self {
+            Algorithm::Auto => 0,
+            Algorithm::Radix2 => 1,
+            Algorithm::Radix4 => 2,
+            Algorithm::SplitRadix => 3,
+            Algorithm::Stockham => 4,
+            Algorithm::FourStep => 5,
+            Algorithm::Bluestein => 6,
+            Algorithm::MemTier => 7,
+        }
+    }
+
+    /// Inverse of [`Algorithm::code`]; `None` for unknown codes (a wisdom
+    /// file from a newer build degrades to a typed error, not a misparse).
+    pub fn from_code(code: u8) -> Option<Self> {
+        Some(match code {
+            0 => Algorithm::Auto,
+            1 => Algorithm::Radix2,
+            2 => Algorithm::Radix4,
+            3 => Algorithm::SplitRadix,
+            4 => Algorithm::Stockham,
+            5 => Algorithm::FourStep,
+            6 => Algorithm::Bluestein,
+            7 => Algorithm::MemTier,
+            _ => return None,
+        })
+    }
+
     /// All concrete (non-Auto) algorithms applicable to size `n` — the
     /// set the measured planner times against each other, so degenerate
     /// duplicates are excluded: MemTier at non-powers-of-two IS the
@@ -112,12 +144,17 @@ pub struct FftPlan {
 }
 
 impl FftPlan {
-    /// Resolve `Auto` to the concrete algorithm the heuristic would pick
-    /// at size `n`; concrete algorithms resolve to themselves. This is the
-    /// key `PlanCache` memoizes on.
+    /// Resolve `Auto` to a concrete algorithm at size `n`; concrete
+    /// algorithms resolve to themselves. This is the key `PlanCache`
+    /// memoizes on. Attached wisdom (`fft::wisdom`) steers the resolution:
+    /// a persisted measured winner for `n` under the ambient (tile,
+    /// kernel) configuration outranks the size heuristic, so a tuned
+    /// process plans its measured winners without timing anything.
     pub fn resolve(n: usize, algo: Algorithm) -> Algorithm {
         match algo {
-            Algorithm::Auto => Self::heuristic(n),
+            Algorithm::Auto => {
+                super::wisdom::resolve_auto(n).unwrap_or_else(|| Self::heuristic(n))
+            }
             a => a,
         }
     }
@@ -166,7 +203,7 @@ impl FftPlan {
     /// for non-powers-of-two. The four-step stays available explicitly
     /// (it is the paper's *GPU* schedule; its un-fused CPU realization
     /// pays three transposes the GPU does not).
-    fn heuristic(n: usize) -> Algorithm {
+    pub(crate) fn heuristic(n: usize) -> Algorithm {
         if !is_pow2(n) {
             Algorithm::Bluestein
         } else if n <= 1 << 18 {
@@ -401,44 +438,116 @@ pub fn ifft(x: &mut [C32]) {
     global_cache().get(x.len(), Algorithm::Auto).inverse(x);
 }
 
-/// FFTW_MEASURE-style planner: time each candidate and keep the winner.
+/// FFTW_MEASURE-style planner: recall persisted wisdom, prune the
+/// remaining candidates with the gpusim cost model, time what survives,
+/// and keep the winner — memoized in the `PlanCache` so the measurement
+/// is paid once per process, and persisted via `fft::wisdom` so it is
+/// paid once per *host*.
 pub struct Planner {
+    /// Timed iterations per surviving candidate (clamped to ≥ 1 at the
+    /// measurement loop — zero reps would tie every candidate at 0.0 ns
+    /// and crown an arbitrary "measured" winner).
     pub reps: usize,
+    /// Cost-model pruning: time only the `prune` candidates with the
+    /// fewest predicted full-array passes (`wisdom::predicted_passes`).
+    /// The heuristic pick always survives the cut, so pruning can only
+    /// improve on the default plan, never lose to it. `0` disables
+    /// pruning (time everything).
+    pub prune: usize,
+    /// Consult attached wisdom before timing: a persisted winner for this
+    /// size under the ambient (tile, kernel) configuration is returned
+    /// with zero timed candidates.
+    pub use_wisdom: bool,
 }
 
 impl Default for Planner {
     fn default() -> Self {
-        Self { reps: 5 }
+        Self { reps: 5, prune: 4, use_wisdom: true }
     }
 }
 
 impl Planner {
+    /// [`Planner::measured_with`] against the process-global plan cache.
+    pub fn measured(&self, n: usize) -> (Arc<super::spec::Plan>, Vec<(Algorithm, f64)>) {
+        self.measured_with(global_cache(), n)
+    }
+
     /// Measure candidates on random data; return the fastest plan and the
     /// per-algorithm timings (ns/iter), sorted fastest-first. Only the
     /// transform itself is inside the timed region — the input refill
     /// happens between reps, off the clock, so small-N candidates are not
     /// biased by a memcpy that all of them would share.
-    pub fn measured(&self, n: usize) -> (Arc<FftPlan>, Vec<(Algorithm, f64)>) {
+    ///
+    /// The winner is routed through `cache` (`PlanCache::try_get_spec`),
+    /// so later `get(n, winner)` lookups reuse the plan instead of
+    /// re-planning the descriptor the measurement just paid for. On a
+    /// wisdom hit the returned timing list holds the single recalled
+    /// `(winner, persisted ns)` entry; on a miss the cold result is
+    /// offered to `wisdom::record` (a no-op unless attached with append
+    /// enabled).
+    pub fn measured_with(
+        &self,
+        cache: &PlanCache,
+        n: usize,
+    ) -> (Arc<super::spec::Plan>, Vec<(Algorithm, f64)>) {
+        if self.use_wisdom {
+            if let Some((algo, ns)) = super::wisdom::recall(n) {
+                let plan = cache.get(n, algo);
+                assert!(cache.contains(n, algo), "recalled winner must be memoized");
+                return (plan, vec![(algo, ns)]);
+            }
+        }
         let mut rng = crate::util::prng::Xoshiro256::seeded(0xBEEF);
         let input = rng.complex_vec(n);
+        let mut candidates = Algorithm::candidates(n);
+        if self.prune > 0 && candidates.len() > self.prune {
+            let tile = crate::config::cache::tile_elems();
+            candidates.sort_by(|a, b| {
+                super::wisdom::predicted_passes(*a, n, tile)
+                    .total_cmp(&super::wisdom::predicted_passes(*b, n, tile))
+            });
+            // The heuristic pick always survives the cut: a wrong cost
+            // model may waste a timing slot, but it can never leave the
+            // planner worse than the un-measured default.
+            let fallback = FftPlan::heuristic(n);
+            if let Some(pos) = candidates.iter().position(|a| *a == fallback) {
+                if pos >= self.prune {
+                    candidates.swap(self.prune - 1, pos);
+                }
+            }
+            candidates.truncate(self.prune);
+        }
+        // Clamp at the loop, not just the division: `reps: 0` must still
+        // run one timed iteration per candidate, or every timing is 0.0
+        // and the "measured" winner is whichever candidate sorted first.
+        let reps = self.reps.max(1);
         let mut timings = Vec::new();
-        for algo in Algorithm::candidates(n) {
+        for algo in candidates {
             let plan = FftPlan::new(n, algo);
             let mut buf = input.clone();
             // one warm run (plan twiddles + thread-local scratch)
             plan.forward(&mut buf);
             let mut total_ns = 0f64;
-            for _ in 0..self.reps {
+            for _ in 0..reps {
                 buf.copy_from_slice(&input);
                 let t = crate::util::Timer::start();
                 plan.forward(&mut buf);
                 total_ns += t.elapsed().as_nanos() as f64;
             }
-            timings.push((algo, total_ns / self.reps.max(1) as f64));
+            timings.push((algo, total_ns / reps as f64));
         }
         rank_timings(&mut timings);
-        let best = timings[0].0;
-        (Arc::new(FftPlan::new(n, best)), timings)
+        let (best, best_ns) = timings[0];
+        super::wisdom::record(n, best, best_ns);
+        // Route the winner through the cache: the measurement is only
+        // worth anything if the service actually serves the winning plan
+        // afterwards instead of re-planning the same descriptor.
+        let spec = super::spec::ProblemSpec::one_d(n)
+            .expect("measured sizes are valid 1-D descriptors")
+            .with_algorithm(best);
+        let plan = cache.try_get_spec(&spec).expect("measured winner must plan");
+        assert!(cache.contains_spec(&spec), "measured winner must enter the plan cache");
+        (plan, timings)
     }
 }
 
@@ -555,8 +664,10 @@ mod tests {
 
     #[test]
     fn measured_planner_returns_valid_plan() {
-        let (plan, timings) = Planner { reps: 2 }.measured(256);
-        assert_eq!(plan.n, 256);
+        let cache = PlanCache::new();
+        let (plan, timings) =
+            Planner { reps: 2, prune: 0, use_wisdom: false }.measured_with(&cache, 256);
+        assert_eq!(plan.transform_len(), 256);
         assert_eq!(timings.len(), Algorithm::candidates(256).len());
         assert!(timings.windows(2).all(|w| w[0].1 <= w[1].1), "sorted by time");
         // The winning plan must still be correct.
@@ -566,6 +677,74 @@ mod tests {
         let mut got = x;
         plan.forward(&mut got);
         assert!(max_abs_diff(&got, &expect) < 1e-2);
+    }
+
+    /// Regression (cache bypass): the measured winner used to be built as
+    /// a fresh `Arc` that never entered the `PlanCache`, so a service that
+    /// tuned still re-planned the same descriptor on its next request.
+    #[test]
+    fn measured_winner_lands_in_the_plan_cache() {
+        let cache = PlanCache::new();
+        let (plan, timings) =
+            Planner { reps: 1, prune: 0, use_wisdom: false }.measured_with(&cache, 512);
+        let winner = timings[0].0;
+        assert!(cache.contains(512, winner), "winner must be memoized post-measure");
+        let served = cache.get(512, winner);
+        assert!(
+            Arc::ptr_eq(&plan, &served),
+            "the next lookup must serve the measured plan, not a re-plan"
+        );
+    }
+
+    /// Regression (zero-reps ranking): `Planner { reps: 0 }` used to run
+    /// zero timed iterations, tie every candidate at 0.0 ns, and crown an
+    /// arbitrary "measured" winner. The loop now clamps to one rep, so
+    /// every candidate gets a real (nonzero) timing.
+    #[test]
+    fn zero_reps_still_times_each_candidate() {
+        let cache = PlanCache::new();
+        let (_, timings) =
+            Planner { reps: 0, prune: 0, use_wisdom: false }.measured_with(&cache, 4096);
+        assert_eq!(timings.len(), Algorithm::candidates(4096).len());
+        for (algo, ns) in &timings {
+            assert!(*ns > 0.0, "{algo:?} timed at {ns} ns — the rep loop never ran");
+        }
+    }
+
+    /// Cost-model pruning: with `prune: 2` only two candidates are timed,
+    /// and the heuristic pick is always one of them (a wrong cost model
+    /// may waste a slot but can never lose to the un-measured default).
+    #[test]
+    fn measured_prunes_candidates_by_predicted_cost() {
+        let cache = PlanCache::new();
+        let n = 1024;
+        assert!(Algorithm::candidates(n).len() > 2);
+        let (_, timings) =
+            Planner { reps: 1, prune: 2, use_wisdom: false }.measured_with(&cache, n);
+        assert_eq!(timings.len(), 2, "pruning must cut the timed set to `prune`");
+        let fallback = FftPlan::heuristic(n);
+        assert!(
+            timings.iter().any(|(a, _)| *a == fallback),
+            "the heuristic pick ({fallback:?}) must survive the cut"
+        );
+    }
+
+    #[test]
+    fn algorithm_code_roundtrip() {
+        for a in [
+            Algorithm::Auto,
+            Algorithm::Radix2,
+            Algorithm::Radix4,
+            Algorithm::SplitRadix,
+            Algorithm::Stockham,
+            Algorithm::FourStep,
+            Algorithm::Bluestein,
+            Algorithm::MemTier,
+        ] {
+            assert_eq!(Algorithm::from_code(a.code()), Some(a));
+        }
+        assert_eq!(Algorithm::from_code(8), None);
+        assert_eq!(Algorithm::from_code(255), None);
     }
 
     /// Regression: a NaN timing used to hit `partial_cmp(..).unwrap()`

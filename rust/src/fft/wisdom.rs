@@ -1,0 +1,970 @@
+//! Persisted planner wisdom (FFTW-wisdom analog) + the cost model that
+//! prunes what gets measured — DESIGN.md §12.
+//!
+//! The paper's core move is to stop re-deriving the same decisions on
+//! every run: partition by data size once, keep the twiddles resident,
+//! reuse them forever. This module applies that to *planning* itself. A
+//! wisdom file records, per host, what `Planner::measured` learned —
+//! which algorithm won at which size, and how many ns/iter it cost — so
+//! the next process start serves the winner without timing a single
+//! candidate.
+//!
+//! **Key contract.** A measurement is only valid under the configuration
+//! it was taken in, so entries are keyed the same way [`PlanCache`]
+//! (`ProblemSpec::plan_key`) keys plans:
+//!
+//! - the **host key** (file-level): probed cache model (`l1_bytes`,
+//!   `l2_bytes`) + effective thread budget. A file written on a different
+//!   host — or under a different thread budget — is rejected with a typed
+//!   [`WisdomError::ForeignHost`] and the planner re-tunes rather than
+//!   reusing wrong numbers.
+//! - the **entry key**: transform size + effective `config::cache` tile
+//!   + `(MaxRadix, SimdLevel)` kernel configuration. `plan_key` can key
+//!   the tile conditionally because it knows the resolved algorithm;
+//!   wisdom is consulted *before* resolution, so it keys on the full
+//!   ambient configuration unconditionally — a result measured under one
+//!   `with_tile`/`with_level` scope never silently replays under another
+//!   (it re-measures instead, the safe direction).
+//!
+//! **Damage model.** The file format is versioned, magic-tagged and
+//! checksummed; every damage class — truncation at any byte, flipped
+//! bytes, version skew, a foreign host key — surfaces as a typed
+//! [`WisdomError`] and the planner falls back to the heuristic. A damaged
+//! file can never panic the process or steer a plan.
+//!
+//! **Cost model.** [`predicted_passes`] composes the gpusim access
+//! analyzers (`gpusim::access::blocked_round_trips` / `level_sweeps`)
+//! into a per-algorithm full-array-pass count, which `Planner::measured`
+//! uses to prune the candidate list before timing, and
+//! `coordinator::cost` uses (via [`peek_ns`]) to predict per-batch cost
+//! for deadline admission control.
+//!
+//! [`PlanCache`]: super::plan::PlanCache
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use super::plan::Algorithm;
+use super::simd::{self, SimdLevel};
+use crate::util::is_pow2;
+
+/// Wisdom file magic: "MemFft WiZdom".
+pub const MAGIC: [u8; 4] = *b"MFWZ";
+/// Wisdom format version. Bumped on any layout change; mismatches are a
+/// typed [`WisdomError::BadVersion`], never a misparse.
+pub const VERSION: u16 = 1;
+
+const HEADER_LEN: usize = 4 + 2 + 8 + 8 + 4 + 4; // magic, version, host, count
+const ENTRY_LEN: usize = 8 + 8 + 1 + 1 + 1 + 8; // n, tile, radix, level, algo, ns
+const FOOTER_LEN: usize = 8; // fnv-1a checksum
+
+/// The measurement environment a wisdom file is valid for. Timings taken
+/// under one cache geometry or thread budget do not transfer to another;
+/// a mismatch forces a re-tune instead of wrong reuse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostKey {
+    /// Probed (or default) L1 data-cache size in bytes.
+    pub l1_bytes: u64,
+    /// Probed (or default) last-level-cache size in bytes.
+    pub l2_bytes: u64,
+    /// Effective worker-pool thread budget at tune time.
+    pub threads: u32,
+}
+
+impl HostKey {
+    /// The current process's host key: the `config::cache` model plus the
+    /// resolved `util::pool` thread budget.
+    pub fn current() -> Self {
+        let model = crate::config::cache::model();
+        Self {
+            l1_bytes: model.l1_bytes as u64,
+            l2_bytes: model.l2_bytes as u64,
+            threads: crate::util::pool::threads() as u32,
+        }
+    }
+}
+
+impl fmt::Display for HostKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "l1={} l2={} threads={}",
+            self.l1_bytes, self.l2_bytes, self.threads
+        )
+    }
+}
+
+/// Per-entry key: what one measured result is conditioned on, mirroring
+/// `ProblemSpec::plan_key` (size + effective tile + kernel configuration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct WisdomKey {
+    /// Transform length (1-D complex lane).
+    pub n: u64,
+    /// Effective `config::cache` tile (complex elems) at measure time.
+    pub tile: u64,
+    /// Maximum Stockham radix (2 / 4 / 8) at measure time.
+    pub radix: u8,
+    /// SIMD level code at measure time (see [`level_code`]).
+    pub level: u8,
+}
+
+impl WisdomKey {
+    /// The key a measurement taken *right now* (ambient tile + SIMD
+    /// configuration of the calling thread) files under.
+    pub fn current(n: usize) -> Self {
+        Self {
+            n: n as u64,
+            tile: crate::config::cache::tile_elems() as u64,
+            radix: simd::radix().value() as u8,
+            level: level_code(simd::active()),
+        }
+    }
+}
+
+/// One measured result: the winning algorithm and its cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WisdomEntry {
+    /// The measured winner (never `Auto`).
+    pub algo: Algorithm,
+    /// Measured cost in ns per transform.
+    pub ns: f64,
+}
+
+/// Stable one-byte code for [`SimdLevel`] in the wisdom file.
+pub fn level_code(level: SimdLevel) -> u8 {
+    match level {
+        SimdLevel::Scalar => 0,
+        SimdLevel::Avx2 => 1,
+        SimdLevel::Neon => 2,
+    }
+}
+
+fn level_from_code(code: u8) -> Option<SimdLevel> {
+    match code {
+        0 => Some(SimdLevel::Scalar),
+        1 => Some(SimdLevel::Avx2),
+        2 => Some(SimdLevel::Neon),
+        _ => None,
+    }
+}
+
+/// Typed wisdom-file failure. Every damage class lands here; none panics,
+/// and none lets a wrong entry through — the caller falls back to the
+/// heuristic planner.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WisdomError {
+    /// Filesystem error reading or writing the file.
+    Io(std::io::ErrorKind),
+    /// The file ends before a complete field: `need` bytes were required,
+    /// only `got` exist.
+    Truncated { need: usize, got: usize },
+    /// Extra bytes follow the checksum.
+    Trailing { extra: usize },
+    /// First four bytes are not the wisdom magic.
+    BadMagic([u8; 4]),
+    /// Recognized magic, unknown version.
+    BadVersion { got: u16 },
+    /// A field holds an invalid value (unknown algorithm code, non-pow2
+    /// tile, non-finite ns, ...).
+    BadField { field: &'static str, got: u64 },
+    /// Content checksum mismatch — flipped or rewritten bytes.
+    Checksum { expect: u64, got: u64 },
+    /// The file was measured on a different host configuration.
+    ForeignHost { file: HostKey, host: HostKey },
+}
+
+impl fmt::Display for WisdomError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WisdomError::Io(kind) => write!(f, "io error: {kind:?}"),
+            WisdomError::Truncated { need, got } => {
+                write!(f, "truncated wisdom file: need {need} bytes, got {got}")
+            }
+            WisdomError::Trailing { extra } => {
+                write!(f, "{extra} trailing bytes after wisdom checksum")
+            }
+            WisdomError::BadMagic(m) => write!(f, "bad wisdom magic {m:02x?}"),
+            WisdomError::BadVersion { got } => {
+                write!(f, "wisdom version {got} (this build reads {VERSION})")
+            }
+            WisdomError::BadField { field, got } => {
+                write!(f, "invalid wisdom field {field}={got}")
+            }
+            WisdomError::Checksum { expect, got } => {
+                write!(f, "wisdom checksum mismatch: expect {expect:#x}, got {got:#x}")
+            }
+            WisdomError::ForeignHost { file, host } => {
+                write!(f, "wisdom is for another host ({file}; this host: {host})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WisdomError {}
+
+/// A set of measured planning results for one host configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Wisdom {
+    host: HostKey,
+    entries: BTreeMap<WisdomKey, WisdomEntry>,
+}
+
+impl Wisdom {
+    /// An empty wisdom set for `host`.
+    pub fn new(host: HostKey) -> Self {
+        Self { host, entries: BTreeMap::new() }
+    }
+
+    /// An empty wisdom set keyed to the current process's host key.
+    pub fn for_current_host() -> Self {
+        Self::new(HostKey::current())
+    }
+
+    pub fn host(&self) -> HostKey {
+        self.host
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn lookup(&self, key: &WisdomKey) -> Option<WisdomEntry> {
+        self.entries.get(key).copied()
+    }
+
+    /// Insert (or replace) one measured result. `Auto` is a hint, not a
+    /// winner, and is rejected.
+    pub fn insert(&mut self, key: WisdomKey, entry: WisdomEntry) {
+        assert!(entry.algo != Algorithm::Auto, "wisdom stores resolved winners, not Auto");
+        self.entries.insert(key, entry);
+    }
+
+    /// Serialize (deterministic: entries in key order, little-endian,
+    /// FNV-1a checksum over everything preceding it).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        encode(&self.host, &self.entries, VERSION)
+    }
+
+    /// Parse and fully validate a wisdom image. Any damage — truncation at
+    /// any byte, garbage, version skew, invalid fields, checksum mismatch
+    /// — is a typed error; this never panics.
+    pub fn from_bytes(data: &[u8]) -> Result<Self, WisdomError> {
+        let mut cur = Cursor { data, off: 0 };
+        let magic = cur.take(4)?;
+        if magic != MAGIC {
+            return Err(WisdomError::BadMagic([magic[0], magic[1], magic[2], magic[3]]));
+        }
+        let version = u16::from_le_bytes(cur.take(2)?.try_into().unwrap());
+        if version != VERSION {
+            return Err(WisdomError::BadVersion { got: version });
+        }
+        let host = HostKey {
+            l1_bytes: cur.take_u64()?,
+            l2_bytes: cur.take_u64()?,
+            threads: u32::from_le_bytes(cur.take(4)?.try_into().unwrap()),
+        };
+        let count = u32::from_le_bytes(cur.take(4)?.try_into().unwrap()) as usize;
+        let mut entries = BTreeMap::new();
+        for _ in 0..count {
+            let n = cur.take_u64()?;
+            if n == 0 {
+                return Err(WisdomError::BadField { field: "n", got: n });
+            }
+            let tile = cur.take_u64()?;
+            if tile < 2 || !is_pow2(tile as usize) {
+                return Err(WisdomError::BadField { field: "tile", got: tile });
+            }
+            let radix = cur.take(1)?[0];
+            if !matches!(radix, 2 | 4 | 8) {
+                return Err(WisdomError::BadField { field: "radix", got: radix as u64 });
+            }
+            let level = cur.take(1)?[0];
+            if level_from_code(level).is_none() {
+                return Err(WisdomError::BadField { field: "level", got: level as u64 });
+            }
+            let algo_code = cur.take(1)?[0];
+            let algo = Algorithm::from_code(algo_code)
+                .filter(|a| *a != Algorithm::Auto)
+                .ok_or(WisdomError::BadField { field: "algo", got: algo_code as u64 })?;
+            let ns_bits = cur.take_u64()?;
+            let ns = f64::from_bits(ns_bits);
+            if !ns.is_finite() || ns < 0.0 {
+                return Err(WisdomError::BadField { field: "ns", got: ns_bits });
+            }
+            entries.insert(WisdomKey { n, tile, radix, level }, WisdomEntry { algo, ns });
+        }
+        let body_end = cur.off;
+        let got_sum = cur.take_u64()?;
+        let expect_sum = fnv1a64(&data[..body_end]);
+        if got_sum != expect_sum {
+            return Err(WisdomError::Checksum { expect: expect_sum, got: got_sum });
+        }
+        if cur.off != data.len() {
+            return Err(WisdomError::Trailing { extra: data.len() - cur.off });
+        }
+        Ok(Self { host, entries })
+    }
+
+    /// Read and parse a wisdom file.
+    pub fn load(path: &Path) -> Result<Self, WisdomError> {
+        let data = fs::read(path).map_err(|e| WisdomError::Io(e.kind()))?;
+        Self::from_bytes(&data)
+    }
+
+    /// Read a wisdom file and require it to match `host` — the safe entry
+    /// point for consumers: a stale or foreign file forces a re-tune.
+    pub fn load_for_host(path: &Path, host: &HostKey) -> Result<Self, WisdomError> {
+        let w = Self::load(path)?;
+        if w.host != *host {
+            return Err(WisdomError::ForeignHost { file: w.host, host: *host });
+        }
+        Ok(w)
+    }
+
+    /// Write atomically (temp file + rename, so a crash mid-write never
+    /// leaves a truncated file for the next process to trip on).
+    pub fn save(&self, path: &Path) -> Result<(), WisdomError> {
+        let tmp = path.with_extension("tmp");
+        fs::write(&tmp, self.to_bytes()).map_err(|e| WisdomError::Io(e.kind()))?;
+        fs::rename(&tmp, path).map_err(|e| WisdomError::Io(e.kind()))
+    }
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, k: usize) -> Result<&'a [u8], WisdomError> {
+        if self.off + k > self.data.len() {
+            return Err(WisdomError::Truncated { need: self.off + k, got: self.data.len() });
+        }
+        let s = &self.data[self.off..self.off + k];
+        self.off += k;
+        Ok(s)
+    }
+
+    fn take_u64(&mut self) -> Result<u64, WisdomError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn encode(host: &HostKey, entries: &BTreeMap<WisdomKey, WisdomEntry>, version: u16) -> Vec<u8> {
+    let mut v = Vec::with_capacity(HEADER_LEN + entries.len() * ENTRY_LEN + FOOTER_LEN);
+    v.extend_from_slice(&MAGIC);
+    v.extend_from_slice(&version.to_le_bytes());
+    v.extend_from_slice(&host.l1_bytes.to_le_bytes());
+    v.extend_from_slice(&host.l2_bytes.to_le_bytes());
+    v.extend_from_slice(&host.threads.to_le_bytes());
+    v.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for (k, e) in entries {
+        v.extend_from_slice(&k.n.to_le_bytes());
+        v.extend_from_slice(&k.tile.to_le_bytes());
+        v.push(k.radix);
+        v.push(k.level);
+        v.push(e.algo.code());
+        v.extend_from_slice(&e.ns.to_bits().to_le_bytes());
+    }
+    let sum = fnv1a64(&v);
+    v.extend_from_slice(&sum.to_le_bytes());
+    v
+}
+
+fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Cost model: predicted full-array passes per candidate.
+// ---------------------------------------------------------------------------
+
+/// Coarse per-algorithm cost: how many full-array passes (memory sweeps)
+/// an `n`-point transform issues under a fast-memory tile of `tile`
+/// complex elements. Composes the gpusim access analyzers — blocked
+/// algorithms use `gpusim::access::blocked_round_trips` (the
+/// `MemoryPlan::passes` mirror), level-loop algorithms use
+/// `gpusim::access::level_sweeps`. This is a *ranking* model for pruning
+/// the measured planner's candidate list, not a latency predictor:
+/// constants are deliberately simple and the heuristic pick always
+/// survives the cut regardless of what this returns.
+pub fn predicted_passes(algo: Algorithm, n: usize, tile: usize) -> f64 {
+    use crate::gpusim::access::{blocked_round_trips, level_sweeps};
+    if n < 2 {
+        return 1.0;
+    }
+    if !is_pow2(n) {
+        // Only Bluestein-backed algorithms exist at non-powers-of-two.
+        return match algo {
+            Algorithm::Bluestein | Algorithm::MemTier => bluestein_passes(n),
+            _ => f64::INFINITY,
+        };
+    }
+    match algo {
+        // Auto is a hint, not a candidate; rank it off the board.
+        Algorithm::Auto => f64::INFINITY,
+        // Bit-reversal pass + one sweep per butterfly level.
+        Algorithm::Radix2 => 1.0 + level_sweeps(n, 2) as f64,
+        Algorithm::Radix4 => 1.0 + level_sweeps(n, 4) as f64,
+        // Recursive, no reorder pass, but still ~lg n element touches.
+        Algorithm::SplitRadix => level_sweeps(n, 2) as f64,
+        // Autosort level loop at the active max radix.
+        Algorithm::Stockham => level_sweeps(n, simd::radix().value()) as f64,
+        // Three transposes + two FFT passes + twiddle pass (DESIGN.md §7).
+        Algorithm::FourStep => 6.0,
+        Algorithm::Bluestein => bluestein_passes(n),
+        // The blocked six-step's slow-memory round trips; tile-resident
+        // sizes collapse to the direct (Stockham) kernel.
+        Algorithm::MemTier => {
+            if n <= tile {
+                level_sweeps(n, simd::radix().value()) as f64
+            } else {
+                blocked_round_trips(n, tile.max(2)) as f64
+            }
+        }
+    }
+}
+
+/// Bluestein cost in units of n-sized passes: three transforms at the
+/// padded size m = next_pow2(2n-1), plus the chirp/pointwise sweeps.
+fn bluestein_passes(n: usize) -> f64 {
+    use crate::gpusim::access::level_sweeps;
+    let m = (2 * n - 1).next_power_of_two();
+    let scale = m as f64 / n as f64;
+    3.0 * level_sweeps(m, simd::radix().value()) as f64 * scale + 2.0
+}
+
+// ---------------------------------------------------------------------------
+// Process-global attachment (the "loaded once per process" face).
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct GlobalState {
+    wisdom: Option<Wisdom>,
+    path: Option<PathBuf>,
+    append: bool,
+    env_checked: bool,
+}
+
+static STATE: OnceLock<Mutex<GlobalState>> = OnceLock::new();
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    // Test-scoped override (`with_attached`): consulted before the global
+    // attachment and fully isolated from it, so parallel tests can steer
+    // resolution without racing each other through the process global.
+    static TLS: RefCell<Option<Wisdom>> = const { RefCell::new(None) };
+}
+
+fn state() -> &'static Mutex<GlobalState> {
+    STATE.get_or_init(Mutex::default)
+}
+
+/// Attach a wisdom file to the process: loaded once, consulted by every
+/// `Auto` resolution and by `Planner::measured`. A missing file attaches
+/// fresh empty wisdom (the tune path will create it); a damaged or
+/// foreign file is a typed error and leaves the process unattached
+/// (heuristic planning). Returns the number of entries loaded.
+pub fn attach(path: &Path) -> Result<usize, WisdomError> {
+    let host = HostKey::current();
+    let w = if path.exists() {
+        Wisdom::load_for_host(path, &host)?
+    } else {
+        Wisdom::new(host)
+    };
+    let n = w.len();
+    let mut g = state().lock().unwrap();
+    g.wisdom = Some(w);
+    g.path = Some(path.to_path_buf());
+    g.env_checked = true; // an explicit attach outranks MEMFFT_WISDOM
+    Ok(n)
+}
+
+/// Attach fresh empty wisdom at `path` regardless of what the file holds —
+/// the tune subcommand's recovery path for a damaged file (overwritten on
+/// the next save).
+pub fn attach_fresh(path: &Path) {
+    let mut g = state().lock().unwrap();
+    g.wisdom = Some(Wisdom::for_current_host());
+    g.path = Some(path.to_path_buf());
+    g.env_checked = true;
+}
+
+/// Detach the process-global wisdom (test hygiene / reconfiguration).
+pub fn detach() {
+    let mut g = state().lock().unwrap();
+    g.wisdom = None;
+    g.path = None;
+    g.append = false;
+}
+
+/// Enable/disable appending cold measured results to the attached wisdom
+/// (the `tune.append_on_miss` knob; the tune subcommand forces it on).
+pub fn set_append(on: bool) {
+    state().lock().unwrap().append = on;
+}
+
+/// Persist the attached wisdom to its attached path. `Ok(None)` when
+/// nothing is attached.
+pub fn save() -> Result<Option<PathBuf>, WisdomError> {
+    let g = state().lock().unwrap();
+    match (&g.wisdom, &g.path) {
+        (Some(w), Some(p)) => {
+            w.save(p)?;
+            Ok(Some(p.clone()))
+        }
+        _ => Ok(None),
+    }
+}
+
+/// Run `f` with `w` attached to this thread only (restored on exit,
+/// including on panic). Thread-local attachment shadows the process
+/// attachment — the test-isolation analog of `cache::with_tile`.
+pub fn with_attached<R>(w: &Wisdom, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Wisdom>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0.take();
+            TLS.with(|t| *t.borrow_mut() = prev);
+        }
+    }
+    let prev = TLS.with(|t| t.borrow_mut().replace(w.clone()));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// If never attached and `MEMFFT_WISDOM` names a file, attach it now
+/// (CLI lanes pick up wisdom without plumbing a flag through every
+/// subcommand). A damaged file warns once on stderr and planning falls
+/// back to the heuristic.
+fn ensure_env_attach(g: &mut GlobalState) {
+    if g.env_checked {
+        return;
+    }
+    g.env_checked = true;
+    let Some(path) = std::env::var_os("MEMFFT_WISDOM").filter(|p| !p.is_empty()) else {
+        return;
+    };
+    let path = PathBuf::from(path);
+    let host = HostKey::current();
+    if !path.exists() {
+        g.wisdom = Some(Wisdom::new(host));
+        g.path = Some(path);
+        return;
+    }
+    match Wisdom::load_for_host(&path, &host) {
+        Ok(w) => {
+            g.wisdom = Some(w);
+            g.path = Some(path);
+        }
+        Err(e) => {
+            eprintln!(
+                "memfft wisdom: {e}; falling back to heuristic planning ({} ignored)",
+                path.display()
+            );
+        }
+    }
+}
+
+fn lookup(key: &WisdomKey) -> Option<WisdomEntry> {
+    // Thread-local attachment shadows the global one entirely (a TLS miss
+    // must not fall through — tests depend on the isolation).
+    let tls = TLS.with(|t| t.borrow().as_ref().map(|w| w.lookup(key)));
+    if let Some(result) = tls {
+        count(result.is_some());
+        return result;
+    }
+    let mut g = state().lock().unwrap();
+    ensure_env_attach(&mut g);
+    let w = g.wisdom.as_ref()?;
+    let result = w.lookup(key);
+    count(result.is_some());
+    result
+}
+
+fn count(hit: bool) {
+    if hit {
+        HITS.fetch_add(1, Ordering::Relaxed);
+    } else {
+        MISSES.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Wisdom recall for the measured planner: the persisted winner and its
+/// ns/iter for size `n` under the ambient (tile, kernel) configuration.
+/// Sanitized: a recalled winner that is not a live candidate at this
+/// size/tile is treated as a miss, never applied.
+pub fn recall(n: usize) -> Option<(Algorithm, f64)> {
+    let key = WisdomKey::current(n);
+    let e = lookup(&key)?;
+    if Algorithm::candidates(n).contains(&e.algo) {
+        Some((e.algo, e.ns))
+    } else {
+        None
+    }
+}
+
+/// The `Auto` steer: the persisted winner for size `n`, if any wisdom is
+/// attached and has a (sanitized) entry under the ambient configuration.
+pub fn resolve_auto(n: usize) -> Option<Algorithm> {
+    recall(n).map(|(algo, _)| algo)
+}
+
+/// Non-counting cost peek for admission control: the persisted ns/iter
+/// for an n-point 1-D complex transform, if known. Does not touch the
+/// hit/miss counters — this is the cost model's side channel, not a
+/// planning decision.
+pub fn peek_ns(n: usize) -> Option<f64> {
+    let key = WisdomKey::current(n);
+    let tls = TLS.with(|t| t.borrow().as_ref().map(|w| w.lookup(&key)));
+    if let Some(result) = tls {
+        return result.map(|e| e.ns);
+    }
+    let mut g = state().lock().unwrap();
+    ensure_env_attach(&mut g);
+    g.wisdom.as_ref()?.lookup(&key).map(|e| e.ns)
+}
+
+/// Record a cold measured result. No-op unless wisdom is attached with
+/// append enabled; write-through to the attached path (best-effort — a
+/// failed save warns, it does not fail the plan).
+pub fn record(n: usize, algo: Algorithm, ns: f64) {
+    if algo == Algorithm::Auto || !ns.is_finite() || ns < 0.0 {
+        return;
+    }
+    let key = WisdomKey::current(n);
+    let mut g = state().lock().unwrap();
+    if !g.append {
+        return;
+    }
+    let Some(w) = g.wisdom.as_mut() else { return };
+    w.insert(key, WisdomEntry { algo, ns });
+    if let Some(p) = g.path.clone() {
+        if let Err(e) = g.wisdom.as_ref().unwrap().save(&p) {
+            eprintln!("memfft wisdom: save {}: {e}", p.display());
+        }
+    }
+}
+
+/// Process-wide wisdom observability (the metrics report's `wisdom:` line).
+#[derive(Debug, Clone, Copy)]
+pub struct WisdomStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+    pub attached: bool,
+}
+
+pub fn stats() -> WisdomStats {
+    let g = state().lock().unwrap();
+    WisdomStats {
+        hits: HITS.load(Ordering::Relaxed),
+        misses: MISSES.load(Ordering::Relaxed),
+        entries: g.wisdom.as_ref().map(|w| w.len()).unwrap_or(0),
+        attached: g.wisdom.is_some(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::plan::{PlanCache, Planner};
+    use std::sync::atomic::AtomicU32;
+
+    fn sample_wisdom() -> Wisdom {
+        let mut w = Wisdom::new(HostKey { l1_bytes: 32 << 10, l2_bytes: 1 << 20, threads: 4 });
+        w.insert(
+            WisdomKey { n: 1024, tile: 64, radix: 8, level: 0 },
+            WisdomEntry { algo: Algorithm::Stockham, ns: 1500.0 },
+        );
+        w.insert(
+            WisdomKey { n: 1 << 20, tile: 1 << 16, radix: 8, level: 1 },
+            WisdomEntry { algo: Algorithm::MemTier, ns: 9.5e6 },
+        );
+        w
+    }
+
+    fn temp_path(tag: &str) -> PathBuf {
+        static SEQ: AtomicU32 = AtomicU32::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "memfft-wisdom-{tag}-{}-{seq}.mfw",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn round_trips_bytes_and_files() {
+        let w = sample_wisdom();
+        let bytes = w.to_bytes();
+        let back = Wisdom::from_bytes(&bytes).unwrap();
+        assert_eq!(w, back);
+
+        let path = temp_path("roundtrip");
+        w.save(&path).unwrap();
+        let loaded = Wisdom::load(&path).unwrap();
+        assert_eq!(w, loaded);
+        let same_host = Wisdom::load_for_host(&path, &w.host()).unwrap();
+        assert_eq!(same_host.len(), 2);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn foreign_host_key_is_rejected() {
+        let w = sample_wisdom();
+        let path = temp_path("foreign");
+        w.save(&path).unwrap();
+        let mut other = w.host();
+        other.l2_bytes *= 2;
+        let err = Wisdom::load_for_host(&path, &other).unwrap_err();
+        assert!(matches!(err, WisdomError::ForeignHost { .. }), "{err}");
+        // And a thread-budget change alone is enough to invalidate.
+        let mut rethreaded = w.host();
+        rethreaded.threads += 1;
+        assert!(matches!(
+            Wisdom::load_for_host(&path, &rethreaded).unwrap_err(),
+            WisdomError::ForeignHost { .. }
+        ));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    /// The net.rs-style damage battery: truncation at EVERY prefix length,
+    /// every single-byte corruption, version skew, garbage, and a missing
+    /// file must all be typed errors — never a panic, never a wrong parse.
+    #[test]
+    fn damage_battery_is_typed_and_never_applies_wrong_entries() {
+        let w = sample_wisdom();
+        let bytes = w.to_bytes();
+
+        // Truncation at every prefix length.
+        for cut in 0..bytes.len() {
+            let err = Wisdom::from_bytes(&bytes[..cut])
+                .expect_err(&format!("prefix of {cut} bytes must not parse"));
+            assert!(
+                matches!(err, WisdomError::Truncated { .. }),
+                "prefix {cut}: expected Truncated, got {err:?}"
+            );
+        }
+
+        // Every single-byte corruption must be caught (typed, any variant).
+        for i in 0..bytes.len() {
+            let mut b = bytes.clone();
+            b[i] ^= 0xA5;
+            assert!(
+                Wisdom::from_bytes(&b).is_err(),
+                "corruption at byte {i} was silently accepted"
+            );
+        }
+
+        // Version skew: well-formed, checksummed, but a future version.
+        let skewed = encode(&w.host(), &w.entries, VERSION + 1);
+        assert_eq!(
+            Wisdom::from_bytes(&skewed).unwrap_err(),
+            WisdomError::BadVersion { got: VERSION + 1 }
+        );
+
+        // Garbage and empty input.
+        assert!(matches!(
+            Wisdom::from_bytes(b"this is not wisdom").unwrap_err(),
+            WisdomError::BadMagic(_)
+        ));
+        assert!(matches!(
+            Wisdom::from_bytes(b"").unwrap_err(),
+            WisdomError::Truncated { .. }
+        ));
+
+        // Trailing bytes after a valid image.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert_eq!(Wisdom::from_bytes(&long).unwrap_err(), WisdomError::Trailing { extra: 1 });
+
+        // Missing file.
+        assert!(matches!(
+            Wisdom::load(Path::new("/nonexistent/memfft.wisdom")).unwrap_err(),
+            WisdomError::Io(_)
+        ));
+    }
+
+    /// Satellite regression: a wisdom entry taken under one tile / kernel
+    /// scope must never replay under another — the entry key carries the
+    /// effective tile and (radix, level) exactly as `PlanKey` does.
+    #[test]
+    fn entries_do_not_alias_across_tile_or_kernel_scopes() {
+        use crate::config::cache::with_tile;
+        use crate::fft::simd::{with_level, with_radix, MaxRadix};
+
+        let n = 1 << 12;
+        let mut w = Wisdom::for_current_host();
+        let key64 = with_tile(64, || WisdomKey::current(n));
+        w.insert(key64, WisdomEntry { algo: Algorithm::FourStep, ns: 10.0 });
+
+        with_attached(&w, || {
+            // Same tile scope: recalled.
+            with_tile(64, || {
+                assert_eq!(resolve_auto(n), Some(Algorithm::FourStep));
+            });
+            // Different tile scope: a MISS, not a stale replay.
+            with_tile(4096, || {
+                assert_eq!(resolve_auto(n), None);
+            });
+            // Different kernel configuration (scalar radix-2): also a miss,
+            // unless that IS the ambient configuration.
+            with_tile(64, || {
+                with_radix(MaxRadix::Two, || {
+                    with_level(SimdLevel::Scalar, || {
+                        if key64.radix != 2 || key64.level != level_code(SimdLevel::Scalar) {
+                            assert_eq!(resolve_auto(n), None);
+                        }
+                    })
+                })
+            });
+        });
+        // Outside the attachment nothing is consulted.
+        with_tile(64, || assert_eq!(resolve_auto(n), None));
+    }
+
+    /// Sanitization: an entry whose winner is not a live candidate at its
+    /// size (MemTier recorded, but the current tile makes n tile-resident
+    /// so MemTier is not in the candidate set ... here simulated with a
+    /// non-pow2 size whose only candidate is Bluestein) is a miss.
+    #[test]
+    fn recalled_winner_must_be_a_live_candidate() {
+        let n = 100; // non-pow2: candidates == [Bluestein]
+        let mut w = Wisdom::for_current_host();
+        w.insert(WisdomKey::current(n), WisdomEntry { algo: Algorithm::Radix2, ns: 5.0 });
+        with_attached(&w, || {
+            assert_eq!(resolve_auto(n), None, "non-candidate winner must not apply");
+        });
+        let mut ok = Wisdom::for_current_host();
+        ok.insert(WisdomKey::current(n), WisdomEntry { algo: Algorithm::Bluestein, ns: 5.0 });
+        with_attached(&ok, || {
+            assert_eq!(resolve_auto(n), Some(Algorithm::Bluestein));
+        });
+    }
+
+    /// The acceptance round trip: "process A" tunes and persists;
+    /// "process B" (same host key) plans the same ProblemSpec with ZERO
+    /// candidate timings and bit-identical output. Process boundaries are
+    /// simulated by dropping every in-memory structure between the halves
+    /// — only the file carries state across.
+    #[test]
+    fn wisdom_round_trip_plans_without_timing_and_bit_matches() {
+        use crate::util::complex::C32;
+        let n = 512usize;
+        let path = temp_path("roundtrip-plan");
+
+        // Process A: measure, persist. (Heuristic winner == Stockham at
+        // 512; store exactly the heuristic pick so the bit-identity claim
+        // below is against the heuristic plan itself.)
+        {
+            let mut w = Wisdom::for_current_host();
+            w.insert(
+                WisdomKey::current(n),
+                WisdomEntry { algo: Algorithm::Stockham, ns: 2000.0 },
+            );
+            w.save(&path).unwrap();
+        }
+
+        // Process B: load for the same host, plan from wisdom.
+        let w = Wisdom::load_for_host(&path, &HostKey::current()).unwrap();
+        let mut rng = crate::util::prng::Xoshiro256::seeded(0xF00D);
+        let x = rng.complex_vec(n);
+        let from_wisdom = with_attached(&w, || {
+            let cache = PlanCache::new();
+            let (plan, timings) = Planner::default().measured_with(&cache, n);
+            assert_eq!(timings.len(), 1, "a wisdom hit times zero candidates");
+            assert_eq!(timings[0].0, Algorithm::Stockham);
+            assert_eq!(plan.algorithm(), Algorithm::Stockham);
+            let mut buf = x.clone();
+            plan.forward(&mut buf);
+            buf
+        });
+
+        // Bit-identical to the heuristic plan (no wisdom attached).
+        let cache = PlanCache::new();
+        let heuristic = cache.get(n, Algorithm::Auto);
+        let mut expect = x.clone();
+        heuristic.forward(&mut expect);
+        for (k, (a, b)) in from_wisdom.iter().zip(&expect).enumerate() {
+            assert_eq!(a.re.to_bits(), b.re.to_bits(), "re[{k}]");
+            assert_eq!(a.im.to_bits(), b.im.to_bits(), "im[{k}]");
+        }
+        let _ = std::fs::remove_file(&path);
+        let _: Vec<C32> = expect; // keep the type local and explicit
+    }
+
+    #[test]
+    fn auto_resolution_consults_attached_wisdom() {
+        use crate::fft::plan::FftPlan;
+        let n = 2048usize;
+        let mut w = Wisdom::for_current_host();
+        w.insert(WisdomKey::current(n), WisdomEntry { algo: Algorithm::FourStep, ns: 1.0 });
+        with_attached(&w, || {
+            assert_eq!(
+                FftPlan::new(n, Algorithm::Auto).algorithm(),
+                Algorithm::FourStep,
+                "Auto must resolve through attached wisdom"
+            );
+            // The plan cache keys on the resolved winner, so Auto and the
+            // winner share one plan under the attachment.
+            let cache = PlanCache::new();
+            let a = cache.get(n, Algorithm::Auto);
+            let b = cache.get(n, Algorithm::FourStep);
+            assert!(std::sync::Arc::ptr_eq(&a, &b));
+        });
+        // Outside: the heuristic (Stockham at 2048).
+        assert_eq!(FftPlan::new(n, Algorithm::Auto).algorithm(), Algorithm::Stockham);
+    }
+
+    #[test]
+    fn predicted_passes_ranks_sanely() {
+        let tile = 1 << 16;
+        let n = 1 << 20;
+        // DRAM-resident: the blocked path beats the four-step's 6 sweeps
+        // beats the radix-2 level loop's 21.
+        let memtier = predicted_passes(Algorithm::MemTier, n, tile);
+        let fourstep = predicted_passes(Algorithm::FourStep, n, tile);
+        let radix2 = predicted_passes(Algorithm::Radix2, n, tile);
+        assert!(memtier < fourstep, "memtier {memtier} vs fourstep {fourstep}");
+        assert!(fourstep < radix2, "fourstep {fourstep} vs radix2 {radix2}");
+        // Bluestein is never the cheap option at a power of two.
+        let bluestein = predicted_passes(Algorithm::Bluestein, n, tile);
+        let stockham = predicted_passes(Algorithm::Stockham, n, tile);
+        assert!(bluestein > stockham);
+        // Non-pow2: only Bluestein-backed candidates are finite.
+        assert!(predicted_passes(Algorithm::Radix2, 100, tile).is_infinite());
+        assert!(predicted_passes(Algorithm::Bluestein, 100, tile).is_finite());
+    }
+
+    #[test]
+    fn stats_and_peek_observe_attachments() {
+        let n = 4096usize;
+        let mut w = Wisdom::for_current_host();
+        w.insert(WisdomKey::current(n), WisdomEntry { algo: Algorithm::Stockham, ns: 777.0 });
+        with_attached(&w, || {
+            assert_eq!(peek_ns(n), Some(777.0));
+            assert_eq!(peek_ns(n / 2), None);
+            let before = (HITS.load(Ordering::Relaxed), MISSES.load(Ordering::Relaxed));
+            let _ = resolve_auto(n);
+            let _ = resolve_auto(n / 2);
+            let after = (HITS.load(Ordering::Relaxed), MISSES.load(Ordering::Relaxed));
+            assert!(after.0 > before.0, "hit not counted");
+            assert!(after.1 > before.1, "miss not counted");
+        });
+    }
+}

@@ -79,6 +79,26 @@ pub fn blocked_round_trips(n: usize, tile: usize) -> u32 {
     1 + blocked_round_trips(n2, tile)
 }
 
+/// Full-array sweeps an *unblocked* level-loop FFT (radix-`radix`
+/// Cooley-Tukey / Stockham) issues for an n-point transform: one sweep per
+/// butterfly level, `ceil(log2 n / log2 radix)` levels. The counterpart of
+/// [`blocked_round_trips`] for the direct kernels — together they let the
+/// wisdom layer (`fft::wisdom::predicted_passes`) rank every planner
+/// candidate in the same unit before anything is timed.
+pub fn level_sweeps(n: usize, radix: usize) -> u32 {
+    assert!(is_pow2(n), "level_sweeps needs a power-of-two n, got {n}");
+    assert!(
+        is_pow2(radix) && radix >= 2,
+        "radix must be a power of two >= 2, got {radix}"
+    );
+    if n < 2 {
+        return 1;
+    }
+    let lg_n = n.trailing_zeros();
+    let lg_r = radix.trailing_zeros();
+    lg_n.div_ceil(lg_r).max(1)
+}
+
 /// Result of bank-conflict analysis for one half-warp shared access.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BankReport {
@@ -297,6 +317,25 @@ mod tests {
                 }
                 prev = Some(p);
             }
+        }
+    }
+
+    #[test]
+    fn level_sweeps_counts_butterfly_levels() {
+        // Radix-2: exactly log2 n sweeps.
+        assert_eq!(level_sweeps(1, 2), 1);
+        assert_eq!(level_sweeps(2, 2), 1);
+        assert_eq!(level_sweeps(1024, 2), 10);
+        // Radix-4 halves the level count; radix-8 takes ceil(10/3) = 4.
+        assert_eq!(level_sweeps(1024, 4), 5);
+        assert_eq!(level_sweeps(1024, 8), 4);
+        // Mixed-radix tail: 2^11 at radix 8 is ceil(11/3) = 4 levels.
+        assert_eq!(level_sweeps(2048, 8), 4);
+        // A higher radix never needs more sweeps.
+        for lg in 1..=20u32 {
+            let n = 1usize << lg;
+            assert!(level_sweeps(n, 8) <= level_sweeps(n, 4));
+            assert!(level_sweeps(n, 4) <= level_sweeps(n, 2));
         }
     }
 }

@@ -18,6 +18,9 @@
 //!   stream    out-of-core streamed FFT / SAR over a file-backed .mfft
 //!             dataset (prefetch/compute/writeback pipeline; same
 //!             --shape/--domain descriptors as `transform`)
+//!   tune      measure planner candidates for a size list and persist the
+//!             winners to a host-keyed wisdom file; subsequent processes
+//!             (serve --wisdom / MEMFFT_WISDOM) plan without re-timing
 
 use memfft::cli::{Cli, CliError, Command};
 use memfft::config::ServiceConfig;
@@ -48,6 +51,7 @@ fn cli() -> Cli {
                 .arg_default("listen", "", "listen address, e.g. 127.0.0.1:7070 (overrides net.listen)")
                 .arg_default("max-conns", "0", "connection cap (0 = net.max_connections)")
                 .arg_default("run-secs", "0", "serve for N seconds then drain (0 = until stdin closes or a 'shutdown' line)")
+                .arg_default("wisdom", "", "wisdom file to attach (overrides tune.wisdom; a damaged file degrades to heuristic planning)")
                 .flag("synthetic", "replay the old in-process synthetic workload instead of serving TCP")
                 .arg_default("requests", "200", "synthetic requests to issue (--synthetic)")
                 .arg_default("sizes", "1024,4096,16384", "synthetic request sizes (--synthetic)"),
@@ -110,6 +114,14 @@ fn cli() -> Cli {
                 .arg_default("tile", "0", "memtier cache tile, complex elems (0 = auto)")
                 .flag("check", "recompute in memory and diff bit-for-bit"),
         )
+        .command(
+            Command::new("tune", "measure planner candidates and persist wisdom (DESIGN.md §12)")
+                .arg("wisdom", "wisdom file path (required; created if missing, repaired if damaged)")
+                .arg_default("sizes", "256,1024,4096,16384,65536", "transform sizes to tune")
+                .arg_default("reps", "5", "timed iterations per surviving candidate")
+                .arg_default("prune", "4", "time only the K cheapest-predicted candidates (0 = time all)")
+                .flag("force", "re-time every size even when the wisdom file already has an entry"),
+        )
 }
 
 fn main() {
@@ -133,6 +145,7 @@ fn main() {
         Some("sar") => cmd_sar(&parsed),
         Some("transform") => cmd_transform(&parsed),
         Some("stream") => cmd_stream(&parsed),
+        Some("tune") => cmd_tune(&parsed),
         _ => {
             println!("{}", cli().usage());
             Ok(())
@@ -155,6 +168,9 @@ fn cmd_serve(args: &memfft::cli::Args) -> CmdResult {
     cfg.artifacts_dir = artifacts;
     cfg.workers = args.get_usize("workers", cfg.workers)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
+    if let Some(w) = args.get("wisdom").filter(|s| !s.is_empty()) {
+        cfg.tune.wisdom = w.to_string();
+    }
     if let Some(listen) = args.get("listen").filter(|s| !s.is_empty()) {
         cfg.net.listen = listen.to_string();
     }
@@ -825,6 +841,67 @@ fn check_streamed(
         .into());
     }
     println!("check ok: streamed output is bit-for-bit equal to the in-memory reference");
+    Ok(())
+}
+
+fn cmd_tune(args: &memfft::cli::Args) -> CmdResult {
+    use memfft::fft::{wisdom, Planner};
+
+    let path = args
+        .get("wisdom")
+        .filter(|p| !p.is_empty())
+        .ok_or("tune: --wisdom <path> is required")?
+        .to_string();
+    let sizes = args.get_usize_list("sizes", &[256, 1024, 4096, 16384, 65536])?;
+    let reps = args.get_usize("reps", 5)?;
+    let prune = args.get_usize("prune", 4)?;
+    let force = args.flag("force");
+
+    // Attach (or repair): a missing file starts empty; a damaged or
+    // foreign-host file is reported and replaced — tune's whole job is to
+    // produce a valid wisdom file, so unlike `serve` it does not merely
+    // degrade to heuristics.
+    let p = std::path::Path::new(&path);
+    match wisdom::attach(p) {
+        Ok(entries) => println!("wisdom: attached {path} ({entries} entries)"),
+        Err(e) => {
+            eprintln!("wisdom: {e}; starting fresh");
+            wisdom::attach_fresh(p);
+        }
+    }
+    wisdom::set_append(true);
+    println!("host: {}", wisdom::HostKey::current());
+
+    let planner = Planner { reps, prune, use_wisdom: !force };
+    let mut timed = 0usize;
+    for &n in &sizes {
+        let before = wisdom::stats();
+        let t = Timer::start();
+        let (plan, timings) = planner.measured(n);
+        let ms = t.elapsed_ms();
+        let after = wisdom::stats();
+        let &(best, ns) = timings.first().expect("measured always returns timings");
+        let source = if after.hits > before.hits {
+            "from wisdom, 0 timed".to_string()
+        } else {
+            timed += timings.len();
+            format!("timed {} candidates in {ms:.0} ms", timings.len())
+        };
+        println!(
+            "  n={n:>8}: {} ({}) at {ns:.0} ns/iter ({source})",
+            best.name(),
+            plan.kernel_name(),
+        );
+    }
+    let saved = wisdom::save()?;
+    let s = wisdom::stats();
+    println!(
+        "wisdom: {} hits / {} misses — timed {timed} candidates, {} entries -> {}",
+        s.hits,
+        s.misses,
+        s.entries,
+        saved.map(|p| p.display().to_string()).unwrap_or(path),
+    );
     Ok(())
 }
 

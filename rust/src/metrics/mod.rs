@@ -310,6 +310,12 @@ pub struct ServiceMetrics {
     pub connections_active: Gauge,
     pub requests_shed: Counter,
     pub frames_malformed: Counter,
+    /// Cost-model accuracy (DESIGN.md §12): the most recent batch's
+    /// |predicted − actual| execution cost as a percentage of actual.
+    /// Predictions come from the `coordinator::cost` book (EWMA +
+    /// wisdom); the gauge is only meaningful once admitted requests
+    /// carried a charge (it stays 0 before then).
+    pub cost_err_pct: Gauge,
 }
 
 impl ServiceMetrics {
@@ -398,6 +404,19 @@ impl ServiceMetrics {
                 self.connections_refused.get(),
                 self.requests_shed.get(),
                 self.frames_malformed.get()
+            ));
+        }
+        // Wisdom is process-global like the table cache; the line appears
+        // once a file is attached (the `rust-wisdom` CI lane greps it to
+        // prove a tuned process recalls instead of re-timing).
+        let wisdom = crate::fft::wisdom::stats();
+        if wisdom.attached {
+            s.push_str(&format!(
+                "wisdom (process-wide): {} hits / {} misses ({} entries)  cost-err={}%\n",
+                wisdom.hits,
+                wisdom.misses,
+                wisdom.entries,
+                self.cost_err_pct.get()
             ));
         }
         s

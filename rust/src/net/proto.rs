@@ -151,6 +151,10 @@ impl Status {
     pub fn from_service_error(err: &ServiceError) -> Status {
         match err {
             ServiceError::Rejected => Status::Overloaded,
+            // Deadline sheds are load sheds: the queue is too deep for
+            // this request to finish in time, which on the wire is the
+            // same "try later / elsewhere" signal as a full queue.
+            ServiceError::Deadline { .. } => Status::Overloaded,
             ServiceError::UnsupportedSize(_) => Status::Unsupported,
             ServiceError::BadInput { .. } => Status::BadInput,
             ServiceError::Exec(_) => Status::Exec,

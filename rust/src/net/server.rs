@@ -299,8 +299,11 @@ fn handle_request(stream: &mut TcpStream, body: &[u8], state: &Arc<ServerState>)
         Ok((re, im)) => proto::encode_response_ok(&re, &im),
         Err(err) => {
             let status = Status::from_service_error(&err);
-            if status == Status::Overloaded {
+            if matches!(err, ServiceError::Rejected) {
                 // The service queue itself rejected: same shed lane.
+                // Deadline sheds also map to Overloaded on the wire, but
+                // the service already counted those at admission —
+                // counting by status here would double-book them.
                 state.metrics.requests_shed.inc();
             }
             proto::encode_response_err(status, &err.to_string())
