@@ -1,0 +1,54 @@
+//! Observability tour (DESIGN.md §13): run a few transforms through the
+//! service, then read the same activity three ways — the classic text
+//! report, Prometheus exposition, and a JSON object — all rendered from
+//! one torn-read-free `MetricsSnapshot`, plus the span trace ring
+//! exported as Chrome trace-event JSON.
+//!
+//!     cargo run --release --example observability
+//!
+//! Load the written `observability_trace.json` in `chrome://tracing` or
+//! https://ui.perfetto.dev to see queue/exec/e2e spans per request.
+
+use memfft::config::ServiceConfig;
+use memfft::coordinator::{Direction, FftService};
+use memfft::obs::trace;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // Tracing is off by default (one atomic load per would-be span);
+    // enable it before the workload so the ring catches everything.
+    trace::enable(trace::DEFAULT_CAPACITY);
+
+    let cfg = ServiceConfig {
+        method: "native".into(),
+        workers: 2,
+        max_batch: 8,
+        max_delay_us: 200,
+        ..Default::default()
+    };
+    let svc = FftService::start(cfg);
+    let mut pending = Vec::new();
+    for i in 0..32u64 {
+        let n = if i % 3 == 0 { 4096 } else { 1024 };
+        let re: Vec<f32> = (0..n).map(|k| ((k as f32) * 0.01).sin()).collect();
+        let im = vec![0f32; n];
+        pending.push(svc.submit(n, Direction::Forward, re, im)?);
+    }
+    for rx in pending {
+        rx.recv()??;
+    }
+
+    // One snapshot, three renderings. The snapshot loads every counter
+    // and histogram bucket exactly once, so the three views agree.
+    let snapshot = svc.metrics().snapshot();
+    println!("=== text report ===\n{}", snapshot.render_text());
+    let prom = snapshot.render_prometheus();
+    let shown: Vec<&str> = prom.lines().filter(|l| !l.contains("_bucket")).collect();
+    println!("=== prometheus (bucket series elided) ===\n{}\n", shown.join("\n"));
+    println!("=== json ===\n{}\n", snapshot.render_json());
+
+    svc.shutdown();
+
+    let spans = trace::write_chrome_trace("observability_trace.json")?;
+    println!("wrote {spans} spans to observability_trace.json (open in chrome://tracing)");
+    Ok(())
+}

@@ -361,6 +361,57 @@ impl TuneConfig {
     }
 }
 
+/// Observability knobs (`[obs]` section; DESIGN.md §13).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    /// Slow-request threshold in milliseconds (`obs.slow_request_ms`).
+    /// Any request whose end-to-end latency exceeds it is logged with its
+    /// queue/exec/e2e span breakdown. 0 disables the log.
+    pub slow_request_ms: u64,
+    /// Capacity of the span trace ring in events (`obs.trace_capacity`).
+    /// The ring is fixed-size and overwrites oldest; capacity is bound at
+    /// the first `--trace` enable in a process.
+    pub trace_capacity: usize,
+    /// Chrome-trace output path for the serve daemon (`obs.trace`): when
+    /// non-empty the daemon records spans and dumps the ring here on
+    /// drain. Empty = tracing off (the `--trace` CLI flag overrides).
+    pub trace_path: String,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            slow_request_ms: 0,
+            trace_capacity: crate::obs::trace::DEFAULT_CAPACITY,
+            trace_path: String::new(),
+        }
+    }
+}
+
+impl ObsConfig {
+    pub fn from_document(doc: &Document) -> Result<Self, ConfigError> {
+        let d = Self::default();
+        Ok(Self {
+            slow_request_ms: doc.usize_or("obs.slow_request_ms", d.slow_request_ms as usize)?
+                as u64,
+            trace_capacity: doc.usize_or("obs.trace_capacity", d.trace_capacity)?,
+            trace_path: doc.str_or("obs.trace", &d.trace_path)?,
+        })
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.trace_capacity == 0 {
+            return Err(ConfigError::Type("obs.trace_capacity".into(), "nonzero integer"));
+        }
+        Ok(())
+    }
+
+    /// The slow-request threshold in nanoseconds; 0 = disabled.
+    pub fn slow_request_ns(&self) -> u64 {
+        self.slow_request_ms.saturating_mul(1_000_000)
+    }
+}
+
 /// Typed service configuration consumed by the launcher and coordinator.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
@@ -414,6 +465,9 @@ pub struct ServiceConfig {
     /// Autotuning knobs (`[tune]` section): wisdom file, deadline
     /// admission control, adaptive batching.
     pub tune: TuneConfig,
+    /// Observability knobs (`[obs]` section): slow-request logging and
+    /// the span trace ring.
+    pub obs: ObsConfig,
 }
 
 impl Default for ServiceConfig {
@@ -433,6 +487,7 @@ impl Default for ServiceConfig {
             warmup: true,
             net: NetConfig::default(),
             tune: TuneConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -455,6 +510,7 @@ impl ServiceConfig {
             warmup: doc.bool_or("service.warmup", d.warmup)?,
             net: NetConfig::from_document(doc)?,
             tune: TuneConfig::from_document(doc)?,
+            obs: ObsConfig::from_document(doc)?,
         })
     }
 
@@ -488,6 +544,7 @@ impl ServiceConfig {
                 return Err(ConfigError::Type("service.sizes".into(), "powers of two"));
             }
         }
+        self.obs.validate()?;
         self.net.validate()
     }
 }
@@ -663,6 +720,31 @@ bandwidth_gbps = 144.0
         assert!(cfg.tune.wisdom.is_empty());
         assert_eq!(cfg.tune.default_deadline(), None);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn obs_section_parses_with_defaults() {
+        let doc = Document::parse(
+            "[obs]\nslow_request_ms = 50\ntrace_capacity = 4096\ntrace = \"spans.json\"\n",
+        )
+        .unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.obs.slow_request_ms, 50);
+        assert_eq!(cfg.obs.slow_request_ns(), 50_000_000);
+        assert_eq!(cfg.obs.trace_capacity, 4096);
+        assert_eq!(cfg.obs.trace_path, "spans.json");
+        cfg.validate().unwrap();
+        // Absent section: slow-request logging off, default ring capacity,
+        // no trace dump — zero-overhead observability by default.
+        let cfg = ServiceConfig::from_document(&Document::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.obs, ObsConfig::default());
+        assert_eq!(cfg.obs.slow_request_ms, 0);
+        assert_eq!(cfg.obs.trace_capacity, crate::obs::trace::DEFAULT_CAPACITY);
+        assert!(cfg.obs.trace_path.is_empty());
+        cfg.validate().unwrap();
+        // A zero-capacity ring is rejected, not clamped.
+        let doc = Document::parse("[obs]\ntrace_capacity = 0\n").unwrap();
+        assert!(ServiceConfig::from_document(&doc).unwrap().validate().is_err());
     }
 
     #[test]

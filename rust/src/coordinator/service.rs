@@ -199,6 +199,14 @@ impl FftService {
             {
                 if predicted as u128 > d.as_nanos() {
                     self.metrics.requests_shed.inc();
+                    // Instant span; no request id exists yet, so the
+                    // correlation id is the problem size (DESIGN.md §13).
+                    crate::obs::trace::record(
+                        crate::obs::trace::SpanKind::RequestShed,
+                        n as u64,
+                        Instant::now(),
+                        Duration::ZERO,
+                    );
                     return Err(ServiceError::Deadline {
                         predicted_ms: predicted / 1_000_000,
                         deadline_ms: d.as_millis() as u64,
@@ -242,6 +250,12 @@ impl FftService {
                     self.costs.discharge(r.charged_ns);
                 }
                 self.metrics.requests_rejected.inc();
+                crate::obs::trace::record(
+                    crate::obs::trace::SpanKind::RequestRejected,
+                    n as u64,
+                    Instant::now(),
+                    Duration::ZERO,
+                );
                 Err(ServiceError::Rejected)
             }
             Err(TrySendError::Disconnected(_)) => Err(ServiceError::Shutdown),
@@ -377,6 +391,7 @@ fn worker_body(
     }
     let _ = ready.send(()); // init + warmup done; service may go live
 
+    let slow_ns = cfg.obs.slow_request_ns();
     loop {
         let batch = {
             let guard = rx.lock().unwrap();
@@ -385,14 +400,23 @@ fn worker_body(
                 Err(_) => return, // batcher gone, no more work
             }
         };
-        run_batch(batch, backend.as_mut(), &metrics, &costs);
+        run_batch(batch, backend.as_mut(), &metrics, &costs, slow_ns);
     }
 }
 
 /// The one execution path: gather planar planes, run the batch through
 /// `Backend::execute_batch`, scatter responses. Substrate differences
 /// (chunking, plan caches, cost models) live behind the trait.
-fn run_batch(batch: Batch, backend: &mut dyn Backend, metrics: &ServiceMetrics, costs: &CostBook) {
+/// `slow_ns > 0` logs any request whose end-to-end latency exceeds it,
+/// with its queue/exec/e2e span breakdown (`obs.slow_request_ms`).
+fn run_batch(
+    batch: Batch,
+    backend: &mut dyn Backend,
+    metrics: &ServiceMetrics,
+    costs: &CostBook,
+    slow_ns: u64,
+) {
+    use crate::obs::trace::{self, SpanKind};
     let n = batch.n();
     let count = batch.requests.len();
     let now = Instant::now();
@@ -400,7 +424,9 @@ fn run_batch(batch: Batch, backend: &mut dyn Backend, metrics: &ServiceMetrics, 
     metrics.batch_fill.add(count as u64);
     let charged_total: u64 = batch.requests.iter().map(|r| r.charged_ns).sum();
     for r in &batch.requests {
-        metrics.queue_latency.record(now.duration_since(r.submitted_at));
+        let queued = now.duration_since(r.submitted_at);
+        metrics.queue_latency.record(queued);
+        trace::record(SpanKind::RequestQueue, r.id, r.submitted_at, queued);
     }
 
     // Planar gather: one [count * n] plane pair for the whole batch.
@@ -417,9 +443,13 @@ fn run_batch(batch: Batch, backend: &mut dyn Backend, metrics: &ServiceMetrics, 
     };
     let spec = BatchSpec::new(problem, batch.direction);
 
+    let exec_start = Instant::now();
     match backend.execute_batch(&spec, &re, &im) {
         Ok(out) => {
             metrics.exec_latency.record(out.exec_time);
+            // One exec span per batch, correlated by the first request id
+            // so a request's queue/exec/e2e spans line up in a trace view.
+            trace::record(SpanKind::RequestExec, batch.requests[0].id, exec_start, out.exec_time);
             metrics.plan_cache_hits.add(out.plan_cache_hits);
             metrics.plan_cache_misses.add(out.plan_cache_misses);
             // Feed the cost book: discharge what admission charged, fold
@@ -434,15 +464,26 @@ fn run_batch(batch: Batch, backend: &mut dyn Backend, metrics: &ServiceMetrics, 
             }
             let done = Instant::now();
             for (i, r) in batch.requests.iter().enumerate() {
+                let e2e = done.duration_since(r.submitted_at);
                 let resp = FftResponse {
                     id: r.id,
                     re: out.re[i * n..(i + 1) * n].to_vec(),
                     im: out.im[i * n..(i + 1) * n].to_vec(),
-                    queue_time: done.duration_since(r.submitted_at).saturating_sub(out.exec_time),
+                    queue_time: e2e.saturating_sub(out.exec_time),
                     exec_time: out.exec_time,
                     batch_size: count,
                 };
-                metrics.e2e_latency.record(done.duration_since(r.submitted_at));
+                metrics.e2e_latency.record(e2e);
+                trace::record(SpanKind::RequestE2e, r.id, r.submitted_at, e2e);
+                if slow_ns > 0 && e2e.as_nanos() as u64 > slow_ns {
+                    eprintln!(
+                        "slow request {}: e2e={} (queue={} exec={} batch={count} n={n})",
+                        r.id,
+                        crate::util::timer::fmt_duration(e2e),
+                        crate::util::timer::fmt_duration(e2e.saturating_sub(out.exec_time)),
+                        crate::util::timer::fmt_duration(out.exec_time),
+                    );
+                }
                 metrics.requests_done.inc();
                 let _ = r.reply.send(Ok(resp));
             }

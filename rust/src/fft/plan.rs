@@ -490,10 +490,17 @@ impl Planner {
         cache: &PlanCache,
         n: usize,
     ) -> (Arc<super::spec::Plan>, Vec<(Algorithm, f64)>) {
+        let t0 = std::time::Instant::now();
         if self.use_wisdom {
             if let Some((algo, ns)) = super::wisdom::recall(n) {
                 let plan = cache.get(n, algo);
                 assert!(cache.contains(n, algo), "recalled winner must be memoized");
+                crate::obs::trace::record(
+                    crate::obs::trace::SpanKind::PlanWisdomHit,
+                    n as u64,
+                    t0,
+                    t0.elapsed(),
+                );
                 return (plan, vec![(algo, ns)]);
             }
         }
@@ -547,6 +554,12 @@ impl Planner {
             .with_algorithm(best);
         let plan = cache.try_get_spec(&spec).expect("measured winner must plan");
         assert!(cache.contains_spec(&spec), "measured winner must enter the plan cache");
+        crate::obs::trace::record(
+            crate::obs::trace::SpanKind::PlanMeasure,
+            n as u64,
+            t0,
+            t0.elapsed(),
+        );
         (plan, timings)
     }
 }

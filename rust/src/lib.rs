@@ -45,6 +45,15 @@
 //! typed `Overloaded` response instead of queuing without bound
 //! (DESIGN.md §10).
 //!
+//! Everything above is observable through one snapshot layer: [`metrics`]
+//! counters/histograms collapse into a torn-read-free
+//! [`metrics::MetricsSnapshot`] rendered as text, Prometheus exposition
+//! ([`obs::prom`]) or JSON — locally, or over the wire via the
+//! `MetricsReply` frame (`memfft client --stats --format prom|json`) —
+//! while [`obs::trace`] records per-request / per-chunk / per-connection
+//! span events into a lock-free ring exported as Chrome trace JSON
+//! (`serve --trace` / `stream --trace`; DESIGN.md §13).
+//!
 //! See `DESIGN.md` for the system inventory (and §Execution-API for the
 //! trait design + migration notes) and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
@@ -61,6 +70,7 @@ pub mod sar;
 pub mod stream;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod testing;
 pub mod util;
 

@@ -52,6 +52,7 @@ fn cli() -> Cli {
                 .arg_default("max-conns", "0", "connection cap (0 = net.max_connections)")
                 .arg_default("run-secs", "0", "serve for N seconds then drain (0 = until stdin closes or a 'shutdown' line)")
                 .arg_default("wisdom", "", "wisdom file to attach (overrides tune.wisdom; a damaged file degrades to heuristic planning)")
+                .arg_default("trace", "", "write Chrome trace-event JSON of recorded spans here on drain (overrides obs.trace)")
                 .flag("synthetic", "replay the old in-process synthetic workload instead of serving TCP")
                 .arg_default("requests", "200", "synthetic requests to issue (--synthetic)")
                 .arg_default("sizes", "1024,4096,16384", "synthetic request sizes (--synthetic)"),
@@ -69,6 +70,7 @@ fn cli() -> Cli {
                 .arg_default("timeout-ms", "30000", "socket timeout (0 = none)")
                 .flag("check", "recompute locally through fft::plan() and require bit-for-bit equality (same-host check; assumes a native-library daemon method)")
                 .flag("stats", "fetch and print the daemon's metrics report, then exit")
+                .arg_default("format", "text", "metrics rendering for --stats: text | prom | json")
                 .flag("health", "fetch and print the daemon's health line, then exit")
                 .flag("garbage", "send a deliberately malformed frame; expect a typed bad-frame rejection, then exit"),
         )
@@ -112,6 +114,7 @@ fn cli() -> Cli {
                 .arg_default("budget", "0", "per-chunk bytes (0 = MEMFFT_STREAM_BUDGET / 32 MiB)")
                 .arg_default("threads", "0", "FFT data-parallel threads (0 = all cores)")
                 .arg_default("tile", "0", "memtier cache tile, complex elems (0 = auto)")
+                .arg_default("trace", "", "write Chrome trace-event JSON of per-chunk spans here after the run")
                 .flag("check", "recompute in memory and diff bit-for-bit"),
         )
         .command(
@@ -178,11 +181,18 @@ fn cmd_serve(args: &memfft::cli::Args) -> CmdResult {
     if max_conns > 0 {
         cfg.net.max_connections = max_conns;
     }
+    if let Some(t) = args.get("trace").filter(|s| !s.is_empty()) {
+        cfg.obs.trace_path = t.to_string();
+    }
     cfg.validate()?;
     if args.flag("synthetic") {
         return serve_synthetic(args, cfg);
     }
 
+    let trace_path = cfg.obs.trace_path.clone();
+    if !trace_path.is_empty() {
+        memfft::obs::trace::enable(cfg.obs.trace_capacity);
+    }
     let run_secs = args.get_u64("run-secs", 0)?;
     println!(
         "starting daemon: listen={} method={} workers={} max-conns={} max-inflight={}",
@@ -209,6 +219,10 @@ fn cmd_serve(args: &memfft::cli::Args) -> CmdResult {
     println!("draining...");
     server.shutdown();
     println!("{}", metrics.report());
+    if !trace_path.is_empty() {
+        let spans = memfft::obs::trace::write_chrome_trace(&trace_path)?;
+        println!("trace: wrote {spans} spans to {trace_path}");
+    }
     Ok(())
 }
 
@@ -269,7 +283,19 @@ fn cmd_client(args: &memfft::cli::Args) -> CmdResult {
         return Ok(());
     }
     if args.flag("stats") {
-        println!("{}", client.stats()?);
+        let f = args.get_or("format", "text");
+        let format = memfft::net::StatsFormat::parse(f)
+            .ok_or_else(|| format!("client: --format must be text, prom or json, got '{f}'"))?;
+        let payload = client.stats_format(format)?;
+        if format == memfft::net::StatsFormat::Text {
+            // Keep the legacy text lane byte-identical (trailing blank line
+            // included) for the CI greps that consume it.
+            println!("{payload}");
+        } else {
+            // Structured renderings end in a newline already; print them
+            // as-is so piped output stays parseable byte-for-byte.
+            print!("{payload}");
+        }
         return Ok(());
     }
     if args.flag("garbage") {
@@ -679,6 +705,11 @@ fn cmd_stream(args: &memfft::cli::Args) -> CmdResult {
     };
     cfg.validate()?;
 
+    let trace_path = args.get_or("trace", "").to_string();
+    if !trace_path.is_empty() {
+        memfft::obs::trace::enable(memfft::obs::trace::DEFAULT_CAPACITY);
+    }
+
     let mut src = FileDataset::open(&input)?;
     let dims = src.dims();
     let (shape, domain) = parse_descriptor(args, dims, "stream")?;
@@ -743,6 +774,10 @@ fn cmd_stream(args: &memfft::cli::Args) -> CmdResult {
     };
     println!("{}", report.summary());
     println!("{}", proc.metrics().report());
+    if !trace_path.is_empty() {
+        let spans = memfft::obs::trace::write_chrome_trace(&trace_path)?;
+        println!("trace: wrote {spans} spans to {trace_path}");
+    }
 
     if args.flag("check") {
         check_streamed(&cfg, &input, &output, &op, domain, fft2d)?;

@@ -1,6 +1,16 @@
 //! Service metrics: counters, gauges, latency histograms with percentile
 //! queries, and throughput meters. Used by the coordinator's hot path, so
 //! recording is lock-free (atomics) where it matters.
+//!
+//! Reading happens through [`ServiceMetrics::snapshot`]: every counter and
+//! gauge is loaded exactly once into a plain-data [`MetricsSnapshot`]
+//! (full histogram bucket vectors included), and all renderers —
+//! [`MetricsSnapshot::render_text`] (the classic human report),
+//! [`MetricsSnapshot::render_prometheus`] (text exposition format via
+//! [`crate::obs::prom`]) and [`MetricsSnapshot::render_json`] — format
+//! from that one consistent load instead of re-reading live atomics
+//! mid-format (DESIGN.md §13). [`ServiceMetrics::report`] is sugar for
+//! `snapshot().render_text()`.
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -29,6 +39,12 @@ impl Counter {
 
     pub fn get(&self) -> u64 {
         self.value.load(Ordering::Relaxed)
+    }
+
+    /// Zero the counter (window restarts, tests). Concurrent `add`s land
+    /// either before or after the store — no partial state.
+    pub fn reset(&self) {
+        self.value.store(0, Ordering::Relaxed);
     }
 }
 
@@ -64,6 +80,19 @@ impl Gauge {
     }
 }
 
+/// Fraction of lookups served from cache: `hits / (hits + misses)`, with
+/// an idle cache (no lookups) reading exactly 0.0. The one definition of
+/// hit-rate math — `CacheCounters::hit_rate` and every report renderer
+/// route through it instead of re-deriving the ratio inline.
+pub fn hit_fraction(hits: u64, misses: u64) -> f64 {
+    let total = hits + misses;
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
+
 /// Hit/miss counter pair for read-only caches (the FFT table cache, plan
 /// caches, artifact caches). Lock-free recording; snapshots are two
 /// relaxed loads, so a snapshot taken under concurrent traffic is a
@@ -88,12 +117,7 @@ impl CacheCounters {
     /// lookups have happened.
     pub fn hit_rate(&self) -> f64 {
         let (h, m) = self.snapshot();
-        let total = h + m;
-        if total == 0 {
-            0.0
-        } else {
-            h as f64 / total as f64
-        }
+        hit_fraction(h, m)
     }
 }
 
@@ -114,6 +138,18 @@ pub struct LatencyHistogram {
 const HIST_BASE_NS: f64 = 1_000.0; // 1 µs
 const HIST_GROWTH: f64 = 1.189_207_115_002_721; // 2^(1/4)
 const HIST_BUCKETS: usize = 100; // covers up to ~ 1µs * 2^25 ≈ 33 s
+
+/// Number of log buckets every [`LatencyHistogram`] carries (exposed for
+/// renderers that enumerate bucket edges, e.g. the Prometheus exporter).
+pub const HIST_BUCKET_COUNT: usize = HIST_BUCKETS;
+
+/// Lower edge of bucket `i` in nanoseconds (`i == HIST_BUCKET_COUNT` is
+/// the upper edge of the last bucket). The same geometric ladder the
+/// percentile interpolation walks, exported so `_bucket{le=..}` labels
+/// in the Prometheus rendering use the real edges.
+pub fn bucket_edge_ns(i: usize) -> f64 {
+    LatencyHistogram::bucket_edge(i)
+}
 
 impl Default for LatencyHistogram {
     fn default() -> Self {
@@ -168,6 +204,16 @@ impl LatencyHistogram {
         Duration::from_nanos(self.max_ns.load(Ordering::Relaxed))
     }
 
+    /// One load of every bucket + the three scalars into plain data.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+
     /// Percentile (0-100) with intra-bucket linear interpolation.
     ///
     /// Hardened against the boundary cases an unchecked implementation gets
@@ -202,14 +248,105 @@ impl LatencyHistogram {
         self.max()
     }
 
+    /// Format n/mean/p50/p95/p99/max on one line. Goes through
+    /// [`LatencyHistogram::snapshot`] so the three percentiles come out of
+    /// a single bucket pass instead of one full walk each.
     pub fn summary(&self, name: &str) -> String {
+        self.snapshot().summary(name)
+    }
+}
+
+/// Plain-data copy of a [`LatencyHistogram`]: the full bucket vector plus
+/// count / sum / max, loaded once. Percentile queries on a snapshot are
+/// pure functions of this data — repeated queries agree with each other,
+/// which live-histogram queries under traffic do not.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket sample counts; `buckets[i]` covers
+    /// `[bucket_edge_ns(i), bucket_edge_ns(i + 1))`.
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_ns: u64,
+    pub max_ns: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns / self.count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns)
+    }
+
+    /// Upper edge of bucket `i` in ns (the `le` bound of that bucket).
+    pub fn bucket_upper_edge_ns(&self, i: usize) -> f64 {
+        bucket_edge_ns(i + 1)
+    }
+
+    /// All requested percentiles in ONE pass over the buckets, each value
+    /// identical to what [`LatencyHistogram::percentile`] returns for the
+    /// same data: same rank formula (ceil, clamped to [1, count]), same
+    /// first-crossing bucket, same linear interpolation, same cap at the
+    /// observed max. Targets are resolved in ascending rank order while a
+    /// single cursor walks the buckets.
+    pub fn percentiles(&self, pcts: &[f64]) -> Vec<Duration> {
+        if self.count == 0 {
+            return vec![Duration::ZERO; pcts.len()];
+        }
+        let total = self.count;
+        let targets: Vec<u64> = pcts
+            .iter()
+            .map(|p| ((p / 100.0 * total as f64).ceil() as u64).clamp(1, total))
+            .collect();
+        let mut order: Vec<usize> = (0..targets.len()).collect();
+        order.sort_by_key(|&i| targets[i]);
+        // Unresolved targets (count field ahead of the bucket sum under a
+        // torn live read — impossible for a snapshot of quiet data) fall
+        // back to the observed max, like the single-percentile walk.
+        let mut out = vec![Duration::from_nanos(self.max_ns); pcts.len()];
+        let mut seen = 0u64;
+        let mut next = 0usize;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c > 0 {
+                while next < order.len() && seen + c >= targets[order[next]] {
+                    let slot = order[next];
+                    let into = targets[slot].saturating_sub(seen).min(c);
+                    let frac = into as f64 / c as f64;
+                    let lo = bucket_edge_ns(i);
+                    let hi = bucket_edge_ns(i + 1);
+                    let ns = ((lo + frac * (hi - lo)) as u64).min(self.max_ns);
+                    out[slot] = Duration::from_nanos(ns);
+                    next += 1;
+                }
+                if next == order.len() {
+                    break;
+                }
+            }
+            seen += c;
+        }
+        out
+    }
+
+    /// Single percentile; see [`HistogramSnapshot::percentiles`].
+    pub fn percentile(&self, pct: f64) -> Duration {
+        self.percentiles(&[pct])[0]
+    }
+
+    /// The classic one-line summary (`name: n=.. mean=.. p50=.. …`),
+    /// byte-identical to the pre-snapshot formatting.
+    pub fn summary(&self, name: &str) -> String {
+        let ps = self.percentiles(&[50.0, 95.0, 99.0]);
         format!(
             "{name}: n={} mean={} p50={} p95={} p99={} max={}",
-            self.count(),
+            self.count,
             crate::util::timer::fmt_duration(self.mean()),
-            crate::util::timer::fmt_duration(self.percentile(50.0)),
-            crate::util::timer::fmt_duration(self.percentile(95.0)),
-            crate::util::timer::fmt_duration(self.percentile(99.0)),
+            crate::util::timer::fmt_duration(ps[0]),
+            crate::util::timer::fmt_duration(ps[1]),
+            crate::util::timer::fmt_duration(ps[2]),
             crate::util::timer::fmt_duration(self.max()),
         )
     }
@@ -269,8 +406,18 @@ impl Meter {
         payload as f64 / self.window_secs()
     }
 
+    /// Restart the measurement window: the start instant AND both counters
+    /// reset together. (Resetting only the clock — the old behaviour —
+    /// divided cumulative totals by a fresh window, inflating every
+    /// post-reset rate.)
     pub fn reset(&self) {
-        *self.start.lock().unwrap() = Instant::now();
+        // Take the lock first so a concurrent rate query cannot observe
+        // new-window-old-counters; recorders racing the reset land wholly
+        // in one window or the other.
+        let mut start = self.start.lock().unwrap();
+        self.events.reset();
+        self.payload.reset();
+        *start = Instant::now();
     }
 }
 
@@ -332,50 +479,160 @@ impl ServiceMetrics {
         }
     }
 
+    /// Load every counter, gauge and histogram bucket exactly once into a
+    /// plain-data [`MetricsSnapshot`]. The process-global stats the text
+    /// report always included (kernel config, table cache, wisdom) are
+    /// captured here too, so every renderer sees the same cut.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let tables = crate::fft::table_stats();
+        let wisdom = crate::fft::wisdom::stats();
+        MetricsSnapshot {
+            requests_in: self.requests_in.get(),
+            requests_done: self.requests_done.get(),
+            requests_failed: self.requests_failed.get(),
+            requests_rejected: self.requests_rejected.get(),
+            requests_2d: self.requests_2d.get(),
+            requests_r2c: self.requests_r2c.get(),
+            batches_executed: self.batches_executed.get(),
+            batch_fill: self.batch_fill.get(),
+            plan_cache_hits: self.plan_cache_hits.get(),
+            plan_cache_misses: self.plan_cache_misses.get(),
+            queue_latency: self.queue_latency.snapshot(),
+            exec_latency: self.exec_latency.snapshot(),
+            e2e_latency: self.e2e_latency.snapshot(),
+            stream_chunks: self.stream_chunks.get(),
+            stream_rows: self.stream_rows.get(),
+            stream_read: self.stream_read.snapshot(),
+            stream_compute: self.stream_compute.snapshot(),
+            stream_write: self.stream_write.snapshot(),
+            connections_accepted: self.connections_accepted.get(),
+            connections_refused: self.connections_refused.get(),
+            connections_active: self.connections_active.get(),
+            requests_shed: self.requests_shed.get(),
+            frames_malformed: self.frames_malformed.get(),
+            cost_err_pct: self.cost_err_pct.get(),
+            kernel_radix: crate::fft::simd::radix().value(),
+            simd_active: crate::fft::simd::active().name(),
+            simd_detected: crate::fft::simd::detected().name(),
+            table_hits: tables.hits,
+            table_misses: tables.misses,
+            table_entries: tables.entries,
+            wisdom_attached: wisdom.attached,
+            wisdom_hits: wisdom.hits,
+            wisdom_misses: wisdom.misses,
+            wisdom_entries: wisdom.entries,
+        }
+    }
+
+    /// The classic human-readable report — sugar for
+    /// [`ServiceMetrics::snapshot`] + [`MetricsSnapshot::render_text`], so
+    /// a report under live traffic is internally consistent (each counter
+    /// was loaded once, not re-read mid-format).
     pub fn report(&self) -> String {
+        self.snapshot().render_text()
+    }
+}
+
+/// One consistent cut of a [`ServiceMetrics`] bundle plus the
+/// process-global stats the report always carried (kernel config, table
+/// cache, wisdom). Plain data: renderers and exporters are pure functions
+/// of this struct (DESIGN.md §13).
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests_in: u64,
+    pub requests_done: u64,
+    pub requests_failed: u64,
+    pub requests_rejected: u64,
+    pub requests_2d: u64,
+    pub requests_r2c: u64,
+    pub batches_executed: u64,
+    pub batch_fill: u64,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+    pub queue_latency: HistogramSnapshot,
+    pub exec_latency: HistogramSnapshot,
+    pub e2e_latency: HistogramSnapshot,
+    pub stream_chunks: u64,
+    pub stream_rows: u64,
+    pub stream_read: HistogramSnapshot,
+    pub stream_compute: HistogramSnapshot,
+    pub stream_write: HistogramSnapshot,
+    pub connections_accepted: u64,
+    pub connections_refused: u64,
+    pub connections_active: i64,
+    pub requests_shed: u64,
+    pub frames_malformed: u64,
+    pub cost_err_pct: i64,
+    /// Resolved kernel configuration (DESIGN.md §11) at snapshot time.
+    pub kernel_radix: usize,
+    pub simd_active: &'static str,
+    pub simd_detected: &'static str,
+    /// Process-wide twiddle/bitrev table cache (DESIGN.md §7).
+    pub table_hits: u64,
+    pub table_misses: u64,
+    pub table_entries: usize,
+    /// Process-wide wisdom attachment (DESIGN.md §12).
+    pub wisdom_attached: bool,
+    pub wisdom_hits: u64,
+    pub wisdom_misses: u64,
+    pub wisdom_entries: usize,
+}
+
+impl MetricsSnapshot {
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches_executed == 0 {
+            0.0
+        } else {
+            self.batch_fill as f64 / self.batches_executed as f64
+        }
+    }
+
+    /// Whether the TCP front end has seen any traffic (gates the `net:`
+    /// line, mirroring `ServiceMetrics::net_traffic_seen`).
+    pub fn net_traffic_seen(&self) -> bool {
+        self.connections_accepted > 0
+            || self.connections_refused > 0
+            || self.requests_shed > 0
+            || self.frames_malformed > 0
+    }
+
+    /// The human report, byte-identical to what `ServiceMetrics::report()`
+    /// produced before snapshots existed: same lines, same gates, same
+    /// format strings (the `report_is_snapshot_render_text` test and the
+    /// grep-based CI lanes hold this contract).
+    pub fn render_text(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
             "requests: in={} done={} failed={} rejected={}\n",
-            self.requests_in.get(),
-            self.requests_done.get(),
-            self.requests_failed.get(),
-            self.requests_rejected.get()
+            self.requests_in, self.requests_done, self.requests_failed, self.requests_rejected
         ));
-        if self.requests_2d.get() > 0 || self.requests_r2c.get() > 0 {
+        if self.requests_2d > 0 || self.requests_r2c > 0 {
             s.push_str(&format!(
                 "descriptors: 2d={} r2c={}\n",
-                self.requests_2d.get(),
-                self.requests_r2c.get()
+                self.requests_2d, self.requests_r2c
             ));
         }
         s.push_str(&format!(
             "batches: {} (mean fill {:.2})  plan-cache: {} hits / {} misses\n",
-            self.batches_executed.get(),
+            self.batches_executed,
             self.mean_batch_fill(),
-            self.plan_cache_hits.get(),
-            self.plan_cache_misses.get()
+            self.plan_cache_hits,
+            self.plan_cache_misses
         ));
         // Resolved kernel configuration (DESIGN.md §11): what the Stockham
         // level loop will actually run on this host, after env overrides.
         s.push_str(&format!(
             "kernel: radix={} simd={} (detected {})\n",
-            crate::fft::simd::radix().value(),
-            crate::fft::simd::active().name(),
-            crate::fft::simd::detected().name()
+            self.kernel_radix, self.simd_active, self.simd_detected
         ));
         // The table cache is process-global by design (DESIGN.md §7), so
         // this line reports process-wide sharing, not per-service activity.
-        let tables = crate::fft::table_stats();
         s.push_str(&format!(
             "table-cache (process-wide): {} hits / {} misses ({} entries, {:.0}% hit rate)\n",
-            tables.hits,
-            tables.misses,
-            tables.entries,
-            if tables.hits + tables.misses == 0 {
-                0.0
-            } else {
-                100.0 * tables.hits as f64 / (tables.hits + tables.misses) as f64
-            }
+            self.table_hits,
+            self.table_misses,
+            self.table_entries,
+            100.0 * hit_fraction(self.table_hits, self.table_misses)
         ));
         s.push_str(&self.queue_latency.summary("queue"));
         s.push('\n');
@@ -383,11 +640,10 @@ impl ServiceMetrics {
         s.push('\n');
         s.push_str(&self.e2e_latency.summary("e2e"));
         s.push('\n');
-        if self.stream_chunks.get() > 0 {
+        if self.stream_chunks > 0 {
             s.push_str(&format!(
                 "stream: {} chunks / {} rows\n",
-                self.stream_chunks.get(),
-                self.stream_rows.get()
+                self.stream_chunks, self.stream_rows
             ));
             s.push_str(&self.stream_read.summary("stream-read"));
             s.push('\n');
@@ -399,36 +655,94 @@ impl ServiceMetrics {
         if self.net_traffic_seen() {
             s.push_str(&format!(
                 "net: conns active={} accepted={} refused={}  shed={} malformed={}\n",
-                self.connections_active.get(),
-                self.connections_accepted.get(),
-                self.connections_refused.get(),
-                self.requests_shed.get(),
-                self.frames_malformed.get()
+                self.connections_active,
+                self.connections_accepted,
+                self.connections_refused,
+                self.requests_shed,
+                self.frames_malformed
             ));
         }
         // Wisdom is process-global like the table cache; the line appears
         // once a file is attached (the `rust-wisdom` CI lane greps it to
         // prove a tuned process recalls instead of re-timing).
-        let wisdom = crate::fft::wisdom::stats();
-        if wisdom.attached {
+        if self.wisdom_attached {
             s.push_str(&format!(
                 "wisdom (process-wide): {} hits / {} misses ({} entries)  cost-err={}%\n",
-                wisdom.hits,
-                wisdom.misses,
-                wisdom.entries,
-                self.cost_err_pct.get()
+                self.wisdom_hits, self.wisdom_misses, self.wisdom_entries, self.cost_err_pct
             ));
         }
         s
     }
 
-    /// Whether the TCP front end has seen any traffic (gates the `net:`
-    /// report line so in-process services keep their old report shape).
-    fn net_traffic_seen(&self) -> bool {
-        self.connections_accepted.get() > 0
-            || self.connections_refused.get() > 0
-            || self.requests_shed.get() > 0
-            || self.frames_malformed.get() > 0
+    /// Prometheus text exposition format (counters, gauges, and full
+    /// `_bucket`/`_sum`/`_count` histogram series); see
+    /// [`crate::obs::prom`] for the format contract.
+    pub fn render_prometheus(&self) -> String {
+        crate::obs::prom::render(self)
+    }
+
+    /// Compact JSON object (hand-rolled — the crate is std-only). Scalar
+    /// counters/gauges at the top level; each histogram as a nested object
+    /// with count / sum_ns / max_ns / p50_ns / p95_ns / p99_ns.
+    pub fn render_json(&self) -> String {
+        fn hist(s: &mut String, name: &str, h: &HistogramSnapshot) {
+            let ps = h.percentiles(&[50.0, 95.0, 99.0]);
+            s.push_str(&format!(
+                "\"{name}\":{{\"count\":{},\"sum_ns\":{},\"max_ns\":{},\"p50_ns\":{},\"p95_ns\":{},\"p99_ns\":{}}}",
+                h.count,
+                h.sum_ns,
+                h.max_ns,
+                ps[0].as_nanos(),
+                ps[1].as_nanos(),
+                ps[2].as_nanos(),
+            ));
+        }
+        let mut s = String::from("{");
+        s.push_str(&format!(
+            "\"requests_in\":{},\"requests_done\":{},\"requests_failed\":{},\"requests_rejected\":{},",
+            self.requests_in, self.requests_done, self.requests_failed, self.requests_rejected
+        ));
+        s.push_str(&format!(
+            "\"requests_2d\":{},\"requests_r2c\":{},\"requests_shed\":{},",
+            self.requests_2d, self.requests_r2c, self.requests_shed
+        ));
+        s.push_str(&format!(
+            "\"batches_executed\":{},\"batch_fill\":{},\"plan_cache_hits\":{},\"plan_cache_misses\":{},",
+            self.batches_executed, self.batch_fill, self.plan_cache_hits, self.plan_cache_misses
+        ));
+        s.push_str(&format!(
+            "\"table_cache_hits\":{},\"table_cache_misses\":{},\"table_cache_entries\":{},",
+            self.table_hits, self.table_misses, self.table_entries
+        ));
+        s.push_str(&format!(
+            "\"wisdom_attached\":{},\"wisdom_hits\":{},\"wisdom_misses\":{},\"wisdom_entries\":{},",
+            self.wisdom_attached, self.wisdom_hits, self.wisdom_misses, self.wisdom_entries
+        ));
+        s.push_str(&format!(
+            "\"stream_chunks\":{},\"stream_rows\":{},",
+            self.stream_chunks, self.stream_rows
+        ));
+        s.push_str(&format!(
+            "\"connections_accepted\":{},\"connections_refused\":{},\"connections_active\":{},\"frames_malformed\":{},",
+            self.connections_accepted, self.connections_refused, self.connections_active, self.frames_malformed
+        ));
+        s.push_str(&format!(
+            "\"cost_err_pct\":{},\"kernel_radix\":{},\"simd_active\":\"{}\",\"simd_detected\":\"{}\",",
+            self.cost_err_pct, self.kernel_radix, self.simd_active, self.simd_detected
+        ));
+        hist(&mut s, "queue_latency", &self.queue_latency);
+        s.push(',');
+        hist(&mut s, "exec_latency", &self.exec_latency);
+        s.push(',');
+        hist(&mut s, "e2e_latency", &self.e2e_latency);
+        s.push(',');
+        hist(&mut s, "stream_read", &self.stream_read);
+        s.push(',');
+        hist(&mut s, "stream_compute", &self.stream_compute);
+        s.push(',');
+        hist(&mut s, "stream_write", &self.stream_write);
+        s.push('}');
+        s
     }
 }
 
@@ -462,6 +776,9 @@ mod tests {
         c.hits.add(3);
         assert_eq!(c.snapshot(), (3, 1));
         assert!((c.hit_rate() - 0.75).abs() < 1e-12);
+        // hit_rate is defined as hit_fraction — one ratio, no inline forks.
+        assert_eq!(c.hit_rate(), hit_fraction(3, 1));
+        assert_eq!(hit_fraction(0, 0), 0.0);
     }
 
     #[test]
@@ -486,6 +803,9 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.percentile(99.0), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
+        let snap = h.snapshot();
+        assert_eq!(snap.percentiles(&[50.0, 99.0]), vec![Duration::ZERO; 2]);
+        assert_eq!(snap.mean(), Duration::ZERO);
     }
 
     /// Regression: interpolation used to return a bucket's *upper* edge at
@@ -543,6 +863,49 @@ mod tests {
         assert!(h.percentile(100.0) >= h.percentile(1.0));
     }
 
+    /// The single-pass snapshot percentiles must agree EXACTLY with the
+    /// one-walk-per-query live implementation on quiet data, including the
+    /// hardened edge cases (NaN/out-of-range pct, single sample, bucket
+    /// edges, beyond-last-bucket clamps).
+    #[test]
+    fn snapshot_percentiles_match_live_walk() {
+        let mut rng = crate::util::prng::Xoshiro256::seeded(0x0B5);
+        let mut h = LatencyHistogram::new();
+        for case in 0..6 {
+            for _ in 0..500 {
+                let us = 1 + (rng.next_u64() % 200_000);
+                h.record(Duration::from_micros(us));
+            }
+            let snap = h.snapshot();
+            let pcts = [f64::NAN, -5.0, 0.0, 1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0, 250.0];
+            let batch = snap.percentiles(&pcts);
+            for (i, &pct) in pcts.iter().enumerate() {
+                assert_eq!(
+                    batch[i],
+                    h.percentile(pct),
+                    "case {case} pct {pct}: single-pass diverged from live walk"
+                );
+                assert_eq!(batch[i], snap.percentile(pct), "case {case} pct {pct}");
+            }
+            if case == 3 {
+                h = LatencyHistogram::new();
+                h.record(Duration::from_micros(123)); // single-sample case
+            } else if case == 4 {
+                h = LatencyHistogram::new();
+                h.record(Duration::from_secs(100)); // beyond-last-bucket case
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_summary_matches_live_summary() {
+        let h = LatencyHistogram::new();
+        for i in 1..=777u64 {
+            h.record(Duration::from_micros(i * 3));
+        }
+        assert_eq!(h.snapshot().summary("exec"), h.summary("exec"));
+    }
+
     #[test]
     fn meter_rates() {
         let m = Meter::new();
@@ -568,6 +931,28 @@ mod tests {
         assert!(rate.is_finite() && rate > 0.0, "rate {rate}");
         let bps = m.payload_per_sec();
         assert!(bps.is_finite() && bps > 0.0, "bps {bps}");
+    }
+
+    /// Regression: `reset()` used to restart the clock but keep the
+    /// cumulative event/payload counters, so post-reset rates divided the
+    /// full history by a fresh (tiny) window — grossly inflated.
+    #[test]
+    fn meter_reset_clears_counters_with_window() {
+        let m = Meter::new();
+        for _ in 0..1000 {
+            m.record(1 << 20);
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        m.reset();
+        // A reset meter is indistinguishable from a fresh one: exactly
+        // idle-zero, not cumulative-totals-over-a-zero-window.
+        assert_eq!(m.events_per_sec(), 0.0);
+        assert_eq!(m.payload_per_sec(), 0.0);
+        // And the next window starts counting from zero.
+        m.record(100);
+        std::thread::sleep(Duration::from_millis(5));
+        let rate = m.events_per_sec();
+        assert!(rate.is_finite() && rate > 0.0 && rate < 1000.0, "post-reset rate {rate} reflects one event, not the pre-reset thousand");
     }
 
     #[test]
@@ -615,5 +1000,54 @@ mod tests {
         let report = m.report();
         assert!(report.contains("stream: 1 chunks / 42 rows"));
         assert!(report.contains("stream-read"));
+    }
+
+    /// The snapshot renderer IS the report: byte-for-byte, on quiet
+    /// metrics, across the gated sections (bare, descriptor lane, stream
+    /// lane, net lane all exercised).
+    #[test]
+    fn report_is_snapshot_render_text() {
+        let m = ServiceMetrics::new();
+        assert_eq!(m.report(), m.snapshot().render_text());
+        m.requests_in.add(5);
+        m.requests_done.add(4);
+        m.requests_2d.inc();
+        m.batches_executed.add(2);
+        m.batch_fill.add(9);
+        m.queue_latency.record(Duration::from_micros(40));
+        m.exec_latency.record(Duration::from_micros(400));
+        m.e2e_latency.record(Duration::from_micros(444));
+        assert_eq!(m.report(), m.snapshot().render_text());
+        m.stream_chunks.add(3);
+        m.stream_rows.add(24);
+        m.stream_read.record(Duration::from_micros(11));
+        m.stream_compute.record(Duration::from_micros(22));
+        m.stream_write.record(Duration::from_micros(33));
+        m.connections_accepted.inc();
+        m.connections_active.inc();
+        assert_eq!(m.report(), m.snapshot().render_text());
+        // And a snapshot is stable: mutating live metrics afterwards does
+        // not change an already-taken snapshot's rendering.
+        let snap = m.snapshot();
+        let before = snap.render_text();
+        m.requests_in.add(1000);
+        m.queue_latency.record(Duration::from_secs(1));
+        assert_eq!(snap.render_text(), before, "snapshots are immutable cuts");
+    }
+
+    #[test]
+    fn render_json_shape() {
+        let m = ServiceMetrics::new();
+        m.requests_in.add(3);
+        m.exec_latency.record(Duration::from_micros(50));
+        let json = m.snapshot().render_json();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"requests_in\":3"));
+        assert!(json.contains("\"exec_latency\":{\"count\":1,"));
+        assert!(json.contains("\"wisdom_attached\":"));
+        // Balanced braces / quotes — cheap structural sanity; the obs
+        // battery parses it with a real JSON parser.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('"').count() % 2, 0);
     }
 }

@@ -6,7 +6,7 @@ use std::fmt;
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
-use super::proto::{self, FrameError, FrameKind, ProtoError, Status, WireResponse};
+use super::proto::{self, FrameError, FrameKind, ProtoError, StatsFormat, Status, WireResponse};
 use crate::coordinator::Direction;
 use crate::fft::ProblemSpec;
 
@@ -111,9 +111,25 @@ impl NetClient {
 
     /// Fetch the daemon's metrics report (`ServiceMetrics::report` + uptime).
     pub fn stats(&mut self) -> Result<String, NetError> {
-        proto::write_frame(&mut self.stream, &proto::encode_empty(FrameKind::Stats))?;
-        let body = self.read_frame_of_kind(FrameKind::StatsReply)?;
-        Ok(proto::decode_text_body(&body)?)
+        self.stats_format(StatsFormat::Text)
+    }
+
+    /// Fetch the daemon's metrics in a chosen rendering. `Text` uses the
+    /// legacy plaintext `StatsReply` lane; `Prom` / `Json` negotiate a
+    /// structured `MetricsReply` and return its payload, verifying that
+    /// the daemon echoed the requested format.
+    pub fn stats_format(&mut self, format: StatsFormat) -> Result<String, NetError> {
+        proto::write_frame(&mut self.stream, &proto::encode_stats_request(format))?;
+        if format == StatsFormat::Text {
+            let body = self.read_frame_of_kind(FrameKind::StatsReply)?;
+            return Ok(proto::decode_text_body(&body)?);
+        }
+        let body = self.read_frame_of_kind(FrameKind::MetricsReply)?;
+        let (got, payload) = proto::decode_metrics_body(&body)?;
+        if got != format {
+            return Err(NetError::UnexpectedFrame(FrameKind::MetricsReply));
+        }
+        Ok(payload)
     }
 
     /// Liveness probe; returns the daemon's one-line health summary.

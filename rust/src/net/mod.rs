@@ -7,8 +7,10 @@
 //!   typed [`Status`] plus payload or diagnostic. Pure encode/decode.
 //! - [`server`] — [`NetServer`]: accept loop, per-connection handler
 //!   threads behind a connection cap, a bounded in-flight request cap that
-//!   sheds with `Overloaded` instead of blocking, plaintext stats/health
-//!   frames, and graceful drain into `FftService::shutdown`.
+//!   sheds with `Overloaded` instead of blocking, stats/health frames
+//!   (plaintext, or a structured `MetricsReply` when the `Stats` request
+//!   names a [`StatsFormat`]), and graceful drain into
+//!   `FftService::shutdown`.
 //! - [`client`] — [`NetClient`]: blocking connect/request/roundtrip used by
 //!   `memfft client`, the `fft_server` example, and the test battery.
 //!
@@ -20,5 +22,5 @@ pub mod proto;
 pub mod server;
 
 pub use client::{roundtrip, NetClient, NetError};
-pub use proto::{FrameError, FrameKind, ProtoError, Status, WireRequest, WireResponse};
+pub use proto::{FrameError, FrameKind, ProtoError, StatsFormat, Status, WireRequest, WireResponse};
 pub use server::NetServer;

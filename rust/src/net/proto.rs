@@ -28,8 +28,23 @@
 //! ```
 //!
 //! A `Response` body is one [`Status`] byte followed by the interleaved
-//! payload on `Ok`, or a UTF-8 diagnostic message otherwise. `Stats` /
-//! `Health` requests have empty bodies; their replies carry UTF-8 text.
+//! payload on `Ok`, or a UTF-8 diagnostic message otherwise. `Health`
+//! requests have empty bodies; their replies carry UTF-8 text.
+//!
+//! A `Stats` request body is either **empty** (legacy probe — the server
+//! answers with a plaintext `StatsReply`, so old clients keep working
+//! unchanged) or **one [`StatsFormat`] byte** (2 = prom, 3 = json), in
+//! which case the server answers with a structured `MetricsReply`:
+//!
+//! ```text
+//! offset  size  field
+//!      0     1  metrics version  (METRICS_VERSION = 1)
+//!      1     1  format           StatsFormat byte that was requested
+//!      2     N  payload          UTF-8 rendering in that format
+//! ```
+//!
+//! The leading version byte lets the reply schema evolve without a new
+//! frame kind; [`decode_metrics_body`] rejects versions it does not speak.
 //!
 //! Encode/decode are pure functions over byte slices so every malformed-frame
 //! case is unit-testable without a socket; [`read_frame`] / [`write_frame`]
@@ -71,6 +86,9 @@ pub enum FrameKind {
     Health,
     /// Liveness reply (UTF-8 text body).
     HealthReply,
+    /// Structured metrics reply: version byte + format byte + UTF-8
+    /// payload, answering a `Stats` request that carried a format byte.
+    MetricsReply,
 }
 
 impl FrameKind {
@@ -82,6 +100,7 @@ impl FrameKind {
             FrameKind::StatsReply => 4,
             FrameKind::Health => 5,
             FrameKind::HealthReply => 6,
+            FrameKind::MetricsReply => 7,
         }
     }
 
@@ -93,7 +112,60 @@ impl FrameKind {
             4 => Some(FrameKind::StatsReply),
             5 => Some(FrameKind::Health),
             6 => Some(FrameKind::HealthReply),
+            7 => Some(FrameKind::MetricsReply),
             _ => None,
+        }
+    }
+}
+
+/// Version byte leading every `MetricsReply` body.
+pub const METRICS_VERSION: u8 = 1;
+
+/// How a `Stats` request asks for the metrics to be rendered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StatsFormat {
+    /// Human-readable report text (the legacy `StatsReply` lane).
+    #[default]
+    Text,
+    /// Prometheus text exposition.
+    Prom,
+    /// One JSON object of counters, gauges and histogram summaries.
+    Json,
+}
+
+impl StatsFormat {
+    fn to_u8(self) -> u8 {
+        match self {
+            StatsFormat::Text => 1,
+            StatsFormat::Prom => 2,
+            StatsFormat::Json => 3,
+        }
+    }
+
+    fn from_u8(b: u8) -> Option<StatsFormat> {
+        match b {
+            1 => Some(StatsFormat::Text),
+            2 => Some(StatsFormat::Prom),
+            3 => Some(StatsFormat::Json),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI `--format` value.
+    pub fn parse(s: &str) -> Option<StatsFormat> {
+        match s {
+            "text" => Some(StatsFormat::Text),
+            "prom" => Some(StatsFormat::Prom),
+            "json" => Some(StatsFormat::Json),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StatsFormat::Text => "text",
+            StatsFormat::Prom => "prom",
+            StatsFormat::Json => "json",
         }
     }
 }
@@ -403,6 +475,51 @@ pub fn encode_empty(kind: FrameKind) -> Vec<u8> {
 /// Encode a plaintext reply frame (`StatsReply` / `HealthReply`).
 pub fn encode_text_reply(kind: FrameKind, text: &str) -> Vec<u8> {
     frame(kind, text.as_bytes())
+}
+
+/// Encode a `Stats` request. `Text` keeps the legacy empty body (answered
+/// with a plaintext `StatsReply`); `Prom` / `Json` carry one format byte
+/// and are answered with a structured `MetricsReply`.
+pub fn encode_stats_request(format: StatsFormat) -> Vec<u8> {
+    match format {
+        StatsFormat::Text => frame(FrameKind::Stats, &[]),
+        other => frame(FrameKind::Stats, &[other.to_u8()]),
+    }
+}
+
+/// Encode a structured `MetricsReply` frame: version + format + payload.
+pub fn encode_metrics_reply(format: StatsFormat, payload: &str) -> Vec<u8> {
+    let mut body = Vec::with_capacity(2 + payload.len());
+    body.push(METRICS_VERSION);
+    body.push(format.to_u8());
+    body.extend_from_slice(payload.as_bytes());
+    frame(FrameKind::MetricsReply, &body)
+}
+
+/// Decode a `Stats` request body into the requested format. Empty bodies
+/// are the legacy plaintext probe; a one-byte body selects a structured
+/// format. Anything else is a typed rejection.
+pub fn decode_stats_body(body: &[u8]) -> Result<StatsFormat, ProtoError> {
+    match body {
+        [] => Ok(StatsFormat::Text),
+        [b] => StatsFormat::from_u8(*b)
+            .ok_or(ProtoError::BadField { field: "stats format", value: *b }),
+        _ => Err(ProtoError::Payload { expected_bytes: 1, got_bytes: body.len() }),
+    }
+}
+
+/// Decode a `MetricsReply` body into `(format, payload)`.
+pub fn decode_metrics_body(body: &[u8]) -> Result<(StatsFormat, String), ProtoError> {
+    let mut r = Reader::new(body);
+    let version = r.u8()?;
+    if version != METRICS_VERSION {
+        return Err(ProtoError::BadField { field: "metrics version", value: version });
+    }
+    let fmt_byte = r.u8()?;
+    let format = StatsFormat::from_u8(fmt_byte)
+        .ok_or(ProtoError::BadField { field: "metrics format", value: fmt_byte })?;
+    let payload = std::str::from_utf8(r.rest()).map_err(|_| ProtoError::Utf8)?.to_string();
+    Ok((format, payload))
 }
 
 // ---------------------------------------------------------------------------
@@ -738,6 +855,62 @@ mod tests {
         // Error status with invalid UTF-8 diagnostic.
         assert_eq!(decode_response_body(&[1, 0xff, 0xfe]), Err(ProtoError::Utf8));
         assert!(matches!(decode_response_body(&[]), Err(ProtoError::Truncated { .. })));
+    }
+
+    #[test]
+    fn stats_request_round_trips_every_format() {
+        // Text keeps the legacy empty body so pre-MetricsReply daemons
+        // still answer it with a plaintext StatsReply.
+        let legacy = encode_stats_request(StatsFormat::Text);
+        assert_eq!(legacy, encode_empty(FrameKind::Stats));
+        assert_eq!(decode_stats_body(&legacy[HEADER_LEN..]), Ok(StatsFormat::Text));
+        for format in [StatsFormat::Prom, StatsFormat::Json] {
+            let frame = encode_stats_request(format);
+            let header = decode_header(&frame[..HEADER_LEN], 1 << 20).unwrap();
+            assert_eq!(header.kind, FrameKind::Stats);
+            assert_eq!(header.body_len, 1);
+            assert_eq!(decode_stats_body(&frame[HEADER_LEN..]), Ok(format));
+        }
+        assert!(matches!(
+            decode_stats_body(&[77]),
+            Err(ProtoError::BadField { field: "stats format", value: 77 })
+        ));
+        assert!(matches!(decode_stats_body(&[1, 2]), Err(ProtoError::Payload { .. })));
+    }
+
+    #[test]
+    fn metrics_reply_round_trips_and_rejects_bad_versions() {
+        let payload = "memfft_requests_in_total 4\n";
+        let frame = encode_metrics_reply(StatsFormat::Prom, payload);
+        let header = decode_header(&frame[..HEADER_LEN], 1 << 20).unwrap();
+        assert_eq!(header.kind, FrameKind::MetricsReply);
+        let (format, text) = decode_metrics_body(&frame[HEADER_LEN..]).unwrap();
+        assert_eq!(format, StatsFormat::Prom);
+        assert_eq!(text, payload);
+
+        let mut bad = frame[HEADER_LEN..].to_vec();
+        bad[0] = 9;
+        assert!(matches!(
+            decode_metrics_body(&bad),
+            Err(ProtoError::BadField { field: "metrics version", value: 9 })
+        ));
+        let mut bad = frame[HEADER_LEN..].to_vec();
+        bad[1] = 0;
+        assert!(matches!(
+            decode_metrics_body(&bad),
+            Err(ProtoError::BadField { field: "metrics format", value: 0 })
+        ));
+        assert!(matches!(decode_metrics_body(&[1]), Err(ProtoError::Truncated { .. })));
+        assert_eq!(decode_metrics_body(&[1, 2, 0xff, 0xfe]), Err(ProtoError::Utf8));
+    }
+
+    #[test]
+    fn stats_format_parses_cli_names() {
+        for format in [StatsFormat::Text, StatsFormat::Prom, StatsFormat::Json] {
+            assert_eq!(StatsFormat::parse(format.name()), Some(format));
+        }
+        assert_eq!(StatsFormat::parse("yaml"), None);
+        assert_eq!(StatsFormat::default(), StatsFormat::Text);
     }
 
     #[test]

@@ -29,10 +29,11 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::proto::{self, FrameError, FrameKind, ProtoError, Status};
+use super::proto::{self, FrameError, FrameKind, ProtoError, StatsFormat, Status};
 use crate::config::NetConfig;
 use crate::coordinator::{FftService, ServiceError};
 use crate::metrics::ServiceMetrics;
+use crate::obs::trace::{self, SpanKind};
 
 struct ServerState {
     /// `Some` while serving; taken (and drained) exactly once at shutdown.
@@ -189,7 +190,7 @@ fn admit(stream: TcpStream, id: u64, state: &Arc<ServerState>) {
         .name(format!("memfft-net-conn-{id}"))
         .spawn(move || {
             if admitted {
-                handle_connection(stream, &st);
+                handle_connection(stream, id, &st);
             } else {
                 refuse_connection(stream, &st);
             }
@@ -226,7 +227,7 @@ fn refuse_connection(mut stream: TcpStream, state: &Arc<ServerState>) {
     }
 }
 
-fn handle_connection(mut stream: TcpStream, state: &Arc<ServerState>) {
+fn handle_connection(mut stream: TcpStream, conn_id: u64, state: &Arc<ServerState>) {
     loop {
         if state.shutting_down.load(Ordering::Acquire) {
             return;
@@ -244,16 +245,20 @@ fn handle_connection(mut stream: TcpStream, state: &Arc<ServerState>) {
                 return;
             }
         };
+        // One NetFrame span per dispatched frame, decode-to-reply, tagged
+        // with the connection id (DESIGN.md §13).
+        let frame_start = Instant::now();
         let keep_open = match kind {
             FrameKind::Request => handle_request(&mut stream, &body, state),
-            FrameKind::Stats => {
-                write_reply(&mut stream, proto::encode_text_reply(FrameKind::StatsReply, &stats_text(state)))
-            }
+            FrameKind::Stats => handle_stats(&mut stream, &body, state),
             FrameKind::Health => {
                 write_reply(&mut stream, proto::encode_text_reply(FrameKind::HealthReply, &health_text(state)))
             }
             // A reply kind arriving at the server is a peer bug.
-            FrameKind::Response | FrameKind::StatsReply | FrameKind::HealthReply => {
+            FrameKind::Response
+            | FrameKind::StatsReply
+            | FrameKind::HealthReply
+            | FrameKind::MetricsReply => {
                 state.metrics.frames_malformed.inc();
                 let frame = proto::encode_response_err(
                     Status::BadFrame,
@@ -263,10 +268,44 @@ fn handle_connection(mut stream: TcpStream, state: &Arc<ServerState>) {
                 false
             }
         };
+        trace::record(SpanKind::NetFrame, conn_id, frame_start, frame_start.elapsed());
         if !keep_open {
             return;
         }
     }
+}
+
+/// Serve one `Stats` frame: an empty body keeps the legacy plaintext
+/// `StatsReply`; a format byte gets a structured `MetricsReply` rendered
+/// from one torn-read-free snapshot. Returns whether the connection stays
+/// open.
+fn handle_stats(stream: &mut TcpStream, body: &[u8], state: &Arc<ServerState>) -> bool {
+    let format = match proto::decode_stats_body(body) {
+        Ok(format) => format,
+        Err(e) => {
+            state.metrics.frames_malformed.inc();
+            let frame = proto::encode_response_err(Status::BadFrame, &e.to_string());
+            let _ = proto::write_frame(stream, &frame);
+            return false;
+        }
+    };
+    let frame = match format {
+        StatsFormat::Text => {
+            proto::encode_text_reply(FrameKind::StatsReply, &stats_text(state))
+        }
+        StatsFormat::Prom => {
+            let mut text = state.metrics.snapshot().render_prometheus();
+            text.push_str(&format!(
+                "# HELP memfft_uptime_seconds Daemon uptime.\n# TYPE memfft_uptime_seconds gauge\nmemfft_uptime_seconds {}\n",
+                state.started.elapsed().as_secs_f64()
+            ));
+            proto::encode_metrics_reply(StatsFormat::Prom, &text)
+        }
+        StatsFormat::Json => {
+            proto::encode_metrics_reply(StatsFormat::Json, &state.metrics.snapshot().render_json())
+        }
+    };
+    write_reply(stream, frame)
 }
 
 /// Serve one transform request. Returns whether the connection stays open.

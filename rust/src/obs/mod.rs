@@ -1,0 +1,22 @@
+//! Structured observability (DESIGN.md §13): machine-readable exporters
+//! over the [`crate::metrics`] snapshot layer, plus a lock-free trace
+//! collector for per-request / per-chunk span events.
+//!
+//! - [`prom`] renders a [`crate::metrics::MetricsSnapshot`] in Prometheus
+//!   text exposition format — every counter/gauge plus full
+//!   `_bucket`/`_sum`/`_count` histogram series with `le` labels taken
+//!   from the real log-bucket edges.
+//! - [`trace`] is a fixed-capacity, overwrite-oldest ring of span events
+//!   (queue/exec/e2e per request, read/compute/write per stream chunk,
+//!   per-connection frames, planner decisions), atomics-only on the
+//!   record path, exported as Chrome trace-event JSON that
+//!   `chrome://tracing` / Perfetto load directly.
+//!
+//! The split keeps responsibilities sharp: `metrics` owns the data and
+//! the single-load snapshot contract, `obs` owns wire/file formats and
+//! the event timeline. Renderers are pure functions of snapshot data, so
+//! anything that can take a snapshot (the serve daemon's `MetricsReply`
+//! frame, the CLI, tests) gets identical output.
+
+pub mod prom;
+pub mod trace;

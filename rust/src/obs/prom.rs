@@ -1,0 +1,164 @@
+//! Prometheus text exposition rendering of a
+//! [`MetricsSnapshot`](crate::metrics::MetricsSnapshot).
+//!
+//! Pure function of snapshot data: `# HELP` / `# TYPE` header pairs, one
+//! sample line per counter/gauge, and for every latency histogram the
+//! full cumulative `_bucket{le="..."}` series over the real log-bucket
+//! edges (seconds), then `le="+Inf"`, `_sum` (seconds) and `_count`.
+//! `_count` is emitted as the cumulative bucket total — identical to the
+//! `+Inf` bucket by construction, so the exposition-format invariant
+//! holds even if the histogram's separate count word was incremented
+//! between bucket loads on a live read (a snapshot of quiet data has no
+//! such skew).
+//!
+//! Metric names use only `[a-z0-9_]` with the `memfft_` prefix; the one
+//! labelled info metric (`memfft_kernel_info{simd=..,detected=..}`)
+//! carries the resolved kernel configuration the text report prints as
+//! its `kernel:` line.
+
+use crate::metrics::{HistogramSnapshot, MetricsSnapshot};
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, v: i64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+}
+
+fn histogram(out: &mut String, name: &str, help: &str, h: &HistogramSnapshot) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    let mut cum = 0u64;
+    for (i, &c) in h.buckets.iter().enumerate() {
+        cum += c;
+        // `le` upper edges in seconds; Rust's shortest-roundtrip Display
+        // keeps them exact and strictly increasing.
+        out.push_str(&format!(
+            "{name}_bucket{{le=\"{}\"}} {cum}\n",
+            h.bucket_upper_edge_ns(i) / 1e9
+        ));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+    out.push_str(&format!("{name}_sum {}\n", h.sum_ns as f64 / 1e9));
+    out.push_str(&format!("{name}_count {cum}\n"));
+}
+
+/// Render the snapshot in Prometheus text exposition format.
+pub fn render(s: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    counter(&mut out, "memfft_requests_in_total", "Requests admitted into the service.", s.requests_in);
+    counter(&mut out, "memfft_requests_done_total", "Requests answered successfully.", s.requests_done);
+    counter(&mut out, "memfft_requests_failed_total", "Requests that failed in execution.", s.requests_failed);
+    counter(&mut out, "memfft_requests_rejected_total", "Requests rejected at a full queue.", s.requests_rejected);
+    counter(&mut out, "memfft_requests_shed_total", "Requests shed by admission control or inflight caps.", s.requests_shed);
+    counter(&mut out, "memfft_requests_2d_total", "2-D-shaped descriptor requests.", s.requests_2d);
+    counter(&mut out, "memfft_requests_r2c_total", "Real-domain descriptor requests.", s.requests_r2c);
+    counter(&mut out, "memfft_batches_executed_total", "Batches dispatched to a backend.", s.batches_executed);
+    counter(&mut out, "memfft_batch_fill_total", "Sum of batch sizes (fill / batches = mean fill).", s.batch_fill);
+    counter(&mut out, "memfft_plan_cache_hits_total", "Worker plan-cache hits.", s.plan_cache_hits);
+    counter(&mut out, "memfft_plan_cache_misses_total", "Worker plan-cache misses.", s.plan_cache_misses);
+    counter(&mut out, "memfft_table_cache_hits_total", "Process-wide twiddle/bitrev table cache hits.", s.table_hits);
+    counter(&mut out, "memfft_table_cache_misses_total", "Process-wide twiddle/bitrev table cache misses.", s.table_misses);
+    gauge(&mut out, "memfft_table_cache_entries", "Entries resident in the process-wide table cache.", s.table_entries as i64);
+    counter(&mut out, "memfft_wisdom_hits_total", "Planner answers recalled from persisted wisdom.", s.wisdom_hits);
+    counter(&mut out, "memfft_wisdom_misses_total", "Planner lookups persisted wisdom could not answer.", s.wisdom_misses);
+    gauge(&mut out, "memfft_wisdom_entries", "Entries in the attached wisdom file.", s.wisdom_entries as i64);
+    gauge(&mut out, "memfft_wisdom_attached", "1 when a wisdom file is attached, else 0.", i64::from(s.wisdom_attached));
+    counter(&mut out, "memfft_stream_chunks_total", "Out-of-core chunks streamed.", s.stream_chunks);
+    counter(&mut out, "memfft_stream_rows_total", "Out-of-core rows streamed.", s.stream_rows);
+    counter(&mut out, "memfft_connections_accepted_total", "TCP connections admitted.", s.connections_accepted);
+    counter(&mut out, "memfft_connections_refused_total", "TCP connections refused at the connection cap.", s.connections_refused);
+    counter(&mut out, "memfft_frames_malformed_total", "Structurally malformed wire frames.", s.frames_malformed);
+    gauge(&mut out, "memfft_connections_active", "Currently open TCP connections.", s.connections_active);
+    gauge(&mut out, "memfft_cost_err_pct", "Latest predicted-vs-actual batch cost error (percent).", s.cost_err_pct);
+    gauge(&mut out, "memfft_kernel_radix", "Resolved maximum Stockham radix.", s.kernel_radix as i64);
+    out.push_str(&format!(
+        "# HELP memfft_kernel_info Resolved SIMD dispatch (active and detected levels).\n# TYPE memfft_kernel_info gauge\nmemfft_kernel_info{{simd=\"{}\",detected=\"{}\"}} 1\n",
+        s.simd_active, s.simd_detected
+    ));
+    histogram(&mut out, "memfft_queue_latency_seconds", "Submit-to-batch-pickup latency.", &s.queue_latency);
+    histogram(&mut out, "memfft_exec_latency_seconds", "Backend batch execution latency.", &s.exec_latency);
+    histogram(&mut out, "memfft_e2e_latency_seconds", "Submit-to-response latency.", &s.e2e_latency);
+    histogram(&mut out, "memfft_stream_read_seconds", "Per-chunk stream read (prefetch thread).", &s.stream_read);
+    histogram(&mut out, "memfft_stream_compute_seconds", "Per-chunk stream compute (caller thread).", &s.stream_compute);
+    histogram(&mut out, "memfft_stream_write_seconds", "Per-chunk stream writeback (writer thread).", &s.stream_write);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::ServiceMetrics;
+    use std::time::Duration;
+
+    #[test]
+    fn render_has_known_series_and_valid_names() {
+        let m = ServiceMetrics::new();
+        m.requests_in.add(3);
+        m.requests_done.add(2);
+        m.exec_latency.record(Duration::from_micros(120));
+        m.exec_latency.record(Duration::from_millis(3));
+        let text = render(&m.snapshot());
+        assert!(text.contains("memfft_requests_in_total 3\n"));
+        assert!(text.contains("# TYPE memfft_exec_latency_seconds histogram\n"));
+        assert!(text.contains("memfft_exec_latency_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("memfft_exec_latency_seconds_count 2\n"));
+        for line in text.lines() {
+            assert!(!line.is_empty(), "no blank lines");
+            if line.starts_with('#') {
+                continue;
+            }
+            let name = line.split(['{', ' ']).next().unwrap();
+            assert!(
+                name.chars().next().unwrap().is_ascii_alphabetic(),
+                "bad leading char in {name}"
+            );
+            assert!(
+                name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+                "bad metric name charset: {name}"
+            );
+            assert!(name.starts_with("memfft_"), "unprefixed metric: {name}");
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_cumulative_and_le_monotonic() {
+        let m = ServiceMetrics::new();
+        for us in [1u64, 10, 100, 1000, 10_000, 100_000] {
+            m.queue_latency.record(Duration::from_micros(us));
+        }
+        let text = render(&m.snapshot());
+        let mut last_le = f64::NEG_INFINITY;
+        let mut last_cum = 0u64;
+        let mut bucket_lines = 0;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("memfft_queue_latency_seconds_bucket{le=\"") {
+                let (le_str, count_str) = rest.split_once("\"} ").unwrap();
+                let le = if le_str == "+Inf" { f64::INFINITY } else { le_str.parse().unwrap() };
+                let cum: u64 = count_str.parse().unwrap();
+                assert!(le > last_le, "le not strictly increasing: {le} after {last_le}");
+                assert!(cum >= last_cum, "cumulative count decreased at le={le}");
+                last_le = le;
+                last_cum = cum;
+                bucket_lines += 1;
+            }
+        }
+        assert_eq!(bucket_lines, crate::metrics::HIST_BUCKET_COUNT + 1, "all edges + +Inf");
+        assert_eq!(last_cum, 6, "+Inf bucket holds every sample");
+        assert!(text.contains("memfft_queue_latency_seconds_count 6\n"));
+    }
+
+    #[test]
+    fn sum_matches_recorded_seconds() {
+        let m = ServiceMetrics::new();
+        m.e2e_latency.record(Duration::from_millis(250));
+        m.e2e_latency.record(Duration::from_millis(750));
+        let text = render(&m.snapshot());
+        let sum_line = text
+            .lines()
+            .find(|l| l.starts_with("memfft_e2e_latency_seconds_sum "))
+            .unwrap();
+        let sum: f64 = sum_line.split(' ').nth(1).unwrap().parse().unwrap();
+        assert!((sum - 1.0).abs() < 1e-9, "sum {sum} != 1.0s");
+    }
+}

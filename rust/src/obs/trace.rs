@@ -1,0 +1,471 @@
+//! Lock-free span-event trace ring (DESIGN.md §13).
+//!
+//! A fixed-capacity ring of [`TraceEvent`]s. The record path is
+//! atomics-only — one `fetch_add` to claim a slot, plain atomic stores to
+//! fill it, a per-slot sequence word as a seqlock — so instrumented hot
+//! paths (the batch worker, the stream pipeline's reader/writer threads,
+//! connection handlers) never take a lock or allocate. When the ring is
+//! full the oldest events are overwritten; a drain keeps the newest
+//! `capacity` spans, which is what a "dump the ring when something looked
+//! slow" workflow wants.
+//!
+//! Consistency model: a snapshot double-reads each slot's sequence word
+//! around the field loads and discards slots caught mid-write, so a
+//! drained event is almost always internally consistent. Under a writer
+//! racing the same wrapped slot a stale sequence can survive both reads;
+//! the failure mode is one dropped or mixed event in a diagnostic dump —
+//! never undefined behaviour (every field is an atomic) and never a
+//! stalled recorder. The tests therefore assert exact contents for the
+//! single-writer ring and bounded loss under concurrent writers.
+//!
+//! Span timestamps are microseconds since the ring's creation (`enable`),
+//! which is also what Chrome trace-event JSON wants in its `ts`/`dur`
+//! fields, so [`chrome_trace_json`] is a direct transcription.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// What a span measured; see the DESIGN.md §13 taxonomy table for which
+/// thread emits each kind and what its `id` correlates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u32)]
+pub enum SpanKind {
+    /// submit → batch pickup, per request (id = request id).
+    RequestQueue = 1,
+    /// backend execute_batch, per batch (id = first request id in batch).
+    RequestExec = 2,
+    /// submit → response delivered, per request (id = request id).
+    RequestE2e = 3,
+    /// deadline admission shed, instant (id = problem size n).
+    RequestShed = 4,
+    /// queue-full rejection, instant (id = problem size n).
+    RequestRejected = 5,
+    /// stream chunk read off the source (id = chunk index).
+    ChunkRead = 6,
+    /// stream chunk transform on the compute thread (id = chunk index).
+    ChunkCompute = 7,
+    /// stream chunk writeback (id = chunk index).
+    ChunkWrite = 8,
+    /// one wire frame handled on a connection (id = connection id).
+    NetFrame = 9,
+    /// planner answered from persisted wisdom, instant (id = n).
+    PlanWisdomHit = 10,
+    /// planner timed candidates (id = n; dur = whole measurement).
+    PlanMeasure = 11,
+}
+
+impl SpanKind {
+    /// Chrome trace event name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::RequestQueue => "queue",
+            SpanKind::RequestExec => "exec",
+            SpanKind::RequestE2e => "e2e",
+            SpanKind::RequestShed => "shed",
+            SpanKind::RequestRejected => "rejected",
+            SpanKind::ChunkRead => "chunk-read",
+            SpanKind::ChunkCompute => "chunk-compute",
+            SpanKind::ChunkWrite => "chunk-write",
+            SpanKind::NetFrame => "net-frame",
+            SpanKind::PlanWisdomHit => "plan-wisdom-hit",
+            SpanKind::PlanMeasure => "plan-measure",
+        }
+    }
+
+    /// Chrome trace category (`cat`): the subsystem that emitted the span.
+    pub fn category(self) -> &'static str {
+        match self {
+            SpanKind::RequestQueue
+            | SpanKind::RequestExec
+            | SpanKind::RequestE2e
+            | SpanKind::RequestShed
+            | SpanKind::RequestRejected => "service",
+            SpanKind::ChunkRead | SpanKind::ChunkCompute | SpanKind::ChunkWrite => "stream",
+            SpanKind::NetFrame => "net",
+            SpanKind::PlanWisdomHit | SpanKind::PlanMeasure => "plan",
+        }
+    }
+
+    fn from_u32(v: u32) -> Option<SpanKind> {
+        Some(match v {
+            1 => SpanKind::RequestQueue,
+            2 => SpanKind::RequestExec,
+            3 => SpanKind::RequestE2e,
+            4 => SpanKind::RequestShed,
+            5 => SpanKind::RequestRejected,
+            6 => SpanKind::ChunkRead,
+            7 => SpanKind::ChunkCompute,
+            8 => SpanKind::ChunkWrite,
+            9 => SpanKind::NetFrame,
+            10 => SpanKind::PlanWisdomHit,
+            11 => SpanKind::PlanMeasure,
+            _ => return None,
+        })
+    }
+}
+
+/// One drained span event (plain data).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Global record order (1-based); survives ring wrap, so a drain can
+    /// be sorted into emission order and gaps show how much was lost.
+    pub seq: u64,
+    pub kind: SpanKind,
+    /// Correlation id: request id, chunk index, connection id, or problem
+    /// size, by kind — see [`SpanKind`].
+    pub id: u64,
+    /// Recording thread (small dense ids handed out per thread, not OS
+    /// tids — Chrome's `tid` field).
+    pub tid: u32,
+    /// Span start, µs since the ring was created.
+    pub ts_us: u64,
+    /// Span duration in µs (0 for instant events).
+    pub dur_us: u64,
+}
+
+/// One ring slot; all fields atomic so racing writers/readers are memory
+/// safe by construction. `seq == 0` means empty or mid-write.
+#[derive(Debug)]
+struct Slot {
+    seq: AtomicU64,
+    kind: AtomicU32,
+    tid: AtomicU32,
+    id: AtomicU64,
+    ts_us: AtomicU64,
+    dur_us: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Self {
+            seq: AtomicU64::new(0),
+            kind: AtomicU32::new(0),
+            tid: AtomicU32::new(0),
+            id: AtomicU64::new(0),
+            ts_us: AtomicU64::new(0),
+            dur_us: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Fixed-capacity overwrite-oldest span ring. Usually used through the
+/// module-level globals ([`enable`]/[`record`]/[`events`]); standalone
+/// rings exist for tests and embedding.
+#[derive(Debug)]
+pub struct TraceRing {
+    slots: Box<[Slot]>,
+    /// Total records ever claimed; slot = head % capacity, seq = head + 1.
+    head: AtomicU64,
+    /// Zero point for span timestamps.
+    anchor: Instant,
+}
+
+impl TraceRing {
+    /// `capacity` is clamped to ≥ 1.
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        Self {
+            slots: (0..cap).map(|_| Slot::new()).collect(),
+            head: AtomicU64::new(0),
+            anchor: Instant::now(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn total(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Record one span. Lock-free: one RMW to claim the slot, atomic
+    /// stores to fill it. A `start` earlier than the ring's creation
+    /// clamps to ts 0 rather than failing.
+    pub fn record(&self, kind: SpanKind, id: u64, start: Instant, dur: Duration) {
+        let ts_us = start
+            .checked_duration_since(self.anchor)
+            .unwrap_or(Duration::ZERO)
+            .as_micros() as u64;
+        let idx = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(idx % self.slots.len() as u64) as usize];
+        // Seqlock write: mark mid-write, fill, publish with the new seq.
+        slot.seq.store(0, Ordering::Release);
+        slot.kind.store(kind as u32, Ordering::Relaxed);
+        slot.tid.store(thread_tid(), Ordering::Relaxed);
+        slot.id.store(id, Ordering::Relaxed);
+        slot.ts_us.store(ts_us, Ordering::Relaxed);
+        slot.dur_us.store(dur.as_micros() as u64, Ordering::Relaxed);
+        slot.seq.store(idx + 1, Ordering::Release);
+    }
+
+    /// Drain a consistent-as-possible copy of the ring, oldest first
+    /// (by emission order). Slots caught mid-write are skipped.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            // Bounded seqlock read: retry a few times if a writer is in
+            // the slot, then give up on just that slot.
+            for _ in 0..4 {
+                let seq1 = slot.seq.load(Ordering::Acquire);
+                if seq1 == 0 {
+                    break; // empty or mid-write
+                }
+                let kind = slot.kind.load(Ordering::Relaxed);
+                let tid = slot.tid.load(Ordering::Relaxed);
+                let id = slot.id.load(Ordering::Relaxed);
+                let ts_us = slot.ts_us.load(Ordering::Relaxed);
+                let dur_us = slot.dur_us.load(Ordering::Relaxed);
+                let seq2 = slot.seq.load(Ordering::Acquire);
+                if seq1 == seq2 {
+                    if let Some(kind) = SpanKind::from_u32(kind) {
+                        out.push(TraceEvent { seq: seq1, kind, id, tid, ts_us, dur_us });
+                    }
+                    break;
+                }
+            }
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Process-global ring
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RING: OnceLock<TraceRing> = OnceLock::new();
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+thread_local! {
+    static TID: u32 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Small dense id for the calling thread (stable for the thread's life).
+fn thread_tid() -> u32 {
+    TID.with(|t| *t)
+}
+
+/// Default global ring capacity (also the `obs.trace_capacity` default).
+pub const DEFAULT_CAPACITY: usize = 16_384;
+
+/// Turn tracing on. The global ring is created on first call (with this
+/// capacity) and kept thereafter — capacity from later calls is ignored,
+/// matching the one-ring-per-process contract.
+pub fn enable(capacity: usize) {
+    RING.get_or_init(|| TraceRing::new(capacity));
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Stop recording (the ring and its contents stay drainable).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+}
+
+/// Whether [`record`] currently records. One relaxed load — call sites
+/// record unconditionally and let this gate.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Record a span into the global ring; no-op (one atomic load) while
+/// tracing is disabled.
+#[inline]
+pub fn record(kind: SpanKind, id: u64, start: Instant, dur: Duration) {
+    if !enabled() {
+        return;
+    }
+    if let Some(ring) = RING.get() {
+        ring.record(kind, id, start, dur);
+    }
+}
+
+/// Drain the global ring (empty if tracing was never enabled).
+pub fn events() -> Vec<TraceEvent> {
+    RING.get().map(|r| r.snapshot()).unwrap_or_default()
+}
+
+/// Total events ever recorded into the global ring.
+pub fn total_recorded() -> u64 {
+    RING.get().map(|r| r.total()).unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------
+// Chrome trace-event JSON export
+// ---------------------------------------------------------------------
+
+/// Render events as Chrome trace-event JSON (the "JSON object format":
+/// `{"traceEvents": [...]}`), loadable by `chrome://tracing` and
+/// Perfetto. Every span is a complete event (`ph: "X"`) with µs `ts` and
+/// `dur`; the correlation id and global sequence ride in `args`. All
+/// strings are fixed identifiers, so no JSON escaping is needed.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let pid = std::process::id();
+    let mut s = String::from("{\"traceEvents\":[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":{},\"tid\":{},\"ts\":{},\"dur\":{},\"args\":{{\"id\":{},\"seq\":{}}}}}",
+            e.kind.name(),
+            e.kind.category(),
+            pid,
+            e.tid,
+            e.ts_us,
+            e.dur_us,
+            e.id,
+            e.seq,
+        ));
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Drain the global ring to `path` as Chrome trace JSON; returns the
+/// number of events written.
+pub fn write_chrome_trace(path: &str) -> std::io::Result<usize> {
+    let evs = events();
+    std::fs::write(path, chrome_trace_json(&evs))?;
+    Ok(evs.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn ring_keeps_newest_exactly_single_writer() {
+        let ring = TraceRing::new(64);
+        let t0 = Instant::now();
+        for i in 1..=100u64 {
+            ring.record(SpanKind::ChunkRead, i, t0, Duration::from_micros(i));
+        }
+        assert_eq!(ring.total(), 100);
+        let evs = ring.snapshot();
+        assert_eq!(evs.len(), 64, "full ring drains exactly capacity");
+        // Overwrite-oldest: records 1..=36 were overwritten; 37..=100 live.
+        let seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (37..=100).collect::<Vec<_>>());
+        for e in &evs {
+            assert_eq!(e.id, e.seq, "payload stays with its claim");
+            assert_eq!(e.dur_us, e.seq);
+            assert_eq!(e.kind, SpanKind::ChunkRead);
+        }
+    }
+
+    #[test]
+    fn ring_partial_fill_drains_in_order() {
+        let ring = TraceRing::new(16);
+        let t0 = Instant::now();
+        ring.record(SpanKind::RequestQueue, 7, t0, Duration::ZERO);
+        ring.record(SpanKind::RequestExec, 7, t0, Duration::from_micros(5));
+        let evs = ring.snapshot();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind, SpanKind::RequestQueue);
+        assert_eq!(evs[1].kind, SpanKind::RequestExec);
+        assert!(evs[0].seq < evs[1].seq);
+        assert!(evs[1].dur_us == 5);
+    }
+
+    /// Overwrite-oldest under concurrent writers: every claim is counted,
+    /// the drain never exceeds capacity, and nearly all drained events are
+    /// from the newest `capacity` claims (a writer racing a drained slot
+    /// can cost an event or leave one stale — bounded, not unbounded).
+    #[test]
+    fn ring_concurrent_writers_bounded_loss() {
+        let ring = Arc::new(TraceRing::new(128));
+        let writers = 8;
+        let per = 1000u64;
+        let t0 = Instant::now();
+        let mut handles = vec![];
+        for w in 0..writers {
+            let ring = ring.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    ring.record(SpanKind::NetFrame, w * per + i, t0, Duration::from_micros(1));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = writers * per;
+        assert_eq!(ring.total(), total, "every record claims exactly one seq");
+        let evs = ring.snapshot();
+        assert!(evs.len() <= 128, "drain cannot exceed capacity");
+        assert!(evs.len() >= 128 - 8, "at most ~one loss per racing writer, got {}", evs.len());
+        let newest_window = total - 128;
+        let recent = evs.iter().filter(|e| e.seq > newest_window).count();
+        assert!(recent >= evs.len() - 8, "drain is dominated by the newest claims");
+        // No duplicated seqs and everything is well-formed.
+        let mut seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        seqs.dedup();
+        assert_eq!(seqs.len(), evs.len());
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let ring = TraceRing::new(8);
+        let t0 = Instant::now();
+        ring.record(SpanKind::ChunkRead, 0, t0, Duration::from_micros(10));
+        ring.record(SpanKind::ChunkCompute, 0, t0 + Duration::from_micros(10), Duration::from_micros(30));
+        let json = chrome_trace_json(&ring.snapshot());
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        assert!(json.contains("\"name\":\"chunk-read\""));
+        assert!(json.contains("\"cat\":\"stream\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains(&format!("\"pid\":{}", std::process::id())));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        // Empty drain is still a valid document.
+        assert_eq!(chrome_trace_json(&[]), "{\"traceEvents\":[]}");
+    }
+
+    #[test]
+    fn start_before_anchor_clamps_to_zero() {
+        let t0 = Instant::now();
+        let ring = TraceRing::new(4);
+        ring.record(SpanKind::PlanMeasure, 1024, t0, Duration::from_micros(3));
+        let evs = ring.snapshot();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].ts_us, 0, "pre-anchor start clamps, not panics");
+    }
+
+    #[test]
+    fn global_ring_gates_on_enabled() {
+        // Uses the real process globals; other tests in this binary do not
+        // enable tracing, so the ring contents here are our own.
+        record(SpanKind::RequestE2e, 1, Instant::now(), Duration::ZERO);
+        assert!(!enabled());
+        enable(256);
+        assert!(enabled());
+        let before = total_recorded();
+        record(SpanKind::RequestE2e, 2, Instant::now(), Duration::from_micros(9));
+        assert_eq!(total_recorded(), before + 1);
+        assert!(events().iter().any(|e| e.kind == SpanKind::RequestE2e && e.id == 2));
+        disable();
+        let frozen = total_recorded();
+        record(SpanKind::RequestE2e, 3, Instant::now(), Duration::ZERO);
+        assert_eq!(total_recorded(), frozen, "disabled ring records nothing");
+        assert_eq!(RING.get().unwrap().capacity(), 256);
+    }
+
+    #[test]
+    fn span_kind_tables_are_total() {
+        for v in 1..=11u32 {
+            let k = SpanKind::from_u32(v).expect("contiguous kinds");
+            assert_eq!(k as u32, v);
+            assert!(!k.name().is_empty());
+            assert!(!k.category().is_empty());
+        }
+        assert_eq!(SpanKind::from_u32(0), None);
+        assert_eq!(SpanKind::from_u32(12), None);
+    }
+}

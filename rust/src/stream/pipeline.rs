@@ -40,6 +40,7 @@ use super::StreamError;
 use crate::coordinator::{Backend, BatchSpec, Direction};
 use crate::fft::{Domain, FftError, ProblemSpec, Shape};
 use crate::metrics::ServiceMetrics;
+use crate::obs::trace::{self, SpanKind};
 use crate::util::complex::C32;
 
 /// Identity of a chunk moving through the pipeline.
@@ -193,6 +194,7 @@ where
                     }
                     let dt = t.elapsed();
                     read_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+                    trace::record(SpanKind::ChunkRead, meta.index as u64, t, dt);
                     if let Some(m) = metrics {
                         m.stream_read.record(dt);
                     }
@@ -228,6 +230,7 @@ where
                     let _ = recycle_tx.send((re, im));
                     let dt = t.elapsed();
                     write_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+                    trace::record(SpanKind::ChunkWrite, meta.index as u64, t, dt);
                     if let Some(m) = metrics {
                         m.stream_write.record(dt);
                         m.stream_chunks.inc();
@@ -254,6 +257,7 @@ where
                     ledger.sub(in_bytes); // input planes dropped by compute
                     let dt = t.elapsed();
                     compute_busy += dt;
+                    trace::record(SpanKind::ChunkCompute, meta.index as u64, t, dt);
                     if let Some(m) = metrics {
                         m.stream_compute.record(dt);
                     }
