@@ -361,6 +361,84 @@ impl TuneConfig {
     }
 }
 
+/// Sharded-dataset coordinator knobs (`[shard]` section; DESIGN.md §14).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardConfig {
+    /// Comma-separated `host:port` worker daemons (`shard.workers`) for
+    /// `memfft shard run`. Empty = spawn `shard.spawn` local workers.
+    pub workers: String,
+    /// Local `memfft serve` workers to spawn when `shard.workers` is
+    /// empty (`shard.spawn`).
+    pub spawn: usize,
+    /// Total tries per shard job including the first
+    /// (`shard.max_attempts`); a job failing this many times aborts the
+    /// run with a typed `Exhausted` error.
+    pub max_attempts: usize,
+    /// Per-request retry budget within one dispatch attempt
+    /// (`shard.request_retries`), absorbing transient `Overloaded` sheds
+    /// and reconnects without requeueing the whole shard.
+    pub request_retries: usize,
+    /// Base requeue/retry backoff in milliseconds (`shard.backoff_ms`);
+    /// doubles per attempt, capped at 2 s.
+    pub backoff_ms: u64,
+    /// Worker TCP connect timeout in milliseconds
+    /// (`shard.connect_timeout_ms`).
+    pub connect_timeout_ms: u64,
+    /// Worker socket read/write timeout in milliseconds
+    /// (`shard.io_timeout_ms`). 0 disables the timeout.
+    pub io_timeout_ms: u64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self {
+            workers: String::new(),
+            spawn: 2,
+            max_attempts: 3,
+            request_retries: 2,
+            backoff_ms: 50,
+            connect_timeout_ms: 5_000,
+            io_timeout_ms: 30_000,
+        }
+    }
+}
+
+impl ShardConfig {
+    pub fn from_document(doc: &Document) -> Result<Self, ConfigError> {
+        let d = Self::default();
+        Ok(Self {
+            workers: doc.str_or("shard.workers", &d.workers)?,
+            spawn: doc.usize_or("shard.spawn", d.spawn)?,
+            max_attempts: doc.usize_or("shard.max_attempts", d.max_attempts)?,
+            request_retries: doc.usize_or("shard.request_retries", d.request_retries)?,
+            backoff_ms: doc.usize_or("shard.backoff_ms", d.backoff_ms as usize)? as u64,
+            connect_timeout_ms: doc
+                .usize_or("shard.connect_timeout_ms", d.connect_timeout_ms as usize)?
+                as u64,
+            io_timeout_ms: doc.usize_or("shard.io_timeout_ms", d.io_timeout_ms as usize)? as u64,
+        })
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.max_attempts == 0 {
+            return Err(ConfigError::Type("shard.max_attempts".into(), "nonzero integer"));
+        }
+        if self.spawn == 0 && self.workers.trim().is_empty() {
+            return Err(ConfigError::Missing("shard.workers (or shard.spawn > 0)".into()));
+        }
+        Ok(())
+    }
+
+    /// Socket timeout as the `std::net` setters want it; `None` = unbounded.
+    pub fn io_timeout(&self) -> Option<std::time::Duration> {
+        if self.io_timeout_ms == 0 {
+            None
+        } else {
+            Some(std::time::Duration::from_millis(self.io_timeout_ms))
+        }
+    }
+}
+
 /// Observability knobs (`[obs]` section; DESIGN.md §13).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ObsConfig {
@@ -468,6 +546,9 @@ pub struct ServiceConfig {
     /// Observability knobs (`[obs]` section): slow-request logging and
     /// the span trace ring.
     pub obs: ObsConfig,
+    /// Sharded-dataset coordinator knobs (`[shard]` section) used by
+    /// `memfft shard run`.
+    pub shard: ShardConfig,
 }
 
 impl Default for ServiceConfig {
@@ -488,6 +569,7 @@ impl Default for ServiceConfig {
             net: NetConfig::default(),
             tune: TuneConfig::default(),
             obs: ObsConfig::default(),
+            shard: ShardConfig::default(),
         }
     }
 }
@@ -511,6 +593,7 @@ impl ServiceConfig {
             net: NetConfig::from_document(doc)?,
             tune: TuneConfig::from_document(doc)?,
             obs: ObsConfig::from_document(doc)?,
+            shard: ShardConfig::from_document(doc)?,
         })
     }
 
@@ -545,6 +628,7 @@ impl ServiceConfig {
             }
         }
         self.obs.validate()?;
+        self.shard.validate()?;
         self.net.validate()
     }
 }
@@ -745,6 +829,38 @@ bandwidth_gbps = 144.0
         // A zero-capacity ring is rejected, not clamped.
         let doc = Document::parse("[obs]\ntrace_capacity = 0\n").unwrap();
         assert!(ServiceConfig::from_document(&doc).unwrap().validate().is_err());
+    }
+
+    #[test]
+    fn shard_section_parses_and_validates() {
+        let doc = Document::parse(
+            "[shard]\nworkers = \"10.0.0.1:7070, 10.0.0.2:7070\"\nspawn = 4\n\
+             max_attempts = 5\nrequest_retries = 1\nbackoff_ms = 20\n\
+             connect_timeout_ms = 1000\nio_timeout_ms = 0\n",
+        )
+        .unwrap();
+        let cfg = ServiceConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.shard.workers, "10.0.0.1:7070, 10.0.0.2:7070");
+        assert_eq!(cfg.shard.spawn, 4);
+        assert_eq!(cfg.shard.max_attempts, 5);
+        assert_eq!(cfg.shard.request_retries, 1);
+        assert_eq!(cfg.shard.backoff_ms, 20);
+        assert_eq!(cfg.shard.connect_timeout_ms, 1000);
+        assert_eq!(cfg.shard.io_timeout(), None, "0 disables the socket timeout");
+        cfg.validate().unwrap();
+        // Absent section: defaults (spawn 2 local workers) validate.
+        let cfg = ServiceConfig::from_document(&Document::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.shard, ShardConfig::default());
+        assert_eq!(cfg.shard.io_timeout(), Some(std::time::Duration::from_millis(30_000)));
+        cfg.validate().unwrap();
+        // Zero attempts, or no workers at all, are rejected not clamped.
+        for bad in ["[shard]\nmax_attempts = 0\n", "[shard]\nspawn = 0\n"] {
+            let cfg = ServiceConfig::from_document(&Document::parse(bad).unwrap()).unwrap();
+            assert!(cfg.validate().is_err(), "{bad}");
+        }
+        // spawn = 0 is fine once an explicit worker list is given.
+        let doc = Document::parse("[shard]\nspawn = 0\nworkers = \"127.0.0.1:7070\"\n").unwrap();
+        ServiceConfig::from_document(&doc).unwrap().validate().unwrap();
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! Every executed batch feeds an EWMA of per-transform execution cost,
 //! keyed like the batcher buckets on `(SpecKey, Direction)`. Before a
 //! descriptor has ever executed, the estimate falls back to persisted
-//! wisdom (`fft::wisdom::peek_ns`, 1-D complex lanes only). From the
+//! wisdom (`fft::wisdom::peek_ns_desc`, keyed per descriptor family —
+//! 1-D c2c, 2-D, r2c). From the
 //! estimate the service derives:
 //!
 //! - **Admission**: predicted wait = (pending charged work / workers) +
@@ -26,7 +27,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use super::request::Direction;
-use crate::fft::{ProblemSpec, Shape, SpecKey};
+use crate::fft::{DescKind, Domain, ProblemSpec, Shape, SpecKey};
 
 /// EWMA smoothing factor: new = α·sample + (1-α)·old. 0.3 follows load
 /// shifts within a few batches without letting one outlier (a page fault,
@@ -54,10 +55,10 @@ impl CostBook {
     }
 
     /// Best current per-transform cost estimate for a descriptor:
-    /// measured EWMA first, persisted wisdom second (1-D complex lanes,
-    /// where wisdom entries exist), `None` when the book has never seen
-    /// the descriptor and wisdom has nothing — in which case admission
-    /// control admits rather than guessing.
+    /// measured EWMA first, persisted wisdom second (every descriptor
+    /// family — wisdom v2 keys carry shape and domain), `None` when the
+    /// book has never seen the descriptor and wisdom has nothing — in
+    /// which case admission control admits rather than guessing.
     pub fn estimate_ns(&self, problem: &ProblemSpec, direction: Direction) -> Option<f64> {
         let key = (problem.key(), direction);
         if let Some(e) = self.measured.lock().unwrap().get(&key) {
@@ -65,10 +66,7 @@ impl CostBook {
                 return Some(e.ns_per_transform);
             }
         }
-        match problem.shape() {
-            Shape::OneD { n } => crate::fft::wisdom::peek_ns(n),
-            _ => None,
-        }
+        crate::fft::wisdom::peek_ns_desc(wisdom_desc(problem)?)
     }
 
     /// Fold one executed batch into the EWMA: `exec` covered
@@ -155,6 +153,19 @@ impl CostBook {
     }
 }
 
+/// The wisdom descriptor a ProblemSpec's cost files under; `None` for
+/// combinations wisdom does not model (2-D real has no kernel anyway).
+fn wisdom_desc(problem: &ProblemSpec) -> Option<DescKind> {
+    match (problem.shape(), problem.domain()) {
+        (Shape::OneD { n }, Domain::ComplexToComplex) => Some(DescKind::OneD { n }),
+        (Shape::OneD { n }, Domain::RealToComplex) => Some(DescKind::Real { n }),
+        (Shape::TwoD { rows, cols }, Domain::ComplexToComplex) => {
+            Some(DescKind::TwoD { rows, cols })
+        }
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,6 +236,31 @@ mod tests {
             // A measured sample outranks the wisdom backfill.
             book.observe(&p, Direction::Forward, Duration::from_nanos(9000), 1);
             assert_eq!(book.estimate_ns(&p, Direction::Forward), Some(9000.0));
+        });
+    }
+
+    #[test]
+    fn wisdom_backfills_2d_and_r2c_lanes_without_aliasing() {
+        use crate::fft::wisdom::{self, DescKind, Wisdom, WisdomEntry, WisdomKey};
+        use crate::fft::Algorithm;
+        let mut w = Wisdom::for_current_host();
+        w.insert(
+            WisdomKey::current_desc(DescKind::TwoD { rows: 64, cols: 2048 }),
+            WisdomEntry { algo: Algorithm::Stockham, ns: 3.0e5 },
+        );
+        w.insert(
+            WisdomKey::current_desc(DescKind::Real { n: 2048 }),
+            WisdomEntry { algo: Algorithm::Radix4, ns: 2500.0 },
+        );
+        wisdom::with_attached(&w, || {
+            let book = CostBook::new();
+            let p2d = ProblemSpec::two_d(64, 2048).unwrap();
+            assert_eq!(book.estimate_ns(&p2d, Direction::Forward), Some(3.0e5));
+            let pr2c = ProblemSpec::real(2048).unwrap();
+            assert_eq!(book.estimate_ns(&pr2c, Direction::Forward), Some(2500.0));
+            // The 1-D c2c lane at the same sizes must NOT see either entry.
+            assert_eq!(book.estimate_ns(&spec(2048), Direction::Forward), None);
+            assert_eq!(book.estimate_ns(&spec(64), Direction::Forward), None);
         });
     }
 

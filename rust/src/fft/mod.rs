@@ -120,4 +120,4 @@ pub use stockham::Stockham;
 pub use transform::{FftError, Transform};
 pub use twiddle::{AngleLut, TwiddleTable};
 pub use window::{apply as apply_window, Window};
-pub use wisdom::{Wisdom, WisdomError};
+pub use wisdom::{DescKind, Wisdom, WisdomError};

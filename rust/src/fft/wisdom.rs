@@ -56,11 +56,14 @@ use crate::util::is_pow2;
 /// Wisdom file magic: "MemFft WiZdom".
 pub const MAGIC: [u8; 4] = *b"MFWZ";
 /// Wisdom format version. Bumped on any layout change; mismatches are a
-/// typed [`WisdomError::BadVersion`], never a misparse.
-pub const VERSION: u16 = 1;
+/// typed [`WisdomError::BadVersion`], never a misparse. v2 added the
+/// descriptor kind + second dimension to the entry key (2-D and r2c
+/// transforms file separately from 1-D c2c); v1 files are rejected with
+/// `BadVersion { got: 1 }` and the planner re-tunes.
+pub const VERSION: u16 = 2;
 
 const HEADER_LEN: usize = 4 + 2 + 8 + 8 + 4 + 4; // magic, version, host, count
-const ENTRY_LEN: usize = 8 + 8 + 1 + 1 + 1 + 8; // n, tile, radix, level, algo, ns
+const ENTRY_LEN: usize = 8 + 8 + 1 + 8 + 1 + 1 + 1 + 8; // n, n2, kind, tile, radix, level, algo, ns
 const FOOTER_LEN: usize = 8; // fnv-1a checksum
 
 /// The measurement environment a wisdom file is valid for. Timings taken
@@ -99,12 +102,50 @@ impl fmt::Display for HostKey {
     }
 }
 
+/// What transform family a wisdom entry describes. v2 keys carry this so
+/// a 1-D c2c measurement can never replay for a 2-D or r2c problem of
+/// the same leading size (and vice versa).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum DescKind {
+    /// One `n`-point 1-D complex transform — the v1 lane.
+    OneD { n: usize },
+    /// One `rows × cols` 2-D complex transform.
+    TwoD { rows: usize, cols: usize },
+    /// One `n`-point real-input (r2c) transform.
+    Real { n: usize },
+}
+
+impl DescKind {
+    /// Stable one-byte kind code in the wisdom file.
+    pub fn code(self) -> u8 {
+        match self {
+            DescKind::OneD { .. } => 1,
+            DescKind::TwoD { .. } => 2,
+            DescKind::Real { .. } => 3,
+        }
+    }
+
+    /// The `(n, n2)` size words the entry stores: leading size, and the
+    /// second dimension (0 except for 2-D).
+    fn dims(self) -> (u64, u64) {
+        match self {
+            DescKind::OneD { n } | DescKind::Real { n } => (n as u64, 0),
+            DescKind::TwoD { rows, cols } => (rows as u64, cols as u64),
+        }
+    }
+}
+
 /// Per-entry key: what one measured result is conditioned on, mirroring
-/// `ProblemSpec::plan_key` (size + effective tile + kernel configuration).
+/// `ProblemSpec::plan_key` (descriptor kind + sizes + effective tile +
+/// kernel configuration).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct WisdomKey {
-    /// Transform length (1-D complex lane).
+    /// Transform length (1-D lanes) or row count (2-D).
     pub n: u64,
+    /// Second dimension: columns for 2-D entries, 0 otherwise.
+    pub n2: u64,
+    /// Descriptor kind code ([`DescKind::code`]).
+    pub kind: u8,
     /// Effective `config::cache` tile (complex elems) at measure time.
     pub tile: u64,
     /// Maximum Stockham radix (2 / 4 / 8) at measure time.
@@ -114,11 +155,19 @@ pub struct WisdomKey {
 }
 
 impl WisdomKey {
-    /// The key a measurement taken *right now* (ambient tile + SIMD
-    /// configuration of the calling thread) files under.
+    /// The key a 1-D c2c measurement taken *right now* (ambient tile +
+    /// SIMD configuration of the calling thread) files under.
     pub fn current(n: usize) -> Self {
+        Self::current_desc(DescKind::OneD { n })
+    }
+
+    /// The key a measurement of `desc` taken right now files under.
+    pub fn current_desc(desc: DescKind) -> Self {
+        let (n, n2) = desc.dims();
         Self {
-            n: n as u64,
+            n,
+            n2,
+            kind: desc.code(),
             tile: crate::config::cache::tile_elems() as u64,
             radix: simd::radix().value() as u8,
             level: level_code(simd::active()),
@@ -279,6 +328,18 @@ impl Wisdom {
             if n == 0 {
                 return Err(WisdomError::BadField { field: "n", got: n });
             }
+            let n2 = cur.take_u64()?;
+            let kind = cur.take(1)?[0];
+            match kind {
+                1 | 3 if n2 != 0 => {
+                    return Err(WisdomError::BadField { field: "n2", got: n2 });
+                }
+                2 if n2 == 0 => {
+                    return Err(WisdomError::BadField { field: "n2", got: n2 });
+                }
+                1..=3 => {}
+                _ => return Err(WisdomError::BadField { field: "kind", got: kind as u64 }),
+            }
             let tile = cur.take_u64()?;
             if tile < 2 || !is_pow2(tile as usize) {
                 return Err(WisdomError::BadField { field: "tile", got: tile });
@@ -300,7 +361,7 @@ impl Wisdom {
             if !ns.is_finite() || ns < 0.0 {
                 return Err(WisdomError::BadField { field: "ns", got: ns_bits });
             }
-            entries.insert(WisdomKey { n, tile, radix, level }, WisdomEntry { algo, ns });
+            entries.insert(WisdomKey { n, n2, kind, tile, radix, level }, WisdomEntry { algo, ns });
         }
         let body_end = cur.off;
         let got_sum = cur.take_u64()?;
@@ -369,6 +430,8 @@ fn encode(host: &HostKey, entries: &BTreeMap<WisdomKey, WisdomEntry>, version: u
     v.extend_from_slice(&(entries.len() as u32).to_le_bytes());
     for (k, e) in entries {
         v.extend_from_slice(&k.n.to_le_bytes());
+        v.extend_from_slice(&k.n2.to_le_bytes());
+        v.push(k.kind);
         v.extend_from_slice(&k.tile.to_le_bytes());
         v.push(k.radix);
         v.push(k.level);
@@ -610,13 +673,22 @@ fn count(hit: bool) {
 /// Sanitized: a recalled winner that is not a live candidate at this
 /// size/tile is treated as a miss, never applied.
 pub fn recall(n: usize) -> Option<(Algorithm, f64)> {
-    let key = WisdomKey::current(n);
+    recall_desc(DescKind::OneD { n })
+}
+
+/// [`recall`] for any descriptor kind. The candidate sanitization only
+/// applies to the 1-D c2c lane (the only lane with a per-size candidate
+/// list); 2-D and r2c entries are composed transforms whose stored algo
+/// is the row/column-pass winner.
+pub fn recall_desc(desc: DescKind) -> Option<(Algorithm, f64)> {
+    let key = WisdomKey::current_desc(desc);
     let e = lookup(&key)?;
-    if Algorithm::candidates(n).contains(&e.algo) {
-        Some((e.algo, e.ns))
-    } else {
-        None
+    if let DescKind::OneD { n } = desc {
+        if !Algorithm::candidates(n).contains(&e.algo) {
+            return None;
+        }
     }
+    Some((e.algo, e.ns))
 }
 
 /// The `Auto` steer: the persisted winner for size `n`, if any wisdom is
@@ -630,7 +702,12 @@ pub fn resolve_auto(n: usize) -> Option<Algorithm> {
 /// hit/miss counters — this is the cost model's side channel, not a
 /// planning decision.
 pub fn peek_ns(n: usize) -> Option<f64> {
-    let key = WisdomKey::current(n);
+    peek_ns_desc(DescKind::OneD { n })
+}
+
+/// [`peek_ns`] for any descriptor kind (the cost book's 2-D / r2c lanes).
+pub fn peek_ns_desc(desc: DescKind) -> Option<f64> {
+    let key = WisdomKey::current_desc(desc);
     let tls = TLS.with(|t| t.borrow().as_ref().map(|w| w.lookup(&key)));
     if let Some(result) = tls {
         return result.map(|e| e.ns);
@@ -644,10 +721,15 @@ pub fn peek_ns(n: usize) -> Option<f64> {
 /// append enabled; write-through to the attached path (best-effort — a
 /// failed save warns, it does not fail the plan).
 pub fn record(n: usize, algo: Algorithm, ns: f64) {
+    record_desc(DescKind::OneD { n }, algo, ns)
+}
+
+/// [`record`] for any descriptor kind.
+pub fn record_desc(desc: DescKind, algo: Algorithm, ns: f64) {
     if algo == Algorithm::Auto || !ns.is_finite() || ns < 0.0 {
         return;
     }
-    let key = WisdomKey::current(n);
+    let key = WisdomKey::current_desc(desc);
     let mut g = state().lock().unwrap();
     if !g.append {
         return;
@@ -689,12 +771,22 @@ mod tests {
     fn sample_wisdom() -> Wisdom {
         let mut w = Wisdom::new(HostKey { l1_bytes: 32 << 10, l2_bytes: 1 << 20, threads: 4 });
         w.insert(
-            WisdomKey { n: 1024, tile: 64, radix: 8, level: 0 },
+            WisdomKey { n: 1024, n2: 0, kind: 1, tile: 64, radix: 8, level: 0 },
             WisdomEntry { algo: Algorithm::Stockham, ns: 1500.0 },
         );
         w.insert(
-            WisdomKey { n: 1 << 20, tile: 1 << 16, radix: 8, level: 1 },
+            WisdomKey { n: 1 << 20, n2: 0, kind: 1, tile: 1 << 16, radix: 8, level: 1 },
             WisdomEntry { algo: Algorithm::MemTier, ns: 9.5e6 },
+        );
+        // One of each v2 descriptor family, so the damage battery and
+        // round trips cover the kind / n2 fields.
+        w.insert(
+            WisdomKey { n: 64, n2: 2048, kind: 2, tile: 64, radix: 8, level: 0 },
+            WisdomEntry { algo: Algorithm::Stockham, ns: 3.0e5 },
+        );
+        w.insert(
+            WisdomKey { n: 4096, n2: 0, kind: 3, tile: 64, radix: 8, level: 0 },
+            WisdomEntry { algo: Algorithm::Radix4, ns: 9000.0 },
         );
         w
     }
@@ -720,8 +812,79 @@ mod tests {
         let loaded = Wisdom::load(&path).unwrap();
         assert_eq!(w, loaded);
         let same_host = Wisdom::load_for_host(&path, &w.host()).unwrap();
-        assert_eq!(same_host.len(), 2);
+        assert_eq!(same_host.len(), 4);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    /// v1 wisdom files (pre-descriptor keys) are a typed `BadVersion`,
+    /// never misparsed as v2 — the entry layout changed.
+    #[test]
+    fn v1_files_are_rejected_with_bad_version() {
+        let w = sample_wisdom();
+        let v1 = encode(&w.host(), &w.entries, 1);
+        assert_eq!(Wisdom::from_bytes(&v1).unwrap_err(), WisdomError::BadVersion { got: 1 });
+    }
+
+    /// Satellite regression: 1-D c2c entries must not be aliased by 2-D
+    /// or r2c descriptors sharing the leading size — the v2 key carries
+    /// the descriptor kind and both dimensions.
+    #[test]
+    fn one_d_entries_are_not_aliased_by_2d_or_r2c_descriptors() {
+        let n = 1024usize;
+        let mut w = Wisdom::for_current_host();
+        w.insert(
+            WisdomKey::current_desc(DescKind::OneD { n }),
+            WisdomEntry { algo: Algorithm::Stockham, ns: 100.0 },
+        );
+        with_attached(&w, || {
+            assert_eq!(recall_desc(DescKind::OneD { n }), Some((Algorithm::Stockham, 100.0)));
+            assert_eq!(recall_desc(DescKind::Real { n }), None, "r2c must not hit the c2c entry");
+            assert_eq!(
+                recall_desc(DescKind::TwoD { rows: n, cols: n }),
+                None,
+                "2-D must not hit the c2c entry"
+            );
+            assert_eq!(peek_ns_desc(DescKind::Real { n }), None);
+        });
+        // And the reverse direction: a 2-D / r2c entry never answers 1-D.
+        let mut w2 = Wisdom::for_current_host();
+        w2.insert(
+            WisdomKey::current_desc(DescKind::TwoD { rows: 64, cols: n }),
+            WisdomEntry { algo: Algorithm::FourStep, ns: 5.0e4 },
+        );
+        w2.insert(
+            WisdomKey::current_desc(DescKind::Real { n }),
+            WisdomEntry { algo: Algorithm::Radix4, ns: 70.0 },
+        );
+        with_attached(&w2, || {
+            assert_eq!(recall(n), None, "1-D recall must miss kind-typed entries");
+            assert_eq!(peek_ns(64), None);
+            assert_eq!(
+                recall_desc(DescKind::TwoD { rows: 64, cols: n }),
+                Some((Algorithm::FourStep, 5.0e4))
+            );
+            assert_eq!(recall_desc(DescKind::Real { n }), Some((Algorithm::Radix4, 70.0)));
+            // 2-D keys are ordered (rows, cols): the transpose is distinct.
+            assert_eq!(recall_desc(DescKind::TwoD { rows: n, cols: 64 }), None);
+        });
+    }
+
+    /// Damaged kind / n2 fields are typed errors, not misparses.
+    #[test]
+    fn bad_kind_and_n2_fields_are_typed() {
+        let host = HostKey { l1_bytes: 1 << 15, l2_bytes: 1 << 20, threads: 2 };
+        for (kind, n2, field) in [(0u8, 0u64, "kind"), (4, 0, "kind"), (1, 7, "n2"), (2, 0, "n2")] {
+            let mut entries = BTreeMap::new();
+            entries.insert(
+                WisdomKey { n: 256, n2, kind, tile: 64, radix: 8, level: 0 },
+                WisdomEntry { algo: Algorithm::Stockham, ns: 1.0 },
+            );
+            let bytes = encode(&host, &entries, VERSION);
+            match Wisdom::from_bytes(&bytes).unwrap_err() {
+                WisdomError::BadField { field: f, .. } => assert_eq!(f, field),
+                other => panic!("kind={kind} n2={n2}: expected BadField({field}), got {other:?}"),
+            }
+        }
     }
 
     #[test]

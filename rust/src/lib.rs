@@ -45,6 +45,14 @@
 //! typed `Overloaded` response instead of queuing without bound
 //! (DESIGN.md §10).
 //!
+//! Datasets too large for one process shard across many: [`shard`] cuts
+//! an `.mfft` container into a checksummed `.mfshard` manifest plus
+//! shard files, dispatches per-shard jobs to `memfft serve` workers over
+//! the wire protocol with capped retry/requeue, and reassembles output
+//! bit-for-bit equal to the single-process stream path — including a
+//! distributed column exchange for 2-D transforms (`memfft shard` on the
+//! CLI; DESIGN.md §14).
+//!
 //! Everything above is observable through one snapshot layer: [`metrics`]
 //! counters/histograms collapse into a torn-read-free
 //! [`metrics::MetricsSnapshot`] rendered as text, Prometheus exposition
@@ -67,6 +75,7 @@ pub mod gpusim;
 pub mod harness;
 pub mod runtime;
 pub mod sar;
+pub mod shard;
 pub mod stream;
 pub mod metrics;
 pub mod net;

@@ -21,6 +21,12 @@
 //!   tune      measure planner candidates for a size list and persist the
 //!             winners to a host-keyed wisdom file; subsequent processes
 //!             (serve --wisdom / MEMFFT_WISDOM) plan without re-timing
+//!   shard     sharded multi-process datasets (DESIGN.md §14): `split` a
+//!             .mfft into a checksummed .mfshard manifest + shard files,
+//!             `merge` them back bit-identically, `run` a transform by
+//!             dispatching shard jobs to worker daemons over the wire
+//!             protocol with retry/requeue (--fft2d adds the distributed
+//!             column exchange)
 
 use memfft::cli::{Cli, CliError, Command};
 use memfft::config::ServiceConfig;
@@ -68,6 +74,7 @@ fn cli() -> Cli {
                 .arg_default("count", "1", "requests to send in generated-signal mode")
                 .arg_default("seed", "42", "signal generator seed")
                 .arg_default("timeout-ms", "30000", "socket timeout (0 = none)")
+                .arg_default("retries", "0", "per-request retry budget: reconnect-and-resend on transient failures (Overloaded sheds, dropped connections) with capped exponential backoff")
                 .flag("check", "recompute locally through fft::plan() and require bit-for-bit equality (same-host check; assumes a native-library daemon method)")
                 .flag("stats", "fetch and print the daemon's metrics report, then exit")
                 .arg_default("format", "text", "metrics rendering for --stats: text | prom | json")
@@ -125,6 +132,26 @@ fn cli() -> Cli {
                 .arg_default("prune", "4", "time only the K cheapest-predicted candidates (0 = time all)")
                 .flag("force", "re-time every size even when the wisdom file already has an entry"),
         )
+        .command(
+            Command::new("shard", "sharded multi-process datasets: split | merge | run (DESIGN.md §14)")
+                .arg("input", ".mfft dataset to cut into shards (split; required)")
+                .arg("manifest", ".mfshard manifest path (required by every action)")
+                .arg("output", "output .mfft path (merge and run; required)")
+                .arg_default("shards", "4", "shard count (split)")
+                .arg_default("op", "fft", "fft | ifft (run)")
+                .arg_default("domain", "c2c", "c2c | r2c (run; r2c is per-row, fft only, writes Rx(C/2+1) half spectra)")
+                .flag("fft2d", "run ONE RxC 2-D transform with the distributed column exchange (run; c2c only)")
+                .arg("workers", "comma-separated worker daemon addresses (run; default: spawn local workers)")
+                .arg_default("spawn-workers", "0", "local `memfft serve` workers to spawn when --workers is empty (0 = shard.spawn config, default 2)")
+                .arg_default("method", "native", "backend for spawned workers (--check demands a native-library method)")
+                .arg_default("threads", "0", "FFT threads per spawned worker (0 = all cores)")
+                .arg_default("budget", "0", "per-chunk / per-strip bytes (0 = MEMFFT_STREAM_BUDGET / 32 MiB)")
+                .arg("max-attempts", "dispatch attempts per shard job, >= 1 (default: shard.max_attempts, 3)")
+                .arg("request-retries", "per-request wire retries within one attempt (default: shard.request_retries, 2)")
+                .arg("backoff-ms", "base retry backoff in ms, doubled per attempt (default: shard.backoff_ms, 50)")
+                .arg_default("config", "", "TOML config path with a [shard] section (optional)")
+                .flag("check", "recompute single-process in memory and require bit-for-bit equality with the sharded output"),
+        )
 }
 
 fn main() {
@@ -149,6 +176,7 @@ fn main() {
         Some("transform") => cmd_transform(&parsed),
         Some("stream") => cmd_stream(&parsed),
         Some("tune") => cmd_tune(&parsed),
+        Some("shard") => cmd_shard(&parsed),
         _ => {
             println!("{}", cli().usage());
             Ok(())
@@ -271,6 +299,7 @@ fn cmd_client(args: &memfft::cli::Args) -> CmdResult {
 
     let addr = args.get_or("addr", "127.0.0.1:7070").to_string();
     let timeout_ms = args.get_u64("timeout-ms", 30_000)?;
+    let retries = args.get_u64("retries", 0)? as u32;
     let mut client = NetClient::connect(&addr).map_err(|e| format!("connect {addr}: {e}"))?;
     client.set_timeout(if timeout_ms == 0 {
         None
@@ -387,7 +416,21 @@ fn cmd_client(args: &memfft::cli::Args) -> CmdResult {
     let t = Timer::start();
     for (spec, re, im) in requests {
         let rt = Timer::start();
-        match client.transform(&spec, direction, &re, &im) {
+        // --retries routes through the reconnecting wire-retry path;
+        // 0 keeps the legacy single-shot call (one shed = one miss).
+        let sent = if retries > 0 {
+            client.transform_with_retry(
+                &spec,
+                direction,
+                &re,
+                &im,
+                retries,
+                std::time::Duration::from_millis(50),
+            )
+        } else {
+            client.transform(&spec, direction, &re, &im)
+        };
+        match sent {
             Ok((out_re, out_im)) => {
                 hist.record(rt.elapsed());
                 ok += 1;
@@ -937,6 +980,275 @@ fn cmd_tune(args: &memfft::cli::Args) -> CmdResult {
         s.entries,
         saved.map(|p| p.display().to_string()).unwrap_or(path),
     );
+    Ok(())
+}
+
+fn cmd_shard(args: &memfft::cli::Args) -> CmdResult {
+    match args.positional.first().map(String::as_str) {
+        Some("split") => cmd_shard_split(args),
+        Some("merge") => cmd_shard_merge(args),
+        Some("run") => cmd_shard_run(args),
+        Some(other) => Err(format!("shard: unknown action '{other}' (split | merge | run)").into()),
+        None => Err("shard: an action is required: shard <split | merge | run> [options]".into()),
+    }
+}
+
+/// Required `--key <path>` for a shard action (the parser itself never
+/// enforces presence; mirror the io_paths contract).
+fn shard_arg<'a>(
+    args: &'a memfft::cli::Args,
+    key: &'static str,
+    cmd: &str,
+) -> Result<&'a str, Box<dyn std::error::Error>> {
+    Ok(args
+        .get(key)
+        .filter(|v| !v.is_empty())
+        .ok_or_else(|| format!("{cmd}: --{key} <path> is required"))?)
+}
+
+fn cmd_shard_split(args: &memfft::cli::Args) -> CmdResult {
+    let input = shard_arg(args, "input", "shard split")?;
+    let manifest = shard_arg(args, "manifest", "shard split")?;
+    let count = args.get_usize("shards", 4)?;
+    if count == 0 {
+        return Err("shard split: --shards must be >= 1".into());
+    }
+    let m = memfft::shard::split(input, manifest, count)?;
+    println!(
+        "split: {}x{} dataset -> {} shards indexed by {manifest}",
+        m.dims.rows,
+        m.dims.cols,
+        m.shards.len()
+    );
+    for (i, s) in m.shards.iter().enumerate() {
+        println!(
+            "  shard {i}: rows {}..{}  {}  (payload fnv1a {:#018x})",
+            s.row0,
+            s.row0 + s.rows,
+            s.path,
+            s.checksum
+        );
+    }
+    Ok(())
+}
+
+fn cmd_shard_merge(args: &memfft::cli::Args) -> CmdResult {
+    let manifest = shard_arg(args, "manifest", "shard merge")?;
+    let output = shard_arg(args, "output", "shard merge")?;
+    let m = memfft::shard::merge(manifest, output)?;
+    println!(
+        "merge: {} shards -> {output} ({}x{}, bit-identical to the split input)",
+        m.shards.len(),
+        m.dims.rows,
+        m.dims.cols
+    );
+    Ok(())
+}
+
+fn cmd_shard_run(args: &memfft::cli::Args) -> CmdResult {
+    use memfft::config::ShardConfig;
+    use memfft::metrics::ServiceMetrics;
+    use memfft::shard::{
+        coordinator::parse_workers, run_sharded, run_sharded_2d, spawn_local_workers, Manifest,
+        ShardRunOptions,
+    };
+    use memfft::stream::{Dims, FileIo};
+
+    let manifest_path = shard_arg(args, "manifest", "shard run")?.to_string();
+    let output = shard_arg(args, "output", "shard run")?.to_string();
+    let op = args.get_or("op", "fft").to_string();
+    let direction = match op.as_str() {
+        "fft" => Direction::Forward,
+        "ifft" => Direction::Inverse,
+        other => return Err(format!("shard run: unknown op '{other}' (fft | ifft)").into()),
+    };
+    let d = args.get_or("domain", "c2c");
+    let domain = Domain::parse(d)
+        .ok_or_else(|| format!("shard run: --domain must be c2c or r2c, got '{d}'"))?;
+    let fft2d = args.flag("fft2d");
+    if fft2d && domain != Domain::ComplexToComplex {
+        return Err("shard run: --fft2d supports --domain c2c only".into());
+    }
+    if domain == Domain::RealToComplex && direction == Direction::Inverse {
+        return Err("shard run: --domain r2c supports --op fft only".into());
+    }
+
+    let shard_cfg = match args.get("config").filter(|p| !p.is_empty()) {
+        Some(p) => ServiceConfig::load(p)?.shard,
+        None => ShardConfig::default(),
+    };
+    let mut opts = ShardRunOptions::from_config(&shard_cfg)?;
+    if let Some(w) = args.get("workers").filter(|s| !s.is_empty()) {
+        opts.workers = parse_workers(w)?;
+    }
+    opts.budget = args.get_usize("budget", 0)?;
+    opts.max_attempts = args.get_usize("max-attempts", shard_cfg.max_attempts)? as u32;
+    opts.request_retries = args.get_usize("request-retries", shard_cfg.request_retries)? as u32;
+    opts.backoff =
+        std::time::Duration::from_millis(args.get_u64("backoff-ms", shard_cfg.backoff_ms)?);
+
+    // No explicit workers: spawn local `memfft serve` children from this
+    // very binary and aim the dispatcher at their loopback ports.
+    let method = args.get_or("method", "native").to_string();
+    let threads = args.get_usize("threads", 0)?;
+    let mut spawned = Vec::new();
+    if opts.workers.is_empty() {
+        let count = match args.get_usize("spawn-workers", 0)? {
+            0 => shard_cfg.spawn,
+            n => n,
+        };
+        if count == 0 {
+            return Err("shard run: no --workers and no workers to spawn (shard.spawn = 0)".into());
+        }
+        let exe = std::env::current_exe()
+            .map_err(|e| format!("shard run: cannot locate own binary: {e}"))?;
+        spawned = spawn_local_workers(&exe, count, &method, threads)?;
+        opts.workers = spawned.iter().map(|w| w.addr()).collect();
+        println!(
+            "spawned {count} local {method} workers: {}",
+            opts.workers.iter().map(|a| a.to_string()).collect::<Vec<_>>().join(", ")
+        );
+    }
+
+    let manifest = Manifest::load(&manifest_path)?;
+    let mdir = std::path::Path::new(&manifest_path)
+        .parent()
+        .map(std::path::Path::to_path_buf)
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let dims = manifest.dims;
+    let out_dims = if domain == Domain::RealToComplex {
+        Dims::new(dims.rows, dims.cols / 2 + 1)
+    } else {
+        dims
+    };
+    println!(
+        "shard run: {}x{} dataset in {} shards, {} workers, op={op}{}",
+        dims.rows,
+        dims.cols,
+        manifest.shards.len(),
+        opts.workers.len(),
+        match (fft2d, domain) {
+            (true, _) => " (one 2-D transform, distributed column exchange)",
+            (false, Domain::RealToComplex) => " (r2c rows, half-spectrum out)",
+            _ => "",
+        },
+    );
+
+    let metrics = ServiceMetrics::new();
+    let t = Timer::start();
+    let report = {
+        // Scoped so the output store is closed before --check reads it.
+        let mut io = FileIo::create(&output, out_dims)?;
+        if fft2d {
+            run_sharded_2d(&manifest, &mdir, direction, &mut io, &opts, Some(&metrics))?
+        } else {
+            run_sharded(&manifest, &mdir, domain, direction, &mut io, &opts, Some(&metrics))?
+        }
+    };
+    let ms = t.elapsed_ms();
+    println!(
+        "shard run: {} rows via {} shard jobs{} in {ms:.1} ms",
+        report.rows,
+        report.shards,
+        if report.strips > 0 {
+            format!(" + {} column strips", report.strips)
+        } else {
+            String::new()
+        },
+    );
+    // The CI retry lane greps this exact shape.
+    println!(
+        "shards: done={} retried={} failed={}",
+        metrics.shards_done.get(),
+        metrics.shards_retried.get(),
+        metrics.shards_failed.get()
+    );
+    for w in spawned {
+        w.shutdown();
+    }
+    if args.flag("check") {
+        check_sharded(&manifest, &mdir, &output, &method, domain, direction, fft2d)?;
+    }
+    Ok(())
+}
+
+/// `shard run --check`: reassemble the input from its shard files, run
+/// the single-process in-memory reference, and require bit-for-bit
+/// equality with the sharded output — the subsystem's determinism
+/// contract (DESIGN.md §14).
+fn check_sharded(
+    manifest: &memfft::shard::Manifest,
+    manifest_dir: &std::path::Path,
+    output: &str,
+    method: &str,
+    domain: Domain,
+    direction: Direction,
+    fft2d: bool,
+) -> CmdResult {
+    use memfft::coordinator::backend;
+    use memfft::fft::Algorithm;
+    use memfft::stream::{
+        bitwise_mismatches, read_dataset, transform_2d_in_memory, transform_in_memory,
+        transform_in_memory_spec, Dims,
+    };
+    use memfft::C32;
+
+    // Same restriction as `stream --check`: the reference is the native
+    // plan path, so only bit-compatible worker methods can be verified
+    // (and the 2-D exchange sends Auto-hinted row/column requests, which
+    // a memtier daemon would re-pin).
+    let verifiable = if fft2d {
+        matches!(method, "native" | "modeled")
+    } else {
+        matches!(method, "native" | "modeled" | "memtier")
+    };
+    if !verifiable {
+        return Err(format!(
+            "shard check: --method {method} is not bit-comparable to the in-memory reference — \
+             drop --check or use a native-library method"
+        )
+        .into());
+    }
+    let dims = manifest.dims;
+    let paths = manifest.verify_files(manifest_dir)?;
+    let mut data: Vec<C32> = Vec::with_capacity(dims.elems()?);
+    for p in &paths {
+        let (_, shard_data) = read_dataset(p)?;
+        data.extend_from_slice(&shard_data);
+    }
+    let (odims, got) = read_dataset(output)?;
+    let want_odims = if domain == Domain::RealToComplex {
+        Dims::new(dims.rows, dims.cols / 2 + 1)
+    } else {
+        dims
+    };
+    if odims != want_odims {
+        return Err(format!(
+            "shard check: output is {}x{}, expected {}x{} for this descriptor",
+            odims.rows, odims.cols, want_odims.rows, want_odims.cols
+        )
+        .into());
+    }
+    let cfg = ServiceConfig { method: method.to_string(), ..ServiceConfig::default() };
+    let expect: Vec<C32> = if fft2d {
+        transform_2d_in_memory(dims, &data, direction, Algorithm::Auto)?
+    } else if domain == Domain::RealToComplex {
+        let row_spec = ProblemSpec::real(dims.cols)?;
+        let mut reference = backend::for_config(&cfg);
+        transform_in_memory_spec(&mut *reference, dims, &data, &row_spec, direction)?
+    } else {
+        let mut reference = backend::for_config(&cfg);
+        transform_in_memory(&mut *reference, dims, &data, direction)?
+    };
+    let mismatches = bitwise_mismatches(&expect, &got);
+    if mismatches > 0 {
+        return Err(format!(
+            "shard check FAILED: {mismatches} of {} elements differ from the single-process reference",
+            expect.len()
+        )
+        .into());
+    }
+    println!("check ok: sharded output is bit-for-bit equal to the single-process reference");
     Ok(())
 }
 

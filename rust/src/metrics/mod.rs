@@ -463,6 +463,12 @@ pub struct ServiceMetrics {
     /// wisdom); the gauge is only meaningful once admitted requests
     /// carried a charge (it stays 0 before then).
     pub cost_err_pct: Gauge,
+    /// Shard coordinator (`crate::shard`, DESIGN.md §14): jobs finished,
+    /// jobs requeued after a worker failure, and jobs that exhausted
+    /// their retry budget.
+    pub shards_done: Counter,
+    pub shards_retried: Counter,
+    pub shards_failed: Counter,
 }
 
 impl ServiceMetrics {
@@ -511,6 +517,9 @@ impl ServiceMetrics {
             requests_shed: self.requests_shed.get(),
             frames_malformed: self.frames_malformed.get(),
             cost_err_pct: self.cost_err_pct.get(),
+            shards_done: self.shards_done.get(),
+            shards_retried: self.shards_retried.get(),
+            shards_failed: self.shards_failed.get(),
             kernel_radix: crate::fft::simd::radix().value(),
             simd_active: crate::fft::simd::active().name(),
             simd_detected: crate::fft::simd::detected().name(),
@@ -563,6 +572,9 @@ pub struct MetricsSnapshot {
     pub requests_shed: u64,
     pub frames_malformed: u64,
     pub cost_err_pct: i64,
+    pub shards_done: u64,
+    pub shards_retried: u64,
+    pub shards_failed: u64,
     /// Resolved kernel configuration (DESIGN.md §11) at snapshot time.
     pub kernel_radix: usize,
     pub simd_active: &'static str,
@@ -594,6 +606,12 @@ impl MetricsSnapshot {
             || self.connections_refused > 0
             || self.requests_shed > 0
             || self.frames_malformed > 0
+    }
+
+    /// Whether the shard coordinator dispatched anything (gates the
+    /// `shards:` line).
+    pub fn shard_traffic_seen(&self) -> bool {
+        self.shards_done > 0 || self.shards_retried > 0 || self.shards_failed > 0
     }
 
     /// The human report, byte-identical to what `ServiceMetrics::report()`
@@ -662,6 +680,12 @@ impl MetricsSnapshot {
                 self.frames_malformed
             ));
         }
+        if self.shard_traffic_seen() {
+            s.push_str(&format!(
+                "shards: done={} retried={} failed={}\n",
+                self.shards_done, self.shards_retried, self.shards_failed
+            ));
+        }
         // Wisdom is process-global like the table cache; the line appears
         // once a file is attached (the `rust-wisdom` CI lane greps it to
         // prove a tuned process recalls instead of re-timing).
@@ -725,6 +749,10 @@ impl MetricsSnapshot {
         s.push_str(&format!(
             "\"connections_accepted\":{},\"connections_refused\":{},\"connections_active\":{},\"frames_malformed\":{},",
             self.connections_accepted, self.connections_refused, self.connections_active, self.frames_malformed
+        ));
+        s.push_str(&format!(
+            "\"shards_done\":{},\"shards_retried\":{},\"shards_failed\":{},",
+            self.shards_done, self.shards_retried, self.shards_failed
         ));
         s.push_str(&format!(
             "\"cost_err_pct\":{},\"kernel_radix\":{},\"simd_active\":\"{}\",\"simd_detected\":\"{}\",",
@@ -979,6 +1007,19 @@ mod tests {
     }
 
     #[test]
+    fn report_shard_section_gated_on_traffic() {
+        let m = ServiceMetrics::new();
+        assert!(!m.report().contains("shards:"), "no shard line before any dispatch");
+        m.shards_done.add(4);
+        m.shards_retried.inc();
+        let report = m.report();
+        assert!(report.contains("shards: done=4 retried=1 failed=0"), "{report}");
+        let json = m.snapshot().render_json();
+        assert!(json.contains("\"shards_done\":4"), "{json}");
+        assert!(json.contains("\"shards_retried\":1"), "{json}");
+    }
+
+    #[test]
     fn service_metrics_report() {
         let m = ServiceMetrics::new();
         m.requests_in.inc();
@@ -1025,6 +1066,9 @@ mod tests {
         m.stream_write.record(Duration::from_micros(33));
         m.connections_accepted.inc();
         m.connections_active.inc();
+        assert_eq!(m.report(), m.snapshot().render_text());
+        m.shards_done.add(4);
+        m.shards_retried.inc();
         assert_eq!(m.report(), m.snapshot().render_text());
         // And a snapshot is stable: mutating live metrics afterwards does
         // not change an already-taken snapshot's rendering.

@@ -2,6 +2,7 @@
 //! synchronous request/response. Used by `memfft client`, the loopback
 //! example, and the protocol test battery.
 
+use std::cell::Cell;
 use std::fmt;
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::Duration;
@@ -64,27 +65,56 @@ impl From<ProtoError> for NetError {
 pub struct NetClient {
     stream: TcpStream,
     max_frame_bytes: usize,
+    /// Resolved peer, kept so transient-error retries can reconnect.
+    peer: Option<SocketAddr>,
+    /// Socket timeout, re-applied to a reconnected stream.
+    timeout: Cell<Option<Duration>>,
 }
 
+/// Longest single retry backoff: transient-failure waits stop doubling
+/// here so a deep retry budget degrades to steady polling, not minutes
+/// of silence.
+const MAX_BACKOFF: Duration = Duration::from_secs(2);
+
 impl NetClient {
+    fn from_stream(stream: TcpStream) -> Result<NetClient, NetError> {
+        stream.set_nodelay(true)?;
+        let peer = stream.peer_addr().ok();
+        Ok(NetClient {
+            stream,
+            max_frame_bytes: crate::config::NetConfig::default().max_frame_bytes,
+            peer,
+            timeout: Cell::new(None),
+        })
+    }
+
     /// Connect with the default frame cap (matches `NetConfig::default`).
     pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient, NetError> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
-        Ok(NetClient { stream, max_frame_bytes: crate::config::NetConfig::default().max_frame_bytes })
+        Self::from_stream(TcpStream::connect(addr)?)
     }
 
     /// Connect with a bounded connect timeout.
     pub fn connect_timeout(addr: &SocketAddr, timeout: Duration) -> Result<NetClient, NetError> {
-        let stream = TcpStream::connect_timeout(addr, timeout)?;
-        stream.set_nodelay(true)?;
-        Ok(NetClient { stream, max_frame_bytes: crate::config::NetConfig::default().max_frame_bytes })
+        Self::from_stream(TcpStream::connect_timeout(addr, timeout)?)
     }
 
     /// Socket read/write timeout for every subsequent exchange.
     pub fn set_timeout(&self, timeout: Option<Duration>) -> Result<(), NetError> {
         self.stream.set_read_timeout(timeout)?;
         self.stream.set_write_timeout(timeout)?;
+        self.timeout.set(timeout);
+        Ok(())
+    }
+
+    /// Drop the current stream and dial the remembered peer again,
+    /// restoring nodelay and the socket timeout. Fails with `Closed` if
+    /// the peer address was never resolvable (nothing to redial).
+    fn reconnect(&mut self) -> Result<(), NetError> {
+        let peer = self.peer.ok_or(NetError::Closed)?;
+        let stream = TcpStream::connect(peer)?;
+        stream.set_nodelay(true)?;
+        self.stream = stream;
+        self.set_timeout(self.timeout.get())?;
         Ok(())
     }
 
@@ -106,6 +136,44 @@ impl NetClient {
         match self.read_reply(FrameKind::Response)? {
             WireResponse::Ok { re, im } => Ok((re, im)),
             WireResponse::Err { status, message } => Err(NetError::Remote { status, message }),
+        }
+    }
+
+    /// [`NetClient::transform`] with capped exponential backoff on
+    /// transient failures: up to `retries` extra attempts after a typed
+    /// `Overloaded` shed (same connection — the daemon is alive, just
+    /// busy) or a transport failure (`Io` / `Closed`, where the stream
+    /// state is unknown, so the peer is redialed first). Waits double
+    /// from `backoff` per attempt, capped at 2 s. Non-transient errors
+    /// (typed rejections, protocol violations) return immediately.
+    pub fn transform_with_retry(
+        &mut self,
+        problem: &ProblemSpec,
+        direction: Direction,
+        re: &[f32],
+        im: &[f32],
+        retries: u32,
+        backoff: Duration,
+    ) -> Result<(Vec<f32>, Vec<f32>), NetError> {
+        let mut attempt = 0u32;
+        loop {
+            let err = match self.transform(problem, direction, re, im) {
+                Ok(out) => return Ok(out),
+                Err(e) => e,
+            };
+            let transport = matches!(err, NetError::Io(_) | NetError::Closed);
+            let transient =
+                transport || matches!(err, NetError::Remote { status: Status::Overloaded, .. });
+            if !transient || attempt >= retries {
+                return Err(err);
+            }
+            std::thread::sleep(
+                backoff.saturating_mul(1u32 << attempt.min(4)).min(MAX_BACKOFF),
+            );
+            if transport {
+                self.reconnect()?;
+            }
+            attempt += 1;
         }
     }
 

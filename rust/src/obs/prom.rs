@@ -66,6 +66,9 @@ pub fn render(s: &MetricsSnapshot) -> String {
     gauge(&mut out, "memfft_wisdom_attached", "1 when a wisdom file is attached, else 0.", i64::from(s.wisdom_attached));
     counter(&mut out, "memfft_stream_chunks_total", "Out-of-core chunks streamed.", s.stream_chunks);
     counter(&mut out, "memfft_stream_rows_total", "Out-of-core rows streamed.", s.stream_rows);
+    counter(&mut out, "memfft_shards_done_total", "Shard jobs completed by the shard coordinator.", s.shards_done);
+    counter(&mut out, "memfft_shards_retried_total", "Shard jobs requeued after a worker failure.", s.shards_retried);
+    counter(&mut out, "memfft_shards_failed_total", "Shard jobs that exhausted their retry budget.", s.shards_failed);
     counter(&mut out, "memfft_connections_accepted_total", "TCP connections admitted.", s.connections_accepted);
     counter(&mut out, "memfft_connections_refused_total", "TCP connections refused at the connection cap.", s.connections_refused);
     counter(&mut out, "memfft_frames_malformed_total", "Structurally malformed wire frames.", s.frames_malformed);

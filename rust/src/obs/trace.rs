@@ -53,6 +53,12 @@ pub enum SpanKind {
     PlanWisdomHit = 10,
     /// planner timed candidates (id = n; dur = whole measurement).
     PlanMeasure = 11,
+    /// one shard job processed through a worker (id = shard/strip index).
+    ShardDispatch = 12,
+    /// shard job requeued after a worker failure, instant (id = index).
+    ShardRetry = 13,
+    /// shard result delivered in manifest order (id = index).
+    ShardMerge = 14,
 }
 
 impl SpanKind {
@@ -70,6 +76,9 @@ impl SpanKind {
             SpanKind::NetFrame => "net-frame",
             SpanKind::PlanWisdomHit => "plan-wisdom-hit",
             SpanKind::PlanMeasure => "plan-measure",
+            SpanKind::ShardDispatch => "shard-dispatch",
+            SpanKind::ShardRetry => "shard-retry",
+            SpanKind::ShardMerge => "shard-merge",
         }
     }
 
@@ -84,6 +93,7 @@ impl SpanKind {
             SpanKind::ChunkRead | SpanKind::ChunkCompute | SpanKind::ChunkWrite => "stream",
             SpanKind::NetFrame => "net",
             SpanKind::PlanWisdomHit | SpanKind::PlanMeasure => "plan",
+            SpanKind::ShardDispatch | SpanKind::ShardRetry | SpanKind::ShardMerge => "shard",
         }
     }
 
@@ -100,6 +110,9 @@ impl SpanKind {
             9 => SpanKind::NetFrame,
             10 => SpanKind::PlanWisdomHit,
             11 => SpanKind::PlanMeasure,
+            12 => SpanKind::ShardDispatch,
+            13 => SpanKind::ShardRetry,
+            14 => SpanKind::ShardMerge,
             _ => return None,
         })
     }
@@ -459,13 +472,13 @@ mod tests {
 
     #[test]
     fn span_kind_tables_are_total() {
-        for v in 1..=11u32 {
+        for v in 1..=14u32 {
             let k = SpanKind::from_u32(v).expect("contiguous kinds");
             assert_eq!(k as u32, v);
             assert!(!k.name().is_empty());
             assert!(!k.category().is_empty());
         }
         assert_eq!(SpanKind::from_u32(0), None);
-        assert_eq!(SpanKind::from_u32(12), None);
+        assert_eq!(SpanKind::from_u32(15), None);
     }
 }

@@ -1,0 +1,499 @@
+//! The shard coordinator: dispatch per-shard jobs to worker daemons over
+//! the wire protocol, with retry/requeue, and assemble the output
+//! bit-for-bit equal to the single-process stream path.
+//!
+//! Dispatch model (DESIGN.md §14): one dispatcher thread per worker
+//! address pulls jobs off a shared queue, processes them through a fresh
+//! [`NetClient`] connection, and reports completions to the coordinator
+//! thread, which tracks them **in manifest order** (`ShardMerge` spans
+//! fire in that order). Output writes go through position-addressed
+//! [`SliceIo`] spans into disjoint row ranges, so reprocessing a shard
+//! after a worker failure rewrites identical bytes — retries are
+//! idempotent by construction.
+//!
+//! Failure taxonomy: wire-level failures (`ShardError::Net` — refused
+//! connections, killed workers, timeouts, `Overloaded` past the
+//! per-request retry budget) requeue the job with capped attempts;
+//! local failures (shard file IO, span IO) abort the run immediately —
+//! retrying a broken disk on another worker cannot help. A worker whose
+//! jobs fail repeatedly retires its dispatcher thread; the run survives
+//! as long as one worker remains.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::net::{SocketAddr, ToSocketAddrs};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::manifest::Manifest;
+use super::ShardError;
+use crate::coordinator::Direction;
+use crate::fft::{Algorithm, Domain, ProblemSpec, Shape};
+use crate::metrics::ServiceMetrics;
+use crate::net::NetClient;
+use crate::obs::trace::{self, SpanKind};
+use crate::stream::{ChunkPlan, ChunkSource, Dims, FileDataset, SliceIo, StreamError};
+use crate::util::complex::C32;
+
+/// Consecutive failures after which a dispatcher thread retires its
+/// worker (the jobs requeue onto the surviving workers).
+const WORKER_FAILURE_LIMIT: u32 = 3;
+/// Idle poll while the queue is empty but jobs are still in flight on
+/// other workers (they may yet requeue).
+const IDLE_POLL: Duration = Duration::from_millis(5);
+/// Longest single requeue backoff.
+const MAX_BACKOFF: Duration = Duration::from_secs(2);
+
+/// Knobs of one sharded run.
+#[derive(Debug, Clone)]
+pub struct ShardRunOptions {
+    /// Worker daemon addresses; jobs are pulled by whichever is free.
+    pub workers: Vec<SocketAddr>,
+    /// Per-chunk byte budget (0 = the stream budget ladder).
+    pub budget: usize,
+    /// Total tries per shard job (>= 1); the first counts.
+    pub max_attempts: u32,
+    /// Per-request `transform_with_retry` budget within one attempt
+    /// (absorbs transient `Overloaded` sheds without requeueing).
+    pub request_retries: u32,
+    /// Base backoff; doubles per attempt, capped at 2 s.
+    pub backoff: Duration,
+    /// TCP connect timeout per dispatch attempt.
+    pub connect_timeout: Duration,
+    /// Socket read/write timeout (None = unbounded).
+    pub io_timeout: Option<Duration>,
+    /// Algorithm hint carried in every wire request.
+    pub algo: Algorithm,
+}
+
+impl Default for ShardRunOptions {
+    fn default() -> Self {
+        Self {
+            workers: Vec::new(),
+            budget: 0,
+            max_attempts: 3,
+            request_retries: 2,
+            backoff: Duration::from_millis(50),
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Some(Duration::from_secs(30)),
+            algo: Algorithm::Auto,
+        }
+    }
+}
+
+impl ShardRunOptions {
+    /// Build run options from the `[shard]` config section. An empty
+    /// `shard.workers` list is legal here — the caller spawns
+    /// `cfg.spawn` local workers and fills `workers` itself.
+    pub fn from_config(cfg: &crate::config::ShardConfig) -> Result<Self, ShardError> {
+        Ok(Self {
+            workers: parse_workers(&cfg.workers)?,
+            max_attempts: cfg.max_attempts as u32,
+            request_retries: cfg.request_retries as u32,
+            backoff: Duration::from_millis(cfg.backoff_ms),
+            connect_timeout: Duration::from_millis(cfg.connect_timeout_ms),
+            io_timeout: cfg.io_timeout(),
+            ..Self::default()
+        })
+    }
+}
+
+/// What a sharded run did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRunReport {
+    /// Shard jobs completed (stage A of a 2-D run).
+    pub shards: usize,
+    /// Column-strip jobs completed (2-D runs only).
+    pub strips: usize,
+    /// Dataset rows processed.
+    pub rows: usize,
+    /// Jobs requeued after a worker failure.
+    pub retried: u64,
+}
+
+/// Parse a `host:port,host:port,...` worker list (the `--workers` flag
+/// and the `[shard] workers` config key), resolving each entry.
+pub fn parse_workers(list: &str) -> Result<Vec<SocketAddr>, ShardError> {
+    let mut out = Vec::new();
+    for part in list.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let addr = part
+            .to_socket_addrs()
+            .map_err(|e| ShardError::Worker(format!("worker address '{part}': {e}")))?
+            .next()
+            .ok_or_else(|| ShardError::Worker(format!("worker address '{part}' resolved to nothing")))?;
+        out.push(addr);
+    }
+    Ok(out)
+}
+
+/// Run a sharded per-row transform (1-D c2c forward/inverse, or r2c
+/// forward with `h1 = cols/2 + 1` half-spectrum rows) across the
+/// manifest's shards, assembling into `out` (`rows × cols` for c2c,
+/// `rows × h1` for r2c). Bit-for-bit equal to the single-process
+/// `stream_transform_spec` path when the workers run a bit-compatible
+/// (native-library) method on the same host.
+pub fn run_sharded(
+    manifest: &Manifest,
+    manifest_dir: &Path,
+    domain: Domain,
+    direction: Direction,
+    out: &mut dyn SliceIo,
+    opts: &ShardRunOptions,
+    metrics: Option<&ServiceMetrics>,
+) -> Result<ShardRunReport, ShardError> {
+    let Dims { rows, cols } = manifest.dims;
+    if domain == Domain::RealToComplex && direction == Direction::Inverse {
+        return Err(ShardError::Worker("r2c shard runs support the forward direction only".into()));
+    }
+    if rows == 0 {
+        if out.dims().rows != 0 {
+            return Err(stream_format(format!(
+                "output has {} rows, sharded dataset is empty",
+                out.dims().rows
+            )));
+        }
+        return Ok(ShardRunReport { shards: 0, strips: 0, rows: 0, retried: 0 });
+    }
+    let spec = ProblemSpec::new(Shape::OneD { n: cols }, domain)
+        .map_err(|e| ShardError::Stream(StreamError::Fft(e)))?
+        .with_algorithm(opts.algo);
+    let h_out = spec.spectrum_elems().unwrap_or(cols);
+    let want = Dims::new(rows, h_out);
+    if out.dims() != want {
+        return Err(stream_format(format!(
+            "output is {}x{}, sharded result is {}x{}",
+            out.dims().rows,
+            out.dims().cols,
+            want.rows,
+            want.cols
+        )));
+    }
+    let paths = manifest.verify_files(manifest_dir)?;
+    let out = Mutex::new(out);
+    let retried = dispatch(
+        &opts.workers,
+        manifest.shards.len(),
+        opts,
+        metrics,
+        |_, addr, job| {
+            process_shard(&paths[job], job, manifest, &spec, h_out, direction, addr, opts, &out)
+        },
+    )?;
+    Ok(ShardRunReport { shards: manifest.shards.len(), strips: 0, rows, retried })
+}
+
+/// Stream one shard through one worker: chunked rows off the shard file,
+/// one batch-1 wire request per row (the service's descriptor lane
+/// accepts batch == 1 only, and per-row bits are batch-size-invariant),
+/// results written straight into the shard's disjoint output row range.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn process_shard(
+    path: &Path,
+    job: usize,
+    manifest: &Manifest,
+    spec: &ProblemSpec,
+    h_out: usize,
+    direction: Direction,
+    addr: SocketAddr,
+    opts: &ShardRunOptions,
+    out: &Mutex<&mut dyn SliceIo>,
+) -> Result<(), ShardError> {
+    let entry = &manifest.shards[job];
+    let cols = manifest.dims.cols;
+    let out_cols = h_out;
+    let mut src = FileDataset::open(path).map_err(ShardError::Stream)?;
+    let mut client = connect(addr, job, opts)?;
+    let plan = ChunkPlan::new(entry.rows, cols, opts.budget);
+    let (mut re, mut im) = (Vec::new(), Vec::new());
+    let mut rowbuf = vec![C32::ZERO; h_out];
+    let r2c = spec.domain() == Domain::RealToComplex;
+    let zeros = if r2c { vec![0f32; cols] } else { Vec::new() };
+    for chunk in plan.iter() {
+        src.read_rows(chunk.rows, &mut re, &mut im).map_err(ShardError::Stream)?;
+        for r in 0..chunk.rows {
+            let s = r * cols;
+            // The wire r2c contract takes a real signal (im plane unused
+            // by the RFFT); send zeros like `memfft client` does.
+            let im_row = if r2c { &zeros[..] } else { &im[s..s + cols] };
+            let (o_re, o_im) = client
+                .transform_with_retry(
+                    spec,
+                    direction,
+                    &re[s..s + cols],
+                    im_row,
+                    opts.request_retries,
+                    opts.backoff,
+                )
+                .map_err(|e| ShardError::Net { shard: job, error: e.to_string() })?;
+            if o_re.len() < h_out || o_im.len() < h_out {
+                return Err(ShardError::Net {
+                    shard: job,
+                    error: format!("short reply: {} elems, need {h_out}", o_re.len()),
+                });
+            }
+            // r2c replies carry the full n-point spectrum; keep the h1
+            // unique bins, exactly like the stream path's compaction.
+            for (k, c) in rowbuf.iter_mut().enumerate() {
+                *c = C32::new(o_re[k], o_im[k]);
+            }
+            let abs_row = entry.row0 + chunk.row0 + r;
+            out.lock()
+                .unwrap()
+                .write_span(abs_row * out_cols, &rowbuf)
+                .map_err(ShardError::Stream)?;
+        }
+    }
+    Ok(())
+}
+
+pub(crate) fn connect(
+    addr: SocketAddr,
+    job: usize,
+    opts: &ShardRunOptions,
+) -> Result<NetClient, ShardError> {
+    let client = NetClient::connect_timeout(&addr, opts.connect_timeout)
+        .map_err(|e| ShardError::Net { shard: job, error: format!("connect {addr}: {e}") })?;
+    client
+        .set_timeout(opts.io_timeout)
+        .map_err(|e| ShardError::Net { shard: job, error: e.to_string() })?;
+    Ok(client)
+}
+
+pub(crate) fn stream_format(msg: String) -> ShardError {
+    ShardError::Stream(StreamError::Format(msg))
+}
+
+/// The dispatch/retry/merge engine shared by shard jobs and 2-D column
+/// strips. Returns the number of requeues. `process` runs on the
+/// dispatcher threads (one per worker); completions are tracked on the
+/// calling thread in job order.
+pub(crate) fn dispatch<F>(
+    workers: &[SocketAddr],
+    njobs: usize,
+    opts: &ShardRunOptions,
+    metrics: Option<&ServiceMetrics>,
+    process: F,
+) -> Result<u64, ShardError>
+where
+    F: Fn(usize, SocketAddr, usize) -> Result<(), ShardError> + Sync,
+{
+    if njobs == 0 {
+        return Ok(0);
+    }
+    if workers.is_empty() {
+        return Err(ShardError::NoWorkers { queued: njobs });
+    }
+    if opts.max_attempts == 0 {
+        return Err(ShardError::Worker("max_attempts must be >= 1".into()));
+    }
+    let queue: Mutex<VecDeque<(usize, u32)>> =
+        Mutex::new((0..njobs).map(|j| (j, 0u32)).collect());
+    let outstanding = AtomicUsize::new(njobs);
+    let stop = AtomicBool::new(false);
+    let retried = AtomicU64::new(0);
+    let failed: Mutex<Option<ShardError>> = Mutex::new(None);
+    let (tx, rx) = mpsc::channel::<usize>();
+    let process = &process;
+    std::thread::scope(|scope| {
+        for (wi, &addr) in workers.iter().enumerate() {
+            let tx = tx.clone();
+            let (queue, outstanding, stop, retried, failed) =
+                (&queue, &outstanding, &stop, &retried, &failed);
+            scope.spawn(move || {
+                let mut consecutive = 0u32;
+                loop {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let job = queue.lock().unwrap().pop_front();
+                    let Some((job, attempt)) = job else {
+                        if outstanding.load(Ordering::Relaxed) == 0 {
+                            break;
+                        }
+                        // In-flight jobs elsewhere may requeue; stay up.
+                        std::thread::sleep(IDLE_POLL);
+                        continue;
+                    };
+                    let t0 = Instant::now();
+                    match process(wi, addr, job) {
+                        Ok(()) => {
+                            consecutive = 0;
+                            trace::record(SpanKind::ShardDispatch, job as u64, t0, t0.elapsed());
+                            if let Some(m) = metrics {
+                                m.shards_done.inc();
+                            }
+                            outstanding.fetch_sub(1, Ordering::Relaxed);
+                            if tx.send(job).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            let next_attempt = attempt + 1;
+                            // Local (non-wire) failures abort the run: a
+                            // broken shard file or output store is not a
+                            // worker problem and cannot requeue away.
+                            let retriable = matches!(e, ShardError::Net { .. });
+                            if !retriable || next_attempt >= opts.max_attempts {
+                                if let Some(m) = metrics {
+                                    m.shards_failed.inc();
+                                }
+                                let mut slot = failed.lock().unwrap();
+                                if slot.is_none() {
+                                    *slot = Some(if retriable {
+                                        ShardError::Exhausted {
+                                            shard: job,
+                                            attempts: next_attempt,
+                                            last: e.to_string(),
+                                        }
+                                    } else {
+                                        e
+                                    });
+                                }
+                                stop.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                            if let Some(m) = metrics {
+                                m.shards_retried.inc();
+                            }
+                            retried.fetch_add(1, Ordering::Relaxed);
+                            trace::record(SpanKind::ShardRetry, job as u64, t0, Duration::ZERO);
+                            queue.lock().unwrap().push_back((job, next_attempt));
+                            consecutive += 1;
+                            if consecutive >= WORKER_FAILURE_LIMIT {
+                                break; // retire this worker; others carry on
+                            }
+                            std::thread::sleep(
+                                opts.backoff
+                                    .saturating_mul(1u32 << attempt.min(4))
+                                    .min(MAX_BACKOFF),
+                            );
+                        }
+                    }
+                }
+            });
+        }
+        drop(tx);
+        // Coordinator side: track completions in manifest order. Output
+        // bytes are already in place (disjoint spans); the ordered walk
+        // is the merge bookkeeping and the ShardMerge span source.
+        let mut done: BTreeSet<usize> = BTreeSet::new();
+        let mut next = 0usize;
+        let mut completed = 0usize;
+        while completed < njobs {
+            match rx.recv() {
+                Ok(job) => {
+                    done.insert(job);
+                    completed += 1;
+                    while done.remove(&next) {
+                        trace::record(SpanKind::ShardMerge, next as u64, Instant::now(), Duration::ZERO);
+                        next += 1;
+                    }
+                }
+                Err(_) => break, // every dispatcher thread exited
+            }
+        }
+    });
+    if let Some(e) = failed.lock().unwrap().take() {
+        return Err(e);
+    }
+    let left = outstanding.load(Ordering::Relaxed);
+    if left > 0 {
+        return Err(ShardError::NoWorkers { queued: left });
+    }
+    Ok(retried.load(Ordering::Relaxed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_workers_accepts_lists_and_rejects_garbage() {
+        let w = parse_workers("127.0.0.1:7070, 127.0.0.1:7071").unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].port(), 7070);
+        assert!(parse_workers("").unwrap().is_empty());
+        assert!(matches!(parse_workers("not-an-addr"), Err(ShardError::Worker(_))));
+    }
+
+    #[test]
+    fn dispatch_requires_workers_and_counts_retries() {
+        let opts = ShardRunOptions::default();
+        assert!(matches!(
+            dispatch(&[], 3, &opts, None, |_, _, _| Ok(())),
+            Err(ShardError::NoWorkers { queued: 3 })
+        ));
+        let workers = parse_workers("127.0.0.1:1").unwrap();
+        // Jobs that always succeed: zero retries.
+        assert_eq!(dispatch(&workers, 4, &opts, None, |_, _, _| Ok(())).unwrap(), 0);
+    }
+
+    #[test]
+    fn dispatch_retries_then_exhausts_with_typed_error() {
+        let metrics = ServiceMetrics::new();
+        let opts = ShardRunOptions {
+            max_attempts: 3,
+            backoff: Duration::from_millis(1),
+            ..ShardRunOptions::default()
+        };
+        // Two fake workers; job 1 fails on every attempt.
+        let workers = parse_workers("127.0.0.1:1,127.0.0.1:2").unwrap();
+        let err = dispatch(&workers, 3, &opts, Some(&metrics), |_, _, job| {
+            if job == 1 {
+                Err(ShardError::Net { shard: job, error: "synthetic".into() })
+            } else {
+                Ok(())
+            }
+        })
+        .unwrap_err();
+        match err {
+            ShardError::Exhausted { shard: 1, attempts: 3, .. } => {}
+            other => panic!("expected Exhausted for shard 1, got {other}"),
+        }
+        assert_eq!(metrics.shards_failed.get(), 1);
+        assert!(metrics.shards_retried.get() >= 2, "each failed attempt before the last requeues");
+    }
+
+    #[test]
+    fn dispatch_recovers_when_one_worker_always_fails() {
+        let metrics = ServiceMetrics::new();
+        let opts = ShardRunOptions {
+            max_attempts: 10,
+            backoff: Duration::from_millis(1),
+            ..ShardRunOptions::default()
+        };
+        let workers = parse_workers("127.0.0.1:1,127.0.0.1:2").unwrap();
+        // Worker 0 fails everything (a dead daemon); worker 1 serves.
+        let retried = dispatch(&workers, 6, &opts, Some(&metrics), |wi, _, job| {
+            if wi == 0 {
+                Err(ShardError::Net { shard: job, error: "dead worker".into() })
+            } else {
+                Ok(())
+            }
+        })
+        .unwrap();
+        assert_eq!(metrics.shards_done.get(), 6, "every job completed on the live worker");
+        assert_eq!(retried, metrics.shards_retried.get());
+        assert!(retried >= 1, "the dead worker's jobs were requeued");
+        assert_eq!(metrics.shards_failed.get(), 0);
+    }
+
+    #[test]
+    fn dispatch_aborts_immediately_on_local_errors() {
+        let metrics = ServiceMetrics::new();
+        let opts =
+            ShardRunOptions { max_attempts: 5, backoff: Duration::from_millis(1), ..Default::default() };
+        let workers = parse_workers("127.0.0.1:1").unwrap();
+        let err = dispatch(&workers, 2, &opts, Some(&metrics), |_, _, job| {
+            if job == 0 {
+                Err(stream_format("torn output store".into()))
+            } else {
+                Ok(())
+            }
+        })
+        .unwrap_err();
+        assert!(matches!(err, ShardError::Stream(_)), "local errors are not retried: {err}");
+        assert_eq!(metrics.shards_retried.get(), 0);
+    }
+}

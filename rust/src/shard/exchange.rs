@@ -1,0 +1,172 @@
+//! Distributed column exchange: the 2-D sharded transform.
+//!
+//! Mirrors the two-pass out-of-core 2-D path
+//! ([`stream_transform_2d`](crate::stream::stream_transform_2d)) with
+//! both passes fanned out over workers:
+//!
+//! - **Stage A (row pass):** each shard's rows get a 1-D `n = cols`
+//!   transform, dispatched per shard exactly like the 1-D coordinator
+//!   lane, written into the shard's disjoint output row range.
+//! - **Barrier:** stage B reads columns, so every row must be done; the
+//!   dispatch call returning IS the barrier.
+//! - **Stage B (column exchange):** the output is re-partitioned into
+//!   column strips of width `strip_w = (budget / (rows * 8)).clamp(1,
+//!   cols)` — the same arithmetic as the single-process stage B, so the
+//!   per-column transforms see identical inputs. Each strip job gathers
+//!   its columns from the shared output store (the "exchange": rows
+//!   live row-major, strips need them column-major), runs one 1-D
+//!   `n = rows` transform per column through its worker, and scatters
+//!   the results back.
+//!
+//! A strip mutates the store only in its final scatter, after every
+//! column came back — a worker dying mid-strip leaves the strip's
+//! columns untouched, so the requeued attempt regathers pristine stage-A
+//! data and bit-equality survives the retry.
+
+use std::net::SocketAddr;
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::coordinator::{connect, dispatch, process_shard, stream_format, ShardRunOptions, ShardRunReport};
+use super::manifest::Manifest;
+use super::ShardError;
+use crate::coordinator::Direction;
+use crate::fft::ProblemSpec;
+use crate::metrics::ServiceMetrics;
+use crate::stream::{budget_bytes, Dims, SliceIo, StreamError, ELEM_BYTES};
+use crate::util::complex::C32;
+
+/// Run a sharded 2-D complex transform across the manifest's shards,
+/// assembling into `out` (`rows × cols`, row-major). Bit-for-bit equal
+/// to the single-process `stream_transform_2d` for any shard count,
+/// budget, or worker count: the row pass applies identical per-row
+/// transforms, and the column pass partitions into the same strips with
+/// the same per-column arithmetic.
+pub fn run_sharded_2d(
+    manifest: &Manifest,
+    manifest_dir: &Path,
+    direction: Direction,
+    out: &mut dyn SliceIo,
+    opts: &ShardRunOptions,
+    metrics: Option<&ServiceMetrics>,
+) -> Result<ShardRunReport, ShardError> {
+    let Dims { rows, cols } = manifest.dims;
+    if rows == 0 {
+        if out.dims().rows != 0 {
+            return Err(stream_format(format!(
+                "output has {} rows, sharded dataset is empty",
+                out.dims().rows
+            )));
+        }
+        return Ok(ShardRunReport { shards: 0, strips: 0, rows: 0, retried: 0 });
+    }
+    // Validate the full 2-D shape up front (power-of-two sides etc.).
+    ProblemSpec::two_d(rows, cols).map_err(|e| ShardError::Stream(StreamError::Fft(e)))?;
+    if out.dims() != manifest.dims {
+        return Err(stream_format(format!(
+            "output is {}x{}, sharded dataset is {rows}x{cols}",
+            out.dims().rows,
+            out.dims().cols
+        )));
+    }
+    let paths = manifest.verify_files(manifest_dir)?;
+
+    // Stage A: per-shard row pass, n = cols.
+    let row_spec = ProblemSpec::one_d(cols)
+        .map_err(|e| ShardError::Stream(StreamError::Fft(e)))?
+        .with_algorithm(opts.algo);
+    let out_mutex = Mutex::new(out);
+    let retried_rows = dispatch(
+        &opts.workers,
+        manifest.shards.len(),
+        opts,
+        metrics,
+        |_, addr, job| {
+            process_shard(&paths[job], job, manifest, &row_spec, cols, direction, addr, opts, &out_mutex)
+        },
+    )?;
+
+    // Stage B: column exchange over strips. Same strip arithmetic as the
+    // single-process stage B so inputs (and hence bits) line up.
+    let budget = if opts.budget == 0 { budget_bytes() } else { opts.budget };
+    let strip_w = (budget / (rows * ELEM_BYTES).max(1)).clamp(1, cols);
+    let nstrips = cols.div_ceil(strip_w);
+    let col_spec = ProblemSpec::one_d(rows)
+        .map_err(|e| ShardError::Stream(StreamError::Fft(e)))?
+        .with_algorithm(opts.algo);
+    let retried_cols = dispatch(&opts.workers, nstrips, opts, metrics, |_, addr, strip| {
+        process_strip(strip, strip_w, rows, cols, &col_spec, direction, addr, opts, &out_mutex)
+    })?;
+
+    Ok(ShardRunReport {
+        shards: manifest.shards.len(),
+        strips: nstrips,
+        rows,
+        retried: retried_rows + retried_cols,
+    })
+}
+
+/// One column strip through one worker: gather the strip's columns from
+/// the shared store, transform each column remotely (batch-1 `n = rows`
+/// requests), scatter back. The gather/scatter row loops match the
+/// single-process stage B element-for-element.
+#[allow(clippy::too_many_arguments)]
+fn process_strip(
+    strip: usize,
+    strip_w: usize,
+    rows: usize,
+    cols: usize,
+    col_spec: &ProblemSpec,
+    direction: Direction,
+    addr: SocketAddr,
+    opts: &ShardRunOptions,
+    out: &Mutex<&mut dyn SliceIo>,
+) -> Result<(), ShardError> {
+    let c0 = strip * strip_w;
+    let w = strip_w.min(cols - c0);
+    let mut client = connect(addr, strip, opts)?;
+    let mut col_re = vec![0f32; w * rows];
+    let mut col_im = vec![0f32; w * rows];
+    let mut seg = vec![C32::ZERO; w];
+    {
+        let mut guard = out.lock().unwrap();
+        for j in 0..rows {
+            guard.read_span(j * cols + c0, &mut seg[..w]).map_err(ShardError::Stream)?;
+            for (c, s) in seg.iter().take(w).enumerate() {
+                col_re[c * rows + j] = s.re;
+                col_im[c * rows + j] = s.im;
+            }
+        }
+    }
+    for c in 0..w {
+        let span = c * rows..(c + 1) * rows;
+        let (o_re, o_im) = client
+            .transform_with_retry(
+                col_spec,
+                direction,
+                &col_re[span.clone()],
+                &col_im[span.clone()],
+                opts.request_retries,
+                opts.backoff,
+            )
+            .map_err(|e| ShardError::Net { shard: strip, error: e.to_string() })?;
+        if o_re.len() != rows || o_im.len() != rows {
+            return Err(ShardError::Net {
+                shard: strip,
+                error: format!("short column reply: {} elems, need {rows}", o_re.len()),
+            });
+        }
+        col_re[span.clone()].copy_from_slice(&o_re);
+        col_im[span].copy_from_slice(&o_im);
+    }
+    {
+        let mut guard = out.lock().unwrap();
+        for j in 0..rows {
+            for (c, s) in seg.iter_mut().take(w).enumerate() {
+                *s = C32::new(col_re[c * rows + j], col_im[c * rows + j]);
+            }
+            guard.write_span(j * cols + c0, &seg[..w]).map_err(ShardError::Stream)?;
+        }
+    }
+    Ok(())
+}

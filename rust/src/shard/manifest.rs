@@ -1,0 +1,588 @@
+//! The `.mfshard` shard manifest: a versioned, checksummed binary index
+//! naming the shard files a dataset was cut into.
+//!
+//! Layout (little-endian throughout, DESIGN.md §14):
+//!
+//! ```text
+//! offset 0   4 bytes   magic   "MFSD"
+//! offset 4   2 bytes   u16     version (= 1)
+//! offset 6   8 bytes   u64     rows   (of the assembled dataset)
+//! offset 14  8 bytes   u64     cols
+//! offset 22  4 bytes   u32     shard count
+//! offset 26  ...       per shard:
+//!                        u64   row0      (first dataset row in shard)
+//!                        u64   rows      (rows in shard, >= 1)
+//!                        u64   checksum  (FNV-1a 64 of the shard file's
+//!                                         payload bytes, header excluded)
+//!                        u16   path_len
+//!                        ...   UTF-8 path, relative to the manifest
+//! footer     8 bytes   u64     FNV-1a 64 of every preceding byte
+//! ```
+//!
+//! Shard row ranges must cover `0..rows` contiguously in file order —
+//! the coordinator merges results strictly in manifest order and relies
+//! on this to make the assembled output bit-identical to the
+//! single-process path. Every class of damage (truncation, flipped
+//! bytes, version skew, missing or corrupted shard files, overlapping
+//! or gapped ranges) is a typed [`ShardError`], never a panic.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use super::ShardError;
+use crate::stream::dataset::{Dims, HEADER_BYTES};
+
+pub(crate) const MAGIC: [u8; 4] = *b"MFSD";
+pub const VERSION: u16 = 1;
+const HEADER_LEN: usize = 4 + 2 + 8 + 8 + 4;
+const ENTRY_FIXED: usize = 8 + 8 + 8 + 2;
+const FOOTER_LEN: usize = 8;
+/// Copy-buffer size for streaming shard payloads (bounds split/merge RAM).
+const COPY_BUF: usize = 4 << 20;
+
+/// One shard: a contiguous row range and the file holding it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// First dataset row stored in this shard.
+    pub row0: usize,
+    /// Rows in this shard (>= 1).
+    pub rows: usize,
+    /// FNV-1a 64 over the shard file's payload bytes (header excluded).
+    pub checksum: u64,
+    /// Shard file path, relative to the manifest's directory.
+    pub path: String,
+}
+
+/// A validated shard manifest: assembled dims plus in-order entries.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub dims: Dims,
+    pub shards: Vec<ShardEntry>,
+}
+
+impl Manifest {
+    /// Serialize to the `.mfshard` byte layout (always valid by
+    /// construction of `self`; validation happens on the read side).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            HEADER_LEN
+                + self.shards.iter().map(|s| ENTRY_FIXED + s.path.len()).sum::<usize>()
+                + FOOTER_LEN,
+        );
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.dims.rows as u64).to_le_bytes());
+        out.extend_from_slice(&(self.dims.cols as u64).to_le_bytes());
+        out.extend_from_slice(&(self.shards.len() as u32).to_le_bytes());
+        for s in &self.shards {
+            out.extend_from_slice(&(s.row0 as u64).to_le_bytes());
+            out.extend_from_slice(&(s.rows as u64).to_le_bytes());
+            out.extend_from_slice(&s.checksum.to_le_bytes());
+            out.extend_from_slice(&(s.path.len() as u16).to_le_bytes());
+            out.extend_from_slice(s.path.as_bytes());
+        }
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse and fully validate a manifest image. Every field is checked
+    /// before use; the checksum is verified over everything before it.
+    pub fn from_bytes(data: &[u8]) -> Result<Manifest, ShardError> {
+        let mut cur = Cursor { data, off: 0 };
+        let magic: [u8; 4] = cur.take(4)?.try_into().unwrap();
+        if magic != MAGIC {
+            return Err(ShardError::BadMagic(magic));
+        }
+        let version = u16::from_le_bytes(cur.take(2)?.try_into().unwrap());
+        if version != VERSION {
+            return Err(ShardError::BadVersion { got: version });
+        }
+        let rows = cur.take_u64()?;
+        let cols = cur.take_u64()?;
+        let rows: usize = rows
+            .try_into()
+            .map_err(|_| ShardError::BadField { field: "rows", got: rows })?;
+        let cols: usize = cols
+            .try_into()
+            .map_err(|_| ShardError::BadField { field: "cols", got: cols })?;
+        let count = u32::from_le_bytes(cur.take(4)?.try_into().unwrap()) as usize;
+        let mut shards = Vec::with_capacity(count.min(1 << 16));
+        for i in 0..count {
+            let row0 = cur.take_u64()?;
+            let nrows = cur.take_u64()?;
+            let checksum = cur.take_u64()?;
+            let path_len = u16::from_le_bytes(cur.take(2)?.try_into().unwrap()) as usize;
+            let path_bytes = cur.take(path_len)?;
+            let path = std::str::from_utf8(path_bytes)
+                .map_err(|_| ShardError::BadField { field: "path-utf8", got: i as u64 })?
+                .to_owned();
+            if path.is_empty() {
+                return Err(ShardError::BadField { field: "path-len", got: 0 });
+            }
+            let row0: usize = row0
+                .try_into()
+                .map_err(|_| ShardError::BadField { field: "shard-row0", got: row0 })?;
+            let nrows: usize = nrows
+                .try_into()
+                .map_err(|_| ShardError::BadField { field: "shard-rows", got: nrows })?;
+            shards.push(ShardEntry { row0, rows: nrows, checksum, path });
+        }
+        let body_end = cur.off;
+        let got = cur.take_u64()?;
+        let expect = fnv1a64(&data[..body_end]);
+        if got != expect {
+            return Err(ShardError::Checksum { expect, got });
+        }
+        if cur.off != data.len() {
+            return Err(ShardError::Trailing { extra: data.len() - cur.off });
+        }
+        let m = Manifest { dims: Dims::new(rows, cols), shards };
+        m.validate_ranges()?;
+        Ok(m)
+    }
+
+    /// Enforce the coverage contract: entries in file order cover
+    /// `0..dims.rows` contiguously, no overlaps, no gaps, no empties.
+    fn validate_ranges(&self) -> Result<(), ShardError> {
+        let mut covered = 0usize;
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.rows == 0 {
+                return Err(ShardError::RowRange { shard: i, detail: "empty shard".into() });
+            }
+            if s.row0 != covered {
+                let kind = if s.row0 < covered { "overlaps previous shard" } else { "gap before shard" };
+                return Err(ShardError::RowRange {
+                    shard: i,
+                    detail: format!("{kind}: starts at row {} but rows 0..{covered} are covered", s.row0),
+                });
+            }
+            covered = covered.checked_add(s.rows).ok_or(ShardError::BadField {
+                field: "shard-rows",
+                got: s.rows as u64,
+            })?;
+        }
+        if covered != self.dims.rows {
+            return Err(ShardError::RowRange {
+                shard: self.shards.len().saturating_sub(1),
+                detail: format!("shards cover {covered} rows, dataset has {}", self.dims.rows),
+            });
+        }
+        Ok(())
+    }
+
+    /// Load and validate a manifest file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest, ShardError> {
+        let data = std::fs::read(path)?;
+        Manifest::from_bytes(&data)
+    }
+
+    /// Atomically write the manifest (temp file + rename, the wisdom
+    /// idiom, so a crashed writer never leaves a torn index).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), ShardError> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_bytes())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Absolute-or-joined path of shard `i` relative to the manifest dir.
+    pub fn shard_path(&self, manifest_dir: &Path, i: usize) -> PathBuf {
+        let p = Path::new(&self.shards[i].path);
+        if p.is_absolute() {
+            p.to_path_buf()
+        } else {
+            manifest_dir.join(p)
+        }
+    }
+
+    /// Verify shard file `i`: exists, header dims match the manifest row
+    /// range, payload checksum matches. Returns the resolved path.
+    pub fn verify_shard(&self, manifest_dir: &Path, i: usize) -> Result<PathBuf, ShardError> {
+        let entry = &self.shards[i];
+        let path = self.shard_path(manifest_dir, i);
+        let file = File::open(&path).map_err(|_| ShardError::MissingShard {
+            shard: i,
+            path: path.display().to_string(),
+        })?;
+        let mut reader = BufReader::new(file);
+        let mut h = [0u8; HEADER_BYTES];
+        reader.read_exact(&mut h).map_err(|_| ShardError::ShardDims {
+            shard: i,
+            detail: "file shorter than the 24-byte dataset header".into(),
+        })?;
+        let dims = Dims::decode(&h).map_err(ShardError::Stream)?;
+        if dims.rows != entry.rows || dims.cols != self.dims.cols {
+            return Err(ShardError::ShardDims {
+                shard: i,
+                detail: format!(
+                    "file is {}x{}, manifest expects {}x{}",
+                    dims.rows, dims.cols, entry.rows, self.dims.cols
+                ),
+            });
+        }
+        let payload = dims.payload_bytes().map_err(ShardError::Stream)?;
+        let got = checksum_reader(&mut reader, payload, i)?;
+        if got != entry.checksum {
+            return Err(ShardError::ShardChecksum { shard: i, expect: entry.checksum, got });
+        }
+        Ok(path)
+    }
+
+    /// Verify every shard file; the distributed-run preflight.
+    pub fn verify_files(&self, manifest_dir: &Path) -> Result<Vec<PathBuf>, ShardError> {
+        (0..self.shards.len()).map(|i| self.verify_shard(manifest_dir, i)).collect()
+    }
+}
+
+/// Cut `input` (a `.mfft` dataset) into `count` row-contiguous shard
+/// files next to `manifest_path`, writing the manifest last. Payload
+/// bytes are copied verbatim, so `merge` reassembles bit-identically.
+/// Returns the manifest.
+pub fn split(
+    input: impl AsRef<Path>,
+    manifest_path: impl AsRef<Path>,
+    count: usize,
+) -> Result<Manifest, ShardError> {
+    let input = input.as_ref();
+    let manifest_path = manifest_path.as_ref();
+    let mut reader = BufReader::new(File::open(input)?);
+    let mut h = [0u8; HEADER_BYTES];
+    reader
+        .read_exact(&mut h)
+        .map_err(|_| ShardError::Stream(crate::stream::StreamError::Format(
+            "input shorter than the 24-byte header".into(),
+        )))?;
+    let dims = Dims::decode(&h).map_err(ShardError::Stream)?;
+    if count == 0 {
+        return Err(ShardError::BadField { field: "shard-count", got: 0 });
+    }
+    if dims.rows == 0 || count > dims.rows {
+        return Err(ShardError::RowRange {
+            shard: 0,
+            detail: format!("cannot cut {} rows into {count} non-empty shards", dims.rows),
+        });
+    }
+    let dir = manifest_dir(manifest_path);
+    let stem = manifest_path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "dataset".into());
+    let base = dims.rows / count;
+    let extra = dims.rows % count;
+    let mut shards = Vec::with_capacity(count);
+    let mut row0 = 0usize;
+    let mut buf = vec![0u8; COPY_BUF];
+    for i in 0..count {
+        let rows = base + usize::from(i < extra);
+        let name = format!("{stem}.s{i}.mfft");
+        let shard_file = dir.join(&name);
+        let mut w = BufWriter::new(File::create(&shard_file)?);
+        w.write_all(&Dims::new(rows, dims.cols).encode())?;
+        let mut remaining = Dims::new(rows, dims.cols).payload_bytes().map_err(ShardError::Stream)?;
+        let mut sum = FNV_OFFSET;
+        while remaining > 0 {
+            let take = remaining.min(buf.len());
+            reader.read_exact(&mut buf[..take]).map_err(|_| {
+                ShardError::Stream(crate::stream::StreamError::Format(
+                    "truncated payload (fewer rows than the header claims)".into(),
+                ))
+            })?;
+            sum = fnv1a64_continue(sum, &buf[..take]);
+            w.write_all(&buf[..take])?;
+            remaining -= take;
+        }
+        w.flush()?;
+        shards.push(ShardEntry { row0, rows, checksum: sum, path: name });
+        row0 += rows;
+    }
+    let manifest = Manifest { dims, shards };
+    manifest.save(manifest_path)?;
+    Ok(manifest)
+}
+
+/// Reassemble a sharded dataset into one `.mfft` file, verifying every
+/// shard's dims and payload checksum on the way through. Bit-identical
+/// to the pre-split input by construction (verbatim payload copy).
+pub fn merge(
+    manifest_path: impl AsRef<Path>,
+    output: impl AsRef<Path>,
+) -> Result<Manifest, ShardError> {
+    let manifest_path = manifest_path.as_ref();
+    let manifest = Manifest::load(manifest_path)?;
+    let dir = manifest_dir(manifest_path);
+    let mut w = BufWriter::new(File::create(output.as_ref())?);
+    w.write_all(&manifest.dims.encode())?;
+    let mut buf = vec![0u8; COPY_BUF];
+    for (i, entry) in manifest.shards.iter().enumerate() {
+        let path = manifest.shard_path(&dir, i);
+        let file = File::open(&path).map_err(|_| ShardError::MissingShard {
+            shard: i,
+            path: path.display().to_string(),
+        })?;
+        let mut reader = BufReader::new(file);
+        let mut h = [0u8; HEADER_BYTES];
+        reader.read_exact(&mut h).map_err(|_| ShardError::ShardDims {
+            shard: i,
+            detail: "file shorter than the 24-byte dataset header".into(),
+        })?;
+        let dims = Dims::decode(&h).map_err(ShardError::Stream)?;
+        if dims.rows != entry.rows || dims.cols != manifest.dims.cols {
+            return Err(ShardError::ShardDims {
+                shard: i,
+                detail: format!(
+                    "file is {}x{}, manifest expects {}x{}",
+                    dims.rows, dims.cols, entry.rows, manifest.dims.cols
+                ),
+            });
+        }
+        let mut remaining = dims.payload_bytes().map_err(ShardError::Stream)?;
+        let mut sum = FNV_OFFSET;
+        while remaining > 0 {
+            let take = remaining.min(buf.len());
+            reader.read_exact(&mut buf[..take]).map_err(|_| ShardError::ShardDims {
+                shard: i,
+                detail: "truncated shard payload".into(),
+            })?;
+            sum = fnv1a64_continue(sum, &buf[..take]);
+            w.write_all(&buf[..take])?;
+            remaining -= take;
+        }
+        if sum != entry.checksum {
+            return Err(ShardError::ShardChecksum { shard: i, expect: entry.checksum, got: sum });
+        }
+    }
+    w.flush()?;
+    Ok(manifest)
+}
+
+/// Directory the manifest lives in, for resolving relative shard paths.
+pub(crate) fn manifest_dir(manifest_path: &Path) -> PathBuf {
+    manifest_path.parent().map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from("."))
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ShardError> {
+        if self.off + n > self.data.len() {
+            return Err(ShardError::Truncated { need: self.off + n, got: self.data.len() });
+        }
+        let s = &self.data[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn take_u64(&mut self) -> Result<u64, ShardError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+pub(crate) fn fnv1a64(data: &[u8]) -> u64 {
+    fnv1a64_continue(FNV_OFFSET, data)
+}
+
+fn fnv1a64_continue(mut h: u64, data: &[u8]) -> u64 {
+    for &b in data {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::write_dataset;
+    use crate::util::complex::C32;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "memfft-shard-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_data(rows: usize, cols: usize) -> Vec<C32> {
+        (0..rows * cols)
+            .map(|k| C32::new((k as f32).sin() * 3.0, (k as f32 * 0.7).cos() - 0.5))
+            .collect()
+    }
+
+    fn sample_manifest() -> Manifest {
+        Manifest {
+            dims: Dims::new(10, 8),
+            shards: vec![
+                ShardEntry { row0: 0, rows: 4, checksum: 11, path: "a.s0.mfft".into() },
+                ShardEntry { row0: 4, rows: 3, checksum: 22, path: "a.s1.mfft".into() },
+                ShardEntry { row0: 7, rows: 3, checksum: 33, path: "a.s2.mfft".into() },
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_round_trips() {
+        let m = sample_manifest();
+        let back = Manifest::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(back, m);
+        let empty = Manifest { dims: Dims::new(0, 16), shards: vec![] };
+        assert_eq!(Manifest::from_bytes(&empty.to_bytes()).unwrap(), empty);
+    }
+
+    #[test]
+    fn every_truncation_is_typed() {
+        let bytes = sample_manifest().to_bytes();
+        for cut in 0..bytes.len() {
+            match Manifest::from_bytes(&bytes[..cut]) {
+                Err(ShardError::Truncated { .. }) => {}
+                other => panic!("cut at {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_flipped_byte_is_typed() {
+        let bytes = sample_manifest().to_bytes();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0xa5;
+            match Manifest::from_bytes(&bad) {
+                Ok(m) => panic!("flip at {i} silently accepted: {m:?}"),
+                Err(
+                    ShardError::BadMagic(_)
+                    | ShardError::BadVersion { .. }
+                    | ShardError::BadField { .. }
+                    | ShardError::Checksum { .. }
+                    | ShardError::Truncated { .. }
+                    | ShardError::Trailing { .. }
+                    | ShardError::RowRange { .. },
+                ) => {}
+                Err(other) => panic!("flip at {i}: unexpected error class {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = sample_manifest().to_bytes();
+        bytes.push(0);
+        assert!(matches!(Manifest::from_bytes(&bytes), Err(ShardError::Trailing { extra: 1 })));
+    }
+
+    #[test]
+    fn overlap_and_gap_ranges_rejected() {
+        let mut m = sample_manifest();
+        m.shards[1].row0 = 3; // overlaps shard 0
+        match Manifest::from_bytes(&m.to_bytes()) {
+            Err(ShardError::RowRange { shard: 1, detail }) => {
+                assert!(detail.contains("overlap"), "{detail}")
+            }
+            other => panic!("expected RowRange, got {other:?}"),
+        }
+        let mut m = sample_manifest();
+        m.shards[1].row0 = 5; // gap after shard 0
+        match Manifest::from_bytes(&m.to_bytes()) {
+            Err(ShardError::RowRange { shard: 1, detail }) => {
+                assert!(detail.contains("gap"), "{detail}")
+            }
+            other => panic!("expected RowRange, got {other:?}"),
+        }
+        let mut m = sample_manifest();
+        m.shards[2].rows = 2; // covers 9 of 10 rows
+        assert!(matches!(Manifest::from_bytes(&m.to_bytes()), Err(ShardError::RowRange { .. })));
+        let mut m = sample_manifest();
+        m.shards[1].rows = 0;
+        assert!(matches!(Manifest::from_bytes(&m.to_bytes()), Err(ShardError::RowRange { .. })));
+    }
+
+    #[test]
+    fn split_merge_is_bit_identical() {
+        let dir = temp_dir("roundtrip");
+        let (rows, cols) = (11, 16);
+        let data = sample_data(rows, cols);
+        let input = dir.join("in.mfft");
+        write_dataset(&input, rows, cols, &data).unwrap();
+        for count in [1usize, 2, 5, 11] {
+            let mpath = dir.join(format!("c{count}.mfshard"));
+            let m = split(&input, &mpath, count).unwrap();
+            assert_eq!(m.shards.len(), count);
+            assert_eq!(Manifest::load(&mpath).unwrap(), m);
+            m.verify_files(&dir).unwrap();
+            let out = dir.join(format!("c{count}.out.mfft"));
+            merge(&mpath, &out).unwrap();
+            assert_eq!(
+                std::fs::read(&input).unwrap(),
+                std::fs::read(&out).unwrap(),
+                "merge of {count} shards must be bit-identical"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn split_rejects_bad_counts() {
+        let dir = temp_dir("counts");
+        let input = dir.join("in.mfft");
+        write_dataset(&input, 3, 4, &sample_data(3, 4)).unwrap();
+        assert!(matches!(
+            split(&input, dir.join("z.mfshard"), 0),
+            Err(ShardError::BadField { field: "shard-count", .. })
+        ));
+        assert!(matches!(split(&input, dir.join("z.mfshard"), 4), Err(ShardError::RowRange { .. })));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_and_corrupted_shard_files_are_typed() {
+        let dir = temp_dir("damage");
+        let input = dir.join("in.mfft");
+        write_dataset(&input, 6, 8, &sample_data(6, 8)).unwrap();
+        let mpath = dir.join("d.mfshard");
+        let m = split(&input, &mpath, 3).unwrap();
+
+        // Missing shard file.
+        let victim = m.shard_path(&dir, 1);
+        let saved = std::fs::read(&victim).unwrap();
+        std::fs::remove_file(&victim).unwrap();
+        assert!(matches!(m.verify_shard(&dir, 1), Err(ShardError::MissingShard { shard: 1, .. })));
+        assert!(matches!(
+            merge(&mpath, dir.join("x.mfft")),
+            Err(ShardError::MissingShard { shard: 1, .. })
+        ));
+
+        // Flipped payload byte → checksum mismatch.
+        let mut bad = saved.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xa5;
+        std::fs::write(&victim, &bad).unwrap();
+        assert!(matches!(m.verify_shard(&dir, 1), Err(ShardError::ShardChecksum { shard: 1, .. })));
+        assert!(matches!(
+            merge(&mpath, dir.join("x.mfft")),
+            Err(ShardError::ShardChecksum { shard: 1, .. })
+        ));
+
+        // Wrong dims in the shard header.
+        let wrong = Dims::new(5, 8).encode();
+        let mut bad = saved.clone();
+        bad[..HEADER_BYTES].copy_from_slice(&wrong);
+        std::fs::write(&victim, &bad).unwrap();
+        assert!(matches!(m.verify_shard(&dir, 1), Err(ShardError::ShardDims { shard: 1, .. })));
+
+        // Restored file verifies clean again.
+        std::fs::write(&victim, &saved).unwrap();
+        m.verify_files(&dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

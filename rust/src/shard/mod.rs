@@ -1,0 +1,148 @@
+//! Sharded multi-process datasets (DESIGN.md §14).
+//!
+//! The paper partitions data by size so each piece fits the fast memory
+//! tier; the stream layer (DESIGN.md §8) applied that to one process and
+//! the filesystem. This subsystem takes the next step — ROADMAP item 3 —
+//! and splits a dataset *row-wise across shard files*, fanning the work
+//! out to independent worker **processes** that speak the PR-6 wire
+//! protocol, the direction of Hadoop+CUDA FFT clusters (arXiv 1407.6915):
+//!
+//! - [`manifest`] — the versioned, checksummed `.mfshard` shard index
+//!   (dataset dims + per-shard row ranges, file names and payload
+//!   checksums), with `split` / `merge` that cut a `.mfft` into shards
+//!   and reassemble it bit-identically;
+//! - [`worker`] — spawned local `memfft serve` worker processes on
+//!   loopback ports (handshake via the daemon's ready line);
+//! - [`coordinator`] — per-shard job dispatch over [`crate::net::NetClient`]
+//!   with capped retry/requeue and strict manifest-order merge, so the
+//!   sharded output is bit-for-bit equal to the single-process
+//!   `stream` path;
+//! - [`exchange`] — the distributed transpose for 2-D problems: row-pass
+//!   each shard, exchange budget-sized column strips through the
+//!   assembled [`crate::stream::SliceIo`] store, column-pass, scatter
+//!   back — bit-equal to `stream_transform_2d`.
+//!
+//! Observability: shard dispatch / retry / merge spans land in the obs
+//! trace ring (`SpanKind::ShardDispatch` ..) and the
+//! `shards_done` / `shards_retried` / `shards_failed` counters in
+//! [`crate::metrics::ServiceMetrics`].
+
+pub mod coordinator;
+pub mod exchange;
+pub mod manifest;
+pub mod worker;
+
+use std::fmt;
+
+use crate::stream::StreamError;
+
+pub use coordinator::{run_sharded, ShardRunOptions, ShardRunReport};
+pub use exchange::run_sharded_2d;
+pub use manifest::{merge, split, Manifest, ShardEntry};
+pub use worker::{spawn_local_workers, LocalWorker};
+
+/// Typed failure of the shard subsystem. Manifest damage classes mirror
+/// the wisdom-file model (every byte of damage is a typed error, never a
+/// panic); dispatch failures carry the shard and attempt history.
+#[derive(Debug)]
+pub enum ShardError {
+    /// Filesystem error reading or writing a manifest or shard file.
+    Io(std::io::Error),
+    /// The manifest ends before a complete field.
+    Truncated { need: usize, got: usize },
+    /// Extra bytes follow the manifest checksum.
+    Trailing { extra: usize },
+    /// First four bytes are not the `.mfshard` magic.
+    BadMagic([u8; 4]),
+    /// Recognized magic, unknown version.
+    BadVersion { got: u16 },
+    /// A manifest field holds an invalid value.
+    BadField { field: &'static str, got: u64 },
+    /// Manifest index checksum mismatch — flipped or rewritten bytes.
+    Checksum { expect: u64, got: u64 },
+    /// Shard row ranges overlap, leave gaps, or exceed the dataset dims.
+    RowRange { shard: usize, detail: String },
+    /// A shard file named by the manifest is missing or unreadable.
+    MissingShard { shard: usize, path: String },
+    /// A shard file's payload does not match its manifest checksum.
+    ShardChecksum { shard: usize, expect: u64, got: u64 },
+    /// A shard file's dims disagree with its manifest row range.
+    ShardDims { shard: usize, detail: String },
+    /// Underlying dataset / sink failure.
+    Stream(StreamError),
+    /// A wire exchange with a worker failed (carried as the retry cause).
+    Net { shard: usize, error: String },
+    /// A shard (or exchange strip) exhausted its dispatch attempts.
+    Exhausted { shard: usize, attempts: u32, last: String },
+    /// Every worker died with shards still queued.
+    NoWorkers { queued: usize },
+    /// Worker-process spawn or handshake failure.
+    Worker(String),
+}
+
+impl fmt::Display for ShardError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShardError::Io(e) => write!(f, "shard io: {e}"),
+            ShardError::Truncated { need, got } => {
+                write!(f, "truncated shard manifest: need {need} bytes, got {got}")
+            }
+            ShardError::Trailing { extra } => {
+                write!(f, "{extra} trailing bytes after shard-manifest checksum")
+            }
+            ShardError::BadMagic(m) => write!(f, "bad shard-manifest magic {m:02x?}"),
+            ShardError::BadVersion { got } => {
+                write!(f, "shard-manifest version {got} (this build reads {})", manifest::VERSION)
+            }
+            ShardError::BadField { field, got } => {
+                write!(f, "invalid shard-manifest field {field}={got}")
+            }
+            ShardError::Checksum { expect, got } => {
+                write!(f, "shard-manifest checksum mismatch: expect {expect:#x}, got {got:#x}")
+            }
+            ShardError::RowRange { shard, detail } => {
+                write!(f, "shard {shard} row range: {detail}")
+            }
+            ShardError::MissingShard { shard, path } => {
+                write!(f, "shard {shard} file missing or unreadable: {path}")
+            }
+            ShardError::ShardChecksum { shard, expect, got } => {
+                write!(f, "shard {shard} payload checksum mismatch: expect {expect:#x}, got {got:#x}")
+            }
+            ShardError::ShardDims { shard, detail } => {
+                write!(f, "shard {shard} dims: {detail}")
+            }
+            ShardError::Stream(e) => write!(f, "shard stream: {e}"),
+            ShardError::Net { shard, error } => write!(f, "shard {shard} wire exchange: {error}"),
+            ShardError::Exhausted { shard, attempts, last } => {
+                write!(f, "shard {shard} failed after {attempts} attempts (last: {last})")
+            }
+            ShardError::NoWorkers { queued } => {
+                write!(f, "all workers died with {queued} shard jobs unfinished")
+            }
+            ShardError::Worker(msg) => write!(f, "shard worker: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ShardError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ShardError::Io(e) => Some(e),
+            ShardError::Stream(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ShardError {
+    fn from(e: std::io::Error) -> Self {
+        ShardError::Io(e)
+    }
+}
+
+impl From<StreamError> for ShardError {
+    fn from(e: StreamError) -> Self {
+        ShardError::Stream(e)
+    }
+}

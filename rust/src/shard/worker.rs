@@ -1,0 +1,144 @@
+//! Spawned local shard workers: `memfft serve` child processes on
+//! loopback ports.
+//!
+//! Each worker is a full daemon (PR-6 wire protocol) started with
+//! `--listen 127.0.0.1:0`; the OS picks the port and the child announces
+//! it on stdout with its ready line, which we parse for the handshake.
+//! The child's stdin is held open — the daemon drains when stdin closes
+//! or a `shutdown` line arrives, which is exactly the graceful path
+//! [`LocalWorker::shutdown`] drives. [`LocalWorker::kill`] is the
+//! ungraceful one (SIGKILL) the retry tests use to lose a worker
+//! mid-run.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::SocketAddr;
+use std::path::Path;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+
+use super::ShardError;
+
+/// Prefix of the daemon's stdout handshake line (`main.rs::cmd_serve`).
+const READY_PREFIX: &str = "memfft daemon ready on ";
+
+/// A spawned `memfft serve` child on a loopback port.
+pub struct LocalWorker {
+    child: Child,
+    /// Held open so the daemon keeps serving; dropped to drain it.
+    stdin: Option<ChildStdin>,
+    stdout: Option<BufReader<ChildStdout>>,
+    addr: SocketAddr,
+}
+
+impl LocalWorker {
+    /// Spawn one worker from the given `memfft` binary and wait for its
+    /// ready line. `threads` follows the serve flag (0 = all cores).
+    pub fn spawn(exe: &Path, method: &str, threads: usize) -> Result<LocalWorker, ShardError> {
+        let mut child = Command::new(exe)
+            .args([
+                "serve",
+                "--listen",
+                "127.0.0.1:0",
+                "--method",
+                method,
+                "--threads",
+                &threads.to_string(),
+            ])
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .map_err(|e| ShardError::Worker(format!("spawn {}: {e}", exe.display())))?;
+        let stdin = child.stdin.take();
+        let mut stdout = BufReader::new(child.stdout.take().expect("stdout was piped"));
+        let addr = match read_ready_line(&mut stdout) {
+            Ok(addr) => addr,
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(e);
+            }
+        };
+        Ok(LocalWorker { child, stdin, stdout: Some(stdout), addr })
+    }
+
+    /// The loopback address the worker is serving on.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// SIGKILL the worker — no drain, no goodbye. The retry machinery
+    /// must survive exactly this.
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        self.stdin = None;
+        self.stdout = None;
+    }
+
+    /// Graceful drain: send the `shutdown` line, close stdin, and reap.
+    pub fn shutdown(mut self) {
+        if let Some(mut stdin) = self.stdin.take() {
+            let _ = stdin.write_all(b"shutdown\n");
+        }
+        // Drain remaining stdout so the child never blocks on a full
+        // pipe while printing its drain report.
+        if let Some(mut out) = self.stdout.take() {
+            let mut rest = String::new();
+            let _ = std::io::Read::read_to_string(&mut out, &mut rest);
+        }
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for LocalWorker {
+    fn drop(&mut self) {
+        // Never leak a daemon: if the worker was neither killed nor
+        // gracefully shut down, take it down hard now.
+        if self.stdin.is_some() || self.stdout.is_some() {
+            let _ = self.child.kill();
+            let _ = self.child.wait();
+        }
+    }
+}
+
+fn read_ready_line(stdout: &mut BufReader<ChildStdout>) -> Result<SocketAddr, ShardError> {
+    let mut seen = Vec::new();
+    loop {
+        let mut line = String::new();
+        let n = stdout
+            .read_line(&mut line)
+            .map_err(|e| ShardError::Worker(format!("reading worker stdout: {e}")))?;
+        if n == 0 {
+            return Err(ShardError::Worker(format!(
+                "worker exited before its ready line; output: {}",
+                seen.join(" | ")
+            )));
+        }
+        let line = line.trim_end();
+        if let Some(rest) = line.strip_prefix(READY_PREFIX) {
+            let addr_str = rest.split_whitespace().next().unwrap_or("");
+            return addr_str.parse().map_err(|_| {
+                ShardError::Worker(format!("unparseable worker address in ready line: {line}"))
+            });
+        }
+        seen.push(line.to_string());
+    }
+}
+
+/// Spawn `count` local workers from the given `memfft` binary. On any
+/// failure the already-started workers are torn down before returning.
+pub fn spawn_local_workers(
+    exe: &Path,
+    count: usize,
+    method: &str,
+    threads: usize,
+) -> Result<Vec<LocalWorker>, ShardError> {
+    if count == 0 {
+        return Err(ShardError::Worker("cannot spawn 0 workers".into()));
+    }
+    let mut workers = Vec::with_capacity(count);
+    for _ in 0..count {
+        workers.push(LocalWorker::spawn(exe, method, threads)?);
+    }
+    Ok(workers)
+}

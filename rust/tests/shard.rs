@@ -1,0 +1,441 @@
+//! Acceptance battery for the sharded multi-process subsystem (ISSUE 10 /
+//! DESIGN.md §14).
+//!
+//! Proves, over real loopback daemons:
+//! - sharded 1-D c2c (both directions) and r2c runs are bit-for-bit equal
+//!   to the single-process in-memory reference for shard counts {1,2,5} ×
+//!   budgets {1-row, 3-row, all} × worker thread counts {1,2,7};
+//! - the distributed 2-D column exchange is bit-equal to the one-shot 2-D
+//!   transform across the same shard/budget axes;
+//! - losing a worker — a connection-dropping socket, a refused port, or a
+//!   real `memfft serve` child killed with SIGKILL — requeues its jobs
+//!   onto the survivors and the final output is still bit-identical, with
+//!   `shards_retried` counting every requeue and `shards_failed` staying
+//!   zero;
+//! - a run with no surviving worker fails with a typed error
+//!   (`Exhausted` / `NoWorkers`), never a panic or a hang;
+//! - `split` / `merge` round-trip a dataset bit-identically through the
+//!   checksummed `.mfshard` manifest (damage classes are covered by the
+//!   manifest unit battery).
+
+use std::net::{SocketAddr, TcpListener};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use memfft::config::ServiceConfig;
+use memfft::coordinator::{backend, Direction, FftService};
+use memfft::fft::{Algorithm, Domain, ProblemSpec};
+use memfft::metrics::ServiceMetrics;
+use memfft::net::NetServer;
+use memfft::shard::{
+    merge, run_sharded, run_sharded_2d, spawn_local_workers, split, ShardError, ShardRunOptions,
+};
+use memfft::stream::{
+    bitwise_mismatches, read_dataset, transform_2d_in_memory, transform_in_memory,
+    transform_in_memory_spec, write_dataset, Dims, MemIo, ELEM_BYTES,
+};
+use memfft::util::Xoshiro256;
+use memfft::C32;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "memfft-shardtest-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn native_cfg(threads: usize) -> ServiceConfig {
+    let mut cfg = ServiceConfig {
+        method: "native".into(),
+        workers: 2,
+        threads,
+        ..Default::default()
+    };
+    cfg.net.listen = "127.0.0.1:0".into();
+    cfg
+}
+
+/// One in-process worker daemon on a loopback port.
+fn start_worker(threads: usize) -> NetServer {
+    NetServer::start(FftService::start(native_cfg(threads))).expect("bind loopback")
+}
+
+fn run_opts(workers: Vec<SocketAddr>, budget: usize) -> ShardRunOptions {
+    ShardRunOptions { workers, budget, backoff: Duration::from_millis(1), ..Default::default() }
+}
+
+/// Write a seeded random `rows × cols` dataset and return its data.
+fn make_dataset(dir: &Path, rows: usize, cols: usize, seed: u64) -> (PathBuf, Vec<C32>) {
+    let mut rng = Xoshiro256::seeded(seed);
+    let re = rng.real_vec(rows * cols);
+    let im = rng.real_vec(rows * cols);
+    let data: Vec<C32> = re.iter().zip(&im).map(|(&a, &b)| C32::new(a, b)).collect();
+    let path = dir.join("in.mfft");
+    write_dataset(&path, rows, cols, &data).unwrap();
+    (path, data)
+}
+
+/// Single-process per-row reference: the same native backend the stream
+/// path (and a native worker daemon) executes through.
+fn oracle_rows(dims: Dims, data: &[C32], domain: Domain, direction: Direction) -> Vec<C32> {
+    let cfg = ServiceConfig { method: "native".into(), ..Default::default() };
+    let mut reference = backend::for_config(&cfg);
+    match domain {
+        Domain::RealToComplex => {
+            let row_spec = ProblemSpec::real(dims.cols).unwrap();
+            transform_in_memory_spec(&mut *reference, dims, data, &row_spec, direction).unwrap()
+        }
+        _ => transform_in_memory(&mut *reference, dims, data, direction).unwrap(),
+    }
+}
+
+/// A loopback address whose listener is already gone: connections are
+/// refused instantly — the cheapest "worker died" stand-in.
+fn refused_addr() -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    listener.local_addr().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// split / merge through the CLI-visible module API
+
+#[test]
+fn split_then_merge_round_trips_bit_identically() {
+    let dir = temp_dir("roundtrip");
+    let (input, _) = make_dataset(&dir, 13, 32, 0x5EED);
+    let mpath = dir.join("set.mfshard");
+    let m = split(&input, &mpath, 5).unwrap();
+    assert_eq!(m.shards.len(), 5);
+    assert_eq!(m.dims, Dims::new(13, 32));
+    let out = dir.join("back.mfft");
+    merge(&mpath, &out).unwrap();
+    assert_eq!(
+        std::fs::read(&input).unwrap(),
+        std::fs::read(&out).unwrap(),
+        "merge must reassemble the split input byte for byte"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// the equivalence matrix: shards × budgets × threads × descriptors
+
+#[test]
+fn sharded_rows_match_single_process_bits_across_the_matrix() {
+    let dir = temp_dir("matrix1d");
+    let (rows, cols) = (10usize, 64);
+    let (input, data) = make_dataset(&dir, rows, cols, 0xA11CE);
+    let dims = Dims::new(rows, cols);
+    let cases = [
+        (Domain::ComplexToComplex, Direction::Forward),
+        (Domain::ComplexToComplex, Direction::Inverse),
+        (Domain::RealToComplex, Direction::Forward),
+    ];
+    for threads in [1usize, 2, 7] {
+        let w1 = start_worker(threads);
+        let w2 = start_worker(threads);
+        let workers = vec![w1.local_addr(), w2.local_addr()];
+        for nshards in [1usize, 2, 5] {
+            let mpath = dir.join(format!("t{threads}-s{nshards}.mfshard"));
+            let manifest = split(&input, &mpath, nshards).unwrap();
+            // 1 row per chunk, 3 rows per chunk, whole shard at once.
+            for budget in [cols * ELEM_BYTES, 3 * cols * ELEM_BYTES, 0] {
+                for (domain, direction) in cases {
+                    let h_out =
+                        if domain == Domain::RealToComplex { cols / 2 + 1 } else { cols };
+                    let mut io = MemIo::new(Dims::new(rows, h_out)).unwrap();
+                    let opts = run_opts(workers.clone(), budget);
+                    let report =
+                        run_sharded(&manifest, &dir, domain, direction, &mut io, &opts, None)
+                            .unwrap();
+                    assert_eq!(report.shards, nshards);
+                    assert_eq!(report.rows, rows);
+                    let want = oracle_rows(dims, &data, domain, direction);
+                    assert_eq!(
+                        bitwise_mismatches(&want, io.data()),
+                        0,
+                        "threads={threads} shards={nshards} budget={budget} \
+                         {domain:?} {direction:?}: sharded bits diverged"
+                    );
+                }
+            }
+        }
+        w1.shutdown();
+        w2.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sharded_2d_column_exchange_matches_one_shot_bits() {
+    let dir = temp_dir("matrix2d");
+    let (rows, cols) = (16usize, 64);
+    let (input, data) = make_dataset(&dir, rows, cols, 0x2D2D);
+    let dims = Dims::new(rows, cols);
+    for threads in [1usize, 7] {
+        let w1 = start_worker(threads);
+        let w2 = start_worker(threads);
+        let workers = vec![w1.local_addr(), w2.local_addr()];
+        for nshards in [1usize, 2, 5] {
+            let mpath = dir.join(format!("t{threads}-s{nshards}.mfshard"));
+            let manifest = split(&input, &mpath, nshards).unwrap();
+            for budget in [cols * ELEM_BYTES, 3 * cols * ELEM_BYTES, 0] {
+                for direction in [Direction::Forward, Direction::Inverse] {
+                    let mut io = MemIo::new(dims).unwrap();
+                    let opts = run_opts(workers.clone(), budget);
+                    let report =
+                        run_sharded_2d(&manifest, &dir, direction, &mut io, &opts, None).unwrap();
+                    assert_eq!(report.shards, nshards);
+                    assert!(report.strips >= 1, "stage B must have run");
+                    let want =
+                        transform_2d_in_memory(dims, &data, direction, Algorithm::Auto).unwrap();
+                    assert_eq!(
+                        bitwise_mismatches(&want, io.data()),
+                        0,
+                        "threads={threads} shards={nshards} budget={budget} {direction:?}: \
+                         2-D sharded bits diverged"
+                    );
+                }
+            }
+        }
+        w1.shutdown();
+        w2.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// worker loss: requeue to a bit-identical finish, typed errors when doomed
+
+#[test]
+fn connection_dropping_worker_requeues_and_bits_survive() {
+    let dir = temp_dir("dropworker");
+    let (rows, cols) = (12usize, 64);
+    let (input, data) = make_dataset(&dir, rows, cols, 0xD34D);
+    let dims = Dims::new(rows, cols);
+    // One shard per row: plenty of jobs for the dead worker to fumble.
+    let manifest = split(&input, dir.join("set.mfshard"), rows).unwrap();
+
+    let live = start_worker(1);
+    // A worker that accepts the TCP handshake, then slams the door: every
+    // request on it dies mid-wire, not at connect.
+    let dead = TcpListener::bind("127.0.0.1:0").unwrap();
+    let dead_addr = dead.local_addr().unwrap();
+    std::thread::spawn(move || {
+        for conn in dead.incoming() {
+            drop(conn);
+        }
+    });
+
+    let metrics = ServiceMetrics::new();
+    let opts = ShardRunOptions {
+        workers: vec![dead_addr, live.local_addr()],
+        request_retries: 0, // fail fast: every wire death requeues the job
+        max_attempts: 20,
+        backoff: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let mut io = MemIo::new(dims).unwrap();
+    let report = run_sharded(
+        &manifest,
+        &dir,
+        Domain::ComplexToComplex,
+        Direction::Forward,
+        &mut io,
+        &opts,
+        Some(&metrics),
+    )
+    .unwrap();
+    assert!(report.retried >= 1, "the dead worker's jobs must requeue");
+    assert_eq!(report.retried, metrics.shards_retried.get());
+    assert_eq!(metrics.shards_done.get(), rows as u64);
+    assert_eq!(metrics.shards_failed.get(), 0);
+    let want = oracle_rows(dims, &data, Domain::ComplexToComplex, Direction::Forward);
+    assert_eq!(bitwise_mismatches(&want, io.data()), 0, "retried run must stay bit-identical");
+    live.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn doomed_runs_fail_typed_not_hang() {
+    let dir = temp_dir("doomed");
+    let (input, _) = make_dataset(&dir, 2, 32, 0xBAD);
+    let manifest = split(&input, dir.join("one.mfshard"), 1).unwrap();
+    let dims_out = Dims::new(2, 32);
+
+    // One job, one refused worker, two attempts: a typed Exhausted with
+    // the attempt history, and the failure counter ticks.
+    let metrics = ServiceMetrics::new();
+    let opts = ShardRunOptions {
+        workers: vec![refused_addr()],
+        request_retries: 0,
+        max_attempts: 2,
+        backoff: Duration::from_millis(1),
+        connect_timeout: Duration::from_millis(500),
+        ..Default::default()
+    };
+    let mut io = MemIo::new(dims_out).unwrap();
+    let err = run_sharded(
+        &manifest,
+        &dir,
+        Domain::ComplexToComplex,
+        Direction::Forward,
+        &mut io,
+        &opts,
+        Some(&metrics),
+    )
+    .unwrap_err();
+    match err {
+        ShardError::Exhausted { shard: 0, attempts: 2, .. } => {}
+        other => panic!("expected Exhausted for shard 0, got {other}"),
+    }
+    assert_eq!(metrics.shards_failed.get(), 1);
+    assert!(metrics.shards_retried.get() >= 1);
+
+    // No workers at all is typed too.
+    let opts = ShardRunOptions { workers: Vec::new(), ..Default::default() };
+    let mut io = MemIo::new(dims_out).unwrap();
+    assert!(matches!(
+        run_sharded(
+            &manifest,
+            &dir,
+            Domain::ComplexToComplex,
+            Direction::Forward,
+            &mut io,
+            &opts,
+            None,
+        ),
+        Err(ShardError::NoWorkers { queued: 1 })
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sharded_2d_survives_a_refused_worker_with_bit_identical_output() {
+    let dir = temp_dir("drop2d");
+    let (rows, cols) = (16usize, 32);
+    let (input, data) = make_dataset(&dir, rows, cols, 0x2DBAD);
+    let dims = Dims::new(rows, cols);
+    let manifest = split(&input, dir.join("set.mfshard"), 4).unwrap();
+
+    let live = start_worker(2);
+    let metrics = ServiceMetrics::new();
+    let opts = ShardRunOptions {
+        workers: vec![refused_addr(), live.local_addr()],
+        budget: cols * ELEM_BYTES, // several column strips in stage B
+        request_retries: 0,
+        max_attempts: 20,
+        backoff: Duration::from_millis(1),
+        connect_timeout: Duration::from_millis(500),
+        ..Default::default()
+    };
+    let mut io = MemIo::new(dims).unwrap();
+    let report = run_sharded_2d(
+        &manifest,
+        &dir,
+        Direction::Forward,
+        &mut io,
+        &opts,
+        Some(&metrics),
+    )
+    .unwrap();
+    assert!(report.retried >= 1, "jobs on the refused worker must requeue");
+    assert_eq!(metrics.shards_failed.get(), 0);
+    let want = transform_2d_in_memory(dims, &data, Direction::Forward, Algorithm::Auto).unwrap();
+    assert_eq!(bitwise_mismatches(&want, io.data()), 0, "2-D retried run must stay bit-identical");
+    live.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// real worker processes: spawn, SIGKILL one, finish on the survivor
+
+#[test]
+fn killed_worker_process_requeues_to_bit_identical_completion() {
+    let dir = temp_dir("sigkill");
+    let (rows, cols) = (8usize, 64);
+    let (input, data) = make_dataset(&dir, rows, cols, 0x51661);
+    let dims = Dims::new(rows, cols);
+    let manifest = split(&input, dir.join("set.mfshard"), rows).unwrap();
+
+    let exe = Path::new(env!("CARGO_BIN_EXE_memfft"));
+    let mut workers = spawn_local_workers(exe, 2, "native", 1).unwrap();
+    let addrs: Vec<SocketAddr> = workers.iter().map(|w| w.addr()).collect();
+    // SIGKILL one child after its handshake: from the dispatcher's view,
+    // a worker that dies out from under the run. No drain, no goodbye.
+    workers[0].kill();
+
+    let metrics = ServiceMetrics::new();
+    let opts = ShardRunOptions {
+        workers: addrs,
+        request_retries: 0,
+        max_attempts: 20,
+        backoff: Duration::from_millis(1),
+        connect_timeout: Duration::from_millis(500),
+        ..Default::default()
+    };
+    let mut io = MemIo::new(dims).unwrap();
+    let report = run_sharded(
+        &manifest,
+        &dir,
+        Domain::ComplexToComplex,
+        Direction::Forward,
+        &mut io,
+        &opts,
+        Some(&metrics),
+    )
+    .unwrap();
+    assert!(report.retried >= 1, "the killed worker's jobs must requeue");
+    assert_eq!(metrics.shards_done.get(), rows as u64);
+    assert_eq!(metrics.shards_failed.get(), 0);
+    let want = oracle_rows(dims, &data, Domain::ComplexToComplex, Direction::Forward);
+    assert_eq!(
+        bitwise_mismatches(&want, io.data()),
+        0,
+        "output after a SIGKILLed worker must equal the single-process bits"
+    );
+    for w in workers {
+        w.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// output written through a real file store reads back as a valid dataset
+
+#[test]
+fn sharded_output_lands_in_a_readable_dataset_file() {
+    use memfft::stream::FileIo;
+
+    let dir = temp_dir("fileout");
+    let (rows, cols) = (6usize, 32);
+    let (input, data) = make_dataset(&dir, rows, cols, 0xF11E);
+    let dims = Dims::new(rows, cols);
+    let manifest = split(&input, dir.join("set.mfshard"), 2).unwrap();
+    let worker = start_worker(1);
+    let out_path = dir.join("out.mfft");
+    {
+        let mut io = FileIo::create(&out_path, dims).unwrap();
+        let opts = run_opts(vec![worker.local_addr()], 0);
+        run_sharded(
+            &manifest,
+            &dir,
+            Domain::ComplexToComplex,
+            Direction::Forward,
+            &mut io,
+            &opts,
+            None,
+        )
+        .unwrap();
+    }
+    let (odims, got) = read_dataset(&out_path).unwrap();
+    assert_eq!(odims, dims);
+    let want = oracle_rows(dims, &data, Domain::ComplexToComplex, Direction::Forward);
+    assert_eq!(bitwise_mismatches(&want, &got), 0);
+    worker.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
